@@ -1,0 +1,67 @@
+//! Benchmarks of the GP stack: the AOT JAX/Pallas artifacts through PJRT
+//! (the production three-layer path) vs the native reference, at both size
+//! classes — this is the per-BO-step cost that §Perf balances against the
+//! simulator budget. Run via `cargo bench --bench gp_runtime`.
+
+use std::time::Duration;
+
+use codesign::runtime::gp_exec::{GpExecutor, Theta};
+use codesign::surrogate::gp_native::NativeGp;
+use codesign::util::benchkit::bench;
+use codesign::util::rng::Rng;
+
+fn data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.normal() * 0.4).collect()).collect();
+    let y: Vec<f64> = x.iter().map(|xi| xi.iter().sum::<f64>()).collect();
+    (x, y)
+}
+
+fn flat32(x: &[Vec<f64>]) -> Vec<f32> {
+    x.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect()
+}
+
+fn main() {
+    let budget = Duration::from_millis(600);
+    let mut rng = Rng::seed_from_u64(1);
+    let theta = Theta::hw_default();
+
+    println!("== GP runtime benchmarks ==");
+
+    // Native reference at the two live sizes the searches see.
+    for (n, m) in [(50usize, 150usize), (250, 150)] {
+        let (x, y) = data(&mut rng, n, 16);
+        let (cand, _) = data(&mut rng, m, 16);
+        bench(&format!("native_fit/n{n}"), budget, || {
+            NativeGp::fit(theta, &x, &y).unwrap()
+        });
+        let gp = NativeGp::fit(theta, &x, &y).unwrap();
+        bench(&format!("native_posterior/n{n}_m{m}"), budget, || gp.posterior(&cand));
+    }
+
+    // AOT artifacts (skipped when not built).
+    match GpExecutor::load_default() {
+        Ok(exec) => {
+            for (n, m) in [(50usize, 64usize), (50, 150), (250, 150)] {
+                let (x, y) = data(&mut rng, n, 16);
+                let (cand, _) = data(&mut rng, m, 16);
+                let xf = flat32(&x);
+                let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+                let cf = flat32(&cand);
+                bench(&format!("aot_posterior/n{n}_m{m}"), budget, || {
+                    exec.posterior(&xf, &yf, theta, &cf).unwrap()
+                });
+            }
+            let (x, y) = data(&mut rng, 120, 16);
+            let xf = flat32(&x);
+            let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+            let thetas: Vec<Theta> = (0..24)
+                .map(|i| Theta { w_lin: 0.1 + 0.1 * i as f64, ..theta })
+                .collect();
+            bench("aot_nll_batch24/n120", budget, || {
+                exec.nll_batch(&xf, &yf, &thetas).unwrap()
+            });
+        }
+        Err(e) => eprintln!("(AOT benches skipped: {e:#})"),
+    }
+}

@@ -1,0 +1,41 @@
+//! End-to-end search-step benchmarks: the per-figure workloads. One "BO
+//! step" = fill a 150-candidate feasible pool + surrogate scoring + one
+//! simulator evaluation; the budgets of Figs. 3/4/16 are directly these
+//! steps times trial counts. Run via `cargo bench --bench search_steps`.
+
+use std::time::Duration;
+
+use codesign::figures::fig3::problem_for;
+use codesign::opt::config::BoConfig;
+use codesign::opt::sw_search::{bo_search, random_search, SurrogateKind};
+use codesign::opt::tvm::{self, CostModelKind};
+use codesign::surrogate::gp::GpBackend;
+use codesign::util::benchkit::bench;
+use codesign::util::rng::Rng;
+
+fn main() {
+    let budget = Duration::from_millis(1500);
+    println!("== search-step benchmarks (Fig. 3 unit costs) ==");
+
+    for layer in ["DQN-K2", "ResNet-K2"] {
+        let problem = problem_for(layer);
+        let cfg = BoConfig::software();
+        let mut rng = Rng::seed_from_u64(3);
+
+        // 25-trial slices of each method: amortized per-trial cost.
+        let r = bench(&format!("random_search_25/{layer}"), budget, || {
+            random_search(&problem, 25, &cfg, &mut rng)
+        });
+        println!("  -> per-trial {:.2} ms", r.median_ns / 25.0 / 1e6);
+
+        let r = bench(&format!("bo_gp_native_25/{layer}"), budget, || {
+            bo_search(&problem, 25, &cfg, &GpBackend::Native, SurrogateKind::Gp, &mut rng)
+        });
+        println!("  -> per-trial {:.2} ms", r.median_ns / 25.0 / 1e6);
+
+        let r = bench(&format!("tvm_gbt_25/{layer}"), budget, || {
+            tvm::search(&problem, 25, CostModelKind::Gbt, &mut rng)
+        });
+        println!("  -> per-trial {:.2} ms", r.median_ns / 25.0 / 1e6);
+    }
+}

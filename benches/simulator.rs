@@ -1,0 +1,74 @@
+//! Benchmarks of the evaluation substrate (the Timeloop-stand-in): the hot
+//! path of every experiment is (sample -> validate -> analyze), so this is
+//! the first target of the §Perf pass. Custom harness (no criterion in the
+//! offline crate set); run via `cargo bench --bench simulator`.
+
+use std::time::Duration;
+
+use codesign::model::eval::Evaluator;
+use codesign::util::benchkit::bench;
+use codesign::util::rng::Rng;
+use codesign::space::sw_space::SwSpace;
+use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+use codesign::workloads::specs::{all_models, layer_by_name};
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let res = eyeriss_resources(168);
+    let eval = Evaluator::new(res.clone());
+
+    println!("== simulator benchmarks ==");
+    for layer_name in ["DQN-K2", "ResNet-K2", "ResNet-K4"] {
+        let layer = layer_by_name(layer_name).unwrap();
+        let space = SwSpace::new(layer.clone(), eyeriss_hw(168), res.clone());
+        let mut rng = Rng::seed_from_u64(1);
+        let (mapping, _) = space.sample_valid(&mut rng, 10_000_000).unwrap();
+
+        bench(&format!("sample_raw/{layer_name}"), budget, || {
+            space.sample_raw(&mut rng)
+        });
+        bench(&format!("validate/{layer_name}"), budget, || {
+            space.is_valid(&mapping)
+        });
+        bench(&format!("evaluate_edp/{layer_name}"), budget, || {
+            eval.edp(&layer, &space.hw, &mapping).unwrap()
+        });
+        let r = bench(&format!("rejection_sample_valid/{layer_name}"), budget, || {
+            space.sample_valid(&mut rng, 10_000_000).unwrap().1
+        });
+        println!(
+            "  -> rejection sampler throughput ~ {:.0} raw samples/s/core",
+            r.per_sec(1.0)
+                * {
+                    // average raw draws per valid sample, measured separately
+                    let mut d = 0u64;
+                    for _ in 0..50 {
+                        d += space.sample_valid(&mut rng, 10_000_000).unwrap().1;
+                    }
+                    d as f64 / 50.0
+                }
+        );
+    }
+
+    // Full-model sweep: one EDP evaluation per layer of every paper model.
+    let mut rng = Rng::seed_from_u64(2);
+    for model in all_models() {
+        let res = eyeriss_resources(model.num_pes);
+        let eval = Evaluator::new(res.clone());
+        let pairs: Vec<_> = model
+            .layers
+            .iter()
+            .map(|l| {
+                let sp = SwSpace::new(l.clone(), eyeriss_hw(model.num_pes), res.clone());
+                let m = sp.sample_valid(&mut rng, 10_000_000).unwrap().0;
+                (l.clone(), sp, m)
+            })
+            .collect();
+        bench(&format!("model_sweep/{}", model.name), budget, || {
+            pairs
+                .iter()
+                .map(|(l, sp, m)| eval.edp(l, &sp.hw, m).unwrap())
+                .sum::<f64>()
+        });
+    }
+}

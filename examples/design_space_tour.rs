@@ -1,0 +1,85 @@
+//! Scenario: exploring the constrained design space — what the paper's §2
+//! describes qualitatively, measured. Samples the hardware and software
+//! spaces, reports feasibility rates (the paper: ~90% of points invalid,
+//! ~22K draws per 150 feasible mappings), breaks rejections down by
+//! constraint, and shows how the Fig. 13 features correlate with EDP.
+//!
+//!     cargo run --release --example design_space_tour
+
+use std::collections::HashMap;
+
+use codesign::model::eval::Evaluator;
+use codesign::model::validity::check_mapping;
+use codesign::space::features::{sw_feature_names, sw_features};
+use codesign::space::hw_space::HwSpace;
+use codesign::space::sw_space::SwSpace;
+use codesign::util::rng::Rng;
+use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+use codesign::workloads::specs::layer_by_name;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(1);
+    let res = eyeriss_resources(168);
+
+    // --- hardware space ---
+    let hw_space = HwSpace::new(res.clone());
+    let n = 20_000;
+    let valid = (0..n)
+        .filter(|_| hw_space.sample_raw(&mut rng).check(&res).is_ok())
+        .count();
+    println!("hardware space: {valid}/{n} raw samples valid ({:.1}%)", 100.0 * valid as f64 / n as f64);
+
+    // --- software space, per layer ---
+    println!("\nsoftware space feasibility (20k raw samples each):");
+    for layer_name in ["ResNet-K2", "ResNet-K4", "DQN-K1", "MLP-K1"] {
+        let layer = layer_by_name(layer_name).unwrap();
+        let space = SwSpace::new(layer.clone(), eyeriss_hw(168), res.clone());
+        let mut reasons: HashMap<String, usize> = HashMap::new();
+        let mut ok = 0;
+        for _ in 0..20_000 {
+            let m = space.sample_raw(&mut rng);
+            match check_mapping(&layer, &space.hw, &res, &m) {
+                Ok(()) => ok += 1,
+                Err(v) => *reasons.entry(format!("{v:?}")).or_default() += 1,
+            }
+        }
+        let mut top: Vec<_> = reasons.into_iter().collect();
+        top.sort_by_key(|(_, c)| std::cmp::Reverse(*c));
+        let top3: Vec<String> =
+            top.iter().take(3).map(|(r, c)| format!("{r} x{c}")).collect();
+        println!(
+            "  {layer_name:<12} {:.2}% feasible  (top rejections: {})",
+            100.0 * ok as f64 / 20_000.0,
+            top3.join(", ")
+        );
+    }
+
+    // --- feature <-> EDP correlation (why the linear kernel works) ---
+    println!("\nFig. 13 feature correlation with ln(EDP) on DQN-K2 (500 valid samples):");
+    let layer = layer_by_name("DQN-K2").unwrap();
+    let space = SwSpace::new(layer.clone(), eyeriss_hw(168), res.clone());
+    let eval = Evaluator::new(res.clone());
+    let mut feats: Vec<[f64; 16]> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    while feats.len() < 500 {
+        if let Some((m, _)) = space.sample_valid(&mut rng, 1_000_000) {
+            if let Ok(edp) = eval.edp(&layer, &space.hw, &m) {
+                feats.push(sw_features(&space, &m));
+                ys.push(edp.ln());
+            }
+        }
+    }
+    let names = sw_feature_names();
+    let ym = ys.iter().sum::<f64>() / ys.len() as f64;
+    for fi in 0..16 {
+        let xs: Vec<f64> = feats.iter().map(|f| f[fi]).collect();
+        let xm = xs.iter().sum::<f64>() / xs.len() as f64;
+        let cov: f64 =
+            xs.iter().zip(ys.iter()).map(|(x, y)| (x - xm) * (y - ym)).sum::<f64>();
+        let vx: f64 = xs.iter().map(|x| (x - xm) * (x - xm)).sum::<f64>();
+        let vy: f64 = ys.iter().map(|y| (y - ym) * (y - ym)).sum::<f64>();
+        let r = if vx > 1e-12 && vy > 1e-12 { cov / (vx * vy).sqrt() } else { 0.0 };
+        let bar = "#".repeat((r.abs() * 30.0) as usize);
+        println!("  {:<22} r = {r:>6.2}  {bar}", names[fi]);
+    }
+}

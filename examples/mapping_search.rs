@@ -1,0 +1,72 @@
+//! Scenario: software mapping optimization on fixed hardware — the paper's
+//! Fig. 3 situation as a library user would script it. Compares all five
+//! searchers on one layer and prints the best-so-far curves.
+//!
+//!     cargo run --release --example mapping_search [-- <layer> <trials>]
+//!
+//! Uses the PJRT GP artifacts when `artifacts/` exists, else the native GP.
+
+use codesign::figures::fig3::problem_for;
+use codesign::opt::config::BoConfig;
+use codesign::opt::sw_search::{search, SurrogateKind, SwMethod};
+use codesign::runtime::server::GpServer;
+use codesign::surrogate::gp::GpBackend;
+use codesign::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let layer = args.get(1).map(String::as_str).unwrap_or("ResNet-K2").to_string();
+    let trials: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(250);
+
+    // Prefer the AOT three-layer path; fall back to the native reference GP.
+    let (_server, backend) = match GpServer::start() {
+        Ok(s) => {
+            let h = s.handle();
+            (Some(s), GpBackend::Aot(h))
+        }
+        Err(_) => {
+            eprintln!("(artifacts not built; using the native GP)");
+            (None, GpBackend::Native)
+        }
+    };
+
+    let problem = problem_for(&layer);
+    let methods = [
+        SwMethod::Random,
+        SwMethod::TvmXgb,
+        SwMethod::TvmTreeGru,
+        SwMethod::RoundBo,
+        SwMethod::Bo { surrogate: SurrogateKind::Gp },
+    ];
+
+    println!("software mapping search on {layer}, {trials} trials per method\n");
+    let mut results = Vec::new();
+    for method in methods {
+        let mut rng = Rng::seed_from_u64(7);
+        let t0 = std::time::Instant::now();
+        let trace = search(method, &problem, trials, &BoConfig::software(), &backend, &mut rng);
+        let curve = trace.best_curve();
+        let milestones: Vec<String> = [0.2, 0.5, 1.0]
+            .iter()
+            .map(|f| {
+                let i = ((curve.len() as f64 * f) as usize).saturating_sub(1);
+                format!("@{}:{:.2e}", i + 1, curve[i])
+            })
+            .collect();
+        println!(
+            "{:<12} best {:.4e}  ({})  [{:.1}s, {} raw draws]",
+            method.name(),
+            trace.best_edp,
+            milestones.join("  "),
+            t0.elapsed().as_secs_f64(),
+            trace.raw_draws
+        );
+        results.push((method.name(), trace.best_edp));
+    }
+
+    let best = results.iter().map(|(_, e)| *e).fold(f64::INFINITY, f64::min);
+    println!("\nnormalized (best = 1.0, higher is better — the paper's Fig. 3 y-axis):");
+    for (name, edp) in results {
+        println!("  {:<12} {:.3}", name, best / edp);
+    }
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the core library API in ~40 lines — build a workload, the
+//! Eyeriss baseline hardware, a software mapping, and evaluate EDP with the
+//! analytical accelerator model. Runs with no artifacts (pure library).
+//!
+//!     cargo run --release --example quickstart
+
+use codesign::model::eval::Evaluator;
+use codesign::model::mapping::{Mapping, Split};
+use codesign::model::workload::Dim;
+use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+use codesign::workloads::specs::layer_by_name;
+
+fn main() {
+    // 1. A workload: DQN's second conv layer (paper Fig. 11).
+    let layer = layer_by_name("DQN-K2").unwrap();
+    println!("layer: {layer:?}");
+    println!("MACs: {}", layer.macs());
+
+    // 2. Hardware: the Eyeriss-168 baseline in H1-H12 form.
+    let hw = eyeriss_hw(168);
+    let eval = Evaluator::new(eyeriss_resources(168));
+
+    // 3. A hand-written mapping (S1-S9): parallelize P/Q across the array,
+    //    stream K at DRAM, keep the filter row resident per PE (dataflow).
+    let mut m = Mapping::trivial(&layer);
+    *m.split_mut(Dim::R) = Split { dram: 1, glb: 1, spatial_x: 1, spatial_y: 1, local: 4 };
+    *m.split_mut(Dim::P) = Split { dram: 1, glb: 3, spatial_x: 3, spatial_y: 1, local: 1 };
+    *m.split_mut(Dim::Q) = Split { dram: 1, glb: 3, spatial_x: 1, spatial_y: 3, local: 1 };
+    *m.split_mut(Dim::C) = Split { dram: 1, glb: 8, spatial_x: 2, spatial_y: 1, local: 1 };
+    *m.split_mut(Dim::K) = Split { dram: 4, glb: 2, spatial_x: 1, spatial_y: 2, local: 2 };
+    m.order_glb = [Dim::P, Dim::Q, Dim::K, Dim::C, Dim::R, Dim::S]; // reduction inner
+    println!("\nmapping: {}", m.describe());
+
+    // 4. Evaluate: validity + traffic + energy + latency in one call.
+    match eval.evaluate(&layer, &hw, &m) {
+        Ok(met) => {
+            println!("\nEDP     = {:.4e} J*s", met.edp);
+            println!("energy  = {:.4e} pJ", met.energy_pj);
+            println!("cycles  = {:.4e} ({} bound)", met.cycles, met.bottleneck());
+            println!("PE util = {:.1}%", met.utilization * 100.0);
+        }
+        Err(why) => println!("mapping rejected: {why}"),
+    }
+
+    // 5. Constraint violations are first-class: shrink the psum buffer below
+    //    the mapping's 2-word psum tile and the point becomes invalid, with
+    //    the reason attached.
+    let mut small = hw.clone();
+    small.lb_outputs = 1;
+    small.lb_weights = 207;
+    println!(
+        "\nwith a 1-word psum spad: {}",
+        eval.evaluate(&layer, &small, &m).err().expect("must be rejected")
+    );
+}

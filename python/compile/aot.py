@@ -1,0 +1,93 @@
+"""AOT compilation: lower the Layer-2 GP model (with its Layer-1 Pallas
+kernels) to HLO *text* artifacts the Rust runtime loads via the xla crate.
+
+HLO text -- not `.serialize()` protos -- is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Artifacts (one executable per size class; masks make each serve any smaller
+live set):
+    gp_posterior_n{N}.hlo.txt   x[N,16] y[N] mask[N] theta[6] c[N,16]
+                                -> (mu[N], var[N])
+    gp_nll_n{N}.hlo.txt         x[N,16] y[N] mask[N] thetas[32,6] -> nll[32]
+    manifest.txt                shape/ABI manifest checked by the Rust side
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+try:
+    from .model import nll_entry, posterior_entry
+except ImportError:  # pragma: no cover
+    from model import nll_entry, posterior_entry
+
+# ABI constants -- must match rust/src/runtime/artifacts.rs and
+# rust/src/space/features.rs::FEATURE_DIM.
+FEATURE_DIM = 16
+THETA_DIM = 6
+NLL_BATCH = 32
+SIZE_CLASSES = (64, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for n in SIZE_CLASSES:
+        fn, args = posterior_entry(n, n, FEATURE_DIM)
+        text = lower_entry(fn, args)
+        name = f"gp_posterior_n{n}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest[name] = f"x[{n},{FEATURE_DIM}] y[{n}] mask[{n}] theta[{THETA_DIM}] c[{n},{FEATURE_DIM}] -> mu[{n}] var[{n}]"
+        print(f"wrote {name}: {len(text)} chars")
+
+        fn, args = nll_entry(n, FEATURE_DIM, NLL_BATCH)
+        text = lower_entry(fn, args)
+        name = f"gp_nll_n{n}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest[name] = f"x[{n},{FEATURE_DIM}] y[{n}] mask[{n}] thetas[{NLL_BATCH},{THETA_DIM}] -> nll[{NLL_BATCH}]"
+        print(f"wrote {name}: {len(text)} chars")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write(f"feature_dim={FEATURE_DIM}\n")
+        f.write(f"theta_dim={THETA_DIM}\n")
+        f.write(f"nll_batch={NLL_BATCH}\n")
+        f.write(f"size_classes={','.join(str(s) for s in SIZE_CLASSES)}\n")
+        for name, abi in sorted(manifest.items()):
+            f.write(f"{name}: {abi}\n")
+    return manifest
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    # Back-compat single-file flag (Makefile stamp target).
+    parser.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = parser.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    manifest = build_all(out_dir or ".")
+    print(f"{len(manifest)} artifacts -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L1 performance analysis: VMEM footprint and MXU-utilization estimates for
+the Pallas kernel-matrix kernel, derived from its BlockSpec tiling.
+
+interpret=True gives CPU-numpy timings only (not a TPU proxy), so the perf
+pass optimizes *structure*: per-grid-step VMEM residency must fit comfortably
+(<< 16 MB), HBM traffic should be near the O(ND + MD + NM) lower bound, and
+the arithmetic mix should keep the MXU (the (TILE,D)x(D,TILE) contraction)
+busy relative to the VPU epilogue. These estimates back DESIGN.md SS8 and are
+unit-tested in python/tests/test_analysis.py.
+"""
+
+from dataclasses import dataclass
+
+# Mirrors kmatrix.py TILE; re-declared here so analysis has no jax import.
+TILE = 64
+F32_BYTES = 4
+# TPUv4-ish reference numbers used for the utilization *estimate* only.
+VMEM_BYTES = 16 * 2 ** 20
+MXU_FLOPS_PER_CYCLE = 2 * 128 * 128  # one 128x128 MAC array, 2 flops/MAC
+VPU_FLOPS_PER_CYCLE = 8 * 128  # vector unit lanes
+
+
+@dataclass
+class KernelEstimate:
+    """Static estimates for one kmatrix invocation."""
+
+    n: int
+    m: int
+    d: int
+    grid: tuple
+    vmem_per_step_bytes: int
+    hbm_bytes: int
+    hbm_bytes_lower_bound: int
+    mxu_flops: int
+    vpu_flops: int
+    mxu_fraction: float
+
+    @property
+    def vmem_fraction(self) -> float:
+        return self.vmem_per_step_bytes / VMEM_BYTES
+
+    @property
+    def hbm_overfetch(self) -> float:
+        """HBM traffic relative to the compulsory lower bound (>= 1)."""
+        return self.hbm_bytes / self.hbm_bytes_lower_bound
+
+
+def estimate(n: int, m: int, d: int, tile: int = TILE) -> KernelEstimate:
+    """Estimate VMEM/HBM/compute for kmatrix(x[n,d], y[m,d]) tiled tile x tile.
+
+    BlockSpec semantics (kmatrix.py): per grid step (i, j) the kernel holds
+    x-block (tile, d), y-block (tile, d), w (3,) and the output tile
+    (tile, tile) in VMEM. The x-block is re-fetched once per j-column and the
+    y-block once per i-row (Pallas pipelines these HBM<->VMEM copies).
+    """
+    assert n % tile == 0 and m % tile == 0
+    gi, gj = n // tile, m // tile
+    vmem = (tile * d + tile * d + 3 + tile * tile) * F32_BYTES
+
+    # HBM traffic: each x block loaded gj times, each y block gi times,
+    # each output tile stored once.
+    hbm = (gi * gj * (2 * tile * d) + n * 0 + gi * gj * tile * tile) * F32_BYTES
+    lower = (n * d + m * d + n * m) * F32_BYTES
+
+    # flops: linear term = MXU matmul (2*tile*tile*d per step);
+    # SE epilogue = VPU (norms, subtract, exp ~ 6 flops/element).
+    mxu = gi * gj * 2 * tile * tile * d
+    vpu = gi * gj * 6 * tile * tile
+    mxu_cycles = mxu / MXU_FLOPS_PER_CYCLE
+    vpu_cycles = vpu / VPU_FLOPS_PER_CYCLE
+    mxu_fraction = mxu_cycles / (mxu_cycles + vpu_cycles)
+
+    return KernelEstimate(
+        n=n,
+        m=m,
+        d=d,
+        grid=(gi, gj),
+        vmem_per_step_bytes=vmem,
+        hbm_bytes=hbm,
+        hbm_bytes_lower_bound=lower,
+        mxu_flops=mxu,
+        vpu_flops=vpu,
+        mxu_fraction=mxu_fraction,
+    )
+
+
+def report(n: int, m: int, d: int) -> str:
+    e = estimate(n, m, d)
+    return (
+        f"kmatrix[{n}x{m}, d={d}] grid {e.grid}: "
+        f"VMEM/step {e.vmem_per_step_bytes / 1024:.1f} KiB "
+        f"({100 * e.vmem_fraction:.2f}% of VMEM), "
+        f"HBM {e.hbm_bytes / 1024:.0f} KiB ({e.hbm_overfetch:.2f}x compulsory), "
+        f"MXU cycle share {100 * e.mxu_fraction:.0f}%"
+    )
+
+
+if __name__ == "__main__":
+    for n, m in [(64, 64), (256, 256)]:
+        print(report(n, m, 16))

@@ -1,0 +1,76 @@
+"""Layer-1 Pallas kernel: tiled Gram/kernel-matrix computation.
+
+Computes the combined GP kernel the paper's surrogates use (SS 4.2/4.3):
+
+    K[i, j] = w_lin * <x_i, y_j> + w_se * exp(-||x_i - y_j||^2 / ell2)
+
+* software GP: linear kernel on the Fig. 13 features  -> w_se = 0
+* hardware GP: linear kernel + noise (noise/jitter added on the diagonal
+  by the caller, model.py)                             -> w_se = 0
+* constraint GP: squared-exponential                   -> w_lin = 0
+
+The (N, M) output is tiled into TILE x TILE VMEM blocks via BlockSpec; the
+feature dimension D stays resident. On a real TPU the linear term maps onto
+the MXU (bf16 matmul, f32 accumulation) and the SE term onto the VPU, with
+each operand block loaded from HBM exactly once (see DESIGN.md SS8). Here the
+kernel runs under interpret=True so the same HLO executes on the CPU PJRT
+client that the Rust runtime embeds.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile edge for the (N, M) grid. All artifact shapes are multiples of 64.
+TILE = 64
+
+
+def _kmatrix_kernel(x_ref, y_ref, w_ref, o_ref):
+    """One (TILE, TILE) block: x_ref (TILE, D), y_ref (TILE, D), w_ref (3,)."""
+    x = x_ref[...]
+    y = y_ref[...]
+    w_lin = w_ref[0]
+    w_se = w_ref[1]
+    inv_ell2 = w_ref[2]
+    # MXU-shaped contraction for the linear term.
+    lin = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    # ||x - y||^2 = ||x||^2 + ||y||^2 - 2<x, y>; reuses the dot product.
+    xsq = jnp.sum(x * x, axis=-1, keepdims=True)
+    ysq = jnp.sum(y * y, axis=-1, keepdims=True)
+    sq = xsq + ysq.T - 2.0 * lin
+    se = jnp.exp(-jnp.maximum(sq, 0.0) * inv_ell2)
+    o_ref[...] = w_lin * lin + w_se * se
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def kmatrix(x, y, w_lin, w_se, ell2, *, interpret=True):
+    """Tiled kernel matrix K (n, m) between x (n, d) and y (m, d).
+
+    n and m must be multiples of TILE. w_lin / w_se / ell2 are scalars
+    (traced, so one compiled artifact serves every hyperparameter setting).
+    """
+    n, d = x.shape
+    m, _ = y.shape
+    assert n % TILE == 0 and m % TILE == 0, (n, m)
+    w = jnp.stack(
+        [
+            jnp.asarray(w_lin, jnp.float32),
+            jnp.asarray(w_se, jnp.float32),
+            1.0 / jnp.maximum(jnp.asarray(ell2, jnp.float32), 1e-12),
+        ]
+    )
+    grid = (n // TILE, m // TILE)
+    return pl.pallas_call(
+        _kmatrix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), y.astype(jnp.float32), w)

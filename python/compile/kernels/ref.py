@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the Pallas kernels (the build-time correctness
+reference: python/tests/test_kernel.py asserts allclose against this)."""
+
+import jax.numpy as jnp
+
+
+def kmatrix_ref(x, y, w_lin, w_se, ell2):
+    """K[i, j] = w_lin * <x_i, y_j> + w_se * exp(-||x_i - y_j||^2 / ell2)."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    lin = x @ y.T
+    sq = jnp.sum((x[:, None, :] - y[None, :, :]) ** 2, axis=-1)
+    se = jnp.exp(-sq / jnp.maximum(ell2, 1e-12))
+    return w_lin * lin + w_se * se

@@ -1,0 +1,142 @@
+"""Layer-2 JAX model: masked Gaussian-process posterior and batched negative
+log marginal likelihood, built on the Layer-1 Pallas kernel-matrix kernel.
+
+Everything here is AOT-lowered (aot.py) to HLO text and executed from the
+Rust coordinator via PJRT; Python never runs on the search path. Shapes are
+fixed and padded (masks select the live rows) so one compiled executable per
+size class serves every BO step of both the hardware and software searches.
+
+Numerical core: Cholesky and triangular solves are hand-written with
+`lax.scan` because jnp.linalg lowers to LAPACK custom-calls registered only
+inside jaxlib, which the embedded xla-crate CPU runtime cannot resolve. The
+scan form lowers to plain HLO while-loops (verified custom-call-free by
+tests/test_aot.py).
+
+theta layout (all raw, positive where applicable):
+    theta[0] = w_lin   linear-kernel weight
+    theta[1] = w_se    squared-exponential weight
+    theta[2] = ell2    SE lengthscale^2
+    theta[3] = tau2    observation noise variance (0 for the noiseless
+                       software GP, cf. SS4.3)
+    theta[4] = jitter  diagonal stabilizer
+    theta[5] = unused  (reserved; keeps the artifact ABI stable)
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+try:  # package-relative when imported as compile.model
+    from .kernels.kmatrix import kmatrix
+except ImportError:  # pragma: no cover - direct script use
+    from kernels.kmatrix import kmatrix
+
+
+def chol(a):
+    """Cholesky factor (lower) of SPD matrix a, via a column scan."""
+    a = jnp.asarray(a, jnp.float32)
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def step(l_acc, j):
+        # Column j of L given columns < j (stored in l_acc).
+        col = a[:, j] - l_acc @ l_acc[j, :]
+        diag = jnp.sqrt(jnp.maximum(col[j], 1e-12))
+        colv = jnp.where(idx > j, col / diag, 0.0)
+        colv = colv.at[j].set(diag)
+        l_acc = l_acc.at[:, j].set(colv)
+        return l_acc, ()
+
+    l0 = jnp.zeros_like(a)
+    l_final, _ = lax.scan(step, l0, jnp.arange(n))
+    return l_final
+
+
+def solve_lower(l_mat, b):
+    """Solve L x = b by forward substitution; b is (n,) or (n, k)."""
+    l_mat = jnp.asarray(l_mat, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    n = l_mat.shape[0]
+    vec = b.ndim == 1
+    b2 = b[:, None] if vec else b
+    x0 = jnp.zeros_like(b2)
+
+    def step(x_acc, i):
+        xi = (b2[i, :] - l_mat[i, :] @ x_acc) / l_mat[i, i]
+        x_acc = x_acc.at[i, :].set(xi)
+        return x_acc, ()
+
+    x_final, _ = lax.scan(step, x0, jnp.arange(n))
+    return x_final[:, 0] if vec else x_final
+
+
+def _masked_kernel_matrix(x, mask, theta):
+    """Train kernel matrix with masked rows replaced by identity rows, so the
+    Cholesky of the padded system is well-defined and the live block is
+    exactly the unpadded K + (tau2 + jitter) I."""
+    k = kmatrix(x, x, theta[0], theta[1], theta[2])
+    m2 = mask[:, None] * mask[None, :]
+    k = k * m2
+    diag_live = (theta[3] + theta[4]) * mask  # tau2 + jitter on live rows
+    diag_dead = 1.0 - mask  # identity rows for padding
+    return k + jnp.diag(diag_live + diag_dead)
+
+
+def gp_posterior(x, y, mask, theta, c):
+    """Masked GP posterior at candidate points.
+
+    x (n, d) padded training inputs; y (n,) zero-mean targets (0 in padding);
+    mask (n,) 1.0 for live rows; theta (6,); c (m, d) candidates.
+    Returns (mu (m,), var (m,)) of the latent function (noise-free).
+    """
+    k = _masked_kernel_matrix(x, mask, theta)
+    l_mat = chol(k)
+    # Cross-kernel, with padded columns zeroed.
+    k_c = kmatrix(c, x, theta[0], theta[1], theta[2]) * mask[None, :]
+    a = solve_lower(l_mat, k_c.T)  # (n, m) = L^-1 Kc^T
+    z = solve_lower(l_mat, y * mask)  # (n,)
+    mu = a.T @ z
+    # Prior variance at the candidates: w_lin ||c||^2 + w_se (SE at dist 0).
+    prior = theta[0] * jnp.sum(c * c, axis=-1) + theta[1]
+    var = jnp.maximum(prior - jnp.sum(a * a, axis=0), 1e-12)
+    return mu, var
+
+
+def gp_nll(x, y, mask, theta):
+    """Negative log marginal likelihood of the masked GP. Padding rows have
+    L_ii = 1 (log 1 = 0) and zero targets, so they contribute nothing."""
+    k = _masked_kernel_matrix(x, mask, theta)
+    l_mat = chol(k)
+    z = solve_lower(l_mat, y * mask)
+    quad = 0.5 * jnp.sum(z * z)
+    logdet = jnp.sum(jnp.log(jnp.diagonal(l_mat)))
+    n_live = jnp.sum(mask)
+    return quad + logdet + 0.5 * n_live * jnp.log(2.0 * jnp.pi)
+
+
+def gp_nll_batch(x, y, mask, thetas):
+    """NLL for a batch of hyperparameter settings thetas (p, 6) -> (p,).
+    This is the hyperparameter-fit workhorse: the Rust side random-searches
+    / refines over the returned batch each BO step."""
+    return jax.vmap(lambda t: gp_nll(x, y, mask, t))(thetas)
+
+
+def posterior_entry(n, m, d):
+    """(fn, example_args) for AOT lowering of gp_posterior at a size class."""
+    spec = lambda s: jax.ShapeDtypeStruct(s, jnp.float32)
+
+    def fn(x, y, mask, theta, c):
+        mu, var = gp_posterior(x, y, mask, theta, c)
+        return (mu, var)
+
+    return fn, (spec((n, d)), spec((n,)), spec((n,)), spec((6,)), spec((m, d)))
+
+
+def nll_entry(n, d, p):
+    """(fn, example_args) for AOT lowering of gp_nll_batch at a size class."""
+    spec = lambda s: jax.ShapeDtypeStruct(s, jnp.float32)
+
+    def fn(x, y, mask, thetas):
+        return (gp_nll_batch(x, y, mask, thetas),)
+
+    return fn, (spec((n, d)), spec((n,)), spec((n,)), spec((p, 6)))

@@ -1,0 +1,61 @@
+"""AOT lowering checks: every artifact must be pure HLO (no custom-calls the
+embedded runtime cannot resolve) and must round-trip through the text
+parser's expectations (parameter count/order)."""
+
+import re
+
+import pytest
+
+from compile.aot import (
+    FEATURE_DIM,
+    NLL_BATCH,
+    SIZE_CLASSES,
+    THETA_DIM,
+    lower_entry,
+)
+from compile.model import nll_entry, posterior_entry
+
+
+@pytest.fixture(scope="module")
+def posterior_hlo():
+    fn, args = posterior_entry(64, 64, FEATURE_DIM)
+    return lower_entry(fn, args)
+
+
+@pytest.fixture(scope="module")
+def nll_hlo():
+    fn, args = nll_entry(64, FEATURE_DIM, NLL_BATCH)
+    return lower_entry(fn, args)
+
+
+def test_no_custom_calls(posterior_hlo, nll_hlo):
+    for text in (posterior_hlo, nll_hlo):
+        assert "custom-call" not in text and "custom_call" not in text
+
+
+def test_posterior_entry_signature(posterior_hlo):
+    # ENTRY computation takes 5 parameters with the documented shapes.
+    entry = posterior_hlo[posterior_hlo.index("ENTRY"):]
+    params = re.findall(r"parameter\(\d\)", entry)
+    assert len(params) == 5
+    assert f"f32[64,{FEATURE_DIM}]" in entry
+    assert f"f32[{THETA_DIM}]" in entry
+
+
+def test_nll_entry_signature(nll_hlo):
+    entry = nll_hlo[nll_hlo.index("ENTRY"):]
+    params = re.findall(r"parameter\(\d\)", entry)
+    assert len(params) == 4
+    assert f"f32[{NLL_BATCH},{THETA_DIM}]" in entry
+    assert f"f32[{NLL_BATCH}]" in entry  # output
+
+
+def test_lowering_contains_while_loops(posterior_hlo):
+    # the scan-based Cholesky must survive as HLO while loops
+    assert "while(" in posterior_hlo or "while." in posterior_hlo
+
+
+def test_size_classes_sane():
+    assert SIZE_CLASSES == (64, 256)
+    for n in SIZE_CLASSES:
+        assert n % 64 == 0  # Pallas TILE multiple

@@ -1,0 +1,86 @@
+"""Layer-1 correctness: the Pallas kernel-matrix kernel vs the pure-jnp
+oracle, swept over shapes/values/hyperparameters with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.kmatrix import TILE, kmatrix
+from compile.kernels.ref import kmatrix_ref
+
+
+def rand(rng, shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("n,m", [(64, 64), (128, 64), (64, 128), (256, 256)])
+def test_matches_ref_across_shapes(n, m):
+    rng = np.random.default_rng(0)
+    x, y = rand(rng, (n, 16)), rand(rng, (m, 16))
+    got = kmatrix(x, y, 0.7, 0.3, 2.0)
+    want = kmatrix_ref(x, y, 0.7, 0.3, 2.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nt=st.integers(1, 4),
+    mt=st.integers(1, 4),
+    d=st.sampled_from([4, 8, 16]),
+    w_lin=st.floats(0.0, 5.0),
+    w_se=st.floats(0.0, 5.0),
+    ell2=st.floats(0.05, 50.0),
+    scale=st.floats(0.01, 3.0),
+)
+def test_hypothesis_sweep(seed, nt, mt, d, w_lin, w_se, ell2, scale):
+    rng = np.random.default_rng(seed)
+    n, m = nt * TILE, mt * TILE
+    x, y = rand(rng, (n, d), scale), rand(rng, (m, d), scale)
+    got = np.asarray(kmatrix(x, y, w_lin, w_se, ell2))
+    want = np.asarray(kmatrix_ref(x, y, w_lin, w_se, ell2))
+    assert got.shape == (n, m)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_pure_linear_is_gram_matrix():
+    rng = np.random.default_rng(1)
+    x = rand(rng, (64, 16))
+    got = kmatrix(x, x, 1.0, 0.0, 1.0)
+    np.testing.assert_allclose(got, x @ x.T, rtol=1e-5, atol=1e-5)
+
+
+def test_pure_se_diag_is_w_se():
+    rng = np.random.default_rng(2)
+    x = rand(rng, (64, 16))
+    got = np.asarray(kmatrix(x, x, 0.0, 2.5, 1.0))
+    np.testing.assert_allclose(np.diag(got), 2.5 * np.ones(64), rtol=1e-5)
+    assert (got <= 2.5 + 1e-5).all(), "SE kernel is bounded by its weight"
+
+
+def test_zero_inputs():
+    x = np.zeros((64, 16), np.float32)
+    got = np.asarray(kmatrix(x, x, 1.0, 1.0, 1.0))
+    np.testing.assert_allclose(got, np.ones((64, 64)), rtol=1e-6)
+
+
+def test_symmetry_on_same_inputs():
+    rng = np.random.default_rng(3)
+    x = rand(rng, (128, 16))
+    got = np.asarray(kmatrix(x, x, 0.5, 0.5, 3.0))
+    np.testing.assert_allclose(got, got.T, rtol=1e-5, atol=1e-6)
+
+
+def test_dtype_promotion_from_f64_inputs():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((64, 16))  # float64
+    got = kmatrix(x, x, 1.0, 0.0, 1.0)
+    assert got.dtype == jnp.float32
+
+
+def test_rejects_non_tile_multiples():
+    x = np.zeros((60, 16), np.float32)
+    with pytest.raises(AssertionError):
+        kmatrix(x, x, 1.0, 0.0, 1.0)

@@ -1,0 +1,160 @@
+"""Layer-2 correctness: scan-based Cholesky/solves and the masked GP
+posterior / NLL against straightforward numpy linear algebra."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    chol,
+    gp_nll,
+    gp_nll_batch,
+    gp_posterior,
+    solve_lower,
+)
+from compile.kernels.ref import kmatrix_ref
+
+N, D = 64, 16
+THETA = np.array([0.8, 0.4, 2.0, 0.01, 1e-5, 0.0], np.float32)
+
+
+def spd(rng, n, scale=1.0):
+    a = rng.standard_normal((n, n)).astype(np.float32) * scale
+    return a @ a.T + n * np.eye(n, dtype=np.float32)
+
+
+def np_posterior(x, y, mask, theta, c):
+    """Dense numpy reference of the masked posterior."""
+    live = mask > 0.5
+    xl, yl = x[live], y[live]
+    k = np.asarray(kmatrix_ref(xl, xl, theta[0], theta[1], theta[2]))
+    k = k + (theta[3] + theta[4]) * np.eye(live.sum(), dtype=np.float32)
+    kc = np.asarray(kmatrix_ref(c, xl, theta[0], theta[1], theta[2]))
+    kinv = np.linalg.inv(k.astype(np.float64))
+    mu = kc @ kinv @ yl
+    prior = theta[0] * np.sum(c * c, axis=-1) + theta[1]
+    var = prior - np.sum((kc @ kinv) * kc, axis=-1)
+    return mu, np.maximum(var, 1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(4, 48))
+def test_chol_matches_numpy(seed, n):
+    rng = np.random.default_rng(seed)
+    a = spd(rng, n)
+    l_ours = np.asarray(chol(a))
+    l_np = np.linalg.cholesky(a.astype(np.float64))
+    np.testing.assert_allclose(l_ours, l_np, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 8))
+def test_solve_lower_matches_numpy(seed, k):
+    rng = np.random.default_rng(seed)
+    l_mat = np.linalg.cholesky(spd(rng, 24).astype(np.float64)).astype(np.float32)
+    b = rng.standard_normal((24, k)).astype(np.float32)
+    x = np.asarray(solve_lower(l_mat, b))
+    np.testing.assert_allclose(l_mat @ x, b, rtol=1e-3, atol=1e-3)
+
+
+def test_solve_lower_vector_form():
+    rng = np.random.default_rng(0)
+    l_mat = np.linalg.cholesky(spd(rng, 16).astype(np.float64)).astype(np.float32)
+    b = rng.standard_normal(16).astype(np.float32)
+    x = np.asarray(solve_lower(l_mat, b))
+    assert x.shape == (16,)
+    np.testing.assert_allclose(l_mat @ x, b, rtol=1e-3, atol=1e-3)
+
+
+def make_problem(rng, n_live):
+    x = np.zeros((N, D), np.float32)
+    y = np.zeros(N, np.float32)
+    mask = np.zeros(N, np.float32)
+    x[:n_live] = rng.standard_normal((n_live, D)).astype(np.float32) * 0.5
+    y[:n_live] = rng.standard_normal(n_live).astype(np.float32)
+    mask[:n_live] = 1.0
+    c = rng.standard_normal((N, D)).astype(np.float32) * 0.5
+    return x, y, mask, c
+
+
+@pytest.mark.parametrize("n_live", [3, 20, 64])
+def test_posterior_matches_dense_reference(n_live):
+    rng = np.random.default_rng(5)
+    x, y, mask, c = make_problem(rng, n_live)
+    mu, var = gp_posterior(x, y, mask, THETA, c)
+    mu_ref, var_ref = np_posterior(x, y, mask, THETA, c)
+    np.testing.assert_allclose(np.asarray(mu), mu_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(var), var_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_padding_rows_do_not_affect_posterior():
+    rng = np.random.default_rng(6)
+    x, y, mask, c = make_problem(rng, 20)
+    mu1, var1 = gp_posterior(x, y, mask, THETA, c)
+    # garbage in the padding must be invisible
+    x2 = x.copy()
+    y2 = y.copy()
+    x2[20:] = 1e3
+    y2[20:] = -1e3
+    mu2, var2 = gp_posterior(x2, y2, mask, THETA, c)
+    np.testing.assert_allclose(np.asarray(mu1), np.asarray(mu2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(var1), np.asarray(var2), rtol=1e-4, atol=1e-4)
+
+
+def test_posterior_interpolates_training_points_with_tiny_noise():
+    rng = np.random.default_rng(7)
+    x, y, mask, _ = make_problem(rng, 30)
+    theta = np.array([1.0, 0.5, 2.0, 1e-6, 1e-6, 0.0], np.float32)
+    mu, var = gp_posterior(x, y, mask, theta, x)
+    np.testing.assert_allclose(np.asarray(mu)[:30], y[:30], rtol=1e-2, atol=1e-2)
+    assert np.all(np.asarray(var)[:30] < 1e-2)
+
+
+def test_variance_shrinks_with_data():
+    rng = np.random.default_rng(8)
+    x, y, mask, c = make_problem(rng, 40)
+    few = mask.copy()
+    few[5:] = 0.0
+    _, var_few = gp_posterior(x, y, few, THETA, c)
+    _, var_many = gp_posterior(x, y, mask, THETA, c)
+    assert np.mean(np.asarray(var_many)) < np.mean(np.asarray(var_few))
+
+
+def test_nll_matches_dense_reference():
+    rng = np.random.default_rng(9)
+    x, y, mask, _ = make_problem(rng, 24)
+    got = float(gp_nll(x, y, mask, THETA))
+    live = mask > 0.5
+    xl, yl = x[live], y[live]
+    k = np.asarray(kmatrix_ref(xl, xl, THETA[0], THETA[1], THETA[2])).astype(np.float64)
+    k += (THETA[3] + THETA[4]) * np.eye(24)
+    sign, logdet = np.linalg.slogdet(k)
+    assert sign > 0
+    want = 0.5 * yl @ np.linalg.solve(k, yl) + 0.5 * logdet + 0.5 * 24 * np.log(2 * np.pi)
+    assert abs(got - want) < 1e-2 * max(1.0, abs(want))
+
+
+def test_nll_batch_consistent_with_single():
+    rng = np.random.default_rng(10)
+    x, y, mask, _ = make_problem(rng, 16)
+    thetas = np.stack(
+        [THETA, np.array([2.0, 0.1, 1.0, 0.1, 1e-5, 0.0], np.float32)]
+        + [THETA * (i + 2) / 3 + 1e-4 for i in range(30)]
+    ).astype(np.float32)
+    batch = np.asarray(gp_nll_batch(x, y, mask, thetas))
+    assert batch.shape == (32,)
+    for i in [0, 1, 17]:
+        single = float(gp_nll(x, y, mask, thetas[i]))
+        assert abs(batch[i] - single) < 1e-3 * max(1.0, abs(single))
+
+
+def test_nll_prefers_true_hyperparameters():
+    # Data drawn from a linear model should score better under a
+    # linear-dominant kernel than under a pure SE kernel.
+    rng = np.random.default_rng(11)
+    x, _, mask, _ = make_problem(rng, 48)
+    w = rng.standard_normal(D).astype(np.float32)
+    y = (x @ w) * np.asarray(mask)
+    lin_theta = np.array([1.0, 0.01, 2.0, 0.05, 1e-5, 0.0], np.float32)
+    se_theta = np.array([0.001, 1.0, 2.0, 0.05, 1e-5, 0.0], np.float32)
+    assert float(gp_nll(x, y, mask, lin_theta)) < float(gp_nll(x, y, mask, se_theta))

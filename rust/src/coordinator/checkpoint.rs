@@ -1,0 +1,245 @@
+//! Checkpointing: the nested search persists its incumbent design (hardware
+//! config + per-layer mappings + EDPs) as a human-readable key=value text
+//! file after every hardware trial, so long co-design runs survive
+//! interruption and the winning design can be inspected/reloaded (no serde
+//! in the offline crate set — the format is a flat dotted-key list).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::arch::{DataflowOpt, HwConfig};
+use crate::model::mapping::{Mapping, Split};
+use crate::model::workload::{Dim, DIMS};
+
+/// The persisted state of a co-design run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub trial: usize,
+    pub best_edp: f64,
+    pub hw: HwConfig,
+    /// (layer name, mapping, layer EDP)
+    pub layers: Vec<(String, Mapping, f64)>,
+}
+
+fn dataflow_str(d: DataflowOpt) -> &'static str {
+    match d {
+        DataflowOpt::FullAtPe => "full",
+        DataflowOpt::Streamed => "streamed",
+    }
+}
+
+fn parse_dataflow(s: &str) -> Result<DataflowOpt> {
+    match s {
+        "full" => Ok(DataflowOpt::FullAtPe),
+        "streamed" => Ok(DataflowOpt::Streamed),
+        other => bail!("bad dataflow {other}"),
+    }
+}
+
+fn order_str(o: &[Dim; 6]) -> String {
+    o.iter().map(|d| d.name()).collect()
+}
+
+fn parse_order(s: &str) -> Result<[Dim; 6]> {
+    let mut out = DIMS;
+    if s.len() != 6 {
+        bail!("order must have 6 dims: {s}");
+    }
+    for (i, ch) in s.chars().enumerate() {
+        out[i] = match ch {
+            'R' => Dim::R,
+            'S' => Dim::S,
+            'P' => Dim::P,
+            'Q' => Dim::Q,
+            'C' => Dim::C,
+            'K' => Dim::K,
+            other => bail!("bad dim {other}"),
+        };
+    }
+    Ok(out)
+}
+
+impl Checkpoint {
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("model={}\n", self.model));
+        s.push_str(&format!("trial={}\n", self.trial));
+        s.push_str(&format!("best_edp={:e}\n", self.best_edp));
+        let h = &self.hw;
+        s.push_str(&format!(
+            "hw.pe_mesh={}x{}\nhw.lb={},{},{}\nhw.gb_mesh={}x{}\nhw.gb_geom={},{}\nhw.df={},{}\n",
+            h.pe_mesh_x,
+            h.pe_mesh_y,
+            h.lb_inputs,
+            h.lb_weights,
+            h.lb_outputs,
+            h.gb_mesh_x,
+            h.gb_mesh_y,
+            h.gb_block,
+            h.gb_cluster,
+            dataflow_str(h.df_filter_w),
+            dataflow_str(h.df_filter_h),
+        ));
+        for (i, (name, m, edp)) in self.layers.iter().enumerate() {
+            s.push_str(&format!("layer.{i}.name={name}\n"));
+            s.push_str(&format!("layer.{i}.edp={edp:e}\n"));
+            for d in DIMS {
+                let sp = m.split(d);
+                s.push_str(&format!(
+                    "layer.{i}.split.{}={},{},{},{},{}\n",
+                    d.name(),
+                    sp.dram,
+                    sp.glb,
+                    sp.spatial_x,
+                    sp.spatial_y,
+                    sp.local
+                ));
+            }
+            s.push_str(&format!(
+                "layer.{i}.orders={},{},{}\n",
+                order_str(&m.order_dram),
+                order_str(&m.order_glb),
+                order_str(&m.order_local)
+            ));
+        }
+        s
+    }
+
+    pub fn from_text(text: &str) -> Result<Self> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').with_context(|| format!("bad line {line}"))?;
+            kv.insert(k.to_string(), v.to_string());
+        }
+        let get = |k: &str| kv.get(k).cloned().ok_or_else(|| anyhow!("missing key {k}"));
+
+        let mesh = get("hw.pe_mesh")?;
+        let (mx, my) = mesh.split_once('x').ok_or_else(|| anyhow!("bad mesh"))?;
+        let lb: Vec<u64> =
+            get("hw.lb")?.split(',').map(|s| s.parse()).collect::<Result<_, _>>()?;
+        let gbm = get("hw.gb_mesh")?;
+        let (gx, gy) = gbm.split_once('x').ok_or_else(|| anyhow!("bad gb mesh"))?;
+        let geom: Vec<u64> =
+            get("hw.gb_geom")?.split(',').map(|s| s.parse()).collect::<Result<_, _>>()?;
+        let df = get("hw.df")?;
+        let (dw, dh) = df.split_once(',').ok_or_else(|| anyhow!("bad df"))?;
+        let gb_mesh_x: u64 = gx.parse()?;
+        let gb_mesh_y: u64 = gy.parse()?;
+        let hw = HwConfig {
+            pe_mesh_x: mx.parse()?,
+            pe_mesh_y: my.parse()?,
+            lb_inputs: lb[0],
+            lb_weights: lb[1],
+            lb_outputs: lb[2],
+            gb_instances: gb_mesh_x * gb_mesh_y,
+            gb_mesh_x,
+            gb_mesh_y,
+            gb_block: geom[0],
+            gb_cluster: geom[1],
+            df_filter_w: parse_dataflow(dw)?,
+            df_filter_h: parse_dataflow(dh)?,
+        };
+
+        let mut layers = Vec::new();
+        let mut i = 0;
+        while let Ok(name) = get(&format!("layer.{i}.name")) {
+            let edp: f64 = get(&format!("layer.{i}.edp"))?.parse()?;
+            let mut splits = [Split::unit(); 6];
+            for d in DIMS {
+                let raw = get(&format!("layer.{i}.split.{}", d.name()))?;
+                let v: Vec<u64> =
+                    raw.split(',').map(|s| s.parse()).collect::<Result<_, _>>()?;
+                splits[d.index()] = Split {
+                    dram: v[0],
+                    glb: v[1],
+                    spatial_x: v[2],
+                    spatial_y: v[3],
+                    local: v[4],
+                };
+            }
+            let orders = get(&format!("layer.{i}.orders"))?;
+            let parts: Vec<&str> = orders.split(',').collect();
+            let m = Mapping {
+                splits,
+                order_dram: parse_order(parts[0])?,
+                order_glb: parse_order(parts[1])?,
+                order_local: parse_order(parts[2])?,
+            };
+            layers.push((name, m, edp));
+            i += 1;
+        }
+
+        Ok(Checkpoint {
+            model: get("model")?,
+            trial: get("trial")?.parse()?,
+            best_edp: get("best_edp")?.parse()?,
+            hw,
+            layers,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_text())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_text(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::eyeriss::eyeriss_hw;
+    use crate::workloads::specs::layer_by_name;
+
+    #[test]
+    fn text_roundtrip_exact() {
+        let layer = layer_by_name("DQN-K2").unwrap();
+        let m = Mapping::trivial(&layer);
+        let ck = Checkpoint {
+            model: "dqn".into(),
+            trial: 17,
+            best_edp: 3.25e-7,
+            hw: eyeriss_hw(168),
+            layers: vec![("DQN-K2".into(), m, 3.25e-7)],
+        };
+        let back = Checkpoint::from_text(&ck.to_text()).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let layer = layer_by_name("DQN-K1").unwrap();
+        let ck = Checkpoint {
+            model: "dqn".into(),
+            trial: 0,
+            best_edp: 1.0,
+            hw: eyeriss_hw(168),
+            layers: vec![("DQN-K1".into(), Mapping::trivial(&layer), 1.0)],
+        };
+        let dir = std::env::temp_dir().join("codesign_ck_test");
+        let path = dir.join("ck.txt");
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Checkpoint::from_text("not a checkpoint").is_err());
+        assert!(Checkpoint::from_text("model=x\ntrial=zzz").is_err());
+    }
+}

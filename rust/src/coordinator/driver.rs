@@ -1,0 +1,251 @@
+//! The nested co-design driver (§4.1, Fig. 1): the outer hardware BO
+//! proposes configurations; for each one, per-layer software mapping
+//! searches run in parallel worker threads; layerwise EDPs are summed and
+//! fed back; the incumbent design is checkpointed after every hardware
+//! trial. This is the leader process of the system — the CLI's `codesign`
+//! subcommand is a thin wrapper over `Driver::run`.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::parallel::{default_threads, parallel_map};
+use crate::model::arch::HwConfig;
+use crate::model::eval::Evaluator;
+use crate::opt::config::NestedConfig;
+use crate::opt::hw_search::{self, HwMethod, HwTrace};
+use crate::opt::sw_search::{self, SwMethod, SwProblem};
+use crate::space::hw_space::HwSpace;
+use crate::space::sw_space::SwSpace;
+use crate::surrogate::gp::GpBackend;
+use crate::util::rng::Rng;
+use crate::workloads::eyeriss::eyeriss_resources;
+use crate::workloads::specs::ModelSpec;
+
+/// Result of a co-design run.
+pub struct CodesignOutcome {
+    pub hw_trace: HwTrace,
+    /// Best full design (hardware + per-layer mappings), if any trial was
+    /// feasible.
+    pub best: Option<Checkpoint>,
+    pub metrics: Arc<Metrics>,
+}
+
+/// Driver configuration.
+#[derive(Clone, Debug)]
+pub struct Driver {
+    pub ncfg: NestedConfig,
+    pub hw_method: HwMethod,
+    pub sw_method: SwMethod,
+    pub threads: usize,
+    pub checkpoint_path: Option<PathBuf>,
+    pub verbose: bool,
+}
+
+impl Driver {
+    pub fn new(ncfg: NestedConfig) -> Self {
+        Driver {
+            ncfg,
+            hw_method: HwMethod::Bo,
+            sw_method: SwMethod::Bo { surrogate: sw_search::SurrogateKind::Gp },
+            threads: default_threads(),
+            checkpoint_path: None,
+            verbose: true,
+        }
+    }
+
+    /// Evaluate one hardware configuration: parallel per-layer software
+    /// searches; returns the summed EDP and per-layer (mapping, EDP), or
+    /// None if any layer has no findable mapping (the unknown constraint).
+    pub fn evaluate_hardware(
+        &self,
+        model: &ModelSpec,
+        hw: &HwConfig,
+        backend: &GpBackend,
+        metrics: &Metrics,
+        seed: u64,
+    ) -> Option<(f64, Vec<(String, crate::model::mapping::Mapping, f64)>)> {
+        let resources = eyeriss_resources(model.num_pes);
+        let eval = Evaluator::new(resources.clone());
+        let backends: Vec<GpBackend> =
+            (0..model.layers.len()).map(|_| backend.clone()).collect();
+        let items: Vec<(usize, &crate::model::workload::Layer)> =
+            model.layers.iter().enumerate().collect();
+
+        let results = parallel_map(&items, self.threads, |_, &(li, layer)| {
+            let problem = SwProblem {
+                space: SwSpace::new(layer.clone(), hw.clone(), resources.clone()),
+                eval: eval.clone(),
+            };
+            let mut rng = Rng::seed_from_u64(seed ^ (0x9E37 * (li as u64 + 1)));
+            let trace = sw_search::search(
+                self.sw_method,
+                &problem,
+                self.ncfg.sw_trials,
+                &self.ncfg.sw_bo,
+                &backends[li],
+                &mut rng,
+            );
+            metrics.add_trace(&trace.evals, trace.raw_draws);
+            trace
+        });
+
+        let mut total = 0.0;
+        let mut layers = Vec::new();
+        for (trace, layer) in results.iter().zip(model.layers.iter()) {
+            let m = trace.best_mapping.clone()?; // None => unknown constraint
+            total += trace.best_edp;
+            layers.push((layer.name.clone(), m, trace.best_edp));
+        }
+        Some((total, layers))
+    }
+
+    /// Full nested co-design on a model.
+    pub fn run(&self, model: &ModelSpec, backend: &GpBackend, seed: u64) -> CodesignOutcome {
+        let metrics = Metrics::new();
+        let space = HwSpace::new(eyeriss_resources(model.num_pes));
+        let best: Mutex<Option<Checkpoint>> = Mutex::new(None);
+        let mut trial = 0usize;
+
+        let hw_trace = {
+            let metrics_ref = Arc::clone(&metrics);
+            let inner = |hw: &HwConfig| -> Option<f64> {
+                let t = trial;
+                trial += 1;
+                let out = self.evaluate_hardware(model, hw, backend, &metrics_ref, seed + t as u64);
+                if let Some((edp, layers)) = &out {
+                    let mut guard = best.lock().unwrap();
+                    let improved = guard.as_ref().map_or(true, |b| *edp < b.best_edp);
+                    if improved {
+                        let ck = Checkpoint {
+                            model: model.name.to_string(),
+                            trial: t,
+                            best_edp: *edp,
+                            hw: hw.clone(),
+                            layers: layers.clone(),
+                        };
+                        if let Some(path) = &self.checkpoint_path {
+                            if let Err(e) = ck.save(path) {
+                                eprintln!("checkpoint save failed: {e:#}");
+                            }
+                        }
+                        *guard = Some(ck);
+                    }
+                    if self.verbose {
+                        eprintln!(
+                            "[{}] hw trial {t}: edp {:.3e} (best {:.3e})",
+                            model.name,
+                            edp,
+                            best.lock().unwrap().as_ref().map(|b| b.best_edp).unwrap_or(*edp)
+                        );
+                    }
+                } else if self.verbose {
+                    eprintln!("[{}] hw trial {t}: infeasible (no mapping found)", model.name);
+                }
+                out.map(|(edp, _)| edp)
+            };
+
+            let mut rng = Rng::seed_from_u64(seed);
+            hw_search::search(
+                self.hw_method,
+                &space,
+                inner,
+                self.ncfg.hw_trials,
+                &self.ncfg.hw_bo,
+                backend,
+                &mut rng,
+            )
+        };
+
+        CodesignOutcome { hw_trace, best: best.into_inner().unwrap(), metrics }
+    }
+}
+
+/// Evaluate the Eyeriss baseline itself: best mappings for each layer on the
+/// fixed Eyeriss hardware (the denominator of Fig. 5a).
+pub fn eyeriss_baseline(
+    model: &ModelSpec,
+    sw_method: SwMethod,
+    sw_trials: usize,
+    backend: &GpBackend,
+    threads: usize,
+    seed: u64,
+) -> Option<(f64, Vec<(String, crate::model::mapping::Mapping, f64)>)> {
+    let driver = Driver {
+        ncfg: NestedConfig {
+            sw_trials,
+            ..NestedConfig::default()
+        },
+        hw_method: HwMethod::Bo,
+        sw_method,
+        threads,
+        checkpoint_path: None,
+        verbose: false,
+    };
+    let metrics = Metrics::new();
+    let hw = crate::workloads::eyeriss::eyeriss_hw(model.num_pes);
+    driver.evaluate_hardware(model, &hw, backend, &metrics, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::config::BoConfig;
+    use crate::workloads::specs::dqn;
+
+    fn tiny_cfg() -> NestedConfig {
+        NestedConfig {
+            hw_trials: 4,
+            sw_trials: 12,
+            hw_bo: BoConfig { warmup: 2, pool: 10, ..BoConfig::hardware() },
+            sw_bo: BoConfig { warmup: 4, pool: 10, ..BoConfig::software() },
+        }
+    }
+
+    #[test]
+    fn nested_codesign_produces_a_design_native_backend() {
+        let mut driver = Driver::new(tiny_cfg());
+        driver.verbose = false;
+        driver.threads = 2;
+        let out = driver.run(&dqn(), &GpBackend::Native, 1);
+        assert_eq!(out.hw_trace.evals.len(), 4);
+        let best = out.best.expect("at least one feasible hardware trial");
+        assert_eq!(best.layers.len(), 2);
+        assert!(best.best_edp.is_finite());
+        // the checkpointed EDP is the sum of layer EDPs
+        let sum: f64 = best.layers.iter().map(|(_, _, e)| e).sum();
+        assert!((sum - best.best_edp).abs() < 1e-9 * best.best_edp);
+    }
+
+    #[test]
+    fn eyeriss_baseline_is_feasible() {
+        let out = eyeriss_baseline(
+            &dqn(),
+            SwMethod::Random,
+            10,
+            &GpBackend::Native,
+            2,
+            3,
+        );
+        let (edp, layers) = out.expect("eyeriss must be mappable");
+        assert!(edp.is_finite());
+        assert_eq!(layers.len(), 2);
+    }
+
+    #[test]
+    fn checkpoint_written_when_path_set() {
+        let dir = std::env::temp_dir().join("codesign_driver_test");
+        let path = dir.join("best.txt");
+        let mut driver = Driver::new(tiny_cfg());
+        driver.verbose = false;
+        driver.threads = 2;
+        driver.checkpoint_path = Some(path.clone());
+        let out = driver.run(&dqn(), &GpBackend::Native, 2);
+        if out.best.is_some() {
+            let ck = Checkpoint::load(&path).unwrap();
+            assert_eq!(ck.model, "dqn");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

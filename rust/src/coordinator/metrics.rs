@@ -1,0 +1,85 @@
+//! Run metrics: aggregate telemetry across the nested search (simulator
+//! evaluations, rejection-sampling draws, feasibility rates, wall time).
+//! Reported at the end of every CLI run and recorded in EXPERIMENTS.md.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Metrics {
+    pub sim_evals: AtomicU64,
+    pub raw_draws: AtomicU64,
+    pub feasible_evals: AtomicU64,
+    pub gp_fits: AtomicU64,
+    start: Instant,
+}
+
+impl Metrics {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Metrics {
+            sim_evals: AtomicU64::new(0),
+            raw_draws: AtomicU64::new(0),
+            feasible_evals: AtomicU64::new(0),
+            gp_fits: AtomicU64::new(0),
+            start: Instant::now(),
+        })
+    }
+
+    pub fn add_trace(&self, evals: &[f64], raw_draws: u64) {
+        self.sim_evals.fetch_add(evals.len() as u64, Ordering::Relaxed);
+        self.raw_draws.fetch_add(raw_draws, Ordering::Relaxed);
+        self.feasible_evals.fetch_add(
+            evals.iter().filter(|e| e.is_finite()).count() as u64,
+            Ordering::Relaxed,
+        );
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Fraction of raw design-space draws that were feasible (cf. the
+    /// paper's ~22K draws per 150 feasible points observation).
+    pub fn feasibility_rate(&self) -> f64 {
+        let evals = self.sim_evals.load(Ordering::Relaxed) as f64;
+        let draws = self.raw_draws.load(Ordering::Relaxed) as f64;
+        if draws == 0.0 {
+            return 0.0;
+        }
+        evals / draws
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "sim_evals={} feasible={} raw_draws={} feasibility_rate={:.5} elapsed={:.1}s",
+            self.sim_evals.load(Ordering::Relaxed),
+            self.feasible_evals.load(Ordering::Relaxed),
+            self.raw_draws.load(Ordering::Relaxed),
+            self.feasibility_rate(),
+            self.elapsed_secs()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_threads() {
+        let m = Metrics::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = Arc::clone(&m);
+                s.spawn(move || {
+                    m.add_trace(&[1.0, f64::INFINITY, 3.0], 100);
+                });
+            }
+        });
+        assert_eq!(m.sim_evals.load(Ordering::Relaxed), 12);
+        assert_eq!(m.feasible_evals.load(Ordering::Relaxed), 8);
+        assert_eq!(m.raw_draws.load(Ordering::Relaxed), 400);
+        assert!(m.report().contains("sim_evals=12"));
+    }
+}

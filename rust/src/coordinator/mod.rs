@@ -1,0 +1,12 @@
+//! The Layer-3 coordinator: nested co-design driver (leader), parallel
+//! per-layer workers, run metrics, and checkpointing.
+
+pub mod checkpoint;
+pub mod driver;
+pub mod metrics;
+pub mod parallel;
+
+pub use checkpoint::Checkpoint;
+pub use driver::{eyeriss_baseline, CodesignOutcome, Driver};
+pub use metrics::Metrics;
+pub use parallel::{default_threads, parallel_map};

@@ -1,0 +1,92 @@
+//! Scoped-thread parallel map (the offline crate set has no tokio/rayon).
+//! Used by the co-design driver to run per-layer software searches
+//! concurrently, and by the figure harnesses for repeats.
+
+/// Apply `f` to each item on its own thread (bounded by `max_threads`) and
+//  collect results in input order.
+pub fn parallel_map<T, R, F>(items: &[T], max_threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = max_threads.max(1).min(n);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+
+    if threads == 1 {
+        for (i, item) in items.iter().enumerate() {
+            out[i] = Some(f(i, item));
+        }
+        return out.into_iter().map(|r| r.unwrap()).collect();
+    }
+
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                **slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    out.into_iter().map(|r| r.expect("worker must fill every slot")).collect()
+}
+
+/// Default worker count: physical parallelism capped at 8 (the searches are
+/// memory-light; beyond the core count there is nothing to gain).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_coverage() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let items = vec![1, 2, 3];
+        let out = parallel_map(&items, 1, |i, &x| i as i32 + x);
+        assert_eq!(out, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u8> = vec![];
+        let out: Vec<u8> = parallel_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn actually_runs_concurrently() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let peak = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..16).collect();
+        parallel_map(&items, 4, |_, _| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) >= 2, "no observed concurrency");
+    }
+}

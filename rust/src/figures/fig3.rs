@@ -1,0 +1,157 @@
+//! Fig. 3 (main) and Fig. 16 (appendix): software mapping optimization on
+//! fixed Eyeriss hardware. Five methods — constrained random search,
+//! TVM-XGBoost, TVM-TreeGRU, out-of-the-box (relax-and-round) BO, and our
+//! constrained BO — 250 trials, averaged over independent repeats. The
+//! y-axis of the paper's plot is the reciprocal of EDP normalized to the
+//! best found; the CSV stores raw best-so-far EDP per trial so any
+//! normalization can be applied downstream (`norm_recip` column included).
+
+use anyhow::Result;
+
+use super::FigOpts;
+use crate::model::eval::Evaluator;
+use crate::opt::config::BoConfig;
+use crate::opt::sw_search::{search, SurrogateKind, SwMethod, SwProblem};
+use crate::space::sw_space::SwSpace;
+use crate::util::csvout::Csv;
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use crate::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+use crate::workloads::specs::{all_models, layer_by_name};
+
+pub const METHODS: [SwMethod; 5] = [
+    SwMethod::Random,
+    SwMethod::TvmXgb,
+    SwMethod::TvmTreeGru,
+    SwMethod::RoundBo,
+    SwMethod::Bo { surrogate: SurrogateKind::Gp },
+];
+
+/// The layer-2 benchmarks of Fig. 3.
+pub const FIG3_LAYERS: [&str; 4] = ["ResNet-K2", "DQN-K2", "MLP-K2", "Transformer-K2"];
+
+pub fn problem_for(layer_name: &str) -> SwProblem {
+    let layer = layer_by_name(layer_name).expect("known layer");
+    let num_pes = if layer_name.starts_with("Transformer") { 256 } else { 168 };
+    SwProblem {
+        space: SwSpace::new(layer, eyeriss_hw(num_pes), eyeriss_resources(num_pes)),
+        eval: Evaluator::new(eyeriss_resources(num_pes)),
+    }
+}
+
+/// Run the Fig. 3 sweep over the given layers; returns the CSV path.
+pub fn run(opts: &FigOpts, layers: &[&str], out_name: &str) -> Result<std::path::PathBuf> {
+    let trials = opts.scaled(250);
+    let repeats = opts.repeats_or(10);
+    let cfg = BoConfig::software();
+
+    let mut csv = Csv::new(&[
+        "layer", "method", "repeat", "trial", "best_edp", "norm_recip",
+    ]);
+    let mut summary = Csv::new(&["layer", "method", "mean_final_best_edp", "repeats", "trials"]);
+
+    for &layer_name in layers {
+        let problem = problem_for(layer_name);
+        // collect all curves first so normalization uses the global best
+        let mut curves: Vec<(SwMethod, usize, Vec<f64>)> = Vec::new();
+
+        // (method, repeat) grid, parallel across repeats
+        let jobs: Vec<(SwMethod, usize)> = METHODS
+            .iter()
+            .flat_map(|&m| (0..repeats).map(move |r| (m, r)))
+            .collect();
+        let results = crate::coordinator::parallel::parallel_map(
+            &jobs,
+            opts.threads,
+            |_, &(method, rep)| {
+                let mut rng =
+                    Rng::seed_from_u64(opts.seed ^ (rep as u64 * 7919 + method_tag(method)));
+                let trace = search(method, &problem, trials, &cfg, &opts.backend, &mut rng);
+                (method, rep, trace.best_curve())
+            },
+        );
+        curves.extend(results);
+
+        let global_best = curves
+            .iter()
+            .flat_map(|(_, _, c)| c.iter())
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+
+        for (method, rep, curve) in &curves {
+            for (t, &edp) in curve.iter().enumerate() {
+                let norm = if edp.is_finite() { global_best / edp } else { 0.0 };
+                csv.row(&[
+                    layer_name.to_string(),
+                    method.name().to_string(),
+                    rep.to_string(),
+                    t.to_string(),
+                    format!("{edp:e}"),
+                    format!("{norm:.6}"),
+                ]);
+            }
+        }
+        for &method in &METHODS {
+            let finals: Vec<f64> = curves
+                .iter()
+                .filter(|(m, _, _)| *m == method)
+                .map(|(_, _, c)| *c.last().unwrap())
+                .filter(|v| v.is_finite())
+                .collect();
+            summary.row(&[
+                layer_name.to_string(),
+                method.name().to_string(),
+                format!("{:e}", mean(&finals)),
+                repeats.to_string(),
+                trials.to_string(),
+            ]);
+        }
+        eprintln!("fig3: {layer_name} done ({repeats} repeats x {} methods)", METHODS.len());
+    }
+
+    let path = opts.out(out_name);
+    csv.write(&path)?;
+    summary.write(opts.out(&format!("summary_{out_name}")))?;
+    Ok(path)
+}
+
+fn method_tag(m: SwMethod) -> u64 {
+    match m {
+        SwMethod::Random => 1,
+        SwMethod::TvmXgb => 2,
+        SwMethod::TvmTreeGru => 3,
+        SwMethod::RoundBo => 4,
+        SwMethod::Bo { surrogate: SurrogateKind::Gp } => 5,
+        SwMethod::Bo { surrogate: SurrogateKind::RandomForest } => 6,
+    }
+}
+
+/// Fig. 16: the same sweep over every layer of every model.
+pub fn all_layer_names() -> Vec<String> {
+    all_models()
+        .into_iter()
+        .flat_map(|m| m.layers.into_iter().map(|l| l.name))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::gp::GpBackend;
+
+    #[test]
+    fn smoke_fig3_single_layer_tiny_budget() {
+        let mut opts = FigOpts::new(GpBackend::Native);
+        opts.scale = 0.04; // 10 trials
+        opts.repeats = 2;
+        opts.threads = 2;
+        opts.out_dir = std::env::temp_dir().join("codesign_fig3_test");
+        let path = run(&opts, &["DQN-K2"], "fig3_test.csv").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // header + 5 methods * 2 repeats * 10 trials
+        assert_eq!(text.lines().count(), 1 + 5 * 2 * 10);
+        assert!(text.contains("bo-gp"));
+        assert!(text.contains("tvm-xgb"));
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

@@ -1,0 +1,98 @@
+//! Fig. 4: hardware/software co-optimization curves. X-axis is hardware
+//! trials (50), each trial funding a 250-trial software mapping search per
+//! layer; the four curves cross hardware {BO, random} with software
+//! {BO, random}, showing both that BO beats random in the outer loop and
+//! that mapping optimization quality dominates the co-design.
+
+use anyhow::Result;
+
+use super::FigOpts;
+use crate::coordinator::driver::Driver;
+use crate::opt::config::{BoConfig, NestedConfig};
+use crate::opt::hw_search::HwMethod;
+use crate::opt::sw_search::{SurrogateKind, SwMethod};
+use crate::util::csvout::Csv;
+use crate::workloads::specs::model_by_name;
+
+pub const COMBOS: [(HwMethod, SwMethod, &str); 4] = [
+    (HwMethod::Bo, SwMethod::Bo { surrogate: SurrogateKind::Gp }, "hw-bo/sw-bo"),
+    (HwMethod::Random, SwMethod::Bo { surrogate: SurrogateKind::Gp }, "hw-random/sw-bo"),
+    (HwMethod::Bo, SwMethod::Random, "hw-bo/sw-random"),
+    (HwMethod::Random, SwMethod::Random, "hw-random/sw-random"),
+];
+
+pub fn run(opts: &FigOpts, models: &[&str], out_name: &str) -> Result<std::path::PathBuf> {
+    let hw_trials = opts.scaled(50);
+    let sw_trials = opts.scaled(250);
+    let repeats = opts.repeats_or(5);
+
+    let mut csv = Csv::new(&[
+        "model", "combo", "repeat", "hw_trial", "model_edp", "best_model_edp",
+    ]);
+
+    for &model_name in models {
+        let model = model_by_name(model_name).expect("known model");
+        for (hw_m, sw_m, combo) in COMBOS {
+            for rep in 0..repeats {
+                let ncfg = NestedConfig {
+                    hw_trials,
+                    sw_trials,
+                    hw_bo: BoConfig::hardware(),
+                    sw_bo: BoConfig::software(),
+                };
+                let mut driver = Driver::new(ncfg);
+                driver.hw_method = hw_m;
+                driver.sw_method = sw_m;
+                driver.threads = opts.threads;
+                driver.verbose = false;
+                let out = driver.run(
+                    &model,
+                    &opts.backend,
+                    opts.seed ^ (rep as u64 * 104729 + combo.len() as u64),
+                );
+                let curve = out.hw_trace.best_curve();
+                for (t, (&edp, &best)) in
+                    out.hw_trace.evals.iter().zip(curve.iter()).enumerate()
+                {
+                    csv.row(&[
+                        model_name.to_string(),
+                        combo.to_string(),
+                        rep.to_string(),
+                        t.to_string(),
+                        format!("{edp:e}"),
+                        format!("{best:e}"),
+                    ]);
+                }
+                eprintln!(
+                    "fig4: {model_name} {combo} rep {rep}: best {:.3e} ({})",
+                    out.hw_trace.best_edp,
+                    out.metrics.report()
+                );
+            }
+        }
+    }
+
+    let path = opts.out(out_name);
+    csv.write(&path)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::gp::GpBackend;
+
+    #[test]
+    fn smoke_fig4_tiny_budget() {
+        let mut opts = FigOpts::new(GpBackend::Native);
+        opts.scale = 0.04; // 2 hw trials x 10 sw trials
+        opts.repeats = 1;
+        opts.threads = 2;
+        opts.out_dir = std::env::temp_dir().join("codesign_fig4_test");
+        let path = run(&opts, &["dqn"], "fig4_test.csv").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() > 4, "{text}");
+        assert!(text.contains("hw-bo/sw-bo"));
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

@@ -1,0 +1,127 @@
+//! Fig. 5b / Fig. 17: surrogate-model x acquisition-function ablation
+//! (GP vs random forest, EI vs LCB) — and Fig. 5c / Fig. 18: LCB lambda
+//! sweep. Run on the software mapping search (ResNet-K4 for the main-paper
+//! panels, any layer for the appendix versions); the same knobs drive the
+//! hardware search through `opt::hw_search::HwMethod::BoRf`.
+
+use anyhow::Result;
+
+use super::fig3::problem_for;
+use super::FigOpts;
+use crate::opt::config::BoConfig;
+use crate::opt::sw_search::{bo_search, SurrogateKind};
+use crate::surrogate::acquisition::Acquisition;
+use crate::util::csvout::Csv;
+use crate::util::rng::Rng;
+
+/// Fig. 5b / Fig. 17: {GP, RF} x {EI, LCB(1)}.
+pub fn run_surrogate_ablation(
+    opts: &FigOpts,
+    layer: &str,
+    out_name: &str,
+) -> Result<std::path::PathBuf> {
+    let trials = opts.scaled(250);
+    let repeats = opts.repeats_or(10);
+    let variants: [(SurrogateKind, Acquisition, &str); 4] = [
+        (SurrogateKind::Gp, Acquisition::Lcb(1.0), "gp-lcb"),
+        (SurrogateKind::Gp, Acquisition::Ei, "gp-ei"),
+        (SurrogateKind::RandomForest, Acquisition::Lcb(1.0), "rf-lcb"),
+        (SurrogateKind::RandomForest, Acquisition::Ei, "rf-ei"),
+    ];
+
+    let problem = problem_for(layer);
+    let mut csv = Csv::new(&["layer", "variant", "repeat", "trial", "best_edp"]);
+
+    let jobs: Vec<(usize, usize)> = (0..variants.len())
+        .flat_map(|v| (0..repeats).map(move |r| (v, r)))
+        .collect();
+    let results = crate::coordinator::parallel::parallel_map(&jobs, opts.threads, |_, &(v, r)| {
+        let (surrogate, acq, _) = variants[v];
+        let cfg = BoConfig { acquisition: acq, ..BoConfig::software() };
+        let mut rng = Rng::seed_from_u64(opts.seed ^ (r as u64 * 31337 + v as u64));
+        let trace = bo_search(&problem, trials, &cfg, &opts.backend, surrogate, &mut rng);
+        (v, r, trace.best_curve())
+    });
+
+    for (v, r, curve) in results {
+        for (t, edp) in curve.iter().enumerate() {
+            csv.row(&[
+                layer.to_string(),
+                variants[v].2.to_string(),
+                r.to_string(),
+                t.to_string(),
+                format!("{edp:e}"),
+            ]);
+        }
+    }
+    let path = opts.out(out_name);
+    csv.write(&path)?;
+    Ok(path)
+}
+
+/// Fig. 5c / Fig. 18: LCB lambda robustness sweep.
+pub fn run_lambda_sweep(
+    opts: &FigOpts,
+    layer: &str,
+    lambdas: &[f64],
+    out_name: &str,
+) -> Result<std::path::PathBuf> {
+    let trials = opts.scaled(250);
+    let repeats = opts.repeats_or(10);
+    let problem = problem_for(layer);
+    let mut csv = Csv::new(&["layer", "lambda", "repeat", "trial", "best_edp"]);
+
+    let jobs: Vec<(usize, usize)> = (0..lambdas.len())
+        .flat_map(|l| (0..repeats).map(move |r| (l, r)))
+        .collect();
+    let results = crate::coordinator::parallel::parallel_map(&jobs, opts.threads, |_, &(l, r)| {
+        let cfg = BoConfig {
+            acquisition: Acquisition::Lcb(lambdas[l]),
+            ..BoConfig::software()
+        };
+        let mut rng = Rng::seed_from_u64(opts.seed ^ (r as u64 * 104659 + l as u64));
+        let trace =
+            bo_search(&problem, trials, &cfg, &opts.backend, SurrogateKind::Gp, &mut rng);
+        (l, r, trace.best_curve())
+    });
+
+    for (l, r, curve) in results {
+        for (t, edp) in curve.iter().enumerate() {
+            csv.row(&[
+                layer.to_string(),
+                lambdas[l].to_string(),
+                r.to_string(),
+                t.to_string(),
+                format!("{edp:e}"),
+            ]);
+        }
+    }
+    let path = opts.out(out_name);
+    csv.write(&path)?;
+    Ok(path)
+}
+
+/// The paper's lambda grid (Fig. 5c / Fig. 18).
+pub const LAMBDAS: [f64; 4] = [0.1, 0.5, 1.0, 2.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::gp::GpBackend;
+
+    #[test]
+    fn smoke_ablation_and_lambda_sweep() {
+        let mut opts = FigOpts::new(GpBackend::Native);
+        opts.scale = 0.04;
+        opts.repeats = 1;
+        opts.threads = 2;
+        opts.out_dir = std::env::temp_dir().join("codesign_fig5bc_test");
+        let p1 = run_surrogate_ablation(&opts, "DQN-K2", "fig5b_test.csv").unwrap();
+        let t1 = std::fs::read_to_string(&p1).unwrap();
+        assert!(t1.contains("gp-lcb") && t1.contains("rf-ei"));
+        let p2 = run_lambda_sweep(&opts, "DQN-K2", &[0.1, 1.0], "fig5c_test.csv").unwrap();
+        let t2 = std::fs::read_to_string(&p2).unwrap();
+        assert!(t2.contains("0.1") && t2.lines().count() > 4);
+        std::fs::remove_dir_all(&opts.out_dir).ok();
+    }
+}

@@ -1,0 +1,57 @@
+//! Figure harnesses: one function per table/figure of the paper's
+//! evaluation, each regenerating its data as CSV under `results/`.
+//! DESIGN.md §6 is the index; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5a;
+pub mod fig5bc;
+pub mod insight;
+pub mod report;
+
+use std::path::PathBuf;
+
+use crate::surrogate::gp::GpBackend;
+
+/// Shared options for all figure harnesses.
+#[derive(Clone)]
+pub struct FigOpts {
+    /// Scales every trial budget (1.0 = the paper's budgets). Lets smoke
+    /// runs and CI use the same code path the full reproduction uses.
+    pub scale: f64,
+    /// Independent repeats (paper Fig. 10: 5 hardware / 10 software).
+    pub repeats: usize,
+    pub seed: u64,
+    pub threads: usize,
+    pub backend: GpBackend,
+    pub out_dir: PathBuf,
+}
+
+impl FigOpts {
+    pub fn new(backend: GpBackend) -> Self {
+        FigOpts {
+            scale: 1.0,
+            repeats: 0, // 0 = per-figure default
+            seed: 2020,
+            threads: crate::coordinator::parallel::default_threads(),
+            backend,
+            out_dir: PathBuf::from("results"),
+        }
+    }
+
+    pub fn scaled(&self, trials: usize) -> usize {
+        ((trials as f64 * self.scale).round() as usize).max(2)
+    }
+
+    pub fn repeats_or(&self, default: usize) -> usize {
+        if self.repeats == 0 {
+            ((default as f64 * self.scale).round() as usize).clamp(1, default)
+        } else {
+            self.repeats
+        }
+    }
+
+    pub fn out(&self, name: &str) -> PathBuf {
+        self.out_dir.join(name)
+    }
+}

@@ -1,0 +1,25 @@
+//! # codesign — Learned Hardware/Software Co-Design of Neural Accelerators
+//!
+//! A reproduction of Shi et al. (2020): constrained, nested Bayesian
+//! optimization over the joint hardware/software design space of DNN
+//! accelerators, evaluated on a Timeloop-style analytical cost model.
+//!
+//! Crate layout (see DESIGN.md for the full inventory):
+//! * [`model`] — the accelerator cost model (the simulation substrate).
+//! * [`space`] — the H1-H12 / S1-S9 design-space parameterization, samplers
+//!   and feature transforms.
+//! * [`workloads`] — paper workloads and the Eyeriss baseline.
+//! * [`surrogate`] — GP / random-forest / boosted-tree / MLP surrogates.
+//! * [`opt`] — the constrained-BO optimizers and all baselines.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas GP math.
+//! * [`coordinator`] — the nested co-design driver (threads, metrics, CLI).
+//! * [`figures`] — harnesses regenerating every figure of the paper.
+pub mod coordinator;
+pub mod figures;
+pub mod model;
+pub mod opt;
+pub mod runtime;
+pub mod space;
+pub mod surrogate;
+pub mod util;
+pub mod workloads;

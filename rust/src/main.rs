@@ -1,0 +1,424 @@
+//! `codesign` — CLI for the hardware/software co-design framework.
+//!
+//! Subcommands (see README.md):
+//!   quickstart                 evaluate Eyeriss + a searched mapping on DQN-K2
+//!   sw-opt                     software mapping search on fixed hardware
+//!   codesign                   full nested co-design on a model
+//!   fig3|fig4|fig5a|fig5b|fig5c|fig16|fig17|fig18|insight
+//!                              regenerate the paper's figures (CSV under results/)
+//!   selftest                   artifact <-> native GP numerical cross-check
+//!
+//! Common flags: --model NAME --layer NAME --trials N --hw-trials N
+//!   --sw-trials N --repeats N --scale F --seed N --threads N --out DIR
+//!   --method M --native (use the pure-Rust GP instead of the PJRT artifacts)
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use codesign::coordinator::driver::{eyeriss_baseline, Driver};
+use codesign::figures::{fig3, fig4, fig5a, fig5bc, insight, FigOpts};
+use codesign::model::eval::Evaluator;
+use codesign::opt::config::{BoConfig, NestedConfig};
+use codesign::opt::hw_search::HwMethod;
+use codesign::opt::sw_search::{search, SurrogateKind, SwMethod, SwProblem};
+use codesign::runtime::server::GpServer;
+use codesign::space::sw_space::SwSpace;
+use codesign::surrogate::gp::GpBackend;
+use codesign::util::rng::Rng;
+use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+use codesign::workloads::specs::{layer_by_name, model_by_name};
+
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut bools = Vec::new();
+        let mut pending: Option<String> = None;
+        for tok in it {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some(p) = pending.take() {
+                    bools.push(p);
+                }
+                pending = Some(name.to_string());
+            } else if let Some(name) = pending.take() {
+                flags.insert(name, tok);
+            } else {
+                bail!("unexpected positional argument: {tok}");
+            }
+        }
+        if let Some(p) = pending.take() {
+            bools.push(p);
+        }
+        Ok(Args { cmd, flags, bools })
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn bool(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+}
+
+/// Choose the GP backend: PJRT artifacts unless --native.
+fn backend(args: &Args) -> Result<(GpBackend, Option<GpServer>)> {
+    if args.bool("native") {
+        return Ok((GpBackend::Native, None));
+    }
+    match GpServer::start() {
+        Ok(server) => {
+            let h = server.handle();
+            Ok((GpBackend::Aot(h), Some(server)))
+        }
+        Err(e) => bail!(
+            "failed to start the PJRT GP server: {e:#}\n\
+             run `make artifacts` first, or pass --native for the pure-Rust GP"
+        ),
+    }
+}
+
+fn sw_method(name: &str) -> Result<SwMethod> {
+    Ok(match name {
+        "bo" | "bo-gp" => SwMethod::Bo { surrogate: SurrogateKind::Gp },
+        "bo-rf" => SwMethod::Bo { surrogate: SurrogateKind::RandomForest },
+        "random" => SwMethod::Random,
+        "round-bo" => SwMethod::RoundBo,
+        "tvm-xgb" => SwMethod::TvmXgb,
+        "tvm-treegru" => SwMethod::TvmTreeGru,
+        other => bail!("unknown software method {other}"),
+    })
+}
+
+fn fig_opts(args: &Args, backend: GpBackend) -> Result<FigOpts> {
+    let mut opts = FigOpts::new(backend);
+    opts.scale = args.get("scale", 1.0)?;
+    opts.repeats = args.get("repeats", 0usize)?;
+    opts.seed = args.get("seed", 2020u64)?;
+    opts.threads = args.get("threads", codesign::coordinator::parallel::default_threads())?;
+    opts.out_dir = args.str("out", "results").into();
+    Ok(opts)
+}
+
+fn cmd_quickstart(args: &Args) -> Result<()> {
+    let (backend, _server) = backend(args)?;
+    let layer_name = args.str("layer", "DQN-K2");
+    let layer = layer_by_name(&layer_name).context("unknown layer")?;
+    let num_pes = if layer_name.starts_with("Transformer") { 256 } else { 168 };
+    let hw = eyeriss_hw(num_pes);
+    let res = eyeriss_resources(num_pes);
+    let eval = Evaluator::new(res.clone());
+
+    println!("== codesign quickstart ==");
+    println!("layer {layer_name}: {layer:?}");
+    println!("{}", insight::describe_hw("hardware (Eyeriss)", &hw));
+
+    let problem =
+        SwProblem { space: SwSpace::new(layer.clone(), hw.clone(), res), eval: eval.clone() };
+    let trials = args.get("trials", 100usize)?;
+    let mut rng = Rng::seed_from_u64(args.get("seed", 0u64)?);
+    let trace = search(
+        SwMethod::Bo { surrogate: SurrogateKind::Gp },
+        &problem,
+        trials,
+        &BoConfig::software(),
+        &backend,
+        &mut rng,
+    );
+    let best = trace.best_mapping.clone().context("no feasible mapping found")?;
+    let met = eval.evaluate(&layer, &hw, &best).unwrap();
+    println!("\nbest mapping after {trials} BO trials:");
+    println!("  {}", best.describe());
+    println!("\nmetrics:");
+    println!("  EDP            {:.4e} J*s", met.edp);
+    println!(
+        "  energy         {:.4e} pJ  (mac/spad/glb/noc/dram = {:?})",
+        met.energy_pj, met.energy_breakdown
+    );
+    println!("  cycles         {:.4e}  (bottleneck: {})", met.cycles, met.bottleneck());
+    println!("  PE utilization {:.1}%", met.utilization * 100.0);
+    println!(
+        "  roofline gap   {:.1}x (EDP / analytic lower bound)",
+        met.edp
+            / codesign::model::energy::roofline_edp(&layer, &eval.resources, &eval.energy_model)
+    );
+    Ok(())
+}
+
+fn cmd_sw_opt(args: &Args) -> Result<()> {
+    let (backend, _server) = backend(args)?;
+    let layer = args.str("layer", "DQN-K2");
+    let method = sw_method(&args.str("method", "bo"))?;
+    let trials = args.get("trials", 250usize)?;
+    let problem = fig3::problem_for(&layer);
+    let mut rng = Rng::seed_from_u64(args.get("seed", 0u64)?);
+    let t0 = std::time::Instant::now();
+    let trace = search(method, &problem, trials, &BoConfig::software(), &backend, &mut rng);
+    println!(
+        "{layer} {}: best EDP {:.4e} after {} trials ({} raw draws, {:.1}s)",
+        method.name(),
+        trace.best_edp,
+        trace.evals.len(),
+        trace.raw_draws,
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(m) = &trace.best_mapping {
+        println!("mapping: {}", m.describe());
+    }
+    Ok(())
+}
+
+fn cmd_codesign(args: &Args) -> Result<()> {
+    let (backend, _server) = backend(args)?;
+    let model_name = args.str("model", "dqn");
+    let model = model_by_name(&model_name).context("unknown model")?;
+    let ncfg = NestedConfig {
+        hw_trials: args.get("hw-trials", 50usize)?,
+        sw_trials: args.get("sw-trials", 250usize)?,
+        hw_bo: BoConfig::hardware(),
+        sw_bo: BoConfig::software(),
+    };
+    let mut driver = Driver::new(ncfg);
+    driver.threads = args.get("threads", codesign::coordinator::parallel::default_threads())?;
+    driver.sw_method = sw_method(&args.str("method", "bo"))?;
+    driver.hw_method = match args.str("hw-method", "bo").as_str() {
+        "bo" => HwMethod::Bo,
+        "bo-rf" => HwMethod::BoRf,
+        "random" => HwMethod::Random,
+        other => bail!("unknown hardware method {other}"),
+    };
+    let out_dir: std::path::PathBuf = args.str("out", "results").into();
+    driver.checkpoint_path = Some(out_dir.join(format!("best_design_{model_name}.txt")));
+
+    let seed = args.get("seed", 2020u64)?;
+    println!(
+        "nested co-design on {model_name}: {} hw x {} sw trials, {} threads",
+        driver.ncfg.hw_trials, driver.ncfg.sw_trials, driver.threads
+    );
+
+    let base = eyeriss_baseline(
+        &model,
+        driver.sw_method,
+        driver.ncfg.sw_trials,
+        &backend,
+        driver.threads,
+        seed,
+    );
+    let out = driver.run(&model, &backend, seed + 1);
+
+    println!("\n== result ==\n{}", out.metrics.report());
+    match (&out.best, base) {
+        (Some(best), Some((eyeriss_edp, _))) => {
+            let searched = best.best_edp.min(eyeriss_edp);
+            println!("{}", insight::describe_hw("searched hardware", &best.hw));
+            for (name, m, edp) in &best.layers {
+                println!("  {name}: EDP {edp:.4e}  {}", m.describe());
+            }
+            println!("\nEyeriss baseline EDP : {eyeriss_edp:.4e}");
+            println!("searched design EDP  : {searched:.4e}");
+            println!(
+                "improvement          : {:.1}% (paper: 40.2% DQN / 18.3% ResNet / 21.8% MLP / 16.0% Transformer)",
+                (1.0 - searched / eyeriss_edp) * 100.0
+            );
+        }
+        _ => println!("no feasible design found under the given budget"),
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let (backend, _server) = backend(args)?;
+    let GpBackend::Aot(handle) = &backend else {
+        bail!("selftest needs the PJRT artifacts (omit --native)");
+    };
+    let mut rng = Rng::seed_from_u64(1);
+    let n = 40;
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..16).map(|_| rng.normal() * 0.4).collect()).collect();
+    let y: Vec<f64> = x.iter().map(|xi| xi.iter().sum::<f64>()).collect();
+    let theta = codesign::runtime::gp_exec::Theta::hw_default();
+    let native = codesign::surrogate::gp_native::NativeGp::fit(theta, &x, &y)
+        .context("native fit failed")?;
+    let aot = handle.posterior(
+        x.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect(),
+        y.iter().map(|&v| v as f32).collect(),
+        theta,
+        x.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect(),
+    )?;
+    let nat = native.posterior(&x);
+    let max_err = aot
+        .mean
+        .iter()
+        .zip(nat.mean.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("selftest: max |aot - native| posterior mean error = {max_err:.2e}");
+    if max_err > 1e-2 {
+        bail!("artifact/native mismatch");
+    }
+    println!("selftest OK (three-layer stack is numerically consistent)");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "quickstart" => cmd_quickstart(&args),
+        "sw-opt" => cmd_sw_opt(&args),
+        "codesign" => cmd_codesign(&args),
+        "selftest" => cmd_selftest(&args),
+        "fig3" => {
+            let (b, _s) = backend(&args)?;
+            let opts = fig_opts(&args, b)?;
+            let p = fig3::run(&opts, &fig3::FIG3_LAYERS, "fig3.csv")?;
+            println!("wrote {}", p.display());
+            Ok(())
+        }
+        "fig16" => {
+            let (b, _s) = backend(&args)?;
+            let opts = fig_opts(&args, b)?;
+            let names = fig3::all_layer_names();
+            let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            let p = fig3::run(&opts, &refs, "fig16.csv")?;
+            println!("wrote {}", p.display());
+            Ok(())
+        }
+        "fig4" => {
+            let (b, _s) = backend(&args)?;
+            let opts = fig_opts(&args, b)?;
+            let models = args.str("model", "resnet,dqn,mlp,transformer");
+            let models: Vec<&str> = models.split(',').collect();
+            let p = fig4::run(&opts, &models, "fig4.csv")?;
+            println!("wrote {}", p.display());
+            Ok(())
+        }
+        "fig5a" => {
+            let (b, _s) = backend(&args)?;
+            let opts = fig_opts(&args, b)?;
+            let models = args.str("model", "resnet,dqn,mlp,transformer");
+            let models: Vec<&str> = models.split(',').collect();
+            let rows = fig5a::run(&opts, &models, "fig5a.csv")?;
+            println!("model        ratio   improvement");
+            for r in rows {
+                println!("{:<12} {:.3}   {:.1}%", r.model, r.ratio, (1.0 - r.ratio) * 100.0);
+            }
+            Ok(())
+        }
+        "fig5b" => {
+            let (b, _s) = backend(&args)?;
+            let opts = fig_opts(&args, b)?;
+            let layer = args.str("layer", "ResNet-K4");
+            let p = fig5bc::run_surrogate_ablation(&opts, &layer, "fig5b.csv")?;
+            println!("wrote {}", p.display());
+            Ok(())
+        }
+        "fig5c" => {
+            let (b, _s) = backend(&args)?;
+            let opts = fig_opts(&args, b)?;
+            let layer = args.str("layer", "ResNet-K4");
+            let p = fig5bc::run_lambda_sweep(&opts, &layer, &fig5bc::LAMBDAS, "fig5c.csv")?;
+            println!("wrote {}", p.display());
+            Ok(())
+        }
+        "fig17" => {
+            let (b, _s) = backend(&args)?;
+            let opts = fig_opts(&args, b)?;
+            for layer in ["ResNet-K2", "DQN-K2", "MLP-K2", "Transformer-K2"] {
+                fig5bc::run_surrogate_ablation(&opts, layer, &format!("fig17_{layer}.csv"))?;
+            }
+            println!("wrote results/fig17_*.csv");
+            Ok(())
+        }
+        "fig18" => {
+            let (b, _s) = backend(&args)?;
+            let opts = fig_opts(&args, b)?;
+            for layer in ["ResNet-K2", "DQN-K2", "MLP-K2", "Transformer-K2"] {
+                fig5bc::run_lambda_sweep(
+                    &opts,
+                    layer,
+                    &fig5bc::LAMBDAS,
+                    &format!("fig18_{layer}.csv"),
+                )?;
+            }
+            println!("wrote results/fig18_*.csv");
+            Ok(())
+        }
+        "report" => {
+            let dir: std::path::PathBuf = args.str("out", "results").into();
+            let md = codesign::figures::report::render(&dir)?;
+            let path = dir.join("REPORT.md");
+            std::fs::write(&path, &md)?;
+            println!("{md}\n(written to {})", path.display());
+            Ok(())
+        }
+        "specialize" => {
+            // per-layer hardware specialization (paper SS5.1 footnote 1)
+            let (b, _s) = backend(&args)?;
+            let model_name = args.str("model", "dqn");
+            let model = model_by_name(&model_name).context("unknown model")?;
+            let ncfg = NestedConfig {
+                hw_trials: args.get("hw-trials", 20usize)?,
+                sw_trials: args.get("sw-trials", 100usize)?,
+                ..NestedConfig::default()
+            };
+            let res = codesign::opt::per_layer::specialize(
+                &model,
+                &ncfg,
+                sw_method(&args.str("method", "bo"))?,
+                &b,
+                args.get("seed", 2020u64)?,
+            );
+            println!("per-layer hardware specialization on {model_name}:");
+            for (name, edp, trace) in &res.layers {
+                if let Some(hw) = &trace.best_hw {
+                    println!("  {name}: EDP {edp:.4e}");
+                    println!("    {}", insight::describe_hw("hw", hw));
+                }
+            }
+            println!("sum of per-layer optima: {:.4e}", res.total_edp);
+            println!("(compare against the model-wide design from `codesign codesign`)");
+            Ok(())
+        }
+        "insight" => {
+            let (b, _s) = backend(&args)?;
+            let opts = fig_opts(&args, b)?;
+            let model = args.str("model", "dqn");
+            let rep = insight::run(&opts, &model, None, "insight.csv")?;
+            println!("{}", insight::describe_hw("hardware under test", &rep.hw));
+            println!("{}", insight::describe_hw("Eyeriss reference ", &eyeriss_hw(168)));
+            for (name, bo, heur, pct) in rep.rows {
+                println!(
+                    "{name}: BO {bo:.3e}  heuristic {heur:.3e}  (+{pct:.1}% worse; paper: ~52%)"
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            println!(
+                "usage: codesign <quickstart|sw-opt|codesign|selftest|specialize|report|fig3|fig4|fig5a|fig5b|fig5c|fig16|fig17|fig18|insight> [flags]\n\
+                 flags: --model M --layer L --method bo|random|round-bo|tvm-xgb|tvm-treegru \n\
+                        --trials N --hw-trials N --sw-trials N --repeats N --scale F \n\
+                        --seed N --threads N --out DIR --native"
+            );
+            Ok(())
+        }
+    }
+}

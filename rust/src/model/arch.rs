@@ -1,0 +1,263 @@
+//! Hardware configuration: the H1-H12 parameters of the paper (Fig. 6) plus
+//! the fixed resource budget the search is constrained to (Fig. 7).
+
+use super::workload::Dim;
+
+/// Dataflow option for a filter axis (paper H11/H12): whether the PE's local
+/// buffer holds the full filter extent of that axis (FullAtPe, option 1) or
+/// streams it one element at a time from above (Streamed, option 2). This is
+/// a *hardware* property (it fixes PE control logic) that constrains which
+/// software blockings are valid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataflowOpt {
+    FullAtPe,
+    Streamed,
+}
+
+impl DataflowOpt {
+    pub fn code(self) -> u8 {
+        match self {
+            DataflowOpt::FullAtPe => 1,
+            DataflowOpt::Streamed => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Self> {
+        match c {
+            1 => Some(DataflowOpt::FullAtPe),
+            2 => Some(DataflowOpt::Streamed),
+            _ => None,
+        }
+    }
+}
+
+/// Fixed resource budget (the paper keeps these equal to the Eyeriss budget
+/// during hardware search; see §5.1 "same compute and storage resource
+/// constraints as Eyeriss").
+#[derive(Clone, Debug, PartialEq)]
+pub struct Resources {
+    /// Total number of processing elements (H1*H2 must equal this).
+    pub num_pes: u64,
+    /// Total PE-local scratchpad capacity in words (H3+H4+H5 <= this).
+    pub local_buffer_entries: u64,
+    /// Total global buffer capacity in words (across all instances).
+    pub global_buffer_entries: u64,
+    /// DRAM bandwidth in words per cycle.
+    pub dram_words_per_cycle: f64,
+    /// Per-global-buffer-instance bandwidth in words per cycle (before the
+    /// block-size multiplier).
+    pub gb_words_per_cycle_per_instance: f64,
+}
+
+impl Resources {
+    /// The Eyeriss-168 budget used for ResNet/DQN/MLP (Chen et al. 2016 via
+    /// Timeloop's eyeriss-168 model): 168 PEs, 220-word spads, 64K-word GLB.
+    pub fn eyeriss_168() -> Self {
+        Resources {
+            num_pes: 168,
+            local_buffer_entries: 220,
+            global_buffer_entries: 65536,
+            dram_words_per_cycle: 4.0,
+            gb_words_per_cycle_per_instance: 2.0,
+        }
+    }
+
+    /// The Eyeriss-256 budget used for the Transformer (Parashar et al. 2019).
+    pub fn eyeriss_256() -> Self {
+        Resources {
+            num_pes: 256,
+            local_buffer_entries: 220,
+            global_buffer_entries: 65536,
+            dram_words_per_cycle: 4.0,
+            gb_words_per_cycle_per_instance: 2.0,
+        }
+    }
+}
+
+/// A hardware design point (paper Fig. 6, H1-H12).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HwConfig {
+    /// H1: PE array width. H1*H2 = num_pes.
+    pub pe_mesh_x: u64,
+    /// H2: PE array height.
+    pub pe_mesh_y: u64,
+    /// H3: local-buffer words reserved for input activations.
+    pub lb_inputs: u64,
+    /// H4: local-buffer words reserved for filter weights.
+    pub lb_weights: u64,
+    /// H5: local-buffer words reserved for partial sums.
+    pub lb_outputs: u64,
+    /// H6: number of global-buffer instances (banks). = H7*H8.
+    pub gb_instances: u64,
+    /// H7: global-buffer bank arrangement along X; must divide pe_mesh_x.
+    pub gb_mesh_x: u64,
+    /// H8: global-buffer bank arrangement along Y; must divide pe_mesh_y.
+    pub gb_mesh_y: u64,
+    /// H9: global-buffer entry width in words; factor of 16.
+    pub gb_block: u64,
+    /// H10: number of entries ganged into one wider structure; factor of 16.
+    pub gb_cluster: u64,
+    /// H11: dataflow option for the filter-width axis (R).
+    pub df_filter_w: DataflowOpt,
+    /// H12: dataflow option for the filter-height axis (S).
+    pub df_filter_h: DataflowOpt,
+}
+
+impl HwConfig {
+    pub fn num_pes(&self) -> u64 {
+        self.pe_mesh_x * self.pe_mesh_y
+    }
+
+    pub fn local_buffer_used(&self) -> u64 {
+        self.lb_inputs + self.lb_weights + self.lb_outputs
+    }
+
+    /// Dataflow option for a dimension, if that dimension is dataflow-pinned.
+    pub fn dataflow_for(&self, d: Dim) -> Option<DataflowOpt> {
+        match d {
+            Dim::R => Some(self.df_filter_w),
+            Dim::S => Some(self.df_filter_h),
+            _ => None,
+        }
+    }
+
+    /// Multicast fan-out of one GLB bank along X (how many PE columns share a
+    /// bank). Input-constraint-valid configs have exact divisibility.
+    pub fn fanout_x(&self) -> u64 {
+        self.pe_mesh_x / self.gb_mesh_x
+    }
+
+    pub fn fanout_y(&self) -> u64 {
+        self.pe_mesh_y / self.gb_mesh_y
+    }
+
+    /// Check the *known* hardware constraints (paper Fig. 7) against a budget.
+    /// The unknown constraint (a reachable software mapping exists) is
+    /// discovered by the software optimizer at evaluation time.
+    pub fn check(&self, res: &Resources) -> Result<(), HwViolation> {
+        use HwViolation::*;
+        if self.pe_mesh_x * self.pe_mesh_y != res.num_pes {
+            return Err(PeMesh);
+        }
+        if self.local_buffer_used() > res.local_buffer_entries {
+            return Err(LocalBufferOverflow);
+        }
+        if self.lb_inputs == 0 || self.lb_weights == 0 || self.lb_outputs == 0 {
+            return Err(EmptySubBuffer);
+        }
+        if self.gb_mesh_x * self.gb_mesh_y != self.gb_instances {
+            return Err(GbMesh);
+        }
+        if self.pe_mesh_x % self.gb_mesh_x != 0 || self.pe_mesh_y % self.gb_mesh_y != 0 {
+            return Err(GbAlignment);
+        }
+        if 16 % self.gb_block != 0 || 16 % self.gb_cluster != 0 {
+            return Err(GbGeometry);
+        }
+        Ok(())
+    }
+}
+
+/// Reasons a hardware configuration violates the known (input) constraints.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HwViolation {
+    /// H1*H2 != #PEs.
+    PeMesh,
+    /// H3+H4+H5 exceeds the local buffer budget.
+    LocalBufferOverflow,
+    /// A sub-buffer has zero capacity (cannot hold its dataspace).
+    EmptySubBuffer,
+    /// H7*H8 != H6.
+    GbMesh,
+    /// GLB mesh does not divide the PE mesh.
+    GbAlignment,
+    /// Block/cluster size not a factor of 16.
+    GbGeometry,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn valid_cfg() -> HwConfig {
+        HwConfig {
+            pe_mesh_x: 14,
+            pe_mesh_y: 12,
+            lb_inputs: 12,
+            lb_weights: 192,
+            lb_outputs: 16,
+            gb_instances: 2,
+            gb_mesh_x: 2,
+            gb_mesh_y: 1,
+            gb_block: 4,
+            gb_cluster: 2,
+            df_filter_w: DataflowOpt::FullAtPe,
+            df_filter_h: DataflowOpt::Streamed,
+        }
+    }
+
+    #[test]
+    fn eyeriss_like_config_is_valid() {
+        assert_eq!(valid_cfg().check(&Resources::eyeriss_168()), Ok(()));
+    }
+
+    #[test]
+    fn pe_mesh_must_multiply_out() {
+        let mut c = valid_cfg();
+        c.pe_mesh_x = 13;
+        assert_eq!(c.check(&Resources::eyeriss_168()), Err(HwViolation::PeMesh));
+    }
+
+    #[test]
+    fn local_buffer_budget_enforced() {
+        let mut c = valid_cfg();
+        c.lb_weights = 220;
+        assert_eq!(
+            c.check(&Resources::eyeriss_168()),
+            Err(HwViolation::LocalBufferOverflow)
+        );
+    }
+
+    #[test]
+    fn zero_sub_buffer_rejected() {
+        let mut c = valid_cfg();
+        c.lb_inputs = 0;
+        assert_eq!(
+            c.check(&Resources::eyeriss_168()),
+            Err(HwViolation::EmptySubBuffer)
+        );
+    }
+
+    #[test]
+    fn gb_mesh_consistency() {
+        let mut c = valid_cfg();
+        c.gb_instances = 3;
+        assert_eq!(c.check(&Resources::eyeriss_168()), Err(HwViolation::GbMesh));
+        let mut c = valid_cfg();
+        c.gb_mesh_x = 4;
+        c.gb_instances = 4;
+        // 14 % 4 != 0 -> alignment violation
+        assert_eq!(
+            c.check(&Resources::eyeriss_168()),
+            Err(HwViolation::GbAlignment)
+        );
+    }
+
+    #[test]
+    fn gb_geometry_factor_of_16() {
+        let mut c = valid_cfg();
+        c.gb_block = 3;
+        assert_eq!(
+            c.check(&Resources::eyeriss_168()),
+            Err(HwViolation::GbGeometry)
+        );
+    }
+
+    #[test]
+    fn fanout() {
+        let c = valid_cfg();
+        assert_eq!(c.fanout_x(), 7);
+        assert_eq!(c.fanout_y(), 12);
+        assert_eq!(c.num_pes(), 168);
+    }
+}

@@ -1,0 +1,307 @@
+//! Energy and latency model.
+//!
+//! Per-access energies follow the 65nm Eyeriss/Timeloop magnitudes (MAC
+//! ~2.2pJ, scratchpad ~1-2pJ scaling with partition size, GLB ~3-6pJ scaling
+//! with bank capacity and entry geometry, DRAM 200pJ/word, NoC ~0.8pJ/hop).
+//! Absolute joules are not the reproduction target — EDP is always reported
+//! normalized — but the *relative* costs are what shape the search landscape,
+//! so each hardware parameter must have a physically-sensible effect:
+//!
+//!  * smaller local sub-buffers are cheaper per access (paper Fig. 6, H3-H5:
+//!    "the latency to access each smaller sub-buffer decreases");
+//!  * more/smaller GLB banks are cheaper per access and add bandwidth but
+//!    force replication of shared data (capacity pressure, `nest.rs`);
+//!  * wider GLB entries (H9) and ganged clusters (H10) amortize access
+//!    overhead and raise streaming bandwidth but waste capacity and fetch
+//!    granularity.
+
+use super::arch::{HwConfig, Resources};
+use super::nest::Traffic;
+use super::workload::{DataSpace, Dim, Layer, DATASPACES};
+
+/// Energy constants (pJ per access / per word).
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    pub mac_pj: f64,
+    /// Scratchpad access: base + slope * sqrt(entries/192).
+    pub spad_base_pj: f64,
+    pub spad_slope_pj: f64,
+    /// GLB access per word: base + slope * sqrt(bank_words/65536).
+    pub glb_base_pj: f64,
+    pub glb_slope_pj: f64,
+    pub dram_pj: f64,
+    pub noc_hop_pj: f64,
+    /// Clock period in ns (1 GHz).
+    pub clock_ns: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            mac_pj: 2.2,
+            spad_base_pj: 0.48,
+            spad_slope_pj: 1.2,
+            glb_base_pj: 1.2,
+            glb_slope_pj: 4.8,
+            dram_pj: 200.0,
+            noc_hop_pj: 0.8,
+            clock_ns: 1.0,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Per-word scratchpad energy for a sub-buffer of `entries` words.
+    pub fn spad_pj(&self, entries: u64) -> f64 {
+        self.spad_base_pj + self.spad_slope_pj * ((entries.max(1) as f64) / 192.0).sqrt()
+    }
+
+    /// Per-word GLB energy for the given geometry.
+    pub fn glb_pj(&self, hw: &HwConfig, res: &Resources) -> f64 {
+        let bank_words = res.global_buffer_entries as f64 / hw.gb_instances as f64;
+        let size_term = self.glb_base_pj + self.glb_slope_pj * (bank_words / 65536.0).sqrt();
+        // Wider entries and ganged clusters amortize decode/precharge energy.
+        let geometry = 0.6 + 0.4 / (hw.gb_block as f64).sqrt() + 0.2 / hw.gb_cluster as f64;
+        size_term * geometry
+    }
+}
+
+/// Effective GLB capacity in words: wider entries and clusters lose a little
+/// capacity to padding/overhead, creating the block/cluster trade-off.
+pub fn effective_glb_capacity(hw: &HwConfig, res: &Resources) -> f64 {
+    let log2 = |x: u64| (x as f64).log2();
+    res.global_buffer_entries as f64
+        * (1.0 - 0.04 * log2(hw.gb_block) - 0.02 * log2(hw.gb_cluster)).max(0.5)
+}
+
+/// Fetch-granularity waste factor (>= 1) for a dataspace: GLB traffic is
+/// rounded up to multiples of the entry granule along the dataspace's
+/// contiguous axis.
+pub fn granularity_waste(ds: DataSpace, tr: &Traffic, stride: u64, hw: &HwConfig) -> f64 {
+    let t = &tr.tiles.spatial;
+    let chunk = match ds {
+        DataSpace::Inputs => (t[Dim::P.index()] - 1) * stride + t[Dim::R.index()],
+        DataSpace::Weights => (t[Dim::R.index()] * t[Dim::S.index()]).max(1),
+        DataSpace::Outputs => t[Dim::P.index()],
+    }
+    .max(1);
+    let granule = hw.gb_block;
+    let padded = chunk.div_ceil(granule) * granule;
+    padded as f64 / chunk as f64
+}
+
+/// Evaluation result for one (layer, hardware, mapping).
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    pub macs: u64,
+    pub cycles: f64,
+    pub energy_pj: f64,
+    /// energy (J) x delay (s): the paper's objective.
+    pub edp: f64,
+    pub utilization: f64,
+    /// pJ breakdown: [mac, spad, glb, noc, dram].
+    pub energy_breakdown: [f64; 5],
+    /// Cycle bounds: [compute, glb bandwidth, dram bandwidth].
+    pub cycle_bounds: [f64; 3],
+}
+
+impl Metrics {
+    pub fn bottleneck(&self) -> &'static str {
+        let [c, g, d] = self.cycle_bounds;
+        if c >= g && c >= d {
+            "compute"
+        } else if g >= d {
+            "glb-bw"
+        } else {
+            "dram-bw"
+        }
+    }
+}
+
+/// Combine traffic analysis with the energy/latency model.
+pub fn metrics(
+    layer: &Layer,
+    hw: &HwConfig,
+    res: &Resources,
+    tr: &Traffic,
+    em: &EnergyModel,
+) -> Metrics {
+    let macs = layer.macs();
+    let stride = layer.stride;
+
+    // --- Energy ---
+    let e_mac = macs as f64 * em.mac_pj;
+
+    let mut e_spad = 0.0;
+    let mut e_glb = 0.0;
+    let mut e_noc = 0.0;
+    let mut e_dram = 0.0;
+    let mut glb_words_effective = 0.0;
+
+    // NoC energy: each word travels ~half the bank's fan-out region; multicast
+    // words pay per-destination (modelled through noc_words which already
+    // counts per-PE copies), with hop distance from the mesh geometry.
+    let hops = 1.0 + 0.5 * (hw.fanout_x() as f64 + hw.fanout_y() as f64 - 2.0).max(0.0);
+    let glb_pj = em.glb_pj(hw, res);
+
+    for ds in DATASPACES {
+        let d = tr.ds(ds);
+        let spad_entries = match ds {
+            DataSpace::Inputs => hw.lb_inputs,
+            DataSpace::Weights => hw.lb_weights,
+            DataSpace::Outputs => hw.lb_outputs,
+        };
+        let spad_pj = em.spad_pj(spad_entries);
+        e_spad += (d.lb_compute_accesses + d.lb_fills) * spad_pj;
+        let waste = granularity_waste(ds, tr, stride, hw);
+        let glb_words = (d.glb_reads + d.glb_writes) * waste;
+        glb_words_effective += glb_words;
+        e_glb += glb_words * glb_pj;
+        e_noc += d.noc_words * hops * em.noc_hop_pj;
+        e_dram += (d.dram_reads + d.dram_writes) * em.dram_pj;
+    }
+
+    let energy_pj = e_mac + e_spad + e_glb + e_noc + e_dram;
+
+    // --- Latency ---
+    let spatial_used = tr.spatial_used.max(1) as f64;
+    let compute_cycles = macs as f64 / spatial_used;
+    let glb_bw =
+        hw.gb_instances as f64 * res.gb_words_per_cycle_per_instance * hw.gb_block as f64;
+    let glb_cycles = glb_words_effective / glb_bw;
+    let dram_cycles = tr.total_dram_words() / res.dram_words_per_cycle;
+    let cycles = compute_cycles.max(glb_cycles).max(dram_cycles);
+
+    let edp = (energy_pj * 1e-12) * (cycles * em.clock_ns * 1e-9);
+
+    Metrics {
+        macs,
+        cycles,
+        energy_pj,
+        edp,
+        utilization: spatial_used / res.num_pes as f64,
+        energy_breakdown: [e_mac, e_spad, e_glb, e_noc, e_dram],
+        cycle_bounds: [compute_cycles, glb_cycles, dram_cycles],
+    }
+}
+
+/// Lower bound on any mapping's EDP for a layer on a resource budget:
+/// all PEs busy every cycle, each operand moved once at minimum energies.
+/// Used by benches and perf analysis as a roofline reference.
+pub fn roofline_edp(layer: &Layer, res: &Resources, em: &EnergyModel) -> f64 {
+    let macs = layer.macs() as f64;
+    let min_cycles = macs / res.num_pes as f64;
+    let min_dram: f64 = DATASPACES
+        .iter()
+        .map(|&ds| layer.footprint(ds) as f64)
+        .sum();
+    let min_energy = macs * em.mac_pj + min_dram * em.dram_pj;
+    (min_energy * 1e-12) * (min_cycles * em.clock_ns * 1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::DataflowOpt;
+    use crate::model::mapping::{Mapping, Split};
+    use crate::model::nest::analyze;
+
+    fn hw() -> HwConfig {
+        HwConfig {
+            pe_mesh_x: 14,
+            pe_mesh_y: 12,
+            lb_inputs: 12,
+            lb_weights: 192,
+            lb_outputs: 16,
+            gb_instances: 2,
+            gb_mesh_x: 2,
+            gb_mesh_y: 1,
+            gb_block: 4,
+            gb_cluster: 2,
+            df_filter_w: DataflowOpt::FullAtPe,
+            df_filter_h: DataflowOpt::Streamed,
+        }
+    }
+
+    fn eval(m: &Mapping, l: &Layer) -> Metrics {
+        let res = Resources::eyeriss_168();
+        let tr = analyze(l, &hw(), m);
+        metrics(l, &hw(), &res, &tr, &EnergyModel::default())
+    }
+
+    #[test]
+    fn smaller_spad_partitions_are_cheaper() {
+        let em = EnergyModel::default();
+        assert!(em.spad_pj(12) < em.spad_pj(192));
+    }
+
+    #[test]
+    fn trivial_mapping_is_compute_or_memory_bound_and_positive() {
+        let l = Layer::conv("t", 3, 3, 8, 8, 16, 32, 1);
+        let m = Mapping::trivial(&l);
+        let met = eval(&m, &l);
+        assert!(met.edp > 0.0);
+        assert!(met.cycles >= l.macs() as f64, "one PE, one MAC/cycle at best");
+    }
+
+    #[test]
+    fn parallelism_improves_edp() {
+        let l = Layer::conv("t", 3, 3, 8, 8, 16, 32, 1);
+        let seq = Mapping::trivial(&l);
+        let mut par = Mapping::trivial(&l);
+        // 64-way spatial parallelism with a deeper local C tile to keep the
+        // operand traffic from becoming the new bottleneck.
+        *par.split_mut(Dim::K) =
+            Split { dram: 4, glb: 1, spatial_x: 8, spatial_y: 1, local: 1 };
+        *par.split_mut(Dim::Q) =
+            Split { dram: 1, glb: 1, spatial_x: 1, spatial_y: 8, local: 1 };
+        *par.split_mut(Dim::C) =
+            Split { dram: 2, glb: 1, spatial_x: 1, spatial_y: 1, local: 8 };
+        let m_seq = eval(&seq, &l);
+        let m_par = eval(&par, &l);
+        assert!(m_par.cycles < m_seq.cycles, "{} vs {}", m_par.cycles, m_seq.cycles);
+        assert!(m_par.edp < m_seq.edp);
+        assert!((m_par.utilization - 8.0 * 8.0 / 168.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roofline_is_a_lower_bound() {
+        let l = Layer::conv("t", 3, 3, 8, 8, 16, 32, 1);
+        let res = Resources::eyeriss_168();
+        let em = EnergyModel::default();
+        let rl = roofline_edp(&l, &res, &em);
+        for m in [Mapping::trivial(&l)] {
+            assert!(eval(&m, &l).edp >= rl);
+        }
+    }
+
+    #[test]
+    fn granularity_waste_at_least_one() {
+        let l = Layer::conv("t", 3, 3, 8, 8, 16, 32, 1);
+        let m = Mapping::trivial(&l);
+        let tr = analyze(&l, &hw(), &m);
+        for ds in DATASPACES {
+            assert!(granularity_waste(ds, &tr, l.stride, &hw()) >= 1.0);
+        }
+    }
+
+    #[test]
+    fn effective_capacity_shrinks_with_geometry() {
+        let res = Resources::eyeriss_168();
+        let mut a = hw();
+        a.gb_block = 1;
+        a.gb_cluster = 1;
+        let mut b = hw();
+        b.gb_block = 16;
+        b.gb_cluster = 16;
+        assert!(effective_glb_capacity(&a, &res) > effective_glb_capacity(&b, &res));
+    }
+
+    #[test]
+    fn energy_breakdown_sums_to_total() {
+        let l = Layer::conv("t", 3, 3, 8, 8, 16, 32, 1);
+        let met = eval(&Mapping::trivial(&l), &l);
+        let sum: f64 = met.energy_breakdown.iter().sum();
+        assert!((sum - met.energy_pj).abs() < 1e-6 * met.energy_pj);
+    }
+}

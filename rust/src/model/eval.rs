@@ -1,0 +1,130 @@
+//! The evaluator: validity check + traffic analysis + energy/latency model,
+//! packaged as the single entry point the optimizers call (the stand-in for
+//! the paper's Timeloop invocation).
+
+use super::arch::{HwConfig, HwViolation, Resources};
+use super::energy::{metrics, EnergyModel, Metrics};
+use super::mapping::Mapping;
+use super::nest::analyze;
+use super::validity::{check_mapping, SwViolation};
+use super::workload::Layer;
+
+/// Why an evaluation failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Infeasible {
+    Hardware(HwViolation),
+    Software(SwViolation),
+}
+
+impl std::fmt::Display for Infeasible {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Infeasible::Hardware(v) => write!(f, "hardware constraint violated: {v:?}"),
+            Infeasible::Software(v) => write!(f, "software constraint violated: {v:?}"),
+        }
+    }
+}
+
+/// The simulator facade. Owns the resource budget and energy model; immutable
+/// and cheap to share across threads.
+#[derive(Clone, Debug)]
+pub struct Evaluator {
+    pub resources: Resources,
+    pub energy_model: EnergyModel,
+}
+
+impl Evaluator {
+    pub fn new(resources: Resources) -> Self {
+        Evaluator { resources, energy_model: EnergyModel::default() }
+    }
+
+    /// Validate hardware alone (the known input constraints of Fig. 7).
+    pub fn check_hw(&self, hw: &HwConfig) -> Result<(), Infeasible> {
+        hw.check(&self.resources).map_err(Infeasible::Hardware)
+    }
+
+    /// Validate a full design point without running the cost model.
+    pub fn check(&self, layer: &Layer, hw: &HwConfig, m: &Mapping) -> Result<(), Infeasible> {
+        self.check_hw(hw)?;
+        check_mapping(layer, hw, &self.resources, m).map_err(Infeasible::Software)
+    }
+
+    /// Evaluate a design point: EDP and full metrics, or why it is invalid.
+    pub fn evaluate(
+        &self,
+        layer: &Layer,
+        hw: &HwConfig,
+        m: &Mapping,
+    ) -> Result<Metrics, Infeasible> {
+        self.check(layer, hw, m)?;
+        let tr = analyze(layer, hw, m);
+        Ok(metrics(layer, hw, &self.resources, &tr, &self.energy_model))
+    }
+
+    /// EDP only (the optimizer objective).
+    pub fn edp(&self, layer: &Layer, hw: &HwConfig, m: &Mapping) -> Result<f64, Infeasible> {
+        self.evaluate(layer, hw, m).map(|met| met.edp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::DataflowOpt;
+    use crate::model::workload::Dim;
+
+    fn hw() -> HwConfig {
+        HwConfig {
+            pe_mesh_x: 14,
+            pe_mesh_y: 12,
+            lb_inputs: 12,
+            lb_weights: 192,
+            lb_outputs: 16,
+            gb_instances: 1,
+            gb_mesh_x: 1,
+            gb_mesh_y: 1,
+            gb_block: 4,
+            gb_cluster: 2,
+            df_filter_w: DataflowOpt::Streamed,
+            df_filter_h: DataflowOpt::Streamed,
+        }
+    }
+
+    #[test]
+    fn evaluate_trivial_mapping() {
+        let l = Layer::conv("t", 3, 3, 8, 8, 16, 32, 1);
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let met = ev.evaluate(&l, &hw(), &Mapping::trivial(&l)).unwrap();
+        assert!(met.edp > 0.0);
+        assert_eq!(met.macs, l.macs());
+    }
+
+    #[test]
+    fn invalid_mapping_reports_reason() {
+        let l = Layer::conv("t", 3, 3, 8, 8, 16, 32, 1);
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let mut m = Mapping::trivial(&l);
+        m.split_mut(Dim::C).dram = 5;
+        let err = ev.evaluate(&l, &hw(), &m).unwrap_err();
+        assert!(matches!(err, Infeasible::Software(_)));
+    }
+
+    #[test]
+    fn invalid_hardware_reports_reason() {
+        let l = Layer::conv("t", 3, 3, 8, 8, 16, 32, 1);
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let mut h = hw();
+        h.pe_mesh_x = 10; // 10*12 != 168
+        let err = ev.evaluate(&l, &h, &Mapping::trivial(&l)).unwrap_err();
+        assert!(matches!(err, Infeasible::Hardware(_)));
+    }
+
+    #[test]
+    fn evaluator_is_deterministic() {
+        let l = Layer::conv("t", 3, 3, 8, 8, 16, 32, 1);
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let a = ev.edp(&l, &hw(), &Mapping::trivial(&l)).unwrap();
+        let b = ev.edp(&l, &hw(), &Mapping::trivial(&l)).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,218 @@
+//! Software mapping: the S1-S9 parameters of the paper (Fig. 8).
+//!
+//! A mapping assigns, to each loop dimension of the conv nest, a blocking
+//! factor at each storage level (S1-S6: factors of the dimension whose
+//! product over levels equals the dimension), plus a loop order at each
+//! temporal level (S7-S9). The storage hierarchy, outer to inner:
+//!
+//! ```text
+//!   DRAM  --(temporal, order S9)-->
+//!   GLB   --(temporal, order S8)-->
+//!   PE array (parallel_for over mesh-X / mesh-Y)  -->
+//!   PE local scratchpad (temporal, order S7) --> MAC
+//! ```
+
+use super::workload::{Dim, Layer, DIMS};
+
+/// Temporal storage levels that carry a loop order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    Local,
+    Glb,
+    Dram,
+}
+
+pub const TEMPORAL_LEVELS: [Level; 3] = [Level::Local, Level::Glb, Level::Dram];
+
+/// Blocking factors of one loop dimension across the hierarchy.
+/// Invariant (checked by the validator): dram*glb*spatial_x*spatial_y*local
+/// equals the layer's extent for this dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Split {
+    pub dram: u64,
+    pub glb: u64,
+    pub spatial_x: u64,
+    pub spatial_y: u64,
+    pub local: u64,
+}
+
+impl Split {
+    pub fn unit() -> Self {
+        Split { dram: 1, glb: 1, spatial_x: 1, spatial_y: 1, local: 1 }
+    }
+
+    pub fn product(&self) -> u64 {
+        self.dram * self.glb * self.spatial_x * self.spatial_y * self.local
+    }
+
+    /// Extent of the tile resident at/below the given temporal level.
+    pub fn tile_at(&self, level: Level) -> u64 {
+        match level {
+            Level::Local => self.local,
+            Level::Glb => self.local * self.spatial_x * self.spatial_y * self.glb,
+            Level::Dram => self.product(),
+        }
+    }
+
+    /// Extent of the tile covering the whole PE array (between GLB and local).
+    pub fn tile_spatial(&self) -> u64 {
+        self.local * self.spatial_x * self.spatial_y
+    }
+}
+
+/// A full software mapping for one layer on one hardware configuration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Mapping {
+    /// Blocking factors indexed by `Dim::index()` (S1-S6).
+    pub splits: [Split; 6],
+    /// Loop order at the PE local level, outermost first (S7).
+    pub order_local: [Dim; 6],
+    /// Loop order at the global buffer level, outermost first (S8).
+    pub order_glb: [Dim; 6],
+    /// Loop order at DRAM, outermost first (S9).
+    pub order_dram: [Dim; 6],
+}
+
+impl Mapping {
+    /// The identity mapping: everything at DRAM, one MAC at a time. Valid for
+    /// any layer/hardware with non-empty buffers (useful as a test fixture).
+    pub fn trivial(layer: &Layer) -> Self {
+        let mut splits = [Split::unit(); 6];
+        for d in DIMS {
+            splits[d.index()].dram = layer.size(d);
+        }
+        Mapping {
+            splits,
+            order_local: DIMS,
+            order_glb: DIMS,
+            order_dram: DIMS,
+        }
+    }
+
+    pub fn split(&self, d: Dim) -> &Split {
+        &self.splits[d.index()]
+    }
+
+    pub fn split_mut(&mut self, d: Dim) -> &mut Split {
+        &mut self.splits[d.index()]
+    }
+
+    pub fn order(&self, level: Level) -> &[Dim; 6] {
+        match level {
+            Level::Local => &self.order_local,
+            Level::Glb => &self.order_glb,
+            Level::Dram => &self.order_dram,
+        }
+    }
+
+    /// Temporal loops at a level as (dim, factor) pairs, outermost first,
+    /// including factor-1 loops (callers typically skip those).
+    pub fn loops_at(&self, level: Level) -> Vec<(Dim, u64)> {
+        let order = self.order(level);
+        order
+            .iter()
+            .map(|&d| {
+                let s = self.split(d);
+                let f = match level {
+                    Level::Local => s.local,
+                    Level::Glb => s.glb,
+                    Level::Dram => s.dram,
+                };
+                (d, f)
+            })
+            .collect()
+    }
+
+    /// Total spatial parallelism used (active PEs).
+    pub fn spatial_used(&self) -> u64 {
+        self.spatial_x_used() * self.spatial_y_used()
+    }
+
+    pub fn spatial_x_used(&self) -> u64 {
+        DIMS.iter().map(|d| self.split(*d).spatial_x).product()
+    }
+
+    pub fn spatial_y_used(&self) -> u64 {
+        DIMS.iter().map(|d| self.split(*d).spatial_y).product()
+    }
+
+    /// Compact human-readable description (used by the insight harness).
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        for d in DIMS {
+            let s = self.split(d);
+            if s.product() > 1 {
+                parts.push(format!(
+                    "{}: dram {} glb {} spX {} spY {} pe {}",
+                    d.name(),
+                    s.dram,
+                    s.glb,
+                    s.spatial_x,
+                    s.spatial_y,
+                    s.local
+                ));
+            }
+        }
+        let ord = |o: &[Dim; 6]| o.iter().map(|d| d.name()).collect::<Vec<_>>().join("");
+        format!(
+            "{} | order dram {} glb {} pe {}",
+            parts.join("; "),
+            ord(&self.order_dram),
+            ord(&self.order_glb),
+            ord(&self.order_local)
+        )
+    }
+}
+
+/// Check that an order array is a permutation of all six dims.
+pub fn is_permutation(order: &[Dim; 6]) -> bool {
+    let mut seen = [false; 6];
+    for d in order {
+        if seen[d.index()] {
+            return false;
+        }
+        seen[d.index()] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workload::Layer;
+
+    #[test]
+    fn trivial_mapping_products() {
+        let l = Layer::conv("t", 3, 3, 7, 7, 64, 32, 1);
+        let m = Mapping::trivial(&l);
+        for d in DIMS {
+            assert_eq!(m.split(d).product(), l.size(d));
+        }
+        assert_eq!(m.spatial_used(), 1);
+    }
+
+    #[test]
+    fn tile_at_levels_multiply_inward() {
+        let s = Split { dram: 2, glb: 3, spatial_x: 5, spatial_y: 1, local: 7 };
+        assert_eq!(s.tile_at(Level::Local), 7);
+        assert_eq!(s.tile_spatial(), 35);
+        assert_eq!(s.tile_at(Level::Glb), 105);
+        assert_eq!(s.tile_at(Level::Dram), 210);
+    }
+
+    #[test]
+    fn loops_at_respects_order() {
+        let l = Layer::conv("t", 3, 3, 8, 8, 4, 4, 1);
+        let mut m = Mapping::trivial(&l);
+        m.order_dram = [Dim::K, Dim::C, Dim::R, Dim::S, Dim::P, Dim::Q];
+        let loops = m.loops_at(Level::Dram);
+        assert_eq!(loops[0], (Dim::K, 4));
+        assert_eq!(loops[5], (Dim::Q, 8));
+    }
+
+    #[test]
+    fn permutation_check() {
+        assert!(is_permutation(&DIMS));
+        assert!(!is_permutation(&[Dim::R, Dim::R, Dim::P, Dim::Q, Dim::C, Dim::K]));
+    }
+}

@@ -1,0 +1,19 @@
+//! The Timeloop-style analytical accelerator model: workloads, hardware
+//! configurations, software mappings, tile/traffic analysis, energy/latency
+//! models and the validity checker. See DESIGN.md §3 for the substitution
+//! notes relative to the paper's Timeloop infrastructure.
+
+pub mod arch;
+pub mod energy;
+pub mod eval;
+pub mod mapping;
+pub mod nest;
+pub mod validity;
+pub mod workload;
+
+pub use arch::{DataflowOpt, HwConfig, HwViolation, Resources};
+pub use energy::{EnergyModel, Metrics};
+pub use eval::{Evaluator, Infeasible};
+pub use mapping::{Level, Mapping, Split};
+pub use validity::SwViolation;
+pub use workload::{DataSpace, Dim, Layer, DATASPACES, DIMS};

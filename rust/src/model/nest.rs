@@ -1,0 +1,470 @@
+//! Tile and data-movement analysis of a mapped loop nest.
+//!
+//! This is the Timeloop-style analytical core: given a layer, a hardware
+//! configuration and a mapping, compute per-level tile footprints and the
+//! word traffic crossing each boundary of the storage hierarchy
+//! (DRAM <-> GLB <-> NoC/PE-array <-> PE local scratchpad <-> MAC).
+//!
+//! Loop-order sensitivity is modeled through:
+//!  * partial-sum revisit traffic — a reduction loop placed *outer* to an
+//!    output-relevant loop forces read-modify-write sweeps of every output
+//!    tile below it, while reduction loops inner to all output loops
+//!    accumulate in place for free;
+//!  * sliding-window (halo) reuse of inputs — when the innermost
+//!    input-relevant temporal loop at a boundary is P or Q, successive tiles
+//!    overlap by the filter extent and only the new rows/columns are fetched;
+//!  * multicast — spatial loops over dims irrelevant to a dataspace read the
+//!    shared words once from the GLB and fan them out on the NoC.
+
+use super::arch::HwConfig;
+use super::mapping::{Level, Mapping};
+use super::workload::{DataSpace, Dim, Layer, DATASPACES, DIMS};
+
+/// Tile extents per dimension (indexed by `Dim::index()`).
+pub type Tile = [u64; 6];
+
+/// Tile extents at each level of the hierarchy for a mapping.
+#[derive(Clone, Debug)]
+pub struct Tiles {
+    /// Per-PE tile (inner temporal loops only).
+    pub local: Tile,
+    /// Tile covering the whole PE array (local x spatial).
+    pub spatial: Tile,
+    /// Tile resident in the global buffer.
+    pub glb: Tile,
+    /// Full layer extents.
+    pub full: Tile,
+}
+
+pub fn tiles(layer: &Layer, mapping: &Mapping) -> Tiles {
+    let mut local = [1u64; 6];
+    let mut spatial = [1u64; 6];
+    let mut glb = [1u64; 6];
+    let mut full = [1u64; 6];
+    for d in DIMS {
+        let s = mapping.split(d);
+        local[d.index()] = s.tile_at(Level::Local);
+        spatial[d.index()] = s.tile_spatial();
+        glb[d.index()] = s.tile_at(Level::Glb);
+        full[d.index()] = layer.size(d);
+    }
+    Tiles { local, spatial, glb, full }
+}
+
+/// Footprint in words of a dataspace for a tile (input halo included).
+pub fn footprint(ds: DataSpace, t: &Tile, stride: u64) -> u64 {
+    let [r, s, p, q, c, k] = *t;
+    match ds {
+        DataSpace::Inputs => c * ((p - 1) * stride + r) * ((q - 1) * stride + s),
+        DataSpace::Weights => r * s * c * k,
+        DataSpace::Outputs => p * q * k,
+    }
+}
+
+/// Result of the output-dataspace loop walk at one boundary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OutWalk {
+    /// Times the child's output tile is written up across the whole nest
+    /// above the boundary (>= distinct; the excess is psum revisit traffic).
+    pub write_mult: f64,
+    /// Number of distinct child output tiles (each is written at least once).
+    pub distinct: f64,
+}
+
+/// Walk temporal loops (given innermost first) for an input-like dataspace
+/// (Inputs or Weights): the number of times the child tile is streamed in.
+/// `child` is the child-tile extents, used for halo reuse on the innermost
+/// input-relevant loop.
+pub fn refetch_mult(loops: &[(Dim, u64)], ds: DataSpace, child: &Tile, stride: u64) -> f64 {
+    debug_assert!(ds != DataSpace::Outputs);
+    let mut mult = 1.0;
+    let mut seen_relevant = false;
+    for &(d, f) in loops {
+        if f <= 1 {
+            continue;
+        }
+        if !ds.relevant(d) {
+            continue; // tile retained across irrelevant iterations
+        }
+        if !seen_relevant && ds == DataSpace::Inputs && matches!(d, Dim::P | Dim::Q) {
+            // Sliding-window halo: successive tiles along P (resp. Q) share
+            // (filter_extent - stride) columns; only `tile*stride` new
+            // columns are fetched per step after the first.
+            let (tile_o, tile_f) = if d == Dim::P {
+                (child[Dim::P.index()], child[Dim::R.index()])
+            } else {
+                (child[Dim::Q.index()], child[Dim::S.index()])
+            };
+            let full = ((tile_o - 1) * stride + tile_f) as f64;
+            let step = (tile_o * stride) as f64;
+            let ratio = (step / full).min(1.0);
+            mult *= 1.0 + (f - 1) as f64 * ratio;
+        } else {
+            mult *= f as f64;
+        }
+        seen_relevant = true;
+    }
+    mult
+}
+
+/// Walk temporal loops (innermost first) for the Outputs dataspace.
+pub fn out_walk(loops: &[(Dim, u64)]) -> OutWalk {
+    let mut write_mult = 1.0;
+    let mut distinct = 1.0;
+    let mut seen_output = false;
+    for &(d, f) in loops {
+        if f <= 1 {
+            continue;
+        }
+        if !d.is_reduction() {
+            write_mult *= f as f64;
+            distinct *= f as f64;
+            seen_output = true;
+        } else if seen_output {
+            // A reduction loop outer to an output loop revisits every output
+            // tile below it once per iteration (read-modify-write).
+            write_mult *= f as f64;
+        }
+        // Reduction loops inner to all output loops accumulate in place.
+    }
+    OutWalk { write_mult, distinct }
+}
+
+/// Loops above the PE-local level, innermost first (GLB loops then DRAM).
+pub fn loops_above_local(mapping: &Mapping) -> Vec<(Dim, u64)> {
+    let mut v: Vec<(Dim, u64)> = mapping.loops_at(Level::Glb).into_iter().rev().collect();
+    v.extend(mapping.loops_at(Level::Dram).into_iter().rev());
+    v
+}
+
+/// Loops above the GLB level, innermost first (DRAM loops only).
+pub fn loops_above_glb(mapping: &Mapping) -> Vec<(Dim, u64)> {
+    mapping.loops_at(Level::Dram).into_iter().rev().collect()
+}
+
+/// Per-dataspace traffic at every boundary, in words. All counts are totals
+/// over the full layer execution.
+#[derive(Clone, Debug, Default)]
+pub struct DataTraffic {
+    /// Words read from the GLB to fill PE tiles (after multicast sharing).
+    pub glb_reads: f64,
+    /// Words written into the GLB (DRAM fills and, for outputs, psum
+    /// writebacks arriving from the PE array).
+    pub glb_writes: f64,
+    /// Words crossing the NoC between GLB and PEs (counts every per-PE copy).
+    pub noc_words: f64,
+    /// Words read from DRAM.
+    pub dram_reads: f64,
+    /// Words written to DRAM.
+    pub dram_writes: f64,
+    /// Words written into PE local scratchpads (tile fills).
+    pub lb_fills: f64,
+    /// Scratchpad accesses made by the MACs themselves (reads, and for
+    /// outputs read+write per MAC).
+    pub lb_compute_accesses: f64,
+}
+
+/// Complete traffic analysis for (layer, hardware, mapping).
+#[derive(Clone, Debug)]
+pub struct Traffic {
+    pub per_ds: [DataTraffic; 3],
+    pub tiles: Tiles,
+    /// Active PEs = spatial_x_used * spatial_y_used.
+    pub spatial_used: u64,
+    /// GLB words of capacity used, including bank replication.
+    pub glb_capacity_used: f64,
+    /// Average multicast fan-out weighted by NoC words (for energy).
+    pub avg_fanout: f64,
+}
+
+impl Traffic {
+    pub fn ds(&self, ds: DataSpace) -> &DataTraffic {
+        &self.per_ds[ds_index(ds)]
+    }
+
+    pub fn total_glb_accesses(&self) -> f64 {
+        self.per_ds.iter().map(|t| t.glb_reads + t.glb_writes).sum()
+    }
+
+    pub fn total_dram_words(&self) -> f64 {
+        self.per_ds.iter().map(|t| t.dram_reads + t.dram_writes).sum()
+    }
+}
+
+pub fn ds_index(ds: DataSpace) -> usize {
+    match ds {
+        DataSpace::Inputs => 0,
+        DataSpace::Weights => 1,
+        DataSpace::Outputs => 2,
+    }
+}
+
+/// Product of a dataspace's relevant spatial factors along one axis.
+fn relevant_spatial(mapping: &Mapping, ds: DataSpace, x_axis: bool) -> u64 {
+    DIMS.iter()
+        .filter(|d| ds.relevant(**d))
+        .map(|d| {
+            let s = mapping.split(*d);
+            if x_axis {
+                s.spatial_x
+            } else {
+                s.spatial_y
+            }
+        })
+        .product()
+}
+
+/// GLB bank replication factor for a dataspace: data shared across bank
+/// groups (because no spatial loop relevant to the dataspace distributes it
+/// along that axis) must be duplicated into every bank of the axis.
+pub fn replication(hw: &HwConfig, mapping: &Mapping, ds: DataSpace) -> f64 {
+    let rel_x = relevant_spatial(mapping, ds, true);
+    let rel_y = relevant_spatial(mapping, ds, false);
+    let rx = (hw.gb_mesh_x as f64 / (rel_x.min(hw.gb_mesh_x)) as f64).max(1.0);
+    let ry = (hw.gb_mesh_y as f64 / (rel_y.min(hw.gb_mesh_y)) as f64).max(1.0);
+    rx * ry
+}
+
+/// Full traffic analysis. Assumes the mapping already passed validation
+/// (factor products, capacities, spatial fit); counts are still well-defined
+/// otherwise but meaningless.
+pub fn analyze(layer: &Layer, hw: &HwConfig, mapping: &Mapping) -> Traffic {
+    let t = tiles(layer, mapping);
+    let stride = layer.stride;
+    let macs = layer.macs() as f64;
+    let spatial_used = mapping.spatial_used();
+    let above_local = loops_above_local(mapping);
+    let above_glb = loops_above_glb(mapping);
+
+    let mut per_ds: [DataTraffic; 3] = Default::default();
+    let mut noc_weighted_fanout = 0.0;
+    let mut noc_total = 0.0;
+
+    for ds in DATASPACES {
+        let foot_loc = footprint(ds, &t.local, stride) as f64;
+        let foot_sp = footprint(ds, &t.spatial, stride) as f64;
+        let foot_glb = footprint(ds, &t.glb, stride) as f64;
+        let dtr = &mut per_ds[ds_index(ds)];
+
+        // Multicast fan-out: how many PEs share each distinct word.
+        let fanout = (foot_loc * spatial_used as f64 / foot_sp).max(1.0);
+
+        match ds {
+            DataSpace::Inputs | DataSpace::Weights => {
+                // Boundary A: GLB -> PE array.
+                let refetch_a = refetch_mult(&above_local, ds, &t.spatial, stride);
+                dtr.glb_reads = refetch_a * foot_sp;
+                dtr.noc_words = refetch_a * foot_loc * spatial_used as f64;
+                dtr.lb_fills = dtr.noc_words;
+                // Boundary B: DRAM -> GLB.
+                let refetch_b = refetch_mult(&above_glb, ds, &t.glb, stride);
+                dtr.dram_reads = refetch_b * foot_glb;
+                dtr.glb_writes = dtr.dram_reads; // every DRAM word lands in GLB
+                dtr.lb_compute_accesses = macs; // one operand read per MAC
+            }
+            DataSpace::Outputs => {
+                // Boundary A: PE array -> GLB (psum writebacks + revisits).
+                let wa = out_walk(&above_local);
+                // Every PE emits its local psum tile each round; spatial
+                // reduction merges them down to the array footprint before
+                // the GLB sees them.
+                dtr.noc_words = wa.write_mult * foot_loc * spatial_used as f64;
+                dtr.glb_writes = wa.write_mult * foot_sp;
+                // Revisited tiles are read back out of the GLB and
+                // redistributed to the PEs.
+                let revisit_a = (wa.write_mult - wa.distinct).max(0.0);
+                dtr.glb_reads = revisit_a * foot_sp;
+                dtr.noc_words += revisit_a * foot_loc * spatial_used as f64;
+                dtr.lb_fills = revisit_a * foot_loc * spatial_used as f64;
+                // Boundary B: GLB -> DRAM.
+                let wb = out_walk(&above_glb);
+                dtr.dram_writes = wb.write_mult * foot_glb;
+                let revisit_b = (wb.write_mult - wb.distinct).max(0.0);
+                dtr.dram_reads = revisit_b * foot_glb;
+                // Sending tiles up / refilling them also touches the GLB.
+                dtr.glb_reads += wb.write_mult * foot_glb;
+                dtr.glb_writes += revisit_b * foot_glb;
+                // Each MAC reads and writes its psum in the spad.
+                dtr.lb_compute_accesses = 2.0 * macs;
+            }
+        }
+        noc_weighted_fanout += dtr.noc_words * fanout;
+        noc_total += dtr.noc_words;
+    }
+
+    // GLB capacity usage with bank replication.
+    let glb_capacity_used: f64 = DATASPACES
+        .iter()
+        .map(|&ds| footprint(ds, &t.glb, stride) as f64 * replication(hw, mapping, ds))
+        .sum();
+
+    Traffic {
+        per_ds,
+        tiles: t,
+        spatial_used,
+        glb_capacity_used,
+        avg_fanout: if noc_total > 0.0 { noc_weighted_fanout / noc_total } else { 1.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::{DataflowOpt, HwConfig};
+    use crate::model::mapping::Split;
+
+    fn hw() -> HwConfig {
+        HwConfig {
+            pe_mesh_x: 14,
+            pe_mesh_y: 12,
+            lb_inputs: 12,
+            lb_weights: 192,
+            lb_outputs: 16,
+            gb_instances: 1,
+            gb_mesh_x: 1,
+            gb_mesh_y: 1,
+            gb_block: 4,
+            gb_cluster: 2,
+            df_filter_w: DataflowOpt::FullAtPe,
+            df_filter_h: DataflowOpt::Streamed,
+        }
+    }
+
+    fn layer() -> Layer {
+        Layer::conv("t", 3, 3, 8, 8, 16, 32, 1)
+    }
+
+    #[test]
+    fn footprints_match_layer_totals() {
+        let l = layer();
+        let m = Mapping::trivial(&l);
+        let t = tiles(&l, &m);
+        for ds in DATASPACES {
+            assert_eq!(footprint(ds, &t.full, l.stride), l.footprint(ds));
+        }
+        // trivial mapping: local tile is a single MAC
+        assert_eq!(footprint(DataSpace::Weights, &t.local, l.stride), 1);
+    }
+
+    #[test]
+    fn out_walk_reduction_inner_is_free() {
+        // innermost-first: C inner, P outer -> accumulate in place
+        let w = out_walk(&[(Dim::C, 4), (Dim::P, 8)]);
+        assert_eq!(w.write_mult, 8.0);
+        assert_eq!(w.distinct, 8.0);
+    }
+
+    #[test]
+    fn out_walk_reduction_outer_revisits() {
+        // innermost-first: P inner, C outer -> every P tile revisited per C
+        let w = out_walk(&[(Dim::P, 8), (Dim::C, 4)]);
+        assert_eq!(w.write_mult, 32.0);
+        assert_eq!(w.distinct, 8.0);
+    }
+
+    #[test]
+    fn out_walk_skips_unit_factors() {
+        let w = out_walk(&[(Dim::P, 1), (Dim::C, 4), (Dim::K, 2)]);
+        // C has no non-1 output loop inner to it
+        assert_eq!(w.write_mult, 2.0);
+        assert_eq!(w.distinct, 2.0);
+    }
+
+    #[test]
+    fn refetch_irrelevant_loops_are_free() {
+        // K loop doesn't touch inputs
+        let child = [3, 3, 2, 2, 4, 1];
+        let m = refetch_mult(&[(Dim::K, 8)], DataSpace::Inputs, &child, 1);
+        assert_eq!(m, 1.0);
+        // ...but multiplies weights? K relevant to weights
+        let m = refetch_mult(&[(Dim::K, 8)], DataSpace::Weights, &child, 1);
+        assert_eq!(m, 8.0);
+    }
+
+    #[test]
+    fn halo_reuse_reduces_input_refetch() {
+        // child tile: p=2, r=3, stride 1 -> full extent 4, step 2.
+        let child = [3, 1, 2, 1, 1, 1];
+        let with_halo = refetch_mult(&[(Dim::P, 4)], DataSpace::Inputs, &child, 1);
+        assert!(with_halo < 4.0, "halo should reduce refetch: {with_halo}");
+        // innermost relevant loop C destroys the window -> no halo credit
+        let no_halo =
+            refetch_mult(&[(Dim::C, 2), (Dim::P, 4)], DataSpace::Inputs, &child, 1);
+        assert_eq!(no_halo, 8.0);
+    }
+
+    #[test]
+    fn conservation_outputs_reach_dram_at_least_once() {
+        let l = layer();
+        let mut m = Mapping::trivial(&l);
+        // move some factors inward
+        *m.split_mut(Dim::K) = Split { dram: 4, glb: 2, spatial_x: 4, spatial_y: 1, local: 1 };
+        *m.split_mut(Dim::P) = Split { dram: 2, glb: 2, spatial_x: 1, spatial_y: 2, local: 1 };
+        let tr = analyze(&l, &hw(), &m);
+        let out = tr.ds(DataSpace::Outputs);
+        assert!(out.dram_writes >= l.footprint(DataSpace::Outputs) as f64 - 1e-6);
+    }
+
+    #[test]
+    fn weights_dram_reads_at_least_footprint() {
+        let l = layer();
+        let m = Mapping::trivial(&l);
+        let tr = analyze(&l, &hw(), &m);
+        assert!(
+            tr.ds(DataSpace::Weights).dram_reads
+                >= l.footprint(DataSpace::Weights) as f64 - 1e-6
+        );
+    }
+
+    #[test]
+    fn spatial_parallelism_reduces_nothing_but_uses_pes() {
+        let l = layer();
+        let mut m = Mapping::trivial(&l);
+        *m.split_mut(Dim::K) = Split { dram: 8, glb: 1, spatial_x: 4, spatial_y: 1, local: 1 };
+        let tr = analyze(&l, &hw(), &m);
+        assert_eq!(tr.spatial_used, 4);
+    }
+
+    #[test]
+    fn multicast_inputs_shared_across_k_spatial() {
+        // K spatially mapped: all PEs need the same inputs -> GLB reads stay
+        // at the array footprint while NoC words scale with PE count.
+        let l = layer();
+        let mut m = Mapping::trivial(&l);
+        *m.split_mut(Dim::K) = Split { dram: 8, glb: 1, spatial_x: 4, spatial_y: 1, local: 1 };
+        let tr = analyze(&l, &hw(), &m);
+        let inp = tr.ds(DataSpace::Inputs);
+        assert!(inp.noc_words > inp.glb_reads * 3.9, "multicast fanout expected");
+    }
+
+    #[test]
+    fn replication_counts_shared_banks() {
+        let l = layer();
+        let mut hw2 = hw();
+        hw2.gb_mesh_x = 2;
+        hw2.gb_instances = 2;
+        let mut m = Mapping::trivial(&l);
+        // K spatial along X: inputs are irrelevant to K -> replicated x2.
+        *m.split_mut(Dim::K) = Split { dram: 8, glb: 1, spatial_x: 4, spatial_y: 1, local: 1 };
+        assert_eq!(replication(&hw2, &m, DataSpace::Inputs), 2.0);
+        assert_eq!(replication(&hw2, &m, DataSpace::Weights), 1.0);
+    }
+
+    #[test]
+    fn order_changes_traffic() {
+        // Same splits, different GLB order: reduction-outer must cost more.
+        let l = layer();
+        let mut m = Mapping::trivial(&l);
+        *m.split_mut(Dim::C) = Split { dram: 1, glb: 16, spatial_x: 1, spatial_y: 1, local: 1 };
+        *m.split_mut(Dim::P) = Split { dram: 1, glb: 8, spatial_x: 1, spatial_y: 1, local: 1 };
+        *m.split_mut(Dim::K) = Split { dram: 32, glb: 1, spatial_x: 1, spatial_y: 1, local: 1 };
+        m.order_glb = [Dim::P, Dim::C, Dim::R, Dim::S, Dim::Q, Dim::K]; // C inner
+        let good = analyze(&l, &hw(), &m);
+        m.order_glb = [Dim::C, Dim::P, Dim::R, Dim::S, Dim::Q, Dim::K]; // C outer
+        let bad = analyze(&l, &hw(), &m);
+        assert!(
+            bad.ds(DataSpace::Outputs).glb_writes > good.ds(DataSpace::Outputs).glb_writes,
+            "reduction-outer order must increase psum traffic"
+        );
+    }
+}

@@ -1,0 +1,220 @@
+//! Mapping validity: the software constraints of paper Fig. 9 plus the
+//! dataflow coupling of H11/H12. These are all *known* (input) constraints:
+//! both the hardware and the layer are in hand when they are checked, so the
+//! software optimizer rejects invalid samples before simulation.
+
+use super::arch::{DataflowOpt, HwConfig, Resources};
+use super::energy::effective_glb_capacity;
+use super::mapping::{is_permutation, Mapping};
+use super::nest::{footprint, replication, tiles};
+use super::workload::{DataSpace, Dim, Layer, DATASPACES, DIMS};
+
+/// Reasons a mapping is invalid on a given (hardware, layer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwViolation {
+    /// Product of blocking factors does not equal the dimension (S1-S6 rows
+    /// of Fig. 9).
+    FactorProduct(Dim),
+    /// A loop-order array is not a permutation.
+    OrderNotPermutation,
+    /// Spatial-X product exceeds the PE mesh X extent.
+    SpatialX,
+    /// Spatial-Y product exceeds the PE mesh Y extent.
+    SpatialY,
+    /// Local input tile exceeds the input sub-buffer (H3).
+    LocalInputs,
+    /// Local weight tile exceeds the weight sub-buffer (H4).
+    LocalWeights,
+    /// Local output tile exceeds the psum sub-buffer (H5).
+    LocalOutputs,
+    /// Total GLB-resident tile (with bank replication) exceeds capacity.
+    GlbCapacity,
+    /// Blocking factor for a dataflow-pinned axis contradicts H11/H12.
+    Dataflow(Dim),
+}
+
+/// Check every software constraint; `Ok(())` means the mapping can execute.
+pub fn check_mapping(
+    layer: &Layer,
+    hw: &HwConfig,
+    res: &Resources,
+    m: &Mapping,
+) -> Result<(), SwViolation> {
+    use SwViolation::*;
+
+    // S1-S6: factor products.
+    for d in DIMS {
+        if m.split(d).product() != layer.size(d) {
+            return Err(FactorProduct(d));
+        }
+    }
+
+    // S7-S9: loop orders must be permutations.
+    if !is_permutation(&m.order_local)
+        || !is_permutation(&m.order_glb)
+        || !is_permutation(&m.order_dram)
+    {
+        return Err(OrderNotPermutation);
+    }
+
+    // Dataflow coupling (H11/H12): the PE either holds the full filter axis
+    // or streams it one element at a time.
+    for d in [Dim::R, Dim::S] {
+        let opt = hw.dataflow_for(d).unwrap();
+        let loc = m.split(d).local;
+        let ok = match opt {
+            DataflowOpt::FullAtPe => loc == layer.size(d),
+            DataflowOpt::Streamed => loc == 1,
+        };
+        if !ok {
+            return Err(Dataflow(d));
+        }
+    }
+
+    // Parallelism (Fig. 9 bottom rows).
+    if m.spatial_x_used() > hw.pe_mesh_x {
+        return Err(SpatialX);
+    }
+    if m.spatial_y_used() > hw.pe_mesh_y {
+        return Err(SpatialY);
+    }
+
+    // Buffer capacities.
+    let t = tiles(layer, m);
+    let foot = |ds: DataSpace| footprint(ds, &t.local, layer.stride);
+    if foot(DataSpace::Inputs) > hw.lb_inputs {
+        return Err(LocalInputs);
+    }
+    if foot(DataSpace::Weights) > hw.lb_weights {
+        return Err(LocalWeights);
+    }
+    if foot(DataSpace::Outputs) > hw.lb_outputs {
+        return Err(LocalOutputs);
+    }
+
+    let glb_used: f64 = DATASPACES
+        .iter()
+        .map(|&ds| footprint(ds, &t.glb, layer.stride) as f64 * replication(hw, m, ds))
+        .sum();
+    if glb_used > effective_glb_capacity(hw, res) {
+        return Err(GlbCapacity);
+    }
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::DataflowOpt;
+    use crate::model::mapping::Split;
+
+    fn hw() -> HwConfig {
+        HwConfig {
+            pe_mesh_x: 14,
+            pe_mesh_y: 12,
+            lb_inputs: 12,
+            lb_weights: 192,
+            lb_outputs: 16,
+            gb_instances: 1,
+            gb_mesh_x: 1,
+            gb_mesh_y: 1,
+            gb_block: 4,
+            gb_cluster: 2,
+            df_filter_w: DataflowOpt::Streamed,
+            df_filter_h: DataflowOpt::Streamed,
+        }
+    }
+
+    fn layer() -> Layer {
+        Layer::conv("t", 3, 3, 8, 8, 16, 32, 1)
+    }
+
+    #[test]
+    fn trivial_mapping_is_valid_with_streamed_dataflow() {
+        let l = layer();
+        assert_eq!(
+            check_mapping(&l, &hw(), &Resources::eyeriss_168(), &Mapping::trivial(&l)),
+            Ok(())
+        );
+    }
+
+    #[test]
+    fn factor_product_enforced() {
+        let l = layer();
+        let mut m = Mapping::trivial(&l);
+        m.split_mut(Dim::K).dram = 16; // 16 != 32
+        assert_eq!(
+            check_mapping(&l, &hw(), &Resources::eyeriss_168(), &m),
+            Err(SwViolation::FactorProduct(Dim::K))
+        );
+    }
+
+    #[test]
+    fn dataflow_pins_filter_axes() {
+        let l = layer();
+        let mut h = hw();
+        h.df_filter_w = DataflowOpt::FullAtPe;
+        // trivial mapping has R fully at DRAM (local=1) -> violates FullAtPe
+        assert_eq!(
+            check_mapping(&l, &h, &Resources::eyeriss_168(), &Mapping::trivial(&l)),
+            Err(SwViolation::Dataflow(Dim::R))
+        );
+        // fixing the local factor to R satisfies it
+        let mut m = Mapping::trivial(&l);
+        *m.split_mut(Dim::R) = Split { dram: 1, glb: 1, spatial_x: 1, spatial_y: 1, local: 3 };
+        assert_eq!(check_mapping(&l, &h, &Resources::eyeriss_168(), &m), Ok(()));
+    }
+
+    #[test]
+    fn spatial_fit_enforced() {
+        let l = layer();
+        let mut m = Mapping::trivial(&l);
+        *m.split_mut(Dim::K) = Split { dram: 2, glb: 1, spatial_x: 16, spatial_y: 1, local: 1 };
+        assert_eq!(
+            check_mapping(&l, &hw(), &Resources::eyeriss_168(), &m),
+            Err(SwViolation::SpatialX)
+        );
+    }
+
+    #[test]
+    fn local_capacity_enforced() {
+        let l = layer();
+        let mut m = Mapping::trivial(&l);
+        // local weight tile = 1*1*1*32 = 32 <= 192 ok; push C too:
+        *m.split_mut(Dim::K) = Split { dram: 1, glb: 1, spatial_x: 1, spatial_y: 1, local: 32 };
+        *m.split_mut(Dim::C) = Split { dram: 2, glb: 1, spatial_x: 1, spatial_y: 1, local: 8 };
+        // 32*8 = 256 > 192
+        assert_eq!(
+            check_mapping(&l, &hw(), &Resources::eyeriss_168(), &m),
+            Err(SwViolation::LocalWeights)
+        );
+    }
+
+    #[test]
+    fn glb_capacity_enforced() {
+        // A big layer fully resident in GLB overflows it.
+        let l = Layer::conv("big", 3, 3, 56, 56, 256, 256, 1);
+        let mut m = Mapping::trivial(&l);
+        // move everything to GLB level
+        for d in DIMS {
+            let sz = l.size(d);
+            *m.split_mut(d) = Split { dram: 1, glb: sz, spatial_x: 1, spatial_y: 1, local: 1 };
+        }
+        assert_eq!(
+            check_mapping(&l, &hw(), &Resources::eyeriss_168(), &m),
+            Err(SwViolation::GlbCapacity)
+        );
+    }
+
+    #[test]
+    fn order_permutation_enforced() {
+        let l = layer();
+        let mut m = Mapping::trivial(&l);
+        m.order_glb = [Dim::R, Dim::R, Dim::P, Dim::Q, Dim::C, Dim::K];
+        assert_eq!(
+            check_mapping(&l, &hw(), &Resources::eyeriss_168(), &m),
+            Err(SwViolation::OrderNotPermutation)
+        );
+    }
+}

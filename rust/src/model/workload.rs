@@ -1,0 +1,221 @@
+//! Neural-layer workload description.
+//!
+//! Every workload is expressed as the seven-level conv loop nest of the paper
+//! (Fig. 14): filter `R x S`, output `P x Q`, input channels `C`, output
+//! channels `K`, batch `N` (fixed to 1 for inference, as in the paper).
+//! MLP and Transformer layers are expressed as 1x1 convolutions (paper
+//! Fig. 12), i.e. matrix multiplies with the token/batch dimension on `P*Q`.
+
+/// The six spatially/temporally blockable loop dimensions of a conv layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dim {
+    R,
+    S,
+    P,
+    Q,
+    C,
+    K,
+}
+
+pub const DIMS: [Dim; 6] = [Dim::R, Dim::S, Dim::P, Dim::Q, Dim::C, Dim::K];
+
+impl Dim {
+    pub fn index(self) -> usize {
+        match self {
+            Dim::R => 0,
+            Dim::S => 1,
+            Dim::P => 2,
+            Dim::Q => 3,
+            Dim::C => 4,
+            Dim::K => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dim::R => "R",
+            Dim::S => "S",
+            Dim::P => "P",
+            Dim::Q => "Q",
+            Dim::C => "C",
+            Dim::K => "K",
+        }
+    }
+
+    /// Reduction dimensions: iterating them accumulates into the same output
+    /// element (they are irrelevant to the Outputs dataspace).
+    pub fn is_reduction(self) -> bool {
+        matches!(self, Dim::R | Dim::S | Dim::C)
+    }
+}
+
+/// The three dataspaces moved through the memory hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataSpace {
+    Inputs,
+    Weights,
+    Outputs,
+}
+
+pub const DATASPACES: [DataSpace; 3] = [DataSpace::Inputs, DataSpace::Weights, DataSpace::Outputs];
+
+impl DataSpace {
+    pub fn name(self) -> &'static str {
+        match self {
+            DataSpace::Inputs => "Inputs",
+            DataSpace::Weights => "Weights",
+            DataSpace::Outputs => "Outputs",
+        }
+    }
+
+    /// Whether a loop dimension changes which elements of this dataspace are
+    /// touched ("relevant" in Timeloop terminology). P/Q are relevant to
+    /// Inputs through the sliding window; R/S likewise.
+    pub fn relevant(self, d: Dim) -> bool {
+        match self {
+            DataSpace::Inputs => matches!(d, Dim::R | Dim::S | Dim::P | Dim::Q | Dim::C),
+            DataSpace::Weights => matches!(d, Dim::R | Dim::S | Dim::C | Dim::K),
+            DataSpace::Outputs => matches!(d, Dim::P | Dim::Q | Dim::K),
+        }
+    }
+}
+
+/// A single neural layer as a conv-shaped workload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Layer {
+    pub name: String,
+    /// Filter width.
+    pub r: u64,
+    /// Filter height.
+    pub s: u64,
+    /// Output width.
+    pub p: u64,
+    /// Output height.
+    pub q: u64,
+    /// Input channels.
+    pub c: u64,
+    /// Output channels.
+    pub k: u64,
+    /// Convolution stride (both axes).
+    pub stride: u64,
+}
+
+impl Layer {
+    pub fn conv(name: &str, r: u64, s: u64, p: u64, q: u64, c: u64, k: u64, stride: u64) -> Self {
+        assert!(r > 0 && s > 0 && p > 0 && q > 0 && c > 0 && k > 0 && stride > 0);
+        Layer { name: name.to_string(), r, s, p, q, c, k, stride }
+    }
+
+    /// A fully-connected layer (`d_in -> d_out`) over `tokens` rows, expressed
+    /// as a 1x1 conv: C = d_in, K = d_out, P*Q = tokens.
+    pub fn matmul(name: &str, tokens: u64, d_in: u64, d_out: u64) -> Self {
+        // Split tokens into a near-square P x Q so spatial mapping has two
+        // axes to work with (any split is mathematically equivalent).
+        let p = near_square_factor(tokens);
+        let q = tokens / p;
+        Layer::conv(name, 1, 1, p, q, d_in, d_out, 1)
+    }
+
+    pub fn size(&self, d: Dim) -> u64 {
+        match d {
+            Dim::R => self.r,
+            Dim::S => self.s,
+            Dim::P => self.p,
+            Dim::Q => self.q,
+            Dim::C => self.c,
+            Dim::K => self.k,
+        }
+    }
+
+    /// Total multiply-accumulates.
+    pub fn macs(&self) -> u64 {
+        self.r * self.s * self.p * self.q * self.c * self.k
+    }
+
+    /// Input activation width/height implied by outputs + stride + filter.
+    pub fn input_w(&self) -> u64 {
+        (self.p - 1) * self.stride + self.r
+    }
+
+    pub fn input_h(&self) -> u64 {
+        (self.q - 1) * self.stride + self.s
+    }
+
+    /// Total footprint of a dataspace in words.
+    pub fn footprint(&self, ds: DataSpace) -> u64 {
+        match ds {
+            DataSpace::Inputs => self.c * self.input_w() * self.input_h(),
+            DataSpace::Weights => self.r * self.s * self.c * self.k,
+            DataSpace::Outputs => self.p * self.q * self.k,
+        }
+    }
+}
+
+/// Largest factor of n that is <= sqrt(n).
+pub fn near_square_factor(n: u64) -> u64 {
+    let mut best = 1;
+    let mut f = 1;
+    while f * f <= n {
+        if n % f == 0 {
+            best = f;
+        }
+        f += 1;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macs_and_footprints() {
+        // ResNet-K4-like: 3x3, 7x7 out, 512->512, stride 1
+        let l = Layer::conv("t", 3, 3, 7, 7, 512, 512, 1);
+        assert_eq!(l.macs(), 3 * 3 * 7 * 7 * 512 * 512);
+        assert_eq!(l.input_w(), 9);
+        assert_eq!(l.footprint(DataSpace::Inputs), 512 * 9 * 9);
+        assert_eq!(l.footprint(DataSpace::Weights), 3 * 3 * 512 * 512);
+        assert_eq!(l.footprint(DataSpace::Outputs), 7 * 7 * 512);
+    }
+
+    #[test]
+    fn matmul_layers_are_1x1_convs() {
+        let l = Layer::matmul("mlp", 16, 512, 1024);
+        assert_eq!(l.r, 1);
+        assert_eq!(l.s, 1);
+        assert_eq!(l.p * l.q, 16);
+        assert_eq!(l.macs(), 16 * 512 * 1024);
+    }
+
+    #[test]
+    fn stride_changes_input_footprint() {
+        let s1 = Layer::conv("s1", 8, 8, 20, 20, 4, 16, 1);
+        let s4 = Layer::conv("s4", 8, 8, 20, 20, 4, 16, 4);
+        assert!(s4.footprint(DataSpace::Inputs) > s1.footprint(DataSpace::Inputs));
+        assert_eq!(s4.input_w(), 19 * 4 + 8);
+    }
+
+    #[test]
+    fn relevance_table() {
+        use DataSpace::*;
+        assert!(Inputs.relevant(Dim::P));
+        assert!(!Inputs.relevant(Dim::K));
+        assert!(Weights.relevant(Dim::K));
+        assert!(!Weights.relevant(Dim::P));
+        assert!(Outputs.relevant(Dim::K));
+        assert!(!Outputs.relevant(Dim::C));
+        // Reduction dims are exactly the Outputs-irrelevant ones.
+        for d in DIMS {
+            assert_eq!(d.is_reduction(), !Outputs.relevant(d));
+        }
+    }
+
+    #[test]
+    fn near_square() {
+        assert_eq!(near_square_factor(16), 4);
+        assert_eq!(near_square_factor(18), 3);
+        assert_eq!(near_square_factor(7), 1);
+        assert_eq!(near_square_factor(1), 1);
+    }
+}

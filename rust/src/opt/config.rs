@@ -1,0 +1,83 @@
+//! Search budgets and BO hyperparameters (paper Fig. 10), all overridable
+//! from the CLI. The defaults are the paper's settings.
+
+use crate::surrogate::acquisition::Acquisition;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BoConfig {
+    /// Random warmup evaluations before the surrogate is trusted
+    /// (Fig. 10: 5 for hardware, 30 for software).
+    pub warmup: usize,
+    /// Feasible candidate pool per acquisition step (Fig. 10 / §3.4: 150).
+    pub pool: usize,
+    /// Cap on raw rejection-sampling draws while filling the pool (the paper
+    /// reports ~22K draws per 150 feasible; give an order of magnitude
+    /// headroom before declaring the space unsampleable).
+    pub max_pool_draws: u64,
+    /// Acquisition function; the paper's main results use LCB(1.0).
+    pub acquisition: Acquisition,
+    /// Refit GP hyperparameters (marginal likelihood) every this many new
+    /// observations; the posterior itself is recomputed every step.
+    pub refit_every: usize,
+}
+
+impl BoConfig {
+    /// Software-search defaults (Fig. 10 right column).
+    pub fn software() -> Self {
+        BoConfig {
+            warmup: 30,
+            pool: 150,
+            max_pool_draws: 300_000,
+            acquisition: Acquisition::Lcb(1.0),
+            refit_every: 25,
+        }
+    }
+
+    /// Hardware-search defaults (Fig. 10 left column).
+    pub fn hardware() -> Self {
+        BoConfig {
+            warmup: 5,
+            pool: 150,
+            max_pool_draws: 200_000,
+            acquisition: Acquisition::Lcb(1.0),
+            refit_every: 5,
+        }
+    }
+}
+
+/// Budgets for the nested co-design search (§4.1: "50 for hardware search
+/// and 250 for software search").
+#[derive(Clone, Copy, Debug)]
+pub struct NestedConfig {
+    pub hw_trials: usize,
+    pub sw_trials: usize,
+    pub hw_bo: BoConfig,
+    pub sw_bo: BoConfig,
+}
+
+impl Default for NestedConfig {
+    fn default() -> Self {
+        NestedConfig {
+            hw_trials: 50,
+            sw_trials: 250,
+            hw_bo: BoConfig::hardware(),
+            sw_bo: BoConfig::software(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let c = NestedConfig::default();
+        assert_eq!(c.hw_trials, 50);
+        assert_eq!(c.sw_trials, 250);
+        assert_eq!(c.sw_bo.warmup, 30);
+        assert_eq!(c.hw_bo.warmup, 5);
+        assert_eq!(c.sw_bo.pool, 150);
+        assert_eq!(c.sw_bo.acquisition, Acquisition::Lcb(1.0));
+    }
+}

@@ -1,0 +1,74 @@
+//! Timeloop-style heuristic mapper (Parashar et al. 2019): the §5.5
+//! comparator. Timeloop's built-in optimizers are exhaustive/random
+//! samplers with pruning heuristics; we model that as random sampling of
+//! valid mappings plus greedy hill-climbing from the best samples — no
+//! learned model, simulator-in-the-loop, same evaluation budget as BO.
+
+use crate::opt::sw_search::{SearchTrace, SwProblem};
+use crate::util::rng::Rng;
+
+/// Fraction of the budget spent on the random sweep (the rest funds greedy
+/// refinement of the incumbent).
+const SWEEP_FRACTION: f64 = 0.6;
+
+pub fn search(problem: &SwProblem, trials: usize, rng: &mut Rng) -> SearchTrace {
+    let mut trace = SearchTrace::new();
+    let sweep = ((trials as f64 * SWEEP_FRACTION) as usize).max(1);
+    let max_draws = 2_000_000u64;
+
+    // Phase 1: random sweep.
+    for _ in 0..sweep {
+        let Some((m, d)) = problem.space.sample_valid(rng, max_draws) else { break };
+        trace.raw_draws += d;
+        let edp = problem.edp(&m);
+        trace.record(&m, edp);
+    }
+
+    // Phase 2: greedy hill-climbing from the incumbent (prune-style local
+    // refinement: accept only strict improvements).
+    let Some(mut cur) = trace.best_mapping.clone() else { return trace };
+    let mut cur_edp = trace.best_edp;
+    while trace.evals.len() < trials {
+        let cand = problem.space.perturb(rng, &cur);
+        if !problem.space.is_valid(&cand) {
+            trace.raw_draws += 1;
+            continue;
+        }
+        let edp = problem.edp(&cand);
+        trace.record(&cand, edp);
+        if let Some(e) = edp {
+            if e < cur_edp {
+                cur = cand;
+                cur_edp = e;
+            }
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::Resources;
+    use crate::model::eval::Evaluator;
+    use crate::space::sw_space::SwSpace;
+    use crate::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+    use crate::workloads::specs::layer_by_name;
+
+    #[test]
+    fn heuristic_finds_feasible_and_improves() {
+        let p = SwProblem {
+            space: SwSpace::new(
+                layer_by_name("DQN-K2").unwrap(),
+                eyeriss_hw(168),
+                eyeriss_resources(168),
+            ),
+            eval: Evaluator::new(Resources::eyeriss_168()),
+        };
+        let mut rng = Rng::seed_from_u64(1);
+        let t = search(&p, 40, &mut rng);
+        assert!(t.found_feasible());
+        let curve = t.best_curve();
+        assert!(curve.last().unwrap() <= &curve[0]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Optimizers: the paper's constrained nested BO plus every baseline the
+//! evaluation compares against (constrained random search, relax-and-round
+//! BO, TVM-style cost-model search, Timeloop-style heuristic mapper).
+
+pub mod config;
+pub mod heuristic;
+pub mod hw_search;
+pub mod per_layer;
+pub mod round_bo;
+pub mod transfer;
+pub mod sw_search;
+pub mod tvm;
+
+pub use config::{BoConfig, NestedConfig};
+pub use hw_search::{HwMethod, HwTrace};
+pub use sw_search::{SearchTrace, SurrogateKind, SwMethod, SwProblem};

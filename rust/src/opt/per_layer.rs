@@ -1,0 +1,125 @@
+//! Per-layer hardware specialization (the paper's §5.1 footnote: "hardware
+//! specialization provides larger benefits at a finer granularity, i.e. if
+//! different layers can execute on customized hardware. We leave this for
+//! future work."). This module implements that extension: run an independent
+//! hardware search per layer and compare the sum of per-layer optima against
+//! the single model-wide design — the specialization headroom.
+
+use crate::model::eval::Evaluator;
+use crate::opt::config::NestedConfig;
+use crate::opt::hw_search::{self, HwMethod, HwTrace};
+use crate::opt::sw_search::{self, SwMethod, SwProblem};
+use crate::space::hw_space::HwSpace;
+use crate::space::sw_space::SwSpace;
+use crate::surrogate::gp::GpBackend;
+use crate::util::rng::Rng;
+use crate::workloads::eyeriss::eyeriss_resources;
+use crate::workloads::specs::ModelSpec;
+
+/// Result of per-layer specialization on one model.
+#[derive(Debug)]
+pub struct PerLayerResult {
+    /// (layer name, best EDP on its own specialized hardware, trace).
+    pub layers: Vec<(String, f64, HwTrace)>,
+    /// Sum of the per-layer optima.
+    pub total_edp: f64,
+}
+
+/// Independent hardware search per layer (same budgets per layer as the
+/// model-wide search uses for the whole model).
+pub fn specialize(
+    model: &ModelSpec,
+    ncfg: &NestedConfig,
+    sw_method: SwMethod,
+    backend: &GpBackend,
+    seed: u64,
+) -> PerLayerResult {
+    let resources = eyeriss_resources(model.num_pes);
+    let mut layers = Vec::new();
+    let mut total = 0.0;
+
+    for (li, layer) in model.layers.iter().enumerate() {
+        let space = HwSpace::new(resources.clone());
+        let eval = Evaluator::new(resources.clone());
+        let mut inner_seed = seed ^ (li as u64 * 7907);
+        let inner = |hw: &crate::model::arch::HwConfig| -> Option<f64> {
+            let problem = SwProblem {
+                space: SwSpace::new(layer.clone(), hw.clone(), resources.clone()),
+                eval: eval.clone(),
+            };
+            inner_seed = inner_seed.wrapping_add(1);
+            let mut rng = Rng::seed_from_u64(inner_seed);
+            let trace = sw_search::search(
+                sw_method,
+                &problem,
+                ncfg.sw_trials,
+                &ncfg.sw_bo,
+                backend,
+                &mut rng,
+            );
+            trace.found_feasible().then_some(trace.best_edp)
+        };
+        let mut rng = Rng::seed_from_u64(seed ^ (li as u64 * 104711));
+        let trace = hw_search::search(
+            HwMethod::Bo,
+            &space,
+            inner,
+            ncfg.hw_trials,
+            &ncfg.hw_bo,
+            backend,
+            &mut rng,
+        );
+        total += trace.best_edp;
+        layers.push((layer.name.clone(), trace.best_edp, trace));
+    }
+
+    PerLayerResult { layers, total_edp: total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::config::BoConfig;
+    use crate::opt::sw_search::SurrogateKind;
+    use crate::workloads::specs::dqn;
+
+    fn tiny() -> NestedConfig {
+        NestedConfig {
+            hw_trials: 4,
+            sw_trials: 10,
+            hw_bo: BoConfig { warmup: 2, pool: 8, ..BoConfig::hardware() },
+            sw_bo: BoConfig { warmup: 4, pool: 8, ..BoConfig::software() },
+        }
+    }
+
+    #[test]
+    fn per_layer_specialization_runs_and_sums() {
+        let res = specialize(
+            &dqn(),
+            &tiny(),
+            SwMethod::Bo { surrogate: SurrogateKind::Gp },
+            &GpBackend::Native,
+            7,
+        );
+        assert_eq!(res.layers.len(), 2);
+        let sum: f64 = res.layers.iter().map(|(_, e, _)| e).sum();
+        assert!((sum - res.total_edp).abs() < 1e-12 * sum.max(1.0));
+        assert!(res.total_edp.is_finite());
+    }
+
+    #[test]
+    fn specialized_layers_can_differ() {
+        // DQN-K1 (8x8 stride-4 filters) and DQN-K2 (4x4 stride-2) prefer
+        // different hardware; with a reasonable budget the searches should
+        // be free to pick different configurations (not forced equal).
+        let res = specialize(
+            &dqn(),
+            &tiny(),
+            SwMethod::Random,
+            &GpBackend::Native,
+            13,
+        );
+        // structural check only: each layer got its own search trace
+        assert!(res.layers.iter().all(|(_, _, t)| !t.configs.is_empty()));
+    }
+}

@@ -1,0 +1,233 @@
+//! "Out-of-the-box" BO baseline (Fig. 3): standard continuous-space BO with
+//! a squared-exponential GP over a relaxed [0,1]^D box, rounding each
+//! proposal to the nearest valid discrete parameters at evaluation time
+//! (§5.1 "optimizes in a continuous parameter space and rounds to the
+//! nearest valid parameters").
+//!
+//! The relaxation: per loop dimension, five box coordinates are treated as
+//! unnormalized log-space shares of the dimension's prime-exponent budget
+//! (largest-remainder rounding keeps the product exact); three more groups
+//! of six coordinates are sort-keys for the loop orders. Rounded points
+//! frequently violate the capacity/spatial constraints — exactly the
+//! pathology the paper attributes to this baseline — and score a penalty.
+
+use crate::model::mapping::{Mapping, Split};
+use crate::model::workload::{Dim, DIMS};
+use crate::opt::config::BoConfig;
+use crate::opt::sw_search::{SearchTrace, SwProblem};
+use crate::space::factors::prime_factorization;
+use crate::surrogate::gp::{GpBackend, GpSurrogate, KernelFamily};
+use crate::util::rng::Rng;
+use crate::util::stats::argmax;
+
+/// 6 dims x 5 levels + 3 orders x 6 keys.
+pub const BOX_DIM: usize = 6 * 5 + 3 * 6;
+
+/// Decode a continuous box point into a (possibly invalid) mapping.
+pub fn decode(problem: &SwProblem, point: &[f64]) -> Mapping {
+    debug_assert_eq!(point.len(), BOX_DIM);
+    let mut splits = [Split::unit(); 6];
+    for (di, d) in DIMS.iter().enumerate() {
+        let shares = &point[di * 5..di * 5 + 5];
+        let n = problem.space.layer.size(*d);
+        let factors = allocate_factors(n, shares);
+        let mut s = Split {
+            dram: factors[0],
+            glb: factors[1],
+            spatial_x: factors[2],
+            spatial_y: factors[3],
+            local: factors[4],
+        };
+        // Respect the dataflow pinning the same way the sampler does: fold a
+        // mismatched local factor back into DRAM.
+        if let Some(loc) = problem.space.pinned_local(*d) {
+            if s.local != loc {
+                let rest = n / loc;
+                // push everything except the pinned local back through the
+                // share allocation over 4 levels
+                let f4 = allocate_factors(rest, &shares[..4]);
+                s = Split {
+                    dram: f4[0],
+                    glb: f4[1],
+                    spatial_x: f4[2],
+                    spatial_y: f4[3],
+                    local: loc,
+                };
+            }
+        }
+        splits[d.index()] = s;
+    }
+    let order_from = |keys: &[f64]| -> [Dim; 6] {
+        let mut idx: Vec<usize> = (0..6).collect();
+        idx.sort_by(|&a, &b| keys[a].partial_cmp(&keys[b]).unwrap());
+        let mut out = DIMS;
+        for (slot, &i) in idx.iter().enumerate() {
+            out[slot] = DIMS[i];
+        }
+        out
+    };
+    let base = 30;
+    Mapping {
+        splits,
+        order_local: order_from(&point[base..base + 6]),
+        order_glb: order_from(&point[base + 6..base + 12]),
+        order_dram: order_from(&point[base + 12..base + 18]),
+    }
+}
+
+/// Distribute the prime exponents of n over 5 slots proportionally to the
+/// (soft-maxed) shares, largest remainder first.
+fn allocate_factors(n: u64, shares: &[f64]) -> Vec<u64> {
+    let k = shares.len();
+    let mut slots = vec![1u64; k];
+    let exp_shares: Vec<f64> = shares.iter().map(|s| (4.0 * s).exp()).collect();
+    let total: f64 = exp_shares.iter().sum();
+    for (p, e) in prime_factorization(n) {
+        // fractional allocation of e copies of prime p
+        let mut fracs: Vec<(f64, usize)> = exp_shares
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s / total * e as f64, i))
+            .collect();
+        let mut given: Vec<u32> = fracs.iter().map(|(f, _)| f.floor() as u32).collect();
+        let mut remaining = e - given.iter().sum::<u32>();
+        fracs.sort_by(|a, b| {
+            (b.0 - b.0.floor()).partial_cmp(&(a.0 - a.0.floor())).unwrap()
+        });
+        let mut at = 0;
+        while remaining > 0 {
+            given[fracs[at % k].1] += 1;
+            remaining -= 1;
+            at += 1;
+        }
+        for i in 0..k {
+            slots[i] *= p.pow(given[i]);
+        }
+    }
+    debug_assert_eq!(slots.iter().product::<u64>(), n);
+    slots
+}
+
+/// The relax-and-round BO loop.
+pub fn search(
+    problem: &SwProblem,
+    trials: usize,
+    cfg: &BoConfig,
+    rng: &mut Rng,
+) -> SearchTrace {
+    let mut trace = SearchTrace::new();
+    let mut xs: Vec<Vec<f64>> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::SquaredExp);
+    // Penalty for invalid rounded points: worse than anything seen.
+    let mut worst_seen: f64 = 0.0;
+    let mut last_fit_at = 0usize;
+
+    for trial in 0..trials {
+        let point: Vec<f64> = if trial < cfg.warmup || xs.len() < 2 {
+            (0..BOX_DIM).map(|_| rng.f64()).collect()
+        } else {
+            // random candidates in the box, GP-scored (standard BO without
+            // constraint awareness)
+            let cands: Vec<Vec<f64>> =
+                (0..cfg.pool).map(|_| (0..BOX_DIM).map(|_| rng.f64()).collect()).collect();
+            // marginal-likelihood refit on the same schedule as the main BO;
+            // data-only updates in between (perf: §Perf in EXPERIMENTS.md)
+            if xs.len() - last_fit_at >= cfg.refit_every || last_fit_at == 0 {
+                if gp.fit(&xs, &ys, rng).is_ok() {
+                    last_fit_at = xs.len();
+                }
+            } else {
+                let _ = gp.fit_data_only(&xs, &ys);
+            }
+            let best = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+            match gp.predict(&cands) {
+                Ok(post) => {
+                    let u: Vec<f64> = post
+                        .mean
+                        .iter()
+                        .zip(post.var.iter())
+                        .map(|(&m, &v)| cfg.acquisition.utility(m, v, best))
+                        .collect();
+                    cands[argmax(&u).unwrap_or(0)].clone()
+                }
+                Err(_) => cands.into_iter().next().unwrap(),
+            }
+        };
+
+        let mapping = decode(problem, &point);
+        trace.raw_draws += 1;
+        let edp = problem.edp(&mapping);
+        trace.record(&mapping, edp);
+        let y = match edp {
+            Some(e) => {
+                let l = e.ln();
+                worst_seen = worst_seen.max(l);
+                l
+            }
+            // invalid: penalized observation teaches the GP *something*,
+            // but without constraint structure it keeps proposing nearby
+            None => worst_seen + 2.0,
+        };
+        xs.push(point);
+        ys.push(y);
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::eval::Evaluator;
+    use crate::model::arch::Resources;
+    use crate::space::sw_space::SwSpace;
+    use crate::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+    use crate::workloads::specs::layer_by_name;
+
+    fn problem() -> SwProblem {
+        SwProblem {
+            space: SwSpace::new(
+                layer_by_name("DQN-K2").unwrap(),
+                eyeriss_hw(168),
+                eyeriss_resources(168),
+            ),
+            eval: Evaluator::new(Resources::eyeriss_168()),
+        }
+    }
+
+    #[test]
+    fn decode_preserves_factor_products_and_pinning() {
+        let p = problem();
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..100 {
+            let pt: Vec<f64> = (0..BOX_DIM).map(|_| rng.f64()).collect();
+            let m = decode(&p, &pt);
+            for d in DIMS {
+                assert_eq!(m.split(d).product(), p.space.layer.size(d));
+            }
+            // Eyeriss pins R FullAtPe / S streamed
+            assert_eq!(m.split(Dim::R).local, p.space.layer.r);
+            assert_eq!(m.split(Dim::S).local, 1);
+        }
+    }
+
+    #[test]
+    fn allocate_factors_exact() {
+        for n in [12u64, 56, 168, 512] {
+            let shares = [0.9, 0.1, 0.5, 0.3, 0.7];
+            let f = allocate_factors(n, &shares);
+            assert_eq!(f.iter().product::<u64>(), n);
+        }
+    }
+
+    #[test]
+    fn round_bo_runs_and_often_rounds_to_invalid() {
+        let p = problem();
+        let mut rng = Rng::seed_from_u64(2);
+        let cfg = BoConfig { warmup: 5, pool: 20, ..BoConfig::software() };
+        let t = search(&p, 30, &cfg, &mut rng);
+        assert_eq!(t.evals.len(), 30);
+        let invalid = t.evals.iter().filter(|e| e.is_infinite()).count();
+        assert!(invalid > 0, "rounding pathology should produce invalid points");
+    }
+}

@@ -1,0 +1,237 @@
+//! Transfer learning across models (the paper's §7 future-work direction:
+//! "transfer learning could dramatically reduce design time across designs
+//! and models"). The hardware design space is model-independent — only the
+//! objective changes — so hardware trials evaluated for a *source* model can
+//! warm-start the GP of a *target* model's search: they enter the objective
+//! GP as extra (feature, EDP) observations with the noise kernel absorbing
+//! the model shift, and the constraint classifier inherits the feasibility
+//! labels directly (mapping existence is strongly correlated across models
+//! sharing the resource envelope).
+
+use crate::model::arch::HwConfig;
+use crate::opt::config::BoConfig;
+use crate::opt::hw_search::HwTrace;
+use crate::space::features::hw_features;
+use crate::space::hw_space::HwSpace;
+use crate::surrogate::acquisition::feasibility_probability;
+use crate::surrogate::gp::{GpBackend, GpSurrogate, KernelFamily};
+use crate::util::rng::Rng;
+use crate::util::stats::argmax;
+
+/// Prior observations carried over from a source model's hardware search.
+#[derive(Clone, Debug, Default)]
+pub struct TransferPrior {
+    /// (hardware config, summed EDP) of feasible source trials.
+    pub feasible: Vec<(HwConfig, f64)>,
+    /// Hardware configs whose inner search found no mapping.
+    pub infeasible: Vec<HwConfig>,
+}
+
+impl TransferPrior {
+    /// Extract a prior from a finished hardware trace.
+    pub fn from_trace(trace: &HwTrace) -> Self {
+        let mut prior = TransferPrior::default();
+        for (hw, &edp) in trace.configs.iter().zip(trace.evals.iter()) {
+            if edp.is_finite() {
+                prior.feasible.push((hw.clone(), edp));
+            } else {
+                prior.infeasible.push(hw.clone());
+            }
+        }
+        prior
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.feasible.is_empty() && self.infeasible.is_empty()
+    }
+}
+
+/// Hardware BO warm-started with a transfer prior. Identical to
+/// `hw_search::search` with method `Bo`, except the surrogate datasets are
+/// seeded with the source-model observations (objective values enter in
+/// log-space with their own standardization, so only *relative* ordering
+/// transfers — the constant offset between models is absorbed).
+pub fn search_with_prior(
+    space: &HwSpace,
+    prior: &TransferPrior,
+    mut inner: impl FnMut(&HwConfig) -> Option<f64>,
+    trials: usize,
+    cfg: &BoConfig,
+    backend: &GpBackend,
+    rng: &mut Rng,
+) -> HwTrace {
+    let mut trace = HwTrace::new();
+
+    let feat = |hw: &HwConfig| hw_features(hw, &space.resources).to_vec();
+    let mut xs: Vec<Vec<f64>> = prior.feasible.iter().map(|(h, _)| feat(h)).collect();
+    let mut ys: Vec<f64> = prior.feasible.iter().map(|(_, e)| e.ln()).collect();
+    let mut cx: Vec<Vec<f64>> = xs.clone();
+    let mut cy: Vec<f64> = vec![1.0; xs.len()];
+    for h in &prior.infeasible {
+        cx.push(feat(h));
+        cy.push(-1.0);
+    }
+
+    let mut obj_gp = GpSurrogate::new(backend.clone(), KernelFamily::Linear { noise: true });
+    let mut con_gp = GpSurrogate::new(backend.clone(), KernelFamily::SquaredExp);
+    con_gp.standardize_y = false;
+
+    // With a non-empty prior, skip the random warmup entirely — that is the
+    // design-time saving the paper's §7 anticipates.
+    let warmup = if prior.feasible.len() >= 2 { 0 } else { cfg.warmup };
+
+    for trial in 0..trials {
+        let pick: HwConfig = if trial < warmup || xs.len() < 2 {
+            space.sample_valid(rng).0
+        } else {
+            let pool: Vec<HwConfig> = (0..cfg.pool).map(|_| space.sample_valid(rng).0).collect();
+            let feats: Vec<Vec<f64>> = pool.iter().map(|h| feat(h)).collect();
+            let best = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+            let _ = obj_gp.fit(&xs, &ys, rng);
+            let obj = obj_gp.predict(&feats).ok();
+            let con = if cy.iter().any(|&v| v < 0.0) {
+                let _ = con_gp.fit(&cx, &cy, rng);
+                con_gp.predict(&feats).ok()
+            } else {
+                None
+            };
+            match obj {
+                Some(post) => {
+                    let u: Vec<f64> = (0..pool.len())
+                        .map(|i| {
+                            let p = con
+                                .as_ref()
+                                .map(|c| feasibility_probability(c.mean[i], c.var[i]))
+                                .unwrap_or(1.0);
+                            cfg.acquisition.constrained_utility(post.mean[i], post.var[i], best, p)
+                        })
+                        .collect();
+                    pool[argmax(&u).unwrap_or(0)].clone()
+                }
+                None => pool.into_iter().next().unwrap(),
+            }
+        };
+
+        let edp = inner(&pick);
+        trace.record(&pick, edp);
+        let f = feat(&pick);
+        match edp {
+            Some(e) => {
+                xs.push(f.clone());
+                ys.push(e.ln());
+                cx.push(f);
+                cy.push(1.0);
+            }
+            None => {
+                cx.push(f);
+                cy.push(-1.0);
+            }
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::Resources;
+    use crate::opt::hw_search::{search, HwMethod};
+
+    /// Source and target objectives: same structure, shifted scale — the
+    /// transfer-friendly situation the paper anticipates.
+    fn objective(hw: &HwConfig, scale: f64) -> Option<f64> {
+        if hw.lb_weights < 16 {
+            return None;
+        }
+        let aspect = (hw.pe_mesh_x as f64 / hw.pe_mesh_y as f64).ln().abs();
+        let balance = (hw.lb_weights as f64 / 150.0 - 1.0).powi(2);
+        Some(scale * (1.0 + aspect + balance))
+    }
+
+    fn quick_cfg() -> BoConfig {
+        BoConfig { warmup: 4, pool: 25, ..BoConfig::hardware() }
+    }
+
+    #[test]
+    fn prior_extraction_separates_feasible() {
+        let space = HwSpace::new(Resources::eyeriss_168());
+        let mut rng = Rng::seed_from_u64(1);
+        let trace = search(
+            HwMethod::Random,
+            &space,
+            |h| objective(h, 1e-3),
+            20,
+            &quick_cfg(),
+            &GpBackend::Native,
+            &mut rng,
+        );
+        let prior = TransferPrior::from_trace(&trace);
+        assert_eq!(prior.feasible.len() + prior.infeasible.len(), 20);
+        assert!(!prior.is_empty());
+    }
+
+    #[test]
+    fn transfer_skips_warmup_and_helps_early() {
+        let space = HwSpace::new(Resources::eyeriss_168());
+        // source run on a 2x-scaled objective
+        let mut rng = Rng::seed_from_u64(2);
+        let source = search(
+            HwMethod::Bo,
+            &space,
+            |h| objective(h, 2e-3),
+            20,
+            &quick_cfg(),
+            &GpBackend::Native,
+            &mut rng,
+        );
+        let prior = TransferPrior::from_trace(&source);
+
+        // target run: compare early progress with vs without the prior,
+        // majority vote over seeds (BO is stochastic)
+        let mut wins = 0;
+        let n = 5;
+        for seed in 0..n {
+            let mut r1 = Rng::seed_from_u64(100 + seed);
+            let warm = search_with_prior(
+                &space,
+                &prior,
+                |h| objective(h, 1e-3),
+                6,
+                &quick_cfg(),
+                &GpBackend::Native,
+                &mut r1,
+            );
+            let mut r2 = Rng::seed_from_u64(100 + seed);
+            let cold = search(
+                HwMethod::Bo,
+                &space,
+                |h| objective(h, 1e-3),
+                6,
+                &quick_cfg(),
+                &GpBackend::Native,
+                &mut r2,
+            );
+            if warm.best_edp <= cold.best_edp {
+                wins += 1;
+            }
+        }
+        assert!(wins * 2 >= n, "transfer won only {wins}/{n} early races");
+    }
+
+    #[test]
+    fn empty_prior_degrades_to_plain_bo() {
+        let space = HwSpace::new(Resources::eyeriss_168());
+        let mut rng = Rng::seed_from_u64(3);
+        let t = search_with_prior(
+            &space,
+            &TransferPrior::default(),
+            |h| objective(h, 1e-3),
+            10,
+            &quick_cfg(),
+            &GpBackend::Native,
+            &mut rng,
+        );
+        assert_eq!(t.evals.len(), 10);
+        assert!(t.best_edp.is_finite());
+    }
+}

@@ -1,0 +1,166 @@
+//! Artifact discovery and ABI validation.
+//!
+//! `python/compile/aot.py` writes one HLO-text executable per (entry point,
+//! size class) plus `manifest.txt` recording the ABI constants. The Rust
+//! side refuses to run against artifacts compiled for a different feature
+//! dimensionality — shape mismatches would otherwise surface as opaque PJRT
+//! errors deep in the search.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Feature dimensionality baked into the artifacts. Must equal
+/// `space::features::FEATURE_DIM`.
+pub const FEATURE_DIM: usize = 16;
+/// Hyperparameter vector length (see python/compile/model.py).
+pub const THETA_DIM: usize = 6;
+/// Hyperparameter batch size of the NLL entry point.
+pub const NLL_BATCH: usize = 32;
+/// Size classes compiled by aot.py (padded N=M per class).
+pub const SIZE_CLASSES: [usize; 2] = [64, 256];
+
+/// Parsed manifest.txt.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub feature_dim: usize,
+    pub theta_dim: usize,
+    pub nll_batch: usize,
+    pub size_classes: Vec<usize>,
+    pub entries: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let mut feature_dim = 0;
+        let mut theta_dim = 0;
+        let mut nll_batch = 0;
+        let mut size_classes = Vec::new();
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if let Some(v) = line.strip_prefix("feature_dim=") {
+                feature_dim = v.parse()?;
+            } else if let Some(v) = line.strip_prefix("theta_dim=") {
+                theta_dim = v.parse()?;
+            } else if let Some(v) = line.strip_prefix("nll_batch=") {
+                nll_batch = v.parse()?;
+            } else if let Some(v) = line.strip_prefix("size_classes=") {
+                size_classes = v.split(',').map(|s| s.parse()).collect::<Result<_, _>>()?;
+            } else if let Some((name, abi)) = line.split_once(": ") {
+                entries.insert(name.to_string(), abi.to_string());
+            }
+        }
+        let m = Manifest { feature_dim, theta_dim, nll_batch, size_classes, entries };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// ABI check against the constants this binary was compiled with.
+    pub fn validate(&self) -> Result<()> {
+        if self.feature_dim != FEATURE_DIM {
+            bail!(
+                "artifact feature_dim {} != binary FEATURE_DIM {FEATURE_DIM}; \
+                 re-run `make artifacts`",
+                self.feature_dim
+            );
+        }
+        if self.theta_dim != THETA_DIM {
+            bail!("artifact theta_dim {} != {THETA_DIM}", self.theta_dim);
+        }
+        if self.nll_batch != NLL_BATCH {
+            bail!("artifact nll_batch {} != {NLL_BATCH}", self.nll_batch);
+        }
+        for n in SIZE_CLASSES {
+            if !self.size_classes.contains(&n) {
+                bail!("artifact set missing size class {n}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Paths to the artifact files for every size class.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactSet {
+    /// Locate artifacts: explicit dir, `$CODESIGN_ARTIFACTS`, or `artifacts/`
+    /// next to the current directory.
+    pub fn discover(dir: Option<&Path>) -> Result<Self> {
+        let dir = match dir {
+            Some(d) => d.to_path_buf(),
+            None => std::env::var_os("CODESIGN_ARTIFACTS")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from("artifacts")),
+        };
+        let manifest = Manifest::load(&dir)?;
+        Ok(ArtifactSet { dir, manifest })
+    }
+
+    /// Smallest compiled size class that fits `n` live rows.
+    pub fn size_class(&self, n: usize) -> Result<usize> {
+        SIZE_CLASSES
+            .iter()
+            .copied()
+            .find(|&c| c >= n)
+            .with_context(|| format!("no size class fits n={n} (max {:?})", SIZE_CLASSES))
+    }
+
+    pub fn posterior_path(&self, class: usize) -> PathBuf {
+        self.dir.join(format!("gp_posterior_n{class}.hlo.txt"))
+    }
+
+    pub fn nll_path(&self, class: usize) -> PathBuf {
+        self.dir.join(format!("gp_nll_n{class}.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Path::new("artifacts/manifest.txt").exists()
+    }
+
+    #[test]
+    fn manifest_roundtrip_if_built() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let set = ArtifactSet::discover(None).unwrap();
+        assert_eq!(set.manifest.feature_dim, FEATURE_DIM);
+        for n in SIZE_CLASSES {
+            assert!(set.posterior_path(n).exists());
+            assert!(set.nll_path(n).exists());
+        }
+    }
+
+    #[test]
+    fn size_class_selection() {
+        if !artifacts_available() {
+            return;
+        }
+        let set = ArtifactSet::discover(None).unwrap();
+        assert_eq!(set.size_class(1).unwrap(), 64);
+        assert_eq!(set.size_class(64).unwrap(), 64);
+        assert_eq!(set.size_class(65).unwrap(), 256);
+        assert_eq!(set.size_class(250).unwrap(), 256);
+        assert!(set.size_class(257).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-compiled GP artifacts (HLO text produced by
+//! `python/compile/aot.py`) and executes them from the search hot path.
+//! Python never runs here — the Rust binary is self-contained once
+//! `make artifacts` has produced `artifacts/*.hlo.txt`.
+
+pub mod artifacts;
+pub mod gp_exec;
+pub mod server;
+
+pub use artifacts::{ArtifactSet, Manifest, FEATURE_DIM, NLL_BATCH, THETA_DIM};
+pub use gp_exec::GpExecutor;
+pub use server::{GpHandle, GpServer};

@@ -1,0 +1,129 @@
+//! GP server: a dedicated thread owning the PJRT client, serving posterior /
+//! NLL requests over channels. The xla-crate client is not `Sync`, and the
+//! per-layer software searches run on worker threads (coordinator/), so all
+//! GP execution funnels through this single-owner server. Request latency is
+//! dominated by the HLO execution itself (~ms), far below the simulator
+//! budget of a BO step, so one server thread is not a bottleneck — see
+//! EXPERIMENTS.md §Perf.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::gp_exec::{GpExecutor, Posterior, Theta};
+
+enum Request {
+    Posterior {
+        x: Vec<f32>,
+        y: Vec<f32>,
+        theta: Theta,
+        cand: Vec<f32>,
+        reply: mpsc::Sender<Result<Posterior>>,
+    },
+    NllBatch {
+        x: Vec<f32>,
+        y: Vec<f32>,
+        thetas: Vec<Theta>,
+        reply: mpsc::Sender<Result<Vec<f64>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-shareable handle used by worker threads. The sender is
+/// wrapped in a mutex (std mpsc senders are Send but not Sync) so handles
+/// can be captured by reference in scoped-thread closures.
+pub struct GpHandle {
+    tx: std::sync::Mutex<mpsc::Sender<Request>>,
+}
+
+impl Clone for GpHandle {
+    fn clone(&self) -> Self {
+        GpHandle { tx: std::sync::Mutex::new(self.tx.lock().unwrap().clone()) }
+    }
+}
+
+impl GpHandle {
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .map_err(|_| anyhow!("GP server is down"))
+    }
+
+    pub fn posterior(
+        &self,
+        x: Vec<f32>,
+        y: Vec<f32>,
+        theta: Theta,
+        cand: Vec<f32>,
+    ) -> Result<Posterior> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Posterior { x, y, theta, cand, reply })?;
+        rx.recv().map_err(|_| anyhow!("GP server dropped the request"))?
+    }
+
+    pub fn nll_batch(&self, x: Vec<f32>, y: Vec<f32>, thetas: Vec<Theta>) -> Result<Vec<f64>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::NllBatch { x, y, thetas, reply })?;
+        rx.recv().map_err(|_| anyhow!("GP server dropped the request"))?
+    }
+}
+
+/// The server; keep it alive for the duration of the search.
+pub struct GpServer {
+    tx: mpsc::Sender<Request>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl GpServer {
+    /// Start the server thread (loads + compiles all artifacts inside it).
+    /// Fails fast if the artifacts are missing or broken.
+    pub fn start() -> Result<GpServer> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("gp-server".into())
+            .spawn(move || {
+                let exec = match GpExecutor::load_default() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Posterior { x, y, theta, cand, reply } => {
+                            let _ = reply.send(exec.posterior(&x, &y, theta, &cand));
+                        }
+                        Request::NllBatch { x, y, thetas, reply } => {
+                            let _ = reply.send(exec.nll_batch(&x, &y, &thetas));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("GP server thread died during startup"))??;
+        Ok(GpServer { tx, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> GpHandle {
+        GpHandle { tx: std::sync::Mutex::new(self.tx.clone()) }
+    }
+}
+
+impl Drop for GpServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

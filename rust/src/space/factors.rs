@@ -1,0 +1,189 @@
+//! Integer factorization utilities for the semi-discrete design space: the
+//! valid values of most parameters are *divisors* of a workload dimension or
+//! of a hardware resource count (paper Figs. 6 and 8), and blocking factors
+//! must multiply out exactly, so sampling happens in factorization space.
+
+use crate::util::rng::Rng;
+
+/// All divisors of n, ascending. n >= 1.
+pub fn divisors(n: u64) -> Vec<u64> {
+    assert!(n >= 1);
+    let mut small = Vec::new();
+    let mut big = Vec::new();
+    let mut f = 1;
+    while f * f <= n {
+        if n % f == 0 {
+            small.push(f);
+            if f != n / f {
+                big.push(n / f);
+            }
+        }
+        f += 1;
+    }
+    big.reverse();
+    small.extend(big);
+    small
+}
+
+/// Prime factorization as (prime, exponent) pairs, ascending primes.
+pub fn prime_factorization(mut n: u64) -> Vec<(u64, u32)> {
+    assert!(n >= 1);
+    let mut out = Vec::new();
+    let mut p = 2;
+    while p * p <= n {
+        if n % p == 0 {
+            let mut e = 0;
+            while n % p == 0 {
+                n /= p;
+                e += 1;
+            }
+            out.push((p, e));
+        }
+        p += 1;
+    }
+    if n > 1 {
+        out.push((n, 1));
+    }
+    out
+}
+
+/// Uniformly sample an ordered split of `n` into `k` factors whose product is
+/// exactly `n`, by distributing each prime's exponent multinomially across
+/// the k slots. Every valid split has non-zero probability.
+pub fn random_factor_split(rng: &mut Rng, n: u64, k: usize) -> Vec<u64> {
+    FactorSplitter::new(n).split(rng, k)
+}
+
+/// Precomputed prime multiset of a fixed n, for the rejection-sampling hot
+/// path (the samplers draw tens of thousands of splits of the *same* layer
+/// dimensions; re-factorizing per draw dominated the §Perf baseline profile).
+#[derive(Clone, Debug)]
+pub struct FactorSplitter {
+    n: u64,
+    /// primes with multiplicity, e.g. 12 -> [2, 2, 3]
+    primes: Vec<u64>,
+}
+
+impl FactorSplitter {
+    pub fn new(n: u64) -> Self {
+        let primes = prime_factorization(n)
+            .into_iter()
+            .flat_map(|(p, e)| std::iter::repeat(p).take(e as usize))
+            .collect();
+        FactorSplitter { n, primes }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Draw an ordered k-way split with product exactly n.
+    pub fn split(&self, rng: &mut Rng, k: usize) -> Vec<u64> {
+        assert!(k >= 1);
+        let mut slots = vec![1u64; k];
+        self.split_into(rng, &mut slots);
+        slots
+    }
+
+    /// Allocation-free variant: fill `slots` (len >= 1) in place.
+    #[inline]
+    pub fn split_into(&self, rng: &mut Rng, slots: &mut [u64]) {
+        slots.fill(1);
+        let k = slots.len();
+        for &p in &self.primes {
+            slots[rng.below(k)] *= p;
+        }
+        debug_assert_eq!(slots.iter().product::<u64>(), self.n);
+    }
+}
+
+/// Number of ordered k-factor splits of n (for sanity checks / space sizing):
+/// prod over primes of C(e + k - 1, k - 1).
+pub fn count_factor_splits(n: u64, k: usize) -> u128 {
+    let mut total: u128 = 1;
+    for (_, e) in prime_factorization(n) {
+        total *= binomial(e as u128 + k as u128 - 1, k as u128 - 1);
+    }
+    total
+}
+
+fn binomial(n: u128, k: u128) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc * (n - i) / (i + 1);
+    }
+    acc
+}
+
+/// Pairs (a, b) with a*b = n (ordered). The valid values of H1/H2 ("factors
+/// of #PEs" with H1*H2 = #PEs).
+pub fn factor_pairs(n: u64) -> Vec<(u64, u64)> {
+    divisors(n).into_iter().map(|a| (a, n / a)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn divisors_known() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(16), vec![1, 2, 4, 8, 16]);
+        assert_eq!(divisors(168).len(), 16);
+    }
+
+    #[test]
+    fn prime_factorization_known() {
+        assert_eq!(prime_factorization(1), vec![]);
+        assert_eq!(prime_factorization(12), vec![(2, 2), (3, 1)]);
+        assert_eq!(prime_factorization(97), vec![(97, 1)]);
+        assert_eq!(prime_factorization(168), vec![(2, 3), (3, 1), (7, 1)]);
+    }
+
+    #[test]
+    fn random_split_products_always_exact() {
+        let mut rng = Rng::seed_from_u64(1);
+        for n in [1u64, 7, 12, 56, 168, 512, 224] {
+            for k in 1..=5 {
+                let s = random_factor_split(&mut rng, n, k);
+                assert_eq!(s.len(), k);
+                assert_eq!(s.iter().product::<u64>(), n, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn random_split_covers_space() {
+        // 12 into 2 slots: 6 ordered splits; all should appear.
+        let mut rng = Rng::seed_from_u64(2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..500 {
+            let s = random_factor_split(&mut rng, 12, 2);
+            seen.insert((s[0], s[1]));
+        }
+        assert_eq!(seen.len() as u128, count_factor_splits(12, 2));
+    }
+
+    #[test]
+    fn count_splits_known() {
+        // 12 = 2^2*3: C(3,1)*C(2,1) = 6 ordered pairs
+        assert_eq!(count_factor_splits(12, 2), 6);
+        assert_eq!(count_factor_splits(1, 4), 1);
+        // 8 = 2^3 into 3 slots: C(5,2) = 10
+        assert_eq!(count_factor_splits(8, 3), 10);
+    }
+
+    #[test]
+    fn factor_pairs_multiply_out() {
+        for (a, b) in factor_pairs(168) {
+            assert_eq!(a * b, 168);
+        }
+        assert_eq!(factor_pairs(168).len(), 16);
+    }
+}

@@ -1,0 +1,224 @@
+//! Feature transforms for the BO surrogates (paper Fig. 13 plus the
+//! relational features §4.2/§4.3 describe).
+//!
+//! The paper's GPs use a *linear kernel on explicit features* chosen so that
+//! the quantities governing cost (buffer usage ratios, parallelism ratios,
+//! mesh ratios, psum-revisit multipliers) appear as coordinates; the linear
+//! kernel then encodes those interactions directly and yields the
+//! sample-efficient posterior the paper relies on. Both hardware and
+//! software points are embedded in the same `FEATURE_DIM`-dimensional space
+//! so a single AOT-compiled GP executable serves both searches.
+
+use crate::model::arch::{DataflowOpt, HwConfig, Resources};
+use crate::model::energy::effective_glb_capacity;
+use crate::model::mapping::{Level, Mapping};
+use crate::model::nest::{footprint, out_walk, replication, tiles};
+use crate::model::workload::{DataSpace, Dim};
+use crate::space::sw_space::SwSpace;
+
+/// Shared feature dimensionality (padded; must match the AOT artifacts).
+pub const FEATURE_DIM: usize = 16;
+
+fn l2(x: f64) -> f64 {
+    (x.max(1e-9)).log2()
+}
+
+/// Names for documentation / CSV headers.
+pub fn hw_feature_names() -> [&'static str; FEATURE_DIM] {
+    [
+        "log2_pe_mesh_x",
+        "log2_pe_mesh_y",
+        "log2_mesh_x_ratio",
+        "log2_mesh_y_ratio",
+        "lb_inputs_frac",
+        "lb_weights_frac",
+        "lb_outputs_frac",
+        "log2_gb_instances",
+        "log2_gb_block",
+        "log2_gb_cluster",
+        "df_filter_w",
+        "df_filter_h",
+        "log2_pe_aspect",
+        "log2_lb_inputs",
+        "log2_lb_weights",
+        "log2_lb_outputs",
+    ]
+}
+
+/// Hardware features (Fig. 13 `mesh_x_ratio` / `mesh_y_ratio` plus the
+/// partition and geometry coordinates).
+pub fn hw_features(hw: &HwConfig, res: &Resources) -> [f64; FEATURE_DIM] {
+    let total = res.local_buffer_entries as f64;
+    let flag = |d: DataflowOpt| match d {
+        DataflowOpt::FullAtPe => 1.0,
+        DataflowOpt::Streamed => 0.0,
+    };
+    [
+        l2(hw.pe_mesh_x as f64),
+        l2(hw.pe_mesh_y as f64),
+        l2(hw.fanout_x() as f64),
+        l2(hw.fanout_y() as f64),
+        hw.lb_inputs as f64 / total,
+        hw.lb_weights as f64 / total,
+        hw.lb_outputs as f64 / total,
+        l2(hw.gb_instances as f64),
+        l2(hw.gb_block as f64),
+        l2(hw.gb_cluster as f64),
+        flag(hw.df_filter_w),
+        flag(hw.df_filter_h),
+        l2(hw.pe_mesh_x as f64 / hw.pe_mesh_y as f64),
+        l2(hw.lb_inputs as f64 + 1.0) / 8.0,
+        l2(hw.lb_weights as f64 + 1.0) / 8.0,
+        l2(hw.lb_outputs as f64 + 1.0) / 8.0,
+    ]
+}
+
+pub fn sw_feature_names() -> [&'static str; FEATURE_DIM] {
+    [
+        "input_buffer_usage",
+        "weight_buffer_usage",
+        "output_buffer_usage",
+        "global_buffer_usage",
+        "parallelism_ratio_x",
+        "parallelism_ratio_y",
+        "log2_spatial_used",
+        "log2_local_volume",
+        "log2_glb_iters",
+        "log2_dram_iters",
+        "log2_psum_revisit_glb",
+        "log2_psum_revisit_all",
+        "halo_friendly",
+        "glb_fill_inputs",
+        "glb_fill_weights",
+        "glb_fill_outputs",
+    ]
+}
+
+/// Software-mapping features (Fig. 13 usage/parallelism ratios plus revisit
+/// and residency coordinates computable because hardware is fixed, §4.3).
+pub fn sw_features(space: &SwSpace, m: &Mapping) -> [f64; FEATURE_DIM] {
+    let layer = &space.layer;
+    let hw = &space.hw;
+    let t = tiles(layer, m);
+    let stride = layer.stride;
+
+    let foot_loc = |ds| footprint(ds, &t.local, stride) as f64;
+    let foot_glb = |ds| footprint(ds, &t.glb, stride) as f64;
+    let cap = effective_glb_capacity(hw, &space.resources);
+    let glb_used: f64 = [DataSpace::Inputs, DataSpace::Weights, DataSpace::Outputs]
+        .iter()
+        .map(|&ds| foot_glb(ds) * replication(hw, m, ds))
+        .sum();
+
+    let spx = m.spatial_x_used() as f64;
+    let spy = m.spatial_y_used() as f64;
+
+    let prod_level = |lv: Level| -> f64 {
+        m.loops_at(lv).iter().map(|&(_, f)| f as f64).product()
+    };
+
+    // psum revisit multipliers (order-sensitive; see nest::out_walk)
+    let above_glb: Vec<(Dim, u64)> = m.loops_at(Level::Dram).into_iter().rev().collect();
+    let mut above_local: Vec<(Dim, u64)> =
+        m.loops_at(Level::Glb).into_iter().rev().collect();
+    above_local.extend(above_glb.iter().cloned());
+    let w_all = out_walk(&above_local);
+    let w_dram = out_walk(&above_glb);
+
+    // halo friendliness: innermost non-1 input-relevant GLB loop is P or Q
+    let halo = m
+        .loops_at(Level::Glb)
+        .iter()
+        .rev()
+        .find(|&&(d, f)| f > 1 && DataSpace::Inputs.relevant(d))
+        .map(|&(d, _)| matches!(d, Dim::P | Dim::Q))
+        .unwrap_or(false);
+
+    [
+        foot_loc(DataSpace::Inputs) / hw.lb_inputs.max(1) as f64,
+        foot_loc(DataSpace::Weights) / hw.lb_weights.max(1) as f64,
+        foot_loc(DataSpace::Outputs) / hw.lb_outputs.max(1) as f64,
+        glb_used / cap.max(1.0),
+        spx / hw.pe_mesh_x as f64,
+        spy / hw.pe_mesh_y as f64,
+        l2(spx * spy) / 8.0,
+        l2(prod_level(Level::Local)) / 8.0,
+        l2(prod_level(Level::Glb)) / 8.0,
+        l2(prod_level(Level::Dram)) / 16.0,
+        l2(w_dram.write_mult / w_dram.distinct.max(1.0)) / 8.0,
+        l2(w_all.write_mult / w_all.distinct.max(1.0)) / 8.0,
+        if halo { 1.0 } else { 0.0 },
+        l2(foot_glb(DataSpace::Inputs) + 1.0) / 16.0,
+        l2(foot_glb(DataSpace::Weights) + 1.0) / 16.0,
+        l2(foot_glb(DataSpace::Outputs) + 1.0) / 16.0,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+    use crate::workloads::specs::layer_by_name;
+
+    #[test]
+    fn hw_features_finite_and_distinguishing() {
+        let res = eyeriss_resources(168);
+        let a = eyeriss_hw(168);
+        let mut b = a.clone();
+        b.gb_block = 16;
+        b.lb_weights = 100;
+        b.lb_inputs = 104;
+        let fa = hw_features(&a, &res);
+        let fb = hw_features(&b, &res);
+        assert!(fa.iter().all(|x| x.is_finite()));
+        assert_ne!(fa, fb);
+        // mesh ratio features match Fig. 13 semantics
+        assert_eq!(fa[2], (14.0f64).log2());
+    }
+
+    #[test]
+    fn sw_features_finite_for_random_valid_mappings() {
+        let sp = SwSpace::new(
+            layer_by_name("DQN-K2").unwrap(),
+            eyeriss_hw(168),
+            eyeriss_resources(168),
+        );
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..20 {
+            let (m, _) = sp.sample_valid(&mut rng, 1_000_000).unwrap();
+            let f = sw_features(&sp, &m);
+            assert!(f.iter().all(|x| x.is_finite()), "{f:?}");
+            // usage ratios of a *valid* mapping are in (0, 1]
+            assert!(f[0] > 0.0 && f[0] <= 1.0);
+            assert!(f[3] > 0.0 && f[3] <= 1.0);
+            assert!(f[4] > 0.0 && f[4] <= 1.0);
+        }
+    }
+
+    #[test]
+    fn revisit_feature_reflects_order() {
+        let sp = SwSpace::new(
+            layer_by_name("ResNet-K2").unwrap(),
+            eyeriss_hw(168),
+            eyeriss_resources(168),
+        );
+        let l = &sp.layer;
+        let mut m = crate::model::mapping::Mapping::trivial(l);
+        // order with C innermost at DRAM: no revisit
+        m.order_dram = [Dim::P, Dim::Q, Dim::K, Dim::R, Dim::S, Dim::C];
+        let f_good = sw_features(&sp, &m);
+        // C outermost: heavy revisit
+        m.order_dram = [Dim::C, Dim::R, Dim::S, Dim::P, Dim::Q, Dim::K];
+        let f_bad = sw_features(&sp, &m);
+        assert!(f_bad[11] > f_good[11]);
+    }
+
+    #[test]
+    fn feature_dim_is_stable() {
+        // The AOT artifacts are compiled against this dimensionality.
+        assert_eq!(FEATURE_DIM, 16);
+        assert_eq!(hw_feature_names().len(), FEATURE_DIM);
+        assert_eq!(sw_feature_names().len(), FEATURE_DIM);
+    }
+}

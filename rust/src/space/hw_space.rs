@@ -1,0 +1,201 @@
+//! Hardware design-space sampling (H1-H12, paper Fig. 6) under the known
+//! input constraints of Fig. 7. The sampler draws uniformly over the
+//! parameterization and rejects violations; `sample_valid` retries until a
+//! configuration passes all *known* constraints (the unknown mapping-
+//! existence constraint is discovered later by the software search).
+
+use crate::model::arch::{DataflowOpt, HwConfig, Resources};
+use crate::space::factors::{divisors, factor_pairs};
+use crate::util::rng::Rng;
+
+/// The hardware design space for a fixed resource budget.
+#[derive(Clone, Debug)]
+pub struct HwSpace {
+    pub resources: Resources,
+}
+
+impl HwSpace {
+    pub fn new(resources: Resources) -> Self {
+        HwSpace { resources }
+    }
+
+    /// One raw sample (uniform over the parameterization). May violate the
+    /// known constraints; callers normally use `sample_valid`.
+    pub fn sample_raw(&self, rng: &mut Rng) -> HwConfig {
+        let res = &self.resources;
+        // H1/H2: PE mesh.
+        let pairs = factor_pairs(res.num_pes);
+        let &(pe_mesh_x, pe_mesh_y) = rng.choose(&pairs);
+
+        // H3-H5: local buffer partition. Sample two cut points over the
+        // budget (uniform over compositions), so the partition sums exactly
+        // to the budget with occasional zero parts exercising the
+        // constraint checker, matching the paper's "0 to #entries" ranges.
+        let total = res.local_buffer_entries;
+        let a = rng.below(total as usize + 1) as u64;
+        let b = rng.below(total as usize + 1) as u64;
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let (lb_inputs, lb_weights, lb_outputs) = (lo, hi - lo, total - hi);
+
+        // H6-H8: global buffer arrangement. Mesh must divide the PE mesh.
+        let gb_mesh_x = *rng.choose(&divisors(pe_mesh_x));
+        let gb_mesh_y = *rng.choose(&divisors(pe_mesh_y));
+        let gb_instances = gb_mesh_x * gb_mesh_y;
+
+        // H9/H10: entry geometry, factors of 16.
+        let geo = [1u64, 2, 4, 8, 16];
+        let gb_block = *rng.choose(&geo);
+        let gb_cluster = *rng.choose(&geo);
+
+        // H11/H12: dataflow options.
+        let df = |rng: &mut Rng| {
+            if rng.chance(0.5) {
+                DataflowOpt::FullAtPe
+            } else {
+                DataflowOpt::Streamed
+            }
+        };
+
+        HwConfig {
+            pe_mesh_x,
+            pe_mesh_y,
+            lb_inputs,
+            lb_weights,
+            lb_outputs,
+            gb_instances,
+            gb_mesh_x,
+            gb_mesh_y,
+            gb_block,
+            gb_cluster,
+            df_filter_w: df(rng),
+            df_filter_h: df(rng),
+        }
+    }
+
+    /// Rejection-sample until the known constraints pass. Returns the config
+    /// and the number of raw draws it took (used to report the feasibility
+    /// ratio, cf. the paper's ~90% invalid observation).
+    pub fn sample_valid(&self, rng: &mut Rng) -> (HwConfig, u64) {
+        let mut draws = 0;
+        loop {
+            draws += 1;
+            let cfg = self.sample_raw(rng);
+            if cfg.check(&self.resources).is_ok() {
+                return (cfg, draws);
+            }
+        }
+    }
+
+    /// Mutate one parameter group of a config (used by the relax-and-round
+    /// BO baseline and by local-refinement moves).
+    pub fn perturb(&self, rng: &mut Rng, base: &HwConfig) -> HwConfig {
+        let mut cfg = base.clone();
+        match rng.below(5) {
+            0 => {
+                let pairs = factor_pairs(self.resources.num_pes);
+                let &(x, y) = rng.choose(&pairs);
+                cfg.pe_mesh_x = x;
+                cfg.pe_mesh_y = y;
+                // keep GLB mesh consistent if possible
+                if cfg.pe_mesh_x % cfg.gb_mesh_x != 0 || cfg.pe_mesh_y % cfg.gb_mesh_y != 0 {
+                    cfg.gb_mesh_x = 1;
+                    cfg.gb_mesh_y = 1;
+                    cfg.gb_instances = 1;
+                }
+            }
+            1 => {
+                let total = self.resources.local_buffer_entries;
+                let a = rng.below(total as usize + 1) as u64;
+                let b = rng.below(total as usize + 1) as u64;
+                let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+                cfg.lb_inputs = lo;
+                cfg.lb_weights = hi - lo;
+                cfg.lb_outputs = total - hi;
+            }
+            2 => {
+                cfg.gb_mesh_x = *rng.choose(&divisors(cfg.pe_mesh_x));
+                cfg.gb_mesh_y = *rng.choose(&divisors(cfg.pe_mesh_y));
+                cfg.gb_instances = cfg.gb_mesh_x * cfg.gb_mesh_y;
+            }
+            3 => {
+                let geo = [1u64, 2, 4, 8, 16];
+                cfg.gb_block = *rng.choose(&geo);
+                cfg.gb_cluster = *rng.choose(&geo);
+            }
+            _ => {
+                if rng.chance(0.5) {
+                    cfg.df_filter_w = flip(cfg.df_filter_w);
+                } else {
+                    cfg.df_filter_h = flip(cfg.df_filter_h);
+                }
+            }
+        }
+        cfg
+    }
+}
+
+fn flip(d: DataflowOpt) -> DataflowOpt {
+    match d {
+        DataflowOpt::FullAtPe => DataflowOpt::Streamed,
+        DataflowOpt::Streamed => DataflowOpt::FullAtPe,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_samples_pass_known_constraints() {
+        let space = HwSpace::new(Resources::eyeriss_168());
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..200 {
+            let (cfg, _) = space.sample_valid(&mut rng);
+            assert_eq!(cfg.check(&space.resources), Ok(()));
+        }
+    }
+
+    #[test]
+    fn sampler_explores_distinct_meshes() {
+        let space = HwSpace::new(Resources::eyeriss_168());
+        let mut rng = Rng::seed_from_u64(2);
+        let mut meshes = std::collections::HashSet::new();
+        for _ in 0..300 {
+            let (cfg, _) = space.sample_valid(&mut rng);
+            meshes.insert((cfg.pe_mesh_x, cfg.pe_mesh_y));
+        }
+        assert!(meshes.len() >= 8, "expected mesh diversity, got {}", meshes.len());
+    }
+
+    #[test]
+    fn rejection_rate_is_nontrivial() {
+        // Zero-capacity sub-buffers and misaligned meshes should make a
+        // noticeable fraction of raw draws invalid.
+        let space = HwSpace::new(Resources::eyeriss_168());
+        let mut rng = Rng::seed_from_u64(3);
+        let mut draws = 0;
+        for _ in 0..100 {
+            let (_, d) = space.sample_valid(&mut rng);
+            draws += d;
+        }
+        assert!(draws > 100, "some raw draws should be rejected (got {draws})");
+    }
+
+    #[test]
+    fn perturb_changes_something_and_stays_in_parameterization() {
+        let space = HwSpace::new(Resources::eyeriss_168());
+        let mut rng = Rng::seed_from_u64(4);
+        let (base, _) = space.sample_valid(&mut rng);
+        let mut changed = 0;
+        for _ in 0..50 {
+            let p = space.perturb(&mut rng, &base);
+            if p != base {
+                changed += 1;
+            }
+            // perturbed configs may violate budget sums but never geometry
+            assert_eq!(p.pe_mesh_x * p.pe_mesh_y, 168);
+            assert_eq!(p.gb_mesh_x * p.gb_mesh_y, p.gb_instances);
+        }
+        assert!(changed > 30);
+    }
+}

@@ -1,0 +1,12 @@
+//! Design-space parameterization: factorization utilities, the hardware
+//! (H1-H12) and software (S1-S9) samplers with their constraint filters, and
+//! the Fig. 13 feature transforms feeding the BO surrogates.
+
+pub mod factors;
+pub mod features;
+pub mod hw_space;
+pub mod sw_space;
+
+pub use features::{hw_features, sw_features, FEATURE_DIM};
+pub use hw_space::HwSpace;
+pub use sw_space::SwSpace;

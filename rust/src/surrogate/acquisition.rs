@@ -1,0 +1,125 @@
+//! Acquisition functions (paper §3.3): expected improvement and lower
+//! confidence bound, phrased for a *minimization* objective (EDP), plus the
+//! constraint weighting of §3.4 (`a(x) * P(C(x))`).
+//!
+//! All functions return a *utility* (higher is better) so the optimizers can
+//! uniformly take the argmax over the candidate pool.
+
+use crate::util::stats::{norm_cdf, norm_pdf};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Acquisition {
+    /// Expected improvement over the incumbent best (minimum) observation.
+    Ei,
+    /// Lower confidence bound with exploration weight lambda (paper uses
+    /// lambda = 1 in the main experiments, swept in Fig. 5c / Fig. 18).
+    Lcb(f64),
+}
+
+impl Acquisition {
+    /// Utility of a candidate with posterior (mu, var), given the best
+    /// objective value observed so far (minimum).
+    pub fn utility(self, mu: f64, var: f64, best: f64) -> f64 {
+        let sigma = var.max(1e-18).sqrt();
+        match self {
+            Acquisition::Ei => {
+                // E[max(best - f, 0)] for minimization.
+                let z = (best - mu) / sigma;
+                (best - mu) * norm_cdf(z) + sigma * norm_pdf(z)
+            }
+            Acquisition::Lcb(lambda) => {
+                // Minimize mu - lambda*sigma <=> maximize -(mu - lambda*sigma).
+                -(mu - lambda * sigma)
+            }
+        }
+    }
+
+    /// Constrained utility (§3.4): scale by the probability the candidate is
+    /// feasible; zero utility if infeasible.
+    pub fn constrained_utility(self, mu: f64, var: f64, best: f64, p_feasible: f64) -> f64 {
+        // For LCB the utility can be negative; shift-by-feasibility instead
+        // of multiply would distort EI, so follow the paper (multiply) but
+        // map LCB utility through a monotone positive transform first.
+        let u = self.utility(mu, var, best);
+        match self {
+            Acquisition::Ei => u * p_feasible,
+            Acquisition::Lcb(_) => {
+                // softplus keeps ordering while staying positive
+                let pos = if u > 30.0 { u } else { (1.0 + u.exp()).ln() };
+                pos * p_feasible
+            }
+        }
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            Acquisition::Ei => "ei".to_string(),
+            Acquisition::Lcb(l) => format!("lcb{l}"),
+        }
+    }
+}
+
+/// Feasibility probability from a classifier GP trained on +/-1 labels:
+/// the probit link P(C) = Phi(mu / sqrt(1 + var)).
+pub fn feasibility_probability(mu: f64, var: f64) -> f64 {
+    norm_cdf(mu / (1.0 + var.max(0.0)).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ei_zero_when_certain_and_worse() {
+        let u = Acquisition::Ei.utility(10.0, 1e-18, 0.0);
+        assert!(u.abs() < 1e-9);
+    }
+
+    #[test]
+    fn ei_positive_when_better() {
+        let u = Acquisition::Ei.utility(-1.0, 0.01, 0.0);
+        assert!((u - 1.0).abs() < 0.01, "near-certain improvement of 1: {u}");
+    }
+
+    #[test]
+    fn ei_grows_with_variance_at_equal_mean() {
+        let low = Acquisition::Ei.utility(0.0, 0.01, 0.0);
+        let high = Acquisition::Ei.utility(0.0, 1.0, 0.0);
+        assert!(high > low);
+    }
+
+    #[test]
+    fn lcb_trades_mean_and_variance() {
+        let a = Acquisition::Lcb(1.0);
+        // same mean, more variance -> more utility (exploration)
+        assert!(a.utility(1.0, 4.0, 0.0) > a.utility(1.0, 0.01, 0.0));
+        // same variance, lower mean -> more utility (exploitation)
+        assert!(a.utility(0.0, 1.0, 0.0) > a.utility(2.0, 1.0, 0.0));
+        // lambda = 0 is pure exploitation
+        let greedy = Acquisition::Lcb(0.0);
+        assert_eq!(greedy.utility(1.0, 4.0, 0.0), greedy.utility(1.0, 0.01, 0.0));
+    }
+
+    #[test]
+    fn constraint_weighting_downscales() {
+        let a = Acquisition::Ei;
+        let full = a.constrained_utility(-1.0, 0.01, 0.0, 1.0);
+        let half = a.constrained_utility(-1.0, 0.01, 0.0, 0.5);
+        assert!((half - full / 2.0).abs() < 1e-12);
+        let lcb = Acquisition::Lcb(1.0);
+        assert!(lcb.constrained_utility(-1.0, 0.1, 0.0, 0.9) > 0.0);
+        assert!(
+            lcb.constrained_utility(-1.0, 0.1, 0.0, 0.1)
+                < lcb.constrained_utility(-1.0, 0.1, 0.0, 0.9)
+        );
+    }
+
+    #[test]
+    fn probit_feasibility() {
+        assert!((feasibility_probability(0.0, 1.0) - 0.5).abs() < 1e-9);
+        assert!(feasibility_probability(3.0, 0.1) > 0.99);
+        assert!(feasibility_probability(-3.0, 0.1) < 0.01);
+        // more variance pulls towards 0.5
+        assert!(feasibility_probability(1.0, 10.0) < feasibility_probability(1.0, 0.1));
+    }
+}

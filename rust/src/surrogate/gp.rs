@@ -1,0 +1,323 @@
+//! The GP surrogate used by the BO optimizers: a thin policy layer over the
+//! AOT-compiled JAX/Pallas GP (via `runtime::GpHandle`) or the pure-Rust
+//! reference implementation, with marginal-likelihood hyperparameter fitting
+//! (paper §3.2: "all kernel and mean hyperparameters are learned by
+//! maximizing the marginal likelihood").
+//!
+//! Kernel families follow the paper: the software GP uses a linear kernel on
+//! the Fig. 13 features with no noise term (§4.3), the hardware GP adds a
+//! noise kernel (§4.2), and the constraint classifier uses a squared
+//! exponential. The constant mean is handled by standardizing y.
+
+use anyhow::Result;
+
+use crate::runtime::gp_exec::{Posterior, Theta};
+use crate::runtime::server::GpHandle;
+use crate::surrogate::gp_native::NativeGp;
+use crate::util::rng::Rng;
+use crate::util::stats::standardize;
+
+/// Which kernel structure to fit (paper §4.2 / §4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelFamily {
+    /// Linear kernel on explicit features; optional noise term.
+    Linear { noise: bool },
+    /// Squared-exponential kernel (constraint classifier).
+    SquaredExp,
+}
+
+/// Execution backend for the GP math.
+#[derive(Clone)]
+pub enum GpBackend {
+    /// AOT-compiled JAX/Pallas artifacts executed via PJRT (the production
+    /// path; requires `make artifacts`).
+    Aot(GpHandle),
+    /// Pure-Rust reference (tests / artifact-free runs).
+    Native,
+}
+
+impl std::fmt::Debug for GpBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GpBackend::Aot(_) => write!(f, "Aot"),
+            GpBackend::Native => write!(f, "Native"),
+        }
+    }
+}
+
+/// A (re)fittable GP surrogate.
+pub struct GpSurrogate {
+    pub backend: GpBackend,
+    pub family: KernelFamily,
+    /// If false, y is used raw (the ±1 constraint classifier).
+    pub standardize_y: bool,
+    theta: Theta,
+    x: Vec<Vec<f64>>,
+    y_std_vec: Vec<f64>,
+    y_mean: f64,
+    y_scale: f64,
+    native: Option<NativeGp>,
+}
+
+impl GpSurrogate {
+    pub fn new(backend: GpBackend, family: KernelFamily) -> Self {
+        let theta = match family {
+            KernelFamily::Linear { noise: false } => Theta::linear_default(),
+            KernelFamily::Linear { noise: true } => Theta::hw_default(),
+            KernelFamily::SquaredExp => Theta::constraint_default(),
+        };
+        GpSurrogate {
+            backend,
+            family,
+            standardize_y: true,
+            theta,
+            x: Vec::new(),
+            y_std_vec: Vec::new(),
+            y_mean: 0.0,
+            y_scale: 1.0,
+            native: None,
+        }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn theta(&self) -> Theta {
+        self.theta
+    }
+
+    /// Candidate hyperparameter settings for the family (the marginal-
+    /// likelihood search grid; randomized log-uniform plus the default).
+    fn theta_candidates(&self, rng: &mut Rng, count: usize) -> Vec<Theta> {
+        let mut cands = vec![self.theta];
+        while cands.len() < count {
+            let logu =
+                |rng: &mut Rng, lo: f64, hi: f64| (rng.range_f64(lo.ln(), hi.ln())).exp();
+            let t = match self.family {
+                KernelFamily::Linear { noise } => Theta {
+                    w_lin: logu(rng, 0.01, 10.0),
+                    w_se: 0.0,
+                    ell2: 1.0,
+                    tau2: if noise { logu(rng, 1e-4, 1.0) } else { 0.0 },
+                    jitter: 1e-4,
+                },
+                KernelFamily::SquaredExp => Theta {
+                    w_lin: 0.0,
+                    w_se: logu(rng, 0.05, 5.0),
+                    ell2: logu(rng, 0.1, 50.0),
+                    tau2: logu(rng, 1e-3, 0.5),
+                    jitter: 1e-4,
+                },
+            };
+            cands.push(t);
+        }
+        cands
+    }
+
+    fn x_f32(&self) -> Vec<f32> {
+        self.x.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect()
+    }
+
+    fn y_f32(&self) -> Vec<f32> {
+        self.y_std_vec.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Fit on the dataset: standardize targets, then pick the theta with the
+    /// best marginal likelihood among `n_theta` candidates.
+    pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64], rng: &mut Rng) -> Result<()> {
+        assert_eq!(x.len(), y.len());
+        self.x = x.to_vec();
+        if self.standardize_y {
+            let (ys, m, s) = standardize(y);
+            self.y_std_vec = ys;
+            self.y_mean = m;
+            self.y_scale = s;
+        } else {
+            self.y_std_vec = y.to_vec();
+            self.y_mean = 0.0;
+            self.y_scale = 1.0;
+        }
+        if self.x.len() < 2 {
+            self.native = None;
+            return Ok(());
+        }
+
+        let n_theta = 24.min(crate::runtime::artifacts::NLL_BATCH);
+        let cands = self.theta_candidates(rng, n_theta);
+        let nlls: Vec<f64> = match &self.backend {
+            GpBackend::Aot(handle) => {
+                handle.nll_batch(self.x_f32(), self.y_f32(), cands.clone())?
+            }
+            GpBackend::Native => cands
+                .iter()
+                .map(|&t| {
+                    NativeGp::fit(t, &self.x, &self.y_std_vec)
+                        .map(|gp| gp.nll(&self.y_std_vec))
+                        .unwrap_or(f64::INFINITY)
+                })
+                .collect(),
+        };
+        let best = crate::util::stats::argmin(&nlls).unwrap_or(0);
+        self.theta = cands[best];
+
+        // Keep a native fit around for the Native backend's predictions.
+        self.native = match self.backend {
+            GpBackend::Native => NativeGp::fit(self.theta, &self.x, &self.y_std_vec),
+            GpBackend::Aot(_) => None,
+        };
+        Ok(())
+    }
+
+    /// Refresh the training data (and target standardization) without
+    /// re-searching hyperparameters — the cheap per-trial update between
+    /// scheduled marginal-likelihood refits.
+    pub fn fit_data_only(&mut self, x: &[Vec<f64>], y: &[f64]) -> Result<()> {
+        assert_eq!(x.len(), y.len());
+        self.x = x.to_vec();
+        if self.standardize_y {
+            let (ys, m, s) = standardize(y);
+            self.y_std_vec = ys;
+            self.y_mean = m;
+            self.y_scale = s;
+        } else {
+            self.y_std_vec = y.to_vec();
+        }
+        self.native = match self.backend {
+            GpBackend::Native if self.x.len() >= 2 => {
+                NativeGp::fit(self.theta, &self.x, &self.y_std_vec)
+            }
+            _ => None,
+        };
+        Ok(())
+    }
+
+    /// Posterior over candidates, in the *original* y units.
+    pub fn predict(&self, cand: &[Vec<f64>]) -> Result<Posterior> {
+        if self.x.len() < 2 {
+            // Prior: standardized mean 0, prior variance from the kernel.
+            let mean = vec![self.y_mean; cand.len()];
+            let var = cand
+                .iter()
+                .map(|c| {
+                    let prior = self.theta.w_lin * c.iter().map(|v| v * v).sum::<f64>()
+                        + self.theta.w_se;
+                    prior.max(1e-6) * self.y_scale * self.y_scale
+                })
+                .collect();
+            return Ok(Posterior { mean, var });
+        }
+        let post = match &self.backend {
+            GpBackend::Aot(handle) => {
+                let cflat: Vec<f32> =
+                    cand.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect();
+                handle.posterior(self.x_f32(), self.y_f32(), self.theta, cflat)?
+            }
+            GpBackend::Native => {
+                let gp = self
+                    .native
+                    .as_ref()
+                    .expect("fit() stores a native model for the Native backend");
+                gp.posterior(cand)
+            }
+        };
+        Ok(Posterior {
+            mean: post.mean.iter().map(|m| m * self.y_scale + self.y_mean).collect(),
+            var: post.var.iter().map(|v| v * self.y_scale * self.y_scale).collect(),
+        })
+    }
+
+    /// Best (lowest, in original units) observed target so far — the
+    /// incumbent for EI.
+    pub fn best_observed(&self) -> f64 {
+        self.y_std_vec
+            .iter()
+            .map(|v| v * self.y_scale + self.y_mean)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear_data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let w: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.normal() * 0.5).collect()).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|xi| 100.0 + 5.0 * xi.iter().zip(w.iter()).map(|(a, b)| a * b).sum::<f64>())
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn native_fit_predict_roundtrip_in_original_units() {
+        let mut rng = Rng::seed_from_u64(1);
+        let (x, y) = linear_data(&mut rng, 40, 8);
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: false });
+        gp.fit(&x, &y, &mut rng).unwrap();
+        let post = gp.predict(&x).unwrap();
+        // A linear kernel has no bias feature, so a small constant offset
+        // (the gap between mean(y) and the true intercept) survives; demand
+        // residuals well under the target's spread rather than exactness.
+        let spread = crate::util::stats::std_dev(&y);
+        for (m, yi) in post.mean.iter().zip(y.iter()) {
+            assert!((m - yi).abs() < 0.5 * spread, "{m} vs {yi} (spread {spread})");
+        }
+        assert!((gp.best_observed() - y.iter().cloned().fold(f64::INFINITY, f64::min)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prior_prediction_before_data() {
+        let gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: false });
+        let post = gp.predict(&[vec![0.5; 8]]).unwrap();
+        assert_eq!(post.mean.len(), 1);
+        assert!(post.var[0] > 0.0);
+    }
+
+    #[test]
+    fn hyperparameter_fit_prefers_noise_for_noisy_data() {
+        let mut rng = Rng::seed_from_u64(2);
+        let (x, mut y) = linear_data(&mut rng, 60, 8);
+        for v in y.iter_mut() {
+            *v += rng.normal() * 3.0;
+        }
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: true });
+        gp.fit(&x, &y, &mut rng).unwrap();
+        assert!(gp.theta().tau2 > 1e-4, "fitted tau2 {}", gp.theta().tau2);
+    }
+
+    #[test]
+    fn se_family_fits_smooth_nonlinear_target() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x: Vec<Vec<f64>> =
+            (0..50).map(|i| vec![i as f64 / 10.0 - 2.5, 0.0]).collect();
+        let y: Vec<f64> = x.iter().map(|v| (2.0 * v[0]).sin()).collect();
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::SquaredExp);
+        gp.fit(&x, &y, &mut rng).unwrap();
+        let post = gp.predict(&x).unwrap();
+        let mse: f64 = post
+            .mean
+            .iter()
+            .zip(y.iter())
+            .map(|(m, v)| (m - v).powi(2))
+            .sum::<f64>()
+            / y.len() as f64;
+        assert!(mse < 0.05, "mse {mse}");
+    }
+
+    #[test]
+    fn classifier_mode_keeps_labels_raw() {
+        let mut rng = Rng::seed_from_u64(4);
+        let x: Vec<Vec<f64>> = (0..30).map(|i| vec![i as f64 / 10.0]).collect();
+        let y: Vec<f64> = (0..30).map(|i| if i < 15 { 1.0 } else { -1.0 }).collect();
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::SquaredExp);
+        gp.standardize_y = false;
+        gp.fit(&x, &y, &mut rng).unwrap();
+        let post = gp.predict(&[vec![0.1], vec![2.8]]).unwrap();
+        assert!(post.mean[0] > 0.3, "feasible side: {}", post.mean[0]);
+        assert!(post.mean[1] < -0.3, "infeasible side: {}", post.mean[1]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Minimal dense linear algebra (f64) for the native reference GP: Cholesky
+//! factorization and triangular solves. Row-major `Vec<f64>` matrices; sizes
+//! here are <= a few hundred, so simplicity beats blocking.
+
+/// Row-major square matrix view helpers.
+#[inline]
+fn at(a: &[f64], n: usize, i: usize, j: usize) -> f64 {
+    a[i * n + j]
+}
+
+/// In-place lower Cholesky of SPD matrix a (n x n). Returns Err(i) if a
+/// non-positive pivot is hit at row i (matrix not SPD enough).
+pub fn cholesky(a: &mut [f64], n: usize) -> Result<(), usize> {
+    debug_assert_eq!(a.len(), n * n);
+    for j in 0..n {
+        let mut d = at(a, n, j, j);
+        for k in 0..j {
+            let l = at(a, n, j, k);
+            d -= l * l;
+        }
+        if d <= 0.0 {
+            return Err(j);
+        }
+        let d = d.sqrt();
+        a[j * n + j] = d;
+        for i in (j + 1)..n {
+            let mut s = at(a, n, i, j);
+            for k in 0..j {
+                s -= at(a, n, i, k) * at(a, n, j, k);
+            }
+            a[i * n + j] = s / d;
+        }
+        // zero the upper triangle so the result is a clean L
+        for k in (j + 1)..n {
+            a[j * n + k] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Solve L x = b (forward substitution), L lower-triangular row-major.
+pub fn solve_lower(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= at(l, n, i, k) * x[k];
+        }
+        x[i] = s / at(l, n, i, i);
+    }
+    x
+}
+
+/// Solve L^T x = b (backward substitution).
+pub fn solve_lower_t(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..n {
+            s -= at(l, n, k, i) * x[k];
+        }
+        x[i] = s / at(l, n, i, i);
+    }
+    x
+}
+
+/// log-determinant of SPD matrix from its Cholesky factor.
+pub fn logdet_from_chol(l: &[f64], n: usize) -> f64 {
+    (0..n).map(|i| at(l, n, i, i).ln()).sum::<f64>() * 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Vec<f64> {
+        let mut b = vec![0.0; n * n];
+        for v in b.iter_mut() {
+            *v = rng.normal();
+        }
+        // a = b b^T + n I
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::seed_from_u64(1);
+        for n in [1usize, 2, 5, 16, 40] {
+            let a = random_spd(&mut rng, n);
+            let mut l = a.clone();
+            cholesky(&mut l, n).unwrap();
+            // check L L^T == a
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..=i.min(j) {
+                        s += l[i * n + k] * l[j * n + k];
+                    }
+                    assert!(
+                        (s - a[i * n + j]).abs() < 1e-8 * (n as f64),
+                        "n={n} ({i},{j}): {s} vs {}",
+                        a[i * n + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // indefinite
+        assert!(cholesky(&mut a, 2).is_err());
+    }
+
+    #[test]
+    fn triangular_solves_invert() {
+        let mut rng = Rng::seed_from_u64(2);
+        let n = 24;
+        let a = random_spd(&mut rng, n);
+        let mut l = a.clone();
+        cholesky(&mut l, n).unwrap();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        // solve a x = b via two triangular solves, then check residual
+        let z = solve_lower(&l, n, &b);
+        let x = solve_lower_t(&l, n, &z);
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += a[i * n + j] * x[j];
+            }
+            assert!((s - b[i]).abs() < 1e-8, "row {i}: {s} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn logdet_matches_direct_for_diagonal() {
+        let n = 5;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = (i + 2) as f64;
+        }
+        let mut l = a.clone();
+        cholesky(&mut l, n).unwrap();
+        let want: f64 = (0..n).map(|i| ((i + 2) as f64).ln()).sum();
+        assert!((logdet_from_chol(&l, n) - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,298 @@
+//! Small MLP cost model: the stand-in for TVM's TreeGRU ranker (Chen et al.
+//! 2018) in the Fig. 3 / Fig. 16 baselines. A TreeGRU embeds the loop-nest
+//! AST; our mapping features are already a fixed-width relational summary of
+//! that nest, so a two-hidden-layer regressor trained with Adam captures the
+//! baseline's character (learned neural cost model + cheap proposal search).
+//! DESIGN.md §3 records this substitution.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MlpConfig {
+    pub hidden: usize,
+    pub epochs: usize,
+    pub lr: f64,
+    pub batch: usize,
+}
+
+impl Default for MlpConfig {
+    fn default() -> Self {
+        MlpConfig { hidden: 32, epochs: 200, lr: 0.01, batch: 16 }
+    }
+}
+
+/// input -> tanh(hidden) -> tanh(hidden) -> linear(1)
+pub struct Mlp {
+    d_in: usize,
+    h: usize,
+    w1: Vec<f64>,
+    b1: Vec<f64>,
+    w2: Vec<f64>,
+    b2: Vec<f64>,
+    w3: Vec<f64>,
+    b3: f64,
+    // target normalization
+    y_mean: f64,
+    y_std: f64,
+}
+
+struct Adam {
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+}
+
+impl Adam {
+    fn new(n: usize) -> Self {
+        Adam { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    fn step(&mut self, params: &mut [f64], grads: &[f64], lr: f64) {
+        self.t += 1;
+        let (b1, b2, eps): (f64, f64, f64) = (0.9, 0.999, 1e-8);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * grads[i];
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * grads[i] * grads[i];
+            params[i] -= lr * (self.m[i] / bc1) / ((self.v[i] / bc2).sqrt() + eps);
+        }
+    }
+}
+
+impl Mlp {
+    pub fn fit(cfg: MlpConfig, x: &[Vec<f64>], y: &[f64], rng: &mut Rng) -> Mlp {
+        assert!(!x.is_empty());
+        let d_in = x[0].len();
+        let h = cfg.hidden;
+        let y_mean = y.iter().sum::<f64>() / y.len() as f64;
+        let y_std = (y.iter().map(|v| (v - y_mean).powi(2)).sum::<f64>() / y.len() as f64)
+            .sqrt()
+            .max(1e-9);
+        let yn: Vec<f64> = y.iter().map(|v| (v - y_mean) / y_std).collect();
+
+        let xavier = |rng: &mut Rng, fan_in: usize| rng.normal() / (fan_in as f64).sqrt();
+        let mut net = Mlp {
+            d_in,
+            h,
+            w1: (0..h * d_in).map(|_| xavier(rng, d_in)).collect(),
+            b1: vec![0.0; h],
+            w2: (0..h * h).map(|_| xavier(rng, h)).collect(),
+            b2: vec![0.0; h],
+            w3: (0..h).map(|_| xavier(rng, h)).collect(),
+            b3: 0.0,
+            y_mean,
+            y_std,
+        };
+
+        let np = net.n_params();
+        let mut adam = Adam::new(np);
+        let n = x.len();
+        for _ in 0..cfg.epochs {
+            let order = rng.sample_indices(n, n);
+            for chunk in order.chunks(cfg.batch) {
+                let mut grads = vec![0.0; np];
+                for &i in chunk {
+                    net.accumulate_grad(&x[i], yn[i], &mut grads);
+                }
+                let scale = 1.0 / chunk.len() as f64;
+                for g in grads.iter_mut() {
+                    *g *= scale;
+                }
+                let mut params = net.params();
+                adam.step(&mut params, &grads, cfg.lr);
+                net.set_params(&params);
+            }
+        }
+        net
+    }
+
+    fn n_params(&self) -> usize {
+        self.h * self.d_in + self.h + self.h * self.h + self.h + self.h + 1
+    }
+
+    fn params(&self) -> Vec<f64> {
+        let mut p = Vec::with_capacity(self.n_params());
+        p.extend(&self.w1);
+        p.extend(&self.b1);
+        p.extend(&self.w2);
+        p.extend(&self.b2);
+        p.extend(&self.w3);
+        p.push(self.b3);
+        p
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        let mut at = 0;
+        let mut take = |n: usize| {
+            let s = &p[at..at + n];
+            at += n;
+            s.to_vec()
+        };
+        self.w1 = take(self.h * self.d_in);
+        self.b1 = take(self.h);
+        self.w2 = take(self.h * self.h);
+        self.b2 = take(self.h);
+        self.w3 = take(self.h);
+        self.b3 = take(1)[0];
+    }
+
+    fn forward(&self, x: &[f64]) -> (Vec<f64>, Vec<f64>, f64) {
+        let h = self.h;
+        let mut a1 = vec![0.0; h];
+        for i in 0..h {
+            let mut s = self.b1[i];
+            for j in 0..self.d_in {
+                s += self.w1[i * self.d_in + j] * x[j];
+            }
+            a1[i] = s.tanh();
+        }
+        let mut a2 = vec![0.0; h];
+        for i in 0..h {
+            let mut s = self.b2[i];
+            for j in 0..h {
+                s += self.w2[i * h + j] * a1[j];
+            }
+            a2[i] = s.tanh();
+        }
+        let mut out = self.b3;
+        for i in 0..h {
+            out += self.w3[i] * a2[i];
+        }
+        (a1, a2, out)
+    }
+
+    /// Accumulate d(0.5*(out-y)^2)/dparams into `grads` (same layout as
+    /// `params()`).
+    fn accumulate_grad(&self, x: &[f64], y: f64, grads: &mut [f64]) {
+        let h = self.h;
+        let (a1, a2, out) = self.forward(x);
+        let dout = out - y;
+        let off_w1 = 0;
+        let off_b1 = h * self.d_in;
+        let off_w2 = off_b1 + h;
+        let off_b2 = off_w2 + h * h;
+        let off_w3 = off_b2 + h;
+        let off_b3 = off_w3 + h;
+
+        // layer 3
+        let mut da2 = vec![0.0; h];
+        for i in 0..h {
+            grads[off_w3 + i] += dout * a2[i];
+            da2[i] = dout * self.w3[i];
+        }
+        grads[off_b3] += dout;
+        // layer 2
+        let mut da1 = vec![0.0; h];
+        for i in 0..h {
+            let dz = da2[i] * (1.0 - a2[i] * a2[i]);
+            grads[off_b2 + i] += dz;
+            for j in 0..h {
+                grads[off_w2 + i * h + j] += dz * a1[j];
+                da1[j] += dz * self.w2[i * h + j];
+            }
+        }
+        // layer 1
+        for i in 0..h {
+            let dz = da1[i] * (1.0 - a1[i] * a1[i]);
+            grads[off_b1 + i] += dz;
+            for j in 0..self.d_in {
+                grads[off_w1 + i * self.d_in + j] += dz * x[j];
+            }
+        }
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let (_, _, out) = self.forward(x);
+        out * self.y_std + self.y_mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learns_linear_function() {
+        let mut rng = Rng::seed_from_u64(1);
+        let x: Vec<Vec<f64>> = (0..150)
+            .map(|_| (0..4).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
+        let y: Vec<f64> = x.iter().map(|v| 2.0 * v[0] - v[1] + 0.5 * v[2]).collect();
+        let mlp = Mlp::fit(MlpConfig::default(), &x, &y, &mut rng);
+        let mse: f64 = x
+            .iter()
+            .zip(y.iter())
+            .map(|(xi, yi)| (mlp.predict(xi) - yi).powi(2))
+            .sum::<f64>()
+            / y.len() as f64;
+        assert!(mse < 0.05, "mse {mse}");
+    }
+
+    #[test]
+    fn learns_mild_nonlinearity() {
+        let mut rng = Rng::seed_from_u64(2);
+        let x: Vec<Vec<f64>> = (0..200)
+            .map(|_| (0..2).map(|_| rng.range_f64(-1.5, 1.5)).collect())
+            .collect();
+        let y: Vec<f64> = x.iter().map(|v| v[0] * v[1]).collect();
+        let cfg = MlpConfig { epochs: 400, ..Default::default() };
+        let mlp = Mlp::fit(cfg, &x, &y, &mut rng);
+        let mse: f64 = x
+            .iter()
+            .zip(y.iter())
+            .map(|(xi, yi)| (mlp.predict(xi) - yi).powi(2))
+            .sum::<f64>()
+            / y.len() as f64;
+        assert!(mse < 0.15, "mse {mse}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x = vec![0.3, -0.7, 0.5];
+        let y = 0.9;
+        let net = Mlp::fit(
+            MlpConfig { epochs: 1, hidden: 5, ..Default::default() },
+            &[x.clone()],
+            &[y],
+            &mut rng,
+        );
+        let mut grads = vec![0.0; net.n_params()];
+        // recompute against normalized target space
+        let yn = (y - net.y_mean) / net.y_std;
+        net.accumulate_grad(&x, yn, &mut grads);
+        let params = net.params();
+        let eps = 1e-6;
+        let loss = |p: &[f64]| {
+            let mut m = Mlp {
+                d_in: net.d_in,
+                h: net.h,
+                w1: vec![],
+                b1: vec![],
+                w2: vec![],
+                b2: vec![],
+                w3: vec![],
+                b3: 0.0,
+                y_mean: net.y_mean,
+                y_std: net.y_std,
+            };
+            m.set_params(p);
+            let (_, _, out) = m.forward(&x);
+            0.5 * (out - yn) * (out - yn)
+        };
+        for idx in [0usize, 3, net.n_params() - 1, net.n_params() / 2] {
+            let mut p = params.clone();
+            p[idx] += eps;
+            let up = loss(&p);
+            p[idx] -= 2.0 * eps;
+            let down = loss(&p);
+            let fd = (up - down) / (2.0 * eps);
+            assert!(
+                (fd - grads[idx]).abs() < 1e-4 * (1.0 + fd.abs()),
+                "param {idx}: fd {fd} vs analytic {}",
+                grads[idx]
+            );
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Surrogate models for the BO framework: the GP (the paper's contribution,
+//! executed through the AOT JAX/Pallas artifacts or the native reference),
+//! and the ablation/baseline models (random forest, gradient-boosted trees,
+//! MLP cost model).
+
+pub mod acquisition;
+pub mod gbt;
+pub mod gp;
+pub mod gp_native;
+pub mod linalg;
+pub mod mlp;
+pub mod rf;
+pub mod tree;
+
+pub use acquisition::{feasibility_probability, Acquisition};
+pub use gbt::{Gbt, GbtConfig};
+pub use gp::{GpBackend, GpSurrogate, KernelFamily};
+pub use gp_native::NativeGp;
+pub use mlp::{Mlp, MlpConfig};
+pub use rf::{RandomForest, RfConfig};

@@ -1,0 +1,99 @@
+//! Random-forest surrogate (the paper's Fig. 5b / Fig. 17 ablation
+//! alternative to the GP): bagged CART trees with per-split feature
+//! subsampling; predictive mean = ensemble mean, predictive variance =
+//! ensemble variance (+ floor), which plugs into the same acquisition
+//! functions as the GP.
+
+use crate::runtime::gp_exec::Posterior;
+use crate::surrogate::tree::{Tree, TreeConfig};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RfConfig {
+    pub n_trees: usize,
+    pub tree: TreeConfig,
+}
+
+impl Default for RfConfig {
+    fn default() -> Self {
+        RfConfig {
+            n_trees: 40,
+            tree: TreeConfig { max_depth: 8, min_samples_leaf: 2, feature_subsample: 6 },
+        }
+    }
+}
+
+pub struct RandomForest {
+    trees: Vec<Tree>,
+}
+
+impl RandomForest {
+    pub fn fit(cfg: RfConfig, x: &[Vec<f64>], y: &[f64], rng: &mut Rng) -> RandomForest {
+        assert!(!x.is_empty());
+        let n = x.len();
+        let trees = (0..cfg.n_trees)
+            .map(|_| {
+                // bootstrap sample
+                let idx: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
+                let bx: Vec<Vec<f64>> = idx.iter().map(|&i| x[i].clone()).collect();
+                let by: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+                Tree::fit(cfg.tree, &bx, &by, rng)
+            })
+            .collect();
+        RandomForest { trees }
+    }
+
+    pub fn predict(&self, cand: &[Vec<f64>]) -> Posterior {
+        let mut mean = Vec::with_capacity(cand.len());
+        let mut var = Vec::with_capacity(cand.len());
+        for c in cand {
+            let preds: Vec<f64> = self.trees.iter().map(|t| t.predict(c)).collect();
+            let m = preds.iter().sum::<f64>() / preds.len() as f64;
+            let v = preds.iter().map(|p| (p - m) * (p - m)).sum::<f64>()
+                / preds.len().max(1) as f64;
+            mean.push(m);
+            var.push(v.max(1e-6));
+        }
+        Posterior { mean, var }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forest_fits_and_has_uncertainty_structure() {
+        let mut rng = Rng::seed_from_u64(1);
+        let x: Vec<Vec<f64>> = (0..100)
+            .map(|_| vec![rng.range_f64(-2.0, 2.0), rng.range_f64(-2.0, 2.0)])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|v| v[0] * v[0] + 0.5 * v[1]).collect();
+        let rf = RandomForest::fit(RfConfig::default(), &x, &y, &mut rng);
+        let post = rf.predict(&x);
+        let mse: f64 = post
+            .mean
+            .iter()
+            .zip(y.iter())
+            .map(|(m, v)| (m - v).powi(2))
+            .sum::<f64>()
+            / y.len() as f64;
+        assert!(mse < 0.5, "mse {mse}");
+        // extrapolation should be at least as uncertain as interpolation
+        let far = rf.predict(&[vec![10.0, 10.0]]);
+        assert!(far.var[0] >= 1e-6);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::seed_from_u64(7);
+        let mut r2 = Rng::seed_from_u64(7);
+        let x: Vec<Vec<f64>> = (0..30).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..30).map(|i| (i as f64).sqrt()).collect();
+        let a = RandomForest::fit(RfConfig::default(), &x, &y, &mut r1);
+        let b = RandomForest::fit(RfConfig::default(), &x, &y, &mut r2);
+        let pa = a.predict(&x);
+        let pb = b.predict(&x);
+        assert_eq!(pa.mean, pb.mean);
+    }
+}

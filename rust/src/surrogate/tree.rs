@@ -1,0 +1,210 @@
+//! CART regression tree: the shared building block of the random-forest
+//! surrogate (Fig. 5b/17 ablation) and the gradient-boosted-tree cost model
+//! (the TVM-XGBoost baseline of Fig. 3/16). Variance-reduction splits,
+//! optional per-split feature subsampling for forests.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TreeConfig {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// Number of features considered per split; 0 = all.
+    pub feature_subsample: usize,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        TreeConfig { max_depth: 6, min_samples_leaf: 2, feature_subsample: 0 }
+    }
+}
+
+impl Tree {
+    pub fn fit(cfg: TreeConfig, x: &[Vec<f64>], y: &[f64], rng: &mut Rng) -> Tree {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let mut nodes = Vec::new();
+        build(&mut nodes, cfg, x, y, idx, 0, rng);
+        Tree { nodes }
+    }
+
+    pub fn predict(&self, point: &[f64]) -> f64 {
+        let mut at = 0;
+        loop {
+            match &self.nodes[at] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    at = if point[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn d(nodes: &[Node], at: usize) -> usize {
+            match &nodes[at] {
+                Node::Leaf { .. } => 1,
+                Node::Split { left, right, .. } => 1 + d(nodes, *left).max(d(nodes, *right)),
+            }
+        }
+        d(&self.nodes, 0)
+    }
+}
+
+fn mean_of(y: &[f64], idx: &[usize]) -> f64 {
+    idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64
+}
+
+/// Returns the new node's index.
+fn build(
+    nodes: &mut Vec<Node>,
+    cfg: TreeConfig,
+    x: &[Vec<f64>],
+    y: &[f64],
+    idx: Vec<usize>,
+    depth: usize,
+    rng: &mut Rng,
+) -> usize {
+    let leaf_value = mean_of(y, &idx);
+    if depth >= cfg.max_depth || idx.len() < 2 * cfg.min_samples_leaf {
+        nodes.push(Node::Leaf { value: leaf_value });
+        return nodes.len() - 1;
+    }
+
+    let d = x[0].len();
+    let features: Vec<usize> = if cfg.feature_subsample > 0 && cfg.feature_subsample < d {
+        rng.sample_indices(d, cfg.feature_subsample)
+    } else {
+        (0..d).collect()
+    };
+
+    // Best split by weighted-variance (SSE) reduction.
+    let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, sse)
+    for &f in &features {
+        let mut order = idx.clone();
+        order.sort_by(|&a, &b| x[a][f].partial_cmp(&x[b][f]).unwrap());
+        // prefix sums for O(n) split scan
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        let total_sum: f64 = order.iter().map(|&i| y[i]).sum();
+        let total_sumsq: f64 = order.iter().map(|&i| y[i] * y[i]).sum();
+        let n = order.len() as f64;
+        for pos in 0..order.len() - 1 {
+            let yi = y[order[pos]];
+            sum += yi;
+            sumsq += yi * yi;
+            let nl = (pos + 1) as f64;
+            let nr = n - nl;
+            if (pos + 1) < cfg.min_samples_leaf || (order.len() - pos - 1) < cfg.min_samples_leaf
+            {
+                continue;
+            }
+            // skip ties: can't split between equal feature values
+            if x[order[pos]][f] == x[order[pos + 1]][f] {
+                continue;
+            }
+            let sse_l = sumsq - sum * sum / nl;
+            let sr = total_sum - sum;
+            let sse_r = (total_sumsq - sumsq) - sr * sr / nr;
+            let sse = sse_l + sse_r;
+            if best.map_or(true, |(_, _, b)| sse < b) {
+                let threshold = 0.5 * (x[order[pos]][f] + x[order[pos + 1]][f]);
+                best = Some((f, threshold, sse));
+            }
+        }
+    }
+
+    let Some((feature, threshold, _)) = best else {
+        nodes.push(Node::Leaf { value: leaf_value });
+        return nodes.len() - 1;
+    };
+
+    let (li, ri): (Vec<usize>, Vec<usize>) =
+        idx.iter().partition(|&&i| x[i][feature] <= threshold);
+    if li.is_empty() || ri.is_empty() {
+        nodes.push(Node::Leaf { value: leaf_value });
+        return nodes.len() - 1;
+    }
+
+    // reserve our slot, then build children
+    nodes.push(Node::Leaf { value: leaf_value });
+    let me = nodes.len() - 1;
+    let left = build(nodes, cfg, x, y, li, depth + 1, rng);
+    let right = build(nodes, cfg, x, y, ri, depth + 1, rng);
+    nodes[me] = Node::Split { feature, threshold, left, right };
+    me
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_data() -> (Vec<Vec<f64>>, Vec<f64>) {
+        // y = step function on feature 0
+        let x: Vec<Vec<f64>> = (0..40).map(|i| vec![i as f64, (i % 7) as f64]).collect();
+        let y: Vec<f64> = (0..40).map(|i| if i < 20 { 1.0 } else { 5.0 }).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn learns_step_function() {
+        let (x, y) = grid_data();
+        let mut rng = Rng::seed_from_u64(1);
+        let t = Tree::fit(TreeConfig::default(), &x, &y, &mut rng);
+        assert!((t.predict(&[5.0, 0.0]) - 1.0).abs() < 1e-9);
+        assert!((t.predict(&[30.0, 0.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let (x, y) = grid_data();
+        let mut rng = Rng::seed_from_u64(2);
+        let cfg = TreeConfig { max_depth: 2, ..Default::default() };
+        let t = Tree::fit(cfg, &x, &y, &mut rng);
+        assert!(t.depth() <= 3); // root + 2
+    }
+
+    #[test]
+    fn constant_targets_yield_single_leaf() {
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y = vec![3.0; 10];
+        let mut rng = Rng::seed_from_u64(3);
+        let t = Tree::fit(TreeConfig::default(), &x, &y, &mut rng);
+        assert_eq!(t.predict(&[100.0]), 3.0);
+    }
+
+    #[test]
+    fn fits_smooth_function_reasonably() {
+        let x: Vec<Vec<f64>> = (0..200).map(|i| vec![i as f64 / 20.0]).collect();
+        let y: Vec<f64> = x.iter().map(|v| (v[0]).sin()).collect();
+        let mut rng = Rng::seed_from_u64(4);
+        let cfg = TreeConfig { max_depth: 8, min_samples_leaf: 2, feature_subsample: 0 };
+        let t = Tree::fit(cfg, &x, &y, &mut rng);
+        let mse: f64 = x
+            .iter()
+            .zip(y.iter())
+            .map(|(xi, yi)| (t.predict(xi) - yi).powi(2))
+            .sum::<f64>()
+            / x.len() as f64;
+        assert!(mse < 0.01, "mse {mse}");
+    }
+}

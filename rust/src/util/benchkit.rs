@@ -1,0 +1,116 @@
+//! Micro-benchmark harness (criterion is not in the offline crate set).
+//!
+//! Used by the `benches/` targets (declared with `harness = false`): warm up,
+//! run timed batches until a time budget is reached, report median/mean/p95
+//! per iteration, and emit a machine-readable line for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters {:>9}  median {:>12}  mean {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns)
+        );
+    }
+
+    /// Throughput helper: items processed per second at the median time.
+    pub fn per_sec(&self, items_per_iter: f64) -> f64 {
+        items_per_iter * 1e9 / self.median_ns
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` repeatedly. `f` should perform one logical iteration and return a
+/// value that is passed to `std::hint::black_box` to defeat DCE.
+pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup + calibration: find a batch size so one batch is ~1-10ms.
+    let mut batch = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f());
+        }
+        let dt = t0.elapsed();
+        if dt >= Duration::from_millis(1) || batch >= 1 << 24 {
+            break;
+        }
+        batch *= 4;
+    }
+
+    let mut samples: Vec<f64> = Vec::new();
+    let mut iters = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f());
+        }
+        let per_iter = t0.elapsed().as_nanos() as f64 / batch as f64;
+        samples.push(per_iter);
+        iters += batch;
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_ns = samples[samples.len() / 2];
+    let mean_ns = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+    let p95_ns = samples[p95_idx];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns,
+        mean_ns,
+        p95_ns,
+    };
+    r.report();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", Duration::from_millis(20), || {
+            std::hint::black_box(3u64.wrapping_mul(7))
+        });
+        assert!(r.iters > 0);
+        assert!(r.median_ns > 0.0);
+        assert!(r.p95_ns >= r.median_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("us"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,79 @@
+//! Minimal CSV writer for the figure harnesses (no serde available offline).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// A CSV table accumulated in memory and flushed to disk.
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics (in debug) if the width mismatches the header.
+    pub fn row(&mut self, cells: &[String]) {
+        debug_assert_eq!(cells.len(), self.header.len(), "csv row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: append a row of display-able values.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Write to a file, creating parent directories as needed.
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", self.header.join(","))?;
+        for row in &self.rows {
+            writeln!(w, "{}", row.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","))?;
+        }
+        w.flush()
+    }
+}
+
+fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into(), "x,y".into()]);
+        c.rowf(&[&2.5, &"plain"]);
+        let dir = std::env::temp_dir().join("codesign_csv_test");
+        let path = dir.join("t.csv");
+        c.write(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2.5,plain\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared utilities written in-repo because the offline crate set contains
+//! only the `xla` dependency closure (no rand/serde/criterion/proptest).
+
+pub mod benchkit;
+pub mod csvout;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,140 @@
+//! A tiny property-based testing harness.
+//!
+//! `proptest` is not in the offline crate set, so this module provides the
+//! slice of it the test suite needs: run a property over many random cases,
+//! and on failure greedily shrink the failing seed's case via user-provided
+//! simplification before reporting. Deterministic per (test-name, iteration).
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 256, seed: 0xC0DE516 }
+    }
+}
+
+/// Run `prop` on `cases` values drawn by `gen`. On the first failure, try
+/// `shrink` repeatedly (accepting any smaller case that still fails) and
+/// panic with the minimal case found.
+pub fn forall<T: std::fmt::Debug + Clone>(
+    cfg: PropConfig,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut shrink: impl FnMut(&T) -> Vec<T>,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let case = gen(&mut rng);
+        if let Err(first_msg) = prop(&case) {
+            // Greedy shrink loop.
+            let mut best = case.clone();
+            let mut best_msg = first_msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in shrink(&best) {
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case_idx}, seed {}): {best_msg}\nminimal case: {best:#?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// forall with default config and no shrinking.
+pub fn forall_simple<T: std::fmt::Debug + Clone>(
+    cases: usize,
+    seed: u64,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    forall(PropConfig { cases, seed }, gen, |_| Vec::new(), prop);
+}
+
+/// Helper: assert-like conversion for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_on_true_property() {
+        forall_simple(
+            100,
+            1,
+            |r| r.below(1000) as i64,
+            |x| {
+                if x + 1 > *x {
+                    Ok(())
+                } else {
+                    Err("overflow".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_reports() {
+        forall_simple(
+            100,
+            2,
+            |r| r.below(1000) as i64,
+            |x| {
+                if *x < 500 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinks_to_minimal() {
+        // Property: x < 100. Failing cases shrink toward 100.
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                PropConfig { cases: 200, seed: 3 },
+                |r| r.below(10_000) as i64,
+                |x| if *x > 100 { vec![x / 2 + 50, x - 1] } else { vec![] },
+                |x| {
+                    if *x < 100 {
+                        Ok(())
+                    } else {
+                        Err("ge 100".into())
+                    }
+                },
+            )
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(_) => panic!("expected failure"),
+        };
+        assert!(msg.contains("minimal case: 100"), "shrunk message: {msg}");
+    }
+}

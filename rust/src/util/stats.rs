@@ -1,0 +1,146 @@
+//! Small statistics helpers shared by the optimizers and figure harnesses.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0.0 for fewer than 2 points.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Index of the minimum value (first on ties); None on empty.
+pub fn argmin(xs: &[f64]) -> Option<usize> {
+    xs.iter()
+        .enumerate()
+        .filter(|(_, x)| !x.is_nan())
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+}
+
+/// Index of the maximum value (first on ties); None on empty.
+pub fn argmax(xs: &[f64]) -> Option<usize> {
+    xs.iter()
+        .enumerate()
+        .filter(|(_, x)| !x.is_nan())
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+}
+
+/// Running best-so-far (minimum) transform of an optimization trace.
+pub fn best_so_far_min(trace: &[f64]) -> Vec<f64> {
+    let mut best = f64::INFINITY;
+    trace
+        .iter()
+        .map(|&x| {
+            if x < best {
+                best = x;
+            }
+            best
+        })
+        .collect()
+}
+
+/// Standard normal PDF.
+#[inline]
+pub fn norm_pdf(z: f64) -> f64 {
+    (-(z * z) / 2.0).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal CDF via erf approximation (Abramowitz & Stegun 7.1.26;
+/// max abs error ~1.5e-7, ample for acquisition functions).
+pub fn norm_cdf(z: f64) -> f64 {
+    let x = z / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let erf = 1.0 - poly * (-x * x).exp();
+    let erf = if x >= 0.0 { erf } else { -erf };
+    0.5 * (1.0 + erf)
+}
+
+/// z-score standardization of a vector; returns (standardized, mean, std).
+/// Degenerate inputs (std ~ 0) standardize to zeros with std 1.
+pub fn standardize(xs: &[f64]) -> (Vec<f64>, f64, f64) {
+    let m = mean(xs);
+    let s = std_dev(xs);
+    let s = if s < 1e-12 { 1.0 } else { s };
+    (xs.iter().map(|x| (x - m) / s).collect(), m, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argminmax() {
+        let xs = [3.0, 1.0, 2.0, 1.0];
+        assert_eq!(argmin(&xs), Some(1));
+        assert_eq!(argmax(&xs), Some(0));
+        assert_eq!(argmin(&[]), None);
+    }
+
+    #[test]
+    fn best_so_far() {
+        let t = best_so_far_min(&[5.0, 7.0, 3.0, 4.0, 1.0]);
+        assert_eq!(t, vec![5.0, 5.0, 3.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn norm_cdf_values() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((norm_cdf(-1.96) - 0.025).abs() < 1e-3);
+        assert!(norm_cdf(8.0) > 0.999999);
+    }
+
+    #[test]
+    fn standardize_roundtrip() {
+        let xs = [2.0, 4.0, 6.0, 8.0];
+        let (z, m, s) = standardize(&xs);
+        assert!((mean(&z)).abs() < 1e-12);
+        for (zi, xi) in z.iter().zip(xs.iter()) {
+            assert!((zi * s + m - xi).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn standardize_degenerate() {
+        let (z, _, s) = standardize(&[5.0, 5.0, 5.0]);
+        assert_eq!(s, 1.0);
+        assert!(z.iter().all(|v| v.abs() < 1e-12));
+    }
+}

@@ -1,0 +1,72 @@
+//! The Eyeriss baseline accelerator (Chen et al. 2016), the paper's
+//! state-of-the-art manual design: 12x14 PE array (168 PEs) with
+//! row-stationary dataflow, per-PE scratchpads partitioned 12/192/16 words
+//! (inputs/weights/psums), and a shared global buffer. The Transformer runs
+//! on the 16x16 (256 PE) variant from Parashar et al. 2019.
+
+use crate::model::arch::{DataflowOpt, HwConfig, Resources};
+
+/// Resource budget for a PE count (168 or 256), the constraint envelope the
+/// hardware search must respect (§5.1 of the paper).
+pub fn eyeriss_resources(num_pes: u64) -> Resources {
+    match num_pes {
+        168 => Resources::eyeriss_168(),
+        256 => Resources::eyeriss_256(),
+        other => {
+            let mut r = Resources::eyeriss_168();
+            r.num_pes = other;
+            r
+        }
+    }
+}
+
+/// The Eyeriss hardware configuration expressed in the paper's H1-H12
+/// parameterization. Row-stationary: full filter rows resident in each PE
+/// (H11 FullAtPe), filter height streamed across the array (H12 Streamed);
+/// the weight spad dominates the local-buffer partition.
+pub fn eyeriss_hw(num_pes: u64) -> HwConfig {
+    let (mesh_x, mesh_y) = match num_pes {
+        168 => (14, 12),
+        256 => (16, 16),
+        other => {
+            let x = crate::model::workload::near_square_factor(other);
+            (other / x, x)
+        }
+    };
+    HwConfig {
+        pe_mesh_x: mesh_x,
+        pe_mesh_y: mesh_y,
+        lb_inputs: 12,
+        lb_weights: 192,
+        lb_outputs: 16,
+        gb_instances: 1,
+        gb_mesh_x: 1,
+        gb_mesh_y: 1,
+        gb_block: 4,
+        gb_cluster: 2,
+        df_filter_w: DataflowOpt::FullAtPe,
+        df_filter_h: DataflowOpt::Streamed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eyeriss_configs_satisfy_their_budgets() {
+        for pes in [168u64, 256] {
+            let hw = eyeriss_hw(pes);
+            let res = eyeriss_resources(pes);
+            assert_eq!(hw.check(&res), Ok(()), "pes={pes}");
+            assert_eq!(hw.num_pes(), pes);
+        }
+    }
+
+    #[test]
+    fn weight_dominated_spad_partition() {
+        let hw = eyeriss_hw(168);
+        assert!(hw.lb_weights > hw.lb_inputs + hw.lb_outputs);
+        assert_eq!(hw.local_buffer_used(), 220);
+    }
+}

@@ -1,0 +1,7 @@
+//! Paper workloads (Figs. 11-12) and the Eyeriss baseline accelerator.
+
+pub mod eyeriss;
+pub mod specs;
+
+pub use eyeriss::{eyeriss_hw, eyeriss_resources};
+pub use specs::{all_models, model_by_name, ModelSpec};

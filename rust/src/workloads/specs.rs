@@ -1,0 +1,156 @@
+//! Layer specifications of the paper's workloads (Figs. 11-12).
+//!
+//! ResNet-18 critical layers K1-K4, DQN conv layers K1-K2, the two MLP
+//! layers, and the four Transformer attention configurations. MLP and
+//! Transformer layers are matmuls expressed as 1x1 convs (Fig. 12); the
+//! Transformer rows are the QKV projection shapes `d_model -> h * d_k` over
+//! a token batch.
+
+use crate::model::workload::Layer;
+
+/// A named model with its benchmarked layers.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+    /// Which PE budget the paper evaluates this model on (168 or 256).
+    pub num_pes: u64,
+}
+
+/// Sequence length used for the MLP / Transformer matmul workloads. The
+/// paper does not state it; 64 tokens keeps the P*Q extent in the range of
+/// the CNN output maps.
+pub const TOKENS: u64 = 64;
+
+pub fn resnet() -> ModelSpec {
+    ModelSpec {
+        name: "resnet",
+        layers: vec![
+            // Fig. 11: filter 3x3, stride per row.
+            Layer::conv("ResNet-K1", 3, 3, 56, 56, 64, 64, 2),
+            Layer::conv("ResNet-K2", 3, 3, 28, 28, 128, 128, 1),
+            Layer::conv("ResNet-K3", 3, 3, 14, 14, 256, 256, 1),
+            Layer::conv("ResNet-K4", 3, 3, 7, 7, 512, 512, 1),
+        ],
+        num_pes: 168,
+    }
+}
+
+pub fn dqn() -> ModelSpec {
+    ModelSpec {
+        name: "dqn",
+        layers: vec![
+            Layer::conv("DQN-K1", 8, 8, 20, 20, 4, 16, 4),
+            Layer::conv("DQN-K2", 4, 4, 9, 9, 16, 32, 2),
+        ],
+        num_pes: 168,
+    }
+}
+
+pub fn mlp() -> ModelSpec {
+    ModelSpec {
+        name: "mlp",
+        layers: vec![
+            Layer::matmul("MLP-K1", TOKENS, 512, 512),
+            Layer::matmul("MLP-K2", TOKENS, 64, 1024),
+        ],
+        num_pes: 168,
+    }
+}
+
+pub fn transformer() -> ModelSpec {
+    // Fig. 12: d_model = 512, (d_k = d_v, h) in {(32,16),(64,8),(128,4),(512,1)}.
+    // Each layer is the fused QKV-style projection d_model -> h*d_k.
+    ModelSpec {
+        name: "transformer",
+        layers: vec![
+            Layer::matmul("Transformer-K1", TOKENS, 512, 16 * 32),
+            Layer::matmul("Transformer-K2", TOKENS, 512, 8 * 64),
+            Layer::matmul("Transformer-K3", TOKENS, 512, 4 * 128),
+            Layer::matmul("Transformer-K4", TOKENS, 512, 512),
+        ],
+        num_pes: 256,
+    }
+}
+
+pub fn all_models() -> Vec<ModelSpec> {
+    vec![resnet(), dqn(), mlp(), transformer()]
+}
+
+pub fn model_by_name(name: &str) -> Option<ModelSpec> {
+    all_models().into_iter().find(|m| m.name == name)
+}
+
+/// Find a layer across all models by its `Fig. 11/12` name, e.g. "DQN-K2".
+pub fn layer_by_name(name: &str) -> Option<Layer> {
+    all_models()
+        .into_iter()
+        .flat_map(|m| m.layers)
+        .find(|l| l.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workload::DataSpace;
+
+    #[test]
+    fn fig11_resnet_rows() {
+        let m = resnet();
+        assert_eq!(m.layers.len(), 4);
+        let k1 = &m.layers[0];
+        assert_eq!((k1.r, k1.s, k1.p, k1.q, k1.c, k1.k, k1.stride), (3, 3, 56, 56, 64, 64, 2));
+        let k4 = &m.layers[3];
+        assert_eq!((k4.c, k4.k, k4.p), (512, 512, 7));
+    }
+
+    #[test]
+    fn fig11_dqn_rows() {
+        let m = dqn();
+        let k1 = &m.layers[0];
+        assert_eq!((k1.r, k1.p, k1.c, k1.k, k1.stride), (8, 20, 4, 16, 4));
+        let k2 = &m.layers[1];
+        assert_eq!((k2.r, k2.p, k2.c, k2.k, k2.stride), (4, 9, 16, 32, 2));
+    }
+
+    #[test]
+    fn fig12_matmul_shapes() {
+        for l in mlp().layers.iter().chain(transformer().layers.iter()) {
+            assert_eq!(l.r, 1);
+            assert_eq!(l.s, 1);
+            assert_eq!(l.p * l.q, TOKENS);
+        }
+        // h * d_k always equals 512 for the transformer rows
+        for l in transformer().layers.iter() {
+            assert_eq!(l.k, 512);
+            assert_eq!(l.c, 512);
+        }
+        assert_eq!(mlp().layers[1].k, 1024);
+    }
+
+    #[test]
+    fn transformer_uses_256_pes() {
+        assert_eq!(transformer().num_pes, 256);
+        assert_eq!(resnet().num_pes, 168);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(layer_by_name("ResNet-K2").is_some());
+        assert!(layer_by_name("DQN-K1").is_some());
+        assert!(layer_by_name("nope").is_none());
+        assert_eq!(model_by_name("mlp").unwrap().layers.len(), 2);
+    }
+
+    #[test]
+    fn workloads_have_nonzero_footprints() {
+        for m in all_models() {
+            for l in &m.layers {
+                assert!(l.macs() > 0);
+                for ds in [DataSpace::Inputs, DataSpace::Weights, DataSpace::Outputs] {
+                    assert!(l.footprint(ds) > 0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! End-to-end integration at miniature budgets: the full nested co-design
+//! through the AOT PJRT GP backend (when artifacts exist), plus failure
+//! injection on the artifact loading path.
+
+use codesign::coordinator::driver::{eyeriss_baseline, Driver};
+use codesign::opt::config::{BoConfig, NestedConfig};
+use codesign::opt::sw_search::{SurrogateKind, SwMethod};
+use codesign::runtime::artifacts::{ArtifactSet, Manifest};
+use codesign::runtime::server::GpServer;
+use codesign::surrogate::gp::GpBackend;
+use codesign::workloads::specs::dqn;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+fn tiny_cfg() -> NestedConfig {
+    NestedConfig {
+        hw_trials: 3,
+        sw_trials: 10,
+        hw_bo: BoConfig { warmup: 2, pool: 8, ..BoConfig::hardware() },
+        sw_bo: BoConfig { warmup: 4, pool: 8, ..BoConfig::software() },
+    }
+}
+
+#[test]
+fn nested_codesign_through_aot_backend() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let server = GpServer::start().unwrap();
+    let backend = GpBackend::Aot(server.handle());
+    let mut driver = Driver::new(tiny_cfg());
+    driver.verbose = false;
+    driver.threads = 2;
+    driver.sw_method = SwMethod::Bo { surrogate: SurrogateKind::Gp };
+    let out = driver.run(&dqn(), &backend, 11);
+    assert_eq!(out.hw_trace.evals.len(), 3);
+    if let Some(best) = &out.best {
+        assert!(best.best_edp.is_finite());
+        assert_eq!(best.layers.len(), 2);
+    }
+    // the GP server must have survived concurrent layer workers
+    let base = eyeriss_baseline(&dqn(), driver.sw_method, 8, &backend, 2, 5);
+    assert!(base.is_some());
+}
+
+#[test]
+fn corrupt_artifact_is_a_clean_error() {
+    // build a fake artifact dir with a valid manifest but garbage HLO
+    let dir = std::env::temp_dir().join("codesign_corrupt_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = "feature_dim=16\ntheta_dim=6\nnll_batch=32\nsize_classes=64,256\n";
+    std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+    for n in [64, 256] {
+        std::fs::write(dir.join(format!("gp_posterior_n{n}.hlo.txt")), "not hlo").unwrap();
+        std::fs::write(dir.join(format!("gp_nll_n{n}.hlo.txt")), "not hlo").unwrap();
+    }
+    let set = ArtifactSet::discover(Some(&dir)).unwrap();
+    let err = codesign::runtime::gp_exec::GpExecutor::load(set);
+    assert!(err.is_err(), "garbage HLO must not load");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wrong_abi_manifest_is_rejected() {
+    let dir = std::env::temp_dir().join("codesign_wrong_abi");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "feature_dim=8\ntheta_dim=6\nnll_batch=32\nsize_classes=64,256\n",
+    )
+    .unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("feature_dim"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn native_and_aot_nested_runs_both_complete() {
+    // native always; aot only when artifacts are present — both must produce
+    // a monotone outer-loop curve.
+    let backends: Vec<GpBackend> = if artifacts_available() {
+        let server = GpServer::start().unwrap();
+        vec![GpBackend::Native, GpBackend::Aot(server.handle())]
+    } else {
+        vec![GpBackend::Native]
+    };
+    for backend in backends {
+        let mut driver = Driver::new(tiny_cfg());
+        driver.verbose = false;
+        driver.threads = 1;
+        let out = driver.run(&dqn(), &backend, 21);
+        let curve = out.hw_trace.best_curve();
+        for w in curve.windows(2) {
+            assert!(w[1] <= w[0]);
+        }
+    }
+}

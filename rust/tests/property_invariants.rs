@@ -1,0 +1,244 @@
+//! Property-based integration tests over the whole substrate: every valid
+//! sample must evaluate, every evaluation must respect conservation laws and
+//! the analytic roofline, the checkpoint codec must round-trip arbitrary
+//! designs, and the search traces must be monotone. Uses the in-repo
+//! property harness (util::prop) since proptest is not in the offline set.
+
+use codesign::model::energy::roofline_edp;
+use codesign::model::eval::Evaluator;
+use codesign::model::nest::{analyze, footprint, tiles};
+use codesign::model::workload::{DataSpace, Layer, DATASPACES};
+use codesign::opt::config::BoConfig;
+use codesign::opt::sw_search::{random_search, SwProblem};
+use codesign::space::features::sw_features;
+use codesign::space::hw_space::HwSpace;
+use codesign::space::sw_space::SwSpace;
+use codesign::coordinator::checkpoint::Checkpoint;
+use codesign::util::prop::{forall_simple, PropConfig};
+use codesign::util::rng::Rng;
+use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+use codesign::workloads::specs::all_models;
+
+/// A random (layer, hardware, valid mapping) scenario.
+fn random_scenario(rng: &mut Rng) -> (Layer, codesign::model::arch::HwConfig, codesign::model::mapping::Mapping) {
+    let models = all_models();
+    let model = &models[rng.below(models.len())];
+    let layer = model.layers[rng.below(model.layers.len())].clone();
+    let res = eyeriss_resources(model.num_pes);
+    let hw_space = HwSpace::new(res.clone());
+    let (hw, _) = hw_space.sample_valid(rng);
+    let space = SwSpace::new(layer.clone(), hw.clone(), res);
+    match space.sample_valid(rng, 3_000_000) {
+        Some((m, _)) => (layer, hw, m),
+        // some sampled hardware has no findable mapping (the paper's unknown
+        // constraint); fall back to Eyeriss which is always mappable
+        None => {
+            let hw = eyeriss_hw(model.num_pes);
+            let space = SwSpace::new(layer.clone(), hw.clone(), eyeriss_resources(model.num_pes));
+            let (m, _) = space.sample_valid(rng, 10_000_000).expect("eyeriss mappable");
+            (layer, hw, m)
+        }
+    }
+}
+
+#[test]
+fn prop_valid_samples_always_evaluate_above_roofline() {
+    forall_simple(
+        60,
+        0xA11CE,
+        |rng| random_scenario(rng),
+        |(layer, hw, m)| {
+            let res = eyeriss_resources(hw.num_pes());
+            let eval = Evaluator::new(res.clone());
+            let met = eval
+                .evaluate(layer, hw, m)
+                .map_err(|e| format!("valid sample rejected: {e}"))?;
+            if !(met.edp.is_finite() && met.edp > 0.0) {
+                return Err(format!("non-finite EDP {}", met.edp));
+            }
+            let rl = roofline_edp(layer, &res, &eval.energy_model);
+            if met.edp < rl {
+                return Err(format!("EDP {} below roofline {rl}", met.edp));
+            }
+            if !(met.utilization > 0.0 && met.utilization <= 1.0 + 1e-9) {
+                return Err(format!("bad utilization {}", met.utilization));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_traffic_conservation_laws() {
+    forall_simple(
+        60,
+        0xBEEF,
+        |rng| random_scenario(rng),
+        |(layer, hw, m)| {
+            let tr = analyze(layer, hw, m);
+            // every dataspace's full footprint must cross the DRAM boundary
+            // at least once (reads for operands, writes for outputs)
+            for ds in DATASPACES {
+                let d = tr.ds(ds);
+                let foot = layer.footprint(ds) as f64;
+                let moved = match ds {
+                    DataSpace::Outputs => d.dram_writes,
+                    _ => d.dram_reads,
+                };
+                if moved < foot - 1e-6 {
+                    return Err(format!("{}: moved {moved} < footprint {foot}", ds.name()));
+                }
+                // GLB reads of operands can't be below what the PEs consume
+                // once (multicast can only reduce per-PE copies, not below
+                // one tile stream)
+                if d.noc_words < 0.0 || d.glb_reads < 0.0 {
+                    return Err("negative traffic".into());
+                }
+            }
+            // compute accesses: 1 read/MAC for each operand, 2 for psums
+            let macs = layer.macs() as f64;
+            let inp = tr.ds(DataSpace::Inputs).lb_compute_accesses;
+            let out = tr.ds(DataSpace::Outputs).lb_compute_accesses;
+            if (inp - macs).abs() > 1e-6 || (out - 2.0 * macs).abs() > 1e-6 {
+                return Err("MAC-level access counts wrong".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tile_footprints_monotone_up_the_hierarchy() {
+    forall_simple(
+        60,
+        0xCAFE,
+        |rng| random_scenario(rng),
+        |(layer, _hw, m)| {
+            let t = tiles(layer, m);
+            for ds in DATASPACES {
+                let fl = footprint(ds, &t.local, layer.stride);
+                let fs = footprint(ds, &t.spatial, layer.stride);
+                let fg = footprint(ds, &t.glb, layer.stride);
+                let ff = footprint(ds, &t.full, layer.stride);
+                if !(fl <= fs && fs <= fg && fg <= ff) {
+                    return Err(format!(
+                        "{}: footprints not monotone {fl} {fs} {fg} {ff}",
+                        ds.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_features_always_finite_and_bounded() {
+    forall_simple(
+        60,
+        0xF00D,
+        |rng| random_scenario(rng),
+        |(layer, hw, m)| {
+            let res = eyeriss_resources(hw.num_pes());
+            let space = SwSpace::new(layer.clone(), hw.clone(), res);
+            let f = sw_features(&space, m);
+            for (i, v) in f.iter().enumerate() {
+                if !v.is_finite() {
+                    return Err(format!("feature {i} not finite: {v}"));
+                }
+                if v.abs() > 100.0 {
+                    return Err(format!("feature {i} unscaled: {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_arbitrary_designs() {
+    codesign::util::prop::forall(
+        PropConfig { cases: 40, seed: 0xD00D },
+        |rng| {
+            let (layer, hw, m) = random_scenario(rng);
+            Checkpoint {
+                model: "prop".into(),
+                trial: rng.below(1000),
+                best_edp: rng.f64() * 1e-6 + 1e-12,
+                hw,
+                layers: vec![(layer.name.clone(), m, rng.f64())],
+            }
+        },
+        |_| Vec::new(),
+        |ck| {
+            let back = Checkpoint::from_text(&ck.to_text())
+                .map_err(|e| format!("parse failed: {e:#}"))?;
+            if &back != ck {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_search_traces_monotone_and_consistent() {
+    forall_simple(
+        12,
+        0x5EED,
+        |rng| {
+            let models = all_models();
+            let model = &models[rng.below(models.len())];
+            let layer = model.layers[rng.below(model.layers.len())].clone();
+            let res = eyeriss_resources(model.num_pes);
+            (layer, res, rng.next_u64())
+        },
+        |(layer, res, seed)| {
+            let problem = SwProblem {
+                space: SwSpace::new(layer.clone(), eyeriss_hw(res.num_pes), res.clone()),
+                eval: Evaluator::new(res.clone()),
+            };
+            let cfg = BoConfig { warmup: 3, pool: 10, ..BoConfig::software() };
+            let mut rng = Rng::seed_from_u64(*seed);
+            let trace = random_search(&problem, 8, &cfg, &mut rng);
+            let curve = trace.best_curve();
+            for w in curve.windows(2) {
+                if w[1] > w[0] {
+                    return Err("best curve not monotone".into());
+                }
+            }
+            if trace.found_feasible() {
+                let m = trace.best_mapping.as_ref().unwrap();
+                let re = problem.edp(m).ok_or("best mapping no longer valid")?;
+                if (re - trace.best_edp).abs() > 1e-12 * trace.best_edp {
+                    return Err(format!("best EDP not reproducible: {re} vs {}", trace.best_edp));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hw_sampler_respects_budget_envelope() {
+    forall_simple(
+        200,
+        0xABCD,
+        |rng| {
+            let res = eyeriss_resources(if rng.chance(0.5) { 168 } else { 256 });
+            let space = HwSpace::new(res.clone());
+            let (hw, _) = space.sample_valid(rng);
+            (hw, res)
+        },
+        |(hw, res)| {
+            hw.check(res).map_err(|v| format!("{v:?}"))?;
+            if hw.local_buffer_used() > res.local_buffer_entries {
+                return Err("local buffer over budget".into());
+            }
+            if hw.num_pes() != res.num_pes {
+                return Err("PE count changed".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,142 @@
+//! Integration: the AOT-compiled JAX/Pallas GP artifacts (executed through
+//! the PJRT runtime) must agree numerically with the pure-Rust reference GP.
+//! This is the cross-layer correctness seam of the whole stack: L1 Pallas
+//! kernel -> L2 JAX model -> HLO text -> Rust PJRT execution vs. gp_native.
+//!
+//! Tests skip (with a note) when `make artifacts` hasn't been run.
+
+use codesign::runtime::gp_exec::Theta;
+use codesign::runtime::server::GpServer;
+use codesign::surrogate::gp::{GpBackend, GpSurrogate, KernelFamily};
+use codesign::surrogate::gp_native::NativeGp;
+use codesign::util::rng::Rng;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+fn data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let w: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.normal() * 0.4).collect()).collect();
+    let y: Vec<f64> = x
+        .iter()
+        .map(|xi| {
+            xi.iter().zip(w.iter()).map(|(a, b)| a * b).sum::<f64>()
+                + 0.3 * (xi[0] * 3.0).sin()
+        })
+        .collect();
+    (x, y)
+}
+
+fn flat32(x: &[Vec<f64>]) -> Vec<f32> {
+    x.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect()
+}
+
+#[test]
+fn aot_posterior_matches_native_reference() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let server = GpServer::start().expect("artifacts present but GP server failed");
+    let handle = server.handle();
+    let mut rng = Rng::seed_from_u64(42);
+
+    for (n, m) in [(10usize, 16usize), (60, 150), (250, 150)] {
+        let (x, y) = data(&mut rng, n, 16);
+        let (cand, _) = data(&mut rng, m, 16);
+        for theta in [
+            Theta { w_lin: 1.0, w_se: 0.0, ell2: 1.0, tau2: 0.05, jitter: 1e-4 },
+            Theta { w_lin: 0.0, w_se: 1.0, ell2: 4.0, tau2: 0.1, jitter: 1e-4 },
+            Theta { w_lin: 0.5, w_se: 0.5, ell2: 2.0, tau2: 0.01, jitter: 1e-4 },
+        ] {
+            let aot = handle
+                .posterior(flat32(&x), y.iter().map(|&v| v as f32).collect(), theta, flat32(&cand))
+                .unwrap();
+            let native = NativeGp::fit(theta, &x, &y).unwrap().posterior(&cand);
+            for i in 0..m {
+                assert!(
+                    (aot.mean[i] - native.mean[i]).abs() < 2e-2,
+                    "n={n} mean[{i}]: aot {} vs native {}",
+                    aot.mean[i],
+                    native.mean[i]
+                );
+                assert!(
+                    (aot.var[i] - native.var[i]).abs() < 2e-2 * (1.0 + native.var[i]),
+                    "n={n} var[{i}]: aot {} vs native {}",
+                    aot.var[i],
+                    native.var[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn aot_nll_matches_native_reference() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let server = GpServer::start().unwrap();
+    let handle = server.handle();
+    let mut rng = Rng::seed_from_u64(7);
+    let (x, y) = data(&mut rng, 40, 16);
+
+    let thetas = vec![
+        Theta { w_lin: 1.0, w_se: 0.0, ell2: 1.0, tau2: 0.05, jitter: 1e-4 },
+        Theta { w_lin: 0.1, w_se: 0.0, ell2: 1.0, tau2: 0.3, jitter: 1e-4 },
+        Theta { w_lin: 0.0, w_se: 2.0, ell2: 8.0, tau2: 0.02, jitter: 1e-4 },
+    ];
+    let aot = handle
+        .nll_batch(flat32(&x), y.iter().map(|&v| v as f32).collect(), thetas.clone())
+        .unwrap();
+    for (i, &theta) in thetas.iter().enumerate() {
+        let native = NativeGp::fit(theta, &x, &y).unwrap().nll(&y);
+        assert!(
+            (aot[i] - native).abs() < 1e-2 * (1.0 + native.abs()),
+            "theta {i}: aot {} vs native {native}",
+            aot[i]
+        );
+    }
+    // NLL ordering must agree between backends (it drives hyperparameter
+    // selection).
+    let native_order: Vec<f64> = thetas
+        .iter()
+        .map(|&t| NativeGp::fit(t, &x, &y).unwrap().nll(&y))
+        .collect();
+    let am = codesign::util::stats::argmin(&aot);
+    let nm = codesign::util::stats::argmin(&native_order);
+    assert_eq!(am, nm);
+}
+
+#[test]
+fn aot_surrogate_end_to_end_fit_predict() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let server = GpServer::start().unwrap();
+    let mut rng = Rng::seed_from_u64(9);
+    let (x, y) = data(&mut rng, 80, 16);
+
+    let mut aot_gp = GpSurrogate::new(
+        GpBackend::Aot(server.handle()),
+        KernelFamily::Linear { noise: true },
+    );
+    aot_gp.fit(&x, &y, &mut Rng::seed_from_u64(1)).unwrap();
+    let mut native_gp =
+        GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: true });
+    native_gp.fit(&x, &y, &mut Rng::seed_from_u64(1)).unwrap();
+
+    // Same rng seed -> same theta candidates -> same NLL argmin -> same theta.
+    assert_eq!(aot_gp.theta(), native_gp.theta());
+
+    let (cand, _) = data(&mut rng, 30, 16);
+    let pa = aot_gp.predict(&cand).unwrap();
+    let pn = native_gp.predict(&cand).unwrap();
+    for i in 0..cand.len() {
+        assert!((pa.mean[i] - pn.mean[i]).abs() < 5e-2 * (1.0 + pn.mean[i].abs()));
+    }
+}

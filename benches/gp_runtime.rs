@@ -22,7 +22,9 @@ fn flat32(x: &[Vec<f64>]) -> Vec<f32> {
 }
 
 fn main() {
-    let budget = Duration::from_millis(600);
+    let smoke =
+        std::env::var_os("BENCH_SMOKE").is_some() || std::env::args().any(|a| a == "--smoke");
+    let budget = if smoke { Duration::from_millis(1) } else { Duration::from_millis(600) };
     let mut rng = Rng::seed_from_u64(1);
     let theta = Theta::hw_default();
 

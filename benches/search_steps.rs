@@ -2,6 +2,9 @@
 //! step" = fill a 150-candidate feasible pool + surrogate scoring + one
 //! simulator evaluation; the budgets of Figs. 3/4/16 are directly these
 //! steps times trial counts. Run via `cargo bench --bench search_steps`.
+//!
+//! Set `BENCH_SMOKE=1` (or pass `--smoke`) for the CI smoke mode: minimal
+//! time budgets so the harness is exercised without burning CI time.
 
 use std::time::Duration;
 
@@ -14,8 +17,13 @@ use codesign::util::benchkit::bench;
 use codesign::util::rng::Rng;
 
 fn main() {
-    let budget = Duration::from_millis(1500);
+    let smoke =
+        std::env::var_os("BENCH_SMOKE").is_some() || std::env::args().any(|a| a == "--smoke");
+    let budget = if smoke { Duration::from_millis(1) } else { Duration::from_millis(1500) };
     println!("== search-step benchmarks (Fig. 3 unit costs) ==");
+    if smoke {
+        println!("(smoke mode: minimal budgets, results are not representative)");
+    }
 
     for layer in ["DQN-K2", "ResNet-K2"] {
         let problem = problem_for(layer);

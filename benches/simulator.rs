@@ -2,9 +2,14 @@
 //! path of every experiment is (sample -> validate -> analyze), so this is
 //! the first target of the §Perf pass. Custom harness (no criterion in the
 //! offline crate set); run via `cargo bench --bench simulator`.
+//!
+//! Set `BENCH_SMOKE=1` (or pass `--smoke`) for the CI smoke mode: every
+//! bench runs with a minimal time budget — one calibration round plus a few
+//! samples — so the harness is exercised end to end without burning CI time.
 
 use std::time::Duration;
 
+use codesign::model::batch::BatchEvaluator;
 use codesign::model::eval::Evaluator;
 use codesign::util::benchkit::bench;
 use codesign::util::rng::Rng;
@@ -12,8 +17,16 @@ use codesign::space::sw_space::SwSpace;
 use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
 use codesign::workloads::specs::{all_models, layer_by_name};
 
+fn smoke_mode() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some() || std::env::args().any(|a| a == "--smoke")
+}
+
 fn main() {
-    let budget = Duration::from_millis(400);
+    let smoke = smoke_mode();
+    let budget = if smoke { Duration::from_millis(1) } else { Duration::from_millis(400) };
+    if smoke {
+        println!("(smoke mode: minimal budgets, results are not representative)");
+    }
     let res = eyeriss_resources(168);
     let eval = Evaluator::new(res.clone());
 
@@ -48,6 +61,49 @@ fn main() {
                     d as f64 / 50.0
                 }
         );
+    }
+
+    // Batched + memoized evaluation: the repeated-candidate hot path every
+    // optimizer now runs through (acquisition sweeps re-propose the same
+    // mappings across rounds). Point-wise evaluation recomputes each point;
+    // the warm BatchEvaluator serves them from the canonical-key cache.
+    // Acceptance target: >= 2x on the repeated-candidate path.
+    {
+        let layer = layer_by_name("ResNet-K2").unwrap();
+        let space = SwSpace::new(layer.clone(), eyeriss_hw(168), res.clone());
+        let mut rng = Rng::seed_from_u64(7);
+        let pool: Vec<_> = (0..64)
+            .map(|_| space.sample_valid(&mut rng, 10_000_000).unwrap().0)
+            .collect();
+        let batch = BatchEvaluator::new(eval.clone());
+
+        let point = bench("edp_pointwise_pool64/ResNet-K2", budget, || {
+            pool.iter()
+                .map(|m| eval.edp(&layer, &space.hw, m).unwrap())
+                .sum::<f64>()
+        });
+        // warm the cache once, then measure the repeated-candidate path
+        let warm = batch.edp_batch(&layer, &space.hw, &pool);
+        assert!(warm.iter().all(|e| e.is_some()));
+        let cached = bench("edp_batch_cached_pool64/ResNet-K2", budget, || {
+            batch
+                .edp_batch(&layer, &space.hw, &pool)
+                .into_iter()
+                .map(|e| e.unwrap())
+                .sum::<f64>()
+        });
+        let speedup = point.median_ns / cached.median_ns;
+        println!(
+            "  -> repeated-candidate speedup {speedup:.1}x (cached batch vs point-wise; \
+             hit rate {:.3})",
+            batch.stats().hit_rate()
+        );
+        if !smoke {
+            assert!(
+                speedup >= 2.0,
+                "repeated-candidate path must be >= 2x point-wise (got {speedup:.2}x)"
+            );
+        }
     }
 
     // Full-model sweep: one EDP evaluation per layer of every paper model.

@@ -27,7 +27,8 @@ fn main() {
     let valid = (0..n)
         .filter(|_| hw_space.sample_raw(&mut rng).check(&res).is_ok())
         .count();
-    println!("hardware space: {valid}/{n} raw samples valid ({:.1}%)", 100.0 * valid as f64 / n as f64);
+    let pct = 100.0 * valid as f64 / n as f64;
+    println!("hardware space: {valid}/{n} raw samples valid ({pct:.1}%)");
 
     // --- software space, per layer ---
     println!("\nsoftware space feasibility (20k raw samples each):");

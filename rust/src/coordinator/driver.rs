@@ -1,8 +1,12 @@
 //! The nested co-design driver (§4.1, Fig. 1): the outer hardware BO
-//! proposes configurations; for each one, per-layer software mapping
-//! searches run in parallel worker threads; layerwise EDPs are summed and
-//! fed back; the incumbent design is checkpointed after every hardware
-//! trial. This is the leader process of the system — the CLI's `codesign`
+//! proposes configuration *batches*; each batch fans out over the worker
+//! pool as a (config x layer) cross product of per-layer software mapping
+//! searches; layerwise EDPs are summed and fed back; the incumbent design
+//! is checkpointed after every hardware trial. One evaluation cache is
+//! shared across the entire run — every software search of every layer on
+//! every hardware trial memoizes into it, so recurring design points
+//! (warmup resamples, acquisition re-picks, per-layer overlap) are computed
+//! once. This is the leader process of the system — the CLI's `codesign`
 //! subcommand is a thin wrapper over `Driver::run`.
 
 use std::path::PathBuf;
@@ -12,16 +16,21 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::parallel::{default_threads, parallel_map};
 use crate::model::arch::HwConfig;
+use crate::model::cache::EvalCache;
 use crate::model::eval::Evaluator;
+use crate::model::mapping::Mapping;
 use crate::opt::config::NestedConfig;
 use crate::opt::hw_search::{self, HwMethod, HwTrace};
-use crate::opt::sw_search::{self, SwMethod, SwProblem};
+use crate::opt::sw_search::{self, SearchTrace, SwMethod, SwProblem};
 use crate::space::hw_space::HwSpace;
 use crate::space::sw_space::SwSpace;
 use crate::surrogate::gp::GpBackend;
 use crate::util::rng::Rng;
 use crate::workloads::eyeriss::eyeriss_resources;
 use crate::workloads::specs::ModelSpec;
+
+/// Per-layer outcome of one hardware evaluation: (layer name, mapping, EDP).
+pub type LayerOutcome = Vec<(String, Mapping, f64)>;
 
 /// Result of a co-design run.
 pub struct CodesignOutcome {
@@ -41,6 +50,8 @@ pub struct Driver {
     pub threads: usize,
     pub checkpoint_path: Option<PathBuf>,
     pub verbose: bool,
+    /// Evaluation cache shared by every software search this driver runs.
+    pub cache: Arc<EvalCache>,
 }
 
 impl Driver {
@@ -52,12 +63,78 @@ impl Driver {
             threads: default_threads(),
             checkpoint_path: None,
             verbose: true,
+            cache: Arc::new(EvalCache::default()),
         }
     }
 
-    /// Evaluate one hardware configuration: parallel per-layer software
-    /// searches; returns the summed EDP and per-layer (mapping, EDP), or
+    /// Evaluate a batch of hardware configurations: the (config x layer)
+    /// cross product of software searches runs across the worker pool in
+    /// one `parallel_map`, so a warmup batch of W configs on an L-layer
+    /// model exposes W*L-way parallelism instead of L-way. Returns, per
+    /// config in order, the summed EDP and per-layer best mappings, or
     /// None if any layer has no findable mapping (the unknown constraint).
+    ///
+    /// Seeding matches the sequential formulation: config `i` of the batch
+    /// behaves as trial `seed_base + i`.
+    pub fn evaluate_hardware_batch(
+        &self,
+        model: &ModelSpec,
+        hws: &[HwConfig],
+        backend: &GpBackend,
+        metrics: &Metrics,
+        seed_base: u64,
+    ) -> Vec<Option<(f64, LayerOutcome)>> {
+        let resources = eyeriss_resources(model.num_pes);
+        let eval = Evaluator::new(resources.clone());
+        let num_layers = model.layers.len();
+        let jobs: Vec<(usize, usize)> = (0..hws.len())
+            .flat_map(|hi| (0..num_layers).map(move |li| (hi, li)))
+            .collect();
+        let backends: Vec<GpBackend> = jobs.iter().map(|_| backend.clone()).collect();
+        // Split the thread budget between this fan-out and the nested batch
+        // evaluators, so a wide (config x layer) batch doesn't oversubscribe
+        // the machine while a narrow one still uses the spare cores inside
+        // each software search's candidate batches.
+        let inner_threads = (self.threads / jobs.len().max(1)).max(1);
+
+        let traces: Vec<SearchTrace> = parallel_map(&jobs, self.threads, |j, &(hi, li)| {
+            let layer = &model.layers[li];
+            let problem = SwProblem::with_cache(
+                SwSpace::new(layer.clone(), hws[hi].clone(), resources.clone()),
+                eval.clone(),
+                Arc::clone(&self.cache),
+            )
+            .with_batch_threads(inner_threads);
+            let mut rng =
+                Rng::seed_from_u64((seed_base + hi as u64) ^ (0x9E37 * (li as u64 + 1)));
+            let trace = sw_search::search(
+                self.sw_method,
+                &problem,
+                self.ncfg.sw_trials,
+                &self.ncfg.sw_bo,
+                &backends[j],
+                &mut rng,
+            );
+            metrics.add_trace(&trace.evals, trace.raw_draws);
+            trace
+        });
+
+        (0..hws.len())
+            .map(|hi| {
+                let mut total = 0.0;
+                let mut layers = Vec::with_capacity(num_layers);
+                for li in 0..num_layers {
+                    let trace = &traces[hi * num_layers + li];
+                    let m = trace.best_mapping.clone()?; // None => unknown constraint
+                    total += trace.best_edp;
+                    layers.push((model.layers[li].name.clone(), m, trace.best_edp));
+                }
+                Some((total, layers))
+            })
+            .collect()
+    }
+
+    /// Evaluate one hardware configuration (single-element batch).
     pub fn evaluate_hardware(
         &self,
         model: &ModelSpec,
@@ -65,40 +142,10 @@ impl Driver {
         backend: &GpBackend,
         metrics: &Metrics,
         seed: u64,
-    ) -> Option<(f64, Vec<(String, crate::model::mapping::Mapping, f64)>)> {
-        let resources = eyeriss_resources(model.num_pes);
-        let eval = Evaluator::new(resources.clone());
-        let backends: Vec<GpBackend> =
-            (0..model.layers.len()).map(|_| backend.clone()).collect();
-        let items: Vec<(usize, &crate::model::workload::Layer)> =
-            model.layers.iter().enumerate().collect();
-
-        let results = parallel_map(&items, self.threads, |_, &(li, layer)| {
-            let problem = SwProblem {
-                space: SwSpace::new(layer.clone(), hw.clone(), resources.clone()),
-                eval: eval.clone(),
-            };
-            let mut rng = Rng::seed_from_u64(seed ^ (0x9E37 * (li as u64 + 1)));
-            let trace = sw_search::search(
-                self.sw_method,
-                &problem,
-                self.ncfg.sw_trials,
-                &self.ncfg.sw_bo,
-                &backends[li],
-                &mut rng,
-            );
-            metrics.add_trace(&trace.evals, trace.raw_draws);
-            trace
-        });
-
-        let mut total = 0.0;
-        let mut layers = Vec::new();
-        for (trace, layer) in results.iter().zip(model.layers.iter()) {
-            let m = trace.best_mapping.clone()?; // None => unknown constraint
-            total += trace.best_edp;
-            layers.push((layer.name.clone(), m, trace.best_edp));
-        }
-        Some((total, layers))
+    ) -> Option<(f64, LayerOutcome)> {
+        self.evaluate_hardware_batch(model, std::slice::from_ref(hw), backend, metrics, seed)
+            .pop()
+            .flatten()
     }
 
     /// Full nested co-design on a model.
@@ -110,40 +157,55 @@ impl Driver {
 
         let hw_trace = {
             let metrics_ref = Arc::clone(&metrics);
-            let inner = |hw: &HwConfig| -> Option<f64> {
-                let t = trial;
-                trial += 1;
-                let out = self.evaluate_hardware(model, hw, backend, &metrics_ref, seed + t as u64);
-                if let Some((edp, layers)) = &out {
-                    let mut guard = best.lock().unwrap();
-                    let improved = guard.as_ref().map_or(true, |b| *edp < b.best_edp);
-                    if improved {
-                        let ck = Checkpoint {
-                            model: model.name.to_string(),
-                            trial: t,
-                            best_edp: *edp,
-                            hw: hw.clone(),
-                            layers: layers.clone(),
-                        };
-                        if let Some(path) = &self.checkpoint_path {
-                            if let Err(e) = ck.save(path) {
-                                eprintln!("checkpoint save failed: {e:#}");
+            let inner = |hws: &[HwConfig]| -> Vec<Option<f64>> {
+                let base = trial;
+                trial += hws.len();
+                let outs = self.evaluate_hardware_batch(
+                    model,
+                    hws,
+                    backend,
+                    &metrics_ref,
+                    seed + base as u64,
+                );
+                outs.into_iter()
+                    .enumerate()
+                    .map(|(k, out)| {
+                        let t = base + k;
+                        if let Some((edp, layers)) = &out {
+                            let mut guard = best.lock().unwrap();
+                            let improved = guard.as_ref().map_or(true, |b| *edp < b.best_edp);
+                            if improved {
+                                let ck = Checkpoint {
+                                    model: model.name.to_string(),
+                                    trial: t,
+                                    best_edp: *edp,
+                                    hw: hws[k].clone(),
+                                    layers: layers.clone(),
+                                };
+                                if let Some(path) = &self.checkpoint_path {
+                                    if let Err(e) = ck.save(path) {
+                                        eprintln!("checkpoint save failed: {e:#}");
+                                    }
+                                }
+                                *guard = Some(ck);
                             }
+                            if self.verbose {
+                                let best_edp =
+                                    guard.as_ref().map(|b| b.best_edp).unwrap_or(*edp);
+                                eprintln!(
+                                    "[{}] hw trial {t}: edp {:.3e} (best {:.3e})",
+                                    model.name, edp, best_edp
+                                );
+                            }
+                        } else if self.verbose {
+                            eprintln!(
+                                "[{}] hw trial {t}: infeasible (no mapping found)",
+                                model.name
+                            );
                         }
-                        *guard = Some(ck);
-                    }
-                    if self.verbose {
-                        eprintln!(
-                            "[{}] hw trial {t}: edp {:.3e} (best {:.3e})",
-                            model.name,
-                            edp,
-                            best.lock().unwrap().as_ref().map(|b| b.best_edp).unwrap_or(*edp)
-                        );
-                    }
-                } else if self.verbose {
-                    eprintln!("[{}] hw trial {t}: infeasible (no mapping found)", model.name);
-                }
-                out.map(|(edp, _)| edp)
+                        out.map(|(edp, _)| edp)
+                    })
+                    .collect()
             };
 
             let mut rng = Rng::seed_from_u64(seed);
@@ -158,6 +220,7 @@ impl Driver {
             )
         };
 
+        metrics.record_cache(self.cache.stats());
         CodesignOutcome { hw_trace, best: best.into_inner().unwrap(), metrics }
     }
 }
@@ -171,7 +234,7 @@ pub fn eyeriss_baseline(
     backend: &GpBackend,
     threads: usize,
     seed: u64,
-) -> Option<(f64, Vec<(String, crate::model::mapping::Mapping, f64)>)> {
+) -> Option<(f64, LayerOutcome)> {
     let driver = Driver {
         ncfg: NestedConfig {
             sw_trials,
@@ -182,6 +245,7 @@ pub fn eyeriss_baseline(
         threads,
         checkpoint_path: None,
         verbose: false,
+        cache: Arc::new(EvalCache::default()),
     };
     let metrics = Metrics::new();
     let hw = crate::workloads::eyeriss::eyeriss_hw(model.num_pes);
@@ -247,5 +311,49 @@ mod tests {
             assert_eq!(ck.model, "dqn");
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batch_evaluation_matches_single_and_shares_cache() {
+        let model = dqn();
+        let driver = {
+            let mut d = Driver::new(tiny_cfg());
+            d.verbose = false;
+            d.threads = 2;
+            d.sw_method = SwMethod::Random;
+            d
+        };
+        let hw = crate::workloads::eyeriss::eyeriss_hw(model.num_pes);
+        let metrics = Metrics::new();
+        // a batch of two identical configs with identical seeds must agree
+        // with the single-config evaluation at the same seed
+        let batch = driver.evaluate_hardware_batch(
+            &model,
+            &[hw.clone(), hw.clone()],
+            &GpBackend::Native,
+            &metrics,
+            5,
+        );
+        let single = driver.evaluate_hardware(&model, &hw, &GpBackend::Native, &metrics, 5);
+        assert_eq!(batch.len(), 2);
+        let (batch_edp, _) = batch[0].as_ref().expect("eyeriss mappable");
+        let (single_edp, _) = single.as_ref().expect("eyeriss mappable");
+        assert_eq!(batch_edp.to_bits(), single_edp.to_bits());
+        // the second, identical evaluation ran fully warm
+        let stats = driver.cache.stats();
+        assert!(stats.hits > 0, "identical configs must hit the shared cache: {stats:?}");
+    }
+
+    #[test]
+    fn run_surfaces_cache_telemetry() {
+        let mut driver = Driver::new(tiny_cfg());
+        driver.verbose = false;
+        driver.threads = 2;
+        driver.sw_method = SwMethod::Random;
+        let out = driver.run(&dqn(), &GpBackend::Native, 9);
+        let report = out.metrics.report();
+        assert!(report.contains("cache_hits="), "{report}");
+        let stats = driver.cache.stats();
+        assert!(stats.hits + stats.misses > 0, "evaluations must route through the cache");
     }
 }

@@ -1,17 +1,29 @@
 //! Run metrics: aggregate telemetry across the nested search (simulator
-//! evaluations, rejection-sampling draws, feasibility rates, wall time).
+//! evaluations, rejection-sampling draws, feasibility rates, wall time,
+//! evaluation-cache hit/miss/eviction counts from `model::cache`).
 //! Reported at the end of every CLI run and recorded in EXPERIMENTS.md.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::model::cache::CacheStats;
+
 #[derive(Debug)]
 pub struct Metrics {
+    /// Evaluations *requested* by the searches (trace length). With the
+    /// memoized engine this includes cache hits; the number of cost-model
+    /// invocations that actually ran is `cache_misses`.
     pub sim_evals: AtomicU64,
     pub raw_draws: AtomicU64,
     pub feasible_evals: AtomicU64,
     pub gp_fits: AtomicU64,
+    /// Evaluation-cache snapshot (stored, not accumulated: the cache keeps
+    /// its own monotone counters).
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub cache_evictions: AtomicU64,
+    pub cache_entries: AtomicU64,
     start: Instant,
 }
 
@@ -22,8 +34,30 @@ impl Metrics {
             raw_draws: AtomicU64::new(0),
             feasible_evals: AtomicU64::new(0),
             gp_fits: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            cache_evictions: AtomicU64::new(0),
+            cache_entries: AtomicU64::new(0),
             start: Instant::now(),
         })
+    }
+
+    /// Surface an evaluation-cache snapshot in the run telemetry.
+    pub fn record_cache(&self, stats: CacheStats) {
+        self.cache_hits.store(stats.hits, Ordering::Relaxed);
+        self.cache_misses.store(stats.misses, Ordering::Relaxed);
+        self.cache_evictions.store(stats.evictions, Ordering::Relaxed);
+        self.cache_entries.store(stats.entries, Ordering::Relaxed);
+    }
+
+    /// Fraction of evaluation requests served from the cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hits = self.cache_hits.load(Ordering::Relaxed) as f64;
+        let misses = self.cache_misses.load(Ordering::Relaxed) as f64;
+        if hits + misses == 0.0 {
+            return 0.0;
+        }
+        hits / (hits + misses)
     }
 
     pub fn add_trace(&self, evals: &[f64], raw_draws: u64) {
@@ -52,11 +86,18 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "sim_evals={} feasible={} raw_draws={} feasibility_rate={:.5} elapsed={:.1}s",
+            "sim_evals={} feasible={} raw_draws={} feasibility_rate={:.5} \
+             cache_hits={} cache_misses={} cache_hit_rate={:.3} cache_evictions={} \
+             cache_entries={} elapsed={:.1}s",
             self.sim_evals.load(Ordering::Relaxed),
             self.feasible_evals.load(Ordering::Relaxed),
             self.raw_draws.load(Ordering::Relaxed),
             self.feasibility_rate(),
+            self.cache_hits.load(Ordering::Relaxed),
+            self.cache_misses.load(Ordering::Relaxed),
+            self.cache_hit_rate(),
+            self.cache_evictions.load(Ordering::Relaxed),
+            self.cache_entries.load(Ordering::Relaxed),
             self.elapsed_secs()
         )
     }
@@ -81,5 +122,17 @@ mod tests {
         assert_eq!(m.feasible_evals.load(Ordering::Relaxed), 8);
         assert_eq!(m.raw_draws.load(Ordering::Relaxed), 400);
         assert!(m.report().contains("sim_evals=12"));
+    }
+
+    #[test]
+    fn cache_snapshot_is_stored_not_accumulated() {
+        let m = Metrics::new();
+        m.record_cache(CacheStats { hits: 10, misses: 30, evictions: 2, entries: 25 });
+        m.record_cache(CacheStats { hits: 30, misses: 30, evictions: 2, entries: 25 });
+        assert_eq!(m.cache_hits.load(Ordering::Relaxed), 30);
+        assert!((m.cache_hit_rate() - 0.5).abs() < 1e-12);
+        let report = m.report();
+        assert!(report.contains("cache_hits=30"));
+        assert!(report.contains("cache_hit_rate=0.500"));
     }
 }

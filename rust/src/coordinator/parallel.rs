@@ -3,7 +3,7 @@
 //! concurrently, and by the figure harnesses for repeats.
 
 /// Apply `f` to each item on its own thread (bounded by `max_threads`) and
-//  collect results in input order.
+/// collect results in input order.
 pub fn parallel_map<T, R, F>(items: &[T], max_threads: usize, f: F) -> Vec<R>
 where
     T: Sync,

@@ -33,10 +33,10 @@ pub const FIG3_LAYERS: [&str; 4] = ["ResNet-K2", "DQN-K2", "MLP-K2", "Transforme
 pub fn problem_for(layer_name: &str) -> SwProblem {
     let layer = layer_by_name(layer_name).expect("known layer");
     let num_pes = if layer_name.starts_with("Transformer") { 256 } else { 168 };
-    SwProblem {
-        space: SwSpace::new(layer, eyeriss_hw(num_pes), eyeriss_resources(num_pes)),
-        eval: Evaluator::new(eyeriss_resources(num_pes)),
-    }
+    SwProblem::new(
+        SwSpace::new(layer, eyeriss_hw(num_pes), eyeriss_resources(num_pes)),
+        Evaluator::new(eyeriss_resources(num_pes)),
+    )
 }
 
 /// Run the Fig. 3 sweep over the given layers; returns the CSV path.

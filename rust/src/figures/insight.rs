@@ -58,10 +58,10 @@ pub fn run(
     ]);
     let mut rows = Vec::new();
     for layer in &model.layers {
-        let problem = SwProblem {
-            space: SwSpace::new(layer.clone(), hw.clone(), resources.clone()),
-            eval: Evaluator::new(resources.clone()),
-        };
+        let problem = SwProblem::new(
+            SwSpace::new(layer.clone(), hw.clone(), resources.clone()),
+            Evaluator::new(resources.clone()),
+        );
         let cfg = BoConfig::software();
         let mut rng_bo = Rng::seed_from_u64(opts.seed);
         let bo =

@@ -131,8 +131,7 @@ fn cmd_quickstart(args: &Args) -> Result<()> {
     println!("layer {layer_name}: {layer:?}");
     println!("{}", insight::describe_hw("hardware (Eyeriss)", &hw));
 
-    let problem =
-        SwProblem { space: SwSpace::new(layer.clone(), hw.clone(), res), eval: eval.clone() };
+    let problem = SwProblem::new(SwSpace::new(layer.clone(), hw.clone(), res), eval.clone());
     let trials = args.get("trials", 100usize)?;
     let mut rng = Rng::seed_from_u64(args.get("seed", 0u64)?);
     let trace = search(

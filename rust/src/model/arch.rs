@@ -8,7 +8,7 @@ use super::workload::Dim;
 /// streams it one element at a time from above (Streamed, option 2). This is
 /// a *hardware* property (it fixes PE control logic) that constrains which
 /// software blockings are valid.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum DataflowOpt {
     FullAtPe,
     Streamed,
@@ -74,8 +74,10 @@ impl Resources {
     }
 }
 
-/// A hardware design point (paper Fig. 6, H1-H12).
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// A hardware design point (paper Fig. 6, H1-H12). `Hash` hashes the full
+/// canonical parameter tuple, so configs can key memoization tables (see
+/// `model::cache`).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct HwConfig {
     /// H1: PE array width. H1*H2 = num_pes.
     pub pe_mesh_x: u64,

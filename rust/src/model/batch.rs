@@ -1,0 +1,342 @@
+//! Batched, memoized evaluation: the single entry point every optimizer
+//! routes its simulator calls through.
+//!
+//! A [`BatchEvaluator`] wraps the deterministic [`Evaluator`] with (1) a
+//! sharded concurrent result cache ([`EvalCache`]) keyed by the canonical
+//! design-point encoding, and (2) batch submission: slices of
+//! `(Layer, HwConfig, Mapping)` candidates are first resolved against the
+//! cache, and only the misses are computed — in parallel across
+//! `coordinator::parallel_map` worker threads once the batch is large enough
+//! to amortize thread spawn. Results are returned in request order and are
+//! bit-identical to point-wise `Evaluator::evaluate` calls (asserted by
+//! `tests/property_invariants.rs`).
+//!
+//! Sharing: `BatchEvaluator` is `Clone`; clones share the cache through an
+//! `Arc`, which is how the co-design driver gets cross-round and cross-layer
+//! reuse, and how `runtime::server::EvalService` keeps serving requests warm.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::arch::HwConfig;
+use super::cache::{CacheStats, DesignKey, EvalCache, EvalOutcome};
+use super::eval::{Evaluator, Infeasible};
+use super::mapping::Mapping;
+use super::workload::Layer;
+use crate::coordinator::parallel::{default_threads, parallel_map};
+
+/// One evaluation request (borrowed; batches are cheap to assemble).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalRequest<'a> {
+    pub layer: &'a Layer,
+    pub hw: &'a HwConfig,
+    pub mapping: &'a Mapping,
+}
+
+/// Fold the evaluator's resource budget and energy constants into a single
+/// fingerprint, so a cache shared between components can never serve results
+/// computed under a different cost model (FNV-1a over the raw bits).
+fn evaluator_fingerprint(eval: &Evaluator) -> u64 {
+    let r = &eval.resources;
+    let e = &eval.energy_model;
+    let words = [
+        r.num_pes,
+        r.local_buffer_entries,
+        r.global_buffer_entries,
+        r.dram_words_per_cycle.to_bits(),
+        r.gb_words_per_cycle_per_instance.to_bits(),
+        e.mac_pj.to_bits(),
+        e.spad_base_pj.to_bits(),
+        e.spad_slope_pj.to_bits(),
+        e.glb_base_pj.to_bits(),
+        e.glb_slope_pj.to_bits(),
+        e.dram_pj.to_bits(),
+        e.noc_hop_pj.to_bits(),
+        e.clock_ns.to_bits(),
+    ];
+    words
+        .iter()
+        .fold(0xcbf29ce484222325u64, |h, &w| (h ^ w).wrapping_mul(0x100000001b3))
+}
+
+/// Batched, memoized front-end over [`Evaluator`].
+#[derive(Clone, Debug)]
+pub struct BatchEvaluator {
+    eval: Evaluator,
+    cache: Arc<EvalCache>,
+    threads: usize,
+    /// Below this many cache misses a batch is computed inline — one
+    /// evaluation costs microseconds, so thread spawn would dominate.
+    parallel_threshold: usize,
+    fingerprint: u64,
+}
+
+impl BatchEvaluator {
+    /// A batch evaluator with its own cache and default worker count.
+    pub fn new(eval: Evaluator) -> Self {
+        Self::with_cache(eval, Arc::new(EvalCache::default()))
+    }
+
+    /// A batch evaluator sharing an existing cache (cross-component reuse).
+    /// The cache key embeds the evaluator fingerprint, so sharing a cache
+    /// between different resource budgets is safe (entries never mix).
+    pub fn with_cache(eval: Evaluator, cache: Arc<EvalCache>) -> Self {
+        let fingerprint = evaluator_fingerprint(&eval);
+        BatchEvaluator {
+            eval,
+            cache,
+            threads: default_threads(),
+            parallel_threshold: 32,
+            fingerprint,
+        }
+    }
+
+    /// Override the worker-thread cap for miss computation.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// The wrapped point-wise evaluator.
+    pub fn evaluator(&self) -> &Evaluator {
+        &self.eval
+    }
+
+    /// The shared cache handle.
+    pub fn cache(&self) -> &Arc<EvalCache> {
+        &self.cache
+    }
+
+    /// Cache telemetry snapshot.
+    pub fn stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    fn key(&self, layer: &Layer, hw: &HwConfig, m: &Mapping) -> DesignKey {
+        DesignKey::new(self.fingerprint, layer, hw, m)
+    }
+
+    /// Evaluate one design point through the cache.
+    pub fn evaluate(&self, layer: &Layer, hw: &HwConfig, m: &Mapping) -> EvalOutcome {
+        let key = self.key(layer, hw, m);
+        if let Some(outcome) = self.cache.get(&key) {
+            return outcome;
+        }
+        let outcome = self.eval.evaluate(layer, hw, m);
+        self.cache.insert(key, outcome.clone());
+        outcome
+    }
+
+    /// EDP of one design point through the cache (the optimizer objective).
+    pub fn edp(&self, layer: &Layer, hw: &HwConfig, m: &Mapping) -> Result<f64, Infeasible> {
+        self.evaluate(layer, hw, m).map(|met| met.edp)
+    }
+
+    /// Evaluate a batch: cache hits are resolved first, the remaining
+    /// misses are deduplicated by canonical key (identical design points
+    /// requested twice in one batch are computed once), computed — in
+    /// parallel when the unique-miss count crosses the threshold — and
+    /// inserted. Results come back in request order.
+    pub fn evaluate_batch(&self, requests: &[EvalRequest<'_>]) -> Vec<EvalOutcome> {
+        let mut out: Vec<Option<EvalOutcome>> = vec![None; requests.len()];
+        // Unique misses in first-occurrence order, plus which unique slot
+        // each missing request resolves to.
+        let mut unique_keys: Vec<DesignKey> = Vec::new();
+        let mut unique_rep: Vec<usize> = Vec::new();
+        let mut assign: Vec<(usize, usize)> = Vec::new();
+        let mut seen: HashMap<DesignKey, usize> = HashMap::new();
+        for (i, r) in requests.iter().enumerate() {
+            let key = self.key(r.layer, r.hw, r.mapping);
+            if let Some(&slot) = seen.get(&key) {
+                // duplicate of an in-flight miss: resolved from the result
+                // computed below — an avoided invocation, so count a hit
+                self.cache.note_hits(1);
+                assign.push((i, slot));
+                continue;
+            }
+            match self.cache.get(&key) {
+                Some(outcome) => out[i] = Some(outcome),
+                None => {
+                    let slot = unique_keys.len();
+                    seen.insert(key.clone(), slot);
+                    unique_keys.push(key);
+                    unique_rep.push(i);
+                    assign.push((i, slot));
+                }
+            }
+        }
+
+        let computed: Vec<EvalOutcome> =
+            if unique_rep.len() < self.parallel_threshold || self.threads <= 1 {
+                unique_rep
+                    .iter()
+                    .map(|&i| {
+                        let r = &requests[i];
+                        self.eval.evaluate(r.layer, r.hw, r.mapping)
+                    })
+                    .collect()
+            } else {
+                parallel_map(&unique_rep, self.threads, |_, &i| {
+                    let r = &requests[i];
+                    self.eval.evaluate(r.layer, r.hw, r.mapping)
+                })
+            };
+
+        for (key, outcome) in unique_keys.into_iter().zip(computed.iter()) {
+            self.cache.insert(key, outcome.clone());
+        }
+        for (i, slot) in assign {
+            out[i] = Some(computed[slot].clone());
+        }
+        out.into_iter().map(|o| o.expect("every request resolved")).collect()
+    }
+
+    /// Batch over many mappings of one `(layer, hardware)` pair — the shape
+    /// of every software-search candidate sweep.
+    pub fn evaluate_mappings(
+        &self,
+        layer: &Layer,
+        hw: &HwConfig,
+        mappings: &[Mapping],
+    ) -> Vec<EvalOutcome> {
+        let requests: Vec<EvalRequest<'_>> =
+            mappings.iter().map(|m| EvalRequest { layer, hw, mapping: m }).collect();
+        self.evaluate_batch(&requests)
+    }
+
+    /// EDP-only convenience over [`Self::evaluate_mappings`] (`None` =
+    /// infeasible), matching the optimizers' objective signature.
+    pub fn edp_batch(
+        &self,
+        layer: &Layer,
+        hw: &HwConfig,
+        mappings: &[Mapping],
+    ) -> Vec<Option<f64>> {
+        self.evaluate_mappings(layer, hw, mappings)
+            .into_iter()
+            .map(|o| o.ok().map(|met| met.edp))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::Resources;
+    use crate::space::sw_space::SwSpace;
+    use crate::util::rng::Rng;
+    use crate::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+    use crate::workloads::specs::layer_by_name;
+
+    fn setup(n: usize) -> (Layer, HwConfig, Vec<Mapping>, Evaluator) {
+        let layer = layer_by_name("DQN-K2").unwrap();
+        let hw = eyeriss_hw(168);
+        let space = SwSpace::new(layer.clone(), hw.clone(), eyeriss_resources(168));
+        let mut rng = Rng::seed_from_u64(11);
+        let mappings: Vec<Mapping> =
+            (0..n).map(|_| space.sample_valid(&mut rng, 10_000_000).unwrap().0).collect();
+        (layer, hw, mappings, Evaluator::new(Resources::eyeriss_168()))
+    }
+
+    #[test]
+    fn batch_matches_pointwise_bit_exact() {
+        let (layer, hw, mappings, eval) = setup(20);
+        let batch = BatchEvaluator::new(eval.clone());
+        let got = batch.evaluate_mappings(&layer, &hw, &mappings);
+        for (m, outcome) in mappings.iter().zip(got.iter()) {
+            let direct = eval.evaluate(&layer, &hw, m);
+            match (outcome, direct) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+                    assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+                    assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+                }
+                (Err(a), Err(b)) => assert_eq!(*a, b),
+                (a, b) => panic!("batched {a:?} vs point-wise {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn second_pass_is_all_hits() {
+        let (layer, hw, mappings, eval) = setup(10);
+        let batch = BatchEvaluator::new(eval);
+        let first = batch.edp_batch(&layer, &hw, &mappings);
+        let stats = batch.stats();
+        assert_eq!(stats.misses, 10);
+        assert_eq!(stats.hits, 0);
+        let second = batch.edp_batch(&layer, &hw, &mappings);
+        let stats = batch.stats();
+        assert_eq!(stats.hits, 10);
+        assert_eq!(stats.misses, 10);
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn duplicates_inside_one_batch_resolve_consistently() {
+        let (layer, hw, mut mappings, eval) = setup(3);
+        mappings.push(mappings[0].clone());
+        mappings.push(mappings[0].clone());
+        let batch = BatchEvaluator::new(eval);
+        let got = batch.edp_batch(&layer, &hw, &mappings);
+        assert_eq!(got[0], got[3]);
+        assert_eq!(got[0], got[4]);
+        let stats = batch.stats();
+        assert_eq!(stats.entries, 3);
+        // the two duplicates were not recomputed: counted as hits
+        assert_eq!(stats.misses, 3);
+        assert_eq!(stats.hits, 2);
+    }
+
+    #[test]
+    fn large_batch_takes_parallel_path_and_matches() {
+        let (layer, hw, mappings, eval) = setup(80);
+        let batch = BatchEvaluator::new(eval.clone()).with_threads(4);
+        let got = batch.edp_batch(&layer, &hw, &mappings);
+        for (m, o) in mappings.iter().zip(got) {
+            assert_eq!(o, eval.edp(&layer, &hw, m).ok());
+        }
+    }
+
+    #[test]
+    fn infeasible_points_are_cached_too() {
+        let (layer, hw, mut mappings, eval) = setup(1);
+        // corrupt the factor product so the validator rejects it
+        mappings[0].split_mut(crate::model::workload::Dim::C).dram += 1;
+        let batch = BatchEvaluator::new(eval);
+        assert_eq!(batch.edp_batch(&layer, &hw, &mappings), vec![None]);
+        assert_eq!(batch.edp_batch(&layer, &hw, &mappings), vec![None]);
+        let stats = batch.stats();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 1);
+    }
+
+    #[test]
+    fn clones_share_the_cache() {
+        let (layer, hw, mappings, eval) = setup(5);
+        let a = BatchEvaluator::new(eval);
+        let b = a.clone();
+        let _ = a.edp_batch(&layer, &hw, &mappings);
+        let _ = b.edp_batch(&layer, &hw, &mappings);
+        let stats = b.stats();
+        assert_eq!(stats.misses, 5);
+        assert_eq!(stats.hits, 5);
+    }
+
+    #[test]
+    fn different_budgets_never_mix_in_a_shared_cache() {
+        let (layer, _hw, mappings, _) = setup(1);
+        let cache = Arc::new(EvalCache::default());
+        let hw168 = eyeriss_hw(168);
+        let base_eval = Evaluator::new(Resources::eyeriss_168());
+        let a = BatchEvaluator::with_cache(base_eval, Arc::clone(&cache));
+        let mut em = Evaluator::new(Resources::eyeriss_168());
+        em.energy_model.dram_pj *= 2.0;
+        let b = BatchEvaluator::with_cache(em, cache);
+        let ea = a.edp_batch(&layer, &hw168, &mappings)[0];
+        let eb = b.edp_batch(&layer, &hw168, &mappings)[0];
+        // both computed (no false hit), and the doubled DRAM energy shows up
+        assert_eq!(b.stats().hits, 0);
+        assert!(eb.unwrap() > ea.unwrap());
+    }
+}

@@ -1,0 +1,376 @@
+//! Sharded concurrent memoization cache for design-point evaluations.
+//!
+//! The constrained BO of the paper spends nearly all wall-clock inside
+//! repeated cost-model invocations over a semi-discrete space where
+//! candidates recur constantly — across acquisition sweeps, restarts,
+//! per-layer searches and rounds. The cache exploits the evaluator's
+//! determinism: a design point `(Layer, HwConfig, Mapping)` is reduced to an
+//! exact canonical key ([`DesignKey`]) and its full evaluation outcome
+//! (`Metrics` or the `Infeasible` reason) is stored in one of N
+//! mutex-protected shards, selected by the key's hash so concurrent worker
+//! threads rarely contend.
+//!
+//! Keys are *injective* encodings, not lossy hashes: two distinct hardware
+//! configs or mappings can never collide (the `HashMap` resolves bucket
+//! collisions through full key equality). Capacity is bounded per shard with
+//! FIFO eviction; hit/miss/eviction counters feed `coordinator::metrics`.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::arch::HwConfig;
+use super::energy::Metrics;
+use super::eval::Infeasible;
+use super::mapping::Mapping;
+use super::workload::{Layer, DIMS};
+
+/// Outcome of one evaluation, exactly as `Evaluator::evaluate` returns it.
+pub type EvalOutcome = Result<Metrics, Infeasible>;
+
+/// Exact canonical encoding of one design point (plus the evaluator
+/// fingerprint, so caches shared across components can never mix results
+/// from different resource budgets or energy models).
+///
+/// The encoding is injective: every field of the layer shape, the H1-H12
+/// hardware parameters, the S1-S6 blocking factors and the S7-S9 loop
+/// orders maps to its own slot. Layer *names* are deliberately excluded —
+/// the cost model only reads the shape, so identically-shaped layers share
+/// cache entries.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct DesignKey {
+    evaluator: u64,
+    layer: [u64; 7],
+    hw: [u64; 12],
+    splits: [u64; 30],
+    orders: [u8; 18],
+}
+
+impl DesignKey {
+    pub fn new(evaluator_fingerprint: u64, layer: &Layer, hw: &HwConfig, m: &Mapping) -> Self {
+        let mut splits = [0u64; 30];
+        for d in DIMS {
+            let s = m.split(d);
+            let base = d.index() * 5;
+            splits[base] = s.dram;
+            splits[base + 1] = s.glb;
+            splits[base + 2] = s.spatial_x;
+            splits[base + 3] = s.spatial_y;
+            splits[base + 4] = s.local;
+        }
+        let mut orders = [0u8; 18];
+        for (slot, group) in [&m.order_local, &m.order_glb, &m.order_dram].iter().enumerate() {
+            for (i, d) in group.iter().enumerate() {
+                orders[slot * 6 + i] = d.index() as u8;
+            }
+        }
+        DesignKey {
+            evaluator: evaluator_fingerprint,
+            layer: [layer.r, layer.s, layer.p, layer.q, layer.c, layer.k, layer.stride],
+            hw: [
+                hw.pe_mesh_x,
+                hw.pe_mesh_y,
+                hw.lb_inputs,
+                hw.lb_weights,
+                hw.lb_outputs,
+                hw.gb_instances,
+                hw.gb_mesh_x,
+                hw.gb_mesh_y,
+                hw.gb_block,
+                hw.gb_cluster,
+                hw.df_filter_w.code() as u64,
+                hw.df_filter_h.code() as u64,
+            ],
+            splits,
+            orders,
+        }
+    }
+
+    fn shard_of(&self, shards: usize) -> usize {
+        let mut h = DefaultHasher::new();
+        self.hash(&mut h);
+        (h.finish() % shards as u64) as usize
+    }
+}
+
+/// Counter snapshot surfaced through `coordinator::metrics`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+#[derive(Debug, Default)]
+struct Shard {
+    map: HashMap<DesignKey, EvalOutcome>,
+    /// Insertion order for FIFO eviction; holds each resident key once.
+    fifo: VecDeque<DesignKey>,
+}
+
+/// The sharded concurrent cache. Cheap to share via `Arc`; every method
+/// takes `&self`.
+#[derive(Debug)]
+pub struct EvalCache {
+    shards: Vec<Mutex<Shard>>,
+    capacity_per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Default shard count: enough that 8 worker threads rarely collide.
+pub const DEFAULT_SHARDS: usize = 16;
+/// Default total capacity in entries (each costs roughly a kilobyte: the
+/// canonical key is stored in the map and the FIFO, plus the `Metrics`).
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        EvalCache::new(DEFAULT_SHARDS, DEFAULT_CAPACITY)
+    }
+}
+
+impl EvalCache {
+    /// A cache with `shards` shards and `capacity` total entries.
+    pub fn new(shards: usize, capacity: usize) -> Self {
+        let shards = shards.max(1);
+        let capacity_per_shard = (capacity / shards).max(1);
+        EvalCache {
+            shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
+            capacity_per_shard,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a design point; counts a hit or a miss.
+    pub fn get(&self, key: &DesignKey) -> Option<EvalOutcome> {
+        let shard = self.shards[key.shard_of(self.shards.len())].lock().unwrap();
+        match shard.map.get(key) {
+            Some(v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert an outcome, evicting FIFO-oldest entries beyond capacity.
+    /// Re-inserting an existing key refreshes the value without growing the
+    /// FIFO (the evaluator is deterministic, so the value is identical).
+    pub fn insert(&self, key: DesignKey, outcome: EvalOutcome) {
+        let mut shard = self.shards[key.shard_of(self.shards.len())].lock().unwrap();
+        if shard.map.insert(key.clone(), outcome).is_none() {
+            shard.fifo.push_back(key);
+        }
+        while shard.map.len() > self.capacity_per_shard {
+            let Some(old) = shard.fifo.pop_front() else { break };
+            shard.map.remove(&old);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count `n` extra hits that were served without a map lookup — the
+    /// batch engine calls this when duplicate requests inside one batch
+    /// resolve against the just-computed result, so `hit_rate()` still
+    /// reflects every avoided cost-model invocation.
+    pub fn note_hits(&self, n: u64) {
+        self.hits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Number of resident entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (counters are preserved).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            let mut s = s.lock().unwrap();
+            s.map.clear();
+            s.fifo.clear();
+        }
+    }
+
+    /// Snapshot of the telemetry counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::{DataflowOpt, Resources};
+    use crate::model::eval::Evaluator;
+    use crate::model::workload::Dim;
+
+    fn hw() -> HwConfig {
+        HwConfig {
+            pe_mesh_x: 14,
+            pe_mesh_y: 12,
+            lb_inputs: 12,
+            lb_weights: 192,
+            lb_outputs: 16,
+            gb_instances: 1,
+            gb_mesh_x: 1,
+            gb_mesh_y: 1,
+            gb_block: 4,
+            gb_cluster: 2,
+            df_filter_w: DataflowOpt::Streamed,
+            df_filter_h: DataflowOpt::Streamed,
+        }
+    }
+
+    fn scenario() -> (Layer, HwConfig, Mapping) {
+        let l = Layer::conv("t", 3, 3, 8, 8, 16, 32, 1);
+        let m = Mapping::trivial(&l);
+        (l, hw(), m)
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let (l, h, m) = scenario();
+        let cache = EvalCache::default();
+        let key = DesignKey::new(1, &l, &h, &m);
+        assert!(cache.get(&key).is_none());
+        let outcome = Evaluator::new(Resources::eyeriss_168()).evaluate(&l, &h, &m);
+        cache.insert(key.clone(), outcome.clone());
+        let back = cache.get(&key).expect("inserted entry must hit");
+        assert_eq!(back.as_ref().map(|x| x.edp), outcome.as_ref().map(|x| x.edp));
+        let stats = cache.stats();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.entries, 1);
+        assert_eq!(stats.evictions, 0);
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_hw_and_mapping_give_distinct_keys() {
+        let (l, h, m) = scenario();
+        let base = DesignKey::new(1, &l, &h, &m);
+
+        // every hardware parameter must reach the key
+        let mut h2 = h.clone();
+        h2.gb_block = 8;
+        assert_ne!(base, DesignKey::new(1, &l, &h2, &m));
+        let mut h3 = h.clone();
+        h3.df_filter_w = DataflowOpt::FullAtPe;
+        assert_ne!(base, DesignKey::new(1, &l, &h3, &m));
+
+        // every mapping parameter must reach the key
+        let mut m2 = m.clone();
+        m2.split_mut(Dim::C).dram /= 2;
+        m2.split_mut(Dim::C).glb = 2;
+        assert_ne!(base, DesignKey::new(1, &l, &h, &m2));
+        let mut m3 = m.clone();
+        m3.order_dram.swap(0, 5);
+        assert_ne!(base, DesignKey::new(1, &l, &h, &m3));
+
+        // different evaluator fingerprints never mix
+        assert_ne!(base, DesignKey::new(2, &l, &h, &m));
+
+        // same shape under a different layer *name* is the same point
+        let renamed = Layer::conv("other-name", 3, 3, 8, 8, 16, 32, 1);
+        assert_eq!(base, DesignKey::new(1, &renamed, &h, &m));
+    }
+
+    #[test]
+    fn fifo_eviction_bounds_capacity() {
+        let (l, h, m) = scenario();
+        // single shard, two entries max
+        let cache = EvalCache::new(1, 2);
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let outcome = ev.evaluate(&l, &h, &m);
+        for fp in 0..5u64 {
+            cache.insert(DesignKey::new(fp, &l, &h, &m), outcome.clone());
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 2);
+        assert_eq!(stats.evictions, 3);
+        // oldest evicted, newest resident
+        assert!(cache.get(&DesignKey::new(0, &l, &h, &m)).is_none());
+        assert!(cache.get(&DesignKey::new(4, &l, &h, &m)).is_some());
+    }
+
+    #[test]
+    fn reinsert_does_not_duplicate_or_evict() {
+        let (l, h, m) = scenario();
+        let cache = EvalCache::new(1, 2);
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let key = DesignKey::new(7, &l, &h, &m);
+        for _ in 0..10 {
+            cache.insert(key.clone(), ev.evaluate(&l, &h, &m));
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 1);
+        assert_eq!(stats.evictions, 0);
+    }
+
+    #[test]
+    fn concurrent_access_is_consistent() {
+        let (l, h, m) = scenario();
+        let cache = EvalCache::default();
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let cache = &cache;
+                let ev = &ev;
+                let (l, h, m) = (&l, &h, &m);
+                s.spawn(move || {
+                    for fp in 0..50u64 {
+                        let key = DesignKey::new(fp ^ (t << 32), l, h, m);
+                        if cache.get(&key).is_none() {
+                            cache.insert(key, ev.evaluate(l, h, m));
+                        }
+                    }
+                });
+            }
+        });
+        let stats = cache.stats();
+        assert_eq!(stats.hits + stats.misses, 200);
+        assert!(stats.entries as usize <= DEFAULT_CAPACITY);
+        assert!(cache.len() >= 50, "at least the 50 distinct fps of one thread");
+    }
+
+    #[test]
+    fn clear_preserves_counters() {
+        let (l, h, m) = scenario();
+        let cache = EvalCache::default();
+        let key = DesignKey::new(1, &l, &h, &m);
+        cache.insert(key.clone(), Evaluator::new(Resources::eyeriss_168()).evaluate(&l, &h, &m));
+        let _ = cache.get(&key);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().hits, 1);
+    }
+}

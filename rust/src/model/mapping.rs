@@ -27,7 +27,7 @@ pub const TEMPORAL_LEVELS: [Level; 3] = [Level::Local, Level::Glb, Level::Dram];
 /// Blocking factors of one loop dimension across the hierarchy.
 /// Invariant (checked by the validator): dram*glb*spatial_x*spatial_y*local
 /// equals the layer's extent for this dimension.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Split {
     pub dram: u64,
     pub glb: u64,
@@ -61,7 +61,9 @@ impl Split {
 }
 
 /// A full software mapping for one layer on one hardware configuration.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// `Hash` hashes the full canonical (splits, orders) tuple, so mappings can
+/// key memoization tables (see `model::cache`).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct Mapping {
     /// Blocking factors indexed by `Dim::index()` (S1-S6).
     pub splits: [Split; 6],

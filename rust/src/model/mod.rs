@@ -4,6 +4,8 @@
 //! notes relative to the paper's Timeloop infrastructure.
 
 pub mod arch;
+pub mod batch;
+pub mod cache;
 pub mod energy;
 pub mod eval;
 pub mod mapping;
@@ -12,6 +14,8 @@ pub mod validity;
 pub mod workload;
 
 pub use arch::{DataflowOpt, HwConfig, HwViolation, Resources};
+pub use batch::{BatchEvaluator, EvalRequest};
+pub use cache::{CacheStats, DesignKey, EvalCache};
 pub use energy::{EnergyModel, Metrics};
 pub use eval::{Evaluator, Infeasible};
 pub use mapping::{Level, Mapping, Split};

@@ -16,12 +16,16 @@ pub fn search(problem: &SwProblem, trials: usize, rng: &mut Rng) -> SearchTrace 
     let sweep = ((trials as f64 * SWEEP_FRACTION) as usize).max(1);
     let max_draws = 2_000_000u64;
 
-    // Phase 1: random sweep.
+    // Phase 1: random sweep — independent draws, evaluated as one batch.
+    let mut candidates = Vec::with_capacity(sweep);
     for _ in 0..sweep {
         let Some((m, d)) = problem.space.sample_valid(rng, max_draws) else { break };
         trace.raw_draws += d;
-        let edp = problem.edp(&m);
-        trace.record(&m, edp);
+        candidates.push(m);
+    }
+    let edps = problem.edp_batch(&candidates);
+    for (m, edp) in candidates.iter().zip(edps) {
+        trace.record(m, edp);
     }
 
     // Phase 2: greedy hill-climbing from the incumbent (prune-style local
@@ -57,14 +61,14 @@ mod tests {
 
     #[test]
     fn heuristic_finds_feasible_and_improves() {
-        let p = SwProblem {
-            space: SwSpace::new(
+        let p = SwProblem::new(
+            SwSpace::new(
                 layer_by_name("DQN-K2").unwrap(),
                 eyeriss_hw(168),
                 eyeriss_resources(168),
             ),
-            eval: Evaluator::new(Resources::eyeriss_168()),
-        };
+            Evaluator::new(Resources::eyeriss_168()),
+        );
         let mut rng = Rng::seed_from_u64(1);
         let t = search(&p, 40, &mut rng);
         assert!(t.found_feasible());

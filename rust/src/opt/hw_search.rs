@@ -73,27 +73,75 @@ impl Default for HwTrace {
     }
 }
 
-/// Run a hardware search. `inner` evaluates a hardware configuration by
-/// running the per-layer software searches and returning the summed EDP
-/// (None = no feasible mapping found for some layer: the unknown
-/// constraint fired). The coordinator parallelizes `inner` across layers.
+/// Surrogate datasets of a hardware search: objective observations
+/// (feasible trials only) and constraint observations (all trials,
+/// +1 feasible / -1 infeasible). Shared with `opt::transfer`, which seeds
+/// it from a source model's trace.
+pub(crate) struct Obs {
+    pub(crate) xs: Vec<Vec<f64>>,
+    pub(crate) ys: Vec<f64>,
+    pub(crate) cx: Vec<Vec<f64>>,
+    pub(crate) cy: Vec<f64>,
+}
+
+impl Obs {
+    pub(crate) fn empty() -> Self {
+        Obs { xs: Vec::new(), ys: Vec::new(), cx: Vec::new(), cy: Vec::new() }
+    }
+}
+
+/// Absorb one evaluated config batch into the trace and the surrogate
+/// datasets.
+pub(crate) fn absorb(
+    trace: &mut HwTrace,
+    obs: &mut Obs,
+    resources: &crate::model::arch::Resources,
+    picks: &[HwConfig],
+    edps: Vec<Option<f64>>,
+) {
+    debug_assert_eq!(picks.len(), edps.len());
+    for (hw, edp) in picks.iter().zip(edps) {
+        trace.record(hw, edp);
+        let f = hw_features(hw, resources).to_vec();
+        match edp {
+            Some(e) => {
+                obs.xs.push(f.clone());
+                obs.ys.push(e.ln());
+                obs.cx.push(f);
+                obs.cy.push(1.0);
+            }
+            None => {
+                obs.cx.push(f);
+                obs.cy.push(-1.0);
+            }
+        }
+    }
+}
+
+/// Chunk size for observation-independent (random/warmup) config batches:
+/// big enough to fan the (config x layer) cross product over the worker
+/// pool, small enough that the driver's per-trial checkpoint/progress hooks
+/// keep firing at a reasonable cadence.
+pub(crate) const HEAD_CHUNK: usize = 8;
+
+/// Run a hardware search. `inner` evaluates a *batch* of hardware
+/// configurations by running the per-layer software searches and returning
+/// one summed EDP per config, in order (None = no feasible mapping found
+/// for some layer: the unknown constraint fired). Handing the evaluator
+/// whole batches lets the coordinator fan the (config x layer) cross
+/// product out over its worker pool: the random baseline submits the entire
+/// run as chunked batches, BO submits its warmup phase the same way and
+/// single configs once the surrogate is in the loop.
 pub fn search(
     method: HwMethod,
     space: &HwSpace,
-    mut inner: impl FnMut(&HwConfig) -> Option<f64>,
+    mut inner: impl FnMut(&[HwConfig]) -> Vec<Option<f64>>,
     trials: usize,
     cfg: &BoConfig,
     backend: &GpBackend,
     rng: &mut Rng,
 ) -> HwTrace {
     let mut trace = HwTrace::new();
-
-    // objective observations (feasible trials only)
-    let mut xs: Vec<Vec<f64>> = Vec::new();
-    let mut ys: Vec<f64> = Vec::new();
-    // constraint observations (all trials): +1 feasible / -1 infeasible
-    let mut cx: Vec<Vec<f64>> = Vec::new();
-    let mut cy: Vec<f64> = Vec::new();
 
     // §4.2: linear kernel on hardware features + noise kernel (the inner
     // software optimizer is stochastic).
@@ -103,30 +151,41 @@ pub fn search(
     let mut con_gp = GpSurrogate::new(backend.clone(), KernelFamily::SquaredExp);
     con_gp.standardize_y = false;
 
-    for trial in 0..trials {
-        let pick: HwConfig = if method == HwMethod::Random || trial < cfg.warmup || xs.len() < 2
-        {
-            space.sample_valid(rng, ).0
+    let mut obs = Obs::empty();
+
+    // The random baseline has no feedback loop, and BO's warmup trials are
+    // likewise independent of any observation — both run as chunked batches
+    // (see `HEAD_CHUNK`).
+    let head = if method == HwMethod::Random { trials } else { cfg.warmup.min(trials) };
+    let picks: Vec<HwConfig> = (0..head).map(|_| space.sample_valid(rng).0).collect();
+    for chunk in picks.chunks(HEAD_CHUNK) {
+        let edps = inner(chunk);
+        absorb(&mut trace, &mut obs, &space.resources, chunk, edps);
+    }
+
+    for _trial in head..trials {
+        let pick: HwConfig = if obs.xs.len() < 2 {
+            space.sample_valid(rng).0
         } else {
             // feasible-by-known-constraints candidate pool
             let pool: Vec<HwConfig> =
                 (0..cfg.pool).map(|_| space.sample_valid(rng).0).collect();
             let feats: Vec<Vec<f64>> =
                 pool.iter().map(|h| hw_features(h, &space.resources).to_vec()).collect();
-            let best = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+            let best = obs.ys.iter().cloned().fold(f64::INFINITY, f64::min);
 
             let obj_post = match method {
                 HwMethod::BoRf => {
-                    let rf = RandomForest::fit(RfConfig::default(), &xs, &ys, rng);
+                    let rf = RandomForest::fit(RfConfig::default(), &obs.xs, &obs.ys, rng);
                     Some(rf.predict(&feats))
                 }
                 _ => {
-                    let _ = obj_gp.fit(&xs, &ys, rng);
+                    let _ = obj_gp.fit(&obs.xs, &obs.ys, rng);
                     obj_gp.predict(&feats).ok()
                 }
             };
-            let con_post = if cy.iter().any(|&v| v < 0.0) {
-                let _ = con_gp.fit(&cx, &cy, rng);
+            let con_post = if obs.cy.iter().any(|&v| v < 0.0) {
+                let _ = con_gp.fit(&obs.cx, &obs.cy, rng);
                 con_gp.predict(&feats).ok()
             } else {
                 None // nothing infeasible seen yet: P(C) = 1 everywhere
@@ -154,21 +213,9 @@ pub fn search(
             }
         };
 
-        let edp = inner(&pick);
-        trace.record(&pick, edp);
-        let f = hw_features(&pick, &space.resources).to_vec();
-        match edp {
-            Some(e) => {
-                xs.push(f.clone());
-                ys.push(e.ln());
-                cx.push(f);
-                cy.push(1.0);
-            }
-            None => {
-                cx.push(f);
-                cy.push(-1.0);
-            }
-        }
+        let picks = [pick];
+        let edps = inner(&picks);
+        absorb(&mut trace, &mut obs, &space.resources, &picks, edps);
     }
     trace
 }
@@ -190,6 +237,11 @@ mod tests {
         Some((1.0 + aspect + balance) * 1e-3)
     }
 
+    /// Batch adapter over the synthetic objective.
+    fn batch_inner(hws: &[HwConfig]) -> Vec<Option<f64>> {
+        hws.iter().map(synthetic_inner).collect()
+    }
+
     fn quick_cfg() -> BoConfig {
         BoConfig { warmup: 4, pool: 30, ..BoConfig::hardware() }
     }
@@ -201,7 +253,7 @@ mod tests {
         let t = search(
             HwMethod::Random,
             &space,
-            synthetic_inner,
+            batch_inner,
             15,
             &quick_cfg(),
             &GpBackend::Native,
@@ -218,7 +270,7 @@ mod tests {
         let t = search(
             HwMethod::Bo,
             &space,
-            synthetic_inner,
+            batch_inner,
             25,
             &quick_cfg(),
             &GpBackend::Native,
@@ -241,7 +293,7 @@ mod tests {
             let bo = search(
                 HwMethod::Bo,
                 &space,
-                synthetic_inner,
+                batch_inner,
                 25,
                 &quick_cfg(),
                 &GpBackend::Native,
@@ -250,7 +302,7 @@ mod tests {
             let rnd = search(
                 HwMethod::Random,
                 &space,
-                synthetic_inner,
+                batch_inner,
                 25,
                 &quick_cfg(),
                 &GpBackend::Native,
@@ -270,7 +322,7 @@ mod tests {
         let t = search(
             HwMethod::BoRf,
             &space,
-            synthetic_inner,
+            batch_inner,
             15,
             &quick_cfg(),
             &GpBackend::Native,

@@ -4,7 +4,15 @@
 //! future work."). This module implements that extension: run an independent
 //! hardware search per layer and compare the sum of per-layer optima against
 //! the single model-wide design — the specialization headroom.
+//!
+//! Evaluation routes through the batched engine: each hardware batch fans
+//! its configs across the worker pool, and one `EvalCache` is shared across
+//! every layer's search so recurring design points are computed once.
 
+use std::sync::Arc;
+
+use crate::coordinator::parallel::{default_threads, parallel_map};
+use crate::model::cache::{CacheStats, EvalCache};
 use crate::model::eval::Evaluator;
 use crate::opt::config::NestedConfig;
 use crate::opt::hw_search::{self, HwMethod, HwTrace};
@@ -23,6 +31,8 @@ pub struct PerLayerResult {
     pub layers: Vec<(String, f64, HwTrace)>,
     /// Sum of the per-layer optima.
     pub total_edp: f64,
+    /// Evaluation-cache telemetry for the whole specialization run.
+    pub cache_stats: CacheStats,
 }
 
 /// Independent hardware search per layer (same budgets per layer as the
@@ -35,29 +45,43 @@ pub fn specialize(
     seed: u64,
 ) -> PerLayerResult {
     let resources = eyeriss_resources(model.num_pes);
+    let cache = Arc::new(EvalCache::default());
+    let threads = default_threads();
     let mut layers = Vec::new();
     let mut total = 0.0;
 
     for (li, layer) in model.layers.iter().enumerate() {
         let space = HwSpace::new(resources.clone());
         let eval = Evaluator::new(resources.clone());
-        let mut inner_seed = seed ^ (li as u64 * 7907);
-        let inner = |hw: &crate::model::arch::HwConfig| -> Option<f64> {
-            let problem = SwProblem {
-                space: SwSpace::new(layer.clone(), hw.clone(), resources.clone()),
-                eval: eval.clone(),
-            };
-            inner_seed = inner_seed.wrapping_add(1);
-            let mut rng = Rng::seed_from_u64(inner_seed);
-            let trace = sw_search::search(
-                sw_method,
-                &problem,
-                ncfg.sw_trials,
-                &ncfg.sw_bo,
-                backend,
-                &mut rng,
-            );
-            trace.found_feasible().then_some(trace.best_edp)
+        let base_seed = seed ^ (li as u64 * 7907);
+        // Monotone per-evaluation counter so every software search gets its
+        // own deterministic stream, batched or not.
+        let mut evals_done = 0u64;
+        let inner = |hws: &[crate::model::arch::HwConfig]| -> Vec<Option<f64>> {
+            let start = evals_done;
+            evals_done += hws.len() as u64;
+            let items: Vec<(u64, &crate::model::arch::HwConfig)> =
+                hws.iter().enumerate().map(|(k, h)| (start + k as u64 + 1, h)).collect();
+            // split the thread budget with the nested batch evaluators
+            let inner_threads = (threads / items.len().max(1)).max(1);
+            parallel_map(&items, threads, |_, &(stream, hw)| {
+                let problem = SwProblem::with_cache(
+                    SwSpace::new(layer.clone(), hw.clone(), resources.clone()),
+                    eval.clone(),
+                    Arc::clone(&cache),
+                )
+                .with_batch_threads(inner_threads);
+                let mut rng = Rng::seed_from_u64(base_seed.wrapping_add(stream));
+                let trace = sw_search::search(
+                    sw_method,
+                    &problem,
+                    ncfg.sw_trials,
+                    &ncfg.sw_bo,
+                    backend,
+                    &mut rng,
+                );
+                trace.found_feasible().then_some(trace.best_edp)
+            })
         };
         let mut rng = Rng::seed_from_u64(seed ^ (li as u64 * 104711));
         let trace = hw_search::search(
@@ -73,7 +97,7 @@ pub fn specialize(
         layers.push((layer.name.clone(), trace.best_edp, trace));
     }
 
-    PerLayerResult { layers, total_edp: total }
+    PerLayerResult { layers, total_edp: total, cache_stats: cache.stats() }
 }
 
 #[cfg(test)]
@@ -105,6 +129,8 @@ mod tests {
         let sum: f64 = res.layers.iter().map(|(_, e, _)| e).sum();
         assert!((sum - res.total_edp).abs() < 1e-12 * sum.max(1.0));
         assert!(res.total_edp.is_finite());
+        // every simulator call of the run flowed through the shared cache
+        assert!(res.cache_stats.hits + res.cache_stats.misses > 0);
     }
 
     #[test]

@@ -123,10 +123,32 @@ pub fn search(
     let mut worst_seen: f64 = 0.0;
     let mut last_fit_at = 0usize;
 
-    for trial in 0..trials {
-        let point: Vec<f64> = if trial < cfg.warmup || xs.len() < 2 {
-            (0..BOX_DIM).map(|_| rng.f64()).collect()
-        } else {
+    // The random phase (warmup, and the first two trials that seed the GP)
+    // is data-independent: generate every point first (same RNG stream as
+    // the sequential loop — evaluation is RNG-free), decode, and evaluate as
+    // one parallel, memoized batch.
+    let nrand = cfg.warmup.max(2).min(trials);
+    let points: Vec<Vec<f64>> =
+        (0..nrand).map(|_| (0..BOX_DIM).map(|_| rng.f64()).collect()).collect();
+    let mappings: Vec<Mapping> = points.iter().map(|p| decode(problem, p)).collect();
+    trace.raw_draws += nrand as u64;
+    let edps = problem.edp_batch(&mappings);
+    for ((point, mapping), edp) in points.into_iter().zip(mappings.iter()).zip(edps) {
+        trace.record(mapping, edp);
+        let y = match edp {
+            Some(e) => {
+                let l = e.ln();
+                worst_seen = worst_seen.max(l);
+                l
+            }
+            None => worst_seen + 2.0,
+        };
+        xs.push(point);
+        ys.push(y);
+    }
+
+    for _trial in nrand..trials {
+        let point: Vec<f64> = {
             // random candidates in the box, GP-scored (standard BO without
             // constraint awareness)
             let cands: Vec<Vec<f64>> =
@@ -185,14 +207,14 @@ mod tests {
     use crate::workloads::specs::layer_by_name;
 
     fn problem() -> SwProblem {
-        SwProblem {
-            space: SwSpace::new(
+        SwProblem::new(
+            SwSpace::new(
                 layer_by_name("DQN-K2").unwrap(),
                 eyeriss_hw(168),
                 eyeriss_resources(168),
             ),
-            eval: Evaluator::new(Resources::eyeriss_168()),
-        }
+            Evaluator::new(Resources::eyeriss_168()),
+        )
     }
 
     #[test]

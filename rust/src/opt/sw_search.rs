@@ -10,6 +10,10 @@
 //! * `TvmXgb` / `TvmTreeGru` — TVM-style learned cost model (GBT / MLP)
 //!   driving simulated-annealing proposals, retrained every batch.
 
+use std::sync::Arc;
+
+use crate::model::batch::BatchEvaluator;
+use crate::model::cache::EvalCache;
 use crate::model::eval::Evaluator;
 use crate::model::mapping::Mapping;
 use crate::opt::config::BoConfig;
@@ -51,17 +55,50 @@ impl SwMethod {
     }
 }
 
-/// The problem a software search solves: a mapping space plus the simulator.
+/// The problem a software search solves: a mapping space plus the simulator,
+/// fronted by the batched/memoized evaluation engine. All evaluations —
+/// single points and candidate batches — go through `batch`, so repeated
+/// candidates across trials, restarts and methods hit the cache.
 #[derive(Clone)]
 pub struct SwProblem {
     pub space: SwSpace,
-    pub eval: Evaluator,
+    pub batch: BatchEvaluator,
 }
 
 impl SwProblem {
-    /// EDP of a mapping, or None if invalid.
+    /// A problem with a private evaluation cache.
+    pub fn new(space: SwSpace, eval: Evaluator) -> Self {
+        SwProblem { space, batch: BatchEvaluator::new(eval) }
+    }
+
+    /// A problem sharing an existing cache (the co-design driver passes one
+    /// cache across every layer and hardware trial of a run).
+    pub fn with_cache(space: SwSpace, eval: Evaluator, cache: Arc<EvalCache>) -> Self {
+        SwProblem { space, batch: BatchEvaluator::with_cache(eval, cache) }
+    }
+
+    /// Cap the worker threads the batch evaluator may spawn. Callers that
+    /// already run this problem inside a worker pool (the driver's
+    /// config x layer fan-out) pass their leftover budget here so nested
+    /// batches don't oversubscribe the machine.
+    pub fn with_batch_threads(mut self, threads: usize) -> Self {
+        self.batch = self.batch.with_threads(threads);
+        self
+    }
+
+    /// The wrapped point-wise evaluator.
+    pub fn evaluator(&self) -> &Evaluator {
+        self.batch.evaluator()
+    }
+
+    /// EDP of a mapping, or None if invalid (memoized).
     pub fn edp(&self, m: &Mapping) -> Option<f64> {
-        self.eval.edp(&self.space.layer, &self.space.hw, m).ok()
+        self.batch.edp(&self.space.layer, &self.space.hw, m).ok()
+    }
+
+    /// EDP of a whole candidate batch, in order (memoized + parallel).
+    pub fn edp_batch(&self, mappings: &[Mapping]) -> Vec<Option<f64>> {
+        self.batch.edp_batch(&self.space.layer, &self.space.hw, mappings)
     }
 
     pub fn features(&self, m: &Mapping) -> Vec<f64> {
@@ -130,7 +167,9 @@ pub fn search(
 
 /// Constrained random search: first feasible raw sample per trial (the
 /// paper's random baseline, §5.1 "repeatedly takes the first random sample
-/// in the design space that satisfies the constraints").
+/// in the design space that satisfies the constraints"). The trials are
+/// independent, so all candidates are drawn first (one deterministic RNG
+/// stream) and evaluated as a single batch.
 pub fn random_search(
     problem: &SwProblem,
     trials: usize,
@@ -138,18 +177,22 @@ pub fn random_search(
     rng: &mut Rng,
 ) -> SearchTrace {
     let mut trace = SearchTrace::new();
+    let mut candidates: Vec<Mapping> = Vec::with_capacity(trials);
     for _ in 0..trials {
         match problem.space.sample_valid(rng, cfg.max_pool_draws) {
             Some((m, draws)) => {
                 trace.raw_draws += draws;
-                let edp = problem.edp(&m);
-                trace.record(&m, edp);
+                candidates.push(m);
             }
             None => {
                 trace.raw_draws += cfg.max_pool_draws;
                 break; // space unsampleable under the draw cap
             }
         }
+    }
+    let edps = problem.edp_batch(&candidates);
+    for (m, edp) in candidates.iter().zip(edps) {
+        trace.record(m, edp);
     }
     trace
 }
@@ -174,8 +217,38 @@ pub fn bo_search(
     let mut gp = GpSurrogate::new(backend.clone(), KernelFamily::Linear { noise: false });
     let mut last_fit_at = 0usize;
 
-    for trial in 0..trials {
-        let pick = if trial < cfg.warmup || xs.len() < 2 {
+    // Warmup trials are independent random draws: sample them all first
+    // (identical RNG stream to the sequential formulation — evaluation never
+    // touches the RNG) and evaluate as one parallel batch.
+    let warmup = cfg.warmup.min(trials);
+    let mut warm: Vec<Mapping> = Vec::with_capacity(warmup);
+    let mut gave_up = false;
+    for _ in 0..warmup {
+        match problem.space.sample_valid(rng, cfg.max_pool_draws) {
+            Some((m, draws)) => {
+                trace.raw_draws += draws;
+                warm.push(m);
+            }
+            None => {
+                gave_up = true;
+                break;
+            }
+        }
+    }
+    let warm_edps = problem.edp_batch(&warm);
+    for (m, edp) in warm.iter().zip(warm_edps) {
+        trace.record(m, edp);
+        if let Some(e) = edp {
+            xs.push(problem.features(m));
+            ys.push(e.ln());
+        }
+    }
+    if gave_up {
+        return trace;
+    }
+
+    for _trial in warm.len()..trials {
+        let pick = if xs.len() < 2 {
             match problem.space.sample_valid(rng, cfg.max_pool_draws) {
                 Some((m, draws)) => {
                     trace.raw_draws += draws;
@@ -260,14 +333,14 @@ mod tests {
     use crate::workloads::specs::layer_by_name;
 
     fn problem(layer: &str) -> SwProblem {
-        SwProblem {
-            space: SwSpace::new(
+        SwProblem::new(
+            SwSpace::new(
                 layer_by_name(layer).unwrap(),
                 eyeriss_hw(168),
                 eyeriss_resources(168),
             ),
-            eval: Evaluator::new(Resources::eyeriss_168()),
-        }
+            Evaluator::new(Resources::eyeriss_168()),
+        )
     }
 
     fn quick_cfg() -> BoConfig {

@@ -10,7 +10,7 @@
 
 use crate::model::arch::HwConfig;
 use crate::opt::config::BoConfig;
-use crate::opt::hw_search::HwTrace;
+use crate::opt::hw_search::{absorb, HwTrace, Obs, HEAD_CHUNK};
 use crate::space::features::hw_features;
 use crate::space::hw_space::HwSpace;
 use crate::surrogate::acquisition::feasibility_probability;
@@ -50,11 +50,13 @@ impl TransferPrior {
 /// `hw_search::search` with method `Bo`, except the surrogate datasets are
 /// seeded with the source-model observations (objective values enter in
 /// log-space with their own standardization, so only *relative* ordering
-/// transfers — the constant offset between models is absorbed).
+/// transfers — the constant offset between models is absorbed). Like the
+/// plain hardware search, `inner` evaluates whole config batches: the
+/// warmup phase (empty when the prior is usable) goes out as one batch.
 pub fn search_with_prior(
     space: &HwSpace,
     prior: &TransferPrior,
-    mut inner: impl FnMut(&HwConfig) -> Option<f64>,
+    mut inner: impl FnMut(&[HwConfig]) -> Vec<Option<f64>>,
     trials: usize,
     cfg: &BoConfig,
     backend: &GpBackend,
@@ -62,14 +64,19 @@ pub fn search_with_prior(
 ) -> HwTrace {
     let mut trace = HwTrace::new();
 
+    // Seed the surrogate datasets with the source-model observations.
     let feat = |hw: &HwConfig| hw_features(hw, &space.resources).to_vec();
-    let mut xs: Vec<Vec<f64>> = prior.feasible.iter().map(|(h, _)| feat(h)).collect();
-    let mut ys: Vec<f64> = prior.feasible.iter().map(|(_, e)| e.ln()).collect();
-    let mut cx: Vec<Vec<f64>> = xs.clone();
-    let mut cy: Vec<f64> = vec![1.0; xs.len()];
+    let mut obs = Obs::empty();
+    for (h, e) in &prior.feasible {
+        let f = feat(h);
+        obs.xs.push(f.clone());
+        obs.ys.push(e.ln());
+        obs.cx.push(f);
+        obs.cy.push(1.0);
+    }
     for h in &prior.infeasible {
-        cx.push(feat(h));
-        cy.push(-1.0);
+        obs.cx.push(feat(h));
+        obs.cy.push(-1.0);
     }
 
     let mut obj_gp = GpSurrogate::new(backend.clone(), KernelFamily::Linear { noise: true });
@@ -80,17 +87,26 @@ pub fn search_with_prior(
     // design-time saving the paper's §7 anticipates.
     let warmup = if prior.feasible.len() >= 2 { 0 } else { cfg.warmup };
 
-    for trial in 0..trials {
-        let pick: HwConfig = if trial < warmup || xs.len() < 2 {
+    // Warmup configs are observation-independent: evaluate them as chunked
+    // batches, absorbed exactly like the plain hardware search's head.
+    let head = warmup.min(trials);
+    let picks: Vec<HwConfig> = (0..head).map(|_| space.sample_valid(rng).0).collect();
+    for chunk in picks.chunks(HEAD_CHUNK) {
+        let edps = inner(chunk);
+        absorb(&mut trace, &mut obs, &space.resources, chunk, edps);
+    }
+
+    for _trial in head..trials {
+        let pick: HwConfig = if obs.xs.len() < 2 {
             space.sample_valid(rng).0
         } else {
             let pool: Vec<HwConfig> = (0..cfg.pool).map(|_| space.sample_valid(rng).0).collect();
             let feats: Vec<Vec<f64>> = pool.iter().map(|h| feat(h)).collect();
-            let best = ys.iter().cloned().fold(f64::INFINITY, f64::min);
-            let _ = obj_gp.fit(&xs, &ys, rng);
+            let best = obs.ys.iter().cloned().fold(f64::INFINITY, f64::min);
+            let _ = obj_gp.fit(&obs.xs, &obs.ys, rng);
             let obj = obj_gp.predict(&feats).ok();
-            let con = if cy.iter().any(|&v| v < 0.0) {
-                let _ = con_gp.fit(&cx, &cy, rng);
+            let con = if obs.cy.iter().any(|&v| v < 0.0) {
+                let _ = con_gp.fit(&obs.cx, &obs.cy, rng);
                 con_gp.predict(&feats).ok()
             } else {
                 None
@@ -112,21 +128,9 @@ pub fn search_with_prior(
             }
         };
 
-        let edp = inner(&pick);
-        trace.record(&pick, edp);
-        let f = feat(&pick);
-        match edp {
-            Some(e) => {
-                xs.push(f.clone());
-                ys.push(e.ln());
-                cx.push(f);
-                cy.push(1.0);
-            }
-            None => {
-                cx.push(f);
-                cy.push(-1.0);
-            }
-        }
+        let picks = [pick];
+        let edps = inner(&picks);
+        absorb(&mut trace, &mut obs, &space.resources, &picks, edps);
     }
     trace
 }
@@ -152,6 +156,11 @@ mod tests {
         BoConfig { warmup: 4, pool: 25, ..BoConfig::hardware() }
     }
 
+    /// Batch adapter over the synthetic objective at a given scale.
+    fn batched(scale: f64) -> impl FnMut(&[HwConfig]) -> Vec<Option<f64>> {
+        move |hws: &[HwConfig]| hws.iter().map(|h| objective(h, scale)).collect()
+    }
+
     #[test]
     fn prior_extraction_separates_feasible() {
         let space = HwSpace::new(Resources::eyeriss_168());
@@ -159,7 +168,7 @@ mod tests {
         let trace = search(
             HwMethod::Random,
             &space,
-            |h| objective(h, 1e-3),
+            batched(1e-3),
             20,
             &quick_cfg(),
             &GpBackend::Native,
@@ -178,7 +187,7 @@ mod tests {
         let source = search(
             HwMethod::Bo,
             &space,
-            |h| objective(h, 2e-3),
+            batched(2e-3),
             20,
             &quick_cfg(),
             &GpBackend::Native,
@@ -195,7 +204,7 @@ mod tests {
             let warm = search_with_prior(
                 &space,
                 &prior,
-                |h| objective(h, 1e-3),
+                batched(1e-3),
                 6,
                 &quick_cfg(),
                 &GpBackend::Native,
@@ -205,7 +214,7 @@ mod tests {
             let cold = search(
                 HwMethod::Bo,
                 &space,
-                |h| objective(h, 1e-3),
+                batched(1e-3),
                 6,
                 &quick_cfg(),
                 &GpBackend::Native,
@@ -225,7 +234,7 @@ mod tests {
         let t = search_with_prior(
             &space,
             &TransferPrior::default(),
-            |h| objective(h, 1e-3),
+            batched(1e-3),
             10,
             &quick_cfg(),
             &GpBackend::Native,

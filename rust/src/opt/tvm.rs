@@ -88,12 +88,17 @@ pub fn search(
         proposals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         proposals.dedup_by(|a, b| a.1 == b.1);
 
-        // --- measure the best-predicted proposals ---
-        for (_, m) in proposals.into_iter().take(BATCH.min(trials - trace.evals.len())) {
-            let edp = problem.edp(&m);
-            trace.record(&m, edp);
+        // --- measure the best-predicted proposals as one batch ---
+        let selected: Vec<Mapping> = proposals
+            .into_iter()
+            .take(BATCH.min(trials - trace.evals.len()))
+            .map(|(_, m)| m)
+            .collect();
+        let edps = problem.edp_batch(&selected);
+        for (m, edp) in selected.iter().zip(edps) {
+            trace.record(m, edp);
             if let Some(e) = edp {
-                xs.push(problem.features(&m));
+                xs.push(problem.features(m));
                 ys.push(e.ln());
             }
         }
@@ -124,14 +129,14 @@ mod tests {
     use crate::workloads::specs::layer_by_name;
 
     fn problem() -> SwProblem {
-        SwProblem {
-            space: SwSpace::new(
+        SwProblem::new(
+            SwSpace::new(
                 layer_by_name("DQN-K2").unwrap(),
                 eyeriss_hw(168),
                 eyeriss_resources(168),
             ),
-            eval: Evaluator::new(Resources::eyeriss_168()),
-        }
+            Evaluator::new(Resources::eyeriss_168()),
+        )
     }
 
     #[test]

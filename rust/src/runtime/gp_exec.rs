@@ -4,12 +4,14 @@
 //! All shapes are the padded artifact shapes; callers provide live-row
 //! counts and this module builds the masks. One executable per (entry,
 //! size-class) is compiled once at startup and reused for every BO step.
+//!
+//! The real executor needs the offline `xla` crate (xla-rs plus a
+//! libxla_extension install) and is gated behind the `pjrt` cargo feature.
+//! Without the feature a stub with the identical API is compiled instead:
+//! `load`/`load_default` fail with an actionable message, so every consumer
+//! (the GP server, the CLI, the benches) falls back to the pure-Rust GP.
 
-use std::collections::HashMap;
-
-use anyhow::{bail, Context, Result};
-
-use super::artifacts::{ArtifactSet, FEATURE_DIM, NLL_BATCH, THETA_DIM};
+use super::artifacts::THETA_DIM;
 
 /// GP hyperparameters in artifact ABI order (see python/compile/model.py).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -56,150 +58,214 @@ pub struct Posterior {
     pub var: Vec<f64>,
 }
 
-struct Compiled {
-    posterior: HashMap<usize, xla::PjRtLoadedExecutable>,
-    nll: HashMap<usize, xla::PjRtLoadedExecutable>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
 
-/// Owns the PJRT client; not Sync — share across threads via `GpServer`.
-pub struct GpExecutor {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    compiled: Compiled,
-    pub artifacts: ArtifactSet,
-}
+    use anyhow::{bail, Context, Result};
 
-fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(data);
-    Ok(lit.reshape(dims)?)
-}
+    use super::{Posterior, Theta};
+    use crate::runtime::artifacts::{ArtifactSet, FEATURE_DIM, NLL_BATCH, THETA_DIM};
 
-impl GpExecutor {
-    /// Load and compile every artifact. Fails with a actionable message if
-    /// `make artifacts` has not run.
-    pub fn load(artifacts: ArtifactSet) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut posterior = HashMap::new();
-        let mut nll = HashMap::new();
-        for &class in &super::artifacts::SIZE_CLASSES {
-            for (map, path) in [
-                (&mut posterior, artifacts.posterior_path(class)),
-                (&mut nll, artifacts.nll_path(class)),
-            ] {
-                let proto = xla::HloModuleProto::from_text_file(&*path.to_string_lossy())
-                    .with_context(|| format!("parsing {path:?}"))?;
-                let comp = xla::XlaComputation::from_proto(&proto);
-                let exe = client
-                    .compile(&comp)
-                    .with_context(|| format!("compiling {path:?}"))?;
-                map.insert(class, exe);
+    struct Compiled {
+        posterior: HashMap<usize, xla::PjRtLoadedExecutable>,
+        nll: HashMap<usize, xla::PjRtLoadedExecutable>,
+    }
+
+    /// Owns the PJRT client; not Sync — share across threads via `GpServer`.
+    pub struct GpExecutor {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        compiled: Compiled,
+        pub artifacts: ArtifactSet,
+    }
+
+    fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(data);
+        Ok(lit.reshape(dims)?)
+    }
+
+    impl GpExecutor {
+        /// Load and compile every artifact. Fails with a actionable message
+        /// if `make artifacts` has not run.
+        pub fn load(artifacts: ArtifactSet) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let mut posterior = HashMap::new();
+            let mut nll = HashMap::new();
+            for &class in &crate::runtime::artifacts::SIZE_CLASSES {
+                for (map, path) in [
+                    (&mut posterior, artifacts.posterior_path(class)),
+                    (&mut nll, artifacts.nll_path(class)),
+                ] {
+                    let proto = xla::HloModuleProto::from_text_file(&*path.to_string_lossy())
+                        .with_context(|| format!("parsing {path:?}"))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .with_context(|| format!("compiling {path:?}"))?;
+                    map.insert(class, exe);
+                }
             }
+            Ok(GpExecutor { client, compiled: Compiled { posterior, nll }, artifacts })
         }
-        Ok(GpExecutor { client, compiled: Compiled { posterior, nll }, artifacts })
-    }
 
-    /// Discover artifacts in the default location and load them.
-    pub fn load_default() -> Result<Self> {
-        Self::load(ArtifactSet::discover(None)?)
-    }
-
-    /// Pad training rows (features, targets) and candidates into artifact
-    /// buffers and run the posterior entry point.
-    ///
-    /// `x` is row-major (n, FEATURE_DIM), `y` length n (already zero-mean /
-    /// standardized by the caller), `cand` row-major (m, FEATURE_DIM).
-    pub fn posterior(
-        &self,
-        x: &[f32],
-        y: &[f32],
-        theta: Theta,
-        cand: &[f32],
-    ) -> Result<Posterior> {
-        let n = y.len();
-        if x.len() != n * FEATURE_DIM {
-            bail!("x has {} elements, expected {}", x.len(), n * FEATURE_DIM);
+        /// Discover artifacts in the default location and load them.
+        pub fn load_default() -> Result<Self> {
+            Self::load(ArtifactSet::discover(None)?)
         }
-        if cand.len() % FEATURE_DIM != 0 {
-            bail!("cand length {} not a multiple of {FEATURE_DIM}", cand.len());
-        }
-        let m = cand.len() / FEATURE_DIM;
 
-        // §Perf: the artifact cost is cubic-ish in the size class. When the
-        // training set fits the small class but the candidate batch doesn't,
-        // chunk the candidates instead of promoting everything to the big
-        // class (the hardware BO lives in this regime: n <= 50, m = 150).
-        let n_class = self.artifacts.size_class(n)?;
-        if m > n_class {
-            let chunk_rows = n_class;
-            let mut mean = Vec::with_capacity(m);
-            let mut var = Vec::with_capacity(m);
-            for chunk in cand.chunks(chunk_rows * FEATURE_DIM) {
-                let p = self.posterior(x, y, theta, chunk)?;
-                mean.extend(p.mean);
-                var.extend(p.var);
+        /// Pad training rows (features, targets) and candidates into artifact
+        /// buffers and run the posterior entry point.
+        ///
+        /// `x` is row-major (n, FEATURE_DIM), `y` length n (already
+        /// zero-mean / standardized by the caller), `cand` row-major
+        /// (m, FEATURE_DIM).
+        pub fn posterior(
+            &self,
+            x: &[f32],
+            y: &[f32],
+            theta: Theta,
+            cand: &[f32],
+        ) -> Result<Posterior> {
+            let n = y.len();
+            if x.len() != n * FEATURE_DIM {
+                bail!("x has {} elements, expected {}", x.len(), n * FEATURE_DIM);
             }
-            return Ok(Posterior { mean, var });
+            if cand.len() % FEATURE_DIM != 0 {
+                bail!("cand length {} not a multiple of {FEATURE_DIM}", cand.len());
+            }
+            let m = cand.len() / FEATURE_DIM;
+
+            // §Perf: the artifact cost is cubic-ish in the size class. When
+            // the training set fits the small class but the candidate batch
+            // doesn't, chunk the candidates instead of promoting everything
+            // to the big class (the hardware BO lives in this regime:
+            // n <= 50, m = 150).
+            let n_class = self.artifacts.size_class(n)?;
+            if m > n_class {
+                let chunk_rows = n_class;
+                let mut mean = Vec::with_capacity(m);
+                let mut var = Vec::with_capacity(m);
+                for chunk in cand.chunks(chunk_rows * FEATURE_DIM) {
+                    let p = self.posterior(x, y, theta, chunk)?;
+                    mean.extend(p.mean);
+                    var.extend(p.var);
+                }
+                return Ok(Posterior { mean, var });
+            }
+
+            let class = self.artifacts.size_class(n.max(m))?;
+            let exe = &self.compiled.posterior[&class];
+
+            let mut xb = vec![0f32; class * FEATURE_DIM];
+            xb[..x.len()].copy_from_slice(x);
+            let mut yb = vec![0f32; class];
+            yb[..n].copy_from_slice(y);
+            let mut maskb = vec![0f32; class];
+            maskb[..n].fill(1.0);
+            let mut cb = vec![0f32; class * FEATURE_DIM];
+            cb[..cand.len()].copy_from_slice(cand);
+
+            let args = [
+                literal_f32(&xb, &[class as i64, FEATURE_DIM as i64])?,
+                literal_f32(&yb, &[class as i64])?,
+                literal_f32(&maskb, &[class as i64])?,
+                literal_f32(&theta.to_vec(), &[THETA_DIM as i64])?,
+                literal_f32(&cb, &[class as i64, FEATURE_DIM as i64])?,
+            ];
+            let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let (mu, var) = result.to_tuple2()?;
+            let mu = mu.to_vec::<f32>()?;
+            let var = var.to_vec::<f32>()?;
+            Ok(Posterior {
+                mean: mu[..m].iter().map(|&v| v as f64).collect(),
+                var: var[..m].iter().map(|&v| v.max(1e-12) as f64).collect(),
+            })
         }
 
-        let class = self.artifacts.size_class(n.max(m))?;
-        let exe = &self.compiled.posterior[&class];
+        /// Batched NLL over up to NLL_BATCH hyperparameter settings; unused
+        /// batch slots are filled with the first theta (their outputs are
+        /// discarded).
+        pub fn nll_batch(&self, x: &[f32], y: &[f32], thetas: &[Theta]) -> Result<Vec<f64>> {
+            let n = y.len();
+            if thetas.is_empty() || thetas.len() > NLL_BATCH {
+                bail!("theta batch size {} not in 1..={NLL_BATCH}", thetas.len());
+            }
+            let class = self.artifacts.size_class(n)?;
+            let exe = &self.compiled.nll[&class];
 
-        let mut xb = vec![0f32; class * FEATURE_DIM];
-        xb[..x.len()].copy_from_slice(x);
-        let mut yb = vec![0f32; class];
-        yb[..n].copy_from_slice(y);
-        let mut maskb = vec![0f32; class];
-        maskb[..n].fill(1.0);
-        let mut cb = vec![0f32; class * FEATURE_DIM];
-        cb[..cand.len()].copy_from_slice(cand);
+            let mut xb = vec![0f32; class * FEATURE_DIM];
+            xb[..x.len()].copy_from_slice(x);
+            let mut yb = vec![0f32; class];
+            yb[..n].copy_from_slice(y);
+            let mut maskb = vec![0f32; class];
+            maskb[..n].fill(1.0);
+            let mut tb = vec![0f32; NLL_BATCH * THETA_DIM];
+            for i in 0..NLL_BATCH {
+                let t = thetas[i.min(thetas.len() - 1)].to_vec();
+                tb[i * THETA_DIM..(i + 1) * THETA_DIM].copy_from_slice(&t);
+            }
 
-        let args = [
-            literal_f32(&xb, &[class as i64, FEATURE_DIM as i64])?,
-            literal_f32(&yb, &[class as i64])?,
-            literal_f32(&maskb, &[class as i64])?,
-            literal_f32(&theta.to_vec(), &[THETA_DIM as i64])?,
-            literal_f32(&cb, &[class as i64, FEATURE_DIM as i64])?,
-        ];
-        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let (mu, var) = result.to_tuple2()?;
-        let mu = mu.to_vec::<f32>()?;
-        let var = var.to_vec::<f32>()?;
-        Ok(Posterior {
-            mean: mu[..m].iter().map(|&v| v as f64).collect(),
-            var: var[..m].iter().map(|&v| v.max(1e-12) as f64).collect(),
-        })
-    }
-
-    /// Batched NLL over up to NLL_BATCH hyperparameter settings; unused batch
-    /// slots are filled with the first theta (their outputs are discarded).
-    pub fn nll_batch(&self, x: &[f32], y: &[f32], thetas: &[Theta]) -> Result<Vec<f64>> {
-        let n = y.len();
-        if thetas.is_empty() || thetas.len() > NLL_BATCH {
-            bail!("theta batch size {} not in 1..={NLL_BATCH}", thetas.len());
+            let args = [
+                literal_f32(&xb, &[class as i64, FEATURE_DIM as i64])?,
+                literal_f32(&yb, &[class as i64])?,
+                literal_f32(&maskb, &[class as i64])?,
+                literal_f32(&tb, &[NLL_BATCH as i64, THETA_DIM as i64])?,
+            ];
+            let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let nll = result.to_tuple1()?.to_vec::<f32>()?;
+            Ok(nll[..thetas.len()].iter().map(|&v| v as f64).collect())
         }
-        let class = self.artifacts.size_class(n)?;
-        let exe = &self.compiled.nll[&class];
-
-        let mut xb = vec![0f32; class * FEATURE_DIM];
-        xb[..x.len()].copy_from_slice(x);
-        let mut yb = vec![0f32; class];
-        yb[..n].copy_from_slice(y);
-        let mut maskb = vec![0f32; class];
-        maskb[..n].fill(1.0);
-        let mut tb = vec![0f32; NLL_BATCH * THETA_DIM];
-        for i in 0..NLL_BATCH {
-            let t = thetas[i.min(thetas.len() - 1)].to_vec();
-            tb[i * THETA_DIM..(i + 1) * THETA_DIM].copy_from_slice(&t);
-        }
-
-        let args = [
-            literal_f32(&xb, &[class as i64, FEATURE_DIM as i64])?,
-            literal_f32(&yb, &[class as i64])?,
-            literal_f32(&maskb, &[class as i64])?,
-            literal_f32(&tb, &[NLL_BATCH as i64, THETA_DIM as i64])?,
-        ];
-        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let nll = result.to_tuple1()?.to_vec::<f32>()?;
-        Ok(nll[..thetas.len()].iter().map(|&v| v as f64).collect())
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::GpExecutor;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use anyhow::{bail, Result};
+
+    use super::{Posterior, Theta};
+    use crate::runtime::artifacts::ArtifactSet;
+
+    /// Message every stub entry point fails with.
+    const DISABLED: &str = "built without the `pjrt` feature: the PJRT/XLA runtime is \
+         unavailable in this build; rebuild with `--features pjrt` (requires the offline \
+         `xla` crate and libxla_extension) or use the pure-Rust GP (--native)";
+
+    /// API-compatible stand-in compiled when the `pjrt` feature is off.
+    /// Loading always fails cleanly, so `GpServer::start` reports the real
+    /// reason and callers fall back to `GpBackend::Native`.
+    pub struct GpExecutor {
+        pub artifacts: ArtifactSet,
+    }
+
+    impl GpExecutor {
+        pub fn load(artifacts: ArtifactSet) -> Result<Self> {
+            let _ = artifacts;
+            bail!(DISABLED)
+        }
+
+        pub fn load_default() -> Result<Self> {
+            bail!(DISABLED)
+        }
+
+        pub fn posterior(
+            &self,
+            _x: &[f32],
+            _y: &[f32],
+            _theta: Theta,
+            _cand: &[f32],
+        ) -> Result<Posterior> {
+            bail!(DISABLED)
+        }
+
+        pub fn nll_batch(&self, _x: &[f32], _y: &[f32], _thetas: &[Theta]) -> Result<Vec<f64>> {
+            bail!(DISABLED)
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::GpExecutor;

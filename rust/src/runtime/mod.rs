@@ -1,7 +1,12 @@
-//! PJRT runtime: loads the AOT-compiled GP artifacts (HLO text produced by
-//! `python/compile/aot.py`) and executes them from the search hot path.
+//! Runtime services: PJRT execution of the AOT-compiled GP artifacts (HLO
+//! text produced by `python/compile/aot.py`) and the evaluation-serving
+//! layer (see README.md in this directory).
+//!
 //! Python never runs here — the Rust binary is self-contained once
-//! `make artifacts` has produced `artifacts/*.hlo.txt`.
+//! `make artifacts` has produced `artifacts/*.hlo.txt`. The PJRT path needs
+//! the offline `xla` crate and is gated behind the `pjrt` cargo feature;
+//! without it `GpExecutor` is an API-compatible stub whose `load` fails
+//! cleanly and everything falls back to the pure-Rust GP.
 
 pub mod artifacts;
 pub mod gp_exec;
@@ -9,4 +14,4 @@ pub mod server;
 
 pub use artifacts::{ArtifactSet, Manifest, FEATURE_DIM, NLL_BATCH, THETA_DIM};
 pub use gp_exec::GpExecutor;
-pub use server::{GpHandle, GpServer};
+pub use server::{EvalHandle, EvalService, GpHandle, GpServer};

@@ -1,17 +1,28 @@
-//! GP server: a dedicated thread owning the PJRT client, serving posterior /
-//! NLL requests over channels. The xla-crate client is not `Sync`, and the
-//! per-layer software searches run on worker threads (coordinator/), so all
-//! GP execution funnels through this single-owner server. Request latency is
-//! dominated by the HLO execution itself (~ms), far below the simulator
-//! budget of a BO step, so one server thread is not a bottleneck — see
-//! EXPERIMENTS.md §Perf.
+//! Serving layer: long-lived threads that own heavyweight state and answer
+//! requests over channels.
+//!
+//! * [`GpServer`] — owns the PJRT client (not `Sync`), serving posterior /
+//!   NLL requests. Request latency is dominated by the HLO execution itself
+//!   (~ms), far below the simulator budget of a BO step, so one server
+//!   thread is not a bottleneck — see EXPERIMENTS.md §Perf.
+//! * [`EvalService`] — owns a [`BatchEvaluator`] with its persistent
+//!   evaluation cache, serving design-point evaluation batches. Repeated
+//!   serving requests (the same layer/config/mapping triples arriving from
+//!   different clients or rounds) hit the warm cache instead of re-running
+//!   the cost model; `EvalHandle::stats` exposes the hit/miss telemetry.
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context as _, Result};
 
 use super::gp_exec::{GpExecutor, Posterior, Theta};
+use crate::model::arch::HwConfig;
+use crate::model::batch::{BatchEvaluator, EvalRequest};
+use crate::model::cache::CacheStats;
+use crate::model::eval::{Evaluator, Infeasible};
+use crate::model::mapping::Mapping;
+use crate::model::workload::Layer;
 
 enum Request {
     Posterior {
@@ -125,5 +136,180 @@ impl Drop for GpServer {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+    }
+}
+
+/// One design point in an evaluation-service request.
+pub type EvalJob = (Layer, HwConfig, Mapping);
+
+enum EvalMsg {
+    Batch {
+        jobs: Vec<EvalJob>,
+        reply: mpsc::Sender<Vec<Result<crate::model::energy::Metrics, Infeasible>>>,
+    },
+    Stats {
+        reply: mpsc::Sender<CacheStats>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-shareable handle to the evaluation service
+/// (`mpsc::Sender` has been `Sync` since Rust 1.72, so no lock is needed).
+#[derive(Clone)]
+pub struct EvalHandle {
+    tx: mpsc::Sender<EvalMsg>,
+}
+
+impl EvalHandle {
+    fn send(&self, msg: EvalMsg) -> Result<()> {
+        self.tx.send(msg).map_err(|_| anyhow!("evaluation service is down"))
+    }
+
+    /// Evaluate a batch of design points; results come back in order.
+    /// Points already seen by this service — in *any* earlier request —
+    /// are served from the warm cache.
+    pub fn evaluate_batch(
+        &self,
+        jobs: Vec<EvalJob>,
+    ) -> Result<Vec<Result<crate::model::energy::Metrics, Infeasible>>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(EvalMsg::Batch { jobs, reply })?;
+        rx.recv().map_err(|_| anyhow!("evaluation service dropped the request"))
+    }
+
+    /// EDP-only convenience (`None` = infeasible).
+    pub fn edp_batch(&self, jobs: Vec<EvalJob>) -> Result<Vec<Option<f64>>> {
+        Ok(self
+            .evaluate_batch(jobs)?
+            .into_iter()
+            .map(|o| o.ok().map(|met| met.edp))
+            .collect())
+    }
+
+    /// Cache telemetry of the service (hits/misses/evictions/entries).
+    pub fn stats(&self) -> Result<CacheStats> {
+        let (reply, rx) = mpsc::channel();
+        self.send(EvalMsg::Stats { reply })?;
+        rx.recv().map_err(|_| anyhow!("evaluation service dropped the request"))
+    }
+}
+
+/// The evaluation service: a dedicated thread owning a [`BatchEvaluator`]
+/// whose cache persists across requests, so repeated serving traffic hits
+/// warm results. Keep it alive as long as requests may arrive.
+pub struct EvalService {
+    tx: mpsc::Sender<EvalMsg>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl EvalService {
+    /// Start the service thread around the given evaluator.
+    pub fn start(eval: Evaluator) -> Result<EvalService> {
+        Self::start_with(BatchEvaluator::new(eval))
+    }
+
+    /// Start the service around an existing batch evaluator (e.g. one
+    /// sharing its cache with a co-design driver).
+    pub fn start_with(batch: BatchEvaluator) -> Result<EvalService> {
+        let (tx, rx) = mpsc::channel::<EvalMsg>();
+        let join = std::thread::Builder::new()
+            .name("eval-service".into())
+            .spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        EvalMsg::Batch { jobs, reply } => {
+                            let requests: Vec<EvalRequest<'_>> = jobs
+                                .iter()
+                                .map(|(layer, hw, mapping)| EvalRequest {
+                                    layer,
+                                    hw,
+                                    mapping,
+                                })
+                                .collect();
+                            let _ = reply.send(batch.evaluate_batch(&requests));
+                        }
+                        EvalMsg::Stats { reply } => {
+                            let _ = reply.send(batch.stats());
+                        }
+                        EvalMsg::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawning the eval-service thread")?;
+        Ok(EvalService { tx, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> EvalHandle {
+        EvalHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for EvalService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(EvalMsg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::Resources;
+    use crate::space::sw_space::SwSpace;
+    use crate::util::rng::Rng;
+    use crate::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+    use crate::workloads::specs::layer_by_name;
+
+    fn jobs(n: usize) -> Vec<EvalJob> {
+        let layer = layer_by_name("DQN-K2").unwrap();
+        let hw = eyeriss_hw(168);
+        let space = SwSpace::new(layer.clone(), hw.clone(), eyeriss_resources(168));
+        let mut rng = Rng::seed_from_u64(21);
+        (0..n)
+            .map(|_| {
+                let (m, _) = space.sample_valid(&mut rng, 10_000_000).unwrap();
+                (layer.clone(), hw.clone(), m)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serves_batches_and_warms_the_cache() {
+        let service = EvalService::start(Evaluator::new(Resources::eyeriss_168())).unwrap();
+        let handle = service.handle();
+        let batch = jobs(6);
+        let first = handle.edp_batch(batch.clone()).unwrap();
+        assert_eq!(first.len(), 6);
+        assert!(first.iter().all(|e| e.is_some()), "sampled valid points must evaluate");
+        // the same request again is served entirely from the warm cache
+        let second = handle.edp_batch(batch).unwrap();
+        assert_eq!(first, second);
+        let stats = handle.stats().unwrap();
+        assert_eq!(stats.misses, 6);
+        assert_eq!(stats.hits, 6);
+    }
+
+    #[test]
+    fn handles_are_cloneable_across_threads() {
+        let service = EvalService::start(Evaluator::new(Resources::eyeriss_168())).unwrap();
+        let handle = service.handle();
+        let batch = jobs(3);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let h = handle.clone();
+                let b = batch.clone();
+                s.spawn(move || {
+                    let out = h.edp_batch(b).unwrap();
+                    assert_eq!(out.len(), 3);
+                });
+            }
+        });
+        let stats = handle.stats().unwrap();
+        // 9 lookups over 3 distinct points: at least the first resolution
+        // of each point is a miss, everything after must be able to hit
+        assert_eq!(stats.hits + stats.misses, 9);
+        assert!(stats.entries <= 3);
     }
 }

@@ -266,7 +266,8 @@ mod tests {
         for (m, yi) in post.mean.iter().zip(y.iter()) {
             assert!((m - yi).abs() < 0.5 * spread, "{m} vs {yi} (spread {spread})");
         }
-        assert!((gp.best_observed() - y.iter().cloned().fold(f64::INFINITY, f64::min)).abs() < 1e-9);
+        let y_min = y.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((gp.best_observed() - y_min).abs() < 1e-9);
     }
 
     #[test]

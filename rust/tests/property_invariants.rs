@@ -1,11 +1,17 @@
 //! Property-based integration tests over the whole substrate: every valid
 //! sample must evaluate, every evaluation must respect conservation laws and
-//! the analytic roofline, the checkpoint codec must round-trip arbitrary
-//! designs, and the search traces must be monotone. Uses the in-repo
-//! property harness (util::prop) since proptest is not in the offline set.
+//! the analytic roofline, batched/memoized evaluation must agree with the
+//! point-wise evaluator bit-for-bit, the checkpoint codec must round-trip
+//! arbitrary designs, and the search traces must be monotone. Uses the
+//! in-repo property harness (util::prop) since proptest is not in the
+//! offline set.
 
+use codesign::coordinator::checkpoint::Checkpoint;
+use codesign::model::arch::HwConfig;
+use codesign::model::batch::BatchEvaluator;
 use codesign::model::energy::roofline_edp;
 use codesign::model::eval::Evaluator;
+use codesign::model::mapping::Mapping;
 use codesign::model::nest::{analyze, footprint, tiles};
 use codesign::model::workload::{DataSpace, Layer, DATASPACES};
 use codesign::opt::config::BoConfig;
@@ -13,14 +19,13 @@ use codesign::opt::sw_search::{random_search, SwProblem};
 use codesign::space::features::sw_features;
 use codesign::space::hw_space::HwSpace;
 use codesign::space::sw_space::SwSpace;
-use codesign::coordinator::checkpoint::Checkpoint;
 use codesign::util::prop::{forall_simple, PropConfig};
 use codesign::util::rng::Rng;
 use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
 use codesign::workloads::specs::all_models;
 
 /// A random (layer, hardware, valid mapping) scenario.
-fn random_scenario(rng: &mut Rng) -> (Layer, codesign::model::arch::HwConfig, codesign::model::mapping::Mapping) {
+fn random_scenario(rng: &mut Rng) -> (Layer, HwConfig, Mapping) {
     let models = all_models();
     let model = &models[rng.below(models.len())];
     let layer = model.layers[rng.below(model.layers.len())].clone();
@@ -156,6 +161,69 @@ fn prop_features_always_finite_and_bounded() {
 }
 
 #[test]
+fn prop_batched_evaluation_equals_pointwise() {
+    forall_simple(
+        20,
+        0xBA7C4,
+        |rng| {
+            let (layer, hw, m) = random_scenario(rng);
+            // several mappings on the same (layer, hw), including exact
+            // duplicates and an invalid corruption, to exercise cache hits,
+            // intra-batch dedup and infeasible caching
+            let res = eyeriss_resources(hw.num_pes());
+            let space = SwSpace::new(layer.clone(), hw.clone(), res);
+            let mut mappings = vec![m.clone(), m.clone()];
+            for _ in 0..3 {
+                if let Some((extra, _)) = space.sample_valid(rng, 200_000) {
+                    mappings.push(extra);
+                }
+            }
+            let mut broken = m;
+            broken.split_mut(codesign::model::workload::Dim::K).dram += 1;
+            mappings.push(broken);
+            (layer, hw, mappings)
+        },
+        |(layer, hw, mappings)| {
+            let res = eyeriss_resources(hw.num_pes());
+            let eval = Evaluator::new(res.clone());
+            let batch = BatchEvaluator::new(eval.clone());
+            // two passes: cold (all misses) and warm (all hits) must agree
+            for pass in 0..2 {
+                let outcomes = batch.evaluate_mappings(layer, hw, mappings);
+                for (m, outcome) in mappings.iter().zip(outcomes) {
+                    let direct = eval.evaluate(layer, hw, m);
+                    match (outcome, direct) {
+                        (Ok(a), Ok(b)) => {
+                            if a.edp.to_bits() != b.edp.to_bits()
+                                || a.cycles.to_bits() != b.cycles.to_bits()
+                            {
+                                return Err(format!(
+                                    "pass {pass}: batched EDP {} != point-wise {}",
+                                    a.edp, b.edp
+                                ));
+                            }
+                        }
+                        (Err(a), Err(b)) => {
+                            if a != b {
+                                return Err(format!("pass {pass}: reasons differ {a:?} {b:?}"));
+                            }
+                        }
+                        (a, b) => {
+                            return Err(format!("pass {pass}: outcomes differ {a:?} vs {b:?}"))
+                        }
+                    }
+                }
+            }
+            let stats = batch.stats();
+            if stats.hits < mappings.len() as u64 {
+                return Err(format!("warm pass did not hit the cache: {stats:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_checkpoint_roundtrip_arbitrary_designs() {
     codesign::util::prop::forall(
         PropConfig { cases: 40, seed: 0xD00D },
@@ -194,10 +262,10 @@ fn prop_search_traces_monotone_and_consistent() {
             (layer, res, rng.next_u64())
         },
         |(layer, res, seed)| {
-            let problem = SwProblem {
-                space: SwSpace::new(layer.clone(), eyeriss_hw(res.num_pes), res.clone()),
-                eval: Evaluator::new(res.clone()),
-            };
+            let problem = SwProblem::new(
+                SwSpace::new(layer.clone(), eyeriss_hw(res.num_pes), res.clone()),
+                Evaluator::new(res.clone()),
+            );
             let cfg = BoConfig { warmup: 3, pool: 10, ..BoConfig::software() };
             let mut rng = Rng::seed_from_u64(*seed);
             let trace = random_search(&problem, 8, &cfg, &mut rng);

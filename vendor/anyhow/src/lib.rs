@@ -1,0 +1,202 @@
+//! A minimal, dependency-free shim of the `anyhow` error-handling API.
+//!
+//! The build environment is offline (no crates.io), so this vendored crate
+//! provides exactly the slice of `anyhow` the workspace uses: the [`Error`]
+//! type with a context chain, the [`Result`] alias, the [`Context`] extension
+//! trait for `Result` and `Option`, and the [`anyhow!`] / [`bail!`] macros.
+//!
+//! Semantics intentionally mirror the real crate where the workspace relies
+//! on them:
+//! * `{e}` (Display) prints the outermost message only;
+//! * `{e:#}` (alternate Display) prints the whole chain joined by `": "`;
+//! * `{e:?}` (Debug) prints the outermost message plus a `Caused by:` list;
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing its `source()` chain.
+
+use std::fmt;
+
+/// A dynamic error with a chain of context messages (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap the error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, msg) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait attaching context to `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_full_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u64> {
+            Ok(s.parse::<u64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let none: Option<u8> = None;
+        let e = none.context("empty").unwrap_err();
+        assert_eq!(format!("{e:#}"), "empty");
+        let none: Option<u8> = None;
+        let e = none.with_context(|| format!("empty {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "empty 7");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn fails(n: usize) -> Result<()> {
+            if n > 3 {
+                bail!("n too large: {n}");
+            }
+            Err(anyhow!("always: {}", n))
+        }
+        assert_eq!(format!("{:#}", fails(9).unwrap_err()), "n too large: 9");
+        assert_eq!(format!("{:#}", fails(1).unwrap_err()), "always: 1");
+        let from_display = anyhow!(std::path::Path::new("/x").display());
+        assert_eq!(format!("{from_display}"), "/x");
+    }
+
+    #[test]
+    fn nested_context_stacks_outermost_first() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("layer one")
+            .context("layer two")
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "layer two: layer one: missing file");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn collect_with_explicit_error_type() {
+        let parsed: Result<Vec<u64>, _> = "1,2,3".split(',').map(|s| s.parse()).collect();
+        assert_eq!(parsed.unwrap(), vec![1, 2, 3]);
+    }
+}

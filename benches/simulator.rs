@@ -106,6 +106,56 @@ fn main() {
         }
     }
 
+    // Cross-process warm start: run 1 evaluates a candidate pool cold and
+    // persists its cache; run 2 (a fresh BatchEvaluator, standing in for a
+    // new process) loads the snapshot and replays the same workload.
+    // Acceptance target: the snapshot-warmed run answers a repeated-
+    // candidate workload >= 2x faster than cold simulator calls.
+    {
+        let layer = layer_by_name("ResNet-K2").unwrap();
+        let space = SwSpace::new(layer.clone(), eyeriss_hw(168), res.clone());
+        let mut rng = Rng::seed_from_u64(9);
+        let pool: Vec<_> = (0..64)
+            .map(|_| space.sample_valid(&mut rng, 10_000_000).unwrap().0)
+            .collect();
+        let snap = std::env::temp_dir()
+            .join(format!("codesign_bench_warmstart_{}.snap", std::process::id()));
+
+        let run1 = BatchEvaluator::new(eval.clone());
+        let filled = run1.edp_batch(&layer, &space.hw, &pool);
+        assert!(filled.iter().all(|e| e.is_some()));
+        let entries = run1.save_snapshot(&snap).expect("snapshot save");
+
+        let run2 = BatchEvaluator::new(eval.clone());
+        run2.load_snapshot(&snap).expect("snapshot load");
+        let cold = bench("warmstart_cold_pool64/ResNet-K2", budget, || {
+            pool.iter()
+                .map(|m| eval.edp(&layer, &space.hw, m).unwrap())
+                .sum::<f64>()
+        });
+        let warm = bench("warmstart_snapshot_pool64/ResNet-K2", budget, || {
+            run2.edp_batch(&layer, &space.hw, &pool)
+                .into_iter()
+                .map(|e| e.unwrap())
+                .sum::<f64>()
+        });
+        let speedup = cold.median_ns / warm.median_ns;
+        let stats = run2.stats();
+        println!(
+            "  -> warm-start speedup {speedup:.1}x (snapshot {entries} entries; \
+             segments prob/prot {}/{}; promotions {}; snapshot hits {})",
+            stats.probationary, stats.protected, stats.promotions, stats.snapshot_hits
+        );
+        assert!(stats.snapshot_hits > 0, "warm run must be served by snapshot entries");
+        if !smoke {
+            assert!(
+                speedup >= 2.0,
+                "snapshot warm start must be >= 2x cold evaluation (got {speedup:.2}x)"
+            );
+        }
+        std::fs::remove_file(&snap).ok();
+    }
+
     // Full-model sweep: one EDP evaluation per layer of every paper model.
     let mut rng = Rng::seed_from_u64(2);
     for model in all_models() {

@@ -19,6 +19,11 @@ pub struct Checkpoint {
     pub model: String,
     pub trial: usize,
     pub best_edp: f64,
+    /// Path of the evaluation-cache snapshot the run persists alongside the
+    /// incumbent design (see `model::cache::EvalCache::save_snapshot`), so a
+    /// resumed or follow-up run can warm-start from it. Optional: absent in
+    /// checkpoints from runs without `--cache-snapshot`.
+    pub cache_snapshot: Option<String>,
     pub hw: HwConfig,
     /// (layer name, mapping, layer EDP)
     pub layers: Vec<(String, Mapping, f64)>,
@@ -68,6 +73,9 @@ impl Checkpoint {
         s.push_str(&format!("model={}\n", self.model));
         s.push_str(&format!("trial={}\n", self.trial));
         s.push_str(&format!("best_edp={:e}\n", self.best_edp));
+        if let Some(snap) = &self.cache_snapshot {
+            s.push_str(&format!("cache_snapshot={snap}\n"));
+        }
         let h = &self.hw;
         s.push_str(&format!(
             "hw.pe_mesh={}x{}\nhw.lb={},{},{}\nhw.gb_mesh={}x{}\nhw.gb_geom={},{}\nhw.df={},{}\n",
@@ -180,17 +188,17 @@ impl Checkpoint {
             model: get("model")?,
             trial: get("trial")?.parse()?,
             best_edp: get("best_edp")?.parse()?,
+            cache_snapshot: kv.get("cache_snapshot").cloned(),
             hw,
             layers,
         })
     }
 
+    /// Persist atomically (temp file + rename): a crash mid-write leaves
+    /// either the previous checkpoint or the new one, never a truncated
+    /// unparseable file.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        std::fs::write(path, self.to_text())?;
+        crate::util::fsio::atomic_write(path.as_ref(), &self.to_text())?;
         Ok(())
     }
 
@@ -213,11 +221,18 @@ mod tests {
             model: "dqn".into(),
             trial: 17,
             best_edp: 3.25e-7,
+            cache_snapshot: Some("results/cache_dqn.snap".into()),
             hw: eyeriss_hw(168),
             layers: vec![("DQN-K2".into(), m, 3.25e-7)],
         };
         let back = Checkpoint::from_text(&ck.to_text()).unwrap();
         assert_eq!(ck, back);
+
+        // the snapshot pointer is optional: absent stays absent
+        let mut bare = ck.clone();
+        bare.cache_snapshot = None;
+        let back = Checkpoint::from_text(&bare.to_text()).unwrap();
+        assert_eq!(bare, back);
     }
 
     #[test]
@@ -227,6 +242,7 @@ mod tests {
             model: "dqn".into(),
             trial: 0,
             best_edp: 1.0,
+            cache_snapshot: None,
             hw: eyeriss_hw(168),
             layers: vec![("DQN-K1".into(), Mapping::trivial(&layer), 1.0)],
         };
@@ -234,6 +250,35 @@ mod tests {
         let path = dir.join("ck.txt");
         ck.save(&path).unwrap();
         assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_and_overwrites_cleanly() {
+        let layer = layer_by_name("DQN-K1").unwrap();
+        let mk = |trial| Checkpoint {
+            model: "dqn".into(),
+            trial,
+            best_edp: 1.0 / (trial as f64 + 1.0),
+            cache_snapshot: None,
+            hw: eyeriss_hw(168),
+            layers: vec![("DQN-K1".into(), Mapping::trivial(&layer), 1.0)],
+        };
+        let dir = std::env::temp_dir().join("codesign_ck_atomic_test");
+        let path = dir.join("ck.txt");
+        // repeated saves (the per-trial cadence of a real run) always leave
+        // a complete, parseable file and no temp siblings
+        for trial in 0..5 {
+            mk(trial).save(&path).unwrap();
+            let back = Checkpoint::load(&path).unwrap();
+            assert_eq!(back.trial, trial);
+        }
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(stray.is_empty(), "temp files left behind: {stray:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

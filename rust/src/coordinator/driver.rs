@@ -16,11 +16,12 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::parallel::{default_threads, parallel_map};
 use crate::model::arch::HwConfig;
+use crate::model::batch::{AdaptiveChunker, BatchEvaluator};
 use crate::model::cache::EvalCache;
 use crate::model::eval::Evaluator;
 use crate::model::mapping::Mapping;
 use crate::opt::config::NestedConfig;
-use crate::opt::hw_search::{self, HwMethod, HwTrace};
+use crate::opt::hw_search::{self, Chunking, HwMethod, HwTrace};
 use crate::opt::sw_search::{self, SearchTrace, SwMethod, SwProblem};
 use crate::space::hw_space::HwSpace;
 use crate::space::sw_space::SwSpace;
@@ -49,6 +50,11 @@ pub struct Driver {
     pub sw_method: SwMethod,
     pub threads: usize,
     pub checkpoint_path: Option<PathBuf>,
+    /// Cross-process cache persistence: when set, the run warm-starts by
+    /// loading this snapshot (if present and fingerprint-compatible) and
+    /// saves the cache back to it when the search finishes. Checkpoints
+    /// record the path so follow-up runs can find the warm cache.
+    pub cache_snapshot_path: Option<PathBuf>,
     pub verbose: bool,
     /// Evaluation cache shared by every software search this driver runs.
     pub cache: Arc<EvalCache>,
@@ -62,6 +68,7 @@ impl Driver {
             sw_method: SwMethod::Bo { surrogate: sw_search::SurrogateKind::Gp },
             threads: default_threads(),
             checkpoint_path: None,
+            cache_snapshot_path: None,
             verbose: true,
             cache: Arc::new(EvalCache::default()),
         }
@@ -155,6 +162,31 @@ impl Driver {
         let best: Mutex<Option<Checkpoint>> = Mutex::new(None);
         let mut trial = 0usize;
 
+        // Snapshot endpoint: same resources => same fingerprint as every
+        // software search of this run keys its entries under.
+        let snapshot_io = BatchEvaluator::with_cache(
+            Evaluator::new(eyeriss_resources(model.num_pes)),
+            Arc::clone(&self.cache),
+        );
+        if let Some(path) = &self.cache_snapshot_path {
+            if path.exists() {
+                match snapshot_io.load_snapshot(path) {
+                    Ok(n) => eprintln!(
+                        "[{}] loaded cache snapshot: {n} entries from {}",
+                        model.name,
+                        path.display()
+                    ),
+                    // a stale or foreign snapshot degrades to a cold start,
+                    // never to wrong results
+                    Err(e) => eprintln!("[{}] cache snapshot ignored: {e:#}", model.name),
+                }
+            }
+        }
+        // Size warmup batches from observed latency: one hardware config
+        // costs about (sw trials x layers) simulator evaluations.
+        let evals_per_config = (self.ncfg.sw_trials * model.layers.len().max(1)) as f64;
+        let chunker = AdaptiveChunker::new(Arc::clone(&self.cache), evals_per_config);
+
         let hw_trace = {
             let metrics_ref = Arc::clone(&metrics);
             let inner = |hws: &[HwConfig]| -> Vec<Option<f64>> {
@@ -179,6 +211,10 @@ impl Driver {
                                     model: model.name.to_string(),
                                     trial: t,
                                     best_edp: *edp,
+                                    cache_snapshot: self
+                                        .cache_snapshot_path
+                                        .as_ref()
+                                        .map(|p| p.display().to_string()),
                                     hw: hws[k].clone(),
                                     layers: layers.clone(),
                                 };
@@ -215,11 +251,22 @@ impl Driver {
                 inner,
                 self.ncfg.hw_trials,
                 &self.ncfg.hw_bo,
+                &Chunking::Adaptive(&chunker),
                 backend,
                 &mut rng,
             )
         };
 
+        if let Some(path) = &self.cache_snapshot_path {
+            match snapshot_io.save_snapshot(path) {
+                Ok(n) => eprintln!(
+                    "[{}] saved cache snapshot: {n} entries to {}",
+                    model.name,
+                    path.display()
+                ),
+                Err(e) => eprintln!("[{}] cache snapshot save failed: {e:#}", model.name),
+            }
+        }
         metrics.record_cache(self.cache.stats());
         CodesignOutcome { hw_trace, best: best.into_inner().unwrap(), metrics }
     }
@@ -244,6 +291,7 @@ pub fn eyeriss_baseline(
         sw_method,
         threads,
         checkpoint_path: None,
+        cache_snapshot_path: None,
         verbose: false,
         cache: Arc::new(EvalCache::default()),
     };
@@ -342,6 +390,42 @@ mod tests {
         // the second, identical evaluation ran fully warm
         let stats = driver.cache.stats();
         assert!(stats.hits > 0, "identical configs must hit the shared cache: {stats:?}");
+    }
+
+    #[test]
+    fn second_run_warm_starts_from_first_runs_snapshot() {
+        let dir = std::env::temp_dir()
+            .join(format!("codesign_snapshot_test_{}", std::process::id()));
+        let path = dir.join("cache.snap");
+        let mk = || {
+            let mut d = Driver::new(tiny_cfg());
+            d.verbose = false;
+            d.threads = 2;
+            d.sw_method = SwMethod::Random;
+            d.cache_snapshot_path = Some(path.clone());
+            d
+        };
+        // cold run: populates and persists the cache
+        let d1 = mk();
+        let out1 = d1.run(&dqn(), &GpBackend::Native, 11);
+        assert!(path.exists(), "run must leave a snapshot behind");
+        assert!(d1.cache.stats().snapshot_loaded == 0);
+        // the checkpointed design records where the warm cache lives
+        if let Some(best) = &out1.best {
+            assert_eq!(best.cache_snapshot.as_deref(), Some(path.display().to_string().as_str()));
+        }
+        // identical second run: every evaluation replays against the
+        // snapshot instead of the simulator
+        let d2 = mk();
+        let out2 = d2.run(&dqn(), &GpBackend::Native, 11);
+        let stats = d2.cache.stats();
+        assert!(stats.snapshot_loaded > 0, "second run must load the snapshot: {stats:?}");
+        assert!(stats.snapshot_hits > 0, "snapshot entries must serve hits: {stats:?}");
+        // warm-start must not change results
+        assert_eq!(out1.hw_trace.best_edp.to_bits(), out2.hw_trace.best_edp.to_bits());
+        // telemetry surfaces the warm start
+        assert!(out2.metrics.report().contains("cache_snapshot_hits="));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -24,6 +24,15 @@ pub struct Metrics {
     pub cache_misses: AtomicU64,
     pub cache_evictions: AtomicU64,
     pub cache_entries: AtomicU64,
+    /// Segmented-LRU occupancy and movement (0 under the FIFO policy).
+    pub cache_probationary: AtomicU64,
+    pub cache_protected: AtomicU64,
+    pub cache_promotions: AtomicU64,
+    pub cache_demotions: AtomicU64,
+    /// Cross-process warm start: entries loaded from a snapshot, and hits
+    /// those entries served.
+    pub cache_snapshot_loaded: AtomicU64,
+    pub cache_snapshot_hits: AtomicU64,
     start: Instant,
 }
 
@@ -38,6 +47,12 @@ impl Metrics {
             cache_misses: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
             cache_entries: AtomicU64::new(0),
+            cache_probationary: AtomicU64::new(0),
+            cache_protected: AtomicU64::new(0),
+            cache_promotions: AtomicU64::new(0),
+            cache_demotions: AtomicU64::new(0),
+            cache_snapshot_loaded: AtomicU64::new(0),
+            cache_snapshot_hits: AtomicU64::new(0),
             start: Instant::now(),
         })
     }
@@ -48,6 +63,12 @@ impl Metrics {
         self.cache_misses.store(stats.misses, Ordering::Relaxed);
         self.cache_evictions.store(stats.evictions, Ordering::Relaxed);
         self.cache_entries.store(stats.entries, Ordering::Relaxed);
+        self.cache_probationary.store(stats.probationary, Ordering::Relaxed);
+        self.cache_protected.store(stats.protected, Ordering::Relaxed);
+        self.cache_promotions.store(stats.promotions, Ordering::Relaxed);
+        self.cache_demotions.store(stats.demotions, Ordering::Relaxed);
+        self.cache_snapshot_loaded.store(stats.snapshot_loaded, Ordering::Relaxed);
+        self.cache_snapshot_hits.store(stats.snapshot_hits, Ordering::Relaxed);
     }
 
     /// Fraction of evaluation requests served from the cache.
@@ -88,7 +109,9 @@ impl Metrics {
         format!(
             "sim_evals={} feasible={} raw_draws={} feasibility_rate={:.5} \
              cache_hits={} cache_misses={} cache_hit_rate={:.3} cache_evictions={} \
-             cache_entries={} elapsed={:.1}s",
+             cache_entries={} cache_probationary={} cache_protected={} \
+             cache_promotions={} cache_demotions={} cache_snapshot_loaded={} \
+             cache_snapshot_hits={} elapsed={:.1}s",
             self.sim_evals.load(Ordering::Relaxed),
             self.feasible_evals.load(Ordering::Relaxed),
             self.raw_draws.load(Ordering::Relaxed),
@@ -98,6 +121,12 @@ impl Metrics {
             self.cache_hit_rate(),
             self.cache_evictions.load(Ordering::Relaxed),
             self.cache_entries.load(Ordering::Relaxed),
+            self.cache_probationary.load(Ordering::Relaxed),
+            self.cache_protected.load(Ordering::Relaxed),
+            self.cache_promotions.load(Ordering::Relaxed),
+            self.cache_demotions.load(Ordering::Relaxed),
+            self.cache_snapshot_loaded.load(Ordering::Relaxed),
+            self.cache_snapshot_hits.load(Ordering::Relaxed),
             self.elapsed_secs()
         )
     }
@@ -127,12 +156,34 @@ mod tests {
     #[test]
     fn cache_snapshot_is_stored_not_accumulated() {
         let m = Metrics::new();
-        m.record_cache(CacheStats { hits: 10, misses: 30, evictions: 2, entries: 25 });
-        m.record_cache(CacheStats { hits: 30, misses: 30, evictions: 2, entries: 25 });
+        m.record_cache(CacheStats {
+            hits: 10,
+            misses: 30,
+            evictions: 2,
+            entries: 25,
+            ..CacheStats::default()
+        });
+        m.record_cache(CacheStats {
+            hits: 30,
+            misses: 30,
+            evictions: 2,
+            entries: 25,
+            probationary: 20,
+            protected: 5,
+            promotions: 7,
+            demotions: 1,
+            snapshot_loaded: 12,
+            snapshot_hits: 9,
+        });
         assert_eq!(m.cache_hits.load(Ordering::Relaxed), 30);
         assert!((m.cache_hit_rate() - 0.5).abs() < 1e-12);
         let report = m.report();
         assert!(report.contains("cache_hits=30"));
         assert!(report.contains("cache_hit_rate=0.500"));
+        assert!(report.contains("cache_probationary=20"));
+        assert!(report.contains("cache_protected=5"));
+        assert!(report.contains("cache_promotions=7"));
+        assert!(report.contains("cache_snapshot_loaded=12"));
+        assert!(report.contains("cache_snapshot_hits=9"));
     }
 }

@@ -11,6 +11,8 @@
 //! Common flags: --model NAME --layer NAME --trials N --hw-trials N
 //!   --sw-trials N --repeats N --scale F --seed N --threads N --out DIR
 //!   --method M --native (use the pure-Rust GP instead of the PJRT artifacts)
+//!   --cache-policy slru|fifo --cache-snapshot PATH (codesign: persist the
+//!   evaluation cache across runs and warm-start from a prior run)
 
 use std::collections::HashMap;
 
@@ -18,6 +20,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use codesign::coordinator::driver::{eyeriss_baseline, Driver};
 use codesign::figures::{fig3, fig4, fig5a, fig5bc, insight, FigOpts};
+use codesign::model::cache::{CachePolicy, EvalCache, DEFAULT_CAPACITY, DEFAULT_SHARDS};
 use codesign::model::eval::Evaluator;
 use codesign::opt::config::{BoConfig, NestedConfig};
 use codesign::opt::hw_search::HwMethod;
@@ -207,10 +210,29 @@ fn cmd_codesign(args: &Args) -> Result<()> {
     let out_dir: std::path::PathBuf = args.str("out", "results").into();
     driver.checkpoint_path = Some(out_dir.join(format!("best_design_{model_name}.txt")));
 
+    // Evaluation-cache policy and cross-run persistence.
+    let policy_name = args.str("cache-policy", "slru");
+    let policy = CachePolicy::parse(&policy_name)
+        .ok_or_else(|| anyhow!("unknown cache policy {policy_name} (expected slru|fifo)"))?;
+    let cache = EvalCache::with_policy(policy, DEFAULT_SHARDS, DEFAULT_CAPACITY);
+    driver.cache = std::sync::Arc::new(cache);
+    if let Some(p) = args.flags.get("cache-snapshot") {
+        driver.cache_snapshot_path = Some(p.into());
+    }
+
     let seed = args.get("seed", 2020u64)?;
     println!(
-        "nested co-design on {model_name}: {} hw x {} sw trials, {} threads",
-        driver.ncfg.hw_trials, driver.ncfg.sw_trials, driver.threads
+        "nested co-design on {model_name}: {} hw x {} sw trials, {} threads, \
+         cache policy {}{}",
+        driver.ncfg.hw_trials,
+        driver.ncfg.sw_trials,
+        driver.threads,
+        policy.name(),
+        driver
+            .cache_snapshot_path
+            .as_ref()
+            .map(|p| format!(", snapshot {}", p.display()))
+            .unwrap_or_default()
     );
 
     let base = eyeriss_baseline(
@@ -415,7 +437,9 @@ fn main() -> Result<()> {
                 "usage: codesign <quickstart|sw-opt|codesign|selftest|specialize|report|fig3|fig4|fig5a|fig5b|fig5c|fig16|fig17|fig18|insight> [flags]\n\
                  flags: --model M --layer L --method bo|random|round-bo|tvm-xgb|tvm-treegru \n\
                         --trials N --hw-trials N --sw-trials N --repeats N --scale F \n\
-                        --seed N --threads N --out DIR --native"
+                        --seed N --threads N --out DIR --native \n\
+                        --cache-policy slru|fifo --cache-snapshot PATH (codesign: persist \n\
+                        the evaluation cache and warm-start follow-up runs from it)"
             );
             Ok(())
         }

@@ -16,7 +16,11 @@
 //! reuse, and how `runtime::server::EvalService` keeps serving requests warm.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
 
 use super::arch::HwConfig;
 use super::cache::{CacheStats, DesignKey, EvalCache, EvalOutcome};
@@ -59,14 +63,92 @@ fn evaluator_fingerprint(eval: &Evaluator) -> u64 {
         .fold(0xcbf29ce484222325u64, |h, &w| (h ^ w).wrapping_mul(0x100000001b3))
 }
 
+/// Default chunk size for observation-independent config batches while no
+/// latency has been observed yet (the cold half of [`AdaptiveChunker`]).
+pub const DEFAULT_CHUNK: usize = 8;
+
+/// Estimated serial work (seconds) below which a batch of cache misses is
+/// computed inline: spawning workers for less than ~a millisecond of
+/// evaluation loses more to thread startup than it gains.
+const MIN_PARALLEL_SECS: f64 = 1e-3;
+
+/// Latency-adaptive batch sizing.
+///
+/// The driver used to chunk observation-independent hardware batches at a
+/// fixed size (`opt::hw_search::HEAD_CHUNK`), which is simultaneously too
+/// small for cheap workloads (chunk overhead, idle workers) and too large
+/// for expensive ones (checkpoint/progress cadence collapses to minutes).
+/// The chunker instead targets a fixed wall-clock budget per chunk: the
+/// shared [`EvalCache`] keeps an EWMA of observed per-evaluation latency
+/// (fed by every [`BatchEvaluator`] that computes misses into it), and
+/// `suggest()` divides the budget by the estimated per-item cost. Until the
+/// first observation arrives it falls back to [`DEFAULT_CHUNK`].
+#[derive(Clone, Debug)]
+pub struct AdaptiveChunker {
+    cache: Arc<EvalCache>,
+    /// Estimated simulator evaluations one work item costs (for a hardware
+    /// config: software trials x layers).
+    evals_per_item: f64,
+    /// Wall-clock budget one chunk should target.
+    target_secs: f64,
+    min_chunk: usize,
+    max_chunk: usize,
+}
+
+impl AdaptiveChunker {
+    /// A chunker reading latency from `cache`, costing each item at
+    /// `evals_per_item` simulator evaluations (2s target, chunks of 1-64).
+    pub fn new(cache: Arc<EvalCache>, evals_per_item: f64) -> Self {
+        AdaptiveChunker {
+            cache,
+            evals_per_item: evals_per_item.max(1.0),
+            target_secs: 2.0,
+            min_chunk: 1,
+            max_chunk: 64,
+        }
+    }
+
+    /// Override the per-chunk wall-clock target.
+    pub fn with_target_secs(mut self, secs: f64) -> Self {
+        self.target_secs = secs.max(1e-6);
+        self
+    }
+
+    /// Override the chunk-size clamp.
+    pub fn with_bounds(mut self, min: usize, max: usize) -> Self {
+        self.min_chunk = min.max(1);
+        self.max_chunk = max.max(self.min_chunk);
+        self
+    }
+
+    /// Number of items the next chunk should carry, given the latency
+    /// observed so far.
+    pub fn suggest(&self) -> usize {
+        match self.cache.latency_ewma() {
+            Some(per_eval) => {
+                let per_item = per_eval * self.evals_per_item;
+                let raw = (self.target_secs / per_item).floor();
+                if raw.is_finite() && raw >= 0.0 {
+                    (raw as usize).clamp(self.min_chunk, self.max_chunk)
+                } else {
+                    self.max_chunk
+                }
+            }
+            None => DEFAULT_CHUNK.clamp(self.min_chunk, self.max_chunk),
+        }
+    }
+}
+
 /// Batched, memoized front-end over [`Evaluator`].
 #[derive(Clone, Debug)]
 pub struct BatchEvaluator {
     eval: Evaluator,
     cache: Arc<EvalCache>,
     threads: usize,
-    /// Below this many cache misses a batch is computed inline — one
-    /// evaluation costs microseconds, so thread spawn would dominate.
+    /// Cold-start fallback: below this many cache misses a batch is
+    /// computed inline. Once the cache's latency EWMA is grounded the
+    /// inline/parallel decision is made from estimated serial seconds
+    /// instead (see `MIN_PARALLEL_SECS`).
     parallel_threshold: usize,
     fingerprint: u64,
 }
@@ -107,9 +189,28 @@ impl BatchEvaluator {
         &self.cache
     }
 
+    /// The evaluator fingerprint this instance keys its cache entries (and
+    /// snapshots) under.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
     /// Cache telemetry snapshot.
     pub fn stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// Persist this evaluator's cache entries (see
+    /// [`EvalCache::save_snapshot`]). Returns the entry count written.
+    pub fn save_snapshot(&self, path: &Path) -> Result<usize> {
+        self.cache.save_snapshot(path, self.fingerprint)
+    }
+
+    /// Warm-start this evaluator's cache from a snapshot written by an
+    /// identically-configured evaluator; refuses fingerprint mismatches
+    /// (see [`EvalCache::load_snapshot`]). Returns the entry count loaded.
+    pub fn load_snapshot(&self, path: &Path) -> Result<usize> {
+        self.cache.load_snapshot(path, self.fingerprint)
     }
 
     fn key(&self, layer: &Layer, hw: &HwConfig, m: &Mapping) -> DesignKey {
@@ -122,7 +223,9 @@ impl BatchEvaluator {
         if let Some(outcome) = self.cache.get(&key) {
             return outcome;
         }
+        let started = Instant::now();
         let outcome = self.eval.evaluate(layer, hw, m);
+        self.cache.observe_latency(started.elapsed().as_secs_f64());
         self.cache.insert(key, outcome.clone());
         outcome
     }
@@ -166,21 +269,42 @@ impl BatchEvaluator {
             }
         }
 
-        let computed: Vec<EvalOutcome> =
-            if unique_rep.len() < self.parallel_threshold || self.threads <= 1 {
-                unique_rep
-                    .iter()
-                    .map(|&i| {
-                        let r = &requests[i];
-                        self.eval.evaluate(r.layer, r.hw, r.mapping)
-                    })
-                    .collect()
-            } else {
-                parallel_map(&unique_rep, self.threads, |_, &i| {
+        // Inline vs parallel: with a grounded latency EWMA the decision is
+        // made from estimated serial seconds (adaptive); cold, it falls
+        // back to the fixed unique-miss threshold.
+        let go_parallel = self.threads > 1
+            && unique_rep.len() > 1
+            && match self.cache.latency_ewma() {
+                Some(per_eval) => unique_rep.len() as f64 * per_eval >= MIN_PARALLEL_SECS,
+                None => unique_rep.len() >= self.parallel_threshold,
+            };
+        let compute_started = Instant::now();
+        let computed: Vec<EvalOutcome> = if !go_parallel {
+            unique_rep
+                .iter()
+                .map(|&i| {
                     let r = &requests[i];
                     self.eval.evaluate(r.layer, r.hw, r.mapping)
                 })
-            };
+                .collect()
+        } else {
+            parallel_map(&unique_rep, self.threads, |_, &i| {
+                let r = &requests[i];
+                self.eval.evaluate(r.layer, r.hw, r.mapping)
+            })
+        };
+        if !unique_rep.is_empty() {
+            // The EWMA tracks *serial* per-evaluation latency (what one
+            // cost-model invocation costs): the inline/parallel decision
+            // above compares serial seconds, and mixing in the divided
+            // wall-clock of parallel batches would make it oscillate. For
+            // the parallel path, scale wall-clock back up by the worker
+            // count actually used (parallel_map caps threads at the item
+            // count).
+            let secs = compute_started.elapsed().as_secs_f64();
+            let workers = if go_parallel { self.threads.min(unique_rep.len()) } else { 1 };
+            self.cache.observe_latency(secs * workers as f64 / unique_rep.len() as f64);
+        }
 
         for (key, outcome) in unique_keys.into_iter().zip(computed.iter()) {
             self.cache.insert(key, outcome.clone());
@@ -321,6 +445,66 @@ mod tests {
         let stats = b.stats();
         assert_eq!(stats.misses, 5);
         assert_eq!(stats.hits, 5);
+    }
+
+    #[test]
+    fn latency_ewma_grounds_after_evaluations() {
+        let (layer, hw, mappings, eval) = setup(10);
+        let batch = BatchEvaluator::new(eval);
+        assert_eq!(batch.cache().latency_ewma(), None);
+        let _ = batch.edp_batch(&layer, &hw, &mappings);
+        let lat = batch.cache().latency_ewma().expect("misses must ground the EWMA");
+        assert!(lat > 0.0 && lat < 10.0, "implausible per-eval latency {lat}s");
+    }
+
+    #[test]
+    fn adaptive_chunker_scales_with_observed_latency() {
+        let (layer, hw, mappings, eval) = setup(10);
+        let batch = BatchEvaluator::new(eval);
+        let chunker = AdaptiveChunker::new(Arc::clone(batch.cache()), 100.0)
+            .with_target_secs(1.0)
+            .with_bounds(1, 64);
+        // cold: the fixed default
+        assert_eq!(chunker.suggest(), DEFAULT_CHUNK);
+        let _ = batch.edp_batch(&layer, &hw, &mappings);
+        let warm = chunker.suggest();
+        assert!((1..=64).contains(&warm));
+        // a cheaper per-item estimate must never suggest smaller chunks
+        let cheap = AdaptiveChunker::new(Arc::clone(batch.cache()), 1.0)
+            .with_target_secs(1.0)
+            .with_bounds(1, 64);
+        assert!(cheap.suggest() >= warm);
+        // an absurdly expensive estimate degrades to single-item chunks
+        let dear = AdaptiveChunker::new(Arc::clone(batch.cache()), 1e12).with_target_secs(1e-6);
+        assert_eq!(dear.suggest(), 1);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_the_evaluator_api() {
+        let (layer, hw, mappings, eval) = setup(8);
+        let a = BatchEvaluator::new(eval.clone());
+        let first = a.edp_batch(&layer, &hw, &mappings);
+        let path = std::env::temp_dir()
+            .join(format!("codesign_batch_snap_{}.snap", std::process::id()));
+        let written = a.save_snapshot(&path).unwrap();
+        assert_eq!(written, 8);
+
+        // a fresh evaluator over the same cost model serves the whole
+        // workload from the snapshot without touching the simulator
+        let b = BatchEvaluator::new(eval.clone());
+        assert_eq!(b.load_snapshot(&path).unwrap(), 8);
+        let second = b.edp_batch(&layer, &hw, &mappings);
+        assert_eq!(first, second);
+        let stats = b.stats();
+        assert_eq!(stats.misses, 0, "warm run must not invoke the cost model");
+        assert_eq!(stats.hits, 8);
+        assert_eq!(stats.snapshot_hits, 8);
+
+        // a different cost model refuses the snapshot outright
+        let mut other = eval;
+        other.energy_model.dram_pj *= 2.0;
+        assert!(BatchEvaluator::new(other).load_snapshot(&path).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

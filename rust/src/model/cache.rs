@@ -12,20 +12,50 @@
 //!
 //! Keys are *injective* encodings, not lossy hashes: two distinct hardware
 //! configs or mappings can never collide (the `HashMap` resolves bucket
-//! collisions through full key equality). Capacity is bounded per shard with
-//! FIFO eviction; hit/miss/eviction counters feed `coordinator::metrics`.
+//! collisions through full key equality). Capacity is bounded per shard,
+//! with the eviction order chosen by [`CachePolicy`]:
+//!
+//! * [`CachePolicy::SegmentedLru`] (default) — a two-segment LRU. New
+//!   entries land in a *probationary* segment; a hit promotes the entry to
+//!   the *protected* segment (capped at [`PROTECTED_PERMILLE`]); protected
+//!   overflow demotes the protected LRU victim back to probationary instead
+//!   of dropping it. Eviction takes the probationary LRU first, so one-shot
+//!   scan traffic (acquisition sweeps over never-again candidates) cannot
+//!   flush the recurring working set the serve fleet depends on.
+//! * [`CachePolicy::Fifo`] — the PR-1 behavior, kept for comparison runs
+//!   (`--cache-policy fifo`).
+//!
+//! The cache also persists: [`EvalCache::save_snapshot`] writes a versioned
+//! on-disk snapshot of every entry belonging to one evaluator fingerprint
+//! (atomically — temp file + rename), and [`EvalCache::load_snapshot`]
+//! warm-starts a later process from it, refusing to load if the snapshot's
+//! fingerprint does not match the expected evaluator (results computed
+//! under a different resource budget or energy model can never leak in).
+//! Outcomes round-trip bit-identically: every float is serialized as its
+//! IEEE bit pattern.
+//!
+//! Telemetry: hit/miss/eviction counters plus per-segment occupancy,
+//! promotion/demotion counts and snapshot-serving counts, all surfaced
+//! through [`CacheStats`] into `coordinator::metrics`. The cache further
+//! keeps an EWMA of observed per-evaluation latency (fed by
+//! `model::batch::BatchEvaluator`), which `model::batch::AdaptiveChunker`
+//! turns into adaptive batch sizes.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::{HashMap, VecDeque};
 use std::hash::{Hash, Hasher};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use super::arch::HwConfig;
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::arch::{HwConfig, HwViolation};
 use super::energy::Metrics;
 use super::eval::Infeasible;
 use super::mapping::Mapping;
-use super::workload::{Layer, DIMS};
+use super::validity::SwViolation;
+use super::workload::{Dim, Layer, DIMS};
 
 /// Outcome of one evaluation, exactly as `Evaluator::evaluate` returns it.
 pub type EvalOutcome = Result<Metrics, Infeasible>;
@@ -93,6 +123,81 @@ impl DesignKey {
         self.hash(&mut h);
         (h.finish() % shards as u64) as usize
     }
+
+    /// Snapshot encoding of everything but the fingerprint (the snapshot
+    /// header carries that once): 49 u64 fields + 18 order bytes, CSV.
+    fn encode(&self) -> String {
+        let nums = self
+            .layer
+            .iter()
+            .chain(self.hw.iter())
+            .chain(self.splits.iter())
+            .map(|v| v.to_string())
+            .chain(self.orders.iter().map(|v| v.to_string()));
+        let mut out = String::new();
+        for (i, n) in nums.enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&n);
+        }
+        out
+    }
+
+    fn decode(fingerprint: u64, text: &str) -> Result<DesignKey> {
+        let vals: Vec<u64> = text
+            .split(',')
+            .map(|t| t.parse::<u64>().map_err(|e| anyhow!("bad key field {t}: {e}")))
+            .collect::<Result<_>>()?;
+        if vals.len() != 7 + 12 + 30 + 18 {
+            bail!("design key has {} fields, expected 67", vals.len());
+        }
+        let mut key = DesignKey {
+            evaluator: fingerprint,
+            layer: [0; 7],
+            hw: [0; 12],
+            splits: [0; 30],
+            orders: [0; 18],
+        };
+        key.layer.copy_from_slice(&vals[..7]);
+        key.hw.copy_from_slice(&vals[7..19]);
+        key.splits.copy_from_slice(&vals[19..49]);
+        for (slot, &v) in key.orders.iter_mut().zip(&vals[49..]) {
+            if v >= 6 {
+                bail!("order slot {v} out of range");
+            }
+            *slot = v as u8;
+        }
+        Ok(key)
+    }
+}
+
+/// Eviction policy of an [`EvalCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Two-segment LRU with promotion on hit (see module docs).
+    #[default]
+    SegmentedLru,
+    /// Insertion-order eviction (the PR-1 behavior), kept for comparison.
+    Fifo,
+}
+
+impl CachePolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            CachePolicy::SegmentedLru => "slru",
+            CachePolicy::Fifo => "fifo",
+        }
+    }
+
+    /// Parse a `--cache-policy` flag value.
+    pub fn parse(s: &str) -> Option<CachePolicy> {
+        match s {
+            "slru" | "segmented-lru" => Some(CachePolicy::SegmentedLru),
+            "fifo" => Some(CachePolicy::Fifo),
+            _ => None,
+        }
+    }
 }
 
 /// Counter snapshot surfaced through `coordinator::metrics`.
@@ -102,6 +207,19 @@ pub struct CacheStats {
     pub misses: u64,
     pub evictions: u64,
     pub entries: u64,
+    /// Resident entries in the probationary segment (all of them under FIFO).
+    pub probationary: u64,
+    /// Resident entries in the protected segment (0 under FIFO).
+    pub protected: u64,
+    /// Probationary -> protected promotions (first-reuse events: the first
+    /// hit an entry takes after its insert).
+    pub promotions: u64,
+    /// Protected -> probationary demotions (protected-segment overflow).
+    pub demotions: u64,
+    /// Entries ever loaded from snapshots into this cache.
+    pub snapshot_loaded: u64,
+    /// Hits served by entries that came from a snapshot (warm-start value).
+    pub snapshot_hits: u64,
 }
 
 impl CacheStats {
@@ -115,11 +233,109 @@ impl CacheStats {
     }
 }
 
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Segment {
+    Probationary,
+    Protected,
+}
+
+#[derive(Debug)]
+struct Entry {
+    outcome: EvalOutcome,
+    /// Recency stamp; a queue item is live iff its stamp matches.
+    stamp: u64,
+    seg: Segment,
+    from_snapshot: bool,
+}
+
+/// One shard: the entry map plus per-segment recency queues. The queues are
+/// *lazy*: touching an entry pushes a fresh `(stamp, key)` item and bumps
+/// the entry's stamp, leaving the old item stale; pops skip stale items and
+/// the queues are compacted when stale items dominate.
 #[derive(Debug, Default)]
 struct Shard {
-    map: HashMap<DesignKey, EvalOutcome>,
-    /// Insertion order for FIFO eviction; holds each resident key once.
-    fifo: VecDeque<DesignKey>,
+    map: HashMap<DesignKey, Entry>,
+    prob: VecDeque<(u64, DesignKey)>,
+    prot: VecDeque<(u64, DesignKey)>,
+    prob_len: usize,
+    prot_len: usize,
+    tick: u64,
+}
+
+fn queue_item_live(
+    map: &HashMap<DesignKey, Entry>,
+    seg: Segment,
+    stamp: u64,
+    key: &DesignKey,
+) -> bool {
+    map.get(key).is_some_and(|e| e.stamp == stamp && e.seg == seg)
+}
+
+impl Shard {
+    fn next_stamp(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Pop the LRU live key of `seg`, skipping stale queue items.
+    fn pop_lru(&mut self, seg: Segment) -> Option<DesignKey> {
+        let queue = match seg {
+            Segment::Probationary => &mut self.prob,
+            Segment::Protected => &mut self.prot,
+        };
+        while let Some((stamp, key)) = queue.pop_front() {
+            if queue_item_live(&self.map, seg, stamp, &key) {
+                return Some(key);
+            }
+        }
+        None
+    }
+
+    /// Evict one entry: probationary LRU first, protected LRU as fallback.
+    /// Returns false only when the shard is empty.
+    fn evict_one(&mut self) -> bool {
+        if let Some(key) = self.pop_lru(Segment::Probationary) {
+            self.map.remove(&key);
+            self.prob_len -= 1;
+            return true;
+        }
+        if let Some(key) = self.pop_lru(Segment::Protected) {
+            self.map.remove(&key);
+            self.prot_len -= 1;
+            return true;
+        }
+        false
+    }
+
+    /// Move the protected LRU entry back to the probationary MRU position.
+    fn demote_lru(&mut self) -> bool {
+        let Some(key) = self.pop_lru(Segment::Protected) else {
+            return false;
+        };
+        let stamp = self.next_stamp();
+        let e = self.map.get_mut(&key).expect("pop_lru returned a resident key");
+        e.seg = Segment::Probationary;
+        e.stamp = stamp;
+        self.prot_len -= 1;
+        self.prob_len += 1;
+        self.prob.push_back((stamp, key));
+        true
+    }
+
+    /// Drop stale queue items once they outnumber live entries by a wide
+    /// margin, bounding queue memory under hit-heavy (touch-heavy) traffic.
+    fn maybe_compact(&mut self) {
+        if self.prob.len() > 8 * self.prob_len + 16 {
+            let map = &self.map;
+            self.prob
+                .retain(|(stamp, key)| queue_item_live(map, Segment::Probationary, *stamp, key));
+        }
+        if self.prot.len() > 8 * self.prot_len + 16 {
+            let map = &self.map;
+            self.prot
+                .retain(|(stamp, key)| queue_item_live(map, Segment::Protected, *stamp, key));
+        }
+    }
 }
 
 /// The sharded concurrent cache. Cheap to share via `Arc`; every method
@@ -128,16 +344,36 @@ struct Shard {
 pub struct EvalCache {
     shards: Vec<Mutex<Shard>>,
     capacity_per_shard: usize,
+    protected_per_shard: usize,
+    policy: CachePolicy,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    promotions: AtomicU64,
+    demotions: AtomicU64,
+    snapshot_loaded: AtomicU64,
+    snapshot_hits: AtomicU64,
+    /// EWMA of per-evaluation latency in seconds, stored as f64 bits
+    /// (0 = no observation yet). Fed by `BatchEvaluator`, read by
+    /// `AdaptiveChunker`.
+    latency_bits: AtomicU64,
 }
 
 /// Default shard count: enough that 8 worker threads rarely collide.
 pub const DEFAULT_SHARDS: usize = 16;
 /// Default total capacity in entries (each costs roughly a kilobyte: the
-/// canonical key is stored in the map and the FIFO, plus the `Metrics`).
+/// canonical key is stored in the map and the recency queue, plus the
+/// `Metrics`).
 pub const DEFAULT_CAPACITY: usize = 1 << 16;
+/// Share of each shard's capacity reserved for the protected segment, in
+/// permille (800 = 80%): large enough that the recurring working set is
+/// sticky, small enough that fresh entries always have probationary room.
+pub const PROTECTED_PERMILLE: usize = 800;
+/// Smoothing factor of the per-evaluation latency EWMA.
+const LATENCY_ALPHA: f64 = 0.2;
+
+/// First line of the snapshot format; bumped on layout changes.
+const SNAPSHOT_MAGIC: &str = "codesign-evalcache v1";
 
 impl Default for EvalCache {
     fn default() -> Self {
@@ -146,47 +382,103 @@ impl Default for EvalCache {
 }
 
 impl EvalCache {
-    /// A cache with `shards` shards and `capacity` total entries.
+    /// A segmented-LRU cache with `shards` shards and `capacity` total
+    /// entries.
     pub fn new(shards: usize, capacity: usize) -> Self {
+        EvalCache::with_policy(CachePolicy::default(), shards, capacity)
+    }
+
+    /// A cache with an explicit eviction policy.
+    pub fn with_policy(policy: CachePolicy, shards: usize, capacity: usize) -> Self {
         let shards = shards.max(1);
         let capacity_per_shard = (capacity / shards).max(1);
+        let protected_per_shard = (capacity_per_shard * PROTECTED_PERMILLE / 1000).max(1);
         EvalCache {
             shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
             capacity_per_shard,
+            protected_per_shard,
+            policy,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
+            demotions: AtomicU64::new(0),
+            snapshot_loaded: AtomicU64::new(0),
+            snapshot_hits: AtomicU64::new(0),
+            latency_bits: AtomicU64::new(0),
         }
     }
 
-    /// Look up a design point; counts a hit or a miss.
+    /// The eviction policy this cache runs.
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    /// Look up a design point; counts a hit or a miss. Under the segmented
+    /// LRU a hit touches the entry's recency and promotes probationary
+    /// entries to the protected segment.
     pub fn get(&self, key: &DesignKey) -> Option<EvalOutcome> {
-        let shard = self.shards[key.shard_of(self.shards.len())].lock().unwrap();
-        match shard.map.get(key) {
-            Some(v) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(v.clone())
-            }
-            None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
+        let mut shard = self.shards[key.shard_of(self.shards.len())].lock().unwrap();
+        let Some(e) = shard.map.get(key) else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        let outcome = e.outcome.clone();
+        let from_snapshot = e.from_snapshot;
+        let was_probationary = e.seg == Segment::Probationary;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        if from_snapshot {
+            self.snapshot_hits.fetch_add(1, Ordering::Relaxed);
         }
+        if self.policy == CachePolicy::SegmentedLru {
+            let stamp = shard.next_stamp();
+            let e = shard.map.get_mut(key).expect("entry just read");
+            e.seg = Segment::Protected;
+            e.stamp = stamp;
+            shard.prot.push_back((stamp, key.clone()));
+            if was_probationary {
+                self.promotions.fetch_add(1, Ordering::Relaxed);
+                shard.prob_len -= 1;
+                shard.prot_len += 1;
+                while shard.prot_len > self.protected_per_shard {
+                    if !shard.demote_lru() {
+                        break;
+                    }
+                    self.demotions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            shard.maybe_compact();
+        }
+        Some(outcome)
     }
 
-    /// Insert an outcome, evicting FIFO-oldest entries beyond capacity.
-    /// Re-inserting an existing key refreshes the value without growing the
-    /// FIFO (the evaluator is deterministic, so the value is identical).
+    /// Insert an outcome, evicting beyond-capacity entries per the policy.
+    /// Re-inserting an existing key refreshes the value without touching
+    /// recency (the evaluator is deterministic, so the value is identical).
     pub fn insert(&self, key: DesignKey, outcome: EvalOutcome) {
+        self.insert_marked(key, outcome, false);
+    }
+
+    fn insert_marked(&self, key: DesignKey, outcome: EvalOutcome, from_snapshot: bool) {
         let mut shard = self.shards[key.shard_of(self.shards.len())].lock().unwrap();
-        if shard.map.insert(key.clone(), outcome).is_none() {
-            shard.fifo.push_back(key);
+        if let Some(e) = shard.map.get_mut(&key) {
+            e.outcome = outcome;
+            return;
         }
+        let stamp = shard.next_stamp();
+        shard.map.insert(
+            key.clone(),
+            Entry { outcome, stamp, seg: Segment::Probationary, from_snapshot },
+        );
+        shard.prob_len += 1;
+        shard.prob.push_back((stamp, key));
         while shard.map.len() > self.capacity_per_shard {
-            let Some(old) = shard.fifo.pop_front() else { break };
-            shard.map.remove(&old);
+            if !shard.evict_one() {
+                break;
+            }
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
+        shard.maybe_compact();
     }
 
     /// Count `n` extra hits that were served without a map lookup — the
@@ -195,6 +487,44 @@ impl EvalCache {
     /// reflects every avoided cost-model invocation.
     pub fn note_hits(&self, n: u64) {
         self.hits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Fold one observation of per-evaluation latency (seconds per computed
+    /// evaluation) into the EWMA. Non-finite or non-positive samples are
+    /// ignored.
+    pub fn observe_latency(&self, secs_per_eval: f64) {
+        if !secs_per_eval.is_finite() || secs_per_eval <= 0.0 {
+            return;
+        }
+        let mut cur = self.latency_bits.load(Ordering::Relaxed);
+        loop {
+            let next = if cur == 0 {
+                secs_per_eval
+            } else {
+                let old = f64::from_bits(cur);
+                old + LATENCY_ALPHA * (secs_per_eval - old)
+            };
+            match self.latency_bits.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(observed) => cur = observed,
+            }
+        }
+    }
+
+    /// Current per-evaluation latency EWMA in seconds, if any evaluation
+    /// has been observed.
+    pub fn latency_ewma(&self) -> Option<f64> {
+        let bits = self.latency_bits.load(Ordering::Relaxed);
+        if bits == 0 {
+            None
+        } else {
+            Some(f64::from_bits(bits))
+        }
     }
 
     /// Number of resident entries across all shards.
@@ -211,19 +541,245 @@ impl EvalCache {
         for s in &self.shards {
             let mut s = s.lock().unwrap();
             s.map.clear();
-            s.fifo.clear();
+            s.prob.clear();
+            s.prot.clear();
+            s.prob_len = 0;
+            s.prot_len = 0;
         }
     }
 
     /// Snapshot of the telemetry counters.
     pub fn stats(&self) -> CacheStats {
+        let mut entries = 0u64;
+        let mut probationary = 0u64;
+        let mut protected = 0u64;
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            entries += s.map.len() as u64;
+            probationary += s.prob_len as u64;
+            protected += s.prot_len as u64;
+        }
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
-            entries: self.len() as u64,
+            entries,
+            probationary,
+            protected,
+            promotions: self.promotions.load(Ordering::Relaxed),
+            demotions: self.demotions.load(Ordering::Relaxed),
+            snapshot_loaded: self.snapshot_loaded.load(Ordering::Relaxed),
+            snapshot_hits: self.snapshot_hits.load(Ordering::Relaxed),
         }
     }
+
+    /// Persist every resident entry belonging to `fingerprint` as a
+    /// versioned snapshot at `path` (atomic write). Returns the number of
+    /// entries written.
+    pub fn save_snapshot(&self, path: &Path, fingerprint: u64) -> Result<usize> {
+        let mut lines: Vec<String> = Vec::new();
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            for (key, entry) in &s.map {
+                if key.evaluator == fingerprint {
+                    lines.push(format!("e {} {}", key.encode(), encode_outcome(&entry.outcome)));
+                }
+            }
+        }
+        let mut text = String::new();
+        text.push_str(SNAPSHOT_MAGIC);
+        text.push('\n');
+        text.push_str(&format!("fingerprint={fingerprint}\n"));
+        text.push_str(&format!("policy={}\n", self.policy.name()));
+        text.push_str(&format!("entries={}\n", lines.len()));
+        for line in &lines {
+            text.push_str(line);
+            text.push('\n');
+        }
+        crate::util::fsio::atomic_write(path, &text)
+            .with_context(|| format!("writing cache snapshot {}", path.display()))?;
+        Ok(lines.len())
+    }
+
+    /// Warm-start from a snapshot at `path`. Refuses to load when the
+    /// snapshot was written under a different evaluator fingerprint, when
+    /// the format version is unknown, or when the file is truncated (the
+    /// header entry count does not match) — and a refusal leaves the cache
+    /// exactly as it was (entries are inserted only after the whole file
+    /// parses and validates). Loaded entries start in the probationary
+    /// segment, marked so their hits surface as `snapshot_hits`. Returns
+    /// the number of entries loaded.
+    pub fn load_snapshot(&self, path: &Path, expected_fingerprint: u64) -> Result<usize> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading cache snapshot {}", path.display()))?;
+        let mut lines = text.lines();
+        let magic = lines.next().unwrap_or_default();
+        if magic != SNAPSHOT_MAGIC {
+            bail!("unsupported snapshot format {magic:?} (expected {SNAPSHOT_MAGIC:?})");
+        }
+        let mut fingerprint: Option<u64> = None;
+        let mut declared: Option<usize> = None;
+        // Parse everything before touching the cache: a snapshot that fails
+        // *any* check (fingerprint, truncation, corrupt entries) must leave
+        // the cache untouched, not half-loaded.
+        let mut parsed: Vec<(DesignKey, EvalOutcome)> = Vec::new();
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(v) = line.strip_prefix("fingerprint=") {
+                let fp: u64 = v.parse().context("bad snapshot fingerprint")?;
+                if fp != expected_fingerprint {
+                    bail!(
+                        "snapshot fingerprint {fp:#x} does not match this evaluator \
+                         ({expected_fingerprint:#x}): refusing to load results computed \
+                         under a different cost model"
+                    );
+                }
+                fingerprint = Some(fp);
+            } else if let Some(v) = line.strip_prefix("policy=") {
+                let _ = v; // informational only
+            } else if let Some(v) = line.strip_prefix("entries=") {
+                declared = Some(v.parse().context("bad snapshot entry count")?);
+            } else if let Some(rest) = line.strip_prefix("e ") {
+                let fp = fingerprint.ok_or_else(|| anyhow!("entry before fingerprint header"))?;
+                let (key_text, outcome_text) = rest
+                    .split_once(' ')
+                    .ok_or_else(|| anyhow!("bad snapshot entry line {rest:?}"))?;
+                parsed.push((DesignKey::decode(fp, key_text)?, decode_outcome(outcome_text)?));
+            } else {
+                bail!("unrecognized snapshot line {line:?}");
+            }
+        }
+        let declared = declared.ok_or_else(|| anyhow!("snapshot missing entries= header"))?;
+        if parsed.len() != declared {
+            bail!(
+                "truncated snapshot: header declares {declared} entries, found {}",
+                parsed.len()
+            );
+        }
+        let loaded = parsed.len();
+        for (key, outcome) in parsed {
+            self.insert_marked(key, outcome, true);
+        }
+        self.snapshot_loaded.fetch_add(loaded as u64, Ordering::Relaxed);
+        Ok(loaded)
+    }
+}
+
+fn hex_bits(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn parse_bits(s: &str) -> Result<f64> {
+    let bits = u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad float bits {s}: {e}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+fn dim_by_name(s: &str) -> Result<Dim> {
+    DIMS.into_iter()
+        .find(|d| d.name() == s)
+        .ok_or_else(|| anyhow!("bad dimension {s}"))
+}
+
+/// Serialize an outcome. Floats go out as IEEE bit patterns so the
+/// round-trip is bit-identical; infeasibility reasons go out as stable
+/// tag strings.
+fn encode_outcome(outcome: &EvalOutcome) -> String {
+    match outcome {
+        Ok(m) => {
+            let mut s = format!("ok:{}", m.macs);
+            for v in [m.cycles, m.energy_pj, m.edp, m.utilization]
+                .iter()
+                .chain(m.energy_breakdown.iter())
+                .chain(m.cycle_bounds.iter())
+            {
+                s.push(',');
+                s.push_str(&hex_bits(*v));
+            }
+            s
+        }
+        Err(Infeasible::Hardware(v)) => {
+            let tag = match v {
+                HwViolation::PeMesh => "pe-mesh",
+                HwViolation::LocalBufferOverflow => "local-buffer-overflow",
+                HwViolation::EmptySubBuffer => "empty-sub-buffer",
+                HwViolation::GbMesh => "gb-mesh",
+                HwViolation::GbAlignment => "gb-alignment",
+                HwViolation::GbGeometry => "gb-geometry",
+            };
+            format!("err:hw:{tag}")
+        }
+        Err(Infeasible::Software(v)) => {
+            let tag = match v {
+                SwViolation::FactorProduct(d) => {
+                    return format!("err:sw:factor-product.{}", d.name())
+                }
+                SwViolation::Dataflow(d) => return format!("err:sw:dataflow.{}", d.name()),
+                SwViolation::OrderNotPermutation => "order-not-permutation",
+                SwViolation::SpatialX => "spatial-x",
+                SwViolation::SpatialY => "spatial-y",
+                SwViolation::LocalInputs => "local-inputs",
+                SwViolation::LocalWeights => "local-weights",
+                SwViolation::LocalOutputs => "local-outputs",
+                SwViolation::GlbCapacity => "glb-capacity",
+            };
+            format!("err:sw:{tag}")
+        }
+    }
+}
+
+fn decode_outcome(text: &str) -> Result<EvalOutcome> {
+    if let Some(fields) = text.strip_prefix("ok:") {
+        let parts: Vec<&str> = fields.split(',').collect();
+        if parts.len() != 13 {
+            bail!("metrics outcome has {} fields, expected 13", parts.len());
+        }
+        let macs: u64 = parts[0].parse().map_err(|e| anyhow!("bad macs {}: {e}", parts[0]))?;
+        let f: Vec<f64> = parts[1..].iter().map(|p| parse_bits(p)).collect::<Result<_>>()?;
+        return Ok(Ok(Metrics {
+            macs,
+            cycles: f[0],
+            energy_pj: f[1],
+            edp: f[2],
+            utilization: f[3],
+            energy_breakdown: [f[4], f[5], f[6], f[7], f[8]],
+            cycle_bounds: [f[9], f[10], f[11]],
+        }));
+    }
+    if let Some(tag) = text.strip_prefix("err:hw:") {
+        let v = match tag {
+            "pe-mesh" => HwViolation::PeMesh,
+            "local-buffer-overflow" => HwViolation::LocalBufferOverflow,
+            "empty-sub-buffer" => HwViolation::EmptySubBuffer,
+            "gb-mesh" => HwViolation::GbMesh,
+            "gb-alignment" => HwViolation::GbAlignment,
+            "gb-geometry" => HwViolation::GbGeometry,
+            other => bail!("unknown hardware violation tag {other}"),
+        };
+        return Ok(Err(Infeasible::Hardware(v)));
+    }
+    if let Some(tag) = text.strip_prefix("err:sw:") {
+        if let Some(d) = tag.strip_prefix("factor-product.") {
+            return Ok(Err(Infeasible::Software(SwViolation::FactorProduct(dim_by_name(d)?))));
+        }
+        if let Some(d) = tag.strip_prefix("dataflow.") {
+            return Ok(Err(Infeasible::Software(SwViolation::Dataflow(dim_by_name(d)?))));
+        }
+        let v = match tag {
+            "order-not-permutation" => SwViolation::OrderNotPermutation,
+            "spatial-x" => SwViolation::SpatialX,
+            "spatial-y" => SwViolation::SpatialY,
+            "local-inputs" => SwViolation::LocalInputs,
+            "local-weights" => SwViolation::LocalWeights,
+            "local-outputs" => SwViolation::LocalOutputs,
+            "glb-capacity" => SwViolation::GlbCapacity,
+            other => bail!("unknown software violation tag {other}"),
+        };
+        return Ok(Err(Infeasible::Software(v)));
+    }
+    bail!("unrecognized outcome {text:?}")
 }
 
 #[cfg(test)]
@@ -256,6 +812,10 @@ mod tests {
         (l, hw(), m)
     }
 
+    fn snap_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("codesign_cache_{tag}_{}.snap", std::process::id()))
+    }
+
     #[test]
     fn hit_miss_accounting() {
         let (l, h, m) = scenario();
@@ -272,6 +832,10 @@ mod tests {
         assert_eq!(stats.entries, 1);
         assert_eq!(stats.evictions, 0);
         assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+        // the hit promoted the entry out of probationary
+        assert_eq!(stats.promotions, 1);
+        assert_eq!(stats.protected, 1);
+        assert_eq!(stats.probationary, 0);
     }
 
     #[test]
@@ -305,10 +869,20 @@ mod tests {
     }
 
     #[test]
+    fn design_key_text_roundtrip() {
+        let (l, h, m) = scenario();
+        let key = DesignKey::new(9, &l, &h, &m);
+        let back = DesignKey::decode(9, &key.encode()).unwrap();
+        assert_eq!(key, back);
+        assert!(DesignKey::decode(9, "1,2,3").is_err());
+        assert!(DesignKey::decode(9, &key.encode().replace(',', ";")).is_err());
+    }
+
+    #[test]
     fn fifo_eviction_bounds_capacity() {
         let (l, h, m) = scenario();
         // single shard, two entries max
-        let cache = EvalCache::new(1, 2);
+        let cache = EvalCache::with_policy(CachePolicy::Fifo, 1, 2);
         let ev = Evaluator::new(Resources::eyeriss_168());
         let outcome = ev.evaluate(&l, &h, &m);
         for fp in 0..5u64 {
@@ -320,6 +894,61 @@ mod tests {
         // oldest evicted, newest resident
         assert!(cache.get(&DesignKey::new(0, &l, &h, &m)).is_none());
         assert!(cache.get(&DesignKey::new(4, &l, &h, &m)).is_some());
+        // FIFO never promotes
+        let stats = cache.stats();
+        assert_eq!(stats.promotions, 0);
+        assert_eq!(stats.protected, 0);
+    }
+
+    #[test]
+    fn slru_hit_protects_against_scan_eviction() {
+        let (l, h, m) = scenario();
+        let cache = EvalCache::with_policy(CachePolicy::SegmentedLru, 1, 3);
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let outcome = ev.evaluate(&l, &h, &m);
+        let key = |fp: u64| DesignKey::new(fp, &l, &h, &m);
+        cache.insert(key(0), outcome.clone());
+        cache.insert(key(1), outcome.clone());
+        cache.insert(key(2), outcome.clone());
+        // second access promotes key 0 to the protected segment
+        assert!(cache.get(&key(0)).is_some());
+        assert_eq!(cache.stats().promotions, 1);
+        assert_eq!(cache.stats().protected, 1);
+        // a scan of one-shot inserts must evict probationary entries
+        // (1 then 2), never the protected key 0 — under FIFO key 0, the
+        // oldest insert, would have been the first casualty
+        cache.insert(key(3), outcome.clone());
+        cache.insert(key(4), outcome.clone());
+        assert!(cache.get(&key(1)).is_none());
+        assert!(cache.get(&key(2)).is_none());
+        assert!(cache.get(&key(0)).is_some(), "protected entry survived the scan");
+        assert_eq!(cache.stats().evictions, 2);
+    }
+
+    #[test]
+    fn slru_demotes_protected_overflow_instead_of_dropping() {
+        let (l, h, m) = scenario();
+        // capacity 5 per shard -> protected cap = 4
+        let cache = EvalCache::with_policy(CachePolicy::SegmentedLru, 1, 5);
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let outcome = ev.evaluate(&l, &h, &m);
+        let key = |fp: u64| DesignKey::new(fp, &l, &h, &m);
+        for fp in 0..5 {
+            cache.insert(key(fp), outcome.clone());
+        }
+        // promote all five: the fifth promotion overflows the protected cap
+        for fp in 0..5 {
+            assert!(cache.get(&key(fp)).is_some());
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.promotions, 5);
+        assert_eq!(stats.demotions, 1, "overflow demotes the protected LRU");
+        assert_eq!(stats.protected, 4);
+        assert_eq!(stats.probationary, 1);
+        assert_eq!(stats.entries, 5, "demotion must not drop the entry");
+        assert_eq!(stats.evictions, 0);
+        // the demoted entry (key 0, the protected LRU) is still readable
+        assert!(cache.get(&key(0)).is_some());
     }
 
     #[test]
@@ -334,6 +963,31 @@ mod tests {
         let stats = cache.stats();
         assert_eq!(stats.entries, 1);
         assert_eq!(stats.evictions, 0);
+    }
+
+    #[test]
+    fn hit_heavy_traffic_keeps_queues_bounded() {
+        let (l, h, m) = scenario();
+        let cache = EvalCache::with_policy(CachePolicy::SegmentedLru, 1, 4);
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let outcome = ev.evaluate(&l, &h, &m);
+        let key = |fp: u64| DesignKey::new(fp, &l, &h, &m);
+        for fp in 0..4 {
+            cache.insert(key(fp), outcome.clone());
+        }
+        // thousands of touches: lazy queue items must be compacted away
+        for _ in 0..2000 {
+            for fp in 0..4 {
+                assert!(cache.get(&key(fp)).is_some());
+            }
+        }
+        let shard = cache.shards[0].lock().unwrap();
+        assert!(
+            shard.prot.len() <= 8 * shard.prot_len + 16,
+            "protected queue grew unboundedly: {} items for {} entries",
+            shard.prot.len(),
+            shard.prot_len
+        );
     }
 
     #[test]
@@ -360,6 +1014,7 @@ mod tests {
         assert_eq!(stats.hits + stats.misses, 200);
         assert!(stats.entries as usize <= DEFAULT_CAPACITY);
         assert!(cache.len() >= 50, "at least the 50 distinct fps of one thread");
+        assert_eq!(stats.probationary + stats.protected, stats.entries);
     }
 
     #[test]
@@ -372,5 +1027,130 @@ mod tests {
         cache.clear();
         assert!(cache.is_empty());
         assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().probationary, 0);
+        assert_eq!(cache.stats().protected, 0);
+    }
+
+    #[test]
+    fn latency_ewma_tracks_observations() {
+        let cache = EvalCache::default();
+        assert_eq!(cache.latency_ewma(), None);
+        cache.observe_latency(f64::NAN);
+        cache.observe_latency(-1.0);
+        assert_eq!(cache.latency_ewma(), None, "bad samples must be ignored");
+        cache.observe_latency(1e-3);
+        assert!((cache.latency_ewma().unwrap() - 1e-3).abs() < 1e-12);
+        for _ in 0..200 {
+            cache.observe_latency(4e-3);
+        }
+        let ewma = cache.latency_ewma().unwrap();
+        assert!((ewma - 4e-3).abs() < 1e-4, "EWMA must converge to the plateau: {ewma}");
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_outcomes_bit_identically() {
+        let (l, h, m) = scenario();
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let cache = EvalCache::new(4, 64);
+        let ok = ev.evaluate(&l, &h, &m);
+        assert!(ok.is_ok());
+        // a feasible outcome, an infeasible one, and a foreign fingerprint
+        cache.insert(DesignKey::new(1, &l, &h, &m), ok.clone());
+        let mut bad = m.clone();
+        bad.split_mut(Dim::C).dram += 1;
+        let err = ev.evaluate(&l, &h, &bad);
+        assert!(err.is_err());
+        cache.insert(DesignKey::new(1, &l, &h, &bad), err.clone());
+        cache.insert(DesignKey::new(2, &l, &h, &m), ok.clone());
+
+        let path = snap_path("roundtrip");
+        let written = cache.save_snapshot(&path, 1).unwrap();
+        assert_eq!(written, 2, "only fingerprint-1 entries belong in the snapshot");
+
+        let warm = EvalCache::default();
+        let loaded = warm.load_snapshot(&path, 1).unwrap();
+        assert_eq!(loaded, 2);
+        let back_ok = warm.get(&DesignKey::new(1, &l, &h, &m)).unwrap();
+        match (&back_ok, &ok) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.macs, b.macs);
+                assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+                assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+                assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+                assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+                for (x, y) in a.energy_breakdown.iter().zip(b.energy_breakdown.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+                for (x, y) in a.cycle_bounds.iter().zip(b.cycle_bounds.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            other => panic!("expected Ok/Ok, got {other:?}"),
+        }
+        let back_err = warm.get(&DesignKey::new(1, &l, &h, &bad)).unwrap();
+        match (&back_err, &err) {
+            (Err(a), Err(b)) => assert_eq!(a, b),
+            other => panic!("expected Err/Err, got {other:?}"),
+        }
+        // foreign-fingerprint entry did not travel
+        assert!(warm.get(&DesignKey::new(2, &l, &h, &m)).is_none());
+        // warm hits are attributed to the snapshot
+        let stats = warm.stats();
+        assert_eq!(stats.snapshot_loaded, 2);
+        assert_eq!(stats.snapshot_hits, 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn snapshot_refuses_mismatched_fingerprint_and_corruption() {
+        let (l, h, m) = scenario();
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let cache = EvalCache::default();
+        cache.insert(DesignKey::new(1, &l, &h, &m), ev.evaluate(&l, &h, &m));
+        let path = snap_path("refuse");
+        cache.save_snapshot(&path, 1).unwrap();
+
+        // wrong evaluator fingerprint: refused, nothing loaded
+        let other = EvalCache::default();
+        let err = other.load_snapshot(&path, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+        assert!(other.is_empty());
+
+        // truncation: drop the last line -> entry count mismatch; and even
+        // a snapshot truncated *mid-entries* must load nothing at all
+        let text = std::fs::read_to_string(&path).unwrap();
+        let truncated: String = text.lines().take(4).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&path, truncated).unwrap();
+        assert!(other.load_snapshot(&path, 1).is_err());
+        assert!(other.is_empty(), "a refused snapshot must leave the cache untouched");
+        assert_eq!(other.stats().snapshot_loaded, 0);
+
+        // alien format: refused up front
+        std::fs::write(&path, "not-a-snapshot v9\n").unwrap();
+        let err = other.load_snapshot(&path, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported snapshot format"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn snapshot_load_respects_capacity() {
+        let (l, h, m) = scenario();
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let big = EvalCache::new(1, 64);
+        let outcome = ev.evaluate(&l, &h, &m);
+        for fp in 0..10u64 {
+            big.insert(DesignKey::new(1000 + fp, &l, &h, &m), outcome.clone());
+        }
+        // one snapshot per fingerprint family is not required: snapshots are
+        // per-fingerprint, so save each and load into a tiny cache
+        let path = snap_path("capacity");
+        let small = EvalCache::new(1, 4);
+        for fp in 0..10u64 {
+            big.save_snapshot(&path, 1000 + fp).unwrap();
+            small.load_snapshot(&path, 1000 + fp).unwrap();
+        }
+        assert!(small.len() <= 4, "capacity must bound snapshot loads");
+        assert!(small.stats().evictions >= 6);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -7,6 +7,7 @@
 //! stochastic).
 
 use crate::model::arch::HwConfig;
+use crate::model::batch::AdaptiveChunker;
 use crate::opt::config::BoConfig;
 use crate::space::features::hw_features;
 use crate::space::hw_space::HwSpace;
@@ -118,11 +119,41 @@ pub(crate) fn absorb(
     }
 }
 
-/// Chunk size for observation-independent (random/warmup) config batches:
-/// big enough to fan the (config x layer) cross product over the worker
-/// pool, small enough that the driver's per-trial checkpoint/progress hooks
-/// keep firing at a reasonable cadence.
-pub(crate) const HEAD_CHUNK: usize = 8;
+/// Fixed chunk size for observation-independent (random/warmup) config
+/// batches when no latency information is available: big enough to fan the
+/// (config x layer) cross product over the worker pool, small enough that
+/// the driver's per-trial checkpoint/progress hooks keep firing at a
+/// reasonable cadence.
+pub const HEAD_CHUNK: usize = crate::model::batch::DEFAULT_CHUNK;
+
+/// How the observation-independent head of a hardware search (the random
+/// baseline's whole run, BO's warmup) is cut into `inner` batches.
+pub enum Chunking<'a> {
+    /// Fixed chunk size — the pre-adaptive behavior, still right for
+    /// synthetic objectives with no shared evaluation cache.
+    Fixed(usize),
+    /// Latency-adaptive sizing: chunk sizes are re-derived before every
+    /// batch from the shared cache's per-evaluation EWMA, so cheap
+    /// workloads get wide batches and expensive ones keep the checkpoint
+    /// cadence (see [`AdaptiveChunker`]).
+    Adaptive(&'a AdaptiveChunker),
+}
+
+impl Chunking<'_> {
+    /// Number of configs the next head batch should carry (>= 1).
+    pub fn next_chunk(&self) -> usize {
+        match self {
+            Chunking::Fixed(n) => (*n).max(1),
+            Chunking::Adaptive(chunker) => chunker.suggest(),
+        }
+    }
+}
+
+impl Default for Chunking<'static> {
+    fn default() -> Self {
+        Chunking::Fixed(HEAD_CHUNK)
+    }
+}
 
 /// Run a hardware search. `inner` evaluates a *batch* of hardware
 /// configurations by running the per-layer software searches and returning
@@ -131,13 +162,16 @@ pub(crate) const HEAD_CHUNK: usize = 8;
 /// whole batches lets the coordinator fan the (config x layer) cross
 /// product out over its worker pool: the random baseline submits the entire
 /// run as chunked batches, BO submits its warmup phase the same way and
-/// single configs once the surrogate is in the loop.
+/// single configs once the surrogate is in the loop. `chunking` sizes
+/// those head batches — the co-design driver passes an adaptive chunker
+/// wired to its shared evaluation cache.
 pub fn search(
     method: HwMethod,
     space: &HwSpace,
     mut inner: impl FnMut(&[HwConfig]) -> Vec<Option<f64>>,
     trials: usize,
     cfg: &BoConfig,
+    chunking: &Chunking<'_>,
     backend: &GpBackend,
     rng: &mut Rng,
 ) -> HwTrace {
@@ -158,9 +192,15 @@ pub fn search(
     // (see `HEAD_CHUNK`).
     let head = if method == HwMethod::Random { trials } else { cfg.warmup.min(trials) };
     let picks: Vec<HwConfig> = (0..head).map(|_| space.sample_valid(rng).0).collect();
-    for chunk in picks.chunks(HEAD_CHUNK) {
+    // chunk sizes are re-derived per batch: under adaptive chunking the
+    // first (cold) batch grounds the latency EWMA and later batches resize
+    let mut rest: &[HwConfig] = &picks;
+    while !rest.is_empty() {
+        let take = chunking.next_chunk().min(rest.len());
+        let (chunk, tail) = rest.split_at(take);
         let edps = inner(chunk);
         absorb(&mut trace, &mut obs, &space.resources, chunk, edps);
+        rest = tail;
     }
 
     for _trial in head..trials {
@@ -256,6 +296,7 @@ mod tests {
             batch_inner,
             15,
             &quick_cfg(),
+            &Chunking::default(),
             &GpBackend::Native,
             &mut rng,
         );
@@ -273,6 +314,7 @@ mod tests {
             batch_inner,
             25,
             &quick_cfg(),
+            &Chunking::default(),
             &GpBackend::Native,
             &mut rng,
         );
@@ -296,6 +338,7 @@ mod tests {
                 batch_inner,
                 25,
                 &quick_cfg(),
+                &Chunking::default(),
                 &GpBackend::Native,
                 &mut r1,
             );
@@ -305,6 +348,7 @@ mod tests {
                 batch_inner,
                 25,
                 &quick_cfg(),
+                &Chunking::default(),
                 &GpBackend::Native,
                 &mut r2,
             );
@@ -325,6 +369,7 @@ mod tests {
             batch_inner,
             15,
             &quick_cfg(),
+            &Chunking::default(),
             &GpBackend::Native,
             &mut rng,
         );

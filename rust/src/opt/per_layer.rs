@@ -12,10 +12,11 @@
 use std::sync::Arc;
 
 use crate::coordinator::parallel::{default_threads, parallel_map};
+use crate::model::batch::AdaptiveChunker;
 use crate::model::cache::{CacheStats, EvalCache};
 use crate::model::eval::Evaluator;
 use crate::opt::config::NestedConfig;
-use crate::opt::hw_search::{self, HwMethod, HwTrace};
+use crate::opt::hw_search::{self, Chunking, HwMethod, HwTrace};
 use crate::opt::sw_search::{self, SwMethod, SwProblem};
 use crate::space::hw_space::HwSpace;
 use crate::space::sw_space::SwSpace;
@@ -47,6 +48,9 @@ pub fn specialize(
     let resources = eyeriss_resources(model.num_pes);
     let cache = Arc::new(EvalCache::default());
     let threads = default_threads();
+    // each hardware config costs ~sw_trials simulator evaluations; size the
+    // warmup batches from the latency the shared cache observes
+    let chunker = AdaptiveChunker::new(Arc::clone(&cache), ncfg.sw_trials as f64);
     let mut layers = Vec::new();
     let mut total = 0.0;
 
@@ -90,6 +94,7 @@ pub fn specialize(
             inner,
             ncfg.hw_trials,
             &ncfg.hw_bo,
+            &Chunking::Adaptive(&chunker),
             backend,
             &mut rng,
         );

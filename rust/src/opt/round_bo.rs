@@ -23,6 +23,86 @@ use crate::util::stats::argmax;
 /// 6 dims x 5 levels + 3 orders x 6 keys.
 pub const BOX_DIM: usize = 6 * 5 + 3 * 6;
 
+/// How far above the worst feasible `ln(EDP)` an invalid point is recorded.
+const PENALTY_GAP: f64 = 2.0;
+
+/// GP observations of the relax-and-round loop, with *grounded* penalties
+/// for invalid rounded points.
+///
+/// The seed implementation initialized its running `worst_seen` to `0.0`, so
+/// an invalid point observed before (or above) any feasible one entered the
+/// GP as `y = 2.0` — *better* than any feasible observation whose `ln(EDP)`
+/// exceeds 2, actively steering the acquisition toward invalid regions and
+/// corrupting the Fig. 3 baseline. Here the penalty is anchored to the
+/// running maximum of the feasible `ln(EDP)` observations: invalid points
+/// score `worst_seen + PENALTY_GAP` once that maximum exists, and invalid
+/// points seen *before* any feasible observation are deferred and flushed
+/// with the grounded penalty as soon as the first feasible point arrives.
+/// Every recorded penalty therefore sits above every feasible observation
+/// made so far — the GP can never prefer an all-infeasible region.
+#[derive(Debug, Default)]
+pub(crate) struct ObservationSet {
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    /// Running max over feasible `ln(EDP)`; `None` until grounded.
+    worst_seen: Option<f64>,
+    /// Invalid points observed before the first feasible one.
+    deferred: Vec<Vec<f64>>,
+}
+
+impl ObservationSet {
+    pub(crate) fn new() -> Self {
+        ObservationSet::default()
+    }
+
+    /// Record one evaluated box point (`None` EDP = rounded to invalid).
+    pub(crate) fn push(&mut self, x: Vec<f64>, edp: Option<f64>) {
+        match edp {
+            Some(e) => {
+                let l = e.ln();
+                let grounded = self.worst_seen.is_some();
+                let worst = match self.worst_seen {
+                    Some(w) => w.max(l),
+                    None => l,
+                };
+                self.worst_seen = Some(worst);
+                self.xs.push(x);
+                self.ys.push(l);
+                if !grounded {
+                    // first feasible observation: flush the deferred invalid
+                    // points with a penalty that is now anchored to reality
+                    for dx in std::mem::take(&mut self.deferred) {
+                        self.xs.push(dx);
+                        self.ys.push(worst + PENALTY_GAP);
+                    }
+                }
+            }
+            None => match self.worst_seen {
+                Some(w) => {
+                    self.xs.push(x);
+                    self.ys.push(w + PENALTY_GAP);
+                }
+                // ungrounded: hold the point back rather than inventing a
+                // penalty level the data does not support yet
+                None => self.deferred.push(x),
+            },
+        }
+    }
+
+    pub(crate) fn xs(&self) -> &[Vec<f64>] {
+        &self.xs
+    }
+
+    pub(crate) fn ys(&self) -> &[f64] {
+        &self.ys
+    }
+
+    /// Number of observations the GP can see.
+    pub(crate) fn len(&self) -> usize {
+        self.ys.len()
+    }
+}
+
 /// Decode a continuous box point into a (possibly invalid) mapping.
 pub fn decode(problem: &SwProblem, point: &[f64]) -> Mapping {
     debug_assert_eq!(point.len(), BOX_DIM);
@@ -116,11 +196,8 @@ pub fn search(
     rng: &mut Rng,
 ) -> SearchTrace {
     let mut trace = SearchTrace::new();
-    let mut xs: Vec<Vec<f64>> = Vec::new();
-    let mut ys: Vec<f64> = Vec::new();
+    let mut obs = ObservationSet::new();
     let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::SquaredExp);
-    // Penalty for invalid rounded points: worse than anything seen.
-    let mut worst_seen: f64 = 0.0;
     let mut last_fit_at = 0usize;
 
     // The random phase (warmup, and the first two trials that seed the GP)
@@ -135,16 +212,7 @@ pub fn search(
     let edps = problem.edp_batch(&mappings);
     for ((point, mapping), edp) in points.into_iter().zip(mappings.iter()).zip(edps) {
         trace.record(mapping, edp);
-        let y = match edp {
-            Some(e) => {
-                let l = e.ln();
-                worst_seen = worst_seen.max(l);
-                l
-            }
-            None => worst_seen + 2.0,
-        };
-        xs.push(point);
-        ys.push(y);
+        obs.push(point, edp);
     }
 
     for _trial in nrand..trials {
@@ -153,27 +221,33 @@ pub fn search(
             // constraint awareness)
             let cands: Vec<Vec<f64>> =
                 (0..cfg.pool).map(|_| (0..BOX_DIM).map(|_| rng.f64()).collect()).collect();
-            // marginal-likelihood refit on the same schedule as the main BO;
-            // data-only updates in between (perf: §Perf in EXPERIMENTS.md)
-            if xs.len() - last_fit_at >= cfg.refit_every || last_fit_at == 0 {
-                if gp.fit(&xs, &ys, rng).is_ok() {
-                    last_fit_at = xs.len();
-                }
+            if obs.len() < 2 {
+                // nothing grounded to model yet (e.g. an all-invalid warmup
+                // whose points are still deferred): explore randomly
+                cands.into_iter().next().unwrap()
             } else {
-                let _ = gp.fit_data_only(&xs, &ys);
-            }
-            let best = ys.iter().cloned().fold(f64::INFINITY, f64::min);
-            match gp.predict(&cands) {
-                Ok(post) => {
-                    let u: Vec<f64> = post
-                        .mean
-                        .iter()
-                        .zip(post.var.iter())
-                        .map(|(&m, &v)| cfg.acquisition.utility(m, v, best))
-                        .collect();
-                    cands[argmax(&u).unwrap_or(0)].clone()
+                // marginal-likelihood refit on the same schedule as the main
+                // BO; data-only updates in between (§Perf, EXPERIMENTS.md)
+                if obs.len() - last_fit_at >= cfg.refit_every || last_fit_at == 0 {
+                    if gp.fit(obs.xs(), obs.ys(), rng).is_ok() {
+                        last_fit_at = obs.len();
+                    }
+                } else {
+                    let _ = gp.fit_data_only(obs.xs(), obs.ys());
                 }
-                Err(_) => cands.into_iter().next().unwrap(),
+                let best = obs.ys().iter().cloned().fold(f64::INFINITY, f64::min);
+                match gp.predict(&cands) {
+                    Ok(post) => {
+                        let u: Vec<f64> = post
+                            .mean
+                            .iter()
+                            .zip(post.var.iter())
+                            .map(|(&m, &v)| cfg.acquisition.utility(m, v, best))
+                            .collect();
+                        cands[argmax(&u).unwrap_or(0)].clone()
+                    }
+                    Err(_) => cands.into_iter().next().unwrap(),
+                }
             }
         };
 
@@ -181,18 +255,9 @@ pub fn search(
         trace.raw_draws += 1;
         let edp = problem.edp(&mapping);
         trace.record(&mapping, edp);
-        let y = match edp {
-            Some(e) => {
-                let l = e.ln();
-                worst_seen = worst_seen.max(l);
-                l
-            }
-            // invalid: penalized observation teaches the GP *something*,
-            // but without constraint structure it keeps proposing nearby
-            None => worst_seen + 2.0,
-        };
-        xs.push(point);
-        ys.push(y);
+        // invalid: the grounded penalty teaches the GP *something*, but
+        // without constraint structure it keeps proposing nearby
+        obs.push(point, edp);
     }
     trace
 }
@@ -240,6 +305,127 @@ mod tests {
             let f = allocate_factors(n, &shares);
             assert_eq!(f.iter().product::<u64>(), n);
         }
+    }
+
+    /// The recorded-observation invariant the seed code violated: once any
+    /// feasible point exists, every penalty observation must sit strictly
+    /// above every feasible `ln(EDP)` recorded so far (so the GP can never
+    /// rank an invalid region ahead of the best feasible one), and no
+    /// ungrounded penalty is ever emitted.
+    fn assert_penalties_grounded(obs: &ObservationSet, feasible_lns: &[f64]) {
+        let feasible: std::collections::HashSet<u64> =
+            feasible_lns.iter().map(|l| l.to_bits()).collect();
+        let mut max_feasible_so_far = f64::NEG_INFINITY;
+        let mut best_feasible_so_far = f64::INFINITY;
+        let mut seen_feasible = false;
+        for &y in obs.ys() {
+            if feasible.contains(&y.to_bits()) {
+                seen_feasible = true;
+                max_feasible_so_far = max_feasible_so_far.max(y);
+                best_feasible_so_far = best_feasible_so_far.min(y);
+            } else {
+                assert!(seen_feasible, "penalty observation recorded before grounding: {y}");
+                assert!(
+                    y > max_feasible_so_far,
+                    "penalty {y} not above the running worst feasible {max_feasible_so_far}"
+                );
+                assert!(
+                    y > best_feasible_so_far,
+                    "penalty {y} below the best feasible ln(EDP) {best_feasible_so_far}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn penalties_are_grounded_and_deferred_until_first_feasible() {
+        // ln(EDP) values chosen > 2.0 so the seed behavior (penalty = 2.0
+        // from worst_seen = 0.0) would order invalid points *below* every
+        // feasible one — the exact Fig. 3 corruption.
+        let x = |v: f64| vec![v; BOX_DIM];
+        let (e10, e20, e30) = (10.0f64.exp(), 20.0f64.exp(), 30.0f64.exp());
+        let (l10, l20, l30) = (e10.ln(), e20.ln(), e30.ln());
+        let mut obs = ObservationSet::new();
+        obs.push(x(0.1), None); // invalid before grounding: deferred
+        obs.push(x(0.2), None);
+        assert_eq!(obs.len(), 0, "ungrounded invalid points must not enter the GP");
+        obs.push(x(0.8), Some(e10));
+        // grounding flushed both deferred points at worst + gap
+        assert_eq!(obs.len(), 3);
+        assert!((obs.ys()[1] - (l10 + 2.0)).abs() < 1e-12);
+        assert!((obs.ys()[2] - (l10 + 2.0)).abs() < 1e-12);
+        obs.push(x(0.9), Some(e30));
+        obs.push(x(0.15), None); // grounded penalty tracks the running max
+        assert!((obs.ys().last().unwrap() - (l30 + 2.0)).abs() < 1e-12);
+        obs.push(x(0.85), Some(e20));
+        obs.push(x(0.12), None);
+        assert!(
+            (obs.ys().last().unwrap() - (l30 + 2.0)).abs() < 1e-12,
+            "penalty must track the running max, not the last feasible value"
+        );
+        assert_penalties_grounded(&obs, &[l10, l20, l30]);
+    }
+
+    #[test]
+    fn infeasible_heavy_warmup_records_no_penalty_below_best_feasible() {
+        // Drive the ObservationSet exactly as `search` does, with real
+        // decoded/evaluated warmup points (the infeasible-heavy regime the
+        // rounding pathology produces on DQN-K2).
+        let p = problem();
+        let mut rng = Rng::seed_from_u64(2);
+        let points: Vec<Vec<f64>> =
+            (0..40).map(|_| (0..BOX_DIM).map(|_| rng.f64()).collect()).collect();
+        let mappings: Vec<Mapping> = points.iter().map(|pt| decode(&p, pt)).collect();
+        let edps = p.edp_batch(&mappings);
+        let n_invalid = edps.iter().filter(|e| e.is_none()).count();
+        assert!(n_invalid > 0, "warmup must exercise the invalid path");
+        let feasible_lns: Vec<f64> =
+            edps.iter().flatten().map(|e| e.ln()).collect();
+        assert!(!feasible_lns.is_empty(), "warmup must also ground the penalty");
+        let mut obs = ObservationSet::new();
+        for (pt, edp) in points.into_iter().zip(edps) {
+            obs.push(pt, edp);
+        }
+        assert_penalties_grounded(&obs, &feasible_lns);
+    }
+
+    #[test]
+    fn gp_no_longer_prefers_an_all_infeasible_region() {
+        // Region A (around 0.2) is all-invalid, region B (around 0.8) is
+        // feasible with large ln(EDP) values (> 2.0). Under the seed's
+        // ungrounded penalty the invalid observations entered at y = 2.0 —
+        // far "better" than the feasible 28..32 — and the GP posterior
+        // preferred region A. Grounded penalties must invert that.
+        let mut rng = Rng::seed_from_u64(7);
+        let mut obs = ObservationSet::new();
+        let jitter = |rng: &mut Rng, c: f64| -> Vec<f64> {
+            (0..BOX_DIM).map(|_| c + 0.05 * (rng.f64() - 0.5)).collect()
+        };
+        // invalid cluster arrives first: exercises the deferral path too
+        let a_probe = jitter(&mut rng, 0.2);
+        obs.push(a_probe.clone(), None);
+        for _ in 0..3 {
+            obs.push(jitter(&mut rng, 0.2), None);
+        }
+        let b_probe = jitter(&mut rng, 0.8);
+        let ln_edp = 28.0f64;
+        obs.push(b_probe.clone(), Some(ln_edp.exp()));
+        for _ in 0..5 {
+            obs.push(jitter(&mut rng, 0.8), Some(ln_edp.exp()));
+            obs.push(jitter(&mut rng, 0.2), None);
+        }
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::SquaredExp);
+        gp.fit(obs.xs(), obs.ys(), &mut rng).unwrap();
+        // probe at actual observations: the noise-free GP near-interpolates,
+        // so the invalid point must now score ~2 higher (worse) than the
+        // feasible one; under the seed's y = 2.0 penalty it scored ~26 lower
+        let post = gp.predict(&[a_probe, b_probe]).unwrap();
+        assert!(
+            post.mean[0] > post.mean[1] + 0.5,
+            "GP still prefers the all-infeasible region: A {} vs B {}",
+            post.mean[0],
+            post.mean[1]
+        );
     }
 
     #[test]

@@ -139,7 +139,7 @@ pub fn search_with_prior(
 mod tests {
     use super::*;
     use crate::model::arch::Resources;
-    use crate::opt::hw_search::{search, HwMethod};
+    use crate::opt::hw_search::{search, Chunking, HwMethod};
 
     /// Source and target objectives: same structure, shifted scale — the
     /// transfer-friendly situation the paper anticipates.
@@ -171,6 +171,7 @@ mod tests {
             batched(1e-3),
             20,
             &quick_cfg(),
+            &Chunking::default(),
             &GpBackend::Native,
             &mut rng,
         );
@@ -190,6 +191,7 @@ mod tests {
             batched(2e-3),
             20,
             &quick_cfg(),
+            &Chunking::default(),
             &GpBackend::Native,
             &mut rng,
         );
@@ -217,6 +219,7 @@ mod tests {
                 batched(1e-3),
                 6,
                 &quick_cfg(),
+                &Chunking::default(),
                 &GpBackend::Native,
                 &mut r2,
             );

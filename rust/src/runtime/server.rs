@@ -11,6 +11,7 @@
 //!   different clients or rounds) hit the warm cache instead of re-running
 //!   the cost model; `EvalHandle::stats` exposes the hit/miss telemetry.
 
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
@@ -150,6 +151,10 @@ enum EvalMsg {
     Stats {
         reply: mpsc::Sender<CacheStats>,
     },
+    SaveSnapshot {
+        path: PathBuf,
+        reply: mpsc::Sender<Result<usize>>,
+    },
     Shutdown,
 }
 
@@ -186,11 +191,21 @@ impl EvalHandle {
             .collect())
     }
 
-    /// Cache telemetry of the service (hits/misses/evictions/entries).
+    /// Cache telemetry of the service (hits/misses/evictions/entries plus
+    /// segment occupancy, promotions and snapshot-serving counts).
     pub fn stats(&self) -> Result<CacheStats> {
         let (reply, rx) = mpsc::channel();
         self.send(EvalMsg::Stats { reply })?;
         rx.recv().map_err(|_| anyhow!("evaluation service dropped the request"))
+    }
+
+    /// Persist the service's cache as a snapshot a later fleet member can
+    /// warm-start from (see [`EvalService::start_warm`]). Returns the entry
+    /// count written.
+    pub fn save_snapshot(&self, path: impl Into<PathBuf>) -> Result<usize> {
+        let (reply, rx) = mpsc::channel();
+        self.send(EvalMsg::SaveSnapshot { path: path.into(), reply })?;
+        rx.recv().map_err(|_| anyhow!("evaluation service dropped the request"))?
     }
 }
 
@@ -206,6 +221,24 @@ impl EvalService {
     /// Start the service thread around the given evaluator.
     pub fn start(eval: Evaluator) -> Result<EvalService> {
         Self::start_with(BatchEvaluator::new(eval))
+    }
+
+    /// Start the service warm: load a cache snapshot written by an earlier
+    /// run (or another fleet member) before serving, so repeated traffic is
+    /// answered from the snapshot instead of cold simulator calls. A
+    /// missing, stale or fingerprint-mismatched snapshot degrades to a
+    /// *cold* start (logged to stderr), never to wrong results and never
+    /// to a fleet member that refuses to boot — the same policy as
+    /// `coordinator::driver::Driver::run`.
+    pub fn start_warm(eval: Evaluator, snapshot: &Path) -> Result<EvalService> {
+        let batch = BatchEvaluator::new(eval);
+        if let Err(e) = batch.load_snapshot(snapshot) {
+            eprintln!(
+                "eval-service: cache snapshot {} ignored (starting cold): {e:#}",
+                snapshot.display()
+            );
+        }
+        Self::start_with(batch)
     }
 
     /// Start the service around an existing batch evaluator (e.g. one
@@ -230,6 +263,9 @@ impl EvalService {
                         }
                         EvalMsg::Stats { reply } => {
                             let _ = reply.send(batch.stats());
+                        }
+                        EvalMsg::SaveSnapshot { path, reply } => {
+                            let _ = reply.send(batch.save_snapshot(&path));
                         }
                         EvalMsg::Shutdown => break,
                     }
@@ -289,6 +325,41 @@ mod tests {
         let stats = handle.stats().unwrap();
         assert_eq!(stats.misses, 6);
         assert_eq!(stats.hits, 6);
+    }
+
+    #[test]
+    fn fleet_warm_start_serves_from_snapshot() {
+        let snap = std::env::temp_dir()
+            .join(format!("codesign_eval_service_{}.snap", std::process::id()));
+        let batch = jobs(5);
+        // member 1: cold, then persists its cache
+        let first = {
+            let service = EvalService::start(Evaluator::new(Resources::eyeriss_168())).unwrap();
+            let handle = service.handle();
+            let edps = handle.edp_batch(batch.clone()).unwrap();
+            let written = handle.save_snapshot(&snap).unwrap();
+            assert_eq!(written, 5);
+            edps
+        };
+        // member 2: warm-starts and never touches the simulator
+        let service =
+            EvalService::start_warm(Evaluator::new(Resources::eyeriss_168()), &snap).unwrap();
+        let handle = service.handle();
+        let second = handle.edp_batch(batch).unwrap();
+        assert_eq!(first, second);
+        let stats = handle.stats().unwrap();
+        assert_eq!(stats.misses, 0, "warm fleet member must serve from the snapshot");
+        assert_eq!(stats.snapshot_hits, 5);
+        // a member with a different cost model refuses the snapshot but
+        // still boots — cold, computing its own (different) results
+        let mut other = Evaluator::new(Resources::eyeriss_168());
+        other.energy_model.dram_pj *= 2.0;
+        let cold_member = EvalService::start_warm(other, &snap).unwrap();
+        let cold_handle = cold_member.handle();
+        let cold_stats = cold_handle.stats().unwrap();
+        assert_eq!(cold_stats.snapshot_loaded, 0, "foreign snapshot must not load");
+        assert_eq!(cold_stats.entries, 0, "mismatched member must start cold");
+        std::fs::remove_file(&snap).ok();
     }
 
     #[test]

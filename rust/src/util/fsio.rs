@@ -1,0 +1,127 @@
+//! Filesystem helpers shared by the persistence layers (checkpoints, cache
+//! snapshots): crash-safe atomic file writes.
+#![deny(clippy::style)]
+
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-process temp-name disambiguator: two *threads* writing the same
+/// target concurrently must not share a temp file, or one could rename the
+/// other's half-written bytes into place.
+static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Write `contents` to `path` atomically and durably: the bytes go to a
+/// sibling temporary file first, are fsynced, and are renamed into place,
+/// so neither a process kill nor an OS crash/power loss mid-write can
+/// leave a truncated file at `path` — readers see either the old contents
+/// or the new ones. After the rename the parent directory is fsynced too
+/// (best-effort on platforms where directories cannot be opened), since a
+/// rename alone survives a process kill but not necessarily a system
+/// crash under delayed allocation. Parent directories are created as
+/// needed. The temp name embeds the pid and a per-process sequence
+/// number, so neither two processes nor two threads writing the same path
+/// can clobber each other's in-flight bytes (concurrent writers race only
+/// on which complete file wins the final rename).
+pub fn atomic_write(path: &Path, contents: &str) -> io::Result<()> {
+    use std::io::Write as _;
+
+    let Some(name) = path.file_name() else {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("atomic_write: path has no file name: {}", path.display()),
+        ));
+    };
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => {
+            std::fs::create_dir_all(p)?;
+            Some(p)
+        }
+        _ => None,
+    };
+    let mut tmp_name = name.to_os_string();
+    let seq = WRITE_SEQ.fetch_add(1, Ordering::Relaxed);
+    tmp_name.push(format!(".tmp.{}.{seq}", std::process::id()));
+    let tmp = path.with_file_name(tmp_name);
+    let written = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        // flush the data to the device before the rename can make it
+        // visible, or a crash could expose an empty/garbage file
+        f.sync_all()
+    })();
+    if let Err(e) = written {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    // make the rename itself durable; directories cannot be opened on
+    // every platform, so this step is best-effort
+    if let Some(parent) = parent {
+        if let Ok(dir) = std::fs::File::open(parent) {
+            let _ = dir.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("codesign_fsio_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn writes_and_overwrites_without_leftover_tmp() {
+        let dir = scratch_dir("basic");
+        let path = dir.join("nested").join("file.txt");
+        atomic_write(&path, "first").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "first");
+        atomic_write(&path, "second").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second");
+        // no temp siblings survive a successful write
+        let leftovers: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "stray temp files: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_pathless_target() {
+        assert!(atomic_write(Path::new("/"), "x").is_err());
+    }
+
+    #[test]
+    fn concurrent_writers_never_tear_the_target() {
+        let dir = scratch_dir("race");
+        let path = dir.join("contended.txt");
+        std::thread::scope(|s| {
+            for t in 0..8u32 {
+                let path = &path;
+                s.spawn(move || {
+                    // each writer's payload is one distinct repeated byte:
+                    // any torn or interleaved write is detectable below
+                    let payload = format!("{t}").repeat(2048);
+                    for _ in 0..20 {
+                        atomic_write(path, &payload).unwrap();
+                    }
+                });
+            }
+        });
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(got.len(), 2048, "target must hold exactly one complete payload");
+        let first = got.as_bytes()[0];
+        assert!(got.bytes().all(|b| b == first), "interleaved writer payloads");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

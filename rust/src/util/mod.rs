@@ -3,6 +3,7 @@
 
 pub mod benchkit;
 pub mod csvout;
+pub mod fsio;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -5,6 +5,7 @@
 //! xoshiro256** generator (Blackman & Vigna), plus the sampling helpers used
 //! by the design-space samplers and optimizers. Everything is deterministic
 //! given a seed, which the figure harnesses rely on for reproducibility.
+#![deny(clippy::style)]
 
 /// SplitMix64 step; used to expand a single u64 seed into xoshiro state.
 #[inline]
@@ -76,20 +77,31 @@ impl Rng {
         lo + (hi - lo) * self.f64()
     }
 
-    /// Uniform integer in [0, n). n must be > 0.
+    /// Uniform integer in [0, n).
+    ///
+    /// Panics on `n == 0` in every build profile: a zero pool means an
+    /// upstream sampler produced an empty candidate set, and silently
+    /// returning 0 (the old `debug_assert!` behavior) masked that bug in
+    /// release runs.
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
-        debug_assert!(n > 0);
+        assert!(n > 0, "Rng::below(0): empty pool upstream");
         // Lemire's multiply-shift rejection-free-enough reduction; bias is
         // negligible for the n (< 2^32) used here.
         ((self.next_u64() as u128 * n as u128) >> 64) as usize
     }
 
-    /// Uniform integer in [lo, hi] inclusive.
+    /// Uniform integer in [lo, hi] inclusive. The span is computed in wide
+    /// arithmetic, so extreme ranges (up to the full `i64` domain) cannot
+    /// overflow the old `(hi - lo + 1) as usize` path. Panics on an empty
+    /// range (`hi < lo`).
     #[inline]
     pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
-        debug_assert!(hi >= lo);
-        lo + self.below((hi - lo + 1) as usize) as i64
+        assert!(hi >= lo, "Rng::int_in: empty range [{lo}, {hi}]");
+        // span <= 2^64 fits in u128; multiply-shift keeps the offset < span
+        let span = (hi as i128 - lo as i128 + 1) as u128;
+        let offset = (self.next_u64() as u128 * span) >> 64;
+        (lo as i128 + offset as i128) as i64
     }
 
     /// Standard normal via Box-Muller (single value; the spare is discarded —
@@ -168,6 +180,48 @@ mod tests {
             let i = r.below(10);
             assert!(i < 10);
             seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty pool")]
+    fn below_zero_panics_in_every_profile() {
+        let mut r = Rng::seed_from_u64(1);
+        let _ = r.below(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty range")]
+    fn int_in_rejects_inverted_range() {
+        let mut r = Rng::seed_from_u64(1);
+        let _ = r.int_in(3, 2);
+    }
+
+    #[test]
+    fn int_in_bounds_and_extremes() {
+        let mut r = Rng::seed_from_u64(17);
+        for _ in 0..1000 {
+            let v = r.int_in(-3, 4);
+            assert!((-3..=4).contains(&v));
+        }
+        assert_eq!(r.int_in(7, 7), 7);
+        // the old `(hi - lo + 1) as usize` overflowed on spans like these;
+        // the full-domain call must not panic (any i64 is in range)
+        for _ in 0..100 {
+            let _ = r.int_in(i64::MIN, i64::MAX);
+            let w = r.int_in(i64::MAX - 1, i64::MAX);
+            assert!(w == i64::MAX - 1 || w == i64::MAX);
+        }
+        assert!(r.int_in(i64::MIN, i64::MIN + 2) <= i64::MIN + 2);
+    }
+
+    #[test]
+    fn int_in_covers_small_range_uniformly() {
+        let mut r = Rng::seed_from_u64(23);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            seen[(r.int_in(-3, 4) + 3) as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
     }

@@ -1,4 +1,11 @@
 //! Small statistics helpers shared by the optimizers and figure harnesses.
+//!
+//! All order-based helpers use `f64::total_cmp`, never
+//! `partial_cmp().unwrap()`: GP posteriors can emit NaN after a failed
+//! Cholesky, and a panic inside an acquisition sweep would take the whole
+//! search down. NaN inputs sort to the ends under the IEEE total order and
+//! are never selected by `argmin`/`argmax`.
+#![deny(clippy::style)]
 
 /// Arithmetic mean; 0.0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -17,13 +24,14 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// Median (copies + sorts).
+/// Median (copies + sorts). NaN-tolerant: NaNs sort to the ends under the
+/// IEEE total order instead of panicking; a majority-NaN input yields NaN.
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -32,21 +40,23 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
-/// Index of the minimum value (first on ties); None on empty.
+/// Index of the minimum value (first on ties); None on empty or all-NaN.
+/// NaN entries are skipped, never selected.
 pub fn argmin(xs: &[f64]) -> Option<usize> {
     xs.iter()
         .enumerate()
         .filter(|(_, x)| !x.is_nan())
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
 }
 
-/// Index of the maximum value (first on ties); None on empty.
+/// Index of the maximum value (first on ties); None on empty or all-NaN.
+/// NaN entries are skipped, never selected.
 pub fn argmax(xs: &[f64]) -> Option<usize> {
     xs.iter()
         .enumerate()
         .filter(|(_, x)| !x.is_nan())
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
 }
 
@@ -111,6 +121,32 @@ mod tests {
         assert_eq!(argmin(&xs), Some(1));
         assert_eq!(argmax(&xs), Some(0));
         assert_eq!(argmin(&[]), None);
+    }
+
+    #[test]
+    fn median_handles_nan_without_panic() {
+        // a failed Cholesky upstream can hand us NaNs: no panic allowed
+        let m = median(&[3.0, f64::NAN, 1.0, 2.0]);
+        assert!(m.is_finite());
+        assert!(median(&[f64::NAN]).is_nan());
+        // majority-NaN: the middle of the total order is NaN — reported, not hidden
+        assert!(median(&[f64::NAN, f64::NAN, 5.0]).is_nan());
+    }
+
+    #[test]
+    fn argminmax_never_select_nan() {
+        let xs = [f64::NAN, 2.0, f64::NAN, 1.0, 3.0];
+        assert_eq!(argmin(&xs), Some(3));
+        assert_eq!(argmax(&xs), Some(4));
+        assert_eq!(argmin(&[f64::NAN, f64::NAN]), None);
+        assert_eq!(argmax(&[f64::NAN]), None);
+    }
+
+    #[test]
+    fn argminmax_handle_infinities_and_signed_zero() {
+        let xs = [f64::INFINITY, f64::NEG_INFINITY, 0.0, -0.0];
+        assert_eq!(argmin(&xs), Some(1));
+        assert_eq!(argmax(&xs), Some(0));
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! Property tests of the persistent evaluation cache: segmented-LRU
+//! residency plus snapshot save/load must preserve every outcome
+//! bit-identically across processes (simulated here as fresh `EvalCache`
+//! instances), and a snapshot written under one evaluator fingerprint must
+//! refuse to load into an evaluator with a different cost model.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use codesign::model::arch::Resources;
+use codesign::model::batch::BatchEvaluator;
+use codesign::model::cache::{CachePolicy, EvalCache};
+use codesign::model::eval::Evaluator;
+use codesign::model::mapping::Mapping;
+use codesign::model::workload::{Dim, Layer};
+use codesign::space::sw_space::SwSpace;
+use codesign::util::prop::forall_simple;
+use codesign::util::rng::Rng;
+use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+use codesign::workloads::specs::all_models;
+
+static CASE: AtomicUsize = AtomicUsize::new(0);
+
+fn snapshot_path(tag: &str) -> std::path::PathBuf {
+    let case = CASE.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "codesign_prop_snap_{tag}_{}_{case}.snap",
+        std::process::id()
+    ))
+}
+
+/// A batch of design points on the Eyeriss-168 hardware: mostly valid
+/// mappings over random 168-PE layers, with some corrupted to exercise the
+/// `Infeasible` side of the outcome codec.
+fn random_workload(rng: &mut Rng) -> Vec<(Layer, Mapping)> {
+    let layers: Vec<Layer> = all_models()
+        .into_iter()
+        .filter(|m| m.num_pes == 168)
+        .flat_map(|m| m.layers)
+        .collect();
+    let hw = eyeriss_hw(168);
+    let n = 3 + rng.below(6);
+    (0..n)
+        .map(|i| {
+            let layer = layers[rng.below(layers.len())].clone();
+            let space = SwSpace::new(layer.clone(), hw.clone(), eyeriss_resources(168));
+            let (mut m, _) = space.sample_valid(rng, 10_000_000).expect("eyeriss mappable");
+            if i % 3 == 2 {
+                // break the factor product: a cached Err outcome
+                m.split_mut(Dim::C).dram += 1;
+            }
+            (layer, m)
+        })
+        .collect()
+}
+
+fn bits_of(o: &Option<f64>) -> Option<u64> {
+    o.map(f64::to_bits)
+}
+
+#[test]
+fn prop_slru_snapshot_roundtrip_is_bit_identical() {
+    forall_simple(
+        25,
+        0x5EA15,
+        |rng| random_workload(rng),
+        |workload| {
+            let hw = eyeriss_hw(168);
+            let eval = Evaluator::new(Resources::eyeriss_168());
+            // small segmented-LRU cache: eviction + promotion both active
+            let cache = Arc::new(EvalCache::with_policy(CachePolicy::SegmentedLru, 2, 16));
+            let cold = BatchEvaluator::with_cache(eval.clone(), cache);
+            let mut first = Vec::new();
+            for (layer, m) in workload {
+                // evaluate twice: the second pass promotes entries so the
+                // snapshot sees both segments
+                let _ = cold.edp(layer, &hw, m);
+                first.push(cold.edp(layer, &hw, m).ok());
+            }
+
+            let path = snapshot_path("roundtrip");
+            let written = cold
+                .save_snapshot(&path)
+                .map_err(|e| format!("save failed: {e:#}"))?;
+            if written != cold.cache().len() {
+                return Err(format!(
+                    "snapshot wrote {written} of {} resident entries",
+                    cold.cache().len()
+                ));
+            }
+
+            // "another process": a fresh cache warm-started from disk
+            let warm = BatchEvaluator::new(eval.clone());
+            let loaded = warm
+                .load_snapshot(&path)
+                .map_err(|e| format!("load failed: {e:#}"))?;
+            if loaded != written {
+                return Err(format!("loaded {loaded} != written {written}"));
+            }
+            for ((layer, m), before) in workload.iter().zip(&first) {
+                let after = warm.edp(layer, &hw, m).ok();
+                if bits_of(&after) != bits_of(before) {
+                    return Err(format!(
+                        "outcome changed across the snapshot: {before:?} -> {after:?}"
+                    ));
+                }
+            }
+            let stats = warm.stats();
+            // every key resident in the cold cache must hit without a miss
+            if stats.misses != 0 {
+                return Err(format!(
+                    "{} evaluations fell through to the simulator on the warm side",
+                    stats.misses
+                ));
+            }
+            if stats.snapshot_hits != stats.hits {
+                return Err("warm hits not attributed to the snapshot".into());
+            }
+
+            // a different cost model must refuse the snapshot outright
+            let mut foreign = eval.clone();
+            foreign.energy_model.mac_pj *= 1.5;
+            if BatchEvaluator::new(foreign).load_snapshot(&path).is_ok() {
+                return Err("mismatched fingerprint was not refused".into());
+            }
+            std::fs::remove_file(&path).ok();
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fifo_and_slru_serve_identical_outcomes() {
+    // Eviction policy may change *what stays resident*, never *what a hit
+    // returns*: both policies must agree with the point-wise evaluator.
+    forall_simple(
+        10,
+        0xF1F0,
+        |rng| random_workload(rng),
+        |workload| {
+            let hw = eyeriss_hw(168);
+            let eval = Evaluator::new(Resources::eyeriss_168());
+            let fifo = BatchEvaluator::with_cache(
+                eval.clone(),
+                Arc::new(EvalCache::with_policy(CachePolicy::Fifo, 1, 8)),
+            );
+            let slru = BatchEvaluator::with_cache(
+                eval.clone(),
+                Arc::new(EvalCache::with_policy(CachePolicy::SegmentedLru, 1, 8)),
+            );
+            for (layer, m) in workload {
+                let direct = eval.edp(layer, &hw, m).ok();
+                for engine in [&fifo, &slru] {
+                    for _ in 0..2 {
+                        let via = engine.edp(layer, &hw, m).ok();
+                        if bits_of(&via) != bits_of(&direct) {
+                            return Err(format!(
+                                "{:?} policy diverged: {direct:?} -> {via:?}",
+                                engine.cache().policy()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

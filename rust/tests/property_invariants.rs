@@ -233,6 +233,9 @@ fn prop_checkpoint_roundtrip_arbitrary_designs() {
                 model: "prop".into(),
                 trial: rng.below(1000),
                 best_edp: rng.f64() * 1e-6 + 1e-12,
+                cache_snapshot: rng
+                    .chance(0.5)
+                    .then(|| format!("results/cache_{}.snap", rng.below(100))),
                 hw,
                 layers: vec![(layer.name.clone(), m, rng.f64())],
             }

@@ -1,0 +1,62 @@
+//! Surrogate incremental-update benchmark: the O(n^2) rank-1
+//! `NativeGp::extend` against the O(n^3) full refit it replaces on the
+//! per-trial path. The co-design searches refit after *every* observation
+//! between scheduled hyperparameter fits, so at the paper's software budget
+//! (250 trials) this is the dominant surrogate cost. Run via
+//! `cargo bench --bench surrogate_update`; the acceptance bar is a >= 5x
+//! extend-vs-refit win at n = 256 (smoke runs only check it executes).
+
+use std::time::Duration;
+
+use codesign::runtime::gp_exec::Theta;
+use codesign::surrogate::gp_native::NativeGp;
+use codesign::util::benchkit::bench;
+use codesign::util::rng::Rng;
+
+fn data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.normal() * 0.4).collect()).collect();
+    let y: Vec<f64> = x.iter().map(|xi| xi.iter().sum::<f64>()).collect();
+    (x, y)
+}
+
+fn main() {
+    let smoke =
+        std::env::var_os("BENCH_SMOKE").is_some() || std::env::args().any(|a| a == "--smoke");
+    let budget = if smoke { Duration::from_millis(1) } else { Duration::from_millis(800) };
+    let mut rng = Rng::seed_from_u64(1);
+    let theta = Theta::hw_default();
+
+    println!("== surrogate incremental-update benchmarks ==");
+
+    for n in [64usize, 256] {
+        let (x, y) = data(&mut rng, n, 16);
+
+        // The pre-PR-3 per-trial cost: refactor the whole kernel matrix.
+        let full = bench(&format!("native_full_refit/n{n}"), budget, || {
+            NativeGp::fit(theta, &x, &y).expect("random data must fit")
+        });
+
+        // The rank-1 path: clone a factor of n-1 points (the clone is part
+        // of the measured cost — a real caller keeps the factor live and
+        // pays only the extend) and absorb the n-th observation.
+        let base = NativeGp::fit(theta, &x[..n - 1], &y[..n - 1]).expect("base fit");
+        let (x_last, y_last) = (x[n - 1].clone(), y[n - 1]);
+        let ext = bench(&format!("native_extend/n{n}"), budget, || {
+            let mut gp = base.clone();
+            assert!(gp.extend(&x_last, y_last), "extend must succeed on SPD data");
+            gp
+        });
+
+        let speedup = full.median_ns / ext.median_ns;
+        println!("surrogate_extend_speedup/n{n}: {speedup:.1}x");
+        // The acceptance bar is defined at n = 256, where the O(n) gap
+        // dominates the clone/alloc constant factors.
+        if !smoke && n == 256 {
+            assert!(
+                speedup >= 5.0,
+                "rank-1 extend must beat the full refit >=5x at n={n}, got {speedup:.1}x"
+            );
+        }
+    }
+}

@@ -158,6 +158,11 @@ impl Driver {
     /// Full nested co-design on a model.
     pub fn run(&self, model: &ModelSpec, backend: &GpBackend, seed: u64) -> CodesignOutcome {
         let metrics = Metrics::new();
+        // Surrogate counters are process-global and monotone; diff against
+        // a baseline so the report reflects this run's fits/extends.
+        // (Concurrent runs in one process would blend into each other's
+        // deltas — the driver assumes one run at a time.)
+        let gp_baseline = crate::surrogate::telemetry::snapshot();
         let space = HwSpace::new(eyeriss_resources(model.num_pes));
         let best: Mutex<Option<Checkpoint>> = Mutex::new(None);
         let mut trial = 0usize;
@@ -268,6 +273,7 @@ impl Driver {
             }
         }
         metrics.record_cache(self.cache.stats());
+        metrics.record_surrogate(crate::surrogate::telemetry::snapshot().since(&gp_baseline));
         CodesignOutcome { hw_trace, best: best.into_inner().unwrap(), metrics }
     }
 }

@@ -8,6 +8,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::model::cache::CacheStats;
+use crate::surrogate::telemetry::SurrogateStats;
 
 #[derive(Debug)]
 pub struct Metrics {
@@ -17,7 +18,16 @@ pub struct Metrics {
     pub sim_evals: AtomicU64,
     pub raw_draws: AtomicU64,
     pub feasible_evals: AtomicU64,
+    /// Surrogate-numerics snapshot (stored per run via `record_surrogate`):
+    /// full hyperparameter fits, full data-only refits, O(n^2) rank-1
+    /// extends, extends that fell back to a refit, fits that failed at max
+    /// jitter (degraded to the prior), and total jitter escalations.
     pub gp_fits: AtomicU64,
+    pub gp_data_refits: AtomicU64,
+    pub gp_extends: AtomicU64,
+    pub gp_extend_fallbacks: AtomicU64,
+    pub gp_fit_failures: AtomicU64,
+    pub gp_jitter_escalations: AtomicU64,
     /// Evaluation-cache snapshot (stored, not accumulated: the cache keeps
     /// its own monotone counters).
     pub cache_hits: AtomicU64,
@@ -43,6 +53,11 @@ impl Metrics {
             raw_draws: AtomicU64::new(0),
             feasible_evals: AtomicU64::new(0),
             gp_fits: AtomicU64::new(0),
+            gp_data_refits: AtomicU64::new(0),
+            gp_extends: AtomicU64::new(0),
+            gp_extend_fallbacks: AtomicU64::new(0),
+            gp_fit_failures: AtomicU64::new(0),
+            gp_jitter_escalations: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
@@ -69,6 +84,17 @@ impl Metrics {
         self.cache_demotions.store(stats.demotions, Ordering::Relaxed);
         self.cache_snapshot_loaded.store(stats.snapshot_loaded, Ordering::Relaxed);
         self.cache_snapshot_hits.store(stats.snapshot_hits, Ordering::Relaxed);
+    }
+
+    /// Surface a surrogate-numerics snapshot (typically the per-run delta
+    /// of the process-global counters) in the run telemetry.
+    pub fn record_surrogate(&self, stats: SurrogateStats) {
+        self.gp_fits.store(stats.fits, Ordering::Relaxed);
+        self.gp_data_refits.store(stats.data_refits, Ordering::Relaxed);
+        self.gp_extends.store(stats.extends, Ordering::Relaxed);
+        self.gp_extend_fallbacks.store(stats.extend_fallbacks, Ordering::Relaxed);
+        self.gp_fit_failures.store(stats.fit_failures, Ordering::Relaxed);
+        self.gp_jitter_escalations.store(stats.jitter_escalations, Ordering::Relaxed);
     }
 
     /// Fraction of evaluation requests served from the cache.
@@ -108,6 +134,8 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "sim_evals={} feasible={} raw_draws={} feasibility_rate={:.5} \
+             gp_fits={} gp_data_refits={} gp_extends={} gp_extend_fallbacks={} \
+             gp_fit_failures={} gp_jitter_escalations={} \
              cache_hits={} cache_misses={} cache_hit_rate={:.3} cache_evictions={} \
              cache_entries={} cache_probationary={} cache_protected={} \
              cache_promotions={} cache_demotions={} cache_snapshot_loaded={} \
@@ -116,6 +144,12 @@ impl Metrics {
             self.feasible_evals.load(Ordering::Relaxed),
             self.raw_draws.load(Ordering::Relaxed),
             self.feasibility_rate(),
+            self.gp_fits.load(Ordering::Relaxed),
+            self.gp_data_refits.load(Ordering::Relaxed),
+            self.gp_extends.load(Ordering::Relaxed),
+            self.gp_extend_fallbacks.load(Ordering::Relaxed),
+            self.gp_fit_failures.load(Ordering::Relaxed),
+            self.gp_jitter_escalations.load(Ordering::Relaxed),
             self.cache_hits.load(Ordering::Relaxed),
             self.cache_misses.load(Ordering::Relaxed),
             self.cache_hit_rate(),
@@ -185,5 +219,25 @@ mod tests {
         assert!(report.contains("cache_promotions=7"));
         assert!(report.contains("cache_snapshot_loaded=12"));
         assert!(report.contains("cache_snapshot_hits=9"));
+    }
+
+    #[test]
+    fn surrogate_snapshot_is_reported() {
+        let m = Metrics::new();
+        m.record_surrogate(SurrogateStats {
+            fits: 4,
+            data_refits: 2,
+            extends: 40,
+            extend_fallbacks: 1,
+            fit_failures: 3,
+            jitter_escalations: 7,
+        });
+        let report = m.report();
+        assert!(report.contains("gp_fits=4"));
+        assert!(report.contains("gp_data_refits=2"));
+        assert!(report.contains("gp_extends=40"));
+        assert!(report.contains("gp_extend_fallbacks=1"));
+        assert!(report.contains("gp_fit_failures=3"));
+        assert!(report.contains("gp_jitter_escalations=7"));
     }
 }

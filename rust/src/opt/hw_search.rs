@@ -15,7 +15,7 @@ use crate::surrogate::acquisition::feasibility_probability;
 use crate::surrogate::gp::{GpBackend, GpSurrogate, KernelFamily};
 use crate::surrogate::rf::{RandomForest, RfConfig};
 use crate::util::rng::Rng;
-use crate::util::stats::argmax;
+use crate::util::stats::{argmax, min_ignoring_nan};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum HwMethod {
@@ -186,6 +186,11 @@ pub fn search(
     con_gp.standardize_y = false;
 
     let mut obs = Obs::empty();
+    // Scheduled hyperparameter refits vs cheap per-trial rank-1 extends:
+    // the objective and constraint GPs each track when they last paid the
+    // O(n^3) marginal-likelihood search.
+    let mut obj_fit_at = 0usize;
+    let mut con_fit_at = 0usize;
 
     // The random baseline has no feedback loop, and BO's warmup trials are
     // likewise independent of any observation — both run as chunked batches
@@ -212,7 +217,7 @@ pub fn search(
                 (0..cfg.pool).map(|_| space.sample_valid(rng).0).collect();
             let feats: Vec<Vec<f64>> =
                 pool.iter().map(|h| hw_features(h, &space.resources).to_vec()).collect();
-            let best = obs.ys.iter().cloned().fold(f64::INFINITY, f64::min);
+            let best = min_ignoring_nan(&obs.ys).unwrap_or(f64::INFINITY);
 
             let obj_post = match method {
                 HwMethod::BoRf => {
@@ -220,12 +225,12 @@ pub fn search(
                     Some(rf.predict(&feats))
                 }
                 _ => {
-                    let _ = obj_gp.fit(&obs.xs, &obs.ys, rng);
+                    obj_gp.fit_or_sync(&obs.xs, &obs.ys, rng, cfg.refit_every, &mut obj_fit_at);
                     obj_gp.predict(&feats).ok()
                 }
             };
             let con_post = if obs.cy.iter().any(|&v| v < 0.0) {
-                let _ = con_gp.fit(&obs.cx, &obs.cy, rng);
+                con_gp.fit_or_sync(&obs.cx, &obs.cy, rng, cfg.refit_every, &mut con_fit_at);
                 con_gp.predict(&feats).ok()
             } else {
                 None // nothing infeasible seen yet: P(C) = 1 everywhere

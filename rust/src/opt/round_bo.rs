@@ -139,7 +139,9 @@ pub fn decode(problem: &SwProblem, point: &[f64]) -> Mapping {
     }
     let order_from = |keys: &[f64]| -> [Dim; 6] {
         let mut idx: Vec<usize> = (0..6).collect();
-        idx.sort_by(|&a, &b| keys[a].partial_cmp(&keys[b]).unwrap());
+        // total_cmp: a NaN sort key (degraded surrogate upstream) must
+        // yield an arbitrary order, not a panic
+        idx.sort_by(|&a, &b| keys[a].total_cmp(&keys[b]));
         let mut out = DIMS;
         for (slot, &i) in idx.iter().enumerate() {
             out[slot] = DIMS[i];
@@ -171,9 +173,7 @@ fn allocate_factors(n: u64, shares: &[f64]) -> Vec<u64> {
             .collect();
         let mut given: Vec<u32> = fracs.iter().map(|(f, _)| f.floor() as u32).collect();
         let mut remaining = e - given.iter().sum::<u32>();
-        fracs.sort_by(|a, b| {
-            (b.0 - b.0.floor()).partial_cmp(&(a.0 - a.0.floor())).unwrap()
-        });
+        fracs.sort_by(|a, b| (b.0 - b.0.floor()).total_cmp(&(a.0 - a.0.floor())));
         let mut at = 0;
         while remaining > 0 {
             given[fracs[at % k].1] += 1;
@@ -227,15 +227,12 @@ pub fn search(
                 cands.into_iter().next().unwrap()
             } else {
                 // marginal-likelihood refit on the same schedule as the main
-                // BO; data-only updates in between (§Perf, EXPERIMENTS.md)
-                if obs.len() - last_fit_at >= cfg.refit_every || last_fit_at == 0 {
-                    if gp.fit(obs.xs(), obs.ys(), rng).is_ok() {
-                        last_fit_at = obs.len();
-                    }
-                } else {
-                    let _ = gp.fit_data_only(obs.xs(), obs.ys());
-                }
-                let best = obs.ys().iter().cloned().fold(f64::INFINITY, f64::min);
+                // BO; in between, the append-only observation log is
+                // absorbed by O(n^2) rank-1 extends instead of O(n^3)
+                // refactorizations (§Perf, EXPERIMENTS.md)
+                gp.fit_or_sync(obs.xs(), obs.ys(), rng, cfg.refit_every, &mut last_fit_at);
+                // NaN-safe incumbent: the GP has consumed the whole log here
+                let best = gp.best_observed().unwrap_or(f64::INFINITY);
                 match gp.predict(&cands) {
                     Ok(post) => {
                         let u: Vec<f64> = post

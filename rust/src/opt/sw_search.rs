@@ -24,7 +24,7 @@ use crate::space::sw_space::SwSpace;
 use crate::surrogate::gp::{GpBackend, GpSurrogate, KernelFamily};
 use crate::surrogate::rf::{RandomForest, RfConfig};
 use crate::util::rng::Rng;
-use crate::util::stats::argmax;
+use crate::util::stats::{argmax, min_ignoring_nan};
 
 /// Surrogate choice for the BO method (Fig. 5b / Fig. 17 ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -278,18 +278,13 @@ pub fn bo_search(
                 None
             } else {
                 let feats: Vec<Vec<f64>> = pool.iter().map(|m| problem.features(m)).collect();
-                let best = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+                let best = min_ignoring_nan(&ys).unwrap_or(f64::INFINITY);
                 let utilities: Vec<f64> = match surrogate {
                     SurrogateKind::Gp => {
-                        // Refit hyperparameters on schedule; data refresh is
-                        // implicit in predict (full posterior recompute).
-                        if xs.len() - last_fit_at >= cfg.refit_every || last_fit_at == 0 {
-                            if gp.fit(&xs, &ys, rng).is_ok() {
-                                last_fit_at = xs.len();
-                            }
-                        } else {
-                            let _ = gp.fit_data_only(&xs, &ys);
-                        }
+                        // Refit hyperparameters on schedule; between refits
+                        // the append-only (xs, ys) log is absorbed through
+                        // O(n^2) rank-1 extends rather than O(n^3) refits.
+                        gp.fit_or_sync(&xs, &ys, rng, cfg.refit_every, &mut last_fit_at);
                         match gp.predict(&feats) {
                             Ok(post) => post
                                 .mean

@@ -16,7 +16,7 @@ use crate::space::hw_space::HwSpace;
 use crate::surrogate::acquisition::feasibility_probability;
 use crate::surrogate::gp::{GpBackend, GpSurrogate, KernelFamily};
 use crate::util::rng::Rng;
-use crate::util::stats::argmax;
+use crate::util::stats::{argmax, min_ignoring_nan};
 
 /// Prior observations carried over from a source model's hardware search.
 #[derive(Clone, Debug, Default)]
@@ -82,6 +82,11 @@ pub fn search_with_prior(
     let mut obj_gp = GpSurrogate::new(backend.clone(), KernelFamily::Linear { noise: true });
     let mut con_gp = GpSurrogate::new(backend.clone(), KernelFamily::SquaredExp);
     con_gp.standardize_y = false;
+    // Same refit-vs-extend scheduling as the plain hardware search: pay the
+    // O(n^3) hyperparameter search every `refit_every` observations, absorb
+    // the trials in between with O(n^2) rank-1 extends.
+    let mut obj_fit_at = 0usize;
+    let mut con_fit_at = 0usize;
 
     // With a non-empty prior, skip the random warmup entirely — that is the
     // design-time saving the paper's §7 anticipates.
@@ -102,11 +107,11 @@ pub fn search_with_prior(
         } else {
             let pool: Vec<HwConfig> = (0..cfg.pool).map(|_| space.sample_valid(rng).0).collect();
             let feats: Vec<Vec<f64>> = pool.iter().map(|h| feat(h)).collect();
-            let best = obs.ys.iter().cloned().fold(f64::INFINITY, f64::min);
-            let _ = obj_gp.fit(&obs.xs, &obs.ys, rng);
+            let best = min_ignoring_nan(&obs.ys).unwrap_or(f64::INFINITY);
+            obj_gp.fit_or_sync(&obs.xs, &obs.ys, rng, cfg.refit_every, &mut obj_fit_at);
             let obj = obj_gp.predict(&feats).ok();
             let con = if obs.cy.iter().any(|&v| v < 0.0) {
-                let _ = con_gp.fit(&obs.cx, &obs.cy, rng);
+                con_gp.fit_or_sync(&obs.cx, &obs.cy, rng, cfg.refit_every, &mut con_fit_at);
                 con_gp.predict(&feats).ok()
             } else {
                 None

@@ -82,10 +82,14 @@ pub fn search(
             }
             proposals.push((cur_score, cur));
         }
+        // A cost model emitting NaN scores must neither panic the sort nor
+        // steal a measured-batch slot (a sign-negative NaN orders *first*
+        // under the IEEE total order): drop poisoned proposals outright.
+        proposals.retain(|(s, _)| !s.is_nan());
         if proposals.is_empty() {
             break;
         }
-        proposals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        proposals.sort_by(|a, b| a.0.total_cmp(&b.0));
         proposals.dedup_by(|a, b| a.1 == b.1);
 
         // --- measure the best-predicted proposals as one batch ---

@@ -8,12 +8,41 @@
 //! the Fig. 13 features with no noise term (§4.3), the hardware GP adds a
 //! noise kernel (§4.2), and the constraint classifier uses a squared
 //! exponential. The constant mean is handled by standardizing y.
+//!
+//! # No-panic contract and degradation
+//!
+//! `fit`, `fit_data_only`, `extend`, `sync_data` and `predict` never panic
+//! on degenerate or NaN-bearing data. Non-finite (and, on the extend path,
+//! dimension-mismatched) observations are rejected at *ingestion*: they are
+//! consumed from the caller's log but never enter the model, so one
+//! poisoned trial cannot disable the surrogate for the rest of a run. A
+//! factorization that still fails at the maximum adaptive jitter leaves the
+//! surrogate in the [`FitStatus::Degraded`] state, where `predict` answers
+//! from the *prior* posterior (mean = observed mean, variance from the
+//! kernel prior) instead of killing the search; callers can inspect
+//! [`GpSurrogate::fit_status`].
+//!
+//! # Refit vs extend scheduling
+//!
+//! Callers keep two distinct code paths, both measured in
+//! [`crate::surrogate::telemetry`]:
+//! * scheduled **full refits** (`fit`, every `BoConfig::refit_every`
+//!   observations) re-search hyperparameters and refactor in O(n^3);
+//! * per-trial **extends** (`extend` / `sync_data`) absorb new observations
+//!   with an O(n^2) rank-1 Cholesky update, falling back to a full data
+//!   refit only if positive definiteness is lost.
+//!
+//! The BO loops drive both through [`GpSurrogate::fit_or_sync`], which owns
+//! the schedule and only counts a refit as done when it actually produced a
+//! factor.
+#![deny(clippy::style)]
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::runtime::gp_exec::{Posterior, Theta};
 use crate::runtime::server::GpHandle;
 use crate::surrogate::gp_native::NativeGp;
+use crate::surrogate::telemetry;
 use crate::util::rng::Rng;
 use crate::util::stats::standardize;
 
@@ -45,6 +74,38 @@ impl std::fmt::Debug for GpBackend {
     }
 }
 
+/// Outcome of the most recent fit/update, visible to callers so a degraded
+/// surrogate is observable instead of a silent panic-in-waiting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FitStatus {
+    /// Fewer than 2 observations: predictions come from the prior.
+    Insufficient,
+    /// Full factorization succeeded; reports the diagonal jitter actually
+    /// used and how many adaptive escalations it took.
+    Fitted { jitter: f64, escalations: u32 },
+    /// The newest observation(s) were absorbed by O(n^2) rank-1 extension.
+    Extended,
+    /// Factorization failed even at maximum jitter: `predict` degrades to
+    /// the prior posterior until the next successful fit.
+    Degraded,
+}
+
+/// Which kind of full refit to record in telemetry.
+#[derive(Clone, Copy)]
+enum RefitKind {
+    /// `fit`: hyperparameter search + factorization.
+    Hyper,
+    /// `fit_data_only` / extend fallback: factorization only.
+    Data,
+}
+
+fn record_refit(kind: RefitKind, escalations: u32) {
+    match kind {
+        RefitKind::Hyper => telemetry::record_fit(escalations),
+        RefitKind::Data => telemetry::record_data_refit(escalations),
+    }
+}
+
 /// A (re)fittable GP surrogate.
 pub struct GpSurrogate {
     pub backend: GpBackend,
@@ -53,10 +114,16 @@ pub struct GpSurrogate {
     pub standardize_y: bool,
     theta: Theta,
     x: Vec<Vec<f64>>,
+    y_raw: Vec<f64>,
     y_std_vec: Vec<f64>,
     y_mean: f64,
     y_scale: f64,
     native: Option<NativeGp>,
+    status: FitStatus,
+    /// How many entries of the caller's append-only observation log have
+    /// been consumed (including rejected ones, which never enter `x`) —
+    /// the `sync_data` high-water mark.
+    synced: usize,
 }
 
 impl GpSurrogate {
@@ -72,10 +139,13 @@ impl GpSurrogate {
             standardize_y: true,
             theta,
             x: Vec::new(),
+            y_raw: Vec::new(),
             y_std_vec: Vec::new(),
             y_mean: 0.0,
             y_scale: 1.0,
             native: None,
+            status: FitStatus::Insufficient,
+            synced: 0,
         }
     }
 
@@ -85,6 +155,11 @@ impl GpSurrogate {
 
     pub fn theta(&self) -> Theta {
         self.theta
+    }
+
+    /// Outcome of the most recent fit/update.
+    pub fn fit_status(&self) -> FitStatus {
+        self.status
     }
 
     /// Candidate hyperparameter settings for the family (the marginal-
@@ -123,23 +198,85 @@ impl GpSurrogate {
         self.y_std_vec.iter().map(|&v| v as f32).collect()
     }
 
-    /// Fit on the dataset: standardize targets, then pick the theta with the
-    /// best marginal likelihood among `n_theta` candidates.
-    pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64], rng: &mut Rng) -> Result<()> {
-        assert_eq!(x.len(), y.len());
-        self.x = x.to_vec();
-        if self.standardize_y {
-            let (ys, m, s) = standardize(y);
-            self.y_std_vec = ys;
-            self.y_mean = m;
-            self.y_scale = s;
-        } else {
-            self.y_std_vec = y.to_vec();
-            self.y_mean = 0.0;
-            self.y_scale = 1.0;
+    /// Replace the training set with the finite pairs of (x, y): non-finite
+    /// observations never enter the model — they would poison the
+    /// standardization moments and the Gram matrix. The caller's full log
+    /// length is tracked separately in `synced`, so append-only syncing
+    /// stays aligned even when entries were rejected.
+    fn ingest_filtered(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        self.x = Vec::with_capacity(x.len());
+        self.y_raw = Vec::with_capacity(y.len());
+        for (xi, yi) in x.iter().zip(y.iter()) {
+            // the first accepted row fixes the feature width: a mismatched
+            // row would silently truncate kernel dot products (kernel()
+            // zips feature vectors), so it is rejected like the extend path
+            let width_ok = self.x.is_empty() || self.x[0].len() == xi.len();
+            if yi.is_finite() && width_ok && xi.iter().all(|v| v.is_finite()) {
+                self.x.push(xi.clone());
+                self.y_raw.push(*yi);
+            }
         }
+        self.restandardize();
+    }
+
+    /// Recompute the standardized targets from `y_raw`. The ingestion
+    /// filter keeps `y_raw` finite, so the fallback branch (raw targets,
+    /// identity scaling) is defense in depth for the classifier mode and
+    /// any future ingestion path.
+    fn restandardize(&mut self) {
+        if self.standardize_y {
+            let (ys, m, s) = standardize(&self.y_raw);
+            if m.is_finite() && s.is_finite() {
+                self.y_std_vec = ys;
+                self.y_mean = m;
+                self.y_scale = s;
+                return;
+            }
+        }
+        self.y_std_vec = self.y_raw.clone();
+        self.y_mean = 0.0;
+        self.y_scale = 1.0;
+    }
+
+    /// Refactor the backend model from the current (x, y_std) dataset and
+    /// update status + telemetry.
+    fn refit_backend(&mut self, kind: RefitKind) {
+        match &self.backend {
+            GpBackend::Aot(_) => {
+                // The AOT path recomputes its posterior from (x, y) on every
+                // predict call; there is no factor to cache host-side.
+                self.native = None;
+                record_refit(kind, 0);
+                self.status = FitStatus::Fitted { jitter: self.theta.jitter, escalations: 0 };
+            }
+            GpBackend::Native => match NativeGp::fit(self.theta, &self.x, &self.y_std_vec) {
+                Some(gp) => {
+                    let (jitter, escalations) = (gp.jitter(), gp.jitter_escalations());
+                    self.native = Some(gp);
+                    record_refit(kind, escalations);
+                    self.status = FitStatus::Fitted { jitter, escalations };
+                }
+                None => {
+                    self.native = None;
+                    telemetry::record_fit_failure();
+                    self.status = FitStatus::Degraded;
+                }
+            },
+        }
+    }
+
+    /// Fit on the dataset: standardize targets, then pick the theta with the
+    /// best marginal likelihood among `n_theta` candidates. The scheduled
+    /// O(n^3) path; between schedules use `extend`/`sync_data`.
+    pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64], rng: &mut Rng) -> Result<()> {
+        if x.len() != y.len() {
+            bail!("GpSurrogate::fit: {} inputs vs {} targets", x.len(), y.len());
+        }
+        self.synced = x.len();
+        self.ingest_filtered(x, y);
         if self.x.len() < 2 {
             self.native = None;
+            self.status = FitStatus::Insufficient;
             return Ok(());
         }
 
@@ -158,54 +295,158 @@ impl GpSurrogate {
                 })
                 .collect(),
         };
+        // cands[0] is the incumbent theta, and argmin returns the first
+        // index on ties: a fully-degenerate grid (all-INF NLLs) therefore
+        // keeps the previous hyperparameters instead of picking a random
+        // candidate.
         let best = crate::util::stats::argmin(&nlls).unwrap_or(0);
         self.theta = cands[best];
 
-        // Keep a native fit around for the Native backend's predictions.
-        self.native = match self.backend {
-            GpBackend::Native => NativeGp::fit(self.theta, &self.x, &self.y_std_vec),
-            GpBackend::Aot(_) => None,
-        };
+        self.refit_backend(RefitKind::Hyper);
         Ok(())
     }
 
     /// Refresh the training data (and target standardization) without
-    /// re-searching hyperparameters — the cheap per-trial update between
-    /// scheduled marginal-likelihood refits.
+    /// re-searching hyperparameters — a full O(n^3) refactorization. Prefer
+    /// `sync_data`/`extend` when the dataset only grew by appending.
     pub fn fit_data_only(&mut self, x: &[Vec<f64>], y: &[f64]) -> Result<()> {
-        assert_eq!(x.len(), y.len());
-        self.x = x.to_vec();
-        if self.standardize_y {
-            let (ys, m, s) = standardize(y);
-            self.y_std_vec = ys;
-            self.y_mean = m;
-            self.y_scale = s;
-        } else {
-            self.y_std_vec = y.to_vec();
+        if x.len() != y.len() {
+            bail!("GpSurrogate::fit_data_only: {} inputs vs {} targets", x.len(), y.len());
         }
-        self.native = match self.backend {
-            GpBackend::Native if self.x.len() >= 2 => {
-                NativeGp::fit(self.theta, &self.x, &self.y_std_vec)
-            }
-            _ => None,
-        };
+        self.synced = x.len();
+        self.ingest_filtered(x, y);
+        if self.x.len() < 2 {
+            self.native = None;
+            self.status = FitStatus::Insufficient;
+            return Ok(());
+        }
+        self.refit_backend(RefitKind::Data);
         Ok(())
     }
 
-    /// Posterior over candidates, in the *original* y units.
+    /// Absorb one new observation. On the native backend this extends the
+    /// Cholesky factor in O(n^2) (re-solving the weights against the fresh
+    /// standardization), falling back to a full data refit only if the
+    /// rank-1 update loses positive definiteness or there is no live factor
+    /// to extend. Never panics: a non-finite or dimension-mismatched
+    /// observation is consumed from the log but never enters the model.
+    pub fn extend(&mut self, x_new: &[f64], y_new: f64) -> Result<()> {
+        self.synced += 1;
+        let clean = y_new.is_finite()
+            && x_new.iter().all(|v| v.is_finite())
+            && (self.x.is_empty() || self.x[0].len() == x_new.len());
+        if !clean {
+            // Ingesting it anyway would poison the standardization moments
+            // or silently truncate kernel dot products (kernel() zips
+            // feature vectors) in the full-refit fallback.
+            return Ok(());
+        }
+        self.x.push(x_new.to_vec());
+        self.y_raw.push(y_new);
+        self.restandardize();
+        if self.x.len() < 2 {
+            self.native = None;
+            self.status = FitStatus::Insufficient;
+            return Ok(());
+        }
+        if matches!(self.backend, GpBackend::Aot(_)) {
+            // Data-only state: the AOT posterior is recomputed from (x, y)
+            // on device at the next predict.
+            telemetry::record_extend();
+            self.status = FitStatus::Extended;
+            return Ok(());
+        }
+        let n_new = self.x.len();
+        let y_std = self.y_std_vec.as_slice();
+        // One fused O(n^2) step: the factor grows by the new point and the
+        // weights are re-solved against the *whole* freshly-standardized
+        // target vector (adding an observation shifts the standardization
+        // of every existing target).
+        let (attempted, extended) = match self.native.as_mut() {
+            Some(gp) if gp.n_train() + 1 == n_new => (true, gp.extend_with_targets(x_new, y_std)),
+            _ => (false, false),
+        };
+        if extended {
+            telemetry::record_extend();
+            self.status = FitStatus::Extended;
+        } else {
+            // Only an *attempted* rank-1 update that failed counts as a
+            // fallback in telemetry; having no live factor yet (first
+            // points, or after a degraded fit) is an ordinary data refit.
+            if attempted {
+                telemetry::record_extend_fallback();
+            }
+            self.refit_backend(RefitKind::Data);
+        }
+        Ok(())
+    }
+
+    /// Bring the surrogate up to date with an *append-only* observation log
+    /// (`xs`/`ys` must extend the log this surrogate last consumed): each
+    /// new point is absorbed with an O(n^2) `extend`. A log that shrank
+    /// instead falls back to a full data refit. This is the cheap per-trial
+    /// path the BO loops call between scheduled `fit`s.
+    pub fn sync_data(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> Result<()> {
+        if xs.len() != ys.len() {
+            bail!("GpSurrogate::sync_data: {} inputs vs {} targets", xs.len(), ys.len());
+        }
+        if xs.len() < self.synced {
+            return self.fit_data_only(xs, ys);
+        }
+        for i in self.synced..xs.len() {
+            self.extend(&xs[i], ys[i])?;
+        }
+        Ok(())
+    }
+
+    /// The scheduling policy the BO loops share: pay the full O(n^3)
+    /// hyperparameter refit (`fit`) once every `refit_every` observations,
+    /// and absorb the observations in between with O(n^2) `sync_data`
+    /// extends. The caller-owned `last_fit_at` marker only advances when
+    /// the scheduled fit actually produced a factor
+    /// ([`FitStatus::Fitted`]), so an insufficient or degraded fit is
+    /// retried on the next trial instead of silently deferring the
+    /// hyperparameter search for a whole schedule window.
+    pub fn fit_or_sync(
+        &mut self,
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        rng: &mut Rng,
+        refit_every: usize,
+        last_fit_at: &mut usize,
+    ) {
+        if xs.len().saturating_sub(*last_fit_at) >= refit_every || *last_fit_at == 0 {
+            let fitted = self.fit(xs, ys, rng).is_ok()
+                && matches!(self.status, FitStatus::Fitted { .. });
+            if fitted {
+                *last_fit_at = xs.len();
+            }
+        } else {
+            let _ = self.sync_data(xs, ys);
+        }
+    }
+
+    /// The prior posterior in original y units: mean at the observed mean,
+    /// variance from the kernel prior. Used before any data arrives and as
+    /// the graceful-degradation answer after a failed fit.
+    fn prior_posterior(&self, cand: &[Vec<f64>]) -> Posterior {
+        let mean = vec![self.y_mean; cand.len()];
+        let var = cand
+            .iter()
+            .map(|c| {
+                let prior = self.theta.w_lin * c.iter().map(|v| v * v).sum::<f64>()
+                    + self.theta.w_se;
+                prior.max(1e-6) * self.y_scale * self.y_scale
+            })
+            .collect();
+        Posterior { mean, var }
+    }
+
+    /// Posterior over candidates, in the *original* y units. Never panics:
+    /// a surrogate whose last fit degraded answers from the prior.
     pub fn predict(&self, cand: &[Vec<f64>]) -> Result<Posterior> {
         if self.x.len() < 2 {
-            // Prior: standardized mean 0, prior variance from the kernel.
-            let mean = vec![self.y_mean; cand.len()];
-            let var = cand
-                .iter()
-                .map(|c| {
-                    let prior = self.theta.w_lin * c.iter().map(|v| v * v).sum::<f64>()
-                        + self.theta.w_se;
-                    prior.max(1e-6) * self.y_scale * self.y_scale
-                })
-                .collect();
-            return Ok(Posterior { mean, var });
+            return Ok(self.prior_posterior(cand));
         }
         let post = match &self.backend {
             GpBackend::Aot(handle) => {
@@ -213,13 +454,12 @@ impl GpSurrogate {
                     cand.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect();
                 handle.posterior(self.x_f32(), self.y_f32(), self.theta, cflat)?
             }
-            GpBackend::Native => {
-                let gp = self
-                    .native
-                    .as_ref()
-                    .expect("fit() stores a native model for the Native backend");
-                gp.posterior(cand)
-            }
+            GpBackend::Native => match &self.native {
+                Some(gp) => gp.posterior(cand),
+                // The seed panicked here (`expect`) when a fit had failed;
+                // degrade to the prior instead — the search keeps moving.
+                None => return Ok(self.prior_posterior(cand)),
+            },
         };
         Ok(Posterior {
             mean: post.mean.iter().map(|m| m * self.y_scale + self.y_mean).collect(),
@@ -228,12 +468,11 @@ impl GpSurrogate {
     }
 
     /// Best (lowest, in original units) observed target so far — the
-    /// incumbent for EI.
-    pub fn best_observed(&self) -> f64 {
-        self.y_std_vec
-            .iter()
-            .map(|v| v * self.y_scale + self.y_mean)
-            .fold(f64::INFINITY, f64::min)
+    /// incumbent for EI. `None` when nothing has been observed (the seed
+    /// folded to +INFINITY, which poisons EI incumbents); NaN targets are
+    /// never selected.
+    pub fn best_observed(&self) -> Option<f64> {
+        crate::util::stats::min_ignoring_nan(&self.y_raw)
     }
 }
 
@@ -258,6 +497,7 @@ mod tests {
         let (x, y) = linear_data(&mut rng, 40, 8);
         let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: false });
         gp.fit(&x, &y, &mut rng).unwrap();
+        assert!(matches!(gp.fit_status(), FitStatus::Fitted { .. }));
         let post = gp.predict(&x).unwrap();
         // A linear kernel has no bias feature, so a small constant offset
         // (the gap between mean(y) and the true intercept) survives; demand
@@ -267,7 +507,8 @@ mod tests {
             assert!((m - yi).abs() < 0.5 * spread, "{m} vs {yi} (spread {spread})");
         }
         let y_min = y.iter().cloned().fold(f64::INFINITY, f64::min);
-        assert!((gp.best_observed() - y_min).abs() < 1e-9);
+        let best = gp.best_observed().expect("non-empty observations");
+        assert!((best - y_min).abs() < 1e-9);
     }
 
     #[test]
@@ -276,6 +517,8 @@ mod tests {
         let post = gp.predict(&[vec![0.5; 8]]).unwrap();
         assert_eq!(post.mean.len(), 1);
         assert!(post.var[0] > 0.0);
+        assert_eq!(gp.fit_status(), FitStatus::Insufficient);
+        assert_eq!(gp.best_observed(), None);
     }
 
     #[test]
@@ -320,5 +563,156 @@ mod tests {
         let post = gp.predict(&[vec![0.1], vec![2.8]]).unwrap();
         assert!(post.mean[0] > 0.3, "feasible side: {}", post.mean[0]);
         assert!(post.mean[1] < -0.3, "infeasible side: {}", post.mean[1]);
+    }
+
+    #[test]
+    fn duplicate_observations_fit_and_predict_without_panic() {
+        // The relax-and-round collapse: distinct box points, identical
+        // features, noiseless linear kernel, n > d. The seed panicked in
+        // predict after the silent fit failure; now the adaptive jitter
+        // rescues the factorization (or degrades to the prior) and predict
+        // stays alive either way.
+        let mut rng = Rng::seed_from_u64(5);
+        let base = vec![vec![1.0, 2.0, 3.0], vec![0.5, -1.0, 0.25]];
+        let x: Vec<Vec<f64>> = (0..20).map(|i| base[i % 2].clone()).collect();
+        let y: Vec<f64> = (0..20).map(|i| (i % 2) as f64 * 10.0 + 3.0).collect();
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: false });
+        gp.fit(&x, &y, &mut rng).unwrap();
+        let post = gp.predict(&x).unwrap();
+        assert!(post.mean.iter().all(|m| m.is_finite()));
+        assert!(post.var.iter().all(|v| v.is_finite() && *v > 0.0));
+    }
+
+    #[test]
+    fn nan_targets_are_excluded_not_fatal() {
+        let mut rng = Rng::seed_from_u64(6);
+        let (x, mut y) = linear_data(&mut rng, 20, 4);
+        y[7] = f64::NAN;
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: false });
+        gp.fit(&x, &y, &mut rng).unwrap();
+        // one poisoned pair must not disable the surrogate: it is dropped
+        // at ingestion and the remaining 19 observations fit normally
+        assert!(matches!(gp.fit_status(), FitStatus::Fitted { .. }));
+        assert_eq!(gp.n_train(), 19);
+        let post = gp.predict(&x).unwrap();
+        assert!(post.mean.iter().all(|m| m.is_finite()));
+        assert!(post.var.iter().all(|v| v.is_finite() && *v > 0.0));
+        // the NaN target is never the incumbent
+        assert!(gp.best_observed().unwrap().is_finite());
+    }
+
+    #[test]
+    fn all_nan_targets_fall_back_to_the_prior() {
+        let mut rng = Rng::seed_from_u64(12);
+        let (x, _) = linear_data(&mut rng, 8, 3);
+        let y = vec![f64::NAN; 8];
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: false });
+        gp.fit(&x, &y, &mut rng).unwrap();
+        assert_eq!(gp.fit_status(), FitStatus::Insufficient);
+        assert_eq!(gp.best_observed(), None);
+        let post = gp.predict(&x).unwrap();
+        assert!(post.mean.iter().all(|m| m.is_finite()), "prior mean must stay finite");
+        assert!(post.var.iter().all(|v| v.is_finite() && *v > 0.0));
+    }
+
+    #[test]
+    fn mismatched_dimension_extension_is_rejected_at_ingestion() {
+        let mut rng = Rng::seed_from_u64(11);
+        let (x, y) = linear_data(&mut rng, 10, 4);
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: true });
+        gp.fit_data_only(&x, &y).unwrap();
+        gp.extend(&[1.0, 2.0], 3.0).unwrap();
+        // a 2-feature point would silently truncate kernel dot products in
+        // the full-refit fallback; it must never reach the training set
+        assert_eq!(gp.n_train(), 10);
+        assert!(matches!(gp.fit_status(), FitStatus::Fitted { .. }));
+        let post = gp.predict(&x).unwrap();
+        assert!(post.mean.iter().all(|m| m.is_finite()));
+    }
+
+    #[test]
+    fn extend_matches_fit_data_only() {
+        let mut rng = Rng::seed_from_u64(7);
+        let (x, y) = linear_data(&mut rng, 30, 6);
+        let mut full = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: true });
+        full.fit_data_only(&x, &y).unwrap();
+        let mut inc = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: true });
+        inc.fit_data_only(&x[..20], &y[..20]).unwrap();
+        inc.sync_data(&x, &y).unwrap();
+        assert_eq!(inc.fit_status(), FitStatus::Extended);
+        assert_eq!(inc.n_train(), 30);
+        let (cand, _) = linear_data(&mut rng, 12, 6);
+        let pf = full.predict(&cand).unwrap();
+        let pi = inc.predict(&cand).unwrap();
+        for (a, b) in pf.mean.iter().zip(pi.mean.iter()) {
+            assert!((a - b).abs() < 1e-9, "mean {a} vs {b}");
+        }
+        for (a, b) in pf.var.iter().zip(pi.var.iter()) {
+            assert!((a - b).abs() < 1e-9, "var {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn extend_from_empty_reaches_fitted_state() {
+        let mut rng = Rng::seed_from_u64(8);
+        let (x, y) = linear_data(&mut rng, 6, 3);
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: true });
+        gp.extend(&x[0], y[0]).unwrap();
+        assert_eq!(gp.fit_status(), FitStatus::Insufficient);
+        // second point: no factor exists yet, so the extend falls back to a
+        // full fit; later points ride the rank-1 path
+        for i in 1..6 {
+            gp.extend(&x[i], y[i]).unwrap();
+        }
+        assert_eq!(gp.fit_status(), FitStatus::Extended);
+        let post = gp.predict(&x).unwrap();
+        assert!(post.mean.iter().all(|m| m.is_finite()));
+    }
+
+    #[test]
+    fn fit_or_sync_only_advances_schedule_on_successful_fit() {
+        let mut rng = Rng::seed_from_u64(10);
+        let (x, y) = linear_data(&mut rng, 12, 4);
+        // a log whose usable portion is too small to factor (all targets
+        // but one poisoned) must not advance the schedule marker
+        let mut bad_y = y.clone();
+        for v in bad_y.iter_mut().skip(1) {
+            *v = f64::NAN;
+        }
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: true });
+        let mut fit_at = 0usize;
+        gp.fit_or_sync(&x, &bad_y, &mut rng, 25, &mut fit_at);
+        assert_eq!(fit_at, 0, "unusable fit must not advance the refit schedule");
+        assert_eq!(gp.fit_status(), FitStatus::Insufficient);
+        // retried (and recovered) on the next trial with clean data
+        gp.fit_or_sync(&x, &y, &mut rng, 25, &mut fit_at);
+        assert_eq!(fit_at, 12);
+        assert!(matches!(gp.fit_status(), FitStatus::Fitted { .. }));
+        // inside the schedule window: rank-1 extends, no refit
+        let mut x2 = x.clone();
+        x2.push(vec![9.0; 4]);
+        let mut y2 = y.clone();
+        y2.push(123.0);
+        gp.fit_or_sync(&x2, &y2, &mut rng, 25, &mut fit_at);
+        assert_eq!(fit_at, 12);
+        assert_eq!(gp.fit_status(), FitStatus::Extended);
+    }
+
+    #[test]
+    fn nan_extension_keeps_surrogate_alive() {
+        let mut rng = Rng::seed_from_u64(9);
+        let (x, y) = linear_data(&mut rng, 12, 4);
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: true });
+        gp.fit_data_only(&x, &y).unwrap();
+        gp.extend(&[f64::NAN, 0.0, 0.0, 0.0], 1.0).unwrap();
+        // the poisoned point is consumed from the log but never enters the
+        // model: the existing fit stays live
+        assert_eq!(gp.n_train(), 12);
+        let post = gp.predict(&x).unwrap();
+        assert_eq!(post.mean.len(), 12);
+        assert!(post.mean.iter().all(|m| m.is_finite()));
+        // and a later full fit on clean data is unaffected
+        gp.fit_data_only(&x, &y).unwrap();
+        assert!(matches!(gp.fit_status(), FitStatus::Fitted { .. }));
     }
 }

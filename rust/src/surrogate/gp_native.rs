@@ -3,9 +3,20 @@
 //! Roles: (1) cross-check oracle for the PJRT artifacts (integration tests
 //! assert the two agree), (2) fallback surrogate when artifacts are absent,
 //! so unit tests and quick experiments run without `make artifacts`.
+//!
+//! No-panic contract: `fit` returns `None` (and `extend`/`set_targets`
+//! return `false`, leaving the model unchanged) on degenerate or NaN-bearing
+//! inputs; nothing in this module panics on data. Factorization uses
+//! adaptive diagonal jitter (see [`crate::surrogate::linalg`]), escalating
+//! from `theta.jitter` until the kernel matrix factors, and the jitter that
+//! succeeded is reported for telemetry and reused by `extend` so the rank-1
+//! path stays consistent with the full fit.
+#![deny(clippy::style)]
 
 use crate::runtime::gp_exec::{Posterior, Theta};
-use crate::surrogate::linalg::{cholesky, logdet_from_chol, solve_lower, solve_lower_t};
+use crate::surrogate::linalg::{
+    chol_extend, cholesky_adaptive, logdet_from_chol, solve_lower, solve_lower_t,
+};
 
 /// Combined kernel value (matches kernels/kmatrix.py).
 pub fn kernel(theta: Theta, a: &[f64], b: &[f64]) -> f64 {
@@ -19,22 +30,40 @@ pub fn kernel(theta: Theta, a: &[f64], b: &[f64]) -> f64 {
     theta.w_lin * dot + theta.w_se * (-sq / theta.ell2.max(1e-12)).exp()
 }
 
-/// A fitted native GP (training set + Cholesky factor + weights).
+/// A fitted native GP (training set + Cholesky factor + weights). `Clone`
+/// is cheap enough at the live sizes (n <= a few hundred) that callers can
+/// snapshot a model before a speculative `extend`.
+#[derive(Clone)]
 pub struct NativeGp {
     theta: Theta,
     x: Vec<Vec<f64>>,
+    y: Vec<f64>,
     l: Vec<f64>,
     alpha: Vec<f64>,
     n: usize,
+    jitter: f64,
+    escalations: u32,
 }
 
 impl NativeGp {
     /// Fit on (x, y). y should already be standardized by the caller (the
-    /// same contract as the AOT path). Returns None if the kernel matrix is
-    /// not SPD even with the jitter (degenerate data).
+    /// same contract as the AOT path). Returns None — never panics — if the
+    /// inputs are inconsistent or non-finite, or if the kernel matrix is
+    /// not SPD even at the maximum adaptive jitter (degenerate data).
     pub fn fit(theta: Theta, x: &[Vec<f64>], y: &[f64]) -> Option<Self> {
         let n = y.len();
-        assert_eq!(x.len(), n);
+        if x.len() != n {
+            return None;
+        }
+        let finite_theta = [theta.w_lin, theta.w_se, theta.ell2, theta.tau2, theta.jitter]
+            .iter()
+            .all(|v| v.is_finite());
+        if !finite_theta
+            || y.iter().any(|v| !v.is_finite())
+            || x.iter().any(|r| r.iter().any(|v| !v.is_finite()))
+        {
+            return None;
+        }
         let mut k = vec![0.0; n * n];
         for i in 0..n {
             for j in 0..=i {
@@ -42,14 +71,104 @@ impl NativeGp {
                 k[i * n + j] = v;
                 k[j * n + i] = v;
             }
-            k[i * n + i] += theta.tau2 + theta.jitter;
+            k[i * n + i] += theta.tau2;
         }
-        if cholesky(&mut k, n).is_err() {
-            return None;
+        let ch = cholesky_adaptive(&k, n, theta.jitter)?;
+        let z = solve_lower(&ch.l, n, y);
+        let alpha = solve_lower_t(&ch.l, n, &z);
+        Some(NativeGp {
+            theta,
+            x: x.to_vec(),
+            y: y.to_vec(),
+            l: ch.l,
+            alpha,
+            n,
+            jitter: ch.jitter,
+            escalations: ch.escalations,
+        })
+    }
+
+    /// Number of training points.
+    pub fn n_train(&self) -> usize {
+        self.n
+    }
+
+    /// Diagonal jitter the factorization actually used (>= `theta.jitter`).
+    pub fn jitter(&self) -> f64 {
+        self.jitter
+    }
+
+    /// Adaptive-jitter escalations the fit needed (0 = base jitter worked).
+    pub fn jitter_escalations(&self) -> u32 {
+        self.escalations
+    }
+
+    /// Absorb one new training point in O(n^2) via a rank-1 Cholesky
+    /// extension — the cheap per-trial alternative to an O(n^3) refit.
+    /// Uses the jitter level of the existing factor, so the result matches
+    /// a full refit at that jitter to machine precision.
+    ///
+    /// Returns false (model unchanged) on non-finite inputs, a feature-
+    /// dimension mismatch, or loss of positive definiteness; the caller
+    /// should then fall back to a full adaptive refit.
+    pub fn extend(&mut self, x_new: &[f64], y_new: f64) -> bool {
+        let mut y = self.y.clone();
+        y.push(y_new);
+        self.extend_with_targets(x_new, &y)
+    }
+
+    /// Extend the factor with one point *and* replace the whole target
+    /// vector (length n+1) in a single O(n^2) step — two triangular solves
+    /// total. This is the wrapper's per-trial path: absorbing an
+    /// observation also shifts the standardization of every existing
+    /// target, so the weights must be re-solved against the full fresh
+    /// vector anyway. Same failure contract as [`NativeGp::extend`].
+    pub fn extend_with_targets(&mut self, x_new: &[f64], y: &[f64]) -> bool {
+        if y.len() != self.n + 1 || y.iter().any(|v| !v.is_finite()) {
+            return false;
         }
-        let z = solve_lower(&k, n, y);
-        let alpha = solve_lower_t(&k, n, &z);
-        Some(NativeGp { theta, x: x.to_vec(), l: k, alpha, n })
+        if x_new.iter().any(|v| !v.is_finite()) {
+            return false;
+        }
+        if let Some(first) = self.x.first() {
+            if first.len() != x_new.len() {
+                return false;
+            }
+        }
+        let k_col: Vec<f64> = self.x.iter().map(|xi| kernel(self.theta, x_new, xi)).collect();
+        let k_diag = kernel(self.theta, x_new, x_new) + self.theta.tau2 + self.jitter;
+        let Some(l) = chol_extend(&self.l, self.n, &k_col, k_diag) else {
+            return false;
+        };
+        self.l = l;
+        self.n += 1;
+        self.x.push(x_new.to_vec());
+        self.y = y.to_vec();
+        self.refresh_alpha();
+        true
+    }
+
+    /// Replace the target vector (same training inputs) and re-solve the
+    /// weights in O(n^2), reusing the factor. Callers that standardize
+    /// targets need this after every `extend`: a new observation shifts the
+    /// standardization of *all* previous targets, but leaves the kernel
+    /// matrix — a function of x only — untouched.
+    ///
+    /// Returns false (model unchanged) on length mismatch or non-finite
+    /// targets.
+    pub fn set_targets(&mut self, y: &[f64]) -> bool {
+        if y.len() != self.n || y.iter().any(|v| !v.is_finite()) {
+            return false;
+        }
+        self.y = y.to_vec();
+        self.refresh_alpha();
+        true
+    }
+
+    /// Re-solve alpha = K^-1 y from the current factor and targets (O(n^2)).
+    fn refresh_alpha(&mut self) {
+        let z = solve_lower(&self.l, self.n, &self.y);
+        self.alpha = solve_lower_t(&self.l, self.n, &z);
     }
 
     /// Posterior mean/variance at a batch of candidates.
@@ -168,5 +287,92 @@ mod tests {
         let nll_bad = NativeGp::fit(bad, &x, &y).unwrap().nll(&y);
         assert!(nll_good.is_finite() && nll_bad.is_finite());
         assert!(nll_good < nll_bad, "{nll_good} !< {nll_bad}");
+    }
+
+    #[test]
+    fn duplicate_points_noiseless_linear_kernel_fit_without_panic() {
+        // The relax-and-round pathology: many box points collapse onto the
+        // same mapping, so the noiseless (tau2 = 0) linear-kernel Gram
+        // matrix is exactly singular once n > d. The seed code's fixed
+        // jitter failed here; the adaptive fit must recover (or at worst
+        // return None), never panic.
+        let theta = Theta { w_lin: 1.0, w_se: 0.0, ell2: 1.0, tau2: 0.0, jitter: 1e-8 };
+        let base = vec![vec![0.5, -1.0, 2.0], vec![1.0, 0.0, 0.25]];
+        let x: Vec<Vec<f64>> = (0..12).map(|i| base[i % 2].clone()).collect();
+        let y: Vec<f64> = (0..12).map(|i| (i % 2) as f64).collect();
+        let gp = NativeGp::fit(theta, &x, &y).expect("adaptive jitter must rescue duplicates");
+        assert!(gp.jitter() >= 1e-8);
+        let post = gp.posterior(&x);
+        assert!(post.mean.iter().all(|m| m.is_finite()));
+        assert!(post.var.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn nan_and_mismatched_inputs_return_none() {
+        let theta = Theta::hw_default();
+        let x = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        assert!(NativeGp::fit(theta, &x, &[1.0, f64::NAN]).is_none());
+        assert!(NativeGp::fit(theta, &[vec![f64::NAN, 0.0], x[1].clone()], &[1.0, 2.0]).is_none());
+        assert!(NativeGp::fit(theta, &x, &[1.0]).is_none());
+        let bad_theta = Theta { w_lin: f64::NAN, ..theta };
+        assert!(NativeGp::fit(bad_theta, &x, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn extend_matches_full_refit() {
+        // Property: fit(n-1) + extend(1) == fit(n), across seeds, to well
+        // under the 1e-9 tolerance the no-panic contract promises.
+        for seed in 0..8 {
+            let mut rng = Rng::seed_from_u64(100 + seed);
+            let (x, y) = data(&mut rng, 24, 6);
+            let theta = Theta::hw_default();
+            let full = NativeGp::fit(theta, &x, &y).unwrap();
+            let mut inc = NativeGp::fit(theta, &x[..16], &y[..16]).unwrap();
+            for i in 16..24 {
+                assert!(inc.extend(&x[i], y[i]), "extend failed at point {i} (seed {seed})");
+            }
+            assert_eq!(inc.n_train(), full.n_train());
+            let (cand, _) = data(&mut rng, 20, 6);
+            let pf = full.posterior(&cand);
+            let pi = inc.posterior(&cand);
+            for (a, b) in pf.mean.iter().zip(pi.mean.iter()) {
+                assert!((a - b).abs() < 1e-9, "seed {seed}: mean {a} vs {b}");
+            }
+            for (a, b) in pf.var.iter().zip(pi.var.iter()) {
+                assert!((a - b).abs() < 1e-9, "seed {seed}: var {a} vs {b}");
+            }
+            assert!((full.nll(&y) - inc.nll(&y)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn extend_rejects_bad_points_and_leaves_model_usable() {
+        let mut rng = Rng::seed_from_u64(9);
+        let (x, y) = data(&mut rng, 10, 4);
+        let mut gp = NativeGp::fit(Theta::hw_default(), &x, &y).unwrap();
+        assert!(!gp.extend(&[f64::NAN, 0.0, 0.0, 0.0], 1.0));
+        assert!(!gp.extend(&[1.0, 2.0], 1.0)); // dimension mismatch
+        assert!(!gp.extend(&x[0], f64::NAN));
+        assert_eq!(gp.n_train(), 10);
+        let post = gp.posterior(&x);
+        assert!(post.mean.iter().all(|m| m.is_finite()));
+    }
+
+    #[test]
+    fn set_targets_reuses_factor() {
+        let mut rng = Rng::seed_from_u64(10);
+        let (x, y) = data(&mut rng, 16, 4);
+        let mut gp = NativeGp::fit(Theta::hw_default(), &x, &y).unwrap();
+        let y2: Vec<f64> = y.iter().map(|v| v * 2.0 + 1.0).collect();
+        assert!(gp.set_targets(&y2));
+        let direct = NativeGp::fit(Theta::hw_default(), &x, &y2).unwrap();
+        let (cand, _) = data(&mut rng, 8, 4);
+        let pa = gp.posterior(&cand);
+        let pb = direct.posterior(&cand);
+        for (a, b) in pa.mean.iter().zip(pb.mean.iter()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        assert!(!gp.set_targets(&[1.0])); // length mismatch rejected
+        assert!(!gp.set_targets(&vec![f64::NAN; 16]));
     }
 }

@@ -1,6 +1,12 @@
 //! Minimal dense linear algebra (f64) for the native reference GP: Cholesky
-//! factorization and triangular solves. Row-major `Vec<f64>` matrices; sizes
-//! here are <= a few hundred, so simplicity beats blocking.
+//! factorization (plain and adaptive-jitter), a rank-1 factor *extension*
+//! for incremental refits, and triangular solves. Row-major `Vec<f64>`
+//! matrices; sizes here are <= a few hundred, so simplicity beats blocking.
+//!
+//! No-panic contract: every entry point in this module returns an error
+//! value (`Err`/`None`) on degenerate or NaN-bearing inputs instead of
+//! panicking — a singular Gram matrix mid-search must degrade, not abort.
+#![deny(clippy::style)]
 
 /// Row-major square matrix view helpers.
 #[inline]
@@ -9,7 +15,7 @@ fn at(a: &[f64], n: usize, i: usize, j: usize) -> f64 {
 }
 
 /// In-place lower Cholesky of SPD matrix a (n x n). Returns Err(i) if a
-/// non-positive pivot is hit at row i (matrix not SPD enough).
+/// non-positive (or NaN) pivot is hit at row i (matrix not SPD enough).
 pub fn cholesky(a: &mut [f64], n: usize) -> Result<(), usize> {
     debug_assert_eq!(a.len(), n * n);
     for j in 0..n {
@@ -18,7 +24,9 @@ pub fn cholesky(a: &mut [f64], n: usize) -> Result<(), usize> {
             let l = at(a, n, j, k);
             d -= l * l;
         }
-        if d <= 0.0 {
+        // `!(d > 0.0)` rather than `d <= 0.0`: a NaN pivot (possible when
+        // the input carries NaN) must also be rejected, never propagated.
+        if !(d > 0.0) {
             return Err(j);
         }
         let d = d.sqrt();
@@ -36,6 +44,100 @@ pub fn cholesky(a: &mut [f64], n: usize) -> Result<(), usize> {
         }
     }
     Ok(())
+}
+
+/// Result of an adaptive-jitter factorization: the factor plus how much
+/// diagonal jitter was actually needed (surrogate telemetry reports both).
+#[derive(Clone, Debug)]
+pub struct AdaptiveChol {
+    /// Lower-triangular Cholesky factor of `k + jitter * I`, row-major n x n.
+    pub l: Vec<f64>,
+    /// The jitter level that succeeded.
+    pub jitter: f64,
+    /// Escalation steps taken beyond the base jitter (0 = first try worked).
+    pub escalations: u32,
+}
+
+/// Jitter escalation ceiling, relative to the mean diagonal magnitude.
+const MAX_RELATIVE_JITTER: f64 = 1e-2;
+/// Multiplier applied to the jitter on each failed attempt.
+const JITTER_GROWTH: f64 = 10.0;
+
+/// Cholesky with escalating diagonal jitter: factor `k + jitter * I`,
+/// retrying with `jitter` growing by [`JITTER_GROWTH`] from `base_jitter`
+/// up to `1e-2 * mean|diag|` until the factorization succeeds. This is the
+/// rescue path for the noiseless linear kernel, whose Gram matrix goes
+/// exactly singular whenever relax-and-round collapses distinct box points
+/// onto identical mappings (duplicate rows) or n exceeds the feature rank.
+///
+/// Returns `None` when `k` contains non-finite entries or is indefinite
+/// beyond what the maximum jitter can repair.
+pub fn cholesky_adaptive(k: &[f64], n: usize, base_jitter: f64) -> Option<AdaptiveChol> {
+    debug_assert_eq!(k.len(), n * n);
+    if k.iter().any(|v| !v.is_finite()) || !base_jitter.is_finite() {
+        return None;
+    }
+    if n == 0 {
+        return Some(AdaptiveChol { l: Vec::new(), jitter: 0.0, escalations: 0 });
+    }
+    let diag_scale = (0..n).map(|i| at(k, n, i, i).abs()).sum::<f64>() / n as f64;
+    let base = base_jitter.max(1e-12);
+    // Relative ceiling: a matrix that needs jitter far beyond its own
+    // diagonal scale is reported as failed rather than silently replaced
+    // by (mostly) jitter * I. Never below the base jitter itself, so the
+    // first attempt is always made.
+    let max_jitter = (MAX_RELATIVE_JITTER * diag_scale).max(base);
+    let mut jitter = base;
+    let mut escalations = 0u32;
+    loop {
+        let mut l = k.to_vec();
+        for i in 0..n {
+            l[i * n + i] += jitter;
+        }
+        if cholesky(&mut l, n).is_ok() {
+            return Some(AdaptiveChol { l, jitter, escalations });
+        }
+        if jitter >= max_jitter {
+            return None;
+        }
+        jitter = (jitter * JITTER_GROWTH).min(max_jitter);
+        escalations += 1;
+    }
+}
+
+/// Extend a Cholesky factor by one row/column in O(n^2): given the factor
+/// `l` of an n x n matrix K, the covariance column `k_col` (K against the
+/// new point, length n) and the new diagonal entry `k_diag` (noise/jitter
+/// already included), return the (n+1) x (n+1) factor of the bordered
+/// matrix. This is what makes per-trial surrogate updates O(n^2) instead
+/// of the O(n^3) full refactorization.
+///
+/// Returns `None` — leaving the caller to fall back to a full (adaptive)
+/// refit — when inputs are non-finite or the extension loses positive
+/// definiteness (Schur complement <= 0).
+pub fn chol_extend(l: &[f64], n: usize, k_col: &[f64], k_diag: f64) -> Option<Vec<f64>> {
+    debug_assert_eq!(l.len(), n * n);
+    debug_assert_eq!(k_col.len(), n);
+    if !k_diag.is_finite() || k_col.iter().any(|v| !v.is_finite()) {
+        return None;
+    }
+    // New off-diagonal row: forward substitution L c = k_col — identical
+    // arithmetic (and summation order) to what a full Cholesky would do for
+    // its last row, so the extended factor matches a refactorization to
+    // machine precision.
+    let c = solve_lower(l, n, k_col);
+    let d = k_diag - c.iter().map(|v| v * v).sum::<f64>();
+    if !(d > 0.0) || !d.is_finite() || c.iter().any(|v| !v.is_finite()) {
+        return None;
+    }
+    let m = n + 1;
+    let mut out = vec![0.0; m * m];
+    for i in 0..n {
+        out[i * m..i * m + n].copy_from_slice(&l[i * n..i * n + n]);
+    }
+    out[n * m..n * m + n].copy_from_slice(&c);
+    out[n * m + n] = d.sqrt();
+    Some(out)
 }
 
 /// Solve L x = b (forward substitution), L lower-triangular row-major.
@@ -122,6 +224,100 @@ mod tests {
     fn cholesky_rejects_non_spd() {
         let mut a = vec![1.0, 2.0, 2.0, 1.0]; // indefinite
         assert!(cholesky(&mut a, 2).is_err());
+    }
+
+    #[test]
+    fn cholesky_rejects_nan_instead_of_propagating() {
+        let mut a = vec![1.0, f64::NAN, f64::NAN, 1.0];
+        assert!(cholesky(&mut a, 2).is_err());
+        let mut b = vec![f64::NAN, 0.0, 0.0, 1.0];
+        assert!(cholesky(&mut b, 2).is_err());
+    }
+
+    #[test]
+    fn adaptive_factors_exactly_singular_duplicate_gram() {
+        // Gram matrix of duplicated points: exactly singular (rank 1), the
+        // relax-and-round pathology. K + jitter*I is SPD for any positive
+        // jitter, so the adaptive path must factor it without failing.
+        let n = 3;
+        let k = vec![2.0; n * n];
+        let out = cholesky_adaptive(&k, n, 1e-8).expect("duplicate Gram must factor");
+        assert!(out.l.iter().all(|v| v.is_finite()));
+        assert!(out.jitter >= 1e-8);
+    }
+
+    #[test]
+    fn adaptive_escalates_on_indefinite_kernel() {
+        // An off-diagonal slightly above the diagonal (eigenvalues 2.005 and
+        // -0.005): the f32-roundtrip corruption an AOT kernel matrix can
+        // carry. Rescue needs jitter > 5e-3, so the 1e-8 base must escalate
+        // all the way to the 1e-2 ceiling.
+        let k = vec![1.0, 1.005, 1.005, 1.0];
+        let out = cholesky_adaptive(&k, 2, 1e-8).expect("escalation must rescue");
+        assert!(out.escalations > 0, "expected escalation past the base jitter");
+        assert!(out.jitter > 5e-3, "jitter {} cannot dominate the -5e-3 eigenvalue", out.jitter);
+        // factor reconstructs k + jitter * I
+        for i in 0..2 {
+            for j in 0..2 {
+                let mut s = 0.0;
+                for t in 0..=i.min(j) {
+                    s += out.l[i * 2 + t] * out.l[j * 2 + t];
+                }
+                let want = k[i * 2 + j] + if i == j { out.jitter } else { 0.0 };
+                assert!((s - want).abs() < 1e-6, "({i},{j}): {s} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_first_try_reports_zero_escalations() {
+        let mut rng = Rng::seed_from_u64(5);
+        let n = 12;
+        let a = random_spd(&mut rng, n);
+        let out = cholesky_adaptive(&a, n, 1e-8).unwrap();
+        assert_eq!(out.escalations, 0);
+        assert!((out.jitter - 1e-8).abs() < 1e-20);
+    }
+
+    #[test]
+    fn adaptive_rejects_nan_and_hopeless_matrices() {
+        assert!(cholesky_adaptive(&[f64::NAN, 0.0, 0.0, 1.0], 2, 1e-8).is_none());
+        // strongly indefinite: no reasonable jitter makes [[0,5],[5,0]] SPD
+        assert!(cholesky_adaptive(&[0.0, 5.0, 5.0, 0.0], 2, 1e-8).is_none());
+    }
+
+    #[test]
+    fn extend_matches_full_factorization() {
+        let mut rng = Rng::seed_from_u64(3);
+        for n in [1usize, 4, 12, 33] {
+            let m = n + 1;
+            let a = random_spd(&mut rng, m);
+            // full factor of the (n+1) x (n+1) matrix
+            let mut full = a.clone();
+            cholesky(&mut full, m).unwrap();
+            // factor of the leading n x n block, then extend
+            let mut head = vec![0.0; n * n];
+            for i in 0..n {
+                head[i * n..i * n + n].copy_from_slice(&a[i * m..i * m + n]);
+            }
+            cholesky(&mut head, n).unwrap();
+            let k_col: Vec<f64> = (0..n).map(|i| a[n * m + i]).collect();
+            let ext = chol_extend(&head, n, &k_col, a[n * m + n]).unwrap();
+            for (e, f) in ext.iter().zip(full.iter()) {
+                assert!((e - f).abs() < 1e-10, "n={n}: {e} vs {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn extend_rejects_indefinite_and_nan_borders() {
+        let l = vec![1.0]; // factor of [[1.0]]
+        // Schur complement 1 - 4 < 0: not extendable
+        assert!(chol_extend(&l, 1, &[2.0], 1.0).is_none());
+        assert!(chol_extend(&l, 1, &[f64::NAN], 1.0).is_none());
+        assert!(chol_extend(&l, 1, &[0.5], f64::NAN).is_none());
+        // valid border still works
+        assert!(chol_extend(&l, 1, &[0.5], 1.0).is_some());
     }
 
     #[test]

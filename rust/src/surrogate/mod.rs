@@ -2,6 +2,29 @@
 //! executed through the AOT JAX/Pallas artifacts or the native reference),
 //! and the ablation/baseline models (random forest, gradient-boosted trees,
 //! MLP cost model).
+//!
+//! # Numerics contract (the speed-critical inner loop of every search)
+//!
+//! The GP stack (`linalg` → `gp_native` → `gp`) upholds three guarantees:
+//!
+//! * **No panics on data.** Degenerate inputs — duplicate/collinear points
+//!   that make the noiseless linear-kernel Gram matrix singular, NaN or
+//!   infinite features/targets — surface as `None`/`false`/[`gp::FitStatus`]
+//!   values, never as a mid-search abort. Non-finite observations are
+//!   excluded from the model at ingestion (one poisoned trial cannot
+//!   disable a run's surrogate); a dataset that still cannot factor
+//!   degrades to a prior-posterior prediction.
+//! * **Adaptive jitter.** Factorizations start at `theta.jitter` and
+//!   escalate the diagonal jitter ×10 per retry up to `1e-2 · mean|diag|`
+//!   ([`linalg::cholesky_adaptive`]); the jitter actually used is reported
+//!   through [`gp::FitStatus::Fitted`] and counted in [`telemetry`].
+//! * **Refit vs extend are distinct, measured paths.** Scheduled
+//!   hyperparameter refits (`GpSurrogate::fit`, every
+//!   `BoConfig::refit_every` observations) pay O(n^3); between them the
+//!   per-trial path (`GpSurrogate::extend`/`sync_data`, backed by
+//!   [`linalg::chol_extend`]) absorbs each new observation in O(n^2).
+//!   Telemetry counters for fits, data refits, extends, fallbacks, jitter
+//!   escalations and outright fit failures feed `coordinator::metrics`.
 
 pub mod acquisition;
 pub mod gbt;
@@ -10,11 +33,13 @@ pub mod gp_native;
 pub mod linalg;
 pub mod mlp;
 pub mod rf;
+pub mod telemetry;
 pub mod tree;
 
 pub use acquisition::{feasibility_probability, Acquisition};
 pub use gbt::{Gbt, GbtConfig};
-pub use gp::{GpBackend, GpSurrogate, KernelFamily};
+pub use gp::{FitStatus, GpBackend, GpSurrogate, KernelFamily};
 pub use gp_native::NativeGp;
 pub use mlp::{Mlp, MlpConfig};
 pub use rf::{RandomForest, RfConfig};
+pub use telemetry::SurrogateStats;

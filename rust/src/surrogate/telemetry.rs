@@ -1,0 +1,124 @@
+//! Process-global surrogate telemetry: monotone counters (like the
+//! evaluation cache's) that record how the GP numerics behaved — full
+//! hyperparameter fits vs data-only refits vs O(n^2) rank-1 extends, jitter
+//! escalations, and fits that failed outright and degraded to the prior.
+//!
+//! Search loops are free functions without a `Metrics` handle, so the
+//! counters live here as statics; `coordinator::metrics` snapshots them at
+//! run boundaries and reports the per-run delta (see
+//! [`SurrogateStats::since`]).
+#![deny(clippy::style)]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static FITS: AtomicU64 = AtomicU64::new(0);
+static DATA_REFITS: AtomicU64 = AtomicU64::new(0);
+static EXTENDS: AtomicU64 = AtomicU64::new(0);
+static EXTEND_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+static FIT_FAILURES: AtomicU64 = AtomicU64::new(0);
+static JITTER_ESCALATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the surrogate counters. All fields are totals since process
+/// start; use [`SurrogateStats::since`] to attribute movement to one run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SurrogateStats {
+    /// Successful full fits with hyperparameter (marginal-likelihood) search.
+    pub fits: u64,
+    /// Successful full O(n^3) data-only refits (no hyperparameter search).
+    pub data_refits: u64,
+    /// O(n^2) rank-1 extends that absorbed a new observation.
+    pub extends: u64,
+    /// Extends that lost positive definiteness and fell back to a full refit.
+    pub extend_fallbacks: u64,
+    /// Fits that failed even at maximum jitter: the surrogate degraded to
+    /// its prior posterior instead of panicking.
+    pub fit_failures: u64,
+    /// Total adaptive-jitter escalation steps across all factorizations.
+    pub jitter_escalations: u64,
+}
+
+impl SurrogateStats {
+    /// Counter movement since an earlier snapshot.
+    pub fn since(&self, earlier: &SurrogateStats) -> SurrogateStats {
+        let escalations = self.jitter_escalations.saturating_sub(earlier.jitter_escalations);
+        SurrogateStats {
+            fits: self.fits.saturating_sub(earlier.fits),
+            data_refits: self.data_refits.saturating_sub(earlier.data_refits),
+            extends: self.extends.saturating_sub(earlier.extends),
+            extend_fallbacks: self.extend_fallbacks.saturating_sub(earlier.extend_fallbacks),
+            fit_failures: self.fit_failures.saturating_sub(earlier.fit_failures),
+            jitter_escalations: escalations,
+        }
+    }
+}
+
+/// Read all counters.
+pub fn snapshot() -> SurrogateStats {
+    SurrogateStats {
+        fits: FITS.load(Ordering::Relaxed),
+        data_refits: DATA_REFITS.load(Ordering::Relaxed),
+        extends: EXTENDS.load(Ordering::Relaxed),
+        extend_fallbacks: EXTEND_FALLBACKS.load(Ordering::Relaxed),
+        fit_failures: FIT_FAILURES.load(Ordering::Relaxed),
+        jitter_escalations: JITTER_ESCALATIONS.load(Ordering::Relaxed),
+    }
+}
+
+/// A full fit with hyperparameter search succeeded.
+pub fn record_fit(escalations: u32) {
+    FITS.fetch_add(1, Ordering::Relaxed);
+    JITTER_ESCALATIONS.fetch_add(u64::from(escalations), Ordering::Relaxed);
+}
+
+/// A full data-only refit succeeded.
+pub fn record_data_refit(escalations: u32) {
+    DATA_REFITS.fetch_add(1, Ordering::Relaxed);
+    JITTER_ESCALATIONS.fetch_add(u64::from(escalations), Ordering::Relaxed);
+}
+
+/// A rank-1 extend absorbed a new observation.
+pub fn record_extend() {
+    EXTENDS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A rank-1 extend failed and the surrogate fell back to a full refit.
+pub fn record_extend_fallback() {
+    EXTEND_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A fit failed at maximum jitter; predictions degrade to the prior.
+pub fn record_fit_failure() {
+    FIT_FAILURES.fetch_add(1, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_monotone_and_attributable() {
+        // Tests run in parallel and the counters are process-global, so
+        // assert on deltas (>=), never on absolute values.
+        let before = snapshot();
+        record_fit(3);
+        record_data_refit(0);
+        record_extend();
+        record_extend_fallback();
+        record_fit_failure();
+        let delta = snapshot().since(&before);
+        assert!(delta.fits >= 1);
+        assert!(delta.data_refits >= 1);
+        assert!(delta.extends >= 1);
+        assert!(delta.extend_fallbacks >= 1);
+        assert!(delta.fit_failures >= 1);
+        assert!(delta.jitter_escalations >= 3);
+    }
+
+    #[test]
+    fn since_saturates() {
+        let a = SurrogateStats { fits: 5, ..SurrogateStats::default() };
+        let b = SurrogateStats { fits: 9, ..SurrogateStats::default() };
+        assert_eq!(b.since(&a).fits, 4);
+        assert_eq!(a.since(&b).fits, 0);
+    }
+}

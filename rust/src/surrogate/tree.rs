@@ -101,7 +101,9 @@ fn build(
     let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, sse)
     for &f in &features {
         let mut order = idx.clone();
-        order.sort_by(|&a, &b| x[a][f].partial_cmp(&x[b][f]).unwrap());
+        // total_cmp: NaN features (upstream degraded numerics) sort to the
+        // ends instead of panicking the whole forest fit
+        order.sort_by(|&a, &b| x[a][f].total_cmp(&x[b][f]));
         // prefix sums for O(n) split scan
         let mut sum = 0.0;
         let mut sumsq = 0.0;

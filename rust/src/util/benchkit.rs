@@ -76,7 +76,7 @@ pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> Bench
             break;
         }
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let median_ns = samples[samples.len() / 2];
     let mean_ns = samples.iter().sum::<f64>() / samples.len() as f64;
     let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);

@@ -60,6 +60,13 @@ pub fn argmax(xs: &[f64]) -> Option<usize> {
         .map(|(i, _)| i)
 }
 
+/// Minimum over the non-NaN entries; None on empty or all-NaN input. The
+/// NaN-safe incumbent for EI/LCB acquisition: callers fold the None case to
+/// +INFINITY explicitly instead of letting a NaN or empty log poison it.
+pub fn min_ignoring_nan(xs: &[f64]) -> Option<f64> {
+    xs.iter().copied().filter(|v| !v.is_nan()).min_by(f64::total_cmp)
+}
+
 /// Running best-so-far (minimum) transform of an optimization trace.
 pub fn best_so_far_min(trace: &[f64]) -> Vec<f64> {
     let mut best = f64::INFINITY;
@@ -147,6 +154,14 @@ mod tests {
         let xs = [f64::INFINITY, f64::NEG_INFINITY, 0.0, -0.0];
         assert_eq!(argmin(&xs), Some(1));
         assert_eq!(argmax(&xs), Some(0));
+    }
+
+    #[test]
+    fn min_ignoring_nan_contract() {
+        assert_eq!(min_ignoring_nan(&[]), None);
+        assert_eq!(min_ignoring_nan(&[f64::NAN]), None);
+        assert_eq!(min_ignoring_nan(&[3.0, f64::NAN, 1.0]), Some(1.0));
+        assert_eq!(min_ignoring_nan(&[f64::INFINITY, 2.0]), Some(2.0));
     }
 
     #[test]

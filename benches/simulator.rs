@@ -46,8 +46,10 @@ fn main() {
         bench(&format!("evaluate_edp/{layer_name}"), budget, || {
             eval.edp(&layer, &space.hw, &mapping).unwrap()
         });
+        // the historical rejection path (kept as the feasibility engine's
+        // fallback); the engine itself is measured in benches/feasible_sampling.rs
         let r = bench(&format!("rejection_sample_valid/{layer_name}"), budget, || {
-            space.sample_valid(&mut rng, 10_000_000).unwrap().1
+            space.sample_valid_rejection(&mut rng, 10_000_000).unwrap().1
         });
         println!(
             "  -> rejection sampler throughput ~ {:.0} raw samples/s/core",
@@ -56,11 +58,14 @@ fn main() {
                     // average raw draws per valid sample, measured separately
                     let mut d = 0u64;
                     for _ in 0..50 {
-                        d += space.sample_valid(&mut rng, 10_000_000).unwrap().1;
+                        d += space.sample_valid_rejection(&mut rng, 10_000_000).unwrap().1;
                     }
                     d as f64 / 50.0
                 }
         );
+        bench(&format!("constructive_sample_valid/{layer_name}"), budget, || {
+            space.sample_valid(&mut rng, 10_000_000).unwrap().1
+        });
     }
 
     // Batched + memoized evaluation: the repeated-candidate hot path every

@@ -158,11 +158,13 @@ impl Driver {
     /// Full nested co-design on a model.
     pub fn run(&self, model: &ModelSpec, backend: &GpBackend, seed: u64) -> CodesignOutcome {
         let metrics = Metrics::new();
-        // Surrogate counters are process-global and monotone; diff against
-        // a baseline so the report reflects this run's fits/extends.
-        // (Concurrent runs in one process would blend into each other's
-        // deltas — the driver assumes one run at a time.)
+        // Surrogate and feasibility counters are process-global and
+        // monotone; diff against a baseline so the report reflects this
+        // run's fits/extends/constructions. (Concurrent runs in one process
+        // would blend into each other's deltas — the driver assumes one run
+        // at a time.)
         let gp_baseline = crate::surrogate::telemetry::snapshot();
+        let feas_baseline = crate::space::feasible::telemetry::snapshot();
         let space = HwSpace::new(eyeriss_resources(model.num_pes));
         let best: Mutex<Option<Checkpoint>> = Mutex::new(None);
         let mut trial = 0usize;
@@ -274,6 +276,9 @@ impl Driver {
         }
         metrics.record_cache(self.cache.stats());
         metrics.record_surrogate(crate::surrogate::telemetry::snapshot().since(&gp_baseline));
+        metrics.record_feasibility(
+            crate::space::feasible::telemetry::snapshot().since(&feas_baseline),
+        );
         CodesignOutcome { hw_trace, best: best.into_inner().unwrap(), metrics }
     }
 }
@@ -445,5 +450,25 @@ mod tests {
         assert!(report.contains("cache_hits="), "{report}");
         let stats = driver.cache.stats();
         assert!(stats.hits + stats.misses > 0, "evaluations must route through the cache");
+    }
+
+    #[test]
+    fn run_surfaces_feasibility_telemetry() {
+        let mut driver = Driver::new(tiny_cfg());
+        driver.verbose = false;
+        driver.threads = 2;
+        driver.sw_method = SwMethod::Random;
+        let out = driver.run(&dqn(), &GpBackend::Native, 21);
+        let report = out.metrics.report();
+        assert!(report.contains("feas_constructed="), "{report}");
+        // every hardware config and software candidate of this run was
+        // generated by the feasibility engine: the per-run delta is visible
+        use std::sync::atomic::Ordering;
+        let constructed = out.metrics.feas_constructed.load(Ordering::Relaxed);
+        assert!(constructed > 0, "run must record constructed candidates: {report}");
+        // and the raw-draw telemetry reflects construction, not rejection:
+        // with one draw per candidate the feasibility rate sits near 1
+        let rate = out.metrics.feasibility_rate();
+        assert!(rate > 0.5, "constructive sampling must lift the feasibility rate: {rate}");
     }
 }

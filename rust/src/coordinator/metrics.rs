@@ -8,6 +8,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::model::cache::CacheStats;
+use crate::space::feasible::telemetry::FeasibilityStats;
 use crate::surrogate::telemetry::SurrogateStats;
 
 #[derive(Debug)]
@@ -28,6 +29,25 @@ pub struct Metrics {
     pub gp_extend_fallbacks: AtomicU64,
     pub gp_fit_failures: AtomicU64,
     pub gp_jitter_escalations: AtomicU64,
+    /// Scheduled GP refits that reused the previous theta as a shrunk local
+    /// grid center, and the full-grid NLL evaluations that saved.
+    pub gp_warm_refits: AtomicU64,
+    pub gp_warm_grid_saved: AtomicU64,
+    /// Feasibility-engine snapshot (stored per run via
+    /// `record_feasibility`): candidates constructed valid-by-construction,
+    /// feasibility-preserving perturbations (`fallbacks` counts only
+    /// *degradations*, which stay at zero on healthy constructive spaces),
+    /// nearest-feasible projections (and failures), samples / raw draws
+    /// that went through the rejection fallback, and infeasible-space
+    /// detections.
+    pub feas_constructed: AtomicU64,
+    pub feas_perturbations: AtomicU64,
+    pub feas_perturbation_fallbacks: AtomicU64,
+    pub feas_projections: AtomicU64,
+    pub feas_projection_failures: AtomicU64,
+    pub feas_fallback_samples: AtomicU64,
+    pub feas_fallback_draws: AtomicU64,
+    pub feas_infeasible_spaces: AtomicU64,
     /// Evaluation-cache snapshot (stored, not accumulated: the cache keeps
     /// its own monotone counters).
     pub cache_hits: AtomicU64,
@@ -58,6 +78,16 @@ impl Metrics {
             gp_extend_fallbacks: AtomicU64::new(0),
             gp_fit_failures: AtomicU64::new(0),
             gp_jitter_escalations: AtomicU64::new(0),
+            gp_warm_refits: AtomicU64::new(0),
+            gp_warm_grid_saved: AtomicU64::new(0),
+            feas_constructed: AtomicU64::new(0),
+            feas_perturbations: AtomicU64::new(0),
+            feas_perturbation_fallbacks: AtomicU64::new(0),
+            feas_projections: AtomicU64::new(0),
+            feas_projection_failures: AtomicU64::new(0),
+            feas_fallback_samples: AtomicU64::new(0),
+            feas_fallback_draws: AtomicU64::new(0),
+            feas_infeasible_spaces: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
@@ -95,6 +125,21 @@ impl Metrics {
         self.gp_extend_fallbacks.store(stats.extend_fallbacks, Ordering::Relaxed);
         self.gp_fit_failures.store(stats.fit_failures, Ordering::Relaxed);
         self.gp_jitter_escalations.store(stats.jitter_escalations, Ordering::Relaxed);
+        self.gp_warm_refits.store(stats.warm_refits, Ordering::Relaxed);
+        self.gp_warm_grid_saved.store(stats.warm_grid_saved, Ordering::Relaxed);
+    }
+
+    /// Surface a feasibility-engine snapshot (typically the per-run delta
+    /// of the process-global counters) in the run telemetry.
+    pub fn record_feasibility(&self, stats: FeasibilityStats) {
+        self.feas_constructed.store(stats.constructed, Ordering::Relaxed);
+        self.feas_perturbations.store(stats.perturbations, Ordering::Relaxed);
+        self.feas_perturbation_fallbacks.store(stats.perturbation_fallbacks, Ordering::Relaxed);
+        self.feas_projections.store(stats.projections, Ordering::Relaxed);
+        self.feas_projection_failures.store(stats.projection_failures, Ordering::Relaxed);
+        self.feas_fallback_samples.store(stats.fallback_samples, Ordering::Relaxed);
+        self.feas_fallback_draws.store(stats.fallback_draws, Ordering::Relaxed);
+        self.feas_infeasible_spaces.store(stats.infeasible_spaces, Ordering::Relaxed);
     }
 
     /// Fraction of evaluation requests served from the cache.
@@ -134,8 +179,12 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "sim_evals={} feasible={} raw_draws={} feasibility_rate={:.5} \
+             feas_constructed={} feas_perturbations={} feas_perturbation_fallbacks={} \
+             feas_projections={} feas_projection_failures={} feas_fallback_samples={} \
+             feas_fallback_draws={} feas_infeasible_spaces={} \
              gp_fits={} gp_data_refits={} gp_extends={} gp_extend_fallbacks={} \
-             gp_fit_failures={} gp_jitter_escalations={} \
+             gp_fit_failures={} gp_jitter_escalations={} gp_warm_refits={} \
+             gp_warm_grid_saved={} \
              cache_hits={} cache_misses={} cache_hit_rate={:.3} cache_evictions={} \
              cache_entries={} cache_probationary={} cache_protected={} \
              cache_promotions={} cache_demotions={} cache_snapshot_loaded={} \
@@ -144,12 +193,22 @@ impl Metrics {
             self.feasible_evals.load(Ordering::Relaxed),
             self.raw_draws.load(Ordering::Relaxed),
             self.feasibility_rate(),
+            self.feas_constructed.load(Ordering::Relaxed),
+            self.feas_perturbations.load(Ordering::Relaxed),
+            self.feas_perturbation_fallbacks.load(Ordering::Relaxed),
+            self.feas_projections.load(Ordering::Relaxed),
+            self.feas_projection_failures.load(Ordering::Relaxed),
+            self.feas_fallback_samples.load(Ordering::Relaxed),
+            self.feas_fallback_draws.load(Ordering::Relaxed),
+            self.feas_infeasible_spaces.load(Ordering::Relaxed),
             self.gp_fits.load(Ordering::Relaxed),
             self.gp_data_refits.load(Ordering::Relaxed),
             self.gp_extends.load(Ordering::Relaxed),
             self.gp_extend_fallbacks.load(Ordering::Relaxed),
             self.gp_fit_failures.load(Ordering::Relaxed),
             self.gp_jitter_escalations.load(Ordering::Relaxed),
+            self.gp_warm_refits.load(Ordering::Relaxed),
+            self.gp_warm_grid_saved.load(Ordering::Relaxed),
             self.cache_hits.load(Ordering::Relaxed),
             self.cache_misses.load(Ordering::Relaxed),
             self.cache_hit_rate(),
@@ -231,6 +290,8 @@ mod tests {
             extend_fallbacks: 1,
             fit_failures: 3,
             jitter_escalations: 7,
+            warm_refits: 3,
+            warm_grid_saved: 36,
         });
         let report = m.report();
         assert!(report.contains("gp_fits=4"));
@@ -239,5 +300,31 @@ mod tests {
         assert!(report.contains("gp_extend_fallbacks=1"));
         assert!(report.contains("gp_fit_failures=3"));
         assert!(report.contains("gp_jitter_escalations=7"));
+        assert!(report.contains("gp_warm_refits=3"));
+        assert!(report.contains("gp_warm_grid_saved=36"));
+    }
+
+    #[test]
+    fn feasibility_snapshot_is_reported() {
+        let m = Metrics::new();
+        m.record_feasibility(FeasibilityStats {
+            constructed: 1200,
+            perturbations: 80,
+            perturbation_fallbacks: 2,
+            projections: 25,
+            projection_failures: 1,
+            fallback_samples: 3,
+            fallback_draws: 9000,
+            infeasible_spaces: 4,
+        });
+        let report = m.report();
+        assert!(report.contains("feas_constructed=1200"));
+        assert!(report.contains("feas_perturbations=80"));
+        assert!(report.contains("feas_perturbation_fallbacks=2"));
+        assert!(report.contains("feas_projections=25"));
+        assert!(report.contains("feas_projection_failures=1"));
+        assert!(report.contains("feas_fallback_samples=3"));
+        assert!(report.contains("feas_fallback_draws=9000"));
+        assert!(report.contains("feas_infeasible_spaces=4"));
     }
 }

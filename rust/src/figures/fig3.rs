@@ -43,7 +43,12 @@ pub fn problem_for(layer_name: &str) -> SwProblem {
 pub fn run(opts: &FigOpts, layers: &[&str], out_name: &str) -> Result<std::path::PathBuf> {
     let trials = opts.scaled(250);
     let repeats = opts.repeats_or(10);
-    let cfg = BoConfig::software();
+    // Fig. 3 exists to reproduce the paper's baselines, including the
+    // relax-and-round pathology: keep round-BO on the penalty-recording
+    // path instead of the feasibility engine's projection (which is the
+    // production default — see `BoConfig::project_rounding`).
+    let mut cfg = BoConfig::software();
+    cfg.project_rounding = false;
 
     let mut csv = Csv::new(&[
         "layer", "method", "repeat", "trial", "best_edp", "norm_recip",

@@ -357,8 +357,12 @@ mod tests {
         let hw = eyeriss_hw(168);
         let space = SwSpace::new(layer.clone(), hw.clone(), eyeriss_resources(168));
         let mut rng = Rng::seed_from_u64(11);
-        let mappings: Vec<Mapping> =
-            (0..n).map(|_| space.sample_valid(&mut rng, 10_000_000).unwrap().0).collect();
+        // sampler exhaustion skips the draw instead of unwrap-panicking;
+        // the count assertion keeps the fixture honest
+        let mappings: Vec<Mapping> = (0..n)
+            .filter_map(|_| space.sample_valid(&mut rng, 1_000_000).map(|(m, _)| m))
+            .collect();
+        assert_eq!(mappings.len(), n, "DQN-K2 must stay sampleable");
         (layer, hw, mappings, Evaluator::new(Resources::eyeriss_168()))
     }
 

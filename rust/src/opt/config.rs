@@ -19,6 +19,12 @@ pub struct BoConfig {
     /// Refit GP hyperparameters (marginal likelihood) every this many new
     /// observations; the posterior itself is recomputed every step.
     pub refit_every: usize,
+    /// Round-BO only: snap rounded box points that violate the capacity /
+    /// spatial constraints onto the nearest feasible mapping (the
+    /// feasibility engine's projection) instead of recording grounded
+    /// penalty observations. `false` reproduces the paper's
+    /// penalty-recording baseline for comparison runs.
+    pub project_rounding: bool,
 }
 
 impl BoConfig {
@@ -30,6 +36,7 @@ impl BoConfig {
             max_pool_draws: 300_000,
             acquisition: Acquisition::Lcb(1.0),
             refit_every: 25,
+            project_rounding: true,
         }
     }
 
@@ -41,6 +48,7 @@ impl BoConfig {
             max_pool_draws: 200_000,
             acquisition: Acquisition::Lcb(1.0),
             refit_every: 5,
+            project_rounding: true,
         }
     }
 }

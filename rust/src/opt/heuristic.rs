@@ -29,15 +29,14 @@ pub fn search(problem: &SwProblem, trials: usize, rng: &mut Rng) -> SearchTrace 
     }
 
     // Phase 2: greedy hill-climbing from the incumbent (prune-style local
-    // refinement: accept only strict improvements).
+    // refinement: accept only strict improvements). The perturbation kernel
+    // is feasibility-preserving, so every move earns a simulator evaluation
+    // instead of burning draws on invalid neighbors.
     let Some(mut cur) = trace.best_mapping.clone() else { return trace };
     let mut cur_edp = trace.best_edp;
     while trace.evals.len() < trials {
-        let cand = problem.space.perturb(rng, &cur);
-        if !problem.space.is_valid(&cand) {
-            trace.raw_draws += 1;
-            continue;
-        }
+        let cand = problem.space.perturb_feasible(rng, &cur);
+        trace.raw_draws += 1;
         let edp = problem.edp(&cand);
         trace.record(&cand, edp);
         if let Some(e) = edp {

@@ -1,10 +1,11 @@
 //! Hardware configuration search: the outer loop of the nested co-design
-//! (§4.2). Known constraints (Fig. 7) are input constraints handled by
-//! rejection sampling; the *unknown* constraint — "does a findable software
-//! mapping exist?" — is learned online by a GP classifier (output
-//! constraint, §3.4), and the objective GP uses the linear+noise kernel on
-//! the Fig. 13 hardware features (noise because the inner software search is
-//! stochastic).
+//! (§4.2). Known constraints (Fig. 7) are input constraints satisfied by
+//! construction (`HwSpace::sample_valid` builds valid configs in one draw;
+//! rejection sampling survives only as its fallback); the *unknown*
+//! constraint — "does a findable software mapping exist?" — is learned
+//! online by a GP classifier (output constraint, §3.4), and the objective
+//! GP uses the linear+noise kernel on the Fig. 13 hardware features (noise
+//! because the inner software search is stochastic).
 
 use crate::model::arch::HwConfig;
 use crate::model::batch::AdaptiveChunker;
@@ -212,7 +213,7 @@ pub fn search(
         let pick: HwConfig = if obs.xs.len() < 2 {
             space.sample_valid(rng).0
         } else {
-            // feasible-by-known-constraints candidate pool
+            // feasible-by-construction candidate pool (known constraints)
             let pool: Vec<HwConfig> =
                 (0..cfg.pool).map(|_| space.sample_valid(rng).0).collect();
             let feats: Vec<Vec<f64>> =

@@ -9,7 +9,13 @@
 //! (largest-remainder rounding keeps the product exact); three more groups
 //! of six coordinates are sort-keys for the loop orders. Rounded points
 //! frequently violate the capacity/spatial constraints — exactly the
-//! pathology the paper attributes to this baseline — and score a penalty.
+//! pathology the paper attributes to this baseline — and historically
+//! scored a (grounded) penalty. With `BoConfig::project_rounding` (the
+//! default), such points are instead snapped onto the nearest feasible
+//! mapping by the feasibility engine's projection, so the GP observes real
+//! EDPs instead of penalty levels and the invalid-observation rate drops to
+//! ~zero; `project_rounding: false` reproduces the penalty-recording
+//! baseline.
 
 use crate::model::mapping::{Mapping, Split};
 use crate::model::workload::{Dim, DIMS};
@@ -188,6 +194,19 @@ fn allocate_factors(n: u64, shares: &[f64]) -> Vec<u64> {
     slots
 }
 
+/// Round a decoded box point: with projection on, snap a rounded mapping
+/// that violates the capacity/spatial constraints onto the nearest feasible
+/// mapping (a degenerate space keeps the raw rounding and rides the penalty
+/// path).
+fn round_point(problem: &SwProblem, cfg: &BoConfig, m: Mapping) -> Mapping {
+    if cfg.project_rounding && !problem.space.is_valid(&m) {
+        if let Some(p) = problem.space.project_feasible(&m) {
+            return p;
+        }
+    }
+    m
+}
+
 /// The relax-and-round BO loop.
 pub fn search(
     problem: &SwProblem,
@@ -207,7 +226,10 @@ pub fn search(
     let nrand = cfg.warmup.max(2).min(trials);
     let points: Vec<Vec<f64>> =
         (0..nrand).map(|_| (0..BOX_DIM).map(|_| rng.f64()).collect()).collect();
-    let mappings: Vec<Mapping> = points.iter().map(|p| decode(problem, p)).collect();
+    let mappings: Vec<Mapping> = points
+        .iter()
+        .map(|p| round_point(problem, cfg, decode(problem, p)))
+        .collect();
     trace.raw_draws += nrand as u64;
     let edps = problem.edp_batch(&mappings);
     for ((point, mapping), edp) in points.into_iter().zip(mappings.iter()).zip(edps) {
@@ -248,12 +270,13 @@ pub fn search(
             }
         };
 
-        let mapping = decode(problem, &point);
+        let mapping = round_point(problem, cfg, decode(problem, &point));
         trace.raw_draws += 1;
         let edp = problem.edp(&mapping);
         trace.record(&mapping, edp);
-        // invalid: the grounded penalty teaches the GP *something*, but
-        // without constraint structure it keeps proposing nearby
+        // still invalid (projection off, or a degenerate space): the
+        // grounded penalty teaches the GP *something*, but without
+        // constraint structure it keeps proposing nearby
         obs.push(point, edp);
     }
     trace
@@ -426,13 +449,50 @@ mod tests {
     }
 
     #[test]
-    fn round_bo_runs_and_often_rounds_to_invalid() {
+    fn unprojected_round_bo_often_rounds_to_invalid() {
+        // The paper's baseline pathology, reproducible with projection off.
         let p = problem();
         let mut rng = Rng::seed_from_u64(2);
-        let cfg = BoConfig { warmup: 5, pool: 20, ..BoConfig::software() };
+        let mut cfg = BoConfig { warmup: 5, pool: 20, ..BoConfig::software() };
+        cfg.project_rounding = false;
         let t = search(&p, 30, &cfg, &mut rng);
         assert_eq!(t.evals.len(), 30);
         let invalid = t.evals.iter().filter(|e| e.is_infinite()).count();
         assert!(invalid > 0, "rounding pathology should produce invalid points");
+    }
+
+    #[test]
+    fn projection_strictly_lowers_the_invalid_observation_rate() {
+        // ISSUE 4 acceptance: on a paper layer, round-BO with the
+        // nearest-feasible projection records strictly fewer invalid
+        // observations than the penalty-recording baseline at the same
+        // budget and seed.
+        let p = problem();
+        let invalid_count = |project: bool| {
+            let mut rng = Rng::seed_from_u64(2);
+            let mut cfg = BoConfig { warmup: 5, pool: 20, ..BoConfig::software() };
+            cfg.project_rounding = project;
+            let t = search(&p, 30, &cfg, &mut rng);
+            assert_eq!(t.evals.len(), 30);
+            t.evals.iter().filter(|e| e.is_infinite()).count()
+        };
+        let baseline = invalid_count(false);
+        let projected = invalid_count(true);
+        assert!(
+            projected < baseline,
+            "projection must lower the invalid rate: {projected} vs {baseline}"
+        );
+        // on a constructive space the projection repairs *every* rounding
+        assert_eq!(projected, 0, "constructive space: all roundings must be repaired");
+    }
+
+    #[test]
+    fn projected_round_bo_finds_feasible_designs() {
+        let p = problem();
+        let mut rng = Rng::seed_from_u64(3);
+        let cfg = BoConfig { warmup: 5, pool: 20, ..BoConfig::software() };
+        let t = search(&p, 30, &cfg, &mut rng);
+        assert!(t.found_feasible());
+        assert!(t.best_mapping.map(|m| p.space.is_valid(&m)).unwrap_or(false));
     }
 }

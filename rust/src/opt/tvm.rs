@@ -67,11 +67,11 @@ pub fn search(
             let mut cur_score = model.predict(&problem.features(&cur), rng);
             let mut temp = 1.0f64;
             for _ in 0..SA_STEPS {
-                let cand = problem.space.perturb(rng, &cur);
-                if !problem.space.is_valid(&cand) {
-                    trace.raw_draws += 1;
-                    continue;
-                }
+                // feasibility-preserving move: every SA step walks inside
+                // the feasible set (TVM's annealer likewise never leaves it)
+                // and costs one raw draw, same accounting as the heuristic
+                let cand = problem.space.perturb_feasible(rng, &cur);
+                trace.raw_draws += 1;
                 let score = model.predict(&problem.features(&cand), rng);
                 let accept = score < cur_score || rng.chance(((cur_score - score) / temp).exp());
                 if accept {

@@ -1,0 +1,88 @@
+//! Divisor lattices: the admissible blocking values of each loop dimension.
+//!
+//! Every blocking factor of a mapping (S1-S6 of Fig. 9) must divide the
+//! layer's extent along that dimension, and the per-level factors must
+//! multiply out exactly — so the candidate values at every level form the
+//! divisor lattice of the dimension, and the *remaining* extent after the
+//! inner levels are fixed is itself a lattice element whose divisors are a
+//! sublattice. The local level is additionally pinned by the hardware
+//! dataflow (H11/H12): a FullAtPe filter axis forces `local = extent`, a
+//! Streamed axis forces `local = 1`.
+#![deny(clippy::style)]
+
+use crate::model::arch::DataflowOpt;
+use crate::model::workload::{Dim, Layer};
+use crate::space::factors::divisors;
+
+/// The admissible-factor lattice of one loop dimension on one hardware
+/// configuration.
+#[derive(Clone, Debug)]
+pub struct DimLattice {
+    pub dim: Dim,
+    /// Full extent of the dimension.
+    pub size: u64,
+    /// Divisors of `size`, ascending — the raw lattice.
+    divisors: Vec<u64>,
+    /// Local blocking factor forced by the dataflow (H11/H12), if pinned.
+    pub pinned_local: Option<u64>,
+}
+
+impl DimLattice {
+    pub fn new(dim: Dim, layer: &Layer, dataflow: Option<DataflowOpt>) -> Self {
+        let size = layer.size(dim);
+        let pinned_local = dataflow.map(|opt| match opt {
+            DataflowOpt::FullAtPe => size,
+            DataflowOpt::Streamed => 1,
+        });
+        DimLattice { dim, size, divisors: divisors(size), pinned_local }
+    }
+
+    /// The smallest local factor any valid mapping must carry: the pinned
+    /// value on dataflow axes, 1 everywhere else.
+    pub fn min_local(&self) -> u64 {
+        self.pinned_local.unwrap_or(1)
+    }
+
+    /// Divisors of `rem` (`rem` must divide `size`), ascending. Because
+    /// `rem | size`, this is a filter over the precomputed lattice — no
+    /// re-factorization on the sampling path.
+    pub fn divisors_of(&self, rem: u64) -> impl Iterator<Item = u64> + '_ {
+        debug_assert!(rem >= 1 && self.size % rem == 0, "rem {rem} !| size {}", self.size);
+        self.divisors.iter().copied().filter(move |d| rem % d == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> Layer {
+        Layer::conv("t", 3, 3, 12, 8, 16, 32, 1)
+    }
+
+    #[test]
+    fn lattice_matches_divisors() {
+        let lat = DimLattice::new(Dim::P, &layer(), None);
+        assert_eq!(lat.size, 12);
+        assert_eq!(lat.divisors_of(12).collect::<Vec<_>>(), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(lat.min_local(), 1);
+    }
+
+    #[test]
+    fn sublattice_of_remaining_extent() {
+        let lat = DimLattice::new(Dim::C, &layer(), None);
+        // after an inner factor of 4 is fixed, only divisors of 4 remain
+        assert_eq!(lat.divisors_of(4).collect::<Vec<_>>(), vec![1, 2, 4]);
+        assert_eq!(lat.divisors_of(1).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn dataflow_pins_local() {
+        let full = DimLattice::new(Dim::R, &layer(), Some(DataflowOpt::FullAtPe));
+        assert_eq!(full.pinned_local, Some(3));
+        assert_eq!(full.min_local(), 3);
+        let streamed = DimLattice::new(Dim::S, &layer(), Some(DataflowOpt::Streamed));
+        assert_eq!(streamed.pinned_local, Some(1));
+        assert_eq!(streamed.min_local(), 1);
+    }
+}

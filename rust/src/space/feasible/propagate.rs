@@ -1,0 +1,445 @@
+//! The constraint-propagation pass: intersect the divisor lattices with the
+//! hardware's capacity constraints to yield, level by level, the admissible
+//! factor set of every dimension — and construct mappings that are valid
+//! **by construction** instead of by rejection.
+//!
+//! # The minimal-completion invariant
+//!
+//! The pass walks the split levels inner-to-outer (local, spatial-X,
+//! spatial-Y, GLB; DRAM absorbs the leftover and is unconstrained) and
+//! maintains one invariant: *completing every still-unchosen factor with its
+//! minimal value (the dataflow-pinned local on H11/H12 axes, 1 everywhere
+//! else) yields a mapping that passes every constraint of
+//! [`crate::model::validity::check_mapping`]*. A candidate factor is
+//! admissible iff the invariant survives it, which is decided by evaluating
+//! the real footprint/replication arithmetic of `model::nest` on the partial
+//! state — no approximation. The minimal value itself is always admissible,
+//! so once the pass starts it cannot dead-end, and the final state (where
+//! "minimal completion" is the state itself) is valid outright.
+//!
+//! # Exactness of the start check
+//!
+//! [`Propagator::space_check`] classifies the space before any choice:
+//!
+//! * local-buffer overflow of the minimal tile is a *proof* of emptiness —
+//!   every valid mapping's local tile dominates the minimal tile pointwise
+//!   and the footprints are monotone ([`SpaceCheck::ProvablyEmpty`]);
+//! * a GLB-witness failure of the minimal tile is **not** a proof: spreading
+//!   spatial loops can lower bank replication faster than it grows the
+//!   (halo-overlapped) footprints, so such spaces degrade to the rejection-
+//!   sampling fallback instead ([`SpaceCheck::GlbTight`]). The same
+//!   non-monotonicity is why a perturbation reset re-checks its start state.
+#![deny(clippy::style)]
+
+use crate::model::arch::{HwConfig, Resources};
+use crate::model::energy::effective_glb_capacity;
+use crate::model::mapping::Split;
+use crate::model::nest::footprint;
+use crate::model::workload::{DataSpace, Dim, Layer, DATASPACES, DIMS};
+use crate::space::feasible::lattice::DimLattice;
+
+/// What the propagation start check concluded about a (layer, hardware)
+/// mapping space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpaceCheck {
+    /// The minimal completion is valid: construction always succeeds.
+    Constructive,
+    /// The minimal tile overflows a PE-local sub-buffer: *no* valid mapping
+    /// exists (exact — footprints are monotone in the tile extents).
+    ProvablyEmpty,
+    /// Only the GLB witness fails at the minimal completion. Spatial
+    /// spreading could still admit mappings (replication is not monotone),
+    /// so callers fall back to cross-checked rejection sampling.
+    GlbTight,
+}
+
+/// Which split level a constructive decision fills, inner to outer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Slot {
+    Local,
+    SpatialX,
+    SpatialY,
+    Glb,
+}
+
+pub(crate) const SLOTS: [Slot; 4] = [Slot::Local, Slot::SpatialX, Slot::SpatialY, Slot::Glb];
+
+/// Partial split assignment during propagation. Unchosen entries sit at
+/// their minimal value, so the struct *is* the minimal completion at every
+/// point of the pass.
+#[derive(Clone, Debug)]
+pub(crate) struct Partial {
+    local: [u64; 6],
+    sx: [u64; 6],
+    sy: [u64; 6],
+    glb: [u64; 6],
+}
+
+impl Partial {
+    fn minimal(lats: &[DimLattice; 6]) -> Self {
+        Partial {
+            local: std::array::from_fn(|i| lats[i].min_local()),
+            sx: [1; 6],
+            sy: [1; 6],
+            glb: [1; 6],
+        }
+    }
+
+    fn from_splits(splits: &[Split; 6]) -> Self {
+        Partial {
+            local: std::array::from_fn(|i| splits[i].local),
+            sx: std::array::from_fn(|i| splits[i].spatial_x),
+            sy: std::array::from_fn(|i| splits[i].spatial_y),
+            glb: std::array::from_fn(|i| splits[i].glb),
+        }
+    }
+
+    fn get(&self, i: usize, slot: Slot) -> u64 {
+        match slot {
+            Slot::Local => self.local[i],
+            Slot::SpatialX => self.sx[i],
+            Slot::SpatialY => self.sy[i],
+            Slot::Glb => self.glb[i],
+        }
+    }
+
+    fn set(&mut self, i: usize, slot: Slot, v: u64) {
+        match slot {
+            Slot::Local => self.local[i] = v,
+            Slot::SpatialX => self.sx[i] = v,
+            Slot::SpatialY => self.sy[i] = v,
+            Slot::Glb => self.glb[i] = v,
+        }
+    }
+
+    /// Tile resident in the GLB under the minimal completion of this state.
+    fn glb_tile(&self) -> [u64; 6] {
+        std::array::from_fn(|i| self.local[i] * self.sx[i] * self.sy[i] * self.glb[i])
+    }
+
+    fn sx_prod(&self) -> u64 {
+        self.sx.iter().product()
+    }
+
+    fn sy_prod(&self) -> u64 {
+        self.sy.iter().product()
+    }
+}
+
+/// The propagation engine for one (layer, hardware, resources) triple.
+pub(crate) struct Propagator<'a> {
+    pub(crate) layer: &'a Layer,
+    pub(crate) hw: &'a HwConfig,
+    pub(crate) res: &'a Resources,
+    pub(crate) lattices: &'a [DimLattice; 6],
+}
+
+impl Propagator<'_> {
+    fn local_caps_ok(&self, p: &Partial) -> bool {
+        let stride = self.layer.stride;
+        footprint(DataSpace::Inputs, &p.local, stride) <= self.hw.lb_inputs
+            && footprint(DataSpace::Weights, &p.local, stride) <= self.hw.lb_weights
+            && footprint(DataSpace::Outputs, &p.local, stride) <= self.hw.lb_outputs
+    }
+
+    /// Bank replication of a dataspace under the partial spatial assignment
+    /// (same arithmetic as `model::nest::replication`, evaluated on the
+    /// partial state instead of a finished `Mapping`).
+    fn replication(&self, p: &Partial, ds: DataSpace) -> f64 {
+        let mut rel_x = 1u64;
+        let mut rel_y = 1u64;
+        for d in DIMS {
+            if ds.relevant(d) {
+                rel_x *= p.sx[d.index()];
+                rel_y *= p.sy[d.index()];
+            }
+        }
+        let rx = (self.hw.gb_mesh_x as f64 / rel_x.min(self.hw.gb_mesh_x) as f64).max(1.0);
+        let ry = (self.hw.gb_mesh_y as f64 / rel_y.min(self.hw.gb_mesh_y) as f64).max(1.0);
+        rx * ry
+    }
+
+    /// Exact GLB-capacity check of the minimal completion of `p`.
+    fn glb_witness_ok(&self, p: &Partial) -> bool {
+        let tile = p.glb_tile();
+        let stride = self.layer.stride;
+        let used: f64 = DATASPACES
+            .iter()
+            .map(|&ds| footprint(ds, &tile, stride) as f64 * self.replication(p, ds))
+            .sum();
+        used <= effective_glb_capacity(self.hw, self.res)
+    }
+
+    fn state_ok(&self, p: &Partial) -> bool {
+        self.local_caps_ok(p)
+            && p.sx_prod() <= self.hw.pe_mesh_x
+            && p.sy_prod() <= self.hw.pe_mesh_y
+            && self.glb_witness_ok(p)
+    }
+
+    /// Classify the space from its minimal completion (see module doc).
+    pub(crate) fn space_check(&self) -> SpaceCheck {
+        let p = Partial::minimal(self.lattices);
+        if !self.local_caps_ok(&p) {
+            return SpaceCheck::ProvablyEmpty;
+        }
+        if !self.glb_witness_ok(&p) {
+            return SpaceCheck::GlbTight;
+        }
+        SpaceCheck::Constructive
+    }
+
+    /// Admissible factor values for `(d, slot)` under the current partial
+    /// state: divisors of the dimension's remaining extent that keep the
+    /// minimal-completion invariant. Never empty while the invariant holds
+    /// (the minimal value re-passes its own check).
+    fn admissible(&self, p: &mut Partial, d: Dim, slot: Slot) -> Vec<u64> {
+        let i = d.index();
+        let lat = &self.lattices[i];
+        let rem = match slot {
+            Slot::Local => lat.size,
+            Slot::SpatialX => lat.size / p.local[i],
+            Slot::SpatialY => lat.size / (p.local[i] * p.sx[i]),
+            Slot::Glb => lat.size / (p.local[i] * p.sx[i] * p.sy[i]),
+        };
+        let saved = p.get(i, slot);
+        let mut adm = Vec::new();
+        for v in lat.divisors_of(rem) {
+            p.set(i, slot, v);
+            let ok = match slot {
+                Slot::Local => self.local_caps_ok(p) && self.glb_witness_ok(p),
+                Slot::SpatialX => p.sx_prod() <= self.hw.pe_mesh_x && self.glb_witness_ok(p),
+                Slot::SpatialY => p.sy_prod() <= self.hw.pe_mesh_y && self.glb_witness_ok(p),
+                Slot::Glb => self.glb_witness_ok(p),
+            };
+            if ok {
+                adm.push(v);
+            }
+        }
+        p.set(i, slot, saved);
+        adm
+    }
+
+    fn finish(&self, p: &Partial) -> [Split; 6] {
+        std::array::from_fn(|i| {
+            let inner = p.local[i] * p.sx[i] * p.sy[i] * p.glb[i];
+            Split {
+                dram: self.lattices[i].size / inner,
+                glb: p.glb[i],
+                spatial_x: p.sx[i],
+                spatial_y: p.sy[i],
+                local: p.local[i],
+            }
+        })
+    }
+
+    /// One full constructive pass: visit the dims of each level in the given
+    /// order and let `choose` pick from every admissible set. Returns `None`
+    /// only when the space is not [`SpaceCheck::Constructive`] — hot-path
+    /// callers gate on a *cached* [`Propagator::space_check`] verdict
+    /// instead of paying it per sample; a non-constructive space that slips
+    /// through surfaces as an empty admissible set at the first decision
+    /// (every candidate fails the same witness the start check evaluates).
+    pub(crate) fn construct(
+        &self,
+        orders: &[[Dim; 6]; 4],
+        mut choose: impl FnMut(Dim, Slot, &[u64]) -> u64,
+    ) -> Option<[Split; 6]> {
+        let mut p = Partial::minimal(self.lattices);
+        for (li, slot) in SLOTS.into_iter().enumerate() {
+            for &d in &orders[li] {
+                let i = d.index();
+                if slot == Slot::Local && self.lattices[i].pinned_local.is_some() {
+                    continue; // forced by the dataflow; already in the state
+                }
+                let adm = self.admissible(&mut p, d, slot);
+                if adm.is_empty() {
+                    // non-constructive space (or a lost invariant): bail
+                    return None;
+                }
+                let v = choose(d, slot, &adm);
+                debug_assert!(adm.contains(&v), "chooser left the admissible set");
+                p.set(i, slot, v);
+            }
+        }
+        Some(self.finish(&p))
+    }
+
+    /// Re-derive one dimension of a *feasible* base split in place: reset it
+    /// to its minimal values, verify the reset state is still valid (tile
+    /// shrinkage can raise bank replication — see module doc), then re-run
+    /// the per-level choices for that dimension alone. Returns `None` when
+    /// the reset state fails, in which case the caller should fall back to
+    /// an always-safe move.
+    pub(crate) fn resplit(
+        &self,
+        base: &[Split; 6],
+        d: Dim,
+        mut choose: impl FnMut(Dim, Slot, &[u64]) -> u64,
+    ) -> Option<[Split; 6]> {
+        let mut p = Partial::from_splits(base);
+        let i = d.index();
+        p.local[i] = self.lattices[i].min_local();
+        p.sx[i] = 1;
+        p.sy[i] = 1;
+        p.glb[i] = 1;
+        if !self.state_ok(&p) {
+            return None;
+        }
+        for slot in SLOTS {
+            if slot == Slot::Local && self.lattices[i].pinned_local.is_some() {
+                continue;
+            }
+            let adm = self.admissible(&mut p, d, slot);
+            if adm.is_empty() {
+                return None;
+            }
+            let v = choose(d, slot, &adm);
+            p.set(i, slot, v);
+        }
+        Some(self.finish(&p))
+    }
+}
+
+/// The admissible value closest to `target` in log space; ties go to the
+/// smaller value (the sets are ascending). Used by the nearest-feasible
+/// projection.
+pub(crate) fn nearest_in_log(adm: &[u64], target: u64) -> u64 {
+    debug_assert!(!adm.is_empty());
+    let lt = (target.max(1) as f64).ln();
+    let mut best = adm[0];
+    let mut best_dist = f64::INFINITY;
+    for &v in adm {
+        let dist = ((v as f64).ln() - lt).abs();
+        if dist + 1e-12 < best_dist {
+            best = v;
+            best_dist = dist;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::DataflowOpt;
+    use crate::model::mapping::Mapping;
+    use crate::model::validity::check_mapping;
+    use crate::util::rng::Rng;
+
+    fn hw() -> HwConfig {
+        HwConfig {
+            pe_mesh_x: 14,
+            pe_mesh_y: 12,
+            lb_inputs: 12,
+            lb_weights: 192,
+            lb_outputs: 16,
+            gb_instances: 2,
+            gb_mesh_x: 2,
+            gb_mesh_y: 1,
+            gb_block: 4,
+            gb_cluster: 2,
+            df_filter_w: DataflowOpt::FullAtPe,
+            df_filter_h: DataflowOpt::Streamed,
+        }
+    }
+
+    fn layer() -> Layer {
+        Layer::conv("t", 3, 3, 8, 8, 16, 32, 1)
+    }
+
+    fn lattices(layer: &Layer, hw: &HwConfig) -> [DimLattice; 6] {
+        std::array::from_fn(|i| DimLattice::new(DIMS[i], layer, hw.dataflow_for(DIMS[i])))
+    }
+
+    #[test]
+    fn constructed_splits_pass_the_full_validator() {
+        let (l, h, res) = (layer(), hw(), Resources::eyeriss_168());
+        let lats = lattices(&l, &h);
+        let prop = Propagator { layer: &l, hw: &h, res: &res, lattices: &lats };
+        assert_eq!(prop.space_check(), SpaceCheck::Constructive);
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..300 {
+            let mut order = DIMS;
+            let orders: [[Dim; 6]; 4] = std::array::from_fn(|_| {
+                rng.shuffle(&mut order);
+                order
+            });
+            let splits = prop
+                .construct(&orders, |_, _, adm| *rng.choose(adm))
+                .expect("constructive space");
+            let m = Mapping { splits, order_local: DIMS, order_glb: DIMS, order_dram: DIMS };
+            assert_eq!(check_mapping(&l, &h, &res, &m), Ok(()));
+        }
+    }
+
+    #[test]
+    fn construction_explores_beyond_the_minimal_mapping() {
+        let (l, h, res) = (layer(), hw(), Resources::eyeriss_168());
+        let lats = lattices(&l, &h);
+        let prop = Propagator { layer: &l, hw: &h, res: &res, lattices: &lats };
+        let mut rng = Rng::seed_from_u64(2);
+        let mut distinct = std::collections::HashSet::new();
+        let mut spatial_used = 0u64;
+        for _ in 0..200 {
+            let orders = [DIMS; 4];
+            let splits = prop.construct(&orders, |_, _, adm| *rng.choose(adm)).unwrap();
+            let spatial: u64 = splits.iter().map(|s| s.spatial_x * s.spatial_y).product();
+            spatial_used = spatial_used.max(spatial);
+            distinct.insert(splits);
+        }
+        assert!(distinct.len() > 50, "only {} distinct splits", distinct.len());
+        assert!(spatial_used > 1, "sampler never used the PE array");
+    }
+
+    #[test]
+    fn pinned_overflow_is_provably_empty() {
+        // FullAtPe on both filter axes with an 8-word weight buffer: the
+        // forced 3x3 local weight tile cannot fit — no mapping exists.
+        let l = layer();
+        let mut h = hw();
+        h.df_filter_h = DataflowOpt::FullAtPe;
+        h.lb_weights = 8;
+        let lats = lattices(&l, &h);
+        let prop =
+            Propagator { layer: &l, hw: &h, res: &Resources::eyeriss_168(), lattices: &lats };
+        assert_eq!(prop.space_check(), SpaceCheck::ProvablyEmpty);
+        assert!(prop.construct(&[DIMS; 4], |_, _, adm| adm[0]).is_none());
+    }
+
+    #[test]
+    fn resplit_preserves_validity_for_every_dim() {
+        let (l, h, res) = (layer(), hw(), Resources::eyeriss_168());
+        let lats = lattices(&l, &h);
+        let prop = Propagator { layer: &l, hw: &h, res: &res, lattices: &lats };
+        let mut rng = Rng::seed_from_u64(3);
+        let base = prop.construct(&[DIMS; 4], |_, _, adm| *rng.choose(adm)).unwrap();
+        for d in DIMS {
+            for _ in 0..40 {
+                let Some(splits) = prop.resplit(&base, d, |_, _, adm| *rng.choose(adm))
+                else {
+                    continue; // legal: the reset state may raise replication
+                };
+                let m = Mapping { splits, order_local: DIMS, order_glb: DIMS, order_dram: DIMS };
+                assert_eq!(check_mapping(&l, &h, &res, &m), Ok(()), "resplit of {d:?}");
+                // only dimension d moved
+                for e in DIMS {
+                    if e != d {
+                        assert_eq!(splits[e.index()], base[e.index()]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_in_log_prefers_geometric_closeness() {
+        assert_eq!(nearest_in_log(&[1, 2, 4, 8, 16], 5), 4);
+        assert_eq!(nearest_in_log(&[1, 2, 4, 8, 16], 6), 8);
+        // exact hit
+        assert_eq!(nearest_in_log(&[1, 3, 9], 3), 3);
+        // ties go to the smaller value: 2 vs 8 around ln(4)
+        assert_eq!(nearest_in_log(&[2, 8], 4), 2);
+        assert_eq!(nearest_in_log(&[1], 1000), 1);
+    }
+}

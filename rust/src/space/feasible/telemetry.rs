@@ -1,0 +1,159 @@
+//! Process-global feasibility-engine telemetry: monotone counters recording
+//! how candidates were obtained — constructed feasibly, perturbed in place,
+//! projected from an infeasible point, or recovered through the rejection-
+//! sampling fallback — plus infeasible-space detections.
+//!
+//! The samplers are called from free functions without a `Metrics` handle
+//! (the same situation as `crate::surrogate::telemetry`), so the counters
+//! live here as statics; `coordinator::metrics` snapshots them at run
+//! boundaries and reports the per-run delta via [`FeasibilityStats::since`].
+#![deny(clippy::style)]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static CONSTRUCTED: AtomicU64 = AtomicU64::new(0);
+static PERTURBATIONS: AtomicU64 = AtomicU64::new(0);
+static PERTURBATION_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+static PROJECTIONS: AtomicU64 = AtomicU64::new(0);
+static PROJECTION_FAILURES: AtomicU64 = AtomicU64::new(0);
+static FALLBACK_SAMPLES: AtomicU64 = AtomicU64::new(0);
+static FALLBACK_DRAWS: AtomicU64 = AtomicU64::new(0);
+static INFEASIBLE_SPACES: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the feasibility counters. All fields are totals since process
+/// start; use [`FeasibilityStats::since`] to attribute movement to one run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FeasibilityStats {
+    /// Candidates generated valid-by-construction (one raw draw each).
+    pub constructed: u64,
+    /// Feasibility-preserving perturbations delivered by the intended move
+    /// mixture (a re-derived dimension, or the deliberate order-swap arm).
+    pub perturbations: u64,
+    /// Perturbations that *degraded* to an order swap: the resplit reset
+    /// was refused, its cross-check failed, or the space admits no
+    /// propagation. Zero on a healthy constructive space.
+    pub perturbation_fallbacks: u64,
+    /// Infeasible points snapped onto a feasible mapping by projection.
+    pub projections: u64,
+    /// Projections that failed because the space admits no construction.
+    pub projection_failures: u64,
+    /// Valid samples that had to come from the rejection-sampling fallback.
+    pub fallback_samples: u64,
+    /// Raw draws burned inside the rejection fallback (exhausted included).
+    pub fallback_draws: u64,
+    /// Spaces detected as unsampleable (provably empty, or the fallback
+    /// exhausted its draw budget) — the paper's unknown-constraint signal.
+    pub infeasible_spaces: u64,
+}
+
+impl FeasibilityStats {
+    /// Counter movement since an earlier snapshot.
+    pub fn since(&self, earlier: &FeasibilityStats) -> FeasibilityStats {
+        FeasibilityStats {
+            constructed: self.constructed.saturating_sub(earlier.constructed),
+            perturbations: self.perturbations.saturating_sub(earlier.perturbations),
+            perturbation_fallbacks: self
+                .perturbation_fallbacks
+                .saturating_sub(earlier.perturbation_fallbacks),
+            projections: self.projections.saturating_sub(earlier.projections),
+            projection_failures: self
+                .projection_failures
+                .saturating_sub(earlier.projection_failures),
+            fallback_samples: self.fallback_samples.saturating_sub(earlier.fallback_samples),
+            fallback_draws: self.fallback_draws.saturating_sub(earlier.fallback_draws),
+            infeasible_spaces: self.infeasible_spaces.saturating_sub(earlier.infeasible_spaces),
+        }
+    }
+}
+
+/// Read all counters.
+pub fn snapshot() -> FeasibilityStats {
+    FeasibilityStats {
+        constructed: CONSTRUCTED.load(Ordering::Relaxed),
+        perturbations: PERTURBATIONS.load(Ordering::Relaxed),
+        perturbation_fallbacks: PERTURBATION_FALLBACKS.load(Ordering::Relaxed),
+        projections: PROJECTIONS.load(Ordering::Relaxed),
+        projection_failures: PROJECTION_FAILURES.load(Ordering::Relaxed),
+        fallback_samples: FALLBACK_SAMPLES.load(Ordering::Relaxed),
+        fallback_draws: FALLBACK_DRAWS.load(Ordering::Relaxed),
+        infeasible_spaces: INFEASIBLE_SPACES.load(Ordering::Relaxed),
+    }
+}
+
+/// A candidate was generated valid-by-construction.
+pub fn record_constructed() {
+    CONSTRUCTED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A perturbation was delivered by the intended move mixture.
+pub fn record_perturbation() {
+    PERTURBATIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A perturbation *degraded* to the always-safe loop-order swap.
+pub fn record_perturbation_fallback() {
+    PERTURBATION_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// An infeasible point was projected onto a feasible mapping.
+pub fn record_projection() {
+    PROJECTIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A projection failed (no construction exists for the space).
+pub fn record_projection_failure() {
+    PROJECTION_FAILURES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// The rejection fallback produced a valid sample after `draws` raw draws.
+pub fn record_fallback_sample(draws: u64) {
+    FALLBACK_SAMPLES.fetch_add(1, Ordering::Relaxed);
+    FALLBACK_DRAWS.fetch_add(draws, Ordering::Relaxed);
+}
+
+/// The rejection fallback exhausted its budget without a valid sample.
+pub fn record_fallback_exhausted(draws: u64) {
+    FALLBACK_DRAWS.fetch_add(draws, Ordering::Relaxed);
+}
+
+/// A space was detected as unsampleable.
+pub fn record_infeasible_space() {
+    INFEASIBLE_SPACES.fetch_add(1, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_monotone_and_attributable() {
+        // Tests run in parallel and the counters are process-global, so
+        // assert on deltas (>=), never on absolute values.
+        let before = snapshot();
+        record_constructed();
+        record_perturbation();
+        record_perturbation_fallback();
+        record_projection();
+        record_projection_failure();
+        record_fallback_sample(42);
+        record_fallback_exhausted(8);
+        record_infeasible_space();
+        let delta = snapshot().since(&before);
+        assert!(delta.constructed >= 1);
+        assert!(delta.perturbations >= 1);
+        assert!(delta.perturbation_fallbacks >= 1);
+        assert!(delta.projections >= 1);
+        assert!(delta.projection_failures >= 1);
+        assert!(delta.fallback_samples >= 1);
+        assert!(delta.fallback_draws >= 50);
+        assert!(delta.infeasible_spaces >= 1);
+    }
+
+    #[test]
+    fn since_saturates() {
+        let a = FeasibilityStats { constructed: 5, ..FeasibilityStats::default() };
+        let b = FeasibilityStats { constructed: 9, ..FeasibilityStats::default() };
+        assert_eq!(b.since(&a).constructed, 4);
+        assert_eq!(a.since(&b).constructed, 0);
+    }
+}

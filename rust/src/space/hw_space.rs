@@ -1,11 +1,18 @@
 //! Hardware design-space sampling (H1-H12, paper Fig. 6) under the known
-//! input constraints of Fig. 7. The sampler draws uniformly over the
-//! parameterization and rejects violations; `sample_valid` retries until a
-//! configuration passes all *known* constraints (the unknown mapping-
-//! existence constraint is discovered later by the software search).
+//! input constraints of Fig. 7. Since the feasibility engine landed,
+//! `sample_valid` is constructive: every Fig. 7 constraint is satisfiable by
+//! construction (mesh pairs are factor pairs, the local-buffer partition is
+//! a positive composition of the budget, GLB meshes are divisor picks), so
+//! a valid configuration costs exactly one draw — and a budget that cannot
+//! satisfy them at all is *proved* empty up front instead of spinning the
+//! old rejection loop forever. The uniform-with-rejection path survives as
+//! `sample_valid_rejection`, the baseline the `feasible_sampling` bench
+//! measures against. The unknown mapping-existence constraint is still
+//! discovered later by the software search.
 
 use crate::model::arch::{DataflowOpt, HwConfig, Resources};
 use crate::space::factors::{divisors, factor_pairs};
+use crate::space::feasible::telemetry as feastel;
 use crate::util::rng::Rng;
 
 /// The hardware design space for a fixed resource budget.
@@ -72,10 +79,79 @@ impl HwSpace {
         }
     }
 
-    /// Rejection-sample until the known constraints pass. Returns the config
-    /// and the number of raw draws it took (used to report the feasibility
-    /// ratio, cf. the paper's ~90% invalid observation).
+    /// One configuration that is valid by construction: every Fig. 7
+    /// constraint is enforced while drawing, so no rejection is needed.
+    /// `None` only when the budget is degenerate (fewer than 3 local-buffer
+    /// words cannot hold three non-empty sub-buffers, or zero PEs) — which
+    /// is a *proof* that no valid configuration exists at all.
+    pub fn sample_feasible(&self, rng: &mut Rng) -> Option<HwConfig> {
+        let res = &self.resources;
+        if res.num_pes == 0 {
+            return None;
+        }
+        // H1/H2: any factor pair multiplies out to #PEs.
+        let pairs = factor_pairs(res.num_pes);
+        let &(pe_mesh_x, pe_mesh_y) = rng.choose(&pairs);
+
+        // H3-H5: a positive composition of the budget.
+        let (lb_inputs, lb_weights, lb_outputs) =
+            positive_partition(rng, res.local_buffer_entries)?;
+
+        // H6-H8: divisors of the mesh always align.
+        let gb_mesh_x = *rng.choose(&divisors(pe_mesh_x));
+        let gb_mesh_y = *rng.choose(&divisors(pe_mesh_y));
+
+        // H9/H10: factors of 16 by enumeration.
+        let geo = [1u64, 2, 4, 8, 16];
+        let df = |rng: &mut Rng| {
+            if rng.chance(0.5) {
+                DataflowOpt::FullAtPe
+            } else {
+                DataflowOpt::Streamed
+            }
+        };
+        Some(HwConfig {
+            pe_mesh_x,
+            pe_mesh_y,
+            lb_inputs,
+            lb_weights,
+            lb_outputs,
+            gb_instances: gb_mesh_x * gb_mesh_y,
+            gb_mesh_x,
+            gb_mesh_y,
+            gb_block: *rng.choose(&geo),
+            gb_cluster: *rng.choose(&geo),
+            df_filter_w: df(rng),
+            df_filter_h: df(rng),
+        })
+    }
+
+    /// One valid configuration and the raw draws it cost — always exactly
+    /// one, by construction. A budget that [`HwSpace::sample_feasible`]
+    /// proves empty panics with a diagnosable message: the pre-engine
+    /// behavior was an *infinite* rejection loop (every raw draw fails
+    /// `HwConfig::check`), and no caller can make progress without
+    /// configurations, so this follows the repo's `Rng::below(0)`
+    /// empty-pool-upstream philosophy.
     pub fn sample_valid(&self, rng: &mut Rng) -> (HwConfig, u64) {
+        if let Some(cfg) = self.sample_feasible(rng) {
+            debug_assert_eq!(cfg.check(&self.resources), Ok(()));
+            feastel::record_constructed();
+            return (cfg, 1);
+        }
+        feastel::record_infeasible_space();
+        panic!(
+            "HwSpace::sample_valid: budget (num_pes={}, local_buffer_entries={}) \
+             admits no valid configuration",
+            self.resources.num_pes, self.resources.local_buffer_entries
+        );
+    }
+
+    /// The pre-engine path: rejection-sample until the known constraints
+    /// pass. Returns the config and the number of raw draws it took (cf.
+    /// the paper's ~90% invalid observation); kept as the constructive
+    /// sampler's fallback and the bench baseline.
+    pub fn sample_valid_rejection(&self, rng: &mut Rng) -> (HwConfig, u64) {
         let mut draws = 0;
         loop {
             draws += 1;
@@ -84,6 +160,58 @@ impl HwSpace {
                 return (cfg, draws);
             }
         }
+    }
+
+    /// Feasibility-preserving mutation: like [`HwSpace::perturb`] but every
+    /// move keeps the Fig. 7 constraints intact (the buffer re-partition
+    /// stays a positive composition; mesh moves re-align the GLB), so a
+    /// valid base yields a valid neighbor without re-checking.
+    pub fn perturb_feasible(&self, rng: &mut Rng, base: &HwConfig) -> HwConfig {
+        let mut cfg = base.clone();
+        match rng.below(5) {
+            0 => {
+                let pairs = factor_pairs(self.resources.num_pes);
+                let &(x, y) = rng.choose(&pairs);
+                cfg.pe_mesh_x = x;
+                cfg.pe_mesh_y = y;
+                if cfg.pe_mesh_x % cfg.gb_mesh_x != 0 || cfg.pe_mesh_y % cfg.gb_mesh_y != 0 {
+                    cfg.gb_mesh_x = 1;
+                    cfg.gb_mesh_y = 1;
+                    cfg.gb_instances = 1;
+                }
+            }
+            1 => {
+                if let Some((i, w, o)) =
+                    positive_partition(rng, self.resources.local_buffer_entries)
+                {
+                    cfg.lb_inputs = i;
+                    cfg.lb_weights = w;
+                    cfg.lb_outputs = o;
+                }
+            }
+            2 => {
+                cfg.gb_mesh_x = *rng.choose(&divisors(cfg.pe_mesh_x));
+                cfg.gb_mesh_y = *rng.choose(&divisors(cfg.pe_mesh_y));
+                cfg.gb_instances = cfg.gb_mesh_x * cfg.gb_mesh_y;
+            }
+            3 => {
+                let geo = [1u64, 2, 4, 8, 16];
+                cfg.gb_block = *rng.choose(&geo);
+                cfg.gb_cluster = *rng.choose(&geo);
+            }
+            _ => {
+                if rng.chance(0.5) {
+                    cfg.df_filter_w = flip(cfg.df_filter_w);
+                } else {
+                    cfg.df_filter_h = flip(cfg.df_filter_h);
+                }
+            }
+        }
+        debug_assert!(
+            base.check(&self.resources).is_err() || cfg.check(&self.resources).is_ok(),
+            "feasible perturbation left the known-constraint set"
+        );
+        cfg
     }
 
     /// Mutate one parameter group of a config (used by the relax-and-round
@@ -141,6 +269,24 @@ fn flip(d: DataflowOpt) -> DataflowOpt {
     }
 }
 
+/// A uniformly random composition of `total` into three *positive* parts:
+/// two distinct cut points in `1..total`, drawn with the distinct-pair
+/// shift (second draw over one fewer value, bumped past the first on
+/// collision) that keeps the pair uniform without rejection. `None` when
+/// `total < 3` — three non-empty parts cannot exist.
+fn positive_partition(rng: &mut Rng, total: u64) -> Option<(u64, u64, u64)> {
+    if total < 3 {
+        return None;
+    }
+    let c1 = 1 + rng.below(total as usize - 1) as u64;
+    let mut c2 = 1 + rng.below(total as usize - 2) as u64;
+    if c2 >= c1 {
+        c2 += 1;
+    }
+    let (lo, hi) = if c1 < c2 { (c1, c2) } else { (c2, c1) };
+    Some((lo, hi - lo, total - hi))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,8 +296,57 @@ mod tests {
         let space = HwSpace::new(Resources::eyeriss_168());
         let mut rng = Rng::seed_from_u64(1);
         for _ in 0..200 {
-            let (cfg, _) = space.sample_valid(&mut rng);
+            let (cfg, draws) = space.sample_valid(&mut rng);
             assert_eq!(cfg.check(&space.resources), Ok(()));
+            // constructive: a valid config costs exactly one draw
+            assert_eq!(draws, 1);
+        }
+    }
+
+    #[test]
+    fn constructive_samples_cover_partitions_and_meshes() {
+        let space = HwSpace::new(Resources::eyeriss_168());
+        let mut rng = Rng::seed_from_u64(7);
+        let mut partitions = std::collections::HashSet::new();
+        for _ in 0..300 {
+            let cfg = space.sample_feasible(&mut rng).unwrap();
+            assert_eq!(cfg.check(&space.resources), Ok(()));
+            assert!(cfg.lb_inputs > 0 && cfg.lb_weights > 0 && cfg.lb_outputs > 0);
+            assert_eq!(cfg.local_buffer_used(), space.resources.local_buffer_entries);
+            partitions.insert((cfg.lb_inputs, cfg.lb_weights));
+        }
+        assert!(partitions.len() > 100, "partition diversity: {}", partitions.len());
+    }
+
+    #[test]
+    fn degenerate_budget_is_proved_empty() {
+        let mut res = Resources::eyeriss_168();
+        res.local_buffer_entries = 2; // cannot hold three non-empty buffers
+        let space = HwSpace::new(res);
+        let mut rng = Rng::seed_from_u64(9);
+        assert!(space.sample_feasible(&mut rng).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "admits no valid configuration")]
+    fn sample_valid_fails_fast_on_an_empty_budget() {
+        // The pre-engine behavior was an infinite rejection loop; the
+        // constructive sampler proves emptiness and fails diagnosably.
+        let mut res = Resources::eyeriss_168();
+        res.local_buffer_entries = 2;
+        let space = HwSpace::new(res);
+        let mut rng = Rng::seed_from_u64(10);
+        let _ = space.sample_valid(&mut rng);
+    }
+
+    #[test]
+    fn perturb_feasible_keeps_known_constraints() {
+        let space = HwSpace::new(Resources::eyeriss_168());
+        let mut rng = Rng::seed_from_u64(11);
+        let (mut cur, _) = space.sample_valid(&mut rng);
+        for _ in 0..200 {
+            cur = space.perturb_feasible(&mut rng, &cur);
+            assert_eq!(cur.check(&space.resources), Ok(()));
         }
     }
 
@@ -168,14 +363,16 @@ mod tests {
     }
 
     #[test]
-    fn rejection_rate_is_nontrivial() {
-        // Zero-capacity sub-buffers and misaligned meshes should make a
-        // noticeable fraction of raw draws invalid.
+    fn rejection_baseline_rate_is_nontrivial() {
+        // Zero-capacity sub-buffers and misaligned meshes make a noticeable
+        // fraction of *raw* draws invalid — the cost the constructive
+        // sampler avoids (it pays exactly one draw per config).
         let space = HwSpace::new(Resources::eyeriss_168());
         let mut rng = Rng::seed_from_u64(3);
         let mut draws = 0;
         for _ in 0..100 {
-            let (_, d) = space.sample_valid(&mut rng);
+            let (cfg, d) = space.sample_valid_rejection(&mut rng);
+            assert_eq!(cfg.check(&space.resources), Ok(()));
             draws += d;
         }
         assert!(draws > 100, "some raw draws should be rejected (got {draws})");

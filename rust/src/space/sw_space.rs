@@ -1,15 +1,20 @@
 //! Software mapping space (S1-S9, paper Fig. 8) for a fixed (hardware,
-//! layer) pair. All constraints are known here (Fig. 9), so sampling is
-//! rejection-based exactly as in the paper: draw uniformly over the
-//! parameterization, keep what validates. The paper reports ~22K raw samples
-//! per 150 feasible points (~0.7% feasibility); this space lands in the same
-//! regime (see the feasibility test below and EXPERIMENTS.md).
+//! layer) pair. All constraints are known here (Fig. 9). Since the
+//! feasibility engine landed, valid candidates are generated *by
+//! construction* through the constraint-propagation pass of
+//! [`crate::space::feasible`] (one draw per valid mapping); the paper's
+//! rejection sampling — uniform raw draws over the parameterization, ~22K
+//! per 150 feasible points (~0.7% feasibility) — survives as
+//! [`SwSpace::sample_valid_rejection`], used only as a cross-checked
+//! fallback for the rare GLB-tight spaces where construction cannot start,
+//! and as the baseline the `feasible_sampling` bench measures against.
 
 use crate::model::arch::{DataflowOpt, HwConfig, Resources};
 use crate::model::mapping::{Mapping, Split};
 use crate::model::validity::check_mapping;
 use crate::model::workload::{Dim, Layer, DIMS};
 use crate::space::factors::FactorSplitter;
+use crate::space::feasible::{telemetry as feastel, FeasibleSampler, SpaceCheck};
 use crate::util::rng::Rng;
 
 /// The mapping space for one layer on one hardware configuration.
@@ -21,6 +26,8 @@ pub struct SwSpace {
     /// Per-dimension prime multisets (hot-path: no re-factorization per
     /// draw); for dataflow-pinned dims this splits `size/pinned_local`.
     splitters: [FactorSplitter; 6],
+    /// The constraint-propagating feasible-by-construction generator.
+    feasible: FeasibleSampler,
 }
 
 impl SwSpace {
@@ -34,7 +41,13 @@ impl SwSpace {
             });
             FactorSplitter::new(n / pinned.unwrap_or(1))
         });
-        SwSpace { layer, hw, resources, splitters }
+        let feasible = FeasibleSampler::new(layer.clone(), hw.clone(), resources.clone());
+        SwSpace { layer, hw, resources, splitters, feasible }
+    }
+
+    /// The feasibility engine of this space.
+    pub fn feasible(&self) -> &FeasibleSampler {
+        &self.feasible
     }
 
     /// Uniform draw over the raw parameterization (may be invalid).
@@ -78,11 +91,45 @@ impl SwSpace {
         check_mapping(&self.layer, &self.hw, &self.resources, m).is_ok()
     }
 
-    /// Rejection-sample one valid mapping; returns the raw draw count.
-    /// Gives up after `max_draws`, returning None — this is how the software
-    /// optimizer detects the hardware's unknown-constraint violation ("valid
-    /// mappings cannot be sampled", paper §4.2).
+    /// One valid mapping and the raw draws it cost. Constructive first: the
+    /// feasibility engine emits a valid-by-construction mapping in a single
+    /// draw whenever the propagation pass can start. Otherwise — a provably
+    /// empty space, or the rare GLB-tight corner — it degrades to the
+    /// cross-checked rejection fallback with a `max_draws` budget; `None`
+    /// means no valid mapping was found, which is how the software optimizer
+    /// detects the hardware's unknown-constraint violation ("valid mappings
+    /// cannot be sampled", paper §4.2). Exhaustion never panics.
     pub fn sample_valid(&self, rng: &mut Rng, max_draws: u64) -> Option<(Mapping, u64)> {
+        if let Some(m) = self.feasible.sample(rng) {
+            debug_assert!(self.is_valid(&m), "constructed mapping failed the validator");
+            return Some((m, 1));
+        }
+        if self.feasible.check() == SpaceCheck::ProvablyEmpty {
+            feastel::record_infeasible_space();
+            return None;
+        }
+        match self.sample_valid_rejection(rng, max_draws) {
+            Some((m, draws)) => {
+                feastel::record_fallback_sample(draws);
+                Some((m, draws))
+            }
+            None => {
+                feastel::record_fallback_exhausted(max_draws);
+                feastel::record_infeasible_space();
+                None
+            }
+        }
+    }
+
+    /// The pre-engine path: rejection-sample one valid mapping, returning
+    /// the raw draw count, or `None` after `max_draws`. Kept as the
+    /// feasibility engine's cross-checked fallback and as the baseline the
+    /// `feasible_sampling` bench compares against.
+    pub fn sample_valid_rejection(
+        &self,
+        rng: &mut Rng,
+        max_draws: u64,
+    ) -> Option<(Mapping, u64)> {
         for draws in 1..=max_draws {
             let m = self.sample_raw(rng);
             if self.is_valid(&m) {
@@ -90,6 +137,23 @@ impl SwSpace {
             }
         }
         None
+    }
+
+    /// Nearest-feasible projection of an arbitrary (typically rounded and
+    /// invalid) mapping onto this space; `None` when the space admits no
+    /// construction. Deterministic — see [`FeasibleSampler::project`].
+    pub fn project_feasible(&self, target: &Mapping) -> Option<Mapping> {
+        let m = self.feasible.project(target)?;
+        debug_assert!(self.is_valid(&m), "projected mapping failed the validator");
+        Some(m)
+    }
+
+    /// Feasibility-preserving local move (see [`FeasibleSampler::perturb`]):
+    /// the perturbed mapping of a valid base is valid by construction and
+    /// cross-checked against the validator before it is returned; a failed
+    /// cross-check degrades to an always-safe loop-order swap.
+    pub fn perturb_feasible(&self, rng: &mut Rng, base: &Mapping) -> Mapping {
+        self.feasible.perturb(rng, base)
     }
 
     /// Local move for simulated-annealing searchers: re-split one dimension
@@ -162,8 +226,48 @@ mod tests {
             let sp = space(name);
             let mut rng = Rng::seed_from_u64(42);
             let got = sp.sample_valid(&mut rng, 2_000_000);
-            assert!(got.is_some(), "no valid mapping sampled for {name}");
+            let (m, draws) = got.expect("no valid mapping sampled");
+            // all paper layers are constructive: one draw per valid mapping
+            assert_eq!(draws, 1, "{name} fell back to rejection sampling");
+            assert!(sp.is_valid(&m), "{name} produced an invalid construction");
         }
+    }
+
+    #[test]
+    fn rejection_fallback_still_samples_the_same_spaces() {
+        let sp = space("DQN-K2");
+        let mut rng = Rng::seed_from_u64(42);
+        let (m, draws) = sp.sample_valid_rejection(&mut rng, 2_000_000).unwrap();
+        assert!(sp.is_valid(&m));
+        assert!(draws >= 1);
+    }
+
+    #[test]
+    fn perturb_feasible_preserves_validity() {
+        let sp = space("DQN-K1");
+        let mut rng = Rng::seed_from_u64(6);
+        let (mut cur, _) = sp.sample_valid(&mut rng, 1_000_000).unwrap();
+        for _ in 0..200 {
+            cur = sp.perturb_feasible(&mut rng, &cur);
+            assert!(sp.is_valid(&cur), "perturb_feasible left the feasible set");
+        }
+    }
+
+    #[test]
+    fn projection_repairs_invalid_raw_draws() {
+        let sp = space("ResNet-K2");
+        let mut rng = Rng::seed_from_u64(8);
+        let mut repaired = 0;
+        for _ in 0..50 {
+            let raw = sp.sample_raw(&mut rng);
+            if sp.is_valid(&raw) {
+                continue;
+            }
+            let p = sp.project_feasible(&raw).expect("constructive space");
+            assert!(sp.is_valid(&p));
+            repaired += 1;
+        }
+        assert!(repaired > 10, "raw draws should mostly be invalid (got {repaired})");
     }
 
     #[test]

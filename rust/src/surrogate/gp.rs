@@ -90,6 +90,15 @@ pub enum FitStatus {
     Degraded,
 }
 
+/// Cold hyperparameter grid: candidates drawn log-uniform over the full
+/// global ranges (capped by the AOT NLL batch size).
+const FULL_GRID: usize = 24;
+/// Warm-start grid: candidates jittered locally around the incumbent theta.
+const WARM_GRID: usize = 12;
+/// Half-width of the warm grid in log space: each hyperparameter moves by
+/// at most this factor (×/÷) from the incumbent per scheduled refit.
+const WARM_SPAN: f64 = 4.0;
+
 /// Which kind of full refit to record in telemetry.
 #[derive(Clone, Copy)]
 enum RefitKind {
@@ -124,6 +133,10 @@ pub struct GpSurrogate {
     /// been consumed (including rejected ones, which never enter `x`) —
     /// the `sync_data` high-water mark.
     synced: usize,
+    /// Whether a hyperparameter search has ever succeeded: once true,
+    /// scheduled refits warm-start from the incumbent theta with a shrunk
+    /// local grid instead of re-searching the full global grid.
+    has_hyper_fit: bool,
 }
 
 impl GpSurrogate {
@@ -146,6 +159,7 @@ impl GpSurrogate {
             native: None,
             status: FitStatus::Insufficient,
             synced: 0,
+            has_hyper_fit: false,
         }
     }
 
@@ -160,6 +174,12 @@ impl GpSurrogate {
     /// Outcome of the most recent fit/update.
     pub fn fit_status(&self) -> FitStatus {
         self.status
+    }
+
+    /// Whether a hyperparameter search has ever succeeded (scheduled refits
+    /// then warm-start from the incumbent theta).
+    pub fn warm_started(&self) -> bool {
+        self.has_hyper_fit
     }
 
     /// Candidate hyperparameter settings for the family (the marginal-
@@ -182,6 +202,43 @@ impl GpSurrogate {
                     w_se: logu(rng, 0.05, 5.0),
                     ell2: logu(rng, 0.1, 50.0),
                     tau2: logu(rng, 1e-3, 0.5),
+                    jitter: 1e-4,
+                },
+            };
+            cands.push(t);
+        }
+        cands
+    }
+
+    /// Warm-start grid (PR-3 follow-up): the incumbent theta plus candidates
+    /// jittered around it in log space (within ×/÷[`WARM_SPAN`]), clamped to
+    /// the same global ranges the cold grid searches. Once a fit has
+    /// succeeded, the optimum drifts slowly between schedules, so a local
+    /// grid of [`WARM_GRID`] points replaces the full [`FULL_GRID`]-point
+    /// search — the saving is recorded as a grid-shrink win in
+    /// `surrogate::telemetry`. The incumbent is candidate 0 and argmin
+    /// breaks ties toward it, so a warm refit can never do worse (by NLL)
+    /// than keeping the previous hyperparameters.
+    fn theta_candidates_warm(&self, rng: &mut Rng, count: usize) -> Vec<Theta> {
+        let span = WARM_SPAN.ln();
+        let local = |rng: &mut Rng, center: f64, lo: f64, hi: f64| {
+            (center.clamp(lo, hi) * rng.range_f64(-span, span).exp()).clamp(lo, hi)
+        };
+        let mut cands = vec![self.theta];
+        while cands.len() < count {
+            let t = match self.family {
+                KernelFamily::Linear { noise } => Theta {
+                    w_lin: local(rng, self.theta.w_lin, 0.01, 10.0),
+                    w_se: 0.0,
+                    ell2: 1.0,
+                    tau2: if noise { local(rng, self.theta.tau2, 1e-4, 1.0) } else { 0.0 },
+                    jitter: 1e-4,
+                },
+                KernelFamily::SquaredExp => Theta {
+                    w_lin: 0.0,
+                    w_se: local(rng, self.theta.w_se, 0.05, 5.0),
+                    ell2: local(rng, self.theta.ell2, 0.1, 50.0),
+                    tau2: local(rng, self.theta.tau2, 1e-3, 0.5),
                     jitter: 1e-4,
                 },
             };
@@ -265,9 +322,14 @@ impl GpSurrogate {
         }
     }
 
-    /// Fit on the dataset: standardize targets, then pick the theta with the
-    /// best marginal likelihood among `n_theta` candidates. The scheduled
-    /// O(n^3) path; between schedules use `extend`/`sync_data`.
+    /// Fit on the dataset: standardize targets, then pick the theta with
+    /// the best marginal likelihood over a candidate grid. The first
+    /// successful fit searches the full global grid; later scheduled refits
+    /// *warm-start* — the previous theta becomes the center of a shrunk
+    /// local grid ([`WARM_GRID`] points within ×/÷[`WARM_SPAN`]) instead of
+    /// re-searching [`FULL_GRID`] global candidates, with the saving
+    /// recorded in `surrogate::telemetry`. The scheduled O(n^3) path;
+    /// between schedules use `extend`/`sync_data`.
     pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64], rng: &mut Rng) -> Result<()> {
         if x.len() != y.len() {
             bail!("GpSurrogate::fit: {} inputs vs {} targets", x.len(), y.len());
@@ -280,8 +342,15 @@ impl GpSurrogate {
             return Ok(());
         }
 
-        let n_theta = 24.min(crate::runtime::artifacts::NLL_BATCH);
-        let cands = self.theta_candidates(rng, n_theta);
+        let full_grid = FULL_GRID.min(crate::runtime::artifacts::NLL_BATCH);
+        let cands = if self.has_hyper_fit {
+            let warm_grid = WARM_GRID.min(full_grid);
+            let cands = self.theta_candidates_warm(rng, warm_grid);
+            telemetry::record_warm_refit((full_grid - cands.len()) as u64);
+            cands
+        } else {
+            self.theta_candidates(rng, full_grid)
+        };
         let nlls: Vec<f64> = match &self.backend {
             GpBackend::Aot(handle) => {
                 handle.nll_batch(self.x_f32(), self.y_f32(), cands.clone())?
@@ -303,6 +372,9 @@ impl GpSurrogate {
         self.theta = cands[best];
 
         self.refit_backend(RefitKind::Hyper);
+        if matches!(self.status, FitStatus::Fitted { .. }) {
+            self.has_hyper_fit = true;
+        }
         Ok(())
     }
 
@@ -696,6 +768,51 @@ mod tests {
         gp.fit_or_sync(&x2, &y2, &mut rng, 25, &mut fit_at);
         assert_eq!(fit_at, 12);
         assert_eq!(gp.fit_status(), FitStatus::Extended);
+    }
+
+    #[test]
+    fn scheduled_refits_warm_start_from_the_previous_theta() {
+        let mut rng = Rng::seed_from_u64(21);
+        let (x, mut y) = linear_data(&mut rng, 60, 8);
+        for v in y.iter_mut() {
+            *v += rng.normal() * 3.0;
+        }
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: true });
+        assert!(!gp.warm_started());
+        gp.fit(&x, &y, &mut rng).unwrap();
+        assert!(gp.warm_started(), "a successful fit must arm the warm start");
+        let cold_theta = gp.theta();
+        // counters are process-global: assert on the delta of *our* refit
+        let before = telemetry::snapshot();
+        gp.fit(&x, &y, &mut rng).unwrap();
+        let delta = telemetry::snapshot().since(&before);
+        assert!(delta.warm_refits >= 1, "second fit must use the shrunk grid");
+        assert!(
+            delta.warm_grid_saved >= (FULL_GRID - WARM_GRID) as u64,
+            "grid-shrink win must be recorded: {delta:?}"
+        );
+        // the warm grid is centered on the incumbent: the re-fitted theta
+        // stays within the local span (and keeps the noisy-data tau2 alive)
+        let warm_theta = gp.theta();
+        assert!(warm_theta.tau2 > 1e-4, "warm refit lost the noise term");
+        let ratio = warm_theta.w_lin / cold_theta.w_lin.max(1e-12);
+        assert!(
+            (1.0 / WARM_SPAN - 1e-9..=WARM_SPAN + 1e-9).contains(&ratio),
+            "warm theta drifted {ratio}x, beyond the local span"
+        );
+        // family structure survives the jitter
+        assert_eq!(warm_theta.w_se, 0.0);
+    }
+
+    #[test]
+    fn insufficient_fit_does_not_arm_the_warm_start() {
+        let mut rng = Rng::seed_from_u64(22);
+        let (x, _) = linear_data(&mut rng, 8, 3);
+        let y = vec![f64::NAN; 8];
+        let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: false });
+        gp.fit(&x, &y, &mut rng).unwrap();
+        assert_eq!(gp.fit_status(), FitStatus::Insufficient);
+        assert!(!gp.warm_started(), "a failed fit must keep the full-grid search");
     }
 
     #[test]

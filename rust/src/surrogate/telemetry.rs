@@ -17,6 +17,8 @@ static EXTENDS: AtomicU64 = AtomicU64::new(0);
 static EXTEND_FALLBACKS: AtomicU64 = AtomicU64::new(0);
 static FIT_FAILURES: AtomicU64 = AtomicU64::new(0);
 static JITTER_ESCALATIONS: AtomicU64 = AtomicU64::new(0);
+static WARM_REFITS: AtomicU64 = AtomicU64::new(0);
+static WARM_GRID_SAVED: AtomicU64 = AtomicU64::new(0);
 
 /// Snapshot of the surrogate counters. All fields are totals since process
 /// start; use [`SurrogateStats::since`] to attribute movement to one run.
@@ -35,6 +37,13 @@ pub struct SurrogateStats {
     pub fit_failures: u64,
     /// Total adaptive-jitter escalation steps across all factorizations.
     pub jitter_escalations: u64,
+    /// Scheduled hyperparameter refits that warm-started: the previous
+    /// theta served as the center of a shrunk local grid instead of
+    /// re-searching the full global grid.
+    pub warm_refits: u64,
+    /// Marginal-likelihood (NLL) evaluations the shrunk grids avoided,
+    /// summed — the grid-shrink win.
+    pub warm_grid_saved: u64,
 }
 
 impl SurrogateStats {
@@ -48,6 +57,8 @@ impl SurrogateStats {
             extend_fallbacks: self.extend_fallbacks.saturating_sub(earlier.extend_fallbacks),
             fit_failures: self.fit_failures.saturating_sub(earlier.fit_failures),
             jitter_escalations: escalations,
+            warm_refits: self.warm_refits.saturating_sub(earlier.warm_refits),
+            warm_grid_saved: self.warm_grid_saved.saturating_sub(earlier.warm_grid_saved),
         }
     }
 }
@@ -61,6 +72,8 @@ pub fn snapshot() -> SurrogateStats {
         extend_fallbacks: EXTEND_FALLBACKS.load(Ordering::Relaxed),
         fit_failures: FIT_FAILURES.load(Ordering::Relaxed),
         jitter_escalations: JITTER_ESCALATIONS.load(Ordering::Relaxed),
+        warm_refits: WARM_REFITS.load(Ordering::Relaxed),
+        warm_grid_saved: WARM_GRID_SAVED.load(Ordering::Relaxed),
     }
 }
 
@@ -91,6 +104,13 @@ pub fn record_fit_failure() {
     FIT_FAILURES.fetch_add(1, Ordering::Relaxed);
 }
 
+/// A scheduled refit warm-started from the previous theta with a shrunk
+/// local grid, avoiding `saved` full-grid NLL evaluations.
+pub fn record_warm_refit(saved: u64) {
+    WARM_REFITS.fetch_add(1, Ordering::Relaxed);
+    WARM_GRID_SAVED.fetch_add(saved, Ordering::Relaxed);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,6 +125,7 @@ mod tests {
         record_extend();
         record_extend_fallback();
         record_fit_failure();
+        record_warm_refit(12);
         let delta = snapshot().since(&before);
         assert!(delta.fits >= 1);
         assert!(delta.data_refits >= 1);
@@ -112,6 +133,8 @@ mod tests {
         assert!(delta.extend_fallbacks >= 1);
         assert!(delta.fit_failures >= 1);
         assert!(delta.jitter_escalations >= 3);
+        assert!(delta.warm_refits >= 1);
+        assert!(delta.warm_grid_saved >= 12);
     }
 
     #[test]

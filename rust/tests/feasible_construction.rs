@@ -1,0 +1,218 @@
+//! Property tests for the feasibility engine (ISSUE 4 acceptance): every
+//! constructed sample and every feasibility-preserving perturbation must
+//! pass `model::validity::check_mapping` across all paper layers × sampled
+//! hardware configurations; projection output must be feasible whenever the
+//! space admits a construction; and the engine must beat rejection sampling
+//! by an order of magnitude in raw draws (the bench enforces the exact bar;
+//! here we check the mechanism end to end through the search loops).
+
+use codesign::model::eval::Evaluator;
+use codesign::model::validity::check_mapping;
+use codesign::model::workload::Layer;
+use codesign::opt::config::BoConfig;
+use codesign::opt::round_bo;
+use codesign::opt::sw_search::SwProblem;
+use codesign::space::feasible::{FeasibleSampler, SpaceCheck};
+use codesign::space::hw_space::HwSpace;
+use codesign::space::sw_space::SwSpace;
+use codesign::util::prop::forall_simple;
+use codesign::util::rng::Rng;
+use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+use codesign::workloads::specs::all_models;
+
+/// Every paper layer paired with the budget it is evaluated on.
+fn paper_layers() -> Vec<(Layer, u64)> {
+    all_models()
+        .into_iter()
+        .flat_map(|m| {
+            let pes = m.num_pes;
+            m.layers.into_iter().map(move |l| (l, pes))
+        })
+        .collect()
+}
+
+#[test]
+fn prop_constructed_samples_pass_check_mapping_on_sampled_hardware() {
+    // layers × sampled hardware configs: every constructed sample validates.
+    let layers = paper_layers();
+    forall_simple(
+        120,
+        0xFEA51B1E,
+        |rng| {
+            let (layer, pes) = layers[rng.below(layers.len())].clone();
+            let res = eyeriss_resources(pes);
+            let (hw, _) = HwSpace::new(res.clone()).sample_valid(rng);
+            let seed = rng.next_u64();
+            (layer, hw, res, seed)
+        },
+        |(layer, hw, res, seed)| {
+            let fs = FeasibleSampler::new(layer.clone(), hw.clone(), res.clone());
+            let mut rng = Rng::seed_from_u64(*seed);
+            for _ in 0..5 {
+                let Some(m) = fs.sample(&mut rng) else {
+                    // the engine must *say* why it cannot construct
+                    if fs.check() == SpaceCheck::Constructive {
+                        return Err(format!("constructive space failed: {}", layer.name));
+                    }
+                    return Ok(()); // provably empty or GLB-tight: allowed
+                };
+                if let Err(e) = check_mapping(layer, hw, res, &m) {
+                    return Err(format!("invalid construction on {}: {e:?}", layer.name));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_perturbations_preserve_feasibility() {
+    let layers = paper_layers();
+    forall_simple(
+        80,
+        0xFEA5F00D,
+        |rng| {
+            let (layer, pes) = layers[rng.below(layers.len())].clone();
+            let res = eyeriss_resources(pes);
+            let (hw, _) = HwSpace::new(res.clone()).sample_valid(rng);
+            let seed = rng.next_u64();
+            (layer, hw, res, seed)
+        },
+        |(layer, hw, res, seed)| {
+            let fs = FeasibleSampler::new(layer.clone(), hw.clone(), res.clone());
+            let mut rng = Rng::seed_from_u64(*seed);
+            let Some(mut cur) = fs.sample(&mut rng) else { return Ok(()) };
+            for step in 0..20 {
+                cur = fs.perturb(&mut rng, &cur);
+                if let Err(e) = check_mapping(layer, hw, res, &cur) {
+                    return Err(format!("perturbation {step} invalid: {e:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_projection_is_feasible_whenever_the_space_is_nonempty() {
+    let layers = paper_layers();
+    forall_simple(
+        80,
+        0xFEA59AB5,
+        |rng| {
+            let (layer, pes) = layers[rng.below(layers.len())].clone();
+            let res = eyeriss_resources(pes);
+            let (hw, _) = HwSpace::new(res.clone()).sample_valid(rng);
+            let seed = rng.next_u64();
+            (layer, hw, res, seed)
+        },
+        |(layer, hw, res, seed)| {
+            let space = SwSpace::new(layer.clone(), hw.clone(), res.clone());
+            let fs = space.feasible();
+            let mut rng = Rng::seed_from_u64(*seed);
+            for _ in 0..5 {
+                // raw draws over the unpropagated parameterization are the
+                // projection's worst-case diet (round-BO feeds it rounded
+                // box points of the same shape)
+                let raw = space.sample_raw(&mut rng);
+                let Some(p) = fs.project(&raw) else {
+                    if fs.check() == SpaceCheck::Constructive {
+                        return Err(format!("projection failed: {}", layer.name));
+                    }
+                    return Ok(());
+                };
+                if let Err(e) = check_mapping(layer, hw, res, &p) {
+                    return Err(format!("projection invalid on {}: {e:?}", layer.name));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hw_constructive_samples_pass_known_constraints() {
+    forall_simple(
+        300,
+        0xFEA5C0DE,
+        |rng| {
+            let res = eyeriss_resources(if rng.chance(0.5) { 168 } else { 256 });
+            let space = HwSpace::new(res.clone());
+            let (cfg, draws) = space.sample_valid(rng);
+            (cfg, res, draws)
+        },
+        |(cfg, res, draws)| {
+            if let Err(e) = cfg.check(res) {
+                return Err(format!("constructed hw invalid: {e:?}"));
+            }
+            if *draws != 1 {
+                return Err(format!("constructive hw must cost 1 draw, not {draws}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn constructive_sampling_beats_rejection_by_10x_on_paper_layers() {
+    // the acceptance bar the bench enforces under time pressure; asserted
+    // here on raw-draw counts alone (deterministic, seed-stable). ResNet
+    // layers sit in the paper's ~0.7%-feasible regime where the win is
+    // largest; DQN-K2 is checked at a conservative >1x floor (its smaller
+    // extents leave rejection less room to waste).
+    for (name, floor) in [("ResNet-K2", 10), ("ResNet-K4", 10), ("DQN-K2", 1)] {
+        let (layer, pes) = paper_layers().into_iter().find(|(l, _)| l.name == name).unwrap();
+        let res = eyeriss_resources(pes);
+        let space = SwSpace::new(layer, eyeriss_hw(pes), res);
+        let n = 50;
+        let mut rng = Rng::seed_from_u64(1);
+        let mut constructive = 0u64;
+        for _ in 0..n {
+            let (m, d) = space.sample_valid(&mut rng, 10_000_000).expect("constructive");
+            assert!(space.is_valid(&m));
+            constructive += d;
+        }
+        assert_eq!(constructive, n, "{name}: construction must cost one draw per sample");
+        let mut rng = Rng::seed_from_u64(1);
+        let mut rejection = 0u64;
+        for _ in 0..n {
+            let (_, d) = space.sample_valid_rejection(&mut rng, 10_000_000).expect("mappable");
+            rejection += d;
+        }
+        assert!(
+            rejection > floor * constructive,
+            "{name}: rejection {rejection} draws vs constructive {constructive} — \
+             the engine must cut raw draws >{floor}x at equal validity"
+        );
+    }
+}
+
+#[test]
+fn round_bo_with_projection_lowers_the_invalid_rate_end_to_end() {
+    // The acceptance criterion driven through the public search API on a
+    // paper layer: projected round-BO strictly beats the penalty-recording
+    // baseline on invalid observations, and the feasibility telemetry that
+    // coordinator::metrics surfaces moves accordingly.
+    let (layer, pes) = paper_layers().into_iter().find(|(l, _)| l.name == "DQN-K2").unwrap();
+    let problem = SwProblem::new(
+        SwSpace::new(layer, eyeriss_hw(pes), eyeriss_resources(pes)),
+        Evaluator::new(eyeriss_resources(pes)),
+    );
+    let run = |project: bool| {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut cfg = BoConfig { warmup: 5, pool: 20, ..BoConfig::software() };
+        cfg.project_rounding = project;
+        let t = round_bo::search(&problem, 30, &cfg, &mut rng);
+        t.evals.iter().filter(|e| e.is_infinite()).count()
+    };
+    let baseline = run(false);
+    let before = codesign::space::feasible::telemetry::snapshot();
+    let projected = run(true);
+    let delta = codesign::space::feasible::telemetry::snapshot().since(&before);
+    assert!(
+        projected < baseline,
+        "projection must strictly lower the invalid rate ({projected} vs {baseline})"
+    );
+    assert!(baseline > 0, "the unprojected baseline must exercise the penalty path");
+    assert!(delta.projections >= 1, "projections must flow through telemetry: {delta:?}");
+}

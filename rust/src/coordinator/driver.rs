@@ -23,7 +23,7 @@ use crate::model::mapping::Mapping;
 use crate::opt::config::NestedConfig;
 use crate::opt::hw_search::{self, Chunking, HwMethod, HwTrace};
 use crate::opt::sw_search::{self, SearchTrace, SwMethod, SwProblem};
-use crate::space::hw_space::HwSpace;
+use crate::space::prune::PrunedHwSpace;
 use crate::space::sw_space::SwSpace;
 use crate::surrogate::gp::GpBackend;
 use crate::util::rng::Rng;
@@ -165,7 +165,10 @@ impl Driver {
         // at a time.)
         let gp_baseline = crate::surrogate::telemetry::snapshot();
         let feas_baseline = crate::space::feasible::telemetry::snapshot();
-        let space = HwSpace::new(eyeriss_resources(model.num_pes));
+        // One pruned space per run, shared by the whole hardware search:
+        // candidate configs are certified against every layer of the target
+        // model and provably-empty ones never reach the simulator.
+        let space = PrunedHwSpace::new(eyeriss_resources(model.num_pes), model.layers.clone());
         let best: Mutex<Option<Checkpoint>> = Mutex::new(None);
         let mut trial = 0usize;
 
@@ -466,6 +469,11 @@ mod tests {
         use std::sync::atomic::Ordering;
         let constructed = out.metrics.feas_constructed.load(Ordering::Relaxed);
         assert!(constructed > 0, "run must record constructed candidates: {report}");
+        // cross-space pruning ran: every sampled hardware config was
+        // certified against both DQN layers before evaluation
+        assert!(report.contains("prune_certificates="), "{report}");
+        let certs = out.metrics.prune_certificates.load(Ordering::Relaxed);
+        assert!(certs > 0, "run must certify hardware candidates: {report}");
         // and the raw-draw telemetry reflects construction, not rejection:
         // with one draw per candidate the feasibility rate sits near 1
         let rate = out.metrics.feasibility_rate();

@@ -48,6 +48,18 @@ pub struct Metrics {
     pub feas_fallback_samples: AtomicU64,
     pub feas_fallback_draws: AtomicU64,
     pub feas_infeasible_spaces: AtomicU64,
+    /// Search-loop degradations: planned work skipped/truncated because no
+    /// candidate could be sampled (consumer-side; zero on healthy runs).
+    pub feas_degraded_skips: AtomicU64,
+    /// Cross-space pruning snapshot (stored per run via
+    /// `record_feasibility`): per-layer certificates computed, hardware
+    /// points rejected before any simulator evaluation, lattice-derived
+    /// round-BO boxes, and their accumulated box-volume shrink factor in
+    /// thousandths (divide by `1000 * prune_lattice_boxes` for the mean).
+    pub prune_certificates: AtomicU64,
+    pub prune_rejections: AtomicU64,
+    pub prune_lattice_boxes: AtomicU64,
+    pub prune_box_shrink_milli: AtomicU64,
     /// Evaluation-cache snapshot (stored, not accumulated: the cache keeps
     /// its own monotone counters).
     pub cache_hits: AtomicU64,
@@ -88,6 +100,11 @@ impl Metrics {
             feas_fallback_samples: AtomicU64::new(0),
             feas_fallback_draws: AtomicU64::new(0),
             feas_infeasible_spaces: AtomicU64::new(0),
+            feas_degraded_skips: AtomicU64::new(0),
+            prune_certificates: AtomicU64::new(0),
+            prune_rejections: AtomicU64::new(0),
+            prune_lattice_boxes: AtomicU64::new(0),
+            prune_box_shrink_milli: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
@@ -140,6 +157,11 @@ impl Metrics {
         self.feas_fallback_samples.store(stats.fallback_samples, Ordering::Relaxed);
         self.feas_fallback_draws.store(stats.fallback_draws, Ordering::Relaxed);
         self.feas_infeasible_spaces.store(stats.infeasible_spaces, Ordering::Relaxed);
+        self.feas_degraded_skips.store(stats.degraded_skips, Ordering::Relaxed);
+        self.prune_certificates.store(stats.prune_certificates, Ordering::Relaxed);
+        self.prune_rejections.store(stats.prune_rejections, Ordering::Relaxed);
+        self.prune_lattice_boxes.store(stats.lattice_boxes, Ordering::Relaxed);
+        self.prune_box_shrink_milli.store(stats.lattice_box_shrink_milli, Ordering::Relaxed);
     }
 
     /// Fraction of evaluation requests served from the cache.
@@ -181,7 +203,9 @@ impl Metrics {
             "sim_evals={} feasible={} raw_draws={} feasibility_rate={:.5} \
              feas_constructed={} feas_perturbations={} feas_perturbation_fallbacks={} \
              feas_projections={} feas_projection_failures={} feas_fallback_samples={} \
-             feas_fallback_draws={} feas_infeasible_spaces={} \
+             feas_fallback_draws={} feas_infeasible_spaces={} feas_degraded_skips={} \
+             prune_certificates={} prune_rejections={} prune_lattice_boxes={} \
+             prune_box_shrink_milli={} \
              gp_fits={} gp_data_refits={} gp_extends={} gp_extend_fallbacks={} \
              gp_fit_failures={} gp_jitter_escalations={} gp_warm_refits={} \
              gp_warm_grid_saved={} \
@@ -201,6 +225,11 @@ impl Metrics {
             self.feas_fallback_samples.load(Ordering::Relaxed),
             self.feas_fallback_draws.load(Ordering::Relaxed),
             self.feas_infeasible_spaces.load(Ordering::Relaxed),
+            self.feas_degraded_skips.load(Ordering::Relaxed),
+            self.prune_certificates.load(Ordering::Relaxed),
+            self.prune_rejections.load(Ordering::Relaxed),
+            self.prune_lattice_boxes.load(Ordering::Relaxed),
+            self.prune_box_shrink_milli.load(Ordering::Relaxed),
             self.gp_fits.load(Ordering::Relaxed),
             self.gp_data_refits.load(Ordering::Relaxed),
             self.gp_extends.load(Ordering::Relaxed),
@@ -316,6 +345,11 @@ mod tests {
             fallback_samples: 3,
             fallback_draws: 9000,
             infeasible_spaces: 4,
+            degraded_skips: 5,
+            prune_certificates: 640,
+            prune_rejections: 17,
+            lattice_boxes: 6,
+            lattice_box_shrink_milli: 9200,
         });
         let report = m.report();
         assert!(report.contains("feas_constructed=1200"));
@@ -326,5 +360,117 @@ mod tests {
         assert!(report.contains("feas_fallback_samples=3"));
         assert!(report.contains("feas_fallback_draws=9000"));
         assert!(report.contains("feas_infeasible_spaces=4"));
+        assert!(report.contains("feas_degraded_skips=5"));
+        assert!(report.contains("prune_certificates=640"));
+        assert!(report.contains("prune_rejections=17"));
+        assert!(report.contains("prune_lattice_boxes=6"));
+        assert!(report.contains("prune_box_shrink_milli=9200"));
+    }
+
+    /// Parse a `key=value` report line back into a map — the report is the
+    /// serialization format downstream tooling (EXPERIMENTS.md, the CI
+    /// warm-start grep) consumes, so it must stay token-splittable with
+    /// exactly one `=` per token.
+    fn parse_report(report: &str) -> std::collections::HashMap<String, String> {
+        report
+            .split_whitespace()
+            .map(|tok| {
+                let (k, v) = tok.split_once('=').unwrap_or_else(|| {
+                    panic!("report token without '=': {tok:?}")
+                });
+                assert!(!k.is_empty() && !v.is_empty(), "malformed token {tok:?}");
+                (k.to_string(), v.to_string())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn report_round_trips_every_field_through_the_kv_format() {
+        let m = Metrics::new();
+        m.add_trace(&[1.0, f64::INFINITY, 3.0], 7);
+        m.record_cache(CacheStats {
+            hits: 10,
+            misses: 30,
+            evictions: 2,
+            entries: 25,
+            probationary: 20,
+            protected: 5,
+            promotions: 7,
+            demotions: 1,
+            snapshot_loaded: 12,
+            snapshot_hits: 9,
+        });
+        m.record_surrogate(SurrogateStats {
+            fits: 4,
+            data_refits: 2,
+            extends: 40,
+            extend_fallbacks: 1,
+            fit_failures: 3,
+            jitter_escalations: 7,
+            warm_refits: 3,
+            warm_grid_saved: 36,
+        });
+        m.record_feasibility(FeasibilityStats {
+            constructed: 11,
+            perturbations: 12,
+            perturbation_fallbacks: 13,
+            projections: 14,
+            projection_failures: 15,
+            fallback_samples: 16,
+            fallback_draws: 17,
+            infeasible_spaces: 18,
+            degraded_skips: 19,
+            prune_certificates: 20,
+            prune_rejections: 21,
+            lattice_boxes: 22,
+            lattice_box_shrink_milli: 23,
+        });
+        let kv = parse_report(&m.report());
+        // every stored numeric field must survive the round trip verbatim
+        let expect = [
+            ("sim_evals", "3"),
+            ("feasible", "2"),
+            ("raw_draws", "7"),
+            ("feas_constructed", "11"),
+            ("feas_perturbations", "12"),
+            ("feas_perturbation_fallbacks", "13"),
+            ("feas_projections", "14"),
+            ("feas_projection_failures", "15"),
+            ("feas_fallback_samples", "16"),
+            ("feas_fallback_draws", "17"),
+            ("feas_infeasible_spaces", "18"),
+            ("feas_degraded_skips", "19"),
+            ("prune_certificates", "20"),
+            ("prune_rejections", "21"),
+            ("prune_lattice_boxes", "22"),
+            ("prune_box_shrink_milli", "23"),
+            ("gp_fits", "4"),
+            ("gp_data_refits", "2"),
+            ("gp_extends", "40"),
+            ("gp_extend_fallbacks", "1"),
+            ("gp_fit_failures", "3"),
+            ("gp_jitter_escalations", "7"),
+            ("gp_warm_refits", "3"),
+            ("gp_warm_grid_saved", "36"),
+            ("cache_hits", "10"),
+            ("cache_misses", "30"),
+            ("cache_evictions", "2"),
+            ("cache_entries", "25"),
+            ("cache_probationary", "20"),
+            ("cache_protected", "5"),
+            ("cache_promotions", "7"),
+            ("cache_demotions", "1"),
+            ("cache_snapshot_loaded", "12"),
+            ("cache_snapshot_hits", "9"),
+        ];
+        for (k, v) in expect {
+            assert_eq!(kv.get(k).map(String::as_str), Some(v), "field {k}");
+        }
+        // derived fields are present and parse as f64
+        for k in ["feasibility_rate", "cache_hit_rate"] {
+            let v = kv.get(k).unwrap_or_else(|| panic!("missing {k}"));
+            assert!(v.parse::<f64>().is_ok(), "{k}={v} not a number");
+        }
+        assert!(kv.contains_key("elapsed"));
     }
 }

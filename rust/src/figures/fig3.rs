@@ -45,10 +45,12 @@ pub fn run(opts: &FigOpts, layers: &[&str], out_name: &str) -> Result<std::path:
     let repeats = opts.repeats_or(10);
     // Fig. 3 exists to reproduce the paper's baselines, including the
     // relax-and-round pathology: keep round-BO on the penalty-recording
-    // path instead of the feasibility engine's projection (which is the
-    // production default — see `BoConfig::project_rounding`).
+    // path — no nearest-feasible projection and no lattice-derived box
+    // (both are production defaults now; see `BoConfig::project_rounding`
+    // and `BoConfig::lattice_box`).
     let mut cfg = BoConfig::software();
     cfg.project_rounding = false;
+    cfg.lattice_box = false;
 
     let mut csv = Csv::new(&[
         "layer", "method", "repeat", "trial", "best_edp", "norm_recip",

@@ -25,6 +25,14 @@ pub struct BoConfig {
     /// penalty observations. `false` reproduces the paper's
     /// penalty-recording baseline for comparison runs.
     pub project_rounding: bool,
+    /// Round-BO only: derive the relaxation box from the divisor lattices
+    /// (`FeasibleSampler::lattice_ranges`) so each split coordinate spans
+    /// exactly the admissible log-range of its (dim, level) decision and
+    /// every decoded point is feasible by construction — the GP never
+    /// observes an unreachable box point and the invalid-observation rate
+    /// is zero on constructive spaces. `false` keeps the PR-4 behavior
+    /// (free [0,1] box + projection/penalties) for the Fig. 3 baseline.
+    pub lattice_box: bool,
 }
 
 impl BoConfig {
@@ -37,6 +45,7 @@ impl BoConfig {
             acquisition: Acquisition::Lcb(1.0),
             refit_every: 25,
             project_rounding: true,
+            lattice_box: true,
         }
     }
 
@@ -49,6 +58,7 @@ impl BoConfig {
             acquisition: Acquisition::Lcb(1.0),
             refit_every: 5,
             project_rounding: true,
+            lattice_box: true,
         }
     }
 }
@@ -87,5 +97,9 @@ mod tests {
         assert_eq!(c.hw_bo.warmup, 5);
         assert_eq!(c.sw_bo.pool, 150);
         assert_eq!(c.sw_bo.acquisition, Acquisition::Lcb(1.0));
+        // the lattice-derived relaxation box is the production default;
+        // Fig. 3 baselines opt out explicitly
+        assert!(c.sw_bo.lattice_box);
+        assert!(c.sw_bo.project_rounding);
     }
 }

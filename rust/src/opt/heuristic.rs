@@ -5,6 +5,7 @@
 //! learned model, simulator-in-the-loop, same evaluation budget as BO.
 
 use crate::opt::sw_search::{SearchTrace, SwProblem};
+use crate::space::feasible::telemetry as feastel;
 use crate::util::rng::Rng;
 
 /// Fraction of the budget spent on the random sweep (the rest funds greedy
@@ -19,7 +20,12 @@ pub fn search(problem: &SwProblem, trials: usize, rng: &mut Rng) -> SearchTrace 
     // Phase 1: random sweep — independent draws, evaluated as one batch.
     let mut candidates = Vec::with_capacity(sweep);
     for _ in 0..sweep {
-        let Some((m, d)) = problem.space.sample_valid(rng, max_draws) else { break };
+        let Some((m, d)) = problem.space.sample_valid(rng, max_draws) else {
+            // sweep cut short: record the degradation instead of silently
+            // shrinking the random phase
+            feastel::record_degraded_skip();
+            break;
+        };
         trace.raw_draws += d;
         candidates.push(m);
     }

@@ -1,17 +1,22 @@
 //! Hardware configuration search: the outer loop of the nested co-design
 //! (§4.2). Known constraints (Fig. 7) are input constraints satisfied by
 //! construction (`HwSpace::sample_valid` builds valid configs in one draw;
-//! rejection sampling survives only as its fallback); the *unknown*
-//! constraint — "does a findable software mapping exist?" — is learned
-//! online by a GP classifier (output constraint, §3.4), and the objective
-//! GP uses the linear+noise kernel on the Fig. 13 hardware features (noise
-//! because the inner software search is stochastic).
+//! rejection sampling survives only as its fallback); configurations whose
+//! *mapping space* is provably empty for a target layer are rejected before
+//! they ever reach the simulator by the cross-space pruner
+//! (`space::prune::PrunedHwSpace` — construct it once per run and share
+//! it); the remaining *unknown* constraint — "does a findable software
+//! mapping exist?" — is learned online by a GP classifier (output
+//! constraint, §3.4), and the objective GP uses the linear+noise kernel on
+//! the Fig. 13 hardware features (noise because the inner software search
+//! is stochastic).
+#![deny(clippy::style)]
 
 use crate::model::arch::HwConfig;
 use crate::model::batch::AdaptiveChunker;
 use crate::opt::config::BoConfig;
 use crate::space::features::hw_features;
-use crate::space::hw_space::HwSpace;
+use crate::space::prune::PrunedHwSpace;
 use crate::surrogate::acquisition::feasibility_probability;
 use crate::surrogate::gp::{GpBackend, GpSurrogate, KernelFamily};
 use crate::surrogate::rf::{RandomForest, RfConfig};
@@ -168,7 +173,7 @@ impl Default for Chunking<'static> {
 /// wired to its shared evaluation cache.
 pub fn search(
     method: HwMethod,
-    space: &HwSpace,
+    space: &PrunedHwSpace,
     mut inner: impl FnMut(&[HwConfig]) -> Vec<Option<f64>>,
     trials: usize,
     cfg: &BoConfig,
@@ -205,7 +210,7 @@ pub fn search(
         let take = chunking.next_chunk().min(rest.len());
         let (chunk, tail) = rest.split_at(take);
         let edps = inner(chunk);
-        absorb(&mut trace, &mut obs, &space.resources, chunk, edps);
+        absorb(&mut trace, &mut obs, space.resources(), chunk, edps);
         rest = tail;
     }
 
@@ -213,11 +218,13 @@ pub fn search(
         let pick: HwConfig = if obs.xs.len() < 2 {
             space.sample_valid(rng).0
         } else {
-            // feasible-by-construction candidate pool (known constraints)
+            // feasible-by-construction candidate pool (known constraints
+            // satisfied while drawing, provably-empty mapping spaces
+            // certified away before any simulator evaluation)
             let pool: Vec<HwConfig> =
                 (0..cfg.pool).map(|_| space.sample_valid(rng).0).collect();
             let feats: Vec<Vec<f64>> =
-                pool.iter().map(|h| hw_features(h, &space.resources).to_vec()).collect();
+                pool.iter().map(|h| hw_features(h, space.resources()).to_vec()).collect();
             let best = min_ignoring_nan(&obs.ys).unwrap_or(f64::INFINITY);
 
             let obj_post = match method {
@@ -261,7 +268,7 @@ pub fn search(
 
         let picks = [pick];
         let edps = inner(&picks);
-        absorb(&mut trace, &mut obs, &space.resources, &picks, edps);
+        absorb(&mut trace, &mut obs, space.resources(), &picks, edps);
     }
     trace
 }
@@ -294,7 +301,7 @@ mod tests {
 
     #[test]
     fn random_hw_search_runs() {
-        let space = HwSpace::new(Resources::eyeriss_168());
+        let space = PrunedHwSpace::unconstrained(Resources::eyeriss_168());
         let mut rng = Rng::seed_from_u64(1);
         let t = search(
             HwMethod::Random,
@@ -312,7 +319,7 @@ mod tests {
 
     #[test]
     fn bo_hw_search_handles_infeasible_trials() {
-        let space = HwSpace::new(Resources::eyeriss_168());
+        let space = PrunedHwSpace::unconstrained(Resources::eyeriss_168());
         let mut rng = Rng::seed_from_u64(2);
         let t = search(
             HwMethod::Bo,
@@ -332,7 +339,7 @@ mod tests {
 
     #[test]
     fn bo_beats_random_on_synthetic_objective() {
-        let space = HwSpace::new(Resources::eyeriss_168());
+        let space = PrunedHwSpace::unconstrained(Resources::eyeriss_168());
         let mut wins = 0;
         let n = 5;
         for seed in 0..n {
@@ -367,7 +374,7 @@ mod tests {
 
     #[test]
     fn rf_ablation_variant_runs() {
-        let space = HwSpace::new(Resources::eyeriss_168());
+        let space = PrunedHwSpace::unconstrained(Resources::eyeriss_168());
         let mut rng = Rng::seed_from_u64(3);
         let t = search(
             HwMethod::BoRf,
@@ -380,5 +387,34 @@ mod tests {
             &mut rng,
         );
         assert!(t.best_edp.is_finite());
+    }
+
+    #[test]
+    fn pruned_search_never_evaluates_provably_empty_configs() {
+        // With a real target layer set, every configuration that reaches
+        // `inner` (and therefore the trace) must hold a certificate with no
+        // provably-empty layer — the cross-space pruning contract.
+        let space = PrunedHwSpace::new(
+            Resources::eyeriss_168(),
+            crate::workloads::specs::dqn().layers,
+        );
+        let mut rng = Rng::seed_from_u64(5);
+        let t = search(
+            HwMethod::Random,
+            &space,
+            batch_inner,
+            30,
+            &quick_cfg(),
+            &Chunking::default(),
+            &GpBackend::Native,
+            &mut rng,
+        );
+        assert_eq!(t.evals.len(), 30);
+        for hw in &t.configs {
+            assert!(
+                space.certify(hw).admits_all(),
+                "a provably-empty config reached the evaluator: {hw:?}"
+            );
+        }
     }
 }

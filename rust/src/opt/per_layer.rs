@@ -18,7 +18,7 @@ use crate::model::eval::Evaluator;
 use crate::opt::config::NestedConfig;
 use crate::opt::hw_search::{self, Chunking, HwMethod, HwTrace};
 use crate::opt::sw_search::{self, SwMethod, SwProblem};
-use crate::space::hw_space::HwSpace;
+use crate::space::prune::PrunedHwSpace;
 use crate::space::sw_space::SwSpace;
 use crate::surrogate::gp::GpBackend;
 use crate::util::rng::Rng;
@@ -55,7 +55,10 @@ pub fn specialize(
     let mut total = 0.0;
 
     for (li, layer) in model.layers.iter().enumerate() {
-        let space = HwSpace::new(resources.clone());
+        // prune the hardware space against exactly the one layer this
+        // specialized search serves: configs that cannot map it are
+        // certified away before the inner software search ever runs
+        let space = PrunedHwSpace::new(resources.clone(), vec![layer.clone()]);
         let eval = Evaluator::new(resources.clone());
         let base_seed = seed ^ (li as u64 * 7907);
         // Monotone per-evaluation counter so every software search gets its

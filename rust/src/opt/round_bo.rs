@@ -16,12 +16,26 @@
 //! EDPs instead of penalty levels and the invalid-observation rate drops to
 //! ~zero; `project_rounding: false` reproduces the penalty-recording
 //! baseline.
+//!
+//! With `BoConfig::lattice_box` (the default since the cross-space pruner
+//! landed) the box itself is derived from the divisor lattices: each split
+//! coordinate spans the admissible log-range of its (dim, level) decision
+//! ([`crate::space::feasible::FeasibleSampler::lattice_ranges`]), decoding
+//! runs the constraint-propagation pass with the coordinate as a log-space
+//! target ([`crate::space::feasible::FeasibleSampler::construct_targeted`]),
+//! and the observed point is snapped in place onto the decoded mapping's
+//! exact lattice coordinates — so the GP never observes a box point the
+//! lattices cannot reach, and every evaluation is feasible by construction
+//! on constructive spaces. `lattice_box: false` keeps the PR-4 behavior for
+//! the Fig. 3 baseline.
+#![deny(clippy::style)]
 
 use crate::model::mapping::{Mapping, Split};
 use crate::model::workload::{Dim, DIMS};
 use crate::opt::config::BoConfig;
 use crate::opt::sw_search::{SearchTrace, SwProblem};
 use crate::space::factors::prime_factorization;
+use crate::space::feasible::{telemetry as feastel, FactorRange, Slot, SpaceCheck, SLOTS};
 use crate::surrogate::gp::{GpBackend, GpSurrogate, KernelFamily};
 use crate::util::rng::Rng;
 use crate::util::stats::argmax;
@@ -143,6 +157,14 @@ pub fn decode(problem: &SwProblem, point: &[f64]) -> Mapping {
         }
         splits[d.index()] = s;
     }
+    let (order_local, order_glb, order_dram) = orders_from_point(point);
+    Mapping { splits, order_local, order_glb, order_dram }
+}
+
+/// Decode the three loop orders from the 18 sort-key coordinates (shared by
+/// both box parameterizations — the lattice box only changes how splits are
+/// decoded).
+fn orders_from_point(point: &[f64]) -> ([Dim; 6], [Dim; 6], [Dim; 6]) {
     let order_from = |keys: &[f64]| -> [Dim; 6] {
         let mut idx: Vec<usize> = (0..6).collect();
         // total_cmp: a NaN sort key (degraded surrogate upstream) must
@@ -155,12 +177,11 @@ pub fn decode(problem: &SwProblem, point: &[f64]) -> Mapping {
         out
     };
     let base = 30;
-    Mapping {
-        splits,
-        order_local: order_from(&point[base..base + 6]),
-        order_glb: order_from(&point[base + 6..base + 12]),
-        order_dram: order_from(&point[base + 12..base + 18]),
-    }
+    (
+        order_from(&point[base..base + 6]),
+        order_from(&point[base + 6..base + 12]),
+        order_from(&point[base + 12..base + 18]),
+    )
 }
 
 /// Distribute the prime exponents of n over 5 slots proportionally to the
@@ -207,6 +228,99 @@ fn round_point(problem: &SwProblem, cfg: &BoConfig, m: Mapping) -> Mapping {
     m
 }
 
+/// The lattice-box ranges of a problem's space, per (dim, slot) — computed
+/// once per search (they are invariant for a given space) and threaded
+/// through the decode/encode hot path.
+type LatticeRanges = [[FactorRange; 4]; 6];
+
+/// Position of a constructive slot in the `lattice_ranges` inner arrays
+/// (which follow `SLOTS` order).
+fn slot_index(slot: Slot) -> usize {
+    SLOTS.iter().position(|s| *s == slot).unwrap_or(0)
+}
+
+/// Which of the five per-dim share coordinates carries a slot's target
+/// under the lattice box. The raw decode reads shares as
+/// [dram, glb, spatial-x, spatial-y, local]; the lattice decode reuses the
+/// same positions so each coordinate keeps (roughly) its level semantics
+/// across both parameterizations. The DRAM share (offset 0) is the absorbed
+/// leftover of the propagation pass and carries no information.
+fn slot_coord(slot: Slot) -> usize {
+    match slot {
+        Slot::Glb => 1,
+        Slot::SpatialX => 2,
+        Slot::SpatialY => 3,
+        Slot::Local => 4,
+    }
+}
+
+/// Decode a box point under the lattice-derived box: each split coordinate
+/// is mapped onto the admissible log-range of its (dim, slot) decision and
+/// the propagation pass picks the nearest admissible factor, so the result
+/// is feasible by construction. `None` only on non-constructive spaces
+/// (callers then fall back to the raw decode).
+fn decode_lattice(
+    problem: &SwProblem,
+    ranges: &LatticeRanges,
+    point: &[f64],
+) -> Option<Mapping> {
+    debug_assert_eq!(point.len(), BOX_DIM);
+    let splits = problem.space.feasible().construct_targeted(|d, slot| {
+        let r = ranges[d.index()][slot_index(slot)];
+        let u = point[d.index() * 5 + slot_coord(slot)].clamp(0.0, 1.0);
+        r.ln_min() + u * (r.ln_max() - r.ln_min())
+    })?;
+    let (order_local, order_glb, order_dram) = orders_from_point(point);
+    Some(Mapping { splits, order_local, order_glb, order_dram })
+}
+
+/// Snap a box point in place onto the exact lattice coordinates of the
+/// mapping it decoded to, so the observation the GP stores is a *reachable*
+/// box point: re-decoding a snapped point reproduces the same splits
+/// (nearest-in-log of an exact log position is the value itself). The DRAM
+/// share is pinned to 0.5 — it is the absorbed leftover and must not inject
+/// uninformative variance into the kernel.
+fn encode_lattice(ranges: &LatticeRanges, m: &Mapping, point: &mut [f64]) {
+    for d in DIMS {
+        let s = m.split(d);
+        let base = d.index() * 5;
+        point[base] = 0.5;
+        for (slot, v) in [
+            (Slot::Glb, s.glb),
+            (Slot::SpatialX, s.spatial_x),
+            (Slot::SpatialY, s.spatial_y),
+            (Slot::Local, s.local),
+        ] {
+            let r = ranges[d.index()][slot_index(slot)];
+            let span = r.ln_max() - r.ln_min();
+            point[base + slot_coord(slot)] = if span > 0.0 {
+                (((v.max(1) as f64).ln() - r.ln_min()) / span).clamp(0.0, 1.0)
+            } else {
+                0.5
+            };
+        }
+    }
+}
+
+/// Turn a box point into the mapping it will be evaluated as. Under the
+/// lattice box (`ranges` present) the point is also snapped in place (see
+/// [`encode_lattice`]); otherwise the PR-4 path runs: raw decode, then
+/// projection or the penalty route per `BoConfig::project_rounding`.
+fn realize(
+    problem: &SwProblem,
+    cfg: &BoConfig,
+    lattice: Option<&LatticeRanges>,
+    point: &mut [f64],
+) -> Mapping {
+    if let Some(ranges) = lattice {
+        if let Some(m) = decode_lattice(problem, ranges, point) {
+            encode_lattice(ranges, &m, point);
+            return m;
+        }
+    }
+    round_point(problem, cfg, decode(problem, point))
+}
+
 /// The relax-and-round BO loop.
 pub fn search(
     problem: &SwProblem,
@@ -219,17 +333,30 @@ pub fn search(
     let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::SquaredExp);
     let mut last_fit_at = 0usize;
 
+    // Lattice-derived relaxation box: on constructive spaces every decoded
+    // point is feasible by construction and every observation is snapped
+    // onto reachable lattice coordinates. Non-constructive spaces keep the
+    // PR-4 projection/penalty path regardless of the flag. The ranges are
+    // invariant for the space, so they are derived once here and threaded
+    // through the per-trial decode/encode.
+    let fs = problem.space.feasible();
+    let lattice: Option<LatticeRanges> =
+        if cfg.lattice_box && fs.check() == SpaceCheck::Constructive {
+            feastel::record_lattice_box(fs.box_shrink_factor());
+            Some(fs.lattice_ranges())
+        } else {
+            None
+        };
+
     // The random phase (warmup, and the first two trials that seed the GP)
     // is data-independent: generate every point first (same RNG stream as
     // the sequential loop — evaluation is RNG-free), decode, and evaluate as
     // one parallel, memoized batch.
     let nrand = cfg.warmup.max(2).min(trials);
-    let points: Vec<Vec<f64>> =
+    let mut points: Vec<Vec<f64>> =
         (0..nrand).map(|_| (0..BOX_DIM).map(|_| rng.f64()).collect()).collect();
-    let mappings: Vec<Mapping> = points
-        .iter()
-        .map(|p| round_point(problem, cfg, decode(problem, p)))
-        .collect();
+    let mappings: Vec<Mapping> =
+        points.iter_mut().map(|p| realize(problem, cfg, lattice.as_ref(), p)).collect();
     trace.raw_draws += nrand as u64;
     let edps = problem.edp_batch(&mappings);
     for ((point, mapping), edp) in points.into_iter().zip(mappings.iter()).zip(edps) {
@@ -270,13 +397,14 @@ pub fn search(
             }
         };
 
-        let mapping = round_point(problem, cfg, decode(problem, &point));
+        let mut point = point;
+        let mapping = realize(problem, cfg, lattice.as_ref(), &mut point);
         trace.raw_draws += 1;
         let edp = problem.edp(&mapping);
         trace.record(&mapping, edp);
-        // still invalid (projection off, or a degenerate space): the
-        // grounded penalty teaches the GP *something*, but without
-        // constraint structure it keeps proposing nearby
+        // still invalid (projection and lattice off, or a degenerate
+        // space): the grounded penalty teaches the GP *something*, but
+        // without constraint structure it keeps proposing nearby
         obs.push(point, edp);
     }
     trace
@@ -285,8 +413,8 @@ pub fn search(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::eval::Evaluator;
     use crate::model::arch::Resources;
+    use crate::model::eval::Evaluator;
     use crate::space::sw_space::SwSpace;
     use crate::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
     use crate::workloads::specs::layer_by_name;
@@ -450,11 +578,13 @@ mod tests {
 
     #[test]
     fn unprojected_round_bo_often_rounds_to_invalid() {
-        // The paper's baseline pathology, reproducible with projection off.
+        // The paper's baseline pathology, reproducible with the lattice box
+        // and the projection both off (the Fig. 3 configuration).
         let p = problem();
         let mut rng = Rng::seed_from_u64(2);
         let mut cfg = BoConfig { warmup: 5, pool: 20, ..BoConfig::software() };
         cfg.project_rounding = false;
+        cfg.lattice_box = false;
         let t = search(&p, 30, &cfg, &mut rng);
         assert_eq!(t.evals.len(), 30);
         let invalid = t.evals.iter().filter(|e| e.is_infinite()).count();
@@ -466,12 +596,14 @@ mod tests {
         // ISSUE 4 acceptance: on a paper layer, round-BO with the
         // nearest-feasible projection records strictly fewer invalid
         // observations than the penalty-recording baseline at the same
-        // budget and seed.
+        // budget and seed (lattice box off in both arms to isolate the
+        // projection effect).
         let p = problem();
         let invalid_count = |project: bool| {
             let mut rng = Rng::seed_from_u64(2);
             let mut cfg = BoConfig { warmup: 5, pool: 20, ..BoConfig::software() };
             cfg.project_rounding = project;
+            cfg.lattice_box = false;
             let t = search(&p, 30, &cfg, &mut rng);
             assert_eq!(t.evals.len(), 30);
             t.evals.iter().filter(|e| e.is_infinite()).count()
@@ -494,5 +626,60 @@ mod tests {
         let t = search(&p, 30, &cfg, &mut rng);
         assert!(t.found_feasible());
         assert!(t.best_mapping.map(|m| p.space.is_valid(&m)).unwrap_or(false));
+    }
+
+    #[test]
+    fn lattice_box_records_zero_invalid_observations() {
+        // ISSUE 5 acceptance: with the lattice-derived box (the default),
+        // every trial decodes to a feasible mapping — zero out-of-lattice
+        // observations ever reach the GP — and the box derivation flows
+        // through telemetry.
+        let p = problem();
+        let before = feastel::snapshot();
+        let mut rng = Rng::seed_from_u64(2);
+        let cfg = BoConfig { warmup: 5, pool: 20, ..BoConfig::software() };
+        assert!(cfg.lattice_box, "lattice box must be the default");
+        let t = search(&p, 30, &cfg, &mut rng);
+        assert_eq!(t.evals.len(), 30);
+        let invalid = t.evals.iter().filter(|e| e.is_infinite()).count();
+        assert_eq!(invalid, 0, "lattice box must keep every observation in-lattice");
+        let delta = feastel::snapshot().since(&before);
+        assert!(delta.lattice_boxes >= 1, "box derivation must be recorded: {delta:?}");
+        assert!(delta.lattice_box_shrink_milli >= 1000, "shrink must be >= 1.0: {delta:?}");
+    }
+
+    #[test]
+    fn lattice_decode_is_feasible_and_idempotent_after_snapping() {
+        // Every decoded point is feasible by construction, and a snapped
+        // point is a fixed point of decode: the GP observes exactly the
+        // coordinates the lattices can reach.
+        let p = problem();
+        let ranges = p.space.feasible().lattice_ranges();
+        let mut rng = Rng::seed_from_u64(9);
+        for _ in 0..50 {
+            let mut pt: Vec<f64> = (0..BOX_DIM).map(|_| rng.f64()).collect();
+            let m = decode_lattice(&p, &ranges, &pt).expect("constructive space");
+            assert!(p.space.is_valid(&m), "lattice decode produced an invalid mapping");
+            encode_lattice(&ranges, &m, &mut pt);
+            let again = decode_lattice(&p, &ranges, &pt).expect("constructive space");
+            assert_eq!(again.splits, m.splits, "snapped points must decode to themselves");
+            assert_eq!(again.order_glb, m.order_glb);
+        }
+    }
+
+    #[test]
+    fn lattice_decode_respects_dataflow_pinning() {
+        let p = problem(); // Eyeriss: R FullAtPe (r = 4 on DQN-K2), S streamed
+        let ranges = p.space.feasible().lattice_ranges();
+        let mut rng = Rng::seed_from_u64(4);
+        for _ in 0..20 {
+            let pt: Vec<f64> = (0..BOX_DIM).map(|_| rng.f64()).collect();
+            let m = decode_lattice(&p, &ranges, &pt).unwrap();
+            assert_eq!(m.split(Dim::R).local, p.space.layer.r);
+            assert_eq!(m.split(Dim::S).local, 1);
+            for d in DIMS {
+                assert_eq!(m.split(d).product(), p.space.layer.size(d));
+            }
+        }
     }
 }

@@ -6,13 +6,17 @@
 //! GP as extra (feature, EDP) observations with the noise kernel absorbing
 //! the model shift, and the constraint classifier inherits the feasibility
 //! labels directly (mapping existence is strongly correlated across models
-//! sharing the resource envelope).
+//! sharing the resource envelope). The candidate stream comes from the
+//! *target* model's pruned space (`space::prune::PrunedHwSpace`), so
+//! configurations whose mapping space is provably empty for a target layer
+//! never spend a transfer trial.
+#![deny(clippy::style)]
 
 use crate::model::arch::HwConfig;
 use crate::opt::config::BoConfig;
 use crate::opt::hw_search::{absorb, HwTrace, Obs, HEAD_CHUNK};
 use crate::space::features::hw_features;
-use crate::space::hw_space::HwSpace;
+use crate::space::prune::PrunedHwSpace;
 use crate::surrogate::acquisition::feasibility_probability;
 use crate::surrogate::gp::{GpBackend, GpSurrogate, KernelFamily};
 use crate::util::rng::Rng;
@@ -54,7 +58,7 @@ impl TransferPrior {
 /// plain hardware search, `inner` evaluates whole config batches: the
 /// warmup phase (empty when the prior is usable) goes out as one batch.
 pub fn search_with_prior(
-    space: &HwSpace,
+    space: &PrunedHwSpace,
     prior: &TransferPrior,
     mut inner: impl FnMut(&[HwConfig]) -> Vec<Option<f64>>,
     trials: usize,
@@ -65,7 +69,7 @@ pub fn search_with_prior(
     let mut trace = HwTrace::new();
 
     // Seed the surrogate datasets with the source-model observations.
-    let feat = |hw: &HwConfig| hw_features(hw, &space.resources).to_vec();
+    let feat = |hw: &HwConfig| hw_features(hw, space.resources()).to_vec();
     let mut obs = Obs::empty();
     for (h, e) in &prior.feasible {
         let f = feat(h);
@@ -98,7 +102,7 @@ pub fn search_with_prior(
     let picks: Vec<HwConfig> = (0..head).map(|_| space.sample_valid(rng).0).collect();
     for chunk in picks.chunks(HEAD_CHUNK) {
         let edps = inner(chunk);
-        absorb(&mut trace, &mut obs, &space.resources, chunk, edps);
+        absorb(&mut trace, &mut obs, space.resources(), chunk, edps);
     }
 
     for _trial in head..trials {
@@ -135,7 +139,7 @@ pub fn search_with_prior(
 
         let picks = [pick];
         let edps = inner(&picks);
-        absorb(&mut trace, &mut obs, &space.resources, &picks, edps);
+        absorb(&mut trace, &mut obs, space.resources(), &picks, edps);
     }
     trace
 }
@@ -168,7 +172,7 @@ mod tests {
 
     #[test]
     fn prior_extraction_separates_feasible() {
-        let space = HwSpace::new(Resources::eyeriss_168());
+        let space = PrunedHwSpace::unconstrained(Resources::eyeriss_168());
         let mut rng = Rng::seed_from_u64(1);
         let trace = search(
             HwMethod::Random,
@@ -187,7 +191,7 @@ mod tests {
 
     #[test]
     fn transfer_skips_warmup_and_helps_early() {
-        let space = HwSpace::new(Resources::eyeriss_168());
+        let space = PrunedHwSpace::unconstrained(Resources::eyeriss_168());
         // source run on a 2x-scaled objective
         let mut rng = Rng::seed_from_u64(2);
         let source = search(
@@ -237,7 +241,7 @@ mod tests {
 
     #[test]
     fn empty_prior_degrades_to_plain_bo() {
-        let space = HwSpace::new(Resources::eyeriss_168());
+        let space = PrunedHwSpace::unconstrained(Resources::eyeriss_168());
         let mut rng = Rng::seed_from_u64(3);
         let t = search_with_prior(
             &space,

@@ -8,6 +8,7 @@
 
 use crate::model::mapping::Mapping;
 use crate::opt::sw_search::{SearchTrace, SwProblem};
+use crate::space::feasible::telemetry as feastel;
 use crate::surrogate::gbt::{Gbt, GbtConfig};
 use crate::surrogate::mlp::{Mlp, MlpConfig};
 use crate::util::rng::Rng;
@@ -61,6 +62,8 @@ pub fn search(
         let mut proposals: Vec<(f64, Mapping)> = Vec::new();
         for _ in 0..WALKERS {
             let Some((mut cur, d)) = problem.space.sample_valid(rng, max_draws) else {
+                // walker abandoned before its SA descent even started
+                feastel::record_degraded_skip();
                 break;
             };
             trace.raw_draws += d;

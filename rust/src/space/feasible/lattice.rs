@@ -43,6 +43,13 @@ impl DimLattice {
         self.pinned_local.unwrap_or(1)
     }
 
+    /// Size of the raw lattice (number of divisors of the full extent) —
+    /// the per-decision volume of the *unconstrained* relaxation box, which
+    /// the lattice-box shrink factor is measured against.
+    pub fn divisor_count(&self) -> usize {
+        self.divisors.len()
+    }
+
     /// Divisors of `rem` (`rem` must divide `size`), ascending. Because
     /// `rem | size`, this is a filter over the precomputed lattice — no
     /// re-factorization on the sampling path.
@@ -66,6 +73,7 @@ mod tests {
         assert_eq!(lat.size, 12);
         assert_eq!(lat.divisors_of(12).collect::<Vec<_>>(), vec![1, 2, 3, 4, 6, 12]);
         assert_eq!(lat.min_local(), 1);
+        assert_eq!(lat.divisor_count(), 6);
     }
 
     #[test]

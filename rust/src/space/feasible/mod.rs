@@ -22,8 +22,12 @@
 //!
 //! Rejection sampling survives only as a cross-checked fallback for the rare
 //! [`SpaceCheck::GlbTight`] spaces where the propagation pass cannot start
-//! (see `SwSpace::sample_valid`); every path records its outcome in
-//! [`telemetry`], which `coordinator::metrics` surfaces per run.
+//! (see `SwSpace::sample_valid`) — and even those are *resolved exactly* at
+//! construction by the exhaustive spatial witness search
+//! ([`FeasibleSampler::certified_empty`] / [`FeasibleSampler::glb_witness`]),
+//! so emptiness is always a proof and never a burned draw budget. Every
+//! path records its outcome in [`telemetry`], which `coordinator::metrics`
+//! surfaces per run.
 #![deny(clippy::style)]
 
 mod lattice;
@@ -31,18 +35,55 @@ mod propagate;
 pub mod telemetry;
 
 pub use lattice::DimLattice;
-pub use propagate::SpaceCheck;
+pub use propagate::{SpaceCheck, Slot, SLOTS};
 
 use crate::model::arch::{HwConfig, Resources};
-use crate::model::mapping::{is_permutation, Mapping};
+use crate::model::mapping::{is_permutation, Mapping, Split};
+use crate::model::nest::footprint;
 use crate::model::validity::check_mapping;
-use crate::model::workload::{Dim, Layer, DIMS};
+use crate::model::workload::{DataSpace, Dim, Layer, DIMS};
 use crate::util::rng::Rng;
-use propagate::{nearest_in_log, Propagator, Slot, SLOTS};
+use propagate::{nearest_in_log, nearest_ln, Propagator};
+
+/// Inclusive bounds (and cardinality) of the lattice-admissible factors of
+/// one (dim, slot) decision under the *monotone* constraints alone — the
+/// divisor lattice, the H11/H12 local pinning, the PE-local capacities for
+/// the local slot and the mesh extents for the spatial slots. Because only
+/// monotone constraints are applied, **every feasible mapping's factor at
+/// that decision lies inside the range** (the containment property the
+/// lattice-derived relaxation box is built on); the GLB witness is
+/// deliberately excluded — bank replication is not monotone in the tile
+/// extents, so it can never be used to shrink a containment box.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FactorRange {
+    /// Smallest admissible factor (the pinned value on dataflow axes).
+    pub min: u64,
+    /// Largest admissible factor.
+    pub max: u64,
+    /// Number of admissible lattice values; 0 only when even the minimal
+    /// factor violates a monotone constraint (the space is provably empty).
+    pub count: usize,
+}
+
+impl FactorRange {
+    pub fn contains(&self, v: u64) -> bool {
+        (self.min..=self.max).contains(&v)
+    }
+
+    pub fn ln_min(&self) -> f64 {
+        (self.min.max(1) as f64).ln()
+    }
+
+    pub fn ln_max(&self) -> f64 {
+        (self.max.max(1) as f64).ln()
+    }
+}
 
 /// Feasible-by-construction candidate generator for one (layer, hardware,
 /// resources) triple. Construction is cheap (one divisor factorization per
-/// dimension); clones share nothing and are cheap too.
+/// dimension, plus — only on the rare GLB-tight spaces — the exhaustive
+/// spatial witness search that makes their emptiness certificate exact);
+/// clones share nothing and are cheap too.
 #[derive(Clone, Debug)]
 pub struct FeasibleSampler {
     layer: Layer,
@@ -50,26 +91,66 @@ pub struct FeasibleSampler {
     resources: Resources,
     lattices: [DimLattice; 6],
     check: SpaceCheck,
+    /// Exact resolution of a [`SpaceCheck::GlbTight`] start check: a
+    /// feasibility witness if one exists (`None` on the other checks too).
+    tight_witness: Option<[Split; 6]>,
+    /// Exact emptiness: `ProvablyEmpty`, or GLB-tight with no witness.
+    empty_proof: bool,
 }
 
 impl FeasibleSampler {
     pub fn new(layer: Layer, hw: HwConfig, resources: Resources) -> Self {
         let lattices: [DimLattice; 6] =
             std::array::from_fn(|i| DimLattice::new(DIMS[i], &layer, hw.dataflow_for(DIMS[i])));
-        let check = Propagator {
+        let prop = Propagator {
             layer: &layer,
             hw: &hw,
             res: &resources,
             lattices: &lattices,
-        }
-        .space_check();
-        FeasibleSampler { layer, hw, resources, lattices, check }
+        };
+        let check = prop.space_check();
+        // Resolve GLB-tight spaces exactly up front: the exhaustive spatial
+        // witness search either proves emptiness (no rejection budget is
+        // ever spent on the space again) or yields a valid fallback mapping.
+        let (tight_witness, empty_proof) = match check {
+            SpaceCheck::Constructive => (None, false),
+            SpaceCheck::ProvablyEmpty => (None, true),
+            SpaceCheck::GlbTight => {
+                let w = prop.glb_tight_witness();
+                let empty = w.is_none();
+                (w, empty)
+            }
+        };
+        FeasibleSampler { layer, hw, resources, lattices, check, tight_witness, empty_proof }
     }
 
     /// What the propagation start check concluded about this space (cached
     /// at construction; the inputs are immutable).
     pub fn check(&self) -> SpaceCheck {
         self.check
+    }
+
+    /// Exact emptiness certificate: `true` iff *no* valid mapping exists —
+    /// either the pinned minimal tile overflows a PE-local buffer
+    /// ([`SpaceCheck::ProvablyEmpty`]), or the space is
+    /// [`SpaceCheck::GlbTight`] and the exhaustive spatial witness search
+    /// found nothing. Both directions are proofs (property-tested against
+    /// rejection sampling), so consumers may skip their rejection budget on
+    /// a `true` and the cross-space pruner may reject the hardware point.
+    pub fn certified_empty(&self) -> bool {
+        self.empty_proof
+    }
+
+    /// The GLB-tight feasibility witness (canonical loop orders): a valid
+    /// mapping proving a [`SpaceCheck::GlbTight`] space non-empty. `None`
+    /// on every other check and on proven-empty tight spaces.
+    pub fn glb_witness(&self) -> Option<Mapping> {
+        self.tight_witness.map(|splits| Mapping {
+            splits,
+            order_local: DIMS,
+            order_glb: DIMS,
+            order_dram: DIMS,
+        })
     }
 
     fn propagator(&self) -> Propagator<'_> {
@@ -199,6 +280,155 @@ impl FeasibleSampler {
         let pinned = self.lattices.iter().filter(|l| l.pinned_local.is_some()).count();
         DIMS.len() * SLOTS.len() - pinned
     }
+
+    /// Whether a local tile with factor `v` on dimension `d` and the
+    /// minimal (pinned / 1) factor everywhere else fits the PE-local
+    /// sub-buffers. Footprints are monotone in the tile extents and every
+    /// valid mapping's local tile dominates this one pointwise, so a `false`
+    /// here excludes `v` from *every* feasible mapping — the exactness
+    /// argument behind the local row of [`FeasibleSampler::lattice_sets`].
+    fn local_fits(&self, d: Dim, v: u64) -> bool {
+        let mut tile: [u64; 6] = std::array::from_fn(|i| self.lattices[i].min_local());
+        tile[d.index()] = v;
+        let stride = self.layer.stride;
+        footprint(DataSpace::Inputs, &tile, stride) <= self.hw.lb_inputs
+            && footprint(DataSpace::Weights, &tile, stride) <= self.hw.lb_weights
+            && footprint(DataSpace::Outputs, &tile, stride) <= self.hw.lb_outputs
+    }
+
+    /// The lattice-admissible value sets per (slot, dim) under the monotone
+    /// constraints alone (see [`FactorRange`] for the containment argument).
+    /// Outer index follows [`SLOTS`], inner index is `Dim::index()`.
+    pub fn lattice_sets(&self) -> [[Vec<u64>; 6]; 4] {
+        // transposed construction keeps the per-slot logic together; the
+        // public accessors below re-slice per dim
+        std::array::from_fn(|si| {
+            let slot = SLOTS[si];
+            std::array::from_fn(|i| {
+                let d = DIMS[i];
+                let lat = &self.lattices[i];
+                match slot {
+                    Slot::Local => match lat.pinned_local {
+                        Some(p) if self.local_fits(d, p) => vec![p],
+                        Some(_) => Vec::new(), // provably empty space
+                        None => {
+                            lat.divisors_of(lat.size).filter(|&v| self.local_fits(d, v)).collect()
+                        }
+                    },
+                    Slot::SpatialX => {
+                        lat.divisors_of(lat.size).filter(|&v| v <= self.hw.pe_mesh_x).collect()
+                    }
+                    Slot::SpatialY => {
+                        lat.divisors_of(lat.size).filter(|&v| v <= self.hw.pe_mesh_y).collect()
+                    }
+                    Slot::Glb => lat.divisors_of(lat.size).collect(),
+                }
+            })
+        })
+    }
+
+    /// The lattice-box ranges per (dim, slot): min/max/count of
+    /// [`FeasibleSampler::lattice_sets`], outer index `Dim::index()`, inner
+    /// index following [`SLOTS`]. This is the relaxation box round-BO's
+    /// `lattice_box` mode maps its coordinates onto, and the per-dimension
+    /// admissible report `PrunedHwSpace` unions across target layers.
+    pub fn lattice_ranges(&self) -> [[FactorRange; 4]; 6] {
+        let sets = self.lattice_sets();
+        std::array::from_fn(|i| {
+            std::array::from_fn(|si| {
+                let s = &sets[si][i];
+                match (s.first(), s.last()) {
+                    (Some(&min), Some(&max)) => FactorRange { min, max, count: s.len() },
+                    // empty (provably-empty space): collapse onto the
+                    // minimal factor so log-span arithmetic stays finite
+                    _ => FactorRange {
+                        min: self.lattices[i].min_local(),
+                        max: self.lattices[i].min_local(),
+                        count: 0,
+                    },
+                }
+            })
+        })
+    }
+
+    /// Volume reduction of the lattice box vs the raw divisor box: the
+    /// product over all (dim, slot) decisions of
+    /// `|divisor lattice| / |admissible set|`. Always >= 1; reported through
+    /// [`telemetry::record_lattice_box`] when round-BO derives its box.
+    pub fn box_shrink_factor(&self) -> f64 {
+        let ranges = self.lattice_ranges();
+        let mut shrink = 1.0f64;
+        for i in 0..DIMS.len() {
+            let raw = self.lattices[i].divisor_count() as f64;
+            for r in &ranges[i] {
+                if r.count > 0 {
+                    shrink *= raw / r.count as f64;
+                }
+            }
+        }
+        shrink.max(1.0)
+    }
+
+    /// Deterministic construction steering each decision toward a
+    /// continuous log-space target: at every (dim, slot) the admissible
+    /// factor nearest (in ln) to `target_ln(dim, slot)` is chosen, in
+    /// canonical dimension order. This is how the lattice-derived relaxation
+    /// box decodes round-BO points — the targets come from box coordinates
+    /// mapped onto [`FeasibleSampler::lattice_ranges`] — so the decoded
+    /// mapping is feasible by construction. `None` iff the space is not
+    /// [`SpaceCheck::Constructive`].
+    pub fn construct_targeted(
+        &self,
+        mut target_ln: impl FnMut(Dim, Slot) -> f64,
+    ) -> Option<[Split; 6]> {
+        if self.check != SpaceCheck::Constructive {
+            return None;
+        }
+        self.propagator().construct(&[DIMS; 4], |d, slot, adm| nearest_ln(adm, target_ln(d, slot)))
+    }
+}
+
+/// Test fixtures shared across the unit suites of the space layer (the
+/// integration suites keep an equivalent copy in `rust/tests/common/` —
+/// `#[cfg(test)]` items are not linked into the library integration tests
+/// build against).
+#[cfg(test)]
+pub(crate) mod fixtures {
+    use crate::model::arch::{DataflowOpt, HwConfig, Resources};
+    use crate::model::workload::Layer;
+
+    /// The hand-computed GLB-tight fixture: an r=3 filter pinned FullAtPe,
+    /// one spreadable P dimension (P=4 on a 4x1 mesh), two GLB banks. GLB
+    /// usage by spatial split of P with all temporal factors minimal is
+    /// {sx=1: 14, sx=2: 12, sx=4: 16} words (the sliding-window halo makes
+    /// input growth sublinear while bank replication halves), so capacity
+    /// 12 is tight-but-feasible (witness at sx[P]=2) and capacity 11 is
+    /// tight-and-provably-empty.
+    pub(crate) fn tight_fixture(glb_entries: u64) -> (Layer, HwConfig, Resources) {
+        let layer = Layer::conv("tight", 3, 1, 4, 1, 1, 1, 1);
+        let hw = HwConfig {
+            pe_mesh_x: 4,
+            pe_mesh_y: 1,
+            lb_inputs: 3,
+            lb_weights: 3,
+            lb_outputs: 1,
+            gb_instances: 2,
+            gb_mesh_x: 2,
+            gb_mesh_y: 1,
+            gb_block: 1,
+            gb_cluster: 1,
+            df_filter_w: DataflowOpt::FullAtPe,
+            df_filter_h: DataflowOpt::Streamed,
+        };
+        let res = Resources {
+            num_pes: 4,
+            local_buffer_entries: 7,
+            global_buffer_entries: glb_entries,
+            dram_words_per_cycle: 4.0,
+            gb_words_per_cycle_per_instance: 2.0,
+        };
+        (layer, hw, res)
+    }
 }
 
 #[cfg(test)]
@@ -303,5 +533,130 @@ mod tests {
         let fs = sampler("DQN-K2");
         // 6 dims x 4 slots minus the two dataflow-pinned local decisions
         assert_eq!(fs.decision_count(), 22);
+    }
+
+    #[test]
+    fn lattice_ranges_contain_every_sampled_mapping() {
+        // The containment property the lattice-derived relaxation box rests
+        // on: monotone-only filtering can never exclude a feasible factor.
+        for name in ["DQN-K1", "DQN-K2", "ResNet-K2"] {
+            let fs = sampler(name);
+            let ranges = fs.lattice_ranges();
+            let mut rng = Rng::seed_from_u64(11);
+            for _ in 0..50 {
+                let m = fs.sample(&mut rng).expect("constructive space");
+                for (i, d) in DIMS.iter().enumerate() {
+                    let s = m.split(*d);
+                    for (si, slot) in SLOTS.iter().enumerate() {
+                        let v = match slot {
+                            Slot::Local => s.local,
+                            Slot::SpatialX => s.spatial_x,
+                            Slot::SpatialY => s.spatial_y,
+                            Slot::Glb => s.glb,
+                        };
+                        assert!(
+                            ranges[i][si].contains(v),
+                            "{name}: {d:?}/{slot:?} factor {v} outside {:?}",
+                            ranges[i][si]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lattice_ranges_respect_pinning_and_mesh() {
+        let fs = sampler("DQN-K2"); // Eyeriss: R FullAtPe (r=4), S Streamed
+        let ranges = fs.lattice_ranges();
+        let local = |d: Dim| ranges[d.index()][0];
+        assert_eq!(local(Dim::R), FactorRange { min: 4, max: 4, count: 1 });
+        assert_eq!(local(Dim::S), FactorRange { min: 1, max: 1, count: 1 });
+        // spatial slots are bounded by the mesh extents (14 x 12)
+        for d in DIMS {
+            assert!(ranges[d.index()][1].max <= 14, "{d:?} spatial-X over mesh");
+            assert!(ranges[d.index()][2].max <= 12, "{d:?} spatial-Y over mesh");
+        }
+        // the GLB slot keeps the full divisor lattice (replication is not
+        // monotone, so nothing may be cut there)
+        assert_eq!(ranges[Dim::K.index()][3].max, fs.layer.k);
+    }
+
+    #[test]
+    fn box_shrink_factor_is_at_least_one_and_counts_real_cuts() {
+        let fs = sampler("DQN-K1");
+        let shrink = fs.box_shrink_factor();
+        assert!(shrink >= 1.0);
+        // DQN-K1 on the 14x12 mesh: P = Q = 20 has divisors {1,2,4,5,10,20}
+        // and 20 > 14 cuts at least one spatial value, so the box must
+        // actually shrink
+        assert!(shrink > 1.0, "expected a real cut, got {shrink}");
+    }
+
+    #[test]
+    fn construct_targeted_is_deterministic_feasible_and_steerable() {
+        let fs = sampler("ResNet-K2");
+        let lo = fs.construct_targeted(|_, _| 0.0).expect("constructive");
+        let lo2 = fs.construct_targeted(|_, _| 0.0).expect("constructive");
+        assert_eq!(lo, lo2, "targeted construction must be deterministic");
+        let hi = fs.construct_targeted(|d, slot| {
+            let r = fs.lattice_ranges()[d.index()][SLOTS.iter().position(|s| *s == slot).unwrap()];
+            r.ln_max()
+        })
+        .expect("constructive");
+        for splits in [&lo, &hi] {
+            let m = Mapping {
+                splits: *splits,
+                order_local: DIMS,
+                order_glb: DIMS,
+                order_dram: DIMS,
+            };
+            assert_eq!(check_mapping(&fs.layer, &fs.hw, &fs.resources, &m), Ok(()));
+        }
+        // steering toward the top of every range must move some factor off
+        // the all-minimal construction
+        assert_ne!(lo, hi, "targets must steer the construction");
+    }
+
+    /// The shared hand-computed GLB-tight fixture (see [`super::fixtures`]):
+    /// capacity 12 admits exactly the sx[P]=2 spreading, capacity 11
+    /// admits nothing.
+    fn tight_sampler(glb_entries: u64) -> FeasibleSampler {
+        let (layer, hw, res) = super::fixtures::tight_fixture(glb_entries);
+        FeasibleSampler::new(layer, hw, res)
+    }
+
+    #[test]
+    fn glb_tight_spaces_carry_exact_certificates() {
+        // tight but feasible: not certified empty, witness validates
+        let fs = tight_sampler(12);
+        assert_eq!(fs.check(), SpaceCheck::GlbTight);
+        assert!(!fs.certified_empty());
+        let w = fs.glb_witness().expect("non-empty tight space must carry a witness");
+        assert_eq!(check_mapping(&fs.layer, &fs.hw, &fs.resources, &w), Ok(()));
+        // tight and proven empty: certificate flips, no witness
+        let fs = tight_sampler(11);
+        assert_eq!(fs.check(), SpaceCheck::GlbTight);
+        assert!(fs.certified_empty());
+        assert!(fs.glb_witness().is_none());
+        // and the constructive / pinned-empty checks keep their certificates
+        assert!(!sampler("DQN-K2").certified_empty());
+    }
+
+    #[test]
+    fn construct_targeted_refuses_non_constructive_spaces() {
+        let mut hw = eyeriss_hw(168);
+        hw.df_filter_w = crate::model::arch::DataflowOpt::FullAtPe;
+        hw.lb_weights = 4;
+        let fs = FeasibleSampler::new(
+            layer_by_name("DQN-K1").unwrap(),
+            hw,
+            eyeriss_resources(168),
+        );
+        assert_eq!(fs.check(), SpaceCheck::ProvablyEmpty);
+        assert!(fs.construct_targeted(|_, _| 0.0).is_none());
+        // and the collapsed ranges advertise the emptiness via count = 0
+        let ranges = fs.lattice_ranges();
+        assert!(ranges.iter().any(|per_dim| per_dim.iter().any(|r| r.count == 0)));
     }
 }

@@ -19,6 +19,11 @@ static PROJECTION_FAILURES: AtomicU64 = AtomicU64::new(0);
 static FALLBACK_SAMPLES: AtomicU64 = AtomicU64::new(0);
 static FALLBACK_DRAWS: AtomicU64 = AtomicU64::new(0);
 static INFEASIBLE_SPACES: AtomicU64 = AtomicU64::new(0);
+static DEGRADED_SKIPS: AtomicU64 = AtomicU64::new(0);
+static PRUNE_CERTIFICATES: AtomicU64 = AtomicU64::new(0);
+static PRUNE_REJECTIONS: AtomicU64 = AtomicU64::new(0);
+static LATTICE_BOXES: AtomicU64 = AtomicU64::new(0);
+static LATTICE_BOX_SHRINK_MILLI: AtomicU64 = AtomicU64::new(0);
 
 /// Snapshot of the feasibility counters. All fields are totals since process
 /// start; use [`FeasibilityStats::since`] to attribute movement to one run.
@@ -44,6 +49,24 @@ pub struct FeasibilityStats {
     /// Spaces detected as unsampleable (provably empty, or the fallback
     /// exhausted its draw budget) — the paper's unknown-constraint signal.
     pub infeasible_spaces: u64,
+    /// Search-loop degradations: a consumer skipped, truncated or gave up
+    /// on planned work because `sample_valid` could not produce a candidate
+    /// (warmup cut short, a pool left partially filled, an SA walker or
+    /// hill-climb abandoned). Zero on healthy constructive spaces.
+    pub degraded_skips: u64,
+    /// Per-layer feasibility certificates computed by the cross-space
+    /// pruner (`space::prune::PrunedHwSpace`).
+    pub prune_certificates: u64,
+    /// Hardware configurations rejected *before* any simulator evaluation
+    /// because a certificate proved some target layer's mapping space empty.
+    pub prune_rejections: u64,
+    /// Lattice-derived relaxation boxes handed to round-BO
+    /// (`BoConfig::lattice_box`).
+    pub lattice_boxes: u64,
+    /// Accumulated box-volume shrink factor of those lattice boxes vs the
+    /// raw divisor box, in thousandths (saturating; divide by
+    /// `1000 * lattice_boxes` for the mean shrink).
+    pub lattice_box_shrink_milli: u64,
 }
 
 impl FeasibilityStats {
@@ -62,6 +85,15 @@ impl FeasibilityStats {
             fallback_samples: self.fallback_samples.saturating_sub(earlier.fallback_samples),
             fallback_draws: self.fallback_draws.saturating_sub(earlier.fallback_draws),
             infeasible_spaces: self.infeasible_spaces.saturating_sub(earlier.infeasible_spaces),
+            degraded_skips: self.degraded_skips.saturating_sub(earlier.degraded_skips),
+            prune_certificates: self
+                .prune_certificates
+                .saturating_sub(earlier.prune_certificates),
+            prune_rejections: self.prune_rejections.saturating_sub(earlier.prune_rejections),
+            lattice_boxes: self.lattice_boxes.saturating_sub(earlier.lattice_boxes),
+            lattice_box_shrink_milli: self
+                .lattice_box_shrink_milli
+                .saturating_sub(earlier.lattice_box_shrink_milli),
         }
     }
 }
@@ -77,6 +109,11 @@ pub fn snapshot() -> FeasibilityStats {
         fallback_samples: FALLBACK_SAMPLES.load(Ordering::Relaxed),
         fallback_draws: FALLBACK_DRAWS.load(Ordering::Relaxed),
         infeasible_spaces: INFEASIBLE_SPACES.load(Ordering::Relaxed),
+        degraded_skips: DEGRADED_SKIPS.load(Ordering::Relaxed),
+        prune_certificates: PRUNE_CERTIFICATES.load(Ordering::Relaxed),
+        prune_rejections: PRUNE_REJECTIONS.load(Ordering::Relaxed),
+        lattice_boxes: LATTICE_BOXES.load(Ordering::Relaxed),
+        lattice_box_shrink_milli: LATTICE_BOX_SHRINK_MILLI.load(Ordering::Relaxed),
     }
 }
 
@@ -121,6 +158,34 @@ pub fn record_infeasible_space() {
     INFEASIBLE_SPACES.fetch_add(1, Ordering::Relaxed);
 }
 
+/// A search loop skipped or truncated planned work because no candidate
+/// could be sampled (the consumer-side degradation the space-level counters
+/// cannot attribute).
+pub fn record_degraded_skip() {
+    DEGRADED_SKIPS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// `n` per-layer feasibility certificates were computed by the cross-space
+/// pruner.
+pub fn record_certificates(n: u64) {
+    PRUNE_CERTIFICATES.fetch_add(n, Ordering::Relaxed);
+}
+
+/// A hardware configuration was rejected before evaluation on a
+/// provably-empty certificate.
+pub fn record_prune_rejection() {
+    PRUNE_REJECTIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A lattice-derived relaxation box was handed to round-BO; `shrink` is its
+/// volume reduction vs the raw divisor box (>= 1, capped so the milli
+/// accumulator cannot overflow).
+pub fn record_lattice_box(shrink: f64) {
+    LATTICE_BOXES.fetch_add(1, Ordering::Relaxed);
+    let milli = (shrink.clamp(1.0, 1e12) * 1000.0) as u64;
+    LATTICE_BOX_SHRINK_MILLI.fetch_add(milli, Ordering::Relaxed);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +203,10 @@ mod tests {
         record_fallback_sample(42);
         record_fallback_exhausted(8);
         record_infeasible_space();
+        record_degraded_skip();
+        record_certificates(3);
+        record_prune_rejection();
+        record_lattice_box(2.5);
         let delta = snapshot().since(&before);
         assert!(delta.constructed >= 1);
         assert!(delta.perturbations >= 1);
@@ -147,6 +216,22 @@ mod tests {
         assert!(delta.fallback_samples >= 1);
         assert!(delta.fallback_draws >= 50);
         assert!(delta.infeasible_spaces >= 1);
+        assert!(delta.degraded_skips >= 1);
+        assert!(delta.prune_certificates >= 3);
+        assert!(delta.prune_rejections >= 1);
+        assert!(delta.lattice_boxes >= 1);
+        assert!(delta.lattice_box_shrink_milli >= 2500);
+    }
+
+    #[test]
+    fn lattice_box_shrink_saturates_instead_of_overflowing() {
+        let before = snapshot();
+        // a pathological shrink factor must clamp, not wrap the accumulator
+        record_lattice_box(f64::INFINITY);
+        record_lattice_box(0.1); // sub-1 shrink is clamped up to the floor
+        let delta = snapshot().since(&before);
+        assert!(delta.lattice_boxes >= 2);
+        assert!(delta.lattice_box_shrink_milli >= 1_000_000_000_000_000 + 1000);
     }
 
     #[test]

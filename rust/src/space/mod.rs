@@ -1,15 +1,18 @@
 //! Design-space parameterization: factorization utilities, the
 //! constraint-propagating feasibility engine (see `README.md` in this
-//! directory), the hardware (H1-H12) and software (S1-S9) samplers, and the
-//! Fig. 13 feature transforms feeding the BO surrogates.
+//! directory), the cross-space pruner certifying hardware points against a
+//! target layer set, the hardware (H1-H12) and software (S1-S9) samplers,
+//! and the Fig. 13 feature transforms feeding the BO surrogates.
 
 pub mod factors;
 pub mod feasible;
 pub mod features;
 pub mod hw_space;
+pub mod prune;
 pub mod sw_space;
 
-pub use feasible::{FeasibleSampler, SpaceCheck};
+pub use feasible::{FactorRange, FeasibleSampler, Slot, SpaceCheck, SLOTS};
 pub use features::{hw_features, sw_features, FEATURE_DIM};
 pub use hw_space::HwSpace;
+pub use prune::{HwCertificate, PrunedHwSpace};
 pub use sw_space::SwSpace;

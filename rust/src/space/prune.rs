@@ -1,0 +1,333 @@
+//! Cross-space pruning: certify the hardware design space against a target
+//! layer set *before* any simulator evaluation.
+//!
+//! The joint hw/sw space is profitable exactly where the two sub-spaces
+//! interact (CODEBench, Tuli et al. 2022; the semi-decoupled search of Lu
+//! et al. 2022 — both named in ROADMAP's feasibility-engine entry): a
+//! hardware configuration whose *mapping space* is empty for some layer of
+//! the target network can never win, yet the plain hardware search only
+//! discovers that by paying a full inner software search for the config.
+//! [`PrunedHwSpace`] closes the gap by reusing the PR-4 constraint
+//! propagation: for a candidate [`HwConfig`] it computes, per target layer,
+//! the feasibility certificate of the (layer, hardware) mapping space —
+//! [`SpaceCheck::Constructive`] / [`SpaceCheck::ProvablyEmpty`] /
+//! [`SpaceCheck::GlbTight`] — from the divisor lattices and the capacity
+//! arithmetic alone, **without sampling a single mapping**.
+//!
+//! The certificates are exact (property-tested in
+//! `rust/tests/prune_soundness.rs`):
+//!
+//! * `ProvablyEmpty` is a proof — rejection sampling can never find a
+//!   mapping there, at any budget (footprints are monotone in the pinned
+//!   minimal tile);
+//! * `Constructive` is a witness — one constructive draw always succeeds;
+//! * `GlbTight` is resolved *exactly* by the exhaustive spatial witness
+//!   search (`FeasibleSampler::certified_empty`): either a feasibility
+//!   witness exists, or emptiness is proven — so tight spaces are pruned
+//!   precisely when no mapping exists, never on a guess.
+//!
+//! [`PrunedHwSpace::sample_valid`] therefore rejects hardware points whose
+//! mapping space is provably empty for any target layer before they ever
+//! reach the simulator (telemetry: `prune_certificates` /
+//! `prune_rejections` through [`telemetry`] into `coordinator::metrics`),
+//! and [`PrunedHwSpace::admissible_ranges`] reports the per-dimension
+//! lattice-admissible factor ranges a configuration leaves the software
+//! search — the same ranges round-BO's lattice box is derived from.
+#![deny(clippy::style)]
+
+use std::collections::BTreeSet;
+
+use crate::model::arch::{HwConfig, Resources};
+use crate::model::workload::Layer;
+use crate::space::feasible::{telemetry, FactorRange, FeasibleSampler, SpaceCheck};
+use crate::space::hw_space::HwSpace;
+use crate::util::rng::Rng;
+
+/// How many provably-empty candidates [`PrunedHwSpace::sample_valid`]
+/// discards before giving up and handing back an uncertified draw (the
+/// inner software search then reports the unknown-constraint violation,
+/// exactly as it would have pre-pruning — liveness is never traded for the
+/// optimization).
+const MAX_PRUNE_REJECTS: u32 = 256;
+
+/// Per-layer feasibility certificates of one hardware configuration
+/// against a target layer set, in layer order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HwCertificate {
+    /// Propagation start check per layer.
+    pub per_layer: Vec<SpaceCheck>,
+    /// Exact per-layer emptiness: `true` for a pinned-overflow proof *and*
+    /// for a GLB-tight space whose exhaustive spatial witness search proved
+    /// no mapping exists.
+    pub empty: Vec<bool>,
+}
+
+impl HwCertificate {
+    /// No target layer's mapping space is provably empty: the configuration
+    /// may reach the simulator. (GLB-tight layers pass exactly when a
+    /// feasibility witness exists.)
+    pub fn admits_all(&self) -> bool {
+        !self.empty.iter().any(|&e| e)
+    }
+
+    /// Every target layer's space is constructive: the inner search is
+    /// guaranteed one-draw candidate generation on all of them.
+    pub fn constructive_for_all(&self) -> bool {
+        self.per_layer.iter().all(|c| *c == SpaceCheck::Constructive)
+    }
+
+    /// Number of target layers whose mapping space is provably empty.
+    pub fn empty_layers(&self) -> usize {
+        self.empty.iter().filter(|&&e| e).count()
+    }
+}
+
+/// The hardware design space pruned against a target layer set. Construct
+/// one per co-design run (the driver does) and share it with the hardware
+/// search loops; an empty layer set ([`PrunedHwSpace::unconstrained`])
+/// degrades to the plain constructive sampler for synthetic objectives.
+#[derive(Clone, Debug)]
+pub struct PrunedHwSpace {
+    inner: HwSpace,
+    layers: Vec<Layer>,
+}
+
+impl PrunedHwSpace {
+    pub fn new(resources: Resources, layers: Vec<Layer>) -> Self {
+        PrunedHwSpace { inner: HwSpace::new(resources), layers }
+    }
+
+    /// A pruned space with no target layers: every certificate passes
+    /// trivially. Used by searches over synthetic objectives (tests,
+    /// benches) where no workload exists to prune against.
+    pub fn unconstrained(resources: Resources) -> Self {
+        PrunedHwSpace::new(resources, Vec::new())
+    }
+
+    /// The underlying (unpruned) hardware space.
+    pub fn space(&self) -> &HwSpace {
+        &self.inner
+    }
+
+    pub fn resources(&self) -> &Resources {
+        &self.inner.resources
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    /// Per-layer feasibility certificates of `hw`, from the propagation
+    /// start check and — on GLB-tight layers — the exhaustive spatial
+    /// witness search (no mapping is ever *sampled*). Cost: one
+    /// divisor-lattice build and one capacity evaluation per layer;
+    /// tight layers add the (mesh-bounded, small) witness enumeration.
+    pub fn certify(&self, hw: &HwConfig) -> HwCertificate {
+        telemetry::record_certificates(self.layers.len() as u64);
+        let mut per_layer = Vec::with_capacity(self.layers.len());
+        let mut empty = Vec::with_capacity(self.layers.len());
+        for layer in &self.layers {
+            let fs = self.layer_sampler(layer, hw);
+            per_layer.push(fs.check());
+            empty.push(fs.certified_empty());
+        }
+        HwCertificate { per_layer, empty }
+    }
+
+    /// Short-circuiting admission test for the sampling hot path: stops at
+    /// the first layer with a proven-empty mapping space (recording only
+    /// the certificates it actually computed).
+    pub fn admits(&self, hw: &HwConfig) -> bool {
+        for layer in &self.layers {
+            telemetry::record_certificates(1);
+            if self.layer_sampler(layer, hw).certified_empty() {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn layer_sampler(&self, layer: &Layer, hw: &HwConfig) -> FeasibleSampler {
+        FeasibleSampler::new(layer.clone(), hw.clone(), self.inner.resources.clone())
+    }
+
+    /// One hardware configuration that satisfies the known Fig. 7
+    /// constraints by construction *and* whose mapping space is not provably
+    /// empty for any target layer, plus the raw draws it cost (rejected
+    /// candidates included — they cost one draw each but zero simulator
+    /// evaluations, which is the point). After [`MAX_PRUNE_REJECTS`]
+    /// consecutive empty certificates the next uncertified draw is returned
+    /// so callers always make progress; the inner search then surfaces the
+    /// unknown constraint as before.
+    pub fn sample_valid(&self, rng: &mut Rng) -> (HwConfig, u64) {
+        let mut draws = 0u64;
+        for _ in 0..MAX_PRUNE_REJECTS {
+            let (hw, d) = self.inner.sample_valid(rng);
+            draws += d;
+            if self.admits(&hw) {
+                return (hw, draws);
+            }
+            telemetry::record_prune_rejection();
+        }
+        let (hw, d) = self.inner.sample_valid(rng);
+        (hw, draws + d)
+    }
+
+    /// Per loop dimension, the union over all target layers (and all four
+    /// constructive slots) of the lattice-admissible blocking factors `hw`
+    /// leaves the software search — the pruned space's per-dimension
+    /// admissible report. `count` is the number of distinct admissible
+    /// values in the union; a zero count marks a dimension some layer can
+    /// not block at all (the provably-empty signature).
+    pub fn admissible_ranges(&self, hw: &HwConfig) -> [FactorRange; 6] {
+        let mut unions: [BTreeSet<u64>; 6] = std::array::from_fn(|_| BTreeSet::new());
+        let mut emptied = [false; 6];
+        for layer in &self.layers {
+            let fs = self.layer_sampler(layer, hw);
+            let sets = fs.lattice_sets();
+            // slot-major: each entry holds the six per-dimension value sets
+            // of one constructive slot
+            for per_slot in &sets {
+                for (i, vals) in per_slot.iter().enumerate() {
+                    if vals.is_empty() {
+                        emptied[i] = true;
+                    }
+                    unions[i].extend(vals.iter().copied());
+                }
+            }
+        }
+        std::array::from_fn(|i| {
+            let set = &unions[i];
+            match (set.first(), set.last()) {
+                (Some(&min), Some(&max)) if !emptied[i] => {
+                    FactorRange { min, max, count: set.len() }
+                }
+                (Some(&min), Some(&max)) => FactorRange { min, max, count: 0 },
+                _ => FactorRange { min: 1, max: 1, count: 0 },
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::DataflowOpt;
+    use crate::model::workload::Dim;
+    use crate::workloads::eyeriss::eyeriss_hw;
+    use crate::workloads::specs::dqn;
+
+    fn dqn_pruned() -> PrunedHwSpace {
+        PrunedHwSpace::new(Resources::eyeriss_168(), dqn().layers)
+    }
+
+    /// A configuration whose pinned 8x8 DQN-K1 weight tile (64 words)
+    /// overflows the weight sub-buffer: provably empty for DQN-K1.
+    fn empty_for_dqn_k1() -> HwConfig {
+        let mut hw = eyeriss_hw(168);
+        hw.df_filter_w = DataflowOpt::FullAtPe;
+        hw.df_filter_h = DataflowOpt::FullAtPe;
+        hw.lb_weights = 32;
+        hw.lb_inputs = 172;
+        hw.lb_outputs = 16;
+        hw
+    }
+
+    #[test]
+    fn eyeriss_is_certified_constructive_for_dqn() {
+        let pruned = dqn_pruned();
+        let cert = pruned.certify(&eyeriss_hw(168));
+        assert_eq!(cert.per_layer.len(), 2);
+        assert!(cert.admits_all());
+        assert!(cert.constructive_for_all());
+        assert_eq!(cert.empty_layers(), 0);
+        assert!(pruned.admits(&eyeriss_hw(168)));
+    }
+
+    #[test]
+    fn pinned_overflow_is_certified_empty_and_rejected() {
+        let pruned = dqn_pruned();
+        let hw = empty_for_dqn_k1();
+        assert_eq!(hw.check(pruned.resources()), Ok(()), "fixture must be Fig.7-valid");
+        let cert = pruned.certify(&hw);
+        assert_eq!(cert.per_layer[0], SpaceCheck::ProvablyEmpty, "DQN-K1 must be empty");
+        assert!(!cert.admits_all());
+        assert!(cert.empty_layers() >= 1);
+        assert!(!pruned.admits(&hw));
+    }
+
+    #[test]
+    fn unconstrained_space_admits_everything() {
+        let pruned = PrunedHwSpace::unconstrained(Resources::eyeriss_168());
+        let cert = pruned.certify(&empty_for_dqn_k1());
+        assert!(cert.per_layer.is_empty());
+        assert!(cert.admits_all());
+        let mut rng = Rng::seed_from_u64(1);
+        // degrades to the plain constructive sampler: one draw per config
+        for _ in 0..50 {
+            let (hw, draws) = pruned.sample_valid(&mut rng);
+            assert_eq!(draws, 1);
+            assert_eq!(hw.check(pruned.resources()), Ok(()));
+        }
+    }
+
+    #[test]
+    fn pruned_sampling_rejects_empty_configs_before_evaluation() {
+        let pruned = dqn_pruned();
+        let before = telemetry::snapshot();
+        let mut rng = Rng::seed_from_u64(7);
+        let mut total_draws = 0u64;
+        for _ in 0..200 {
+            let (hw, draws) = pruned.sample_valid(&mut rng);
+            total_draws += draws;
+            // every returned configuration is admissible...
+            assert!(pruned.certify(&hw).admits_all());
+            assert_eq!(hw.check(pruned.resources()), Ok(()));
+        }
+        // ...and the 8x8 DQN-K1 filters make double-FullAtPe small-buffer
+        // draws common enough that the pruner must actually have fired
+        let delta = telemetry::snapshot().since(&before);
+        assert!(delta.prune_rejections >= 1, "no rejection in 200 samples: {delta:?}");
+        assert!(total_draws > 200, "rejected draws must be accounted: {total_draws}");
+        assert!(delta.prune_certificates >= 200, "certificates must be counted: {delta:?}");
+    }
+
+    #[test]
+    fn glb_tight_layers_are_pruned_exactly() {
+        // the shared hand-computed GLB-tight fixture (see
+        // `space::feasible::fixtures`) as a one-layer target set: capacity
+        // 12 keeps a witness, capacity 11 is proven empty — the pruner must
+        // track that boundary exactly
+        let fixture = crate::space::feasible::fixtures::tight_fixture;
+        let (layer, hw, res) = fixture(12);
+        let feasible = PrunedHwSpace::new(res, vec![layer]);
+        let cert = feasible.certify(&hw);
+        assert_eq!(cert.per_layer, vec![SpaceCheck::GlbTight]);
+        assert!(cert.admits_all(), "tight-but-feasible must not be pruned");
+        let (layer, hw, res) = fixture(11);
+        let empty = PrunedHwSpace::new(res, vec![layer]);
+        let cert = empty.certify(&hw);
+        assert_eq!(cert.per_layer, vec![SpaceCheck::GlbTight]);
+        assert!(!cert.admits_all(), "tight-and-proven-empty must be pruned");
+        assert_eq!(cert.empty_layers(), 1);
+    }
+
+    #[test]
+    fn admissible_ranges_union_layers_and_flag_empty_dims() {
+        let pruned = dqn_pruned();
+        let ranges = pruned.admissible_ranges(&eyeriss_hw(168));
+        // P spans both layers: DQN-K1 has P=20, DQN-K2 has P=9; the union
+        // must cover divisors of both (max is bounded by mesh/capacity cuts
+        // but at least the GLB slot keeps full divisor reach)
+        let p = ranges[Dim::P.index()];
+        assert!(p.count > 0);
+        assert_eq!(p.min, 1);
+        assert_eq!(p.max, 20, "GLB slot keeps the full divisor lattice");
+        // an empty space collapses the pinned dimension's count to zero
+        let ranges = pruned.admissible_ranges(&empty_for_dqn_k1());
+        assert!(
+            ranges.iter().any(|r| r.count == 0),
+            "provably-empty layer must flag a dimension: {ranges:?}"
+        );
+    }
+}

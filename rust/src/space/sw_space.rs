@@ -14,8 +14,15 @@ use crate::model::mapping::{Mapping, Split};
 use crate::model::validity::check_mapping;
 use crate::model::workload::{Dim, Layer, DIMS};
 use crate::space::factors::FactorSplitter;
-use crate::space::feasible::{telemetry as feastel, FeasibleSampler, SpaceCheck};
+use crate::space::feasible::{telemetry as feastel, FeasibleSampler};
 use crate::util::rng::Rng;
+
+/// Rejection-probe cap for GLB-tight spaces that carry a feasibility
+/// witness: the exact certificate already proves the space non-empty, so
+/// the rejection fallback is a bounded diversity probe (not a search) and
+/// repeated `sample_valid` calls can never re-burn a caller's full
+/// `max_draws` budget on a space that is resolved.
+pub const WITNESS_PROBE_DRAWS: u64 = 2_048;
 
 /// The mapping space for one layer on one hardware configuration.
 #[derive(Clone, Debug)]
@@ -93,28 +100,44 @@ impl SwSpace {
 
     /// One valid mapping and the raw draws it cost. Constructive first: the
     /// feasibility engine emits a valid-by-construction mapping in a single
-    /// draw whenever the propagation pass can start. Otherwise — a provably
-    /// empty space, or the rare GLB-tight corner — it degrades to the
-    /// cross-checked rejection fallback with a `max_draws` budget; `None`
-    /// means no valid mapping was found, which is how the software optimizer
-    /// detects the hardware's unknown-constraint violation ("valid mappings
-    /// cannot be sampled", paper §4.2). Exhaustion never panics.
+    /// draw whenever the propagation pass can start. A space whose
+    /// emptiness is *certified* — the pinned minimal tile overflows a local
+    /// buffer, or a GLB-tight space whose exhaustive spatial witness search
+    /// proved no mapping exists — returns `None` without burning a single
+    /// raw draw; that is how the software optimizer detects the hardware's
+    /// unknown-constraint violation ("valid mappings cannot be sampled",
+    /// paper §4.2). The remaining case (GLB-tight with a known witness)
+    /// runs the cross-checked rejection fallback — bounded at
+    /// [`WITNESS_PROBE_DRAWS`], since the space is already resolved exactly
+    /// and rejection only adds sample diversity, the caller's full budget
+    /// must not be re-burned on every call — and on exhaustion degrades to
+    /// the witness itself rather than mis-reporting a provably non-empty
+    /// space as unsampleable. Exhaustion never panics.
     pub fn sample_valid(&self, rng: &mut Rng, max_draws: u64) -> Option<(Mapping, u64)> {
         if let Some(m) = self.feasible.sample(rng) {
             debug_assert!(self.is_valid(&m), "constructed mapping failed the validator");
             return Some((m, 1));
         }
-        if self.feasible.check() == SpaceCheck::ProvablyEmpty {
+        if self.feasible.certified_empty() {
             feastel::record_infeasible_space();
             return None;
         }
-        match self.sample_valid_rejection(rng, max_draws) {
+        // only a GLB-tight space with a known witness reaches this point
+        let budget = max_draws.min(WITNESS_PROBE_DRAWS);
+        match self.sample_valid_rejection(rng, budget) {
             Some((m, draws)) => {
                 feastel::record_fallback_sample(draws);
                 Some((m, draws))
             }
             None => {
-                feastel::record_fallback_exhausted(max_draws);
+                feastel::record_fallback_exhausted(budget);
+                if let Some(w) = self.feasible.glb_witness() {
+                    debug_assert!(self.is_valid(&w), "GLB-tight witness failed the validator");
+                    // served from the cached witness, not constructed and
+                    // not found by rejection: visible in telemetry as
+                    // fallback draws without a fallback sample
+                    return Some((w, budget));
+                }
                 feastel::record_infeasible_space();
                 None
             }
@@ -296,6 +319,33 @@ mod tests {
                 assert_eq!(p.split(d).product(), sp.layer.size(d));
             }
         }
+    }
+
+    #[test]
+    fn certified_empty_tight_space_skips_the_rejection_budget() {
+        // the shared hand-computed GLB-tight fixture (see
+        // `space::feasible::fixtures`): capacity 11 admits nothing,
+        // capacity 12 admits only sx[P]=2
+        let tight = |glb_entries: u64| {
+            let (layer, hw, res) =
+                crate::space::feasible::fixtures::tight_fixture(glb_entries);
+            SwSpace::new(layer, hw, res)
+        };
+        // proven empty: None, instantly — the exact certificate replaces
+        // the old rejection-budget burn
+        let sp = tight(11);
+        let mut rng = Rng::seed_from_u64(1);
+        assert!(sp.feasible().certified_empty());
+        assert!(sp.sample_valid(&mut rng, 1_000_000).is_none());
+        // tight but feasible: rejection may serve it, and with a zero draw
+        // budget the witness itself is the degradation path
+        let sp = tight(12);
+        let mut rng = Rng::seed_from_u64(2);
+        assert!(!sp.feasible().certified_empty());
+        let (m, draws) = sp.sample_valid(&mut rng, 0).expect("witness must back the space");
+        assert_eq!(draws, 0, "the witness is free");
+        assert!(sp.is_valid(&m));
+        assert_eq!(m.split(Dim::P).spatial_x, 2, "only the spread-P witness fits");
     }
 
     #[test]

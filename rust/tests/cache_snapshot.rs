@@ -4,54 +4,21 @@
 //! instances), and a snapshot written under one evaluator fingerprint must
 //! refuse to load into an evaluator with a different cost model.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+mod common;
+
 use std::sync::Arc;
 
 use codesign::model::arch::Resources;
 use codesign::model::batch::BatchEvaluator;
 use codesign::model::cache::{CachePolicy, EvalCache};
 use codesign::model::eval::Evaluator;
-use codesign::model::mapping::Mapping;
-use codesign::model::workload::{Dim, Layer};
-use codesign::space::sw_space::SwSpace;
 use codesign::util::prop::forall_simple;
-use codesign::util::rng::Rng;
-use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
-use codesign::workloads::specs::all_models;
+use codesign::workloads::eyeriss::eyeriss_hw;
 
-static CASE: AtomicUsize = AtomicUsize::new(0);
+use common::{random_workload, temp_path};
 
 fn snapshot_path(tag: &str) -> std::path::PathBuf {
-    let case = CASE.fetch_add(1, Ordering::Relaxed);
-    std::env::temp_dir().join(format!(
-        "codesign_prop_snap_{tag}_{}_{case}.snap",
-        std::process::id()
-    ))
-}
-
-/// A batch of design points on the Eyeriss-168 hardware: mostly valid
-/// mappings over random 168-PE layers, with some corrupted to exercise the
-/// `Infeasible` side of the outcome codec.
-fn random_workload(rng: &mut Rng) -> Vec<(Layer, Mapping)> {
-    let layers: Vec<Layer> = all_models()
-        .into_iter()
-        .filter(|m| m.num_pes == 168)
-        .flat_map(|m| m.layers)
-        .collect();
-    let hw = eyeriss_hw(168);
-    let n = 3 + rng.below(6);
-    (0..n)
-        .map(|i| {
-            let layer = layers[rng.below(layers.len())].clone();
-            let space = SwSpace::new(layer.clone(), hw.clone(), eyeriss_resources(168));
-            let (mut m, _) = space.sample_valid(rng, 10_000_000).expect("eyeriss mappable");
-            if i % 3 == 2 {
-                // break the factor product: a cached Err outcome
-                m.split_mut(Dim::C).dram += 1;
-            }
-            (layer, m)
-        })
-        .collect()
+    temp_path(tag).with_extension("snap")
 }
 
 fn bits_of(o: &Option<f64>) -> Option<u64> {

@@ -1,0 +1,154 @@
+//! Shared integration-test fixtures: the "paper layer on Eyeriss hardware"
+//! setup that used to be hand-rolled separately in
+//! `feasible_construction.rs`, `surrogate_robustness.rs` and
+//! `cache_snapshot.rs` now lives here, so every suite samples the same
+//! spaces the production driver builds.
+//!
+//! Each integration-test binary compiles its own copy of this module
+//! (`mod common;`), so not every helper is used by every binary.
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use codesign::model::arch::{DataflowOpt, HwConfig, Resources};
+use codesign::model::eval::Evaluator;
+use codesign::model::mapping::Mapping;
+use codesign::model::workload::{Dim, Layer};
+use codesign::opt::sw_search::SwProblem;
+use codesign::space::sw_space::SwSpace;
+use codesign::util::rng::Rng;
+use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+use codesign::workloads::specs::{all_models, layer_by_name};
+
+/// Every paper layer paired with the PE budget it is evaluated on.
+pub fn paper_layers() -> Vec<(Layer, u64)> {
+    all_models()
+        .into_iter()
+        .flat_map(|m| {
+            let pes = m.num_pes;
+            m.layers.into_iter().map(move |l| (l, pes))
+        })
+        .collect()
+}
+
+/// One paper layer by name, with its budget.
+pub fn paper_layer(name: &str) -> (Layer, u64) {
+    paper_layers()
+        .into_iter()
+        .find(|(l, _)| l.name == name)
+        .unwrap_or_else(|| panic!("unknown paper layer {name}"))
+}
+
+/// The software mapping space of a paper layer on the Eyeriss hardware of
+/// its own PE budget — the standard "small hw config + paper layer" fixture.
+pub fn eyeriss_space(name: &str) -> SwSpace {
+    let (layer, pes) = paper_layer(name);
+    SwSpace::new(layer, eyeriss_hw(pes), eyeriss_resources(pes))
+}
+
+/// The same fixture wrapped as a search problem (space + memoizing batch
+/// evaluator over the budget's simulator).
+pub fn eyeriss_problem(name: &str) -> SwProblem {
+    let (_, pes) = paper_layer(name);
+    SwProblem::new(eyeriss_space(name), Evaluator::new(eyeriss_resources(pes)))
+}
+
+/// A batch of design points on the Eyeriss-168 hardware: mostly valid
+/// mappings over random 168-PE paper layers, with every third mapping
+/// corrupted (broken factor product) to exercise `Infeasible` outcomes.
+pub fn random_workload(rng: &mut Rng) -> Vec<(Layer, Mapping)> {
+    let layers: Vec<Layer> = all_models()
+        .into_iter()
+        .filter(|m| m.num_pes == 168)
+        .flat_map(|m| m.layers)
+        .collect();
+    let hw = eyeriss_hw(168);
+    let n = 3 + rng.below(6);
+    (0..n)
+        .map(|i| {
+            let layer = layers[rng.below(layers.len())].clone();
+            let space = SwSpace::new(layer.clone(), hw.clone(), eyeriss_resources(168));
+            let (mut m, _) = space.sample_valid(rng, 10_000_000).expect("eyeriss mappable");
+            if i % 3 == 2 {
+                // break the factor product: a cached Err outcome
+                m.split_mut(Dim::C).dram += 1;
+            }
+            (layer, m)
+        })
+        .collect()
+}
+
+/// Noiseless linear regression data (`y = 10 + w.x`) for surrogate tests.
+pub fn random_linear_data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let w: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let x: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..d).map(|_| rng.normal() * 0.5).collect()).collect();
+    let y: Vec<f64> = x
+        .iter()
+        .map(|xi| 10.0 + xi.iter().zip(w.iter()).map(|(a, b)| a * b).sum::<f64>())
+        .collect();
+    (x, y)
+}
+
+static CASE: AtomicUsize = AtomicUsize::new(0);
+
+/// A collision-free temp-file path for snapshot/checkpoint round-trips
+/// (unique per process *and* per call, so parallel test cases never race).
+pub fn temp_path(tag: &str) -> PathBuf {
+    let case = CASE.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "codesign_test_{tag}_{}_{case}",
+        std::process::id()
+    ))
+}
+
+/// Convenience: `layer_by_name` that panics with the name on failure.
+pub fn layer(name: &str) -> Layer {
+    layer_by_name(name).unwrap_or_else(|| panic!("unknown layer {name}"))
+}
+
+/// A Fig.7-valid configuration whose pinned 8x8 DQN-K1 tiles overflow the
+/// weight sub-buffer — a guaranteed `ProvablyEmpty` fixture for the
+/// DQN-K1 mapping space.
+pub fn known_empty_hw() -> HwConfig {
+    let mut hw = eyeriss_hw(168);
+    hw.df_filter_w = DataflowOpt::FullAtPe;
+    hw.df_filter_h = DataflowOpt::FullAtPe;
+    hw.lb_weights = 32;
+    hw.lb_inputs = 172;
+    hw.lb_outputs = 16;
+    hw
+}
+
+/// The hand-computed GLB-tight fixture, mirroring the crate-internal
+/// `space::feasible::fixtures::tight_fixture` (`#[cfg(test)]` items are
+/// not visible to integration tests): GLB usage by spatial split of P is
+/// {sx=1: 14, sx=2: 12, sx=4: 16} words, so capacity 12 is
+/// tight-but-feasible (witness at sx[P]=2) and capacity 11 is
+/// tight-and-provably-empty.
+pub fn glb_tight_space(glb_entries: u64) -> SwSpace {
+    let layer = Layer::conv("tight", 3, 1, 4, 1, 1, 1, 1);
+    let hw = HwConfig {
+        pe_mesh_x: 4,
+        pe_mesh_y: 1,
+        lb_inputs: 3,
+        lb_weights: 3,
+        lb_outputs: 1,
+        gb_instances: 2,
+        gb_mesh_x: 2,
+        gb_mesh_y: 1,
+        gb_block: 1,
+        gb_cluster: 1,
+        df_filter_w: DataflowOpt::FullAtPe,
+        df_filter_h: DataflowOpt::Streamed,
+    };
+    let res = Resources {
+        num_pes: 4,
+        local_buffer_entries: 7,
+        global_buffer_entries: glb_entries,
+        dram_words_per_cycle: 4.0,
+        gb_words_per_cycle_per_instance: 2.0,
+    };
+    SwSpace::new(layer, hw, res)
+}

@@ -1,0 +1,250 @@
+//! Deterministic end-to-end regression suite (ISSUE 5): fixed-seed mini
+//! runs of every search loop over paper layers, pinning search behavior to
+//! reproducible numbers. Asserts (1) the best ln(EDP) — and in fact the
+//! entire evaluation trace — is bit-stable across two in-process runs with
+//! the same seed, (2) zero invalid observations ever enter a trace on
+//! constructive spaces (random/BO/round-BO/heuristic/TVM all generate
+//! feasible-by-construction candidates), and (3) checkpoint save -> resume
+//! reproduces the uninterrupted run's incumbent bit-exactly.
+//!
+//! Budgets are deliberately tiny: the value of this suite is determinism,
+//! not coverage — any behavioral drift in the samplers, surrogates,
+//! batching or caching shows up as a bit difference here before it shows up
+//! as a silently different Fig. 3/4 curve.
+
+mod common;
+
+use codesign::coordinator::checkpoint::Checkpoint;
+use codesign::coordinator::driver::Driver;
+use codesign::model::arch::HwConfig;
+use codesign::model::eval::Evaluator;
+use codesign::opt::config::{BoConfig, NestedConfig};
+use codesign::opt::heuristic;
+use codesign::opt::hw_search::{self, Chunking, HwMethod};
+use codesign::opt::sw_search::{self, SearchTrace, SurrogateKind, SwMethod, SwProblem};
+use codesign::opt::transfer::{self, TransferPrior};
+use codesign::space::prune::PrunedHwSpace;
+use codesign::space::sw_space::SwSpace;
+use codesign::surrogate::gp::GpBackend;
+use codesign::util::rng::Rng;
+use codesign::workloads::eyeriss::eyeriss_resources;
+use codesign::workloads::specs::dqn;
+
+/// The paper layers the mini runs cover: the two DQN conv layers plus one
+/// matmul-as-conv layer (different extents, same 168-PE budget).
+const E2E_LAYERS: [&str; 3] = ["DQN-K1", "DQN-K2", "MLP-K2"];
+
+fn quick_sw_cfg() -> BoConfig {
+    BoConfig { warmup: 4, pool: 12, ..BoConfig::software() }
+}
+
+fn quick_hw_cfg() -> BoConfig {
+    BoConfig { warmup: 2, pool: 8, ..BoConfig::hardware() }
+}
+
+/// Run `f` twice and require bit-identical traces; returns the first run.
+fn assert_trace_bit_stable(tag: &str, f: &dyn Fn() -> SearchTrace) -> SearchTrace {
+    let a = f();
+    let b = f();
+    assert_eq!(a.evals.len(), b.evals.len(), "{tag}: trial counts differ");
+    for (i, (x, y)) in a.evals.iter().zip(b.evals.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: eval {i} differs across reruns");
+    }
+    assert_eq!(
+        a.best_edp.ln().to_bits(),
+        b.best_edp.ln().to_bits(),
+        "{tag}: best ln(EDP) not bit-stable"
+    );
+    a
+}
+
+fn run_sw(method: SwMethod, layer: &str, seed: u64, trials: usize) -> SearchTrace {
+    // a fresh problem (and evaluation cache) per run: reruns share nothing
+    let problem = common::eyeriss_problem(layer);
+    let mut rng = Rng::seed_from_u64(seed);
+    sw_search::search(method, &problem, trials, &quick_sw_cfg(), &GpBackend::Native, &mut rng)
+}
+
+#[test]
+fn software_searches_are_bit_stable_with_zero_invalid_observations() {
+    let cases: [(&str, SwMethod); 4] = [
+        ("random", SwMethod::Random),
+        ("bo-gp", SwMethod::Bo { surrogate: SurrogateKind::Gp }),
+        ("round-bo", SwMethod::RoundBo),
+        ("tvm-xgb", SwMethod::TvmXgb),
+    ];
+    for layer in E2E_LAYERS {
+        for (name, method) in cases {
+            let tag = format!("{name}/{layer}");
+            let t = assert_trace_bit_stable(&tag, &|| run_sw(method, layer, 42, 18));
+            assert!(t.found_feasible(), "{tag}: no feasible design found");
+            assert_eq!(t.evals.len(), 18, "{tag}: trials were silently dropped");
+            let invalid = t.evals.iter().filter(|e| e.is_infinite()).count();
+            assert_eq!(
+                invalid, 0,
+                "{tag}: invalid observation on a constructive space \
+                 (round-BO runs the lattice box, everything else constructs)"
+            );
+        }
+    }
+}
+
+#[test]
+fn heuristic_search_is_bit_stable_and_fully_feasible() {
+    for layer in E2E_LAYERS {
+        let tag = format!("heuristic/{layer}");
+        let t = assert_trace_bit_stable(&tag, &|| {
+            let problem = common::eyeriss_problem(layer);
+            let mut rng = Rng::seed_from_u64(7);
+            heuristic::search(&problem, 20, &mut rng)
+        });
+        assert!(t.found_feasible(), "{tag}");
+        assert_eq!(t.evals.iter().filter(|e| e.is_infinite()).count(), 0, "{tag}");
+    }
+}
+
+/// A real (non-synthetic) inner objective for the hardware loops: a tiny
+/// fixed-seed random software search of DQN-K2 per candidate config. The
+/// per-call counter keeps every evaluation on its own deterministic stream
+/// regardless of how the outer loop batches configs.
+fn real_inner() -> impl FnMut(&[HwConfig]) -> Vec<Option<f64>> {
+    let mut k = 0u64;
+    move |hws: &[HwConfig]| {
+        hws.iter()
+            .map(|hw| {
+                k += 1;
+                let res = eyeriss_resources(168);
+                let problem = SwProblem::new(
+                    SwSpace::new(common::layer("DQN-K2"), hw.clone(), res.clone()),
+                    Evaluator::new(res),
+                );
+                let mut rng = Rng::seed_from_u64(1000 + k);
+                let t = sw_search::random_search(&problem, 5, &quick_sw_cfg(), &mut rng);
+                t.found_feasible().then_some(t.best_edp)
+            })
+            .collect()
+    }
+}
+
+#[test]
+fn hardware_search_is_bit_stable_over_a_real_inner_loop() {
+    let space =
+        PrunedHwSpace::new(eyeriss_resources(168), vec![common::layer("DQN-K2")]);
+    let run = || {
+        let mut rng = Rng::seed_from_u64(5);
+        hw_search::search(
+            HwMethod::Bo,
+            &space,
+            real_inner(),
+            6,
+            &quick_hw_cfg(),
+            &Chunking::default(),
+            &GpBackend::Native,
+            &mut rng,
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.evals.len(), 6);
+    for (i, (x, y)) in a.evals.iter().zip(b.evals.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "hw trial {i} differs across reruns");
+    }
+    assert_eq!(a.best_edp.ln().to_bits(), b.best_edp.ln().to_bits());
+    // every evaluated config held a non-empty certificate
+    for hw in &a.configs {
+        assert!(space.certify(hw).admits_all(), "provably-empty config was evaluated");
+    }
+}
+
+#[test]
+fn transfer_search_is_bit_stable_over_a_source_prior() {
+    let space =
+        PrunedHwSpace::new(eyeriss_resources(168), vec![common::layer("DQN-K2")]);
+    // source trace: the random hardware baseline over the same real inner
+    let mut rng = Rng::seed_from_u64(3);
+    let source = hw_search::search(
+        HwMethod::Random,
+        &space,
+        real_inner(),
+        6,
+        &quick_hw_cfg(),
+        &Chunking::default(),
+        &GpBackend::Native,
+        &mut rng,
+    );
+    let prior = TransferPrior::from_trace(&source);
+    assert!(!prior.is_empty());
+    let run = || {
+        let mut rng = Rng::seed_from_u64(9);
+        transfer::search_with_prior(
+            &space,
+            &prior,
+            real_inner(),
+            5,
+            &quick_hw_cfg(),
+            &GpBackend::Native,
+            &mut rng,
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.evals.len(), 5);
+    for (x, y) in a.evals.iter().zip(b.evals.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "transfer eval differs across reruns");
+    }
+    assert_eq!(a.best_edp.ln().to_bits(), b.best_edp.ln().to_bits());
+}
+
+fn tiny_nested() -> NestedConfig {
+    NestedConfig {
+        hw_trials: 3,
+        sw_trials: 8,
+        hw_bo: BoConfig { warmup: 2, pool: 6, ..BoConfig::hardware() },
+        sw_bo: BoConfig { warmup: 3, pool: 6, ..BoConfig::software() },
+    }
+}
+
+#[test]
+fn nested_codesign_is_bit_stable_and_checkpoint_resume_reproduces_incumbent() {
+    let ckpt = common::temp_path("e2e_ckpt").with_extension("txt");
+    let run = |path: Option<std::path::PathBuf>| {
+        let mut d = Driver::new(tiny_nested());
+        d.verbose = false;
+        d.threads = 2;
+        d.checkpoint_path = path;
+        d.run(&dqn(), &GpBackend::Native, 33)
+    };
+    let a = run(Some(ckpt.clone()));
+    let b = run(None);
+
+    // (1) the full hardware trace — and thus the incumbent — is bit-stable
+    // across two in-process runs at the same seed, threads and all
+    assert_eq!(a.hw_trace.evals.len(), b.hw_trace.evals.len());
+    for (i, (x, y)) in a.hw_trace.evals.iter().zip(b.hw_trace.evals.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "hw trial {i} differs across driver reruns");
+    }
+    assert_eq!(a.hw_trace.best_edp.ln().to_bits(), b.hw_trace.best_edp.ln().to_bits());
+
+    // (3) checkpoint save -> resume: what a resumed process loads from disk
+    // is the uninterrupted run's incumbent, and re-evaluating the persisted
+    // design reproduces every per-layer EDP (and their sum) bit-exactly
+    let best = a.best.expect("dqn run must find a feasible design");
+    let loaded = Checkpoint::load(&ckpt).expect("checkpoint must load");
+    assert_eq!(loaded, best, "persisted incumbent differs from the in-memory one");
+    let eval = Evaluator::new(eyeriss_resources(dqn().num_pes));
+    let mut sum = 0.0;
+    for (name, mapping, edp) in &loaded.layers {
+        let layer = common::layer(name);
+        let re = eval
+            .edp(&layer, &loaded.hw, mapping)
+            .expect("checkpointed mapping must stay valid");
+        assert_eq!(re.to_bits(), edp.to_bits(), "layer {name}: EDP drifted across resume");
+        sum += re;
+    }
+    assert_eq!(
+        sum.to_bits(),
+        loaded.best_edp.to_bits(),
+        "re-evaluated layer sum must reproduce the incumbent EDP"
+    );
+    std::fs::remove_file(&ckpt).ok();
+}

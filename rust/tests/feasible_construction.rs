@@ -6,30 +6,19 @@
 //! by an order of magnitude in raw draws (the bench enforces the exact bar;
 //! here we check the mechanism end to end through the search loops).
 
-use codesign::model::eval::Evaluator;
+mod common;
+
 use codesign::model::validity::check_mapping;
-use codesign::model::workload::Layer;
 use codesign::opt::config::BoConfig;
 use codesign::opt::round_bo;
-use codesign::opt::sw_search::SwProblem;
 use codesign::space::feasible::{FeasibleSampler, SpaceCheck};
 use codesign::space::hw_space::HwSpace;
 use codesign::space::sw_space::SwSpace;
 use codesign::util::prop::forall_simple;
 use codesign::util::rng::Rng;
-use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
-use codesign::workloads::specs::all_models;
+use codesign::workloads::eyeriss::eyeriss_resources;
 
-/// Every paper layer paired with the budget it is evaluated on.
-fn paper_layers() -> Vec<(Layer, u64)> {
-    all_models()
-        .into_iter()
-        .flat_map(|m| {
-            let pes = m.num_pes;
-            m.layers.into_iter().map(move |l| (l, pes))
-        })
-        .collect()
-}
+use common::paper_layers;
 
 #[test]
 fn prop_constructed_samples_pass_check_mapping_on_sampled_hardware() {
@@ -161,9 +150,7 @@ fn constructive_sampling_beats_rejection_by_10x_on_paper_layers() {
     // largest; DQN-K2 is checked at a conservative >1x floor (its smaller
     // extents leave rejection less room to waste).
     for (name, floor) in [("ResNet-K2", 10), ("ResNet-K4", 10), ("DQN-K2", 1)] {
-        let (layer, pes) = paper_layers().into_iter().find(|(l, _)| l.name == name).unwrap();
-        let res = eyeriss_resources(pes);
-        let space = SwSpace::new(layer, eyeriss_hw(pes), res);
+        let space = common::eyeriss_space(name);
         let n = 50;
         let mut rng = Rng::seed_from_u64(1);
         let mut constructive = 0u64;
@@ -193,15 +180,14 @@ fn round_bo_with_projection_lowers_the_invalid_rate_end_to_end() {
     // paper layer: projected round-BO strictly beats the penalty-recording
     // baseline on invalid observations, and the feasibility telemetry that
     // coordinator::metrics surfaces moves accordingly.
-    let (layer, pes) = paper_layers().into_iter().find(|(l, _)| l.name == "DQN-K2").unwrap();
-    let problem = SwProblem::new(
-        SwSpace::new(layer, eyeriss_hw(pes), eyeriss_resources(pes)),
-        Evaluator::new(eyeriss_resources(pes)),
-    );
+    let problem = common::eyeriss_problem("DQN-K2");
     let run = |project: bool| {
         let mut rng = Rng::seed_from_u64(2);
         let mut cfg = BoConfig { warmup: 5, pool: 20, ..BoConfig::software() };
         cfg.project_rounding = project;
+        // both arms on the PR-4 box: this test isolates the projection
+        // effect (the lattice box is covered by its own suite)
+        cfg.lattice_box = false;
         let t = round_bo::search(&problem, 30, &cfg, &mut rng);
         t.evals.iter().filter(|e| e.is_infinite()).count()
     };

@@ -1,0 +1,272 @@
+//! Soundness property tests for the cross-space pruner (ISSUE 5
+//! acceptance): the certificates `PrunedHwSpace` prunes on must be *exact*
+//! where they claim exactness, across sampled hardware configurations × all
+//! paper layers —
+//!
+//! * a `ProvablyEmpty` certificate implies rejection sampling finds nothing
+//!   within `max_pool_draws` (emptiness proofs are never wrong);
+//! * a `Constructive` certificate implies one-draw success (witnesses are
+//!   never wrong either);
+//! * `GlbTight` certificates are exact both ways: a space certified empty
+//!   by the exhaustive spatial witness search is unrefutable by rejection,
+//!   and a space certified non-empty carries a witness that passes the
+//!   full validator;
+//!
+//! plus the lattice-box containment property: every feasible mapping's box
+//! coordinates lie inside the relaxation box derived from the lattices
+//! (`FeasibleSampler::lattice_ranges`), however the mapping was obtained
+//! (constructive draw, perturbation walk, or raw rejection sampling).
+
+mod common;
+
+use codesign::model::mapping::Mapping;
+use codesign::model::workload::{Dim, DIMS};
+use codesign::space::feasible::{FeasibleSampler, Slot, SpaceCheck, SLOTS};
+use codesign::space::hw_space::HwSpace;
+use codesign::space::prune::PrunedHwSpace;
+use codesign::space::sw_space::SwSpace;
+use codesign::util::prop::forall_simple;
+use codesign::util::rng::Rng;
+use codesign::workloads::eyeriss::eyeriss_resources;
+
+use common::{glb_tight_space as tight_space, known_empty_hw, paper_layers};
+
+/// Draw budget for refuting `ProvablyEmpty` certificates. An exact proof
+/// holds at *any* budget; this keeps the suite fast while still hammering
+/// each certified-empty space with thousands of raw draws.
+const REFUTE_DRAWS: u64 = 20_000;
+
+#[test]
+fn tight_certificates_are_exact_on_the_hand_computed_fixture() {
+    // capacity 11: certified empty — rejection sampling cannot refute it
+    let space = tight_space(11);
+    assert_eq!(space.feasible().check(), SpaceCheck::GlbTight);
+    assert!(space.feasible().certified_empty());
+    let mut rng = Rng::seed_from_u64(4);
+    assert!(
+        space.sample_valid_rejection(&mut rng, REFUTE_DRAWS).is_none(),
+        "rejection refuted the tight emptiness certificate"
+    );
+    // capacity 12: witness-backed non-emptiness — rejection agrees
+    let space = tight_space(12);
+    assert_eq!(space.feasible().check(), SpaceCheck::GlbTight);
+    assert!(!space.feasible().certified_empty());
+    let w = space.feasible().glb_witness().expect("witness must exist");
+    assert!(space.is_valid(&w));
+    let mut rng = Rng::seed_from_u64(5);
+    let (m, _) = space.sample_valid_rejection(&mut rng, REFUTE_DRAWS).expect("mappable");
+    assert!(space.is_valid(&m));
+    // containment holds on the tight space too: witness and rejection
+    // samples both live inside the lattice box
+    assert_contained("tight", space.feasible(), &w).unwrap();
+    assert_contained("tight", space.feasible(), &m).unwrap();
+}
+
+#[test]
+fn certified_empty_space_is_unrefutable_by_rejection() {
+    let (layer, pes) = common::paper_layer("DQN-K1");
+    let res = eyeriss_resources(pes);
+    let space = SwSpace::new(layer, known_empty_hw(), res);
+    assert_eq!(space.feasible().check(), SpaceCheck::ProvablyEmpty);
+    let mut rng = Rng::seed_from_u64(1);
+    assert!(
+        space.sample_valid_rejection(&mut rng, REFUTE_DRAWS).is_none(),
+        "rejection sampling refuted a ProvablyEmpty certificate"
+    );
+}
+
+#[test]
+fn prop_certificates_are_exact_against_rejection_sampling() {
+    let layers = paper_layers();
+    forall_simple(
+        120,
+        0x9121E5,
+        |rng| {
+            let (layer, pes) = layers[rng.below(layers.len())].clone();
+            let res = eyeriss_resources(pes);
+            let (hw, _) = HwSpace::new(res.clone()).sample_valid(rng);
+            let seed = rng.next_u64();
+            (layer, hw, res, seed)
+        },
+        |(layer, hw, res, seed)| {
+            let space = SwSpace::new(layer.clone(), hw.clone(), res.clone());
+            let mut rng = Rng::seed_from_u64(*seed);
+            match space.feasible().check() {
+                SpaceCheck::ProvablyEmpty => {
+                    // the proof must hold: rejection finds nothing
+                    if let Some((m, d)) = space.sample_valid_rejection(&mut rng, REFUTE_DRAWS)
+                    {
+                        return Err(format!(
+                            "{}: certified empty but rejection found a mapping in {d} \
+                             draws: {m:?}",
+                            layer.name
+                        ));
+                    }
+                }
+                SpaceCheck::Constructive => {
+                    // the witness must hold: one draw per valid mapping
+                    match space.sample_valid(&mut rng, REFUTE_DRAWS) {
+                        Some((m, 1)) if space.is_valid(&m) => {}
+                        Some((_, d)) => {
+                            return Err(format!(
+                                "{}: certified constructive but cost {d} draws",
+                                layer.name
+                            ));
+                        }
+                        _ => {
+                            return Err(format!(
+                                "{}: certified constructive but unsampleable",
+                                layer.name
+                            ));
+                        }
+                    }
+                }
+                SpaceCheck::GlbTight => {
+                    if space.feasible().certified_empty() {
+                        // the exhaustive spatial witness search claims a
+                        // proof: rejection must be unable to refute it
+                        if let Some((m, d)) =
+                            space.sample_valid_rejection(&mut rng, REFUTE_DRAWS)
+                        {
+                            return Err(format!(
+                                "{}: tight space certified empty but rejection found a \
+                                 mapping in {d} draws: {m:?}",
+                                layer.name
+                            ));
+                        }
+                    } else {
+                        // the certificate claims non-emptiness: the witness
+                        // it rests on must pass the full validator
+                        let w = space
+                            .feasible()
+                            .glb_witness()
+                            .ok_or_else(|| format!("{}: no witness", layer.name))?;
+                        if !space.is_valid(&w) {
+                            return Err(format!("{}: invalid tight witness", layer.name));
+                        }
+                        // and whatever rejection finds must validate too
+                        if let Some((m, _)) = space.sample_valid_rejection(&mut rng, 2_000) {
+                            if !space.is_valid(&m) {
+                                return Err(format!(
+                                    "{}: invalid fallback sample",
+                                    layer.name
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pruner_rejects_exactly_the_provably_empty_configs() {
+    let layers: Vec<_> =
+        paper_layers().into_iter().filter(|(_, pes)| *pes == 168).map(|(l, _)| l).collect();
+    let pruned = PrunedHwSpace::new(eyeriss_resources(168), layers.clone());
+    forall_simple(
+        150,
+        0x9121E6,
+        |rng| HwSpace::new(eyeriss_resources(168)).sample_valid(rng).0,
+        |hw| {
+            let cert = pruned.certify(hw);
+            let any_empty = layers.iter().any(|l| {
+                FeasibleSampler::new(l.clone(), hw.clone(), eyeriss_resources(168))
+                    .certified_empty()
+            });
+            if cert.admits_all() == any_empty {
+                return Err(format!(
+                    "admits_all={} disagrees with per-layer certificates \
+                     (any_empty={any_empty})",
+                    cert.admits_all()
+                ));
+            }
+            if (cert.empty_layers() > 0) != any_empty {
+                return Err("empty_layers() inconsistent with per-layer certificates".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Box coordinates of one split factor under `SLOTS` order.
+fn slot_value(m: &Mapping, d: Dim, slot: Slot) -> u64 {
+    let s = m.split(d);
+    match slot {
+        Slot::Local => s.local,
+        Slot::SpatialX => s.spatial_x,
+        Slot::SpatialY => s.spatial_y,
+        Slot::Glb => s.glb,
+    }
+}
+
+fn assert_contained(tag: &str, fs: &FeasibleSampler, m: &Mapping) -> Result<(), String> {
+    let ranges = fs.lattice_ranges();
+    for (i, d) in DIMS.iter().enumerate() {
+        for (si, slot) in SLOTS.iter().enumerate() {
+            let v = slot_value(m, *d, *slot);
+            if !ranges[i][si].contains(v) {
+                return Err(format!(
+                    "{tag}: {d:?}/{slot:?} factor {v} escapes the lattice box {:?}",
+                    ranges[i][si]
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_every_feasible_mapping_lies_inside_the_lattice_box() {
+    let layers = paper_layers();
+    forall_simple(
+        60,
+        0x9121E7,
+        |rng| {
+            let (layer, pes) = layers[rng.below(layers.len())].clone();
+            let res = eyeriss_resources(pes);
+            let (hw, _) = HwSpace::new(res.clone()).sample_valid(rng);
+            let seed = rng.next_u64();
+            (layer, hw, res, seed)
+        },
+        |(layer, hw, res, seed)| {
+            let space = SwSpace::new(layer.clone(), hw.clone(), res.clone());
+            let fs = space.feasible();
+            let mut rng = Rng::seed_from_u64(*seed);
+            // constructive draws + a perturbation walk
+            if let Some(mut cur) = fs.sample(&mut rng) {
+                assert_contained(&layer.name, fs, &cur)?;
+                for _ in 0..10 {
+                    cur = fs.perturb(&mut rng, &cur);
+                    assert_contained(&layer.name, fs, &cur)?;
+                }
+            }
+            // raw rejection sampling reaches corners the constructive
+            // distribution may not — containment must hold there too
+            if let Some((m, _)) = space.sample_valid_rejection(&mut rng, 5_000) {
+                assert_contained(&layer.name, fs, &m)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn eyeriss_lattice_box_contains_the_rejection_distribution_exhaustively() {
+    // Dense single-space check on the paper's most constrained fixture:
+    // many independent rejection-sampled mappings of ResNet-K2 on Eyeriss,
+    // every one inside the derived box.
+    let space = common::eyeriss_space("ResNet-K2");
+    let fs = space.feasible();
+    let mut rng = Rng::seed_from_u64(77);
+    let mut found = 0;
+    for _ in 0..40 {
+        if let Some((m, _)) = space.sample_valid_rejection(&mut rng, 200_000) {
+            assert_contained("ResNet-K2", fs, &m).unwrap();
+            found += 1;
+        }
+    }
+    assert!(found >= 30, "rejection must keep finding mappings here: {found}/40");
+}

@@ -3,22 +3,15 @@
 //! `predict`, duplicate/collinear training sets must be survivable, and the
 //! O(n^2) rank-1 extend path must agree with a full refit to 1e-9.
 
+mod common;
+
 use codesign::runtime::gp_exec::Theta;
 use codesign::surrogate::gp::{FitStatus, GpBackend, GpSurrogate, KernelFamily};
 use codesign::surrogate::gp_native::NativeGp;
 use codesign::surrogate::telemetry;
 use codesign::util::rng::Rng;
 
-fn random_data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
-    let w: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
-    let x: Vec<Vec<f64>> =
-        (0..n).map(|_| (0..d).map(|_| rng.normal() * 0.5).collect()).collect();
-    let y: Vec<f64> = x
-        .iter()
-        .map(|xi| 10.0 + xi.iter().zip(w.iter()).map(|(a, b)| a * b).sum::<f64>())
-        .collect();
-    (x, y)
-}
+use common::random_linear_data as random_data;
 
 fn families() -> Vec<KernelFamily> {
     vec![

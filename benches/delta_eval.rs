@@ -1,0 +1,106 @@
+//! Delta-evaluation benchmark: the tentpole performance contract of the
+//! incremental cost model. A perturbation-shaped move (one dimension resplit
+//! or one loop-order swap) evaluated through [`DeltaEvaluator::edp_delta`]
+//! against a rebased incumbent must beat the from-scratch
+//! `Evaluator::edp` (hw check + mapping check + full `nest::analyze` + energy
+//! roll-up) by >= 5x at bit-identical EDP. Run via
+//! `cargo bench --bench delta_eval`.
+//!
+//! The bit-identity assert runs even in `BENCH_SMOKE=1` mode (deterministic
+//! and cheap); only the wall-clock budgets shrink there, and the >= 5x bar is
+//! enforced in FULL mode on the paper's convolutional ResNet layers where
+//! the full evaluation is most expensive. With `BENCH_JSON_DIR` set, results
+//! and speedup ratios land in `BENCH_delta_eval.json` for the CI trend
+//! artifacts (schema: rust/src/model/README.md).
+
+use std::time::Duration;
+
+use codesign::model::{DeltaEvaluator, Evaluator, MappingDelta};
+use codesign::space::sw_space::SwSpace;
+use codesign::util::benchkit::{bench, JsonSink};
+use codesign::util::rng::Rng;
+use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+use codesign::workloads::specs::layer_by_name;
+
+fn smoke_mode() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some() || std::env::args().any(|a| a == "--smoke")
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let budget = if smoke { Duration::from_millis(1) } else { Duration::from_millis(400) };
+    let n_moves: usize = if smoke { 32 } else { 128 };
+    if smoke {
+        println!("(smoke mode: minimal time budgets; bit-identity still checked)");
+    }
+
+    let mut sink = JsonSink::new("delta_eval");
+    println!("== delta-evaluation benchmarks ==");
+    for layer_name in ["ResNet-K1", "ResNet-K4", "DQN-K2"] {
+        let layer = layer_by_name(layer_name).unwrap();
+        let res = eyeriss_resources(168);
+        let hw = eyeriss_hw(168);
+        let space = SwSpace::new(layer.clone(), hw.clone(), res.clone());
+        let eval = Evaluator::new(res);
+
+        // One incumbent, a fixed pool of feasible single-delta moves off it —
+        // the exact shape of a hill-climb / SA / pool-refinement step.
+        let mut rng = Rng::seed_from_u64(7);
+        let (base, _) = space.sample_valid(&mut rng, 10_000_000).expect("constructive");
+        let moves: Vec<(codesign::model::Mapping, MappingDelta)> =
+            (0..n_moves).map(|_| space.perturb_feasible_described(&mut rng, &base)).collect();
+
+        // Contract check before timing anything: every move's delta-evaluated
+        // EDP is bit-identical to the from-scratch evaluation.
+        let mut de = DeltaEvaluator::new(&eval, &layer, &space.hw);
+        de.rebase(&base).expect("incumbent is feasible");
+        for (cand, delta) in &moves {
+            let full = eval.edp(&layer, &space.hw, cand);
+            let fast = de.edp_delta(cand, *delta);
+            match (full, fast) {
+                (Ok(a), Ok(b)) => assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{layer_name}: delta EDP must be bit-identical ({a} vs {b})"
+                ),
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("{layer_name}: verdicts diverge: {a:?} vs {b:?}"),
+            }
+        }
+
+        // -- from-scratch evaluation of each move --
+        let mut i = 0usize;
+        let full = bench(&format!("full_eval/{layer_name}"), budget, || {
+            let (cand, _) = &moves[i % moves.len()];
+            i += 1;
+            eval.edp(&layer, &space.hw, cand)
+        });
+        sink.push(&full);
+
+        // -- delta evaluation of the same moves against the same incumbent --
+        let mut de = DeltaEvaluator::new(&eval, &layer, &space.hw);
+        de.rebase(&base).expect("incumbent is feasible");
+        let mut i = 0usize;
+        let fast = bench(&format!("delta_eval/{layer_name}"), budget, || {
+            let (cand, delta) = &moves[i % moves.len()];
+            i += 1;
+            de.edp_delta(cand, *delta)
+        });
+        sink.push(&fast);
+
+        let speedup = full.median_ns / fast.median_ns;
+        println!("delta_speedup/{layer_name}: {speedup:.1}x");
+        sink.ratio(&format!("delta_speedup/{layer_name}"), speedup);
+        // The bar is defined on the convolutional layers, where a full
+        // analyze walks all seven dims at four levels; DQN's small GEMM
+        // shapes leave the full path less room to lose, so they only report.
+        if !smoke && layer_name.starts_with("ResNet") {
+            assert!(
+                speedup >= 5.0,
+                "{layer_name}: delta evaluation must beat full re-evaluation \
+                 >=5x on the perturbation path (got {speedup:.1}x)"
+            );
+        }
+    }
+    sink.write().expect("bench json sink");
+}

@@ -12,7 +12,7 @@ use std::time::Duration;
 
 use codesign::model::validity::check_mapping;
 use codesign::space::sw_space::SwSpace;
-use codesign::util::benchkit::bench;
+use codesign::util::benchkit::{bench, JsonSink};
 use codesign::util::rng::Rng;
 use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
 use codesign::workloads::specs::layer_by_name;
@@ -29,6 +29,7 @@ fn main() {
         println!("(smoke mode: minimal time budgets; the draw-count bar still holds)");
     }
 
+    let mut sink = JsonSink::new("feasible_sampling");
     println!("== feasibility-engine benchmarks ==");
     for layer_name in ["ResNet-K2", "ResNet-K4", "DQN-K2"] {
         let layer = layer_by_name(layer_name).unwrap();
@@ -60,6 +61,7 @@ fn main() {
              ({rejection_draws} rejection vs {constructive_draws} constructive raw draws \
              for {n} valid mappings)"
         );
+        sink.ratio(&format!("feasible_draw_reduction/{layer_name}"), ratio);
         // The bar is defined on the heavily-constrained ResNet layers
         // (paper regime ~0.7% feasible); DQN-K2's smaller extents leave
         // rejection less room to waste, so it only reports.
@@ -73,26 +75,31 @@ fn main() {
 
         // -- wall-clock per valid mapping --
         let mut rng = Rng::seed_from_u64(2);
-        bench(&format!("constructive_sample/{layer_name}"), budget, || {
+        let r = bench(&format!("constructive_sample/{layer_name}"), budget, || {
             space.sample_valid(&mut rng, 10_000_000).expect("constructive").0
         });
+        sink.push(&r);
         let mut rng = Rng::seed_from_u64(2);
-        bench(&format!("rejection_sample/{layer_name}"), budget, || {
+        let r = bench(&format!("rejection_sample/{layer_name}"), budget, || {
             space.sample_valid_rejection(&mut rng, 10_000_000).expect("mappable").0
         });
+        sink.push(&r);
 
         // -- perturbation kernel: feasibility-preserving move cost --
         let mut rng = Rng::seed_from_u64(3);
         let (base, _) = space.sample_valid(&mut rng, 10_000_000).expect("constructive");
-        bench(&format!("perturb_feasible/{layer_name}"), budget, || {
+        let r = bench(&format!("perturb_feasible/{layer_name}"), budget, || {
             space.perturb_feasible(&mut rng, &base)
         });
+        sink.push(&r);
 
         // -- projection: nearest-feasible repair of a raw (invalid) draw --
         let mut rng = Rng::seed_from_u64(4);
         let raw = space.sample_raw(&mut rng);
-        bench(&format!("project_feasible/{layer_name}"), budget, || {
+        let r = bench(&format!("project_feasible/{layer_name}"), budget, || {
             space.project_feasible(&raw).expect("constructive space")
         });
+        sink.push(&r);
     }
+    sink.write().expect("bench json sink");
 }

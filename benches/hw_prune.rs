@@ -19,7 +19,7 @@ use codesign::model::arch::HwConfig;
 use codesign::space::hw_space::HwSpace;
 use codesign::space::prune::PrunedHwSpace;
 use codesign::space::sw_space::SwSpace;
-use codesign::util::benchkit::bench;
+use codesign::util::benchkit::{bench, JsonSink};
 use codesign::util::rng::Rng;
 use codesign::workloads::eyeriss::eyeriss_resources;
 use codesign::workloads::specs::dqn;
@@ -89,6 +89,7 @@ fn main() {
         }
     }
 
+    let mut sink = JsonSink::new("hw_prune");
     let ratio = rejection_draws as f64 / cert_cost.max(1) as f64;
     println!(
         "hw_prune_draw_reduction/dqn: {ratio:.1}x \
@@ -105,16 +106,22 @@ fn main() {
         "certificates must cut pre-eval hardware rejection cost >=5x \
          vs rejection-sampling the same configs (got {ratio:.1}x)"
     );
+    sink.ratio("hw_prune_draw_reduction/dqn", ratio);
 
     // -- wall-clock of the pruning primitives --
     let mut i = 0usize;
-    bench("certify/dqn", budget, || {
+    let r = bench("certify/dqn", budget, || {
         i = (i + 1) % configs.len();
         pruned.certify(&configs[i])
     });
+    sink.push(&r);
     let mut rng = Rng::seed_from_u64(3);
-    bench("pruned_sample_valid/dqn", budget, || pruned.sample_valid(&mut rng).0);
+    let r = bench("pruned_sample_valid/dqn", budget, || pruned.sample_valid(&mut rng).0);
+    sink.push(&r);
     let mut rng = Rng::seed_from_u64(3);
-    bench("raw_sample_valid/dqn", budget, || raw_space.sample_valid(&mut rng).0);
-    bench("admissible_ranges/dqn", budget, || pruned.admissible_ranges(&configs[0]));
+    let r = bench("raw_sample_valid/dqn", budget, || raw_space.sample_valid(&mut rng).0);
+    sink.push(&r);
+    let r = bench("admissible_ranges/dqn", budget, || pruned.admissible_ranges(&configs[0]));
+    sink.push(&r);
+    sink.write().expect("bench json sink");
 }

@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use codesign::runtime::gp_exec::Theta;
 use codesign::surrogate::gp_native::NativeGp;
-use codesign::util::benchkit::bench;
+use codesign::util::benchkit::{bench, JsonSink};
 use codesign::util::rng::Rng;
 
 fn data(rng: &mut Rng, n: usize, d: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
@@ -26,6 +26,7 @@ fn main() {
     let budget = if smoke { Duration::from_millis(1) } else { Duration::from_millis(800) };
     let mut rng = Rng::seed_from_u64(1);
     let theta = Theta::hw_default();
+    let mut sink = JsonSink::new("surrogate_update");
 
     println!("== surrogate incremental-update benchmarks ==");
 
@@ -36,6 +37,7 @@ fn main() {
         let full = bench(&format!("native_full_refit/n{n}"), budget, || {
             NativeGp::fit(theta, &x, &y).expect("random data must fit")
         });
+        sink.push(&full);
 
         // The rank-1 path: clone a factor of n-1 points (the clone is part
         // of the measured cost — a real caller keeps the factor live and
@@ -47,9 +49,26 @@ fn main() {
             assert!(gp.extend(&x_last, y_last), "extend must succeed on SPD data");
             gp
         });
+        sink.push(&ext);
+
+        // The blocked path: absorb k observations with one bordered
+        // factorization instead of k rank-1 extends (PR 6's batch sync).
+        let k = 8usize;
+        let blk_base = NativeGp::fit(theta, &x[..n - k], &y[..n - k]).expect("base fit");
+        let (x_tail, y_tail) = (x[n - k..].to_vec(), y[n - k..].to_vec());
+        let blk = bench(&format!("native_extend_block8/n{n}"), budget, || {
+            let mut gp = blk_base.clone();
+            assert!(gp.extend_many(&x_tail, &y_tail), "block extend must succeed");
+            gp
+        });
+        sink.push(&blk);
 
         let speedup = full.median_ns / ext.median_ns;
         println!("surrogate_extend_speedup/n{n}: {speedup:.1}x");
+        sink.ratio(&format!("surrogate_extend_speedup/n{n}"), speedup);
+        let blk_speedup = k as f64 * full.median_ns / blk.median_ns;
+        println!("surrogate_block_absorb_speedup/n{n}: {blk_speedup:.1}x (vs {k} refits)");
+        sink.ratio(&format!("surrogate_block_absorb_speedup/n{n}"), blk_speedup);
         // The acceptance bar is defined at n = 256, where the O(n) gap
         // dominates the clone/alloc constant factors.
         if !smoke && n == 256 {
@@ -59,4 +78,5 @@ fn main() {
             );
         }
     }
+    sink.write().expect("bench json sink");
 }

@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Compare produced bench-trend JSON against committed ratio baselines.
+
+Usage:
+    python3 ci/compare_bench.py --produced bench-json --baselines ci/bench-baselines
+
+Every ``BENCH_<name>.json`` in the baselines directory must have a produced
+counterpart (emitted by ``benchkit::JsonSink`` when ``BENCH_JSON_DIR`` is
+set), and every ratio pinned in the baseline must be present and must not
+regress by more than the tolerance (default 20%: produced >= 0.8 * baseline).
+
+Only *ratios* are compared. Absolute nanoseconds vary with the CI runner;
+speedup ratios of two kernels measured on the same runner in the same run do
+not, which is what makes a committed baseline meaningful. Produced files may
+contain extra ratios not yet pinned by a baseline — those are reported but do
+not gate, so a new bench can ship before its first baseline is ratcheted.
+
+Stdlib only: the repo's offline policy bans new dependencies.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+TOLERANCE = 0.8  # produced must reach this fraction of the baseline ratio
+
+
+def load(path: pathlib.Path) -> dict:
+    with path.open() as fh:
+        doc = json.load(fh)
+    if not isinstance(doc, dict) or "ratios" not in doc:
+        raise ValueError(f"{path}: missing 'ratios' section")
+    return doc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--produced", required=True, help="dir of BENCH_*.json from the run")
+    ap.add_argument("--baselines", required=True, help="dir of committed BENCH_*.json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=TOLERANCE,
+        help="minimum produced/baseline fraction (default %(default)s)",
+    )
+    args = ap.parse_args()
+
+    produced_dir = pathlib.Path(args.produced)
+    baseline_dir = pathlib.Path(args.baselines)
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"error: no baselines found under {baseline_dir}", file=sys.stderr)
+        return 1
+
+    failures = []
+    for base_path in baselines:
+        base = load(base_path)
+        prod_path = produced_dir / base_path.name
+        if not prod_path.is_file():
+            failures.append(f"{base_path.name}: no produced file in {produced_dir}")
+            continue
+        if prod_path.stat().st_size == 0:
+            failures.append(f"{base_path.name}: produced file is empty")
+            continue
+        prod = load(prod_path)
+        prod_ratios = dict(prod["ratios"])
+        for key, want in base["ratios"].items():
+            got = prod_ratios.pop(key, None)
+            if got is None:
+                failures.append(f"{base_path.name}: ratio '{key}' missing from run")
+                continue
+            floor = args.tolerance * want
+            verdict = "ok" if got >= floor else "REGRESSED"
+            print(
+                f"{base_path.name}: {key}: produced {got:.2f}x vs baseline "
+                f"{want:.2f}x (floor {floor:.2f}x) {verdict}"
+            )
+            if got < floor:
+                failures.append(
+                    f"{base_path.name}: '{key}' regressed: {got:.2f}x < "
+                    f"{floor:.2f}x ({args.tolerance:.0%} of baseline {want:.2f}x)"
+                )
+        for key, got in sorted(prod_ratios.items()):
+            print(f"{base_path.name}: {key}: produced {got:.2f}x (no baseline yet)")
+
+    if failures:
+        print(f"\n{len(failures)} bench baseline failure(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nall bench ratios within tolerance of committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

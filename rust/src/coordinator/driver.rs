@@ -165,6 +165,7 @@ impl Driver {
         // at a time.)
         let gp_baseline = crate::surrogate::telemetry::snapshot();
         let feas_baseline = crate::space::feasible::telemetry::snapshot();
+        let delta_baseline = crate::model::delta::telemetry::snapshot();
         // One pruned space per run, shared by the whole hardware search:
         // candidate configs are certified against every layer of the target
         // model and provably-empty ones never reach the simulator.
@@ -281,6 +282,9 @@ impl Driver {
         metrics.record_surrogate(crate::surrogate::telemetry::snapshot().since(&gp_baseline));
         metrics.record_feasibility(
             crate::space::feasible::telemetry::snapshot().since(&feas_baseline),
+        );
+        metrics.record_delta(
+            crate::model::delta::telemetry::snapshot().since(&delta_baseline),
         );
         CodesignOutcome { hw_trace, best: best.into_inner().unwrap(), metrics }
     }

@@ -8,6 +8,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::model::cache::CacheStats;
+use crate::model::delta::telemetry::DeltaStats;
 use crate::space::feasible::telemetry::FeasibilityStats;
 use crate::surrogate::telemetry::SurrogateStats;
 
@@ -60,6 +61,13 @@ pub struct Metrics {
     pub prune_rejections: AtomicU64,
     pub prune_lattice_boxes: AtomicU64,
     pub prune_box_shrink_milli: AtomicU64,
+    /// Delta-evaluation snapshot (stored per run via `record_delta`):
+    /// evaluations served through the incremental terms cache, evaluations
+    /// that fell back to a full analyze, and tile levels re-derived across
+    /// all delta evals (0-3 each; lower means more reuse).
+    pub delta_evals: AtomicU64,
+    pub delta_fallbacks: AtomicU64,
+    pub delta_levels_recomputed: AtomicU64,
     /// Evaluation-cache snapshot (stored, not accumulated: the cache keeps
     /// its own monotone counters).
     pub cache_hits: AtomicU64,
@@ -105,6 +113,9 @@ impl Metrics {
             prune_rejections: AtomicU64::new(0),
             prune_lattice_boxes: AtomicU64::new(0),
             prune_box_shrink_milli: AtomicU64::new(0),
+            delta_evals: AtomicU64::new(0),
+            delta_fallbacks: AtomicU64::new(0),
+            delta_levels_recomputed: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
@@ -164,6 +175,14 @@ impl Metrics {
         self.prune_box_shrink_milli.store(stats.lattice_box_shrink_milli, Ordering::Relaxed);
     }
 
+    /// Surface a delta-evaluation snapshot (typically the per-run delta of
+    /// the process-global counters) in the run telemetry.
+    pub fn record_delta(&self, stats: DeltaStats) {
+        self.delta_evals.store(stats.delta_evals, Ordering::Relaxed);
+        self.delta_fallbacks.store(stats.delta_fallbacks, Ordering::Relaxed);
+        self.delta_levels_recomputed.store(stats.levels_recomputed, Ordering::Relaxed);
+    }
+
     /// Fraction of evaluation requests served from the cache.
     pub fn cache_hit_rate(&self) -> f64 {
         let hits = self.cache_hits.load(Ordering::Relaxed) as f64;
@@ -209,6 +228,7 @@ impl Metrics {
              gp_fits={} gp_data_refits={} gp_extends={} gp_extend_fallbacks={} \
              gp_fit_failures={} gp_jitter_escalations={} gp_warm_refits={} \
              gp_warm_grid_saved={} \
+             delta_evals={} delta_fallbacks={} delta_levels_recomputed={} \
              cache_hits={} cache_misses={} cache_hit_rate={:.3} cache_evictions={} \
              cache_entries={} cache_probationary={} cache_protected={} \
              cache_promotions={} cache_demotions={} cache_snapshot_loaded={} \
@@ -238,6 +258,9 @@ impl Metrics {
             self.gp_jitter_escalations.load(Ordering::Relaxed),
             self.gp_warm_refits.load(Ordering::Relaxed),
             self.gp_warm_grid_saved.load(Ordering::Relaxed),
+            self.delta_evals.load(Ordering::Relaxed),
+            self.delta_fallbacks.load(Ordering::Relaxed),
+            self.delta_levels_recomputed.load(Ordering::Relaxed),
             self.cache_hits.load(Ordering::Relaxed),
             self.cache_misses.load(Ordering::Relaxed),
             self.cache_hit_rate(),
@@ -367,6 +390,20 @@ mod tests {
         assert!(report.contains("prune_box_shrink_milli=9200"));
     }
 
+    #[test]
+    fn delta_snapshot_is_reported() {
+        let m = Metrics::new();
+        m.record_delta(DeltaStats {
+            delta_evals: 500,
+            delta_fallbacks: 12,
+            levels_recomputed: 730,
+        });
+        let report = m.report();
+        assert!(report.contains("delta_evals=500"));
+        assert!(report.contains("delta_fallbacks=12"));
+        assert!(report.contains("delta_levels_recomputed=730"));
+    }
+
     /// Parse a `key=value` report line back into a map — the report is the
     /// serialization format downstream tooling (EXPERIMENTS.md, the CI
     /// warm-start grep) consumes, so it must stay token-splittable with
@@ -425,6 +462,11 @@ mod tests {
             lattice_boxes: 22,
             lattice_box_shrink_milli: 23,
         });
+        m.record_delta(DeltaStats {
+            delta_evals: 24,
+            delta_fallbacks: 25,
+            levels_recomputed: 26,
+        });
         let kv = parse_report(&m.report());
         // every stored numeric field must survive the round trip verbatim
         let expect = [
@@ -452,6 +494,9 @@ mod tests {
             ("gp_jitter_escalations", "7"),
             ("gp_warm_refits", "3"),
             ("gp_warm_grid_saved", "36"),
+            ("delta_evals", "24"),
+            ("delta_fallbacks", "25"),
+            ("delta_levels_recomputed", "26"),
             ("cache_hits", "10"),
             ("cache_misses", "30"),
             ("cache_evictions", "2"),

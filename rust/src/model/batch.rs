@@ -11,6 +11,13 @@
 //! bit-identical to point-wise `Evaluator::evaluate` calls (asserted by
 //! `tests/property_invariants.rs`).
 //!
+//! Misses are computed through [`Evaluator::evaluate_with`] against
+//! [`EvalInvariants`] derived **once per distinct hardware config in the
+//! batch** (the vectorized kernel): the hardware verdict and the hoisted
+//! energy constants are shared across every candidate of a group instead of
+//! being re-derived per point, bit-exactly. See `rust/src/model/README.md`
+//! for where this engine sits in the cache → batch → delta → nest stack.
+//!
 //! Sharing: `BatchEvaluator` is `Clone`; clones share the cache through an
 //! `Arc`, which is how the co-design driver gets cross-round and cross-layer
 //! reuse, and how `runtime::server::EvalService` keeps serving requests warm.
@@ -24,7 +31,7 @@ use anyhow::Result;
 
 use super::arch::HwConfig;
 use super::cache::{CacheStats, DesignKey, EvalCache, EvalOutcome};
-use super::eval::{Evaluator, Infeasible};
+use super::eval::{EvalInvariants, Evaluator, Infeasible};
 use super::mapping::Mapping;
 use super::workload::Layer;
 use crate::coordinator::parallel::{default_threads, parallel_map};
@@ -32,8 +39,11 @@ use crate::coordinator::parallel::{default_threads, parallel_map};
 /// One evaluation request (borrowed; batches are cheap to assemble).
 #[derive(Clone, Copy, Debug)]
 pub struct EvalRequest<'a> {
+    /// The workload layer being mapped.
     pub layer: &'a Layer,
+    /// The hardware configuration to evaluate on.
     pub hw: &'a HwConfig,
+    /// The candidate software mapping.
     pub mapping: &'a Mapping,
 }
 
@@ -269,6 +279,32 @@ impl BatchEvaluator {
             }
         }
 
+        // Vectorized kernel: the hardware check and energy constants of
+        // `Evaluator::evaluate` depend only on (hw, resources), so compute
+        // them once per distinct (layer, hw) pair in the miss set and
+        // evaluate every miss against the shared invariants — bit-identical
+        // to point-wise evaluation (same checks, same arithmetic order).
+        // Pairs are compared by address: batches are assembled from a few
+        // borrowed layers/configs, so identity captures the grouping (a
+        // repeated pair at a new address merely recomputes the invariants).
+        let mut inv_keys: Vec<(*const Layer, *const HwConfig)> = Vec::new();
+        let mut invs: Vec<EvalInvariants> = Vec::new();
+        let inv_idx: Vec<usize> = unique_rep
+            .iter()
+            .map(|&i| {
+                let r = &requests[i];
+                let key = (r.layer as *const Layer, r.hw as *const HwConfig);
+                match inv_keys.iter().position(|&k| k == key) {
+                    Some(p) => p,
+                    None => {
+                        inv_keys.push(key);
+                        invs.push(self.eval.invariants(r.hw));
+                        inv_keys.len() - 1
+                    }
+                }
+            })
+            .collect();
+
         // Inline vs parallel: with a grounded latency EWMA the decision is
         // made from estimated serial seconds (adaptive); cold, it falls
         // back to the fixed unique-miss threshold.
@@ -282,15 +318,16 @@ impl BatchEvaluator {
         let computed: Vec<EvalOutcome> = if !go_parallel {
             unique_rep
                 .iter()
-                .map(|&i| {
+                .enumerate()
+                .map(|(j, &i)| {
                     let r = &requests[i];
-                    self.eval.evaluate(r.layer, r.hw, r.mapping)
+                    self.eval.evaluate_with(&invs[inv_idx[j]], r.layer, r.hw, r.mapping)
                 })
                 .collect()
         } else {
-            parallel_map(&unique_rep, self.threads, |_, &i| {
+            parallel_map(&unique_rep, self.threads, |j, &i| {
                 let r = &requests[i];
-                self.eval.evaluate(r.layer, r.hw, r.mapping)
+                self.eval.evaluate_with(&invs[inv_idx[j]], r.layer, r.hw, r.mapping)
             })
         };
         if !unique_rep.is_empty() {
@@ -379,6 +416,30 @@ mod tests {
                     assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
                     assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
                 }
+                (Err(a), Err(b)) => assert_eq!(*a, b),
+                (a, b) => panic!("batched {a:?} vs point-wise {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_layer_batches_share_invariants_and_match_pointwise() {
+        // two layers in one batch: the invariant grouping must keep each
+        // miss on its own (layer, hw) constants, bit-exactly
+        let (layer_a, hw, mappings, eval) = setup(6);
+        let layer_b = layer_by_name("DQN-K1").unwrap();
+        let trivial_b = Mapping::trivial(&layer_b);
+        let mut requests: Vec<EvalRequest<'_>> = mappings
+            .iter()
+            .map(|m| EvalRequest { layer: &layer_a, hw: &hw, mapping: m })
+            .collect();
+        requests.push(EvalRequest { layer: &layer_b, hw: &hw, mapping: &trivial_b });
+        let batch = BatchEvaluator::new(eval.clone());
+        let got = batch.evaluate_batch(&requests);
+        for (r, outcome) in requests.iter().zip(got.iter()) {
+            let direct = eval.evaluate(r.layer, r.hw, r.mapping);
+            match (outcome, direct) {
+                (Ok(a), Ok(b)) => assert_eq!(a.edp.to_bits(), b.edp.to_bits()),
                 (Err(a), Err(b)) => assert_eq!(*a, b),
                 (a, b) => panic!("batched {a:?} vs point-wise {b:?}"),
             }

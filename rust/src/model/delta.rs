@@ -1,0 +1,737 @@
+//! Incremental (delta) evaluation of the cost model.
+//!
+//! Every perturbation-shaped search loop in this repo — heuristic
+//! hill-climbing, TVM-style simulated-annealing walks, feasible-perturbation
+//! sampling, BO pool refinement — moves *one* dimension's factor split at one
+//! level, or swaps two positions in one loop order, and then re-evaluates the
+//! candidate from scratch. That full re-evaluation re-derives every tile
+//! footprint, reuse walk and replication factor even though a single-level
+//! move provably cannot touch most of them.
+//!
+//! [`DeltaEvaluator`] keeps the incumbent's [`NestTerms`] cache (stage one of
+//! [`nest::analyze`]) and, for a candidate one [`MappingDelta`] away,
+//! recomputes only the terms the touched level can affect before re-running
+//! the [`nest::assemble`] + [`metrics_with`] roll-up. Because the roll-up
+//! executes the same arithmetic on the same values in the same order as a
+//! fresh `analyze` + `metrics`, the result is **bit-identical** — the e2e
+//! regression suite (which pins every search trace to exact bits) cannot
+//! tell the difference. The dependency argument per delta kind:
+//!
+//! * `OrderSwap(Local)`: `analyze` never reads the local loop order (only
+//!   validation's permutation check does) — the cached terms *are* the
+//!   candidate's terms; zero levels recomputed.
+//! * `OrderSwap(Glb)`: GLB loops appear only in the boundary-A walks
+//!   (`loops_above_local` = GLB then DRAM loops). Footprints and replication
+//!   read factor splits, never orders. Only `walk_a` per dataspace is redone.
+//! * `OrderSwap(Dram)`: DRAM loops sit in both boundary walks; both are
+//!   redone, footprints/replication still stand.
+//! * `Resplit(d)`: tiles and `spatial_used` are recomputed (cheap integer
+//!   products); per-dataspace terms are redone only for dataspaces that can
+//!   see `d` — `ds.relevant(d)`, plus Outputs when `d` is a reduction dim
+//!   (reduction loops drive psum revisit traffic without being
+//!   output-relevant). The other dataspaces' footprints, walks and
+//!   replication provably cannot change.
+//!
+//! Validity is delta-checked too, replaying [`check_mapping`]'s exact
+//! verdict order so an infeasible candidate returns the *same*
+//! [`Infeasible`] value the full path would. Anything not one delta step
+//! from the base (or evaluated with no base) falls back to the full path and
+//! is counted in [`telemetry`].
+#![deny(clippy::style)]
+
+use super::arch::{DataflowOpt, HwConfig};
+use super::energy::{effective_glb_capacity, metrics_with, Metrics};
+use super::eval::{EvalInvariants, Evaluator, Infeasible};
+use super::mapping::{is_permutation, Level, Mapping};
+use super::nest::{self, NestTerms, OutWalk};
+use super::validity::SwViolation;
+use super::workload::{DataSpace, Dim, Layer, DATASPACES, DIMS};
+
+/// How a candidate mapping differs from the incumbent base: one dimension's
+/// factor split changed at any subset of levels, or one loop order changed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MappingDelta {
+    /// The candidate equals the base (all splits and orders identical).
+    Identity,
+    /// Exactly dimension `d`'s split differs; all loop orders are unchanged.
+    Resplit(Dim),
+    /// Exactly the loop order at `level` differs; all splits are unchanged.
+    OrderSwap(Level),
+}
+
+impl MappingDelta {
+    /// Classify `cand` relative to `base`, or `None` when they differ in
+    /// more than one delta-expressible way (multiple dims, multiple orders,
+    /// or a split change combined with an order change).
+    pub fn diff(base: &Mapping, cand: &Mapping) -> Option<MappingDelta> {
+        let mut resplit = None;
+        for d in DIMS {
+            if base.split(d) != cand.split(d) {
+                if resplit.is_some() {
+                    return None; // two dims moved: not a single delta
+                }
+                resplit = Some(d);
+            }
+        }
+        let mut swapped = None;
+        for level in [Level::Local, Level::Glb, Level::Dram] {
+            if base.order(level) != cand.order(level) {
+                if swapped.is_some() {
+                    return None; // two orders moved
+                }
+                swapped = Some(level);
+            }
+        }
+        match (resplit, swapped) {
+            (None, None) => Some(MappingDelta::Identity),
+            (Some(d), None) => Some(MappingDelta::Resplit(d)),
+            (None, Some(level)) => Some(MappingDelta::OrderSwap(level)),
+            (Some(_), Some(_)) => None,
+        }
+    }
+}
+
+/// Process-global counters for delta-evaluation reuse, mirroring the
+/// feasibility telemetry: cheap relaxed atomics recorded from any thread,
+/// snapshotted per run by the coordinator.
+pub mod telemetry {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static DELTA_EVALS: AtomicU64 = AtomicU64::new(0);
+    static DELTA_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+    static LEVELS_RECOMPUTED: AtomicU64 = AtomicU64::new(0);
+
+    /// Snapshot of the delta-evaluation counters.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct DeltaStats {
+        /// Evaluations served through the incremental path.
+        pub delta_evals: u64,
+        /// Evaluations that fell back to a full `analyze` (no base, or the
+        /// candidate was more than one delta step away).
+        pub delta_fallbacks: u64,
+        /// Tile levels re-derived across all delta evals (0-3 each; lower
+        /// is more reuse — see `DeltaEvaluator` docs for the per-kind cost).
+        pub levels_recomputed: u64,
+    }
+
+    impl DeltaStats {
+        /// Counters accumulated since `base` was snapshotted.
+        pub fn since(&self, base: &DeltaStats) -> DeltaStats {
+            DeltaStats {
+                delta_evals: self.delta_evals.saturating_sub(base.delta_evals),
+                delta_fallbacks: self.delta_fallbacks.saturating_sub(base.delta_fallbacks),
+                levels_recomputed: self
+                    .levels_recomputed
+                    .saturating_sub(base.levels_recomputed),
+            }
+        }
+    }
+
+    /// Read the current process-wide counters.
+    pub fn snapshot() -> DeltaStats {
+        DeltaStats {
+            delta_evals: DELTA_EVALS.load(Ordering::Relaxed),
+            delta_fallbacks: DELTA_FALLBACKS.load(Ordering::Relaxed),
+            levels_recomputed: LEVELS_RECOMPUTED.load(Ordering::Relaxed),
+        }
+    }
+
+    pub(super) fn record_delta_eval(levels: u64) {
+        DELTA_EVALS.fetch_add(1, Ordering::Relaxed);
+        LEVELS_RECOMPUTED.fetch_add(levels, Ordering::Relaxed);
+    }
+
+    pub(super) fn record_fallback() {
+        DELTA_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Cached state of one evaluated mapping: the mapping itself, its derived
+/// [`NestTerms`], and (when it went through the evaluating path) its metrics.
+#[derive(Clone, Debug)]
+struct BaseState {
+    mapping: Mapping,
+    terms: NestTerms,
+    /// `None` when the state came from the terms-only feature path.
+    metrics: Option<Metrics>,
+}
+
+/// Incremental evaluator for a perturbation walk over one `(layer, hw)`.
+///
+/// Usage: [`DeltaEvaluator::rebase`] on the walk's starting point, then
+/// [`DeltaEvaluator::evaluate`] (or [`DeltaEvaluator::evaluate_delta`] when
+/// the caller already knows the perturbation kind) per candidate, and
+/// [`DeltaEvaluator::accept`] whenever the walk moves — promoting the most
+/// recent candidate to the new base in O(1). Results are bit-identical to
+/// [`Evaluator::evaluate`] for feasible *and* infeasible candidates.
+pub struct DeltaEvaluator<'a> {
+    eval: &'a Evaluator,
+    layer: &'a Layer,
+    hw: &'a HwConfig,
+    inv: EvalInvariants,
+    base: Option<BaseState>,
+    last: Option<BaseState>,
+}
+
+impl<'a> DeltaEvaluator<'a> {
+    /// Evaluator for a fixed `(layer, hw)`; hoists the hardware check and
+    /// the energy constants once for the whole walk.
+    pub fn new(eval: &'a Evaluator, layer: &'a Layer, hw: &'a HwConfig) -> Self {
+        DeltaEvaluator { inv: eval.invariants(hw), eval, layer, hw, base: None, last: None }
+    }
+
+    /// Fully evaluate `m` and make it the incumbent base for future deltas.
+    /// On `Err` the base is cleared (every delta needs a feasible anchor).
+    pub fn rebase(&mut self, m: &Mapping) -> Result<Metrics, Infeasible> {
+        self.base = None;
+        let met = self.full(m)?;
+        self.base = self.last.clone();
+        Ok(met)
+    }
+
+    /// Evaluate a candidate, deriving the delta from the base by diffing.
+    /// Bit-identical to [`Evaluator::evaluate`]; candidates not one delta
+    /// step away fall back to the full path (counted in telemetry).
+    pub fn evaluate(&mut self, cand: &Mapping) -> Result<Metrics, Infeasible> {
+        match self.base.as_ref().and_then(|b| MappingDelta::diff(&b.mapping, cand)) {
+            Some(delta) => self.evaluate_delta(cand, delta),
+            None => {
+                telemetry::record_fallback();
+                self.full(cand)
+            }
+        }
+    }
+
+    /// Evaluate a candidate known to be `delta` away from the current base
+    /// (as produced by a described perturbation). The caller's claim is
+    /// trusted; a wrong `delta` yields wrong numbers, so only pass deltas
+    /// produced alongside the candidate. Falls back to the full path when
+    /// no base is set.
+    pub fn evaluate_delta(
+        &mut self,
+        cand: &Mapping,
+        delta: MappingDelta,
+    ) -> Result<Metrics, Infeasible> {
+        if self.base.is_none() {
+            telemetry::record_fallback();
+            return self.full(cand);
+        }
+        // The hardware verdict is mapping-independent: replay it first, as
+        // the full path does.
+        self.inv.hw_check?;
+        match delta {
+            MappingDelta::Identity => {
+                telemetry::record_delta_eval(0);
+                let base = self.base.as_ref().unwrap();
+                let metrics = match &base.metrics {
+                    Some(m) => m.clone(),
+                    None => self.rollup(&base.terms),
+                };
+                let terms = base.terms.clone();
+                self.last = Some(BaseState {
+                    mapping: cand.clone(),
+                    terms,
+                    metrics: Some(metrics.clone()),
+                });
+                Ok(metrics)
+            }
+            MappingDelta::OrderSwap(level) => self.delta_order(cand, level),
+            MappingDelta::Resplit(d) => self.delta_resplit(cand, d),
+        }
+    }
+
+    /// EDP-only wrapper over [`DeltaEvaluator::evaluate`].
+    pub fn edp(&mut self, cand: &Mapping) -> Result<f64, Infeasible> {
+        self.evaluate(cand).map(|m| m.edp)
+    }
+
+    /// EDP-only wrapper over [`DeltaEvaluator::evaluate_delta`].
+    pub fn edp_delta(&mut self, cand: &Mapping, delta: MappingDelta) -> Result<f64, Infeasible> {
+        self.evaluate_delta(cand, delta).map(|m| m.edp)
+    }
+
+    /// Candidate [`NestTerms`] without validity checks or the energy
+    /// roll-up — the fast path for feature extraction
+    /// (`space::features::sw_features_from_terms`). Uses the same partial
+    /// recomputation as the evaluating path; counted in telemetry.
+    pub fn terms_for(&mut self, cand: &Mapping) -> NestTerms {
+        let delta = self.base.as_ref().and_then(|b| MappingDelta::diff(&b.mapping, cand));
+        let terms = match delta {
+            Some(MappingDelta::Identity) | Some(MappingDelta::OrderSwap(Level::Local)) => {
+                telemetry::record_delta_eval(0);
+                self.base.as_ref().unwrap().terms.clone()
+            }
+            Some(MappingDelta::OrderSwap(Level::Glb)) => {
+                let mut terms = self.base.as_ref().unwrap().terms.clone();
+                recompute_walks_a(&mut terms, &above_local_arr(cand));
+                telemetry::record_delta_eval(1);
+                terms
+            }
+            Some(MappingDelta::OrderSwap(Level::Dram)) => {
+                let mut terms = self.base.as_ref().unwrap().terms.clone();
+                recompute_walks_a(&mut terms, &above_local_arr(cand));
+                recompute_walks_b(&mut terms, &above_glb_arr(cand));
+                telemetry::record_delta_eval(2);
+                terms
+            }
+            Some(MappingDelta::Resplit(d)) => {
+                telemetry::record_delta_eval(resplit_levels(
+                    self.base.as_ref().unwrap().mapping.split(d),
+                    cand.split(d),
+                ));
+                self.resplit_terms(cand, d)
+            }
+            None => {
+                telemetry::record_fallback();
+                nest::terms(self.layer, self.hw, cand)
+            }
+        };
+        self.last =
+            Some(BaseState { mapping: cand.clone(), terms: terms.clone(), metrics: None });
+        terms
+    }
+
+    /// Promote an accepted candidate to the incumbent base: O(1) when it is
+    /// the most recently evaluated candidate (the hill-climb / SA hot path),
+    /// a full [`DeltaEvaluator::rebase`] otherwise.
+    pub fn accept(&mut self, cand: &Mapping) -> Result<(), Infeasible> {
+        if let Some(last) = self.last.as_ref() {
+            if last.mapping == *cand {
+                self.base = self.last.clone();
+                return Ok(());
+            }
+        }
+        self.rebase(cand).map(|_| ())
+    }
+
+    /// Full-path evaluation through the staged `terms` + `assemble` split,
+    /// stashing the derived state in `last` for a subsequent `accept`.
+    fn full(&mut self, m: &Mapping) -> Result<Metrics, Infeasible> {
+        self.eval.check(self.layer, self.hw, m)?;
+        let terms = nest::terms(self.layer, self.hw, m);
+        let metrics = self.rollup(&terms);
+        self.last = Some(BaseState {
+            mapping: m.clone(),
+            terms,
+            metrics: Some(metrics.clone()),
+        });
+        Ok(metrics)
+    }
+
+    /// Stage two shared by every path: `assemble` + `metrics_with` against
+    /// the hoisted invariants — the exact roll-up `Evaluator::evaluate`
+    /// runs.
+    fn rollup(&self, terms: &NestTerms) -> Metrics {
+        let tr = nest::assemble(terms);
+        metrics_with(
+            &self.inv.energy,
+            self.layer,
+            self.hw,
+            &self.eval.resources,
+            &tr,
+            &self.eval.energy_model,
+        )
+    }
+
+    /// Order-swap delta: splits unchanged from an Ok base, so of the whole
+    /// validity ladder only the permutation check can newly fail.
+    fn delta_order(&mut self, cand: &Mapping, level: Level) -> Result<Metrics, Infeasible> {
+        if !is_permutation(cand.order(level)) {
+            return Err(Infeasible::Software(SwViolation::OrderNotPermutation));
+        }
+        let base = self.base.as_ref().unwrap();
+        let (levels, terms) = match level {
+            // analyze() never reads the local order: the base terms are the
+            // candidate's terms, bit for bit.
+            Level::Local => (0, base.terms.clone()),
+            Level::Glb => {
+                let mut terms = base.terms.clone();
+                recompute_walks_a(&mut terms, &above_local_arr(cand));
+                (1, terms)
+            }
+            Level::Dram => {
+                let mut terms = base.terms.clone();
+                recompute_walks_a(&mut terms, &above_local_arr(cand));
+                recompute_walks_b(&mut terms, &above_glb_arr(cand));
+                (2, terms)
+            }
+        };
+        telemetry::record_delta_eval(levels);
+        let metrics = self.rollup(&terms);
+        self.last = Some(BaseState {
+            mapping: cand.clone(),
+            terms,
+            metrics: Some(metrics.clone()),
+        });
+        Ok(metrics)
+    }
+
+    /// Resplit delta: replays `check_mapping`'s verdict order restricted to
+    /// the checks a one-dim split change can flip, then rebuilds only the
+    /// affected dataspace terms.
+    fn delta_resplit(&mut self, cand: &Mapping, d: Dim) -> Result<Metrics, Infeasible> {
+        // (1) Factor products: every other dim's split is the base's, which
+        // passed — the first violation check_mapping could hit is d's.
+        if cand.split(d).product() != self.layer.size(d) {
+            return Err(Infeasible::Software(SwViolation::FactorProduct(d)));
+        }
+        // (2) Orders are unchanged permutations. (3) Dataflow pinning reads
+        // only the local factors of R and S.
+        if matches!(d, Dim::R | Dim::S) {
+            let opt = self.hw.dataflow_for(d).unwrap();
+            let loc = cand.split(d).local;
+            let ok = match opt {
+                DataflowOpt::FullAtPe => loc == self.layer.size(d),
+                DataflowOpt::Streamed => loc == 1,
+            };
+            if !ok {
+                return Err(Infeasible::Software(SwViolation::Dataflow(d)));
+            }
+        }
+        // (4)(5) Spatial fit: full products, recomputed.
+        if cand.spatial_x_used() > self.hw.pe_mesh_x {
+            return Err(Infeasible::Software(SwViolation::SpatialX));
+        }
+        if cand.spatial_y_used() > self.hw.pe_mesh_y {
+            return Err(Infeasible::Software(SwViolation::SpatialY));
+        }
+        // Rebuild terms (fresh tiles inside) before the footprint checks so
+        // the capacity sums reuse them; extra derived values never change
+        // which verdict is returned.
+        let terms = self.resplit_terms(cand, d);
+        // (6) Local scratchpad footprints, in check_mapping's order.
+        let stride = self.layer.stride;
+        if nest::footprint(DataSpace::Inputs, &terms.tiles.local, stride) > self.hw.lb_inputs {
+            return Err(Infeasible::Software(SwViolation::LocalInputs));
+        }
+        if nest::footprint(DataSpace::Weights, &terms.tiles.local, stride) > self.hw.lb_weights
+        {
+            return Err(Infeasible::Software(SwViolation::LocalWeights));
+        }
+        if nest::footprint(DataSpace::Outputs, &terms.tiles.local, stride) > self.hw.lb_outputs
+        {
+            return Err(Infeasible::Software(SwViolation::LocalOutputs));
+        }
+        // (7) GLB capacity with replication: the terms hold exactly the
+        // footprint * replication products check_mapping sums, unchanged
+        // dataspaces included, in the same DATASPACES order.
+        let glb_used: f64 = terms.per_ds.iter().map(|dt| dt.foot_glb * dt.replication).sum();
+        if glb_used > effective_glb_capacity(self.hw, &self.eval.resources) {
+            return Err(Infeasible::Software(SwViolation::GlbCapacity));
+        }
+        let base_split = *self.base.as_ref().unwrap().mapping.split(d);
+        telemetry::record_delta_eval(resplit_levels(&base_split, cand.split(d)));
+        let metrics = self.rollup(&terms);
+        self.last = Some(BaseState {
+            mapping: cand.clone(),
+            terms,
+            metrics: Some(metrics.clone()),
+        });
+        Ok(metrics)
+    }
+
+    /// Rebuild [`NestTerms`] for a one-dim resplit: fresh tiles and
+    /// `spatial_used`, per-dataspace terms redone only where `d` is visible
+    /// (relevant dims, plus Outputs for reduction dims whose loops drive
+    /// psum revisits).
+    fn resplit_terms(&self, cand: &Mapping, d: Dim) -> NestTerms {
+        let base = self.base.as_ref().unwrap();
+        let t = nest::tiles(self.layer, cand);
+        let stride = self.layer.stride;
+        let mut per_ds = base.terms.per_ds;
+        let above_local = above_local_arr(cand);
+        let above_glb = above_glb_arr(cand);
+        for ds in DATASPACES {
+            if ds.relevant(d) || (ds == DataSpace::Outputs && d.is_reduction()) {
+                per_ds[nest::ds_index(ds)] =
+                    nest::ds_terms(ds, &t, stride, &above_local, &above_glb, self.hw, cand);
+            }
+        }
+        NestTerms {
+            tiles: t,
+            spatial_used: cand.spatial_used(),
+            macs: base.terms.macs,
+            stride,
+            per_ds,
+        }
+    }
+}
+
+/// How many tile levels a resplit invalidates, by innermost changed slot:
+/// a local-factor change ripples through the local, array and GLB tiles
+/// (3); a spatial or GLB change through array and GLB (2); a DRAM-only
+/// change moves no resident tile, only the DRAM walk multiplicities (1).
+fn resplit_levels(a: &super::mapping::Split, b: &super::mapping::Split) -> u64 {
+    if a.local != b.local {
+        3
+    } else if a.spatial_x != b.spatial_x || a.spatial_y != b.spatial_y || a.glb != b.glb {
+        2
+    } else if a.dram != b.dram {
+        1
+    } else {
+        0
+    }
+}
+
+/// Temporal loops above the PE-local level, innermost first — the same
+/// sequence as [`nest::loops_above_local`], built on the stack.
+fn above_local_arr(m: &Mapping) -> [(Dim, u64); 12] {
+    let mut out = [(Dim::R, 1u64); 12];
+    let glb = m.order(Level::Glb).iter().rev().map(|&d| (d, m.split(d).glb));
+    let dram = m.order(Level::Dram).iter().rev().map(|&d| (d, m.split(d).dram));
+    for (slot, lp) in out.iter_mut().zip(glb.chain(dram)) {
+        *slot = lp;
+    }
+    out
+}
+
+/// Temporal loops above the GLB level, innermost first — the same sequence
+/// as [`nest::loops_above_glb`], built on the stack.
+fn above_glb_arr(m: &Mapping) -> [(Dim, u64); 6] {
+    let mut out = [(Dim::R, 1u64); 6];
+    let dram = m.order(Level::Dram).iter().rev().map(|&d| (d, m.split(d).dram));
+    for (slot, lp) in out.iter_mut().zip(dram) {
+        *slot = lp;
+    }
+    out
+}
+
+/// Redo every dataspace's boundary-A walk against new above-local loops
+/// (tiles in `terms` are current; boundary-A children are the array tiles).
+fn recompute_walks_a(terms: &mut NestTerms, above_local: &[(Dim, u64)]) {
+    for ds in DATASPACES {
+        let walk = match ds {
+            DataSpace::Inputs | DataSpace::Weights => {
+                let ra = nest::refetch_mult(above_local, ds, &terms.tiles.spatial, terms.stride);
+                OutWalk { write_mult: ra, distinct: ra }
+            }
+            DataSpace::Outputs => nest::out_walk(above_local),
+        };
+        terms.per_ds[nest::ds_index(ds)].walk_a = walk;
+    }
+}
+
+/// Redo every dataspace's boundary-B walk against new DRAM loops (boundary-B
+/// children are the GLB tiles).
+fn recompute_walks_b(terms: &mut NestTerms, above_glb: &[(Dim, u64)]) {
+    for ds in DATASPACES {
+        let walk = match ds {
+            DataSpace::Inputs | DataSpace::Weights => {
+                let rb = nest::refetch_mult(above_glb, ds, &terms.tiles.glb, terms.stride);
+                OutWalk { write_mult: rb, distinct: rb }
+            }
+            DataSpace::Outputs => nest::out_walk(above_glb),
+        };
+        terms.per_ds[nest::ds_index(ds)].walk_b = walk;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::{DataflowOpt, Resources};
+    use crate::model::mapping::Split;
+
+    fn hw() -> HwConfig {
+        HwConfig {
+            pe_mesh_x: 14,
+            pe_mesh_y: 12,
+            lb_inputs: 12,
+            lb_weights: 192,
+            lb_outputs: 16,
+            gb_instances: 2,
+            gb_mesh_x: 2,
+            gb_mesh_y: 1,
+            gb_block: 4,
+            gb_cluster: 2,
+            df_filter_w: DataflowOpt::Streamed,
+            df_filter_h: DataflowOpt::Streamed,
+        }
+    }
+
+    fn layer() -> Layer {
+        Layer::conv("t", 3, 3, 8, 8, 16, 32, 1)
+    }
+
+    fn base_mapping(l: &Layer) -> Mapping {
+        let mut m = Mapping::trivial(l);
+        *m.split_mut(Dim::K) = Split { dram: 4, glb: 2, spatial_x: 4, spatial_y: 1, local: 1 };
+        *m.split_mut(Dim::P) = Split { dram: 2, glb: 2, spatial_x: 1, spatial_y: 2, local: 1 };
+        *m.split_mut(Dim::C) = Split { dram: 1, glb: 8, spatial_x: 1, spatial_y: 2, local: 1 };
+        m
+    }
+
+    fn assert_same_verdict(
+        a: &Result<Metrics, Infeasible>,
+        b: &Result<Metrics, Infeasible>,
+        tag: &str,
+    ) {
+        match (a, b) {
+            (Ok(x), Ok(y)) => {
+                assert_eq!(x.edp.to_bits(), y.edp.to_bits(), "{tag}: edp");
+                assert_eq!(x.cycles.to_bits(), y.cycles.to_bits(), "{tag}: cycles");
+                assert_eq!(x.energy_pj.to_bits(), y.energy_pj.to_bits(), "{tag}: energy");
+            }
+            (Err(x), Err(y)) => assert_eq!(x, y, "{tag}: verdicts differ"),
+            _ => panic!("{tag}: Ok/Err disagreement: {a:?} vs {b:?}"),
+        }
+    }
+
+    #[test]
+    fn diff_classifies_single_deltas() {
+        let l = layer();
+        let m = base_mapping(&l);
+        assert_eq!(MappingDelta::diff(&m, &m), Some(MappingDelta::Identity));
+
+        let mut re = m.clone();
+        re.split_mut(Dim::K).dram = 2;
+        re.split_mut(Dim::K).glb = 4;
+        assert_eq!(MappingDelta::diff(&m, &re), Some(MappingDelta::Resplit(Dim::K)));
+
+        let mut sw = m.clone();
+        sw.order_glb.swap(0, 5);
+        assert_eq!(MappingDelta::diff(&m, &sw), Some(MappingDelta::OrderSwap(Level::Glb)));
+
+        let mut both = re.clone();
+        both.order_dram.swap(1, 2);
+        assert_eq!(MappingDelta::diff(&m, &both), None);
+
+        let mut two = m.clone();
+        two.split_mut(Dim::K).dram = 2;
+        two.split_mut(Dim::K).glb = 4;
+        two.split_mut(Dim::P).dram = 1;
+        two.split_mut(Dim::P).glb = 4;
+        assert_eq!(MappingDelta::diff(&m, &two), None);
+    }
+
+    #[test]
+    fn stack_loop_builders_match_vec_builders() {
+        let l = layer();
+        let mut m = base_mapping(&l);
+        m.order_glb.swap(0, 3);
+        m.order_dram.swap(2, 5);
+        assert_eq!(nest::loops_above_local(&m), above_local_arr(&m).to_vec());
+        assert_eq!(nest::loops_above_glb(&m), above_glb_arr(&m).to_vec());
+    }
+
+    #[test]
+    fn delta_matches_full_for_order_swaps_and_resplits() {
+        let l = layer();
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let h = hw();
+        let base = base_mapping(&l);
+        let mut de = DeltaEvaluator::new(&ev, &l, &h);
+        de.rebase(&base).expect("base must be feasible");
+
+        let mut cands: Vec<(String, Mapping)> = Vec::new();
+        for level in [Level::Local, Level::Glb, Level::Dram] {
+            for (i, j) in [(0, 1), (2, 5), (1, 4)] {
+                let mut m = base.clone();
+                match level {
+                    Level::Local => m.order_local.swap(i, j),
+                    Level::Glb => m.order_glb.swap(i, j),
+                    Level::Dram => m.order_dram.swap(i, j),
+                }
+                cands.push((format!("swap {level:?} {i}<->{j}"), m));
+            }
+        }
+        // resplits: move one factor between adjacent levels per dim
+        for d in DIMS {
+            let mut m = base.clone();
+            let s = m.split_mut(d);
+            if s.dram > 1 {
+                s.dram /= 2;
+                s.glb *= 2;
+            } else {
+                s.dram *= 2; // breaks the factor product: infeasible delta
+            }
+            cands.push((format!("resplit {d:?}"), m));
+        }
+        // an infeasible spatial blow-up
+        let mut m = base.clone();
+        m.split_mut(Dim::K).spatial_x = 64;
+        cands.push(("spatial overflow".into(), m));
+
+        for (tag, cand) in &cands {
+            let full = ev.evaluate(&l, &h, cand);
+            let delta = de.evaluate(cand);
+            assert_same_verdict(&delta, &full, tag);
+        }
+    }
+
+    #[test]
+    fn accept_promotes_last_candidate_in_place() {
+        let l = layer();
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let h = hw();
+        let base = base_mapping(&l);
+        let mut de = DeltaEvaluator::new(&ev, &l, &h);
+        de.rebase(&base).unwrap();
+
+        let mut step = base.clone();
+        step.order_glb.swap(0, 2);
+        let before = telemetry::snapshot();
+        de.evaluate(&step).unwrap();
+        de.accept(&step).unwrap();
+        // a second step away from the *new* base must still take the delta
+        // path (proof the base actually moved)
+        let mut step2 = step.clone();
+        step2.order_dram.swap(1, 3);
+        let met = de.evaluate(&step2).unwrap();
+        let after = telemetry::snapshot().since(&before);
+        assert_eq!(after.delta_fallbacks, 0, "accept must not force fallbacks");
+        assert_eq!(after.delta_evals, 2);
+        assert_same_verdict(&Ok(met), &ev.evaluate(&l, &h, &step2), "post-accept step");
+    }
+
+    #[test]
+    fn fallback_paths_are_counted() {
+        let l = layer();
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let h = hw();
+        let mut de = DeltaEvaluator::new(&ev, &l, &h);
+        let before = telemetry::snapshot();
+        // no base yet: full path
+        de.evaluate(&base_mapping(&l)).unwrap();
+        let after = telemetry::snapshot().since(&before);
+        assert_eq!(after.delta_fallbacks, 1);
+
+        de.rebase(&base_mapping(&l)).unwrap();
+        // two dims moved: not a single delta
+        let mut far = base_mapping(&l);
+        far.split_mut(Dim::K).dram = 2;
+        far.split_mut(Dim::K).glb = 4;
+        far.split_mut(Dim::P).dram = 1;
+        far.split_mut(Dim::P).glb = 4;
+        let before = telemetry::snapshot();
+        let delta = de.evaluate(&far);
+        let after = telemetry::snapshot().since(&before);
+        assert_eq!(after.delta_fallbacks, 1);
+        assert_same_verdict(&delta, &ev.evaluate(&l, &h, &far), "fallback");
+    }
+
+    #[test]
+    fn terms_fast_path_matches_fresh_terms() {
+        let l = layer();
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let h = hw();
+        let base = base_mapping(&l);
+        let mut de = DeltaEvaluator::new(&ev, &l, &h);
+        de.rebase(&base).unwrap();
+
+        let mut cand = base.clone();
+        cand.split_mut(Dim::C).glb = 4;
+        cand.split_mut(Dim::C).dram = 2;
+        let fast = de.terms_for(&cand);
+        let fresh = nest::terms(&l, &h, &cand);
+        for ds in DATASPACES {
+            let (a, b) = (&fast.per_ds[nest::ds_index(ds)], &fresh.per_ds[nest::ds_index(ds)]);
+            assert_eq!(a.foot_loc.to_bits(), b.foot_loc.to_bits(), "{ds:?}");
+            assert_eq!(a.foot_glb.to_bits(), b.foot_glb.to_bits(), "{ds:?}");
+            assert_eq!(a.walk_a.write_mult.to_bits(), b.walk_a.write_mult.to_bits(), "{ds:?}");
+            assert_eq!(a.walk_b.write_mult.to_bits(), b.walk_b.write_mult.to_bits(), "{ds:?}");
+            assert_eq!(a.replication.to_bits(), b.replication.to_bits(), "{ds:?}");
+        }
+        assert_eq!(fast.spatial_used, fresh.spatial_used);
+    }
+}

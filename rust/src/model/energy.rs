@@ -14,9 +14,15 @@
 //!  * wider GLB entries (H9) and ganged clusters (H10) amortize access
 //!    overhead and raise streaming bandwidth but waste capacity and fetch
 //!    granularity.
+//!
+//! [`metrics`] is a thin wrapper over [`metrics_with`], which takes the
+//! mapping-independent constants ([`EnergyInvariants`]) precomputed — the
+//! hook the batched and delta evaluators use to pay the constant derivation
+//! once per (hardware, batch) instead of once per candidate, bit-exactly.
+#![deny(clippy::style)]
 
 use super::arch::{HwConfig, Resources};
-use super::nest::Traffic;
+use super::nest::{ds_index, Traffic};
 use super::workload::{DataSpace, Dim, Layer, DATASPACES};
 
 /// Energy constants (pJ per access / per word).
@@ -93,11 +99,15 @@ pub fn granularity_waste(ds: DataSpace, tr: &Traffic, stride: u64, hw: &HwConfig
 /// Evaluation result for one (layer, hardware, mapping).
 #[derive(Clone, Debug)]
 pub struct Metrics {
+    /// Total multiply-accumulates in the layer (mapping-independent).
     pub macs: u64,
+    /// Latency in clock cycles: max of the compute/GLB/DRAM bounds.
     pub cycles: f64,
+    /// Total energy in pJ across MACs and the full memory hierarchy.
     pub energy_pj: f64,
     /// energy (J) x delay (s): the paper's objective.
     pub edp: f64,
+    /// Fraction of the PE budget doing work (`spatial_used / num_pes`).
     pub utilization: f64,
     /// pJ breakdown: [mac, spad, glb, noc, dram].
     pub energy_breakdown: [f64; 5],
@@ -106,6 +116,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Name of the binding cycle bound ("compute", "glb-bw" or "dram-bw").
     pub fn bottleneck(&self) -> &'static str {
         let [c, g, d] = self.cycle_bounds;
         if c >= g && c >= d {
@@ -118,8 +129,56 @@ impl Metrics {
     }
 }
 
+/// Mapping-independent constants of [`metrics`], hoisted so the batched
+/// ([`crate::model::batch`]) and delta ([`crate::model::delta`]) evaluators
+/// derive them once per (hardware, resources) instead of once per candidate.
+/// Every field is the *same expression* `metrics` used to compute inline, so
+/// routing through [`metrics_with`] is bit-exact by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyInvariants {
+    /// Average NoC hop distance per word, from the mesh geometry only.
+    pub hops: f64,
+    /// Per-word GLB access energy (pJ) for this bank geometry.
+    pub glb_pj: f64,
+    /// Per-word scratchpad energy (pJ), indexed by [`ds_index`].
+    pub spad_pj: [f64; 3],
+    /// GLB streaming bandwidth in words per cycle across all instances.
+    pub glb_bw: f64,
+}
+
+impl EnergyInvariants {
+    /// Hoist the (hardware, resources, model) constants of the roll-up.
+    pub fn new(hw: &HwConfig, res: &Resources, em: &EnergyModel) -> Self {
+        // NoC energy: each word travels ~half the bank's fan-out region;
+        // multicast words pay per-destination (modelled through noc_words
+        // which already counts per-PE copies), with hop distance from the
+        // mesh geometry.
+        let hops = 1.0 + 0.5 * (hw.fanout_x() as f64 + hw.fanout_y() as f64 - 2.0).max(0.0);
+        let glb_pj = em.glb_pj(hw, res);
+        let spad_pj =
+            [em.spad_pj(hw.lb_inputs), em.spad_pj(hw.lb_weights), em.spad_pj(hw.lb_outputs)];
+        let glb_bw =
+            hw.gb_instances as f64 * res.gb_words_per_cycle_per_instance * hw.gb_block as f64;
+        EnergyInvariants { hops, glb_pj, spad_pj, glb_bw }
+    }
+}
+
 /// Combine traffic analysis with the energy/latency model.
 pub fn metrics(
+    layer: &Layer,
+    hw: &HwConfig,
+    res: &Resources,
+    tr: &Traffic,
+    em: &EnergyModel,
+) -> Metrics {
+    metrics_with(&EnergyInvariants::new(hw, res, em), layer, hw, res, tr, em)
+}
+
+/// [`metrics`] against precomputed [`EnergyInvariants`]: identical
+/// accumulation order, so results are bit-identical to the plain entry
+/// point. `inv` must have been built from the same `(hw, res, em)`.
+pub fn metrics_with(
+    inv: &EnergyInvariants,
     layer: &Layer,
     hw: &HwConfig,
     res: &Resources,
@@ -138,20 +197,12 @@ pub fn metrics(
     let mut e_dram = 0.0;
     let mut glb_words_effective = 0.0;
 
-    // NoC energy: each word travels ~half the bank's fan-out region; multicast
-    // words pay per-destination (modelled through noc_words which already
-    // counts per-PE copies), with hop distance from the mesh geometry.
-    let hops = 1.0 + 0.5 * (hw.fanout_x() as f64 + hw.fanout_y() as f64 - 2.0).max(0.0);
-    let glb_pj = em.glb_pj(hw, res);
+    let hops = inv.hops;
+    let glb_pj = inv.glb_pj;
 
     for ds in DATASPACES {
         let d = tr.ds(ds);
-        let spad_entries = match ds {
-            DataSpace::Inputs => hw.lb_inputs,
-            DataSpace::Weights => hw.lb_weights,
-            DataSpace::Outputs => hw.lb_outputs,
-        };
-        let spad_pj = em.spad_pj(spad_entries);
+        let spad_pj = inv.spad_pj[ds_index(ds)];
         e_spad += (d.lb_compute_accesses + d.lb_fills) * spad_pj;
         let waste = granularity_waste(ds, tr, stride, hw);
         let glb_words = (d.glb_reads + d.glb_writes) * waste;
@@ -166,9 +217,7 @@ pub fn metrics(
     // --- Latency ---
     let spatial_used = tr.spatial_used.max(1) as f64;
     let compute_cycles = macs as f64 / spatial_used;
-    let glb_bw =
-        hw.gb_instances as f64 * res.gb_words_per_cycle_per_instance * hw.gb_block as f64;
-    let glb_cycles = glb_words_effective / glb_bw;
+    let glb_cycles = glb_words_effective / inv.glb_bw;
     let dram_cycles = tr.total_dram_words() / res.dram_words_per_cycle;
     let cycles = compute_cycles.max(glb_cycles).max(dram_cycles);
 
@@ -295,6 +344,24 @@ mod tests {
         b.gb_block = 16;
         b.gb_cluster = 16;
         assert!(effective_glb_capacity(&a, &res) > effective_glb_capacity(&b, &res));
+    }
+
+    #[test]
+    fn metrics_with_hoisted_invariants_is_bit_exact() {
+        let l = Layer::conv("t", 3, 3, 8, 8, 16, 32, 1);
+        let m = Mapping::trivial(&l);
+        let res = Resources::eyeriss_168();
+        let em = EnergyModel::default();
+        let tr = analyze(&l, &hw(), &m);
+        let a = metrics(&l, &hw(), &res, &tr, &em);
+        let inv = EnergyInvariants::new(&hw(), &res, &em);
+        let b = metrics_with(&inv, &l, &hw(), &res, &tr, &em);
+        assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+        assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        for (x, y) in a.energy_breakdown.iter().zip(b.energy_breakdown.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -1,9 +1,17 @@
 //! The evaluator: validity check + traffic analysis + energy/latency model,
 //! packaged as the single entry point the optimizers call (the stand-in for
 //! the paper's Timeloop invocation).
+//!
+//! Two entry shapes exist: [`Evaluator::evaluate`] for one-off calls, and
+//! [`Evaluator::invariants`] + [`Evaluator::evaluate_with`] for batched or
+//! repeated evaluation against a fixed `(hw, resources)` — the hardware
+//! check and the energy constants are paid once per group instead of once
+//! per candidate, with bit-identical results (same checks, same arithmetic
+//! order; see [`crate::model::energy::EnergyInvariants`]).
+#![deny(clippy::style)]
 
 use super::arch::{HwConfig, HwViolation, Resources};
-use super::energy::{metrics, EnergyModel, Metrics};
+use super::energy::{metrics_with, EnergyInvariants, EnergyModel, Metrics};
 use super::mapping::Mapping;
 use super::nest::analyze;
 use super::validity::{check_mapping, SwViolation};
@@ -12,7 +20,9 @@ use super::workload::Layer;
 /// Why an evaluation failed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Infeasible {
+    /// The accelerator config violates a known input constraint (Fig. 7).
     Hardware(HwViolation),
+    /// The mapping violates a software-space constraint on this hardware.
     Software(SwViolation),
 }
 
@@ -25,15 +35,29 @@ impl std::fmt::Display for Infeasible {
     }
 }
 
+/// Hardware-fixed invariants of [`Evaluator::evaluate`]: the hardware-check
+/// verdict and the hoisted energy/latency constants. Valid for any layer and
+/// mapping evaluated against the same `(hw, resources, energy model)`.
+#[derive(Clone, Debug)]
+pub struct EvalInvariants {
+    /// Cached result of [`Evaluator::check_hw`] (identical for every mapping).
+    pub hw_check: Result<(), Infeasible>,
+    /// Hoisted constants of the energy/latency roll-up.
+    pub energy: EnergyInvariants,
+}
+
 /// The simulator facade. Owns the resource budget and energy model; immutable
 /// and cheap to share across threads.
 #[derive(Clone, Debug)]
 pub struct Evaluator {
+    /// The fixed resource budget every candidate is checked against.
     pub resources: Resources,
+    /// Per-access energy constants (defaults follow 65nm Eyeriss magnitudes).
     pub energy_model: EnergyModel,
 }
 
 impl Evaluator {
+    /// Evaluator over a resource budget with the default energy model.
     pub fn new(resources: Resources) -> Self {
         Evaluator { resources, energy_model: EnergyModel::default() }
     }
@@ -49,6 +73,15 @@ impl Evaluator {
         check_mapping(layer, hw, &self.resources, m).map_err(Infeasible::Software)
     }
 
+    /// Precompute the parts of [`Evaluator::evaluate`] that do not depend on
+    /// the mapping, for reuse across a batch or a perturbation walk.
+    pub fn invariants(&self, hw: &HwConfig) -> EvalInvariants {
+        EvalInvariants {
+            hw_check: self.check_hw(hw),
+            energy: EnergyInvariants::new(hw, &self.resources, &self.energy_model),
+        }
+    }
+
     /// Evaluate a design point: EDP and full metrics, or why it is invalid.
     pub fn evaluate(
         &self,
@@ -56,9 +89,25 @@ impl Evaluator {
         hw: &HwConfig,
         m: &Mapping,
     ) -> Result<Metrics, Infeasible> {
-        self.check(layer, hw, m)?;
+        self.evaluate_with(&self.invariants(hw), layer, hw, m)
+    }
+
+    /// [`Evaluator::evaluate`] against precomputed [`EvalInvariants`]:
+    /// bit-identical results (the checks run in the same order and the
+    /// roll-up uses the same arithmetic), with the per-(hw, resources)
+    /// constants paid once. `inv` must come from `self.invariants(hw)` for
+    /// the same `hw`.
+    pub fn evaluate_with(
+        &self,
+        inv: &EvalInvariants,
+        layer: &Layer,
+        hw: &HwConfig,
+        m: &Mapping,
+    ) -> Result<Metrics, Infeasible> {
+        inv.hw_check?;
+        check_mapping(layer, hw, &self.resources, m).map_err(Infeasible::Software)?;
         let tr = analyze(layer, hw, m);
-        Ok(metrics(layer, hw, &self.resources, &tr, &self.energy_model))
+        Ok(metrics_with(&inv.energy, layer, hw, &self.resources, &tr, &self.energy_model))
     }
 
     /// EDP only (the optimizer objective).
@@ -126,5 +175,33 @@ mod tests {
         let a = ev.edp(&l, &hw(), &Mapping::trivial(&l)).unwrap();
         let b = ev.edp(&l, &hw(), &Mapping::trivial(&l)).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn evaluate_with_shared_invariants_is_bit_exact() {
+        let l = Layer::conv("t", 3, 3, 8, 8, 16, 32, 1);
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let inv = ev.invariants(&hw());
+        // valid candidate: identical metrics bit for bit
+        let m = Mapping::trivial(&l);
+        let a = ev.evaluate(&l, &hw(), &m).unwrap();
+        let b = ev.evaluate_with(&inv, &l, &hw(), &m).unwrap();
+        assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+        assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+        // invalid candidate: identical verdict
+        let mut bad = Mapping::trivial(&l);
+        bad.split_mut(Dim::C).dram = 5;
+        assert_eq!(
+            ev.evaluate(&l, &hw(), &bad).unwrap_err(),
+            ev.evaluate_with(&inv, &l, &hw(), &bad).unwrap_err()
+        );
+        // invalid hardware: the cached verdict is replayed
+        let mut h = hw();
+        h.pe_mesh_x = 10;
+        let bad_inv = ev.invariants(&h);
+        assert_eq!(
+            ev.evaluate(&l, &h, &m).unwrap_err(),
+            ev.evaluate_with(&bad_inv, &l, &h, &m).unwrap_err()
+        );
     }
 }

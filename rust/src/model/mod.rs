@@ -6,6 +6,7 @@
 pub mod arch;
 pub mod batch;
 pub mod cache;
+pub mod delta;
 pub mod energy;
 pub mod eval;
 pub mod mapping;
@@ -16,6 +17,7 @@ pub mod workload;
 pub use arch::{DataflowOpt, HwConfig, HwViolation, Resources};
 pub use batch::{BatchEvaluator, EvalRequest};
 pub use cache::{CacheStats, DesignKey, EvalCache};
+pub use delta::{DeltaEvaluator, MappingDelta};
 pub use energy::{EnergyModel, Metrics};
 pub use eval::{Evaluator, Infeasible};
 pub use mapping::{Level, Mapping, Split};

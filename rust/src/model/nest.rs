@@ -15,12 +15,28 @@
 //!    overlap by the filter extent and only the new rows/columns are fetched;
 //!  * multicast — spatial loops over dims irrelevant to a dataspace read the
 //!    shared words once from the GLB and fan them out on the NoC.
+//!
+//! # Terms / assembly split (delta evaluation)
+//!
+//! Since the delta evaluator landed, [`analyze`] is the composition of two
+//! pure stages: [`terms`] derives every mapping-dependent quantity (tile
+//! extents, footprints, reuse walks, bank replication) into a [`NestTerms`]
+//! cache, and [`assemble`] rolls those terms up into a [`Traffic`] with the
+//! *exact* floating-point expression order the pre-split `analyze` used.
+//! [`crate::model::delta::DeltaEvaluator`] exploits the split: a one-dim or
+//! one-order perturbation invalidates only a provable subset of the terms
+//! (see `rust/src/model/README.md` for the dependency table), so it
+//! recomputes that subset and re-runs `assemble` — bit-identical to a fresh
+//! `analyze` because both paths execute the same arithmetic on the same
+//! values in the same order.
+#![deny(clippy::style)]
 
 use super::arch::HwConfig;
 use super::mapping::{Level, Mapping};
 use super::workload::{DataSpace, Dim, Layer, DATASPACES, DIMS};
 
-/// Tile extents per dimension (indexed by `Dim::index()`).
+/// Tile extents per dimension (indexed by `Dim::index()`), in loop
+/// iterations (= words along that dimension).
 pub type Tile = [u64; 6];
 
 /// Tile extents at each level of the hierarchy for a mapping.
@@ -36,6 +52,8 @@ pub struct Tiles {
     pub full: Tile,
 }
 
+/// Tile extents at every level for (layer, mapping). Pure function of the
+/// factor splits — loop orders do not move tile boundaries.
 pub fn tiles(layer: &Layer, mapping: &Mapping) -> Tiles {
     let mut local = [1u64; 6];
     let mut spatial = [1u64; 6];
@@ -167,7 +185,10 @@ pub struct DataTraffic {
 /// Complete traffic analysis for (layer, hardware, mapping).
 #[derive(Clone, Debug)]
 pub struct Traffic {
+    /// Per-dataspace boundary traffic, indexed by [`ds_index`].
     pub per_ds: [DataTraffic; 3],
+    /// Tile extents at every level (the energy model reads `spatial` for
+    /// granularity-waste accounting).
     pub tiles: Tiles,
     /// Active PEs = spatial_x_used * spatial_y_used.
     pub spatial_used: u64,
@@ -178,19 +199,24 @@ pub struct Traffic {
 }
 
 impl Traffic {
+    /// Boundary traffic of one dataspace.
     pub fn ds(&self, ds: DataSpace) -> &DataTraffic {
         &self.per_ds[ds_index(ds)]
     }
 
+    /// Total GLB accesses (reads + writes) across all dataspaces, in words.
     pub fn total_glb_accesses(&self) -> f64 {
         self.per_ds.iter().map(|t| t.glb_reads + t.glb_writes).sum()
     }
 
+    /// Total DRAM traffic (reads + writes) across all dataspaces, in words.
     pub fn total_dram_words(&self) -> f64 {
         self.per_ds.iter().map(|t| t.dram_reads + t.dram_writes).sum()
     }
 }
 
+/// Canonical array index of a dataspace (Inputs 0, Weights 1, Outputs 2) —
+/// the order `per_ds` arrays use everywhere in the cost model.
 pub fn ds_index(ds: DataSpace) -> usize {
     match ds {
         DataSpace::Inputs => 0,
@@ -217,6 +243,8 @@ fn relevant_spatial(mapping: &Mapping, ds: DataSpace, x_axis: bool) -> u64 {
 /// GLB bank replication factor for a dataspace: data shared across bank
 /// groups (because no spatial loop relevant to the dataspace distributes it
 /// along that axis) must be duplicated into every bank of the axis.
+/// Dimensionless, >= 1; depends only on the *spatial* factors of the
+/// dataspace's relevant dims (loop orders never move it).
 pub fn replication(hw: &HwConfig, mapping: &Mapping, ds: DataSpace) -> f64 {
     let rel_x = relevant_spatial(mapping, ds, true);
     let rel_y = relevant_spatial(mapping, ds, false);
@@ -225,25 +253,118 @@ pub fn replication(hw: &HwConfig, mapping: &Mapping, ds: DataSpace) -> f64 {
     rx * ry
 }
 
-/// Full traffic analysis. Assumes the mapping already passed validation
-/// (factor products, capacities, spatial fit); counts are still well-defined
-/// otherwise but meaningless.
-pub fn analyze(layer: &Layer, hw: &HwConfig, mapping: &Mapping) -> Traffic {
+/// The cached per-dataspace terms [`analyze`] derives before its roll-up.
+/// All footprints are in words; walks are dimensionless multiplicities.
+#[derive(Clone, Copy, Debug)]
+pub struct DsTerms {
+    /// Footprint of the per-PE (local) tile, in words.
+    pub foot_loc: f64,
+    /// Footprint of the PE-array (local x spatial) tile, in words.
+    pub foot_sp: f64,
+    /// Footprint of the GLB-resident tile, in words.
+    pub foot_glb: f64,
+    /// Boundary-A (GLB <-> PE array) reuse walk over the temporal loops
+    /// above the local level: [`refetch_mult`] for Inputs/Weights (stored
+    /// in `write_mult`, with `distinct` set equal), [`out_walk`] for
+    /// Outputs.
+    pub walk_a: OutWalk,
+    /// Boundary-B (DRAM <-> GLB) reuse walk over the DRAM loops, same
+    /// encoding as `walk_a`.
+    pub walk_b: OutWalk,
+    /// GLB bank replication factor (dimensionless, >= 1).
+    pub replication: f64,
+}
+
+/// Every mapping-dependent quantity [`analyze`] computes before the final
+/// traffic roll-up — the cache a [`crate::model::delta::DeltaEvaluator`]
+/// keeps per incumbent so a single-dim/order perturbation recomputes only
+/// the terms the touched level can affect.
+#[derive(Clone, Debug)]
+pub struct NestTerms {
+    /// Tile extents at each level.
+    pub tiles: Tiles,
+    /// Active PEs = spatial_x_used * spatial_y_used.
+    pub spatial_used: u64,
+    /// Total MACs of the layer (as f64: the roll-up arithmetic is f64).
+    pub macs: f64,
+    /// Layer convolution stride (input words skipped per output step).
+    pub stride: u64,
+    /// Per-dataspace terms, indexed by [`ds_index`].
+    pub per_ds: [DsTerms; 3],
+}
+
+/// Terms of one dataspace from tile extents and the two boundary loop
+/// walks (`above_local` / `above_glb` innermost-first, as produced by
+/// [`loops_above_local`] / [`loops_above_glb`]).
+pub fn ds_terms(
+    ds: DataSpace,
+    t: &Tiles,
+    stride: u64,
+    above_local: &[(Dim, u64)],
+    above_glb: &[(Dim, u64)],
+    hw: &HwConfig,
+    mapping: &Mapping,
+) -> DsTerms {
+    let foot_loc = footprint(ds, &t.local, stride) as f64;
+    let foot_sp = footprint(ds, &t.spatial, stride) as f64;
+    let foot_glb = footprint(ds, &t.glb, stride) as f64;
+    let (walk_a, walk_b) = match ds {
+        DataSpace::Inputs | DataSpace::Weights => {
+            let ra = refetch_mult(above_local, ds, &t.spatial, stride);
+            let rb = refetch_mult(above_glb, ds, &t.glb, stride);
+            (
+                OutWalk { write_mult: ra, distinct: ra },
+                OutWalk { write_mult: rb, distinct: rb },
+            )
+        }
+        DataSpace::Outputs => (out_walk(above_local), out_walk(above_glb)),
+    };
+    DsTerms {
+        foot_loc,
+        foot_sp,
+        foot_glb,
+        walk_a,
+        walk_b,
+        replication: replication(hw, mapping, ds),
+    }
+}
+
+/// Derive the full [`NestTerms`] cache for (layer, hw, mapping): stage one
+/// of [`analyze`]. Assumes the mapping already passed validation.
+pub fn terms(layer: &Layer, hw: &HwConfig, mapping: &Mapping) -> NestTerms {
     let t = tiles(layer, mapping);
     let stride = layer.stride;
-    let macs = layer.macs() as f64;
-    let spatial_used = mapping.spatial_used();
     let above_local = loops_above_local(mapping);
     let above_glb = loops_above_glb(mapping);
+    let per_ds = [
+        ds_terms(DataSpace::Inputs, &t, stride, &above_local, &above_glb, hw, mapping),
+        ds_terms(DataSpace::Weights, &t, stride, &above_local, &above_glb, hw, mapping),
+        ds_terms(DataSpace::Outputs, &t, stride, &above_local, &above_glb, hw, mapping),
+    ];
+    NestTerms {
+        tiles: t,
+        spatial_used: mapping.spatial_used(),
+        macs: layer.macs() as f64,
+        stride,
+        per_ds,
+    }
+}
+
+/// Roll cached [`NestTerms`] up into a [`Traffic`]: stage two of
+/// [`analyze`]. The floating-point expression order is *identical* to the
+/// pre-split `analyze`, so `assemble(&terms(..))` is bit-exact with it —
+/// and so is a delta evaluation that reuses unaffected terms.
+pub fn assemble(nt: &NestTerms) -> Traffic {
+    let macs = nt.macs;
+    let spatial_used = nt.spatial_used;
 
     let mut per_ds: [DataTraffic; 3] = Default::default();
     let mut noc_weighted_fanout = 0.0;
     let mut noc_total = 0.0;
 
     for ds in DATASPACES {
-        let foot_loc = footprint(ds, &t.local, stride) as f64;
-        let foot_sp = footprint(ds, &t.spatial, stride) as f64;
-        let foot_glb = footprint(ds, &t.glb, stride) as f64;
+        let dt = &nt.per_ds[ds_index(ds)];
+        let (foot_loc, foot_sp, foot_glb) = (dt.foot_loc, dt.foot_sp, dt.foot_glb);
         let dtr = &mut per_ds[ds_index(ds)];
 
         // Multicast fan-out: how many PEs share each distinct word.
@@ -252,19 +373,19 @@ pub fn analyze(layer: &Layer, hw: &HwConfig, mapping: &Mapping) -> Traffic {
         match ds {
             DataSpace::Inputs | DataSpace::Weights => {
                 // Boundary A: GLB -> PE array.
-                let refetch_a = refetch_mult(&above_local, ds, &t.spatial, stride);
+                let refetch_a = dt.walk_a.write_mult;
                 dtr.glb_reads = refetch_a * foot_sp;
                 dtr.noc_words = refetch_a * foot_loc * spatial_used as f64;
                 dtr.lb_fills = dtr.noc_words;
                 // Boundary B: DRAM -> GLB.
-                let refetch_b = refetch_mult(&above_glb, ds, &t.glb, stride);
+                let refetch_b = dt.walk_b.write_mult;
                 dtr.dram_reads = refetch_b * foot_glb;
                 dtr.glb_writes = dtr.dram_reads; // every DRAM word lands in GLB
                 dtr.lb_compute_accesses = macs; // one operand read per MAC
             }
             DataSpace::Outputs => {
                 // Boundary A: PE array -> GLB (psum writebacks + revisits).
-                let wa = out_walk(&above_local);
+                let wa = dt.walk_a;
                 // Every PE emits its local psum tile each round; spatial
                 // reduction merges them down to the array footprint before
                 // the GLB sees them.
@@ -277,7 +398,7 @@ pub fn analyze(layer: &Layer, hw: &HwConfig, mapping: &Mapping) -> Traffic {
                 dtr.noc_words += revisit_a * foot_loc * spatial_used as f64;
                 dtr.lb_fills = revisit_a * foot_loc * spatial_used as f64;
                 // Boundary B: GLB -> DRAM.
-                let wb = out_walk(&above_glb);
+                let wb = dt.walk_b;
                 dtr.dram_writes = wb.write_mult * foot_glb;
                 let revisit_b = (wb.write_mult - wb.distinct).max(0.0);
                 dtr.dram_reads = revisit_b * foot_glb;
@@ -292,19 +413,25 @@ pub fn analyze(layer: &Layer, hw: &HwConfig, mapping: &Mapping) -> Traffic {
         noc_total += dtr.noc_words;
     }
 
-    // GLB capacity usage with bank replication.
-    let glb_capacity_used: f64 = DATASPACES
-        .iter()
-        .map(|&ds| footprint(ds, &t.glb, stride) as f64 * replication(hw, mapping, ds))
-        .sum();
+    // GLB capacity usage with bank replication (same accumulation order as
+    // the pre-split DATASPACES sum).
+    let glb_capacity_used: f64 = nt.per_ds.iter().map(|dt| dt.foot_glb * dt.replication).sum();
 
     Traffic {
         per_ds,
-        tiles: t,
+        tiles: nt.tiles.clone(),
         spatial_used,
         glb_capacity_used,
         avg_fanout: if noc_total > 0.0 { noc_weighted_fanout / noc_total } else { 1.0 },
     }
+}
+
+/// Full traffic analysis. Assumes the mapping already passed validation
+/// (factor products, capacities, spatial fit); counts are still well-defined
+/// otherwise but meaningless. Equivalent to `assemble(&terms(..))` by
+/// construction.
+pub fn analyze(layer: &Layer, hw: &HwConfig, mapping: &Mapping) -> Traffic {
+    assemble(&terms(layer, hw, mapping))
 }
 
 #[cfg(test)]
@@ -466,5 +593,36 @@ mod tests {
             bad.ds(DataSpace::Outputs).glb_writes > good.ds(DataSpace::Outputs).glb_writes,
             "reduction-outer order must increase psum traffic"
         );
+    }
+
+    #[test]
+    fn assemble_of_terms_reproduces_analyze_bit_exactly() {
+        // The split is only sound if the two stages compose to the same
+        // bits the fused analysis produced (delta evaluation rests on it).
+        let l = layer();
+        let mut m = Mapping::trivial(&l);
+        *m.split_mut(Dim::K) = Split { dram: 4, glb: 2, spatial_x: 4, spatial_y: 1, local: 1 };
+        *m.split_mut(Dim::P) = Split { dram: 2, glb: 2, spatial_x: 1, spatial_y: 2, local: 1 };
+        *m.split_mut(Dim::C) = Split { dram: 1, glb: 8, spatial_x: 1, spatial_y: 2, local: 1 };
+        let h = hw();
+        let fused = analyze(&l, &h, &m);
+        let staged = assemble(&terms(&l, &h, &m));
+        for ds in DATASPACES {
+            let (a, b) = (fused.ds(ds), staged.ds(ds));
+            for (x, y) in [
+                (a.glb_reads, b.glb_reads),
+                (a.glb_writes, b.glb_writes),
+                (a.noc_words, b.noc_words),
+                (a.dram_reads, b.dram_reads),
+                (a.dram_writes, b.dram_writes),
+                (a.lb_fills, b.lb_fills),
+                (a.lb_compute_accesses, b.lb_compute_accesses),
+            ] {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ds:?}");
+            }
+        }
+        assert_eq!(fused.glb_capacity_used.to_bits(), staged.glb_capacity_used.to_bits());
+        assert_eq!(fused.avg_fanout.to_bits(), staged.avg_fanout.to_bits());
+        assert_eq!(fused.spatial_used, staged.spatial_used);
     }
 }

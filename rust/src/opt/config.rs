@@ -33,6 +33,12 @@ pub struct BoConfig {
     /// is zero on constructive spaces. `false` keeps the PR-4 behavior
     /// (free [0,1] box + projection/penalties) for the Fig. 3 baseline.
     pub lattice_box: bool,
+    /// BO only: top the acquisition pool up with local perturbations of the
+    /// incumbent (features derived incrementally through the delta
+    /// evaluator's terms cache), so acquisition can exploit the incumbent's
+    /// neighborhood as well as explore fresh constructions. `false`
+    /// reproduces the paper's pure globally-sampled pool (§3.4).
+    pub refine_pool: bool,
 }
 
 impl BoConfig {
@@ -46,6 +52,7 @@ impl BoConfig {
             refit_every: 25,
             project_rounding: true,
             lattice_box: true,
+            refine_pool: true,
         }
     }
 
@@ -59,6 +66,7 @@ impl BoConfig {
             refit_every: 5,
             project_rounding: true,
             lattice_box: true,
+            refine_pool: true,
         }
     }
 }
@@ -101,5 +109,6 @@ mod tests {
         // Fig. 3 baselines opt out explicitly
         assert!(c.sw_bo.lattice_box);
         assert!(c.sw_bo.project_rounding);
+        assert!(c.sw_bo.refine_pool);
     }
 }

@@ -5,10 +5,19 @@
 //! the model's predictions, and the best predicted proposals are measured on
 //! the simulator. Measure -> retrain -> propose, in batches, exactly TVM's
 //! loop structure.
+//!
+//! The SA walks are perturbation-shaped, so their per-step feature
+//! extraction runs on [`DeltaEvaluator::terms_for`]: each candidate's nest
+//! terms are derived incrementally from the walker's incumbent and fed to
+//! [`sw_features_from_terms`] — bit-identical features to the full
+//! `sw_features` recomputation (see `model/README.md`).
+#![deny(clippy::style)]
 
 use crate::model::mapping::Mapping;
+use crate::model::DeltaEvaluator;
 use crate::opt::sw_search::{SearchTrace, SwProblem};
 use crate::space::feasible::telemetry as feastel;
+use crate::space::features::sw_features_from_terms;
 use crate::surrogate::gbt::{Gbt, GbtConfig};
 use crate::surrogate::mlp::{Mlp, MlpConfig};
 use crate::util::rng::Rng;
@@ -57,6 +66,10 @@ pub fn search(
     let mut model = CostModel::Untrained;
 
     let max_draws = 500_000u64;
+    // One delta evaluator for all walks: each walker anchors it on its start
+    // point, then every SA step derives candidate terms incrementally.
+    let mut de =
+        DeltaEvaluator::new(problem.evaluator(), &problem.space.layer, &problem.space.hw);
     while trace.evals.len() < trials {
         // --- propose a measurement batch with SA over the cost model ---
         let mut proposals: Vec<(f64, Mapping)> = Vec::new();
@@ -67,7 +80,10 @@ pub fn search(
                 break;
             };
             trace.raw_draws += d;
-            let mut cur_score = model.predict(&problem.features(&cur), rng);
+            let terms = de.terms_for(&cur); // fresh anchor: counted fallback
+            let _ = de.accept(&cur);
+            let mut cur_score =
+                model.predict(&sw_features_from_terms(&problem.space, &cur, &terms), rng);
             let mut temp = 1.0f64;
             for _ in 0..SA_STEPS {
                 // feasibility-preserving move: every SA step walks inside
@@ -75,9 +91,14 @@ pub fn search(
                 // and costs one raw draw, same accounting as the heuristic
                 let cand = problem.space.perturb_feasible(rng, &cur);
                 trace.raw_draws += 1;
-                let score = model.predict(&problem.features(&cand), rng);
+                // terms_for diffs cand against the accepted incumbent and
+                // recomputes only the touched levels
+                let terms = de.terms_for(&cand);
+                let score =
+                    model.predict(&sw_features_from_terms(&problem.space, &cand, &terms), rng);
                 let accept = score < cur_score || rng.chance(((cur_score - score) / temp).exp());
                 if accept {
+                    let _ = de.accept(&cand);
                     cur = cand;
                     cur_score = score;
                 }
@@ -161,6 +182,20 @@ mod tests {
         let mut rng = Rng::seed_from_u64(2);
         let t = search(&p, 16, CostModelKind::Mlp, &mut rng);
         assert!(t.found_feasible());
+    }
+
+    #[test]
+    fn sa_walks_use_the_delta_terms_path() {
+        let p = problem();
+        let mut rng = Rng::seed_from_u64(5);
+        let before = crate::model::delta::telemetry::snapshot();
+        let t = search(&p, 8, CostModelKind::Gbt, &mut rng);
+        let after = crate::model::delta::telemetry::snapshot().since(&before);
+        // one round of 8 walkers x 30 SA steps, every step's features served
+        // from incrementally derived terms (global counters only grow, so a
+        // lower bound is safe under parallel tests)
+        assert!(after.delta_evals >= (WALKERS * SA_STEPS) as u64);
+        assert!(t.evals.len() <= 8);
     }
 
     #[test]

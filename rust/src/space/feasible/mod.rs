@@ -38,7 +38,8 @@ pub use lattice::DimLattice;
 pub use propagate::{SpaceCheck, Slot, SLOTS};
 
 use crate::model::arch::{HwConfig, Resources};
-use crate::model::mapping::{is_permutation, Mapping, Split};
+use crate::model::delta::MappingDelta;
+use crate::model::mapping::{is_permutation, Level, Mapping, Split};
 use crate::model::nest::footprint;
 use crate::model::validity::check_mapping;
 use crate::model::workload::{DataSpace, Dim, Layer, DIMS};
@@ -199,6 +200,16 @@ impl FeasibleSampler {
     /// resplit-kernel regression is visible above zero, not hidden in the
     /// 40% baseline.
     pub fn perturb(&self, rng: &mut Rng, base: &Mapping) -> Mapping {
+        self.perturb_described(rng, base).0
+    }
+
+    /// [`FeasibleSampler::perturb`] plus an exact [`MappingDelta`] describing
+    /// the move relative to `base` — the handshake that lets perturbation
+    /// consumers route the candidate through
+    /// [`crate::model::delta::DeltaEvaluator::evaluate_delta`] without
+    /// re-diffing. Draws the *same* RNG stream as `perturb` (which is a thin
+    /// wrapper), so switching call sites between the two is trace-neutral.
+    pub fn perturb_described(&self, rng: &mut Rng, base: &Mapping) -> (Mapping, MappingDelta) {
         if self.check != SpaceCheck::Constructive {
             // no propagation on this space: order swaps are all we have
             telemetry::record_perturbation_fallback();
@@ -217,7 +228,13 @@ impl FeasibleSampler {
                 // cross-check catches caller-contract violations
                 if check_mapping(&self.layer, &self.hw, &self.resources, &m).is_ok() {
                     telemetry::record_perturbation();
-                    return m;
+                    // the resplit may land back on the base's factors
+                    let delta = if m.splits == base.splits {
+                        MappingDelta::Identity
+                    } else {
+                        MappingDelta::Resplit(d)
+                    };
+                    return (m, delta);
                 }
             }
             // degradation: the resplit was refused or failed its check
@@ -227,15 +244,17 @@ impl FeasibleSampler {
             telemetry::record_perturbation();
         }
         let mut m = base.clone();
-        let order = match rng.below(3) {
-            0 => &mut m.order_local,
-            1 => &mut m.order_glb,
-            _ => &mut m.order_dram,
+        let (order, level) = match rng.below(3) {
+            0 => (&mut m.order_local, Level::Local),
+            1 => (&mut m.order_glb, Level::Glb),
+            _ => (&mut m.order_dram, Level::Dram),
         };
         let i = rng.below(6);
         let j = rng.below(6);
         order.swap(i, j);
-        m
+        let delta =
+            if i == j { MappingDelta::Identity } else { MappingDelta::OrderSwap(level) };
+        (m, delta)
     }
 
     /// Deterministic nearest-feasible projection: re-run the propagation
@@ -474,6 +493,24 @@ mod tests {
             }
         }
         assert!(moved > 100, "perturb moved only {moved}/200 times");
+    }
+
+    #[test]
+    fn perturb_described_deltas_are_exact_and_stream_neutral() {
+        let fs = sampler("DQN-K2");
+        let mut rng = Rng::seed_from_u64(2);
+        let base = fs.sample(&mut rng).unwrap();
+        for _ in 0..200 {
+            let (m, delta) = fs.perturb_described(&mut rng, &base);
+            // the reported delta is exactly what diffing reconstructs
+            assert_eq!(MappingDelta::diff(&base, &m), Some(delta), "{delta:?}");
+        }
+        // the thin wrapper draws the identical stream
+        let mut r1 = Rng::seed_from_u64(9);
+        let mut r2 = Rng::seed_from_u64(9);
+        for _ in 0..100 {
+            assert_eq!(fs.perturb(&mut r1, &base), fs.perturb_described(&mut r2, &base).0);
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use crate::model::arch::{DataflowOpt, HwConfig, Resources};
 use crate::model::energy::effective_glb_capacity;
 use crate::model::mapping::{Level, Mapping};
-use crate::model::nest::{footprint, out_walk, replication, tiles};
+use crate::model::nest::{ds_index, footprint, out_walk, replication, tiles, NestTerms};
 use crate::model::workload::{DataSpace, Dim};
 use crate::space::sw_space::SwSpace;
 
@@ -154,6 +154,66 @@ pub fn sw_features(space: &SwSpace, m: &Mapping) -> [f64; FEATURE_DIM] {
     ]
 }
 
+/// [`sw_features`] computed from a cached [`NestTerms`] — the delta
+/// evaluator's feature fast path (`DeltaEvaluator::terms_for`). The terms
+/// hold exactly the footprint/walk/replication values `sw_features` derives
+/// from scratch (see `nest::ds_terms`), so the feature vector is
+/// bit-identical; only the mapping-local coordinates (spatial products,
+/// level iteration products, halo flag) are read off the mapping itself.
+pub fn sw_features_from_terms(
+    space: &SwSpace,
+    m: &Mapping,
+    nt: &NestTerms,
+) -> [f64; FEATURE_DIM] {
+    let hw = &space.hw;
+    let foot_loc = |ds| nt.per_ds[ds_index(ds)].foot_loc;
+    let foot_glb = |ds| nt.per_ds[ds_index(ds)].foot_glb;
+    let cap = effective_glb_capacity(hw, &space.resources);
+    let glb_used: f64 = [DataSpace::Inputs, DataSpace::Weights, DataSpace::Outputs]
+        .iter()
+        .map(|&ds| foot_glb(ds) * nt.per_ds[ds_index(ds)].replication)
+        .sum();
+
+    let spx = m.spatial_x_used() as f64;
+    let spy = m.spatial_y_used() as f64;
+
+    let prod_level = |lv: Level| -> f64 {
+        m.loops_at(lv).iter().map(|&(_, f)| f as f64).product()
+    };
+
+    // the Outputs boundary walks *are* the psum revisit multipliers
+    let w_all = nt.per_ds[ds_index(DataSpace::Outputs)].walk_a;
+    let w_dram = nt.per_ds[ds_index(DataSpace::Outputs)].walk_b;
+
+    // halo friendliness: innermost non-1 input-relevant GLB loop is P or Q
+    let halo = m
+        .loops_at(Level::Glb)
+        .iter()
+        .rev()
+        .find(|&&(d, f)| f > 1 && DataSpace::Inputs.relevant(d))
+        .map(|&(d, _)| matches!(d, Dim::P | Dim::Q))
+        .unwrap_or(false);
+
+    [
+        foot_loc(DataSpace::Inputs) / hw.lb_inputs.max(1) as f64,
+        foot_loc(DataSpace::Weights) / hw.lb_weights.max(1) as f64,
+        foot_loc(DataSpace::Outputs) / hw.lb_outputs.max(1) as f64,
+        glb_used / cap.max(1.0),
+        spx / hw.pe_mesh_x as f64,
+        spy / hw.pe_mesh_y as f64,
+        l2(spx * spy) / 8.0,
+        l2(prod_level(Level::Local)) / 8.0,
+        l2(prod_level(Level::Glb)) / 8.0,
+        l2(prod_level(Level::Dram)) / 16.0,
+        l2(w_dram.write_mult / w_dram.distinct.max(1.0)) / 8.0,
+        l2(w_all.write_mult / w_all.distinct.max(1.0)) / 8.0,
+        if halo { 1.0 } else { 0.0 },
+        l2(foot_glb(DataSpace::Inputs) + 1.0) / 16.0,
+        l2(foot_glb(DataSpace::Weights) + 1.0) / 16.0,
+        l2(foot_glb(DataSpace::Outputs) + 1.0) / 16.0,
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,6 +276,28 @@ mod tests {
         m.order_dram = [Dim::C, Dim::R, Dim::S, Dim::P, Dim::Q, Dim::K];
         let f_bad = sw_features(&sp, &m);
         assert!(f_bad[11] > f_good[11]);
+    }
+
+    #[test]
+    fn features_from_terms_are_bit_identical() {
+        let sp = SwSpace::new(
+            layer_by_name("DQN-K2").unwrap(),
+            eyeriss_hw(168),
+            eyeriss_resources(168),
+        );
+        let mut rng = Rng::seed_from_u64(4);
+        let mut checked = 0;
+        for _ in 0..10 {
+            let Some((m, _)) = sp.sample_valid(&mut rng, 1_000_000) else { continue };
+            let nt = crate::model::nest::terms(&sp.layer, &sp.hw, &m);
+            let scratch = sw_features(&sp, &m);
+            let cached = sw_features_from_terms(&sp, &m, &nt);
+            for (i, (a, b)) in scratch.iter().zip(cached.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "feature {i} diverged");
+            }
+            checked += 1;
+        }
+        assert!(checked > 0, "no feasible mapping sampled at all");
     }
 
     #[test]

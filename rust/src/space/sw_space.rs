@@ -179,6 +179,18 @@ impl SwSpace {
         self.feasible.perturb(rng, base)
     }
 
+    /// [`Self::perturb_feasible`] plus an exact [`MappingDelta`] describing
+    /// the move, so perturbation-shaped searchers can route the candidate
+    /// through [`crate::model::DeltaEvaluator`] without re-diffing. Draws the
+    /// same RNG stream as `perturb_feasible`.
+    pub fn perturb_feasible_described(
+        &self,
+        rng: &mut Rng,
+        base: &Mapping,
+    ) -> (Mapping, crate::model::MappingDelta) {
+        self.feasible.perturb_described(rng, base)
+    }
+
     /// Local move for simulated-annealing searchers: re-split one dimension
     /// or swap two loops in one order.
     pub fn perturb(&self, rng: &mut Rng, base: &Mapping) -> Mapping {

@@ -454,10 +454,15 @@ impl GpSurrogate {
     }
 
     /// Bring the surrogate up to date with an *append-only* observation log
-    /// (`xs`/`ys` must extend the log this surrogate last consumed): each
-    /// new point is absorbed with an O(n^2) `extend`. A log that shrank
-    /// instead falls back to a full data refit. This is the cheap per-trial
-    /// path the BO loops call between scheduled `fit`s.
+    /// (`xs`/`ys` must extend the log this surrogate last consumed). All
+    /// pending points are absorbed in **one blocked update**: a single
+    /// bordered Cholesky extension plus one weight re-solve
+    /// ([`NativeGp::extend_many_with_targets`]), instead of one rank-1
+    /// extend per point — same O(n^2) asymptotics for a single point, one
+    /// factor copy and one standardization pass instead of `k` for a batch,
+    /// and a bit-identical factor either way. A log that shrank instead
+    /// falls back to a full data refit. This is the cheap per-trial path
+    /// the BO loops call between scheduled `fit`s.
     pub fn sync_data(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> Result<()> {
         if xs.len() != ys.len() {
             bail!("GpSurrogate::sync_data: {} inputs vs {} targets", xs.len(), ys.len());
@@ -465,8 +470,75 @@ impl GpSurrogate {
         if xs.len() < self.synced {
             return self.fit_data_only(xs, ys);
         }
-        for i in self.synced..xs.len() {
-            self.extend(&xs[i], ys[i])?;
+        let pending_x = &xs[self.synced..];
+        let pending_y = &ys[self.synced..];
+        self.synced = xs.len();
+        if pending_x.is_empty() {
+            return Ok(());
+        }
+        // Ingestion filter, identical to the per-point `extend` path: the
+        // first accepted row fixes the feature width, non-finite pairs are
+        // consumed from the log but never enter the model.
+        let mut width = self.x.first().map(Vec::len);
+        let mut clean_x: Vec<Vec<f64>> = Vec::with_capacity(pending_x.len());
+        let mut clean_y: Vec<f64> = Vec::with_capacity(pending_y.len());
+        for (xi, yi) in pending_x.iter().zip(pending_y.iter()) {
+            let width_ok = match width {
+                Some(w) => w == xi.len(),
+                None => true,
+            };
+            if yi.is_finite() && width_ok && xi.iter().all(|v| v.is_finite()) {
+                width = Some(xi.len());
+                clean_x.push(xi.clone());
+                clean_y.push(*yi);
+            }
+        }
+        if clean_x.is_empty() {
+            return Ok(());
+        }
+        let k = clean_x.len();
+        self.x.extend(clean_x.iter().cloned());
+        self.y_raw.extend_from_slice(&clean_y);
+        self.restandardize();
+        if self.x.len() < 2 {
+            self.native = None;
+            self.status = FitStatus::Insufficient;
+            return Ok(());
+        }
+        if matches!(self.backend, GpBackend::Aot(_)) {
+            // Data-only state: the AOT posterior is recomputed from (x, y)
+            // on device at the next predict.
+            for _ in 0..k {
+                telemetry::record_extend();
+            }
+            self.status = FitStatus::Extended;
+            return Ok(());
+        }
+        let n_new = self.x.len();
+        let y_std = self.y_std_vec.as_slice();
+        // One fused blocked step: the factor grows by all k points at once
+        // and the weights are re-solved against the whole freshly-
+        // standardized target vector.
+        let (attempted, extended) = match self.native.as_mut() {
+            Some(gp) if gp.n_train() + k == n_new => {
+                (true, gp.extend_many_with_targets(&clean_x, y_std))
+            }
+            _ => (false, false),
+        };
+        if extended {
+            // per-point accounting, same as k rank-1 absorptions would log
+            for _ in 0..k {
+                telemetry::record_extend();
+            }
+            self.status = FitStatus::Extended;
+        } else {
+            // Only an *attempted* blocked update that failed counts as a
+            // fallback in telemetry; having no live factor yet (first
+            // points, or after a degraded fit) is an ordinary data refit.
+            if attempted {
+                telemetry::record_extend_fallback();
+            }
+            self.refit_backend(RefitKind::Data);
         }
         Ok(())
     }
@@ -713,6 +785,38 @@ mod tests {
         inc.sync_data(&x, &y).unwrap();
         assert_eq!(inc.fit_status(), FitStatus::Extended);
         assert_eq!(inc.n_train(), 30);
+        let (cand, _) = linear_data(&mut rng, 12, 6);
+        let pf = full.predict(&cand).unwrap();
+        let pi = inc.predict(&cand).unwrap();
+        for (a, b) in pf.mean.iter().zip(pi.mean.iter()) {
+            assert!((a - b).abs() < 1e-9, "mean {a} vs {b}");
+        }
+        for (a, b) in pf.var.iter().zip(pi.var.iter()) {
+            assert!((a - b).abs() < 1e-9, "var {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sync_data_blocked_batch_filters_rejects_and_matches_refit() {
+        let mut rng = Rng::seed_from_u64(13);
+        let (x, y) = linear_data(&mut rng, 30, 6);
+        // append-only log: 20 consumed, 10 pending, one pair poisoned
+        let mut xs = x.clone();
+        let mut ys = y.clone();
+        ys[24] = f64::NAN;
+        let mut inc = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: true });
+        inc.fit_data_only(&xs[..20], &ys[..20]).unwrap();
+        let before = telemetry::snapshot();
+        inc.sync_data(&xs, &ys).unwrap();
+        let delta = telemetry::snapshot().since(&before);
+        assert_eq!(inc.fit_status(), FitStatus::Extended);
+        assert_eq!(inc.n_train(), 29, "the poisoned pair must be consumed, not ingested");
+        assert!(delta.extends >= 9, "blocked absorption must log per-point extends");
+        // equals a from-scratch data refit on the 29 clean pairs
+        xs.remove(24);
+        ys.remove(24);
+        let mut full = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: true });
+        full.fit_data_only(&xs, &ys).unwrap();
         let (cand, _) = linear_data(&mut rng, 12, 6);
         let pf = full.predict(&cand).unwrap();
         let pi = inc.predict(&cand).unwrap();

@@ -15,7 +15,8 @@
 
 use crate::runtime::gp_exec::{Posterior, Theta};
 use crate::surrogate::linalg::{
-    chol_extend, cholesky_adaptive, logdet_from_chol, solve_lower, solve_lower_t,
+    chol_extend, chol_extend_block, cholesky_adaptive, logdet_from_chol, solve_lower,
+    solve_lower_t,
 };
 
 /// Combined kernel value (matches kernels/kmatrix.py).
@@ -146,6 +147,74 @@ impl NativeGp {
         self.y = y.to_vec();
         self.refresh_alpha();
         true
+    }
+
+    /// Absorb a whole batch of new training points *and* replace the full
+    /// target vector (length n + k) in one blocked O((n+k)^2 * k) update:
+    /// a single [`chol_extend_block`] bordered factorization plus one pair
+    /// of triangular solves, instead of `k` rank-1 [`NativeGp::extend`]
+    /// calls that each recopy the factor and re-solve the weights. The
+    /// factor — and therefore the posterior — is bit-identical to the `k`
+    /// sequential extensions.
+    ///
+    /// With an empty batch this degrades to [`NativeGp::set_targets`].
+    /// Returns false (model unchanged) on inconsistent lengths, non-finite
+    /// inputs, a feature-dimension mismatch, or loss of positive
+    /// definiteness; the caller should then fall back to a full refit.
+    pub fn extend_many_with_targets(&mut self, xs_new: &[Vec<f64>], y: &[f64]) -> bool {
+        let k = xs_new.len();
+        if k == 0 {
+            return self.set_targets(y);
+        }
+        if y.len() != self.n + k || y.iter().any(|v| !v.is_finite()) {
+            return false;
+        }
+        if xs_new.iter().any(|r| r.iter().any(|v| !v.is_finite())) {
+            return false;
+        }
+        let dim = self.x.first().map(Vec::len).unwrap_or_else(|| xs_new[0].len());
+        if xs_new.iter().any(|r| r.len() != dim) {
+            return false;
+        }
+        // cross block (k x n) and new-vs-new block (k x k, noise + the
+        // factor's jitter on the diagonal): exactly the borders `k`
+        // sequential extends would compute one column at a time
+        let mut b = Vec::with_capacity(k * self.n);
+        for xn in xs_new {
+            b.extend(self.x.iter().map(|xi| kernel(self.theta, xn, xi)));
+        }
+        let mut c = vec![0.0; k * k];
+        for i in 0..k {
+            for j in 0..=i {
+                let mut v = kernel(self.theta, &xs_new[i], &xs_new[j]);
+                if i == j {
+                    v += self.theta.tau2 + self.jitter;
+                }
+                c[i * k + j] = v;
+                c[j * k + i] = v;
+            }
+        }
+        let Some(l) = chol_extend_block(&self.l, self.n, &b, &c, k) else {
+            return false;
+        };
+        self.l = l;
+        self.n += k;
+        self.x.extend(xs_new.iter().cloned());
+        self.y = y.to_vec();
+        self.refresh_alpha();
+        true
+    }
+
+    /// Append `k` (x, y) observations through the blocked path, keeping the
+    /// existing targets as-is. Callers that re-standardize targets on every
+    /// absorption want [`NativeGp::extend_many_with_targets`] instead.
+    pub fn extend_many(&mut self, xs_new: &[Vec<f64>], ys_new: &[f64]) -> bool {
+        if xs_new.len() != ys_new.len() {
+            return false;
+        }
+        let mut y = self.y.clone();
+        y.extend_from_slice(ys_new);
+        self.extend_many_with_targets(xs_new, &y)
     }
 
     /// Replace the target vector (same training inputs) and re-solve the
@@ -343,6 +412,60 @@ mod tests {
             }
             assert!((full.nll(&y) - inc.nll(&y)).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn extend_many_matches_sequential_extends_and_full_refit() {
+        for seed in 0..8 {
+            let mut rng = Rng::seed_from_u64(200 + seed);
+            let (x, y) = data(&mut rng, 24, 6);
+            let theta = Theta::hw_default();
+            let full = NativeGp::fit(theta, &x, &y).unwrap();
+            // one blocked absorption of the last 8 points...
+            let mut blk = NativeGp::fit(theta, &x[..16], &y[..16]).unwrap();
+            assert!(blk.extend_many(&x[16..], &y[16..]), "blocked extend failed (seed {seed})");
+            // ...must be bit-identical to 8 sequential rank-1 extends
+            let mut seq = NativeGp::fit(theta, &x[..16], &y[..16]).unwrap();
+            for i in 16..24 {
+                assert!(seq.extend(&x[i], y[i]));
+            }
+            assert_eq!(blk.n_train(), seq.n_train());
+            let (cand, _) = data(&mut rng, 20, 6);
+            let pb = blk.posterior(&cand);
+            let ps = seq.posterior(&cand);
+            for (a, b) in pb.mean.iter().zip(ps.mean.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}: blocked vs sequential mean");
+            }
+            for (a, b) in pb.var.iter().zip(ps.var.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}: blocked vs sequential var");
+            }
+            // and match a from-scratch refit to the contract tolerance
+            let pf = full.posterior(&cand);
+            for (a, b) in pb.mean.iter().zip(pf.mean.iter()) {
+                assert!((a - b).abs() < 1e-9, "seed {seed}: mean {a} vs {b}");
+            }
+            for (a, b) in pb.var.iter().zip(pf.var.iter()) {
+                assert!((a - b).abs() < 1e-9, "seed {seed}: var {a} vs {b}");
+            }
+            assert!((full.nll(&y) - blk.nll(&y)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn extend_many_rejects_bad_batches_and_leaves_model_usable() {
+        let mut rng = Rng::seed_from_u64(11);
+        let (x, y) = data(&mut rng, 10, 4);
+        let mut gp = NativeGp::fit(Theta::hw_default(), &x, &y).unwrap();
+        assert!(!gp.extend_many(&[vec![f64::NAN, 0.0, 0.0, 0.0]], &[1.0]));
+        assert!(!gp.extend_many(&[vec![1.0, 2.0]], &[1.0])); // dim mismatch
+        assert!(!gp.extend_many(&[x[0].clone()], &[f64::NAN]));
+        assert!(!gp.extend_many(&[x[0].clone(), x[1].clone()], &[1.0])); // length mismatch
+        assert_eq!(gp.n_train(), 10);
+        // an empty batch degrades to set_targets on the unchanged vector
+        assert!(gp.extend_many(&[], &[]));
+        assert_eq!(gp.n_train(), 10);
+        let post = gp.posterior(&x);
+        assert!(post.mean.iter().all(|m| m.is_finite()));
     }
 
     #[test]

@@ -140,6 +140,71 @@ pub fn chol_extend(l: &[f64], n: usize, k_col: &[f64], k_diag: f64) -> Option<Ve
     Some(out)
 }
 
+/// Extend a Cholesky factor by `k` rows/columns in one blocked update:
+/// given the factor `l` of an n x n matrix K, the cross-covariance block
+/// `b` (k x n row-major, row i = K against new point i) and the
+/// new-vs-new block `c` (k x k row-major, diagonal with noise/jitter
+/// already included), return the (n+k) x (n+k) factor of the bordered
+/// matrix. One O((n+k)^2 * k) pass absorbing a whole batch, replacing `k`
+/// [`chol_extend`] calls that would each reallocate and recopy the factor.
+///
+/// Row `r`'s forward substitution and Schur diagonal use the exact
+/// summation order of [`solve_lower`] / [`chol_extend`], so the result is
+/// bit-identical to `k` sequential rank-1 extensions.
+///
+/// Returns `None` — caller falls back to a full (adaptive) refit — when
+/// inputs are non-finite or any Schur complement loses positive
+/// definiteness.
+pub fn chol_extend_block(
+    l: &[f64],
+    n: usize,
+    b: &[f64],
+    c: &[f64],
+    k: usize,
+) -> Option<Vec<f64>> {
+    debug_assert_eq!(l.len(), n * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), k * k);
+    if b.iter().any(|v| !v.is_finite()) || c.iter().any(|v| !v.is_finite()) {
+        return None;
+    }
+    let m = n + k;
+    let mut out = vec![0.0; m * m];
+    for i in 0..n {
+        out[i * m..i * m + n].copy_from_slice(&l[i * n..i * n + n]);
+    }
+    for r in 0..k {
+        let row = n + r;
+        // forward substitution L' x = border, L' the factor built so far
+        // (original rows plus the r new rows already absorbed)
+        for j in 0..row {
+            let rhs = if j < n { b[r * n + j] } else { c[r * k + (j - n)] };
+            let mut s = rhs;
+            for t in 0..j {
+                s -= out[j * m + t] * out[row * m + t];
+            }
+            out[row * m + j] = s / out[j * m + j];
+        }
+        // Schur diagonal: full sum first, one subtraction — the same
+        // floating-point sequence as `chol_extend`
+        let sum: f64 = (0..row)
+            .map(|t| {
+                let v = out[row * m + t];
+                v * v
+            })
+            .sum();
+        let d = c[r * k + r] - sum;
+        if !(d > 0.0) || !d.is_finite() {
+            return None;
+        }
+        out[row * m + row] = d.sqrt();
+    }
+    if out.iter().any(|v| !v.is_finite()) {
+        return None;
+    }
+    Some(out)
+}
+
 /// Solve L x = b (forward substitution), L lower-triangular row-major.
 pub fn solve_lower(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
     debug_assert_eq!(b.len(), n);
@@ -307,6 +372,56 @@ mod tests {
                 assert!((e - f).abs() < 1e-10, "n={n}: {e} vs {f}");
             }
         }
+    }
+
+    #[test]
+    fn extend_block_matches_sequential_extends_bitwise() {
+        let mut rng = Rng::seed_from_u64(9);
+        for (n, k) in [(1usize, 1usize), (4, 3), (12, 5), (20, 8)] {
+            let m = n + k;
+            let a = random_spd(&mut rng, m);
+            let mut head = vec![0.0; n * n];
+            for i in 0..n {
+                head[i * n..i * n + n].copy_from_slice(&a[i * m..i * m + n]);
+            }
+            cholesky(&mut head, n).unwrap();
+            // sequential: k rank-1 extensions
+            let mut seq = head.clone();
+            for r in 0..k {
+                let cur = n + r;
+                let k_col: Vec<f64> = (0..cur).map(|i| a[(n + r) * m + i]).collect();
+                seq = chol_extend(&seq, cur, &k_col, a[(n + r) * m + (n + r)]).unwrap();
+            }
+            // blocked: one bordered update
+            let b: Vec<f64> = (0..k).flat_map(|r| (0..n).map(move |j| (r, j)))
+                .map(|(r, j)| a[(n + r) * m + j])
+                .collect();
+            let c: Vec<f64> = (0..k).flat_map(|r| (0..k).map(move |j| (r, j)))
+                .map(|(r, j)| a[(n + r) * m + (n + j)])
+                .collect();
+            let blk = chol_extend_block(&head, n, &b, &c, k).unwrap();
+            assert_eq!(seq.len(), blk.len());
+            for (i, (s, v)) in seq.iter().zip(blk.iter()).enumerate() {
+                assert_eq!(s.to_bits(), v.to_bits(), "n={n} k={k} entry {i}: {s} vs {v}");
+            }
+            // and both match the full factorization to machine precision
+            let mut full = a.clone();
+            cholesky(&mut full, m).unwrap();
+            for (v, f) in blk.iter().zip(full.iter()) {
+                assert!((v - f).abs() < 1e-10, "n={n} k={k}: {v} vs {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn extend_block_rejects_indefinite_and_nan() {
+        let l = vec![1.0]; // factor of [[1.0]]
+        // Schur complement of the second new point goes negative
+        assert!(chol_extend_block(&l, 1, &[0.5, 2.0], &[1.0, 0.9, 0.9, 1.0], 2).is_none());
+        assert!(chol_extend_block(&l, 1, &[f64::NAN], &[1.0], 1).is_none());
+        assert!(chol_extend_block(&l, 1, &[0.5], &[f64::NAN], 1).is_none());
+        // a valid two-point border extends
+        assert!(chol_extend_block(&l, 1, &[0.5, 0.25], &[1.0, 0.1, 0.1, 1.0], 2).is_some());
     }
 
     #[test]

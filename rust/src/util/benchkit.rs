@@ -3,7 +3,14 @@
 //! Used by the `benches/` targets (declared with `harness = false`): warm up,
 //! run timed batches until a time budget is reached, report median/mean/p95
 //! per iteration, and emit a machine-readable line for EXPERIMENTS.md.
+//!
+//! When the `BENCH_JSON_DIR` environment variable is set, each bench target
+//! can additionally persist its results as `BENCH_<name>.json` through
+//! [`JsonSink`] — CI uploads these as artifacts and compares the `ratios`
+//! section against committed baselines (see `ci/compare_bench.py`). The
+//! schema is documented in `rust/src/model/README.md`.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 pub struct BenchResult {
@@ -92,6 +99,123 @@ pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> Bench
     r
 }
 
+/// Collects [`BenchResult`]s and named speedup ratios for one bench target
+/// and serialises them as `BENCH_<name>.json` when `BENCH_JSON_DIR` is set.
+///
+/// The JSON is hand-rolled (no serde in the offline crate set):
+///
+/// ```json
+/// {"bench": "delta_eval",
+///  "results": [{"name": "...", "iters": 9, "median_ns": 1.0,
+///               "mean_ns": 1.1, "p95_ns": 1.2}],
+///  "ratios": {"delta_speedup/resnet_k4": 11.3}}
+/// ```
+///
+/// Ratios are the machine-independent part — absolute nanoseconds vary with
+/// the runner, speedup ratios of two kernels on the *same* runner do not —
+/// so baselines in `ci/bench-baselines/` pin ratios only.
+pub struct JsonSink {
+    bench: String,
+    results: Vec<BenchResult>,
+    ratios: Vec<(String, f64)>,
+}
+
+impl JsonSink {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), results: Vec::new(), ratios: Vec::new() }
+    }
+
+    /// Record one timing row (copies the fields; `BenchResult` stays plain).
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(BenchResult {
+            name: r.name.clone(),
+            iters: r.iters,
+            median_ns: r.median_ns,
+            mean_ns: r.mean_ns,
+            p95_ns: r.p95_ns,
+        });
+    }
+
+    /// Record a named speedup ratio (e.g. `delta_speedup/resnet_k4`).
+    pub fn ratio(&mut self, name: &str, value: f64) {
+        self.ratios.push((name.to_string(), value));
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\"bench\": ");
+        s.push_str(&json_str(&self.bench));
+        s.push_str(", \"results\": [");
+        for (i, r) in self.results.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"name\": {}, \"iters\": {}, \"median_ns\": {}, \"mean_ns\": {}, \"p95_ns\": {}}}",
+                json_str(&r.name),
+                r.iters,
+                json_num(r.median_ns),
+                json_num(r.mean_ns),
+                json_num(r.p95_ns)
+            ));
+        }
+        s.push_str("], \"ratios\": {");
+        for (i, (k, v)) in self.ratios.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("{}: {}", json_str(k), json_num(*v)));
+        }
+        s.push_str("}}\n");
+        s
+    }
+
+    /// Write `BENCH_<bench>.json` into `$BENCH_JSON_DIR` (creating the
+    /// directory if needed). Returns `Ok(None)` when the variable is unset —
+    /// local `cargo bench` runs stay file-free unless asked.
+    pub fn write(&self) -> std::io::Result<Option<PathBuf>> {
+        let Some(dir) = std::env::var_os("BENCH_JSON_DIR") else {
+            return Ok(None);
+        };
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.to_json())?;
+        println!("bench json: wrote {}", path.display());
+        Ok(Some(path))
+    }
+}
+
+/// JSON string literal with the escapes the spec requires. Bench names are
+/// code-controlled ASCII, but escaping is cheap and makes the sink total.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number: f64 Display is shortest-round-trip and spec-valid for finite
+/// values; NaN/inf (a degenerate ratio) become `null` rather than bad JSON.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,5 +236,69 @@ mod tests {
         assert!(fmt_ns(5_000.0).ends_with("us"));
         assert!(fmt_ns(5_000_000.0).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn json_sink_serialises_results_and_ratios() {
+        let mut sink = JsonSink::new("delta_eval");
+        sink.push(&BenchResult {
+            name: "full/resnet_k4".to_string(),
+            iters: 100,
+            median_ns: 1234.5,
+            mean_ns: 1300.0,
+            p95_ns: 2000.25,
+        });
+        sink.push(&BenchResult {
+            name: "delta/resnet_k4".to_string(),
+            iters: 400,
+            median_ns: 120.0,
+            mean_ns: 130.0,
+            p95_ns: 200.0,
+        });
+        sink.ratio("delta_speedup/resnet_k4", 1234.5 / 120.0);
+        let json = sink.to_json();
+        assert!(json.starts_with("{\"bench\": \"delta_eval\""));
+        assert!(json.contains("\"name\": \"full/resnet_k4\""));
+        assert!(json.contains("\"median_ns\": 1234.5"));
+        assert!(json.contains("\"iters\": 400"));
+        assert!(json.contains("\"delta_speedup/resnet_k4\": "));
+        // crude but dependency-free structural checks
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn json_sink_escapes_and_handles_degenerate_values() {
+        let mut sink = JsonSink::new("weird");
+        sink.push(&BenchResult {
+            name: "quote\"back\\slash\nline".to_string(),
+            iters: 1,
+            median_ns: f64::NAN,
+            mean_ns: f64::INFINITY,
+            p95_ns: 0.0,
+        });
+        let json = sink.to_json();
+        assert!(json.contains("quote\\\"back\\\\slash\\nline"));
+        assert!(json.contains("\"median_ns\": null"));
+        assert!(json.contains("\"mean_ns\": null"));
+        assert!(json.contains("\"p95_ns\": 0"));
+    }
+
+    #[test]
+    fn json_sink_write_honours_bench_json_dir() {
+        let dir = std::env::temp_dir()
+            .join(format!("benchkit_sink_test_{}", std::process::id()));
+        // Env vars are process-global; no other test in the crate touches
+        // BENCH_JSON_DIR, so setting it here cannot race.
+        std::env::set_var("BENCH_JSON_DIR", &dir);
+        let mut sink = JsonSink::new("sink_test");
+        sink.ratio("r", 2.0);
+        let path = sink.write().expect("write must succeed").expect("dir is set");
+        let body = std::fs::read_to_string(&path).expect("file exists");
+        assert!(path.ends_with("BENCH_sink_test.json"));
+        assert!(body.contains("\"r\": 2"));
+        std::env::remove_var("BENCH_JSON_DIR");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(JsonSink::new("unset").write().expect("ok").is_none());
     }
 }

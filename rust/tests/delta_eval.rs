@@ -1,0 +1,260 @@
+//! Bit-exactness contract of the incremental cost model: for every paper
+//! layer, a delta-evaluated perturbation (one dimension resplit or one
+//! loop-order swap off a rebased incumbent) must return *bit-identical*
+//! metrics — EDP, energy, cycles, and the infeasibility verdict — to a
+//! from-scratch `Evaluator::evaluate`. The fallback paths (multi-delta
+//! candidates, infeasible incumbents) must degrade to the full evaluation,
+//! still bit-identically, and must be visible in the delta telemetry.
+//!
+//! Telemetry assertions use lower bounds only: the counters are
+//! process-global and the test harness runs files in parallel.
+
+use codesign::model::delta::telemetry;
+use codesign::model::energy::Metrics;
+use codesign::model::eval::Infeasible;
+use codesign::model::{DeltaEvaluator, Evaluator, Level, MappingDelta};
+use codesign::space::sw_space::SwSpace;
+use codesign::util::rng::Rng;
+use codesign::workloads::eyeriss::{eyeriss_hw, eyeriss_resources};
+use codesign::workloads::specs::layer_by_name;
+
+/// Every layer of the paper's three workloads (Fig. 11/12 names).
+const PAPER_LAYERS: [&str; 8] = [
+    "ResNet-K1", "ResNet-K2", "ResNet-K3", "ResNet-K4", "DQN-K1", "DQN-K2", "MLP-K1", "MLP-K2",
+];
+
+fn scenario(name: &str) -> (SwSpace, Evaluator) {
+    let layer = layer_by_name(name).unwrap();
+    let res = eyeriss_resources(168);
+    let space = SwSpace::new(layer, eyeriss_hw(168), res.clone());
+    (space, Evaluator::new(res))
+}
+
+/// Both paths must agree exactly: same verdict, and on success the same bits
+/// in every float the optimizer or the figures ever read.
+fn assert_bit_identical(
+    ctx: &str,
+    full: &Result<Metrics, Infeasible>,
+    fast: &Result<Metrics, Infeasible>,
+) {
+    match (full, fast) {
+        (Ok(a), Ok(b)) => {
+            assert_eq!(a.edp.to_bits(), b.edp.to_bits(), "{ctx}: edp {} vs {}", a.edp, b.edp);
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits(), "{ctx}: energy");
+            assert_eq!(a.cycles.to_bits(), b.cycles.to_bits(), "{ctx}: cycles");
+            assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "{ctx}: utilization");
+            assert_eq!(a.macs, b.macs, "{ctx}: macs");
+            for (x, y) in a.energy_breakdown.iter().zip(b.energy_breakdown.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: energy breakdown");
+            }
+            for (x, y) in a.cycle_bounds.iter().zip(b.cycle_bounds.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: cycle bounds");
+            }
+        }
+        (Err(a), Err(b)) => assert_eq!(a, b, "{ctx}: infeasibility verdicts differ"),
+        (a, b) => panic!("{ctx}: verdicts diverge: full={a:?} fast={b:?}"),
+    }
+}
+
+#[test]
+fn sampled_perturbations_are_bit_identical_on_every_paper_layer() {
+    let before = telemetry::snapshot();
+    let mut checked = 0u64;
+    for name in PAPER_LAYERS {
+        let (space, eval) = scenario(name);
+        let mut rng = Rng::seed_from_u64(0xD17A);
+        // several incumbents per layer: the delta terms cache must survive
+        // rebasing anywhere in the feasible region
+        for _ in 0..3 {
+            let (base, _) = space.sample_valid(&mut rng, 10_000_000).expect("eyeriss mappable");
+            let mut de = DeltaEvaluator::new(&eval, &space.layer, &space.hw);
+            de.rebase(&base).expect("sampled incumbent is feasible");
+            for _ in 0..40 {
+                let (cand, delta) = space.perturb_feasible_described(&mut rng, &base);
+                let full = eval.evaluate(&space.layer, &space.hw, &cand);
+                let fast = de.evaluate_delta(&cand, delta);
+                assert_bit_identical(&format!("{name} {delta:?}"), &full, &fast);
+                // the auto-diffing entry point must agree with the trusted one
+                let auto = de.evaluate(&cand);
+                assert_bit_identical(&format!("{name} auto"), &full, &auto);
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 8 * 3 * 40);
+    let d = telemetry::snapshot().since(&before);
+    assert!(d.delta_evals >= checked, "each perturbation must count as a delta eval");
+}
+
+#[test]
+fn every_order_swap_matches_including_infeasible_verdicts() {
+    for name in PAPER_LAYERS {
+        let (space, eval) = scenario(name);
+        let mut rng = Rng::seed_from_u64(0x0D0E);
+        let (base, _) = space.sample_valid(&mut rng, 10_000_000).expect("eyeriss mappable");
+        let mut de = DeltaEvaluator::new(&eval, &space.layer, &space.hw);
+        de.rebase(&base).expect("feasible incumbent");
+        // exhaustive single swaps at each level, feasible or not: dataflow
+        // constraints reject some orders, and the delta path must reproduce
+        // the exact rejection, not just the successes
+        for level in [Level::Local, Level::Glb, Level::Dram] {
+            for i in 0..6 {
+                for j in (i + 1)..6 {
+                    let mut cand = base.clone();
+                    let order = match level {
+                        Level::Local => &mut cand.order_local,
+                        Level::Glb => &mut cand.order_glb,
+                        Level::Dram => &mut cand.order_dram,
+                    };
+                    order.swap(i, j);
+                    let full = eval.evaluate(&space.layer, &space.hw, &cand);
+                    let fast = de.evaluate_delta(&cand, MappingDelta::OrderSwap(level));
+                    assert_bit_identical(&format!("{name} swap {level:?} {i}<->{j}"), &full, &fast);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn single_dim_resplits_match_including_infeasible_verdicts() {
+    for name in PAPER_LAYERS {
+        let (space, eval) = scenario(name);
+        let mut rng = Rng::seed_from_u64(0x5911);
+        let (base, _) = space.sample_valid(&mut rng, 10_000_000).expect("eyeriss mappable");
+        let mut de = DeltaEvaluator::new(&eval, &space.layer, &space.hw);
+        de.rebase(&base).expect("feasible incumbent");
+        // hand-built resplits, deliberately including invalid ones: halve or
+        // double one level's factor of one dim. Wrong products must surface
+        // the same FactorProduct/capacity verdict through both paths.
+        for d in codesign::model::DIMS {
+            for (scale_up, field) in
+                [(false, 0usize), (true, 0), (false, 3), (true, 3), (false, 4), (true, 4)]
+            {
+                let mut cand = base.clone();
+                let s = cand.split_mut(d);
+                let f = match field {
+                    0 => &mut s.local,
+                    3 => &mut s.glb,
+                    _ => &mut s.dram,
+                };
+                if scale_up {
+                    *f *= 2;
+                } else if *f % 2 == 0 {
+                    *f /= 2;
+                } else {
+                    continue;
+                }
+                let full = eval.evaluate(&space.layer, &space.hw, &cand);
+                let fast = de.evaluate_delta(&cand, MappingDelta::Resplit(d));
+                assert_bit_identical(&format!("{name} resplit {d:?} field {field}"), &full, &fast);
+            }
+        }
+    }
+}
+
+#[test]
+fn accepted_walks_stay_bit_identical_and_identity_is_free() {
+    // a hill-climb-shaped walk: rebase once, evaluate, accept winners; the
+    // promoted cache must keep producing bit-identical results many moves in
+    let (space, eval) = scenario("ResNet-K4");
+    let mut rng = Rng::seed_from_u64(0xACC3);
+    let (mut cur, _) = space.sample_valid(&mut rng, 10_000_000).expect("eyeriss mappable");
+    let mut de = DeltaEvaluator::new(&eval, &space.layer, &space.hw);
+    let mut cur_edp = de.rebase(&cur).expect("feasible incumbent").edp;
+    for step in 0..60 {
+        let (cand, delta) = space.perturb_feasible_described(&mut rng, &cur);
+        let full = eval.evaluate(&space.layer, &space.hw, &cand);
+        let fast = de.evaluate_delta(&cand, delta);
+        assert_bit_identical(&format!("walk step {step}"), &full, &fast);
+        if let Ok(m) = fast {
+            if m.edp < cur_edp {
+                de.accept(&cand).expect("accepting the just-evaluated candidate");
+                cur = cand;
+                cur_edp = m.edp;
+            }
+        }
+    }
+    // the identity delta (perturbation that lands back on the base) must
+    // reproduce the incumbent's own metrics exactly
+    let same = de.evaluate_delta(&cur, MappingDelta::Identity).expect("incumbent");
+    assert_eq!(same.edp.to_bits(), cur_edp.to_bits());
+}
+
+#[test]
+fn multi_delta_candidates_fall_back_to_the_full_path_bit_identically() {
+    let (space, eval) = scenario("DQN-K2");
+    let mut rng = Rng::seed_from_u64(0xFA11);
+    let (base, _) = space.sample_valid(&mut rng, 10_000_000).expect("eyeriss mappable");
+    let mut de = DeltaEvaluator::new(&eval, &space.layer, &space.hw);
+    de.rebase(&base).expect("feasible incumbent");
+
+    let before = telemetry::snapshot();
+    let mut fallbacks_expected = 0u64;
+    for _ in 0..20 {
+        // two stacked perturbations usually differ from the base in more
+        // than one delta; the auto-diffing evaluate must detect that and
+        // fall back to a full evaluation with identical results
+        let (mid, _) = space.perturb_feasible_described(&mut rng, &base);
+        let (cand, _) = space.perturb_feasible_described(&mut rng, &mid);
+        if MappingDelta::diff(&base, &cand).is_none() {
+            fallbacks_expected += 1;
+        }
+        let full = eval.evaluate(&space.layer, &space.hw, &cand);
+        let fast = de.evaluate(&cand);
+        assert_bit_identical("stacked perturbation", &full, &fast);
+    }
+    assert!(fallbacks_expected > 0, "seed must produce at least one true multi-delta");
+    let d = telemetry::snapshot().since(&before);
+    assert!(
+        d.delta_fallbacks >= fallbacks_expected,
+        "multi-delta candidates must be counted as fallbacks \
+         ({} expected, {} recorded)",
+        fallbacks_expected,
+        d.delta_fallbacks
+    );
+}
+
+#[test]
+fn rebase_on_an_infeasible_incumbent_reports_the_full_verdict() {
+    let (space, eval) = scenario("ResNet-K2");
+    let mut rng = Rng::seed_from_u64(0xBAD);
+    let (base, _) = space.sample_valid(&mut rng, 10_000_000).expect("eyeriss mappable");
+    // corrupt one product: the rebase must fail with exactly the verdict the
+    // full checker gives, and later evaluations must still work (fallback)
+    let mut broken = base.clone();
+    broken.split_mut(codesign::model::Dim::K).dram *= 7;
+    let mut de = DeltaEvaluator::new(&eval, &space.layer, &space.hw);
+    let verdict = de.rebase(&broken).expect_err("corrupted product cannot be feasible");
+    let full = eval.evaluate(&space.layer, &space.hw, &broken).expect_err("same mapping");
+    assert_eq!(verdict, full);
+    // with no (feasible) base, evaluation still answers, bit-identically
+    let full = eval.evaluate(&space.layer, &space.hw, &base);
+    let fast = de.evaluate(&base);
+    assert_bit_identical("post-failed-rebase", &full, &fast);
+}
+
+#[test]
+fn perturbation_walks_record_partial_level_recomputation() {
+    let (space, eval) = scenario("ResNet-K3");
+    let mut rng = Rng::seed_from_u64(0x1EA7);
+    let (base, _) = space.sample_valid(&mut rng, 10_000_000).expect("eyeriss mappable");
+    let mut de = DeltaEvaluator::new(&eval, &space.layer, &space.hw);
+    de.rebase(&base).expect("feasible incumbent");
+    let before = telemetry::snapshot();
+    let n = 50u64;
+    for _ in 0..n {
+        let (cand, delta) = space.perturb_feasible_described(&mut rng, &base);
+        let _ = de.evaluate_delta(&cand, delta);
+    }
+    let d = telemetry::snapshot().since(&before);
+    // Lower bounds only: the counters are process-global and sibling tests
+    // in this binary run concurrently, so an upper bound ("fewer levels than
+    // a fresh analyze") would flake — benches/delta_eval.rs enforces the
+    // actual savings as wall-clock instead.
+    assert!(d.delta_evals >= n);
+    assert!(
+        d.levels_recomputed >= 1,
+        "a 50-move walk must touch at least one partially-recomputed level"
+    );
+}

@@ -6,28 +6,36 @@
 //! shared across the entire run — every software search of every layer on
 //! every hardware trial memoizes into it, so recurring design points
 //! (warmup resamples, acquisition re-picks, per-layer overlap) are computed
-//! once. This is the leader process of the system — the CLI's `codesign`
-//! subcommand is a thin wrapper over `Driver::run`.
+//! once.
+//!
+//! As of the job-scheduling refactor the driver is a thin convenience
+//! facade: [`Driver::run`] builds a [`JobSpec`] from its fields, schedules
+//! it as one job on an ephemeral `runtime::jobs::JobScheduler` sharing the
+//! driver's cache, and waits. All run state — pruned space, trial
+//! accounting, incumbent/checkpoint logic, snapshot I/O, run-scoped
+//! telemetry — lives in [`crate::coordinator::run::SearchRun`]; concurrent
+//! multi-job use goes through the scheduler directly (the CLI's `schedule`
+//! subcommand). Fixed-seed traces are bit-identical to the pre-refactor
+//! driver: scheduling one job executes exactly the former `Driver::run`
+//! body.
+#![deny(clippy::style)]
 
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::parallel::{default_threads, parallel_map};
+use crate::coordinator::parallel::default_threads;
+use crate::coordinator::run::{self, JobSpec};
 use crate::model::arch::HwConfig;
-use crate::model::batch::{AdaptiveChunker, BatchEvaluator};
 use crate::model::cache::EvalCache;
-use crate::model::eval::Evaluator;
 use crate::model::mapping::Mapping;
 use crate::opt::config::NestedConfig;
-use crate::opt::hw_search::{self, Chunking, HwMethod, HwTrace};
-use crate::opt::sw_search::{self, SearchTrace, SwMethod, SwProblem};
-use crate::space::prune::PrunedHwSpace;
-use crate::space::sw_space::SwSpace;
+use crate::opt::hw_search::{HwMethod, HwTrace};
+use crate::opt::sw_search::{self, SwMethod};
+use crate::runtime::jobs::JobScheduler;
+use crate::space::prune::CertificateStore;
 use crate::surrogate::gp::GpBackend;
-use crate::util::rng::Rng;
-use crate::workloads::eyeriss::eyeriss_resources;
 use crate::workloads::specs::ModelSpec;
 
 /// Per-layer outcome of one hardware evaluation: (layer name, mapping, EDP).
@@ -40,6 +48,9 @@ pub struct CodesignOutcome {
     /// feasible.
     pub best: Option<Checkpoint>,
     pub metrics: Arc<Metrics>,
+    /// The run was cancelled before completing its configured trials; the
+    /// trace, incumbent and metrics cover the work done up to that point.
+    pub cancelled: bool,
 }
 
 /// Driver configuration.
@@ -91,54 +102,16 @@ impl Driver {
         metrics: &Metrics,
         seed_base: u64,
     ) -> Vec<Option<(f64, LayerOutcome)>> {
-        let resources = eyeriss_resources(model.num_pes);
-        let eval = Evaluator::new(resources.clone());
-        let num_layers = model.layers.len();
-        let jobs: Vec<(usize, usize)> = (0..hws.len())
-            .flat_map(|hi| (0..num_layers).map(move |li| (hi, li)))
-            .collect();
-        let backends: Vec<GpBackend> = jobs.iter().map(|_| backend.clone()).collect();
-        // Split the thread budget between this fan-out and the nested batch
-        // evaluators, so a wide (config x layer) batch doesn't oversubscribe
-        // the machine while a narrow one still uses the spare cores inside
-        // each software search's candidate batches.
-        let inner_threads = (self.threads / jobs.len().max(1)).max(1);
-
-        let traces: Vec<SearchTrace> = parallel_map(&jobs, self.threads, |j, &(hi, li)| {
-            let layer = &model.layers[li];
-            let problem = SwProblem::with_cache(
-                SwSpace::new(layer.clone(), hws[hi].clone(), resources.clone()),
-                eval.clone(),
-                Arc::clone(&self.cache),
-            )
-            .with_batch_threads(inner_threads);
-            let mut rng =
-                Rng::seed_from_u64((seed_base + hi as u64) ^ (0x9E37 * (li as u64 + 1)));
-            let trace = sw_search::search(
-                self.sw_method,
-                &problem,
-                self.ncfg.sw_trials,
-                &self.ncfg.sw_bo,
-                &backends[j],
-                &mut rng,
-            );
-            metrics.add_trace(&trace.evals, trace.raw_draws);
-            trace
-        });
-
-        (0..hws.len())
-            .map(|hi| {
-                let mut total = 0.0;
-                let mut layers = Vec::with_capacity(num_layers);
-                for li in 0..num_layers {
-                    let trace = &traces[hi * num_layers + li];
-                    let m = trace.best_mapping.clone()?; // None => unknown constraint
-                    total += trace.best_edp;
-                    layers.push((model.layers[li].name.clone(), m, trace.best_edp));
-                }
-                Some((total, layers))
-            })
-            .collect()
+        let ctx = run::HwBatchCtx {
+            model,
+            sw_method: self.sw_method,
+            sw_trials: self.ncfg.sw_trials,
+            sw_bo: &self.ncfg.sw_bo,
+            threads: self.threads,
+            cache: &self.cache,
+            scope: None,
+        };
+        run::evaluate_hardware_batch(&ctx, hws, backend, metrics, seed_base)
     }
 
     /// Evaluate one hardware configuration (single-element batch).
@@ -155,138 +128,27 @@ impl Driver {
             .flatten()
     }
 
-    /// Full nested co-design on a model.
+    /// Full nested co-design on a model: schedule one job on an ephemeral
+    /// scheduler sharing this driver's evaluation cache, and wait for it.
     pub fn run(&self, model: &ModelSpec, backend: &GpBackend, seed: u64) -> CodesignOutcome {
-        let metrics = Metrics::new();
-        // Surrogate and feasibility counters are process-global and
-        // monotone; diff against a baseline so the report reflects this
-        // run's fits/extends/constructions. (Concurrent runs in one process
-        // would blend into each other's deltas — the driver assumes one run
-        // at a time.)
-        let gp_baseline = crate::surrogate::telemetry::snapshot();
-        let feas_baseline = crate::space::feasible::telemetry::snapshot();
-        let delta_baseline = crate::model::delta::telemetry::snapshot();
-        // One pruned space per run, shared by the whole hardware search:
-        // candidate configs are certified against every layer of the target
-        // model and provably-empty ones never reach the simulator.
-        let space = PrunedHwSpace::new(eyeriss_resources(model.num_pes), model.layers.clone());
-        let best: Mutex<Option<Checkpoint>> = Mutex::new(None);
-        let mut trial = 0usize;
-
-        // Snapshot endpoint: same resources => same fingerprint as every
-        // software search of this run keys its entries under.
-        let snapshot_io = BatchEvaluator::with_cache(
-            Evaluator::new(eyeriss_resources(model.num_pes)),
-            Arc::clone(&self.cache),
-        );
-        if let Some(path) = &self.cache_snapshot_path {
-            if path.exists() {
-                match snapshot_io.load_snapshot(path) {
-                    Ok(n) => eprintln!(
-                        "[{}] loaded cache snapshot: {n} entries from {}",
-                        model.name,
-                        path.display()
-                    ),
-                    // a stale or foreign snapshot degrades to a cold start,
-                    // never to wrong results
-                    Err(e) => eprintln!("[{}] cache snapshot ignored: {e:#}", model.name),
-                }
-            }
-        }
-        // Size warmup batches from observed latency: one hardware config
-        // costs about (sw trials x layers) simulator evaluations.
-        let evals_per_config = (self.ncfg.sw_trials * model.layers.len().max(1)) as f64;
-        let chunker = AdaptiveChunker::new(Arc::clone(&self.cache), evals_per_config);
-
-        let hw_trace = {
-            let metrics_ref = Arc::clone(&metrics);
-            let inner = |hws: &[HwConfig]| -> Vec<Option<f64>> {
-                let base = trial;
-                trial += hws.len();
-                let outs = self.evaluate_hardware_batch(
-                    model,
-                    hws,
-                    backend,
-                    &metrics_ref,
-                    seed + base as u64,
-                );
-                outs.into_iter()
-                    .enumerate()
-                    .map(|(k, out)| {
-                        let t = base + k;
-                        if let Some((edp, layers)) = &out {
-                            let mut guard = best.lock().unwrap();
-                            let improved = guard.as_ref().map_or(true, |b| *edp < b.best_edp);
-                            if improved {
-                                let ck = Checkpoint {
-                                    model: model.name.to_string(),
-                                    trial: t,
-                                    best_edp: *edp,
-                                    cache_snapshot: self
-                                        .cache_snapshot_path
-                                        .as_ref()
-                                        .map(|p| p.display().to_string()),
-                                    hw: hws[k].clone(),
-                                    layers: layers.clone(),
-                                };
-                                if let Some(path) = &self.checkpoint_path {
-                                    if let Err(e) = ck.save(path) {
-                                        eprintln!("checkpoint save failed: {e:#}");
-                                    }
-                                }
-                                *guard = Some(ck);
-                            }
-                            if self.verbose {
-                                let best_edp =
-                                    guard.as_ref().map(|b| b.best_edp).unwrap_or(*edp);
-                                eprintln!(
-                                    "[{}] hw trial {t}: edp {:.3e} (best {:.3e})",
-                                    model.name, edp, best_edp
-                                );
-                            }
-                        } else if self.verbose {
-                            eprintln!(
-                                "[{}] hw trial {t}: infeasible (no mapping found)",
-                                model.name
-                            );
-                        }
-                        out.map(|(edp, _)| edp)
-                    })
-                    .collect()
-            };
-
-            let mut rng = Rng::seed_from_u64(seed);
-            hw_search::search(
-                self.hw_method,
-                &space,
-                inner,
-                self.ncfg.hw_trials,
-                &self.ncfg.hw_bo,
-                &Chunking::Adaptive(&chunker),
-                backend,
-                &mut rng,
-            )
+        let spec = JobSpec {
+            model: model.clone(),
+            ncfg: self.ncfg,
+            hw_method: self.hw_method,
+            sw_method: self.sw_method,
+            threads: self.threads,
+            seed,
+            checkpoint_path: self.checkpoint_path.clone(),
+            cache_snapshot_path: self.cache_snapshot_path.clone(),
+            verbose: self.verbose,
         };
-
-        if let Some(path) = &self.cache_snapshot_path {
-            match snapshot_io.save_snapshot(path) {
-                Ok(n) => eprintln!(
-                    "[{}] saved cache snapshot: {n} entries to {}",
-                    model.name,
-                    path.display()
-                ),
-                Err(e) => eprintln!("[{}] cache snapshot save failed: {e:#}", model.name),
-            }
-        }
-        metrics.record_cache(self.cache.stats());
-        metrics.record_surrogate(crate::surrogate::telemetry::snapshot().since(&gp_baseline));
-        metrics.record_feasibility(
-            crate::space::feasible::telemetry::snapshot().since(&feas_baseline),
+        let scheduler = JobScheduler::with_shared(
+            backend.clone(),
+            Arc::clone(&self.cache),
+            Arc::new(CertificateStore::default()),
+            1,
         );
-        metrics.record_delta(
-            crate::model::delta::telemetry::snapshot().since(&delta_baseline),
-        );
-        CodesignOutcome { hw_trace, best: best.into_inner().unwrap(), metrics }
+        scheduler.submit(spec).wait()
     }
 }
 
@@ -340,6 +202,7 @@ mod tests {
         driver.threads = 2;
         let out = driver.run(&dqn(), &GpBackend::Native, 1);
         assert_eq!(out.hw_trace.evals.len(), 4);
+        assert!(!out.cancelled);
         let best = out.best.expect("at least one feasible hardware trial");
         assert_eq!(best.layers.len(), 2);
         assert!(best.best_edp.is_finite());
@@ -469,7 +332,8 @@ mod tests {
         let report = out.metrics.report();
         assert!(report.contains("feas_constructed="), "{report}");
         // every hardware config and software candidate of this run was
-        // generated by the feasibility engine: the per-run delta is visible
+        // generated by the feasibility engine: the per-run scoped sinks
+        // surface it without global baselines
         use std::sync::atomic::Ordering;
         let constructed = out.metrics.feas_constructed.load(Ordering::Relaxed);
         assert!(constructed > 0, "run must record constructed candidates: {report}");
@@ -478,6 +342,11 @@ mod tests {
         assert!(report.contains("prune_certificates="), "{report}");
         let certs = out.metrics.prune_certificates.load(Ordering::Relaxed);
         assert!(certs > 0, "run must certify hardware candidates: {report}");
+        // the certificate memo saw every consultation as a hit or a miss
+        let hits = out.metrics.prune_cert_hits.load(Ordering::Relaxed);
+        let misses = out.metrics.prune_cert_misses.load(Ordering::Relaxed);
+        assert!(hits + misses > 0, "certificate store must be consulted: {report}");
+        assert!(report.contains("prune_cert_hits="), "{report}");
         // and the raw-draw telemetry reflects construction, not rejection:
         // with one draw per candidate the feasibility rate sits near 1
         let rate = out.metrics.feasibility_rate();

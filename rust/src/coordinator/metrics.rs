@@ -2,6 +2,7 @@
 //! evaluations, rejection-sampling draws, feasibility rates, wall time,
 //! evaluation-cache hit/miss/eviction counts from `model::cache`).
 //! Reported at the end of every CLI run and recorded in EXPERIMENTS.md.
+#![deny(clippy::style)]
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -59,6 +60,10 @@ pub struct Metrics {
     /// thousandths (divide by `1000 * prune_lattice_boxes` for the mean).
     pub prune_certificates: AtomicU64,
     pub prune_rejections: AtomicU64,
+    /// Certificate-store traffic: consultations served from the shared
+    /// memo vs computed fresh (and then shared).
+    pub prune_cert_hits: AtomicU64,
+    pub prune_cert_misses: AtomicU64,
     pub prune_lattice_boxes: AtomicU64,
     pub prune_box_shrink_milli: AtomicU64,
     /// Delta-evaluation snapshot (stored per run via `record_delta`):
@@ -83,6 +88,13 @@ pub struct Metrics {
     /// those entries served.
     pub cache_snapshot_loaded: AtomicU64,
     pub cache_snapshot_hits: AtomicU64,
+    /// Persistence failures in the search hot path (accumulated, not
+    /// stored): incumbent checkpoints whose save failed, and cache-snapshot
+    /// load/save operations that failed. The run degrades (incumbent stays
+    /// in memory; cache stays cold/unsaved) but the failures no longer
+    /// vanish into stderr.
+    pub checkpoint_save_failures: AtomicU64,
+    pub snapshot_io_failures: AtomicU64,
     start: Instant,
 }
 
@@ -111,6 +123,8 @@ impl Metrics {
             feas_degraded_skips: AtomicU64::new(0),
             prune_certificates: AtomicU64::new(0),
             prune_rejections: AtomicU64::new(0),
+            prune_cert_hits: AtomicU64::new(0),
+            prune_cert_misses: AtomicU64::new(0),
             prune_lattice_boxes: AtomicU64::new(0),
             prune_box_shrink_milli: AtomicU64::new(0),
             delta_evals: AtomicU64::new(0),
@@ -126,6 +140,8 @@ impl Metrics {
             cache_demotions: AtomicU64::new(0),
             cache_snapshot_loaded: AtomicU64::new(0),
             cache_snapshot_hits: AtomicU64::new(0),
+            checkpoint_save_failures: AtomicU64::new(0),
+            snapshot_io_failures: AtomicU64::new(0),
             start: Instant::now(),
         })
     }
@@ -171,8 +187,21 @@ impl Metrics {
         self.feas_degraded_skips.store(stats.degraded_skips, Ordering::Relaxed);
         self.prune_certificates.store(stats.prune_certificates, Ordering::Relaxed);
         self.prune_rejections.store(stats.prune_rejections, Ordering::Relaxed);
+        self.prune_cert_hits.store(stats.cert_hits, Ordering::Relaxed);
+        self.prune_cert_misses.store(stats.cert_misses, Ordering::Relaxed);
         self.prune_lattice_boxes.store(stats.lattice_boxes, Ordering::Relaxed);
         self.prune_box_shrink_milli.store(stats.lattice_box_shrink_milli, Ordering::Relaxed);
+    }
+
+    /// An incumbent-checkpoint save failed in the search hot path.
+    pub fn record_checkpoint_save_failure(&self) {
+        self.checkpoint_save_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A cache-snapshot load or save failed; the run degrades to a cold
+    /// start / unsaved cache.
+    pub fn record_snapshot_io_failure(&self) {
+        self.snapshot_io_failures.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Surface a delta-evaluation snapshot (typically the per-run delta of
@@ -223,7 +252,8 @@ impl Metrics {
              feas_constructed={} feas_perturbations={} feas_perturbation_fallbacks={} \
              feas_projections={} feas_projection_failures={} feas_fallback_samples={} \
              feas_fallback_draws={} feas_infeasible_spaces={} feas_degraded_skips={} \
-             prune_certificates={} prune_rejections={} prune_lattice_boxes={} \
+             prune_certificates={} prune_rejections={} prune_cert_hits={} \
+             prune_cert_misses={} prune_lattice_boxes={} \
              prune_box_shrink_milli={} \
              gp_fits={} gp_data_refits={} gp_extends={} gp_extend_fallbacks={} \
              gp_fit_failures={} gp_jitter_escalations={} gp_warm_refits={} \
@@ -232,7 +262,8 @@ impl Metrics {
              cache_hits={} cache_misses={} cache_hit_rate={:.3} cache_evictions={} \
              cache_entries={} cache_probationary={} cache_protected={} \
              cache_promotions={} cache_demotions={} cache_snapshot_loaded={} \
-             cache_snapshot_hits={} elapsed={:.1}s",
+             cache_snapshot_hits={} checkpoint_save_failures={} \
+             snapshot_io_failures={} elapsed={:.1}s",
             self.sim_evals.load(Ordering::Relaxed),
             self.feasible_evals.load(Ordering::Relaxed),
             self.raw_draws.load(Ordering::Relaxed),
@@ -248,6 +279,8 @@ impl Metrics {
             self.feas_degraded_skips.load(Ordering::Relaxed),
             self.prune_certificates.load(Ordering::Relaxed),
             self.prune_rejections.load(Ordering::Relaxed),
+            self.prune_cert_hits.load(Ordering::Relaxed),
+            self.prune_cert_misses.load(Ordering::Relaxed),
             self.prune_lattice_boxes.load(Ordering::Relaxed),
             self.prune_box_shrink_milli.load(Ordering::Relaxed),
             self.gp_fits.load(Ordering::Relaxed),
@@ -272,6 +305,8 @@ impl Metrics {
             self.cache_demotions.load(Ordering::Relaxed),
             self.cache_snapshot_loaded.load(Ordering::Relaxed),
             self.cache_snapshot_hits.load(Ordering::Relaxed),
+            self.checkpoint_save_failures.load(Ordering::Relaxed),
+            self.snapshot_io_failures.load(Ordering::Relaxed),
             self.elapsed_secs()
         )
     }
@@ -371,6 +406,8 @@ mod tests {
             degraded_skips: 5,
             prune_certificates: 640,
             prune_rejections: 17,
+            cert_hits: 410,
+            cert_misses: 230,
             lattice_boxes: 6,
             lattice_box_shrink_milli: 9200,
         });
@@ -386,8 +423,21 @@ mod tests {
         assert!(report.contains("feas_degraded_skips=5"));
         assert!(report.contains("prune_certificates=640"));
         assert!(report.contains("prune_rejections=17"));
+        assert!(report.contains("prune_cert_hits=410"));
+        assert!(report.contains("prune_cert_misses=230"));
         assert!(report.contains("prune_lattice_boxes=6"));
         assert!(report.contains("prune_box_shrink_milli=9200"));
+    }
+
+    #[test]
+    fn persistence_failures_accumulate_and_are_reported() {
+        let m = Metrics::new();
+        m.record_checkpoint_save_failure();
+        m.record_checkpoint_save_failure();
+        m.record_snapshot_io_failure();
+        let report = m.report();
+        assert!(report.contains("checkpoint_save_failures=2"), "{report}");
+        assert!(report.contains("snapshot_io_failures=1"), "{report}");
     }
 
     #[test]
@@ -459,6 +509,8 @@ mod tests {
             degraded_skips: 19,
             prune_certificates: 20,
             prune_rejections: 21,
+            cert_hits: 27,
+            cert_misses: 28,
             lattice_boxes: 22,
             lattice_box_shrink_milli: 23,
         });
@@ -467,6 +519,8 @@ mod tests {
             delta_fallbacks: 25,
             levels_recomputed: 26,
         });
+        m.record_checkpoint_save_failure();
+        m.record_snapshot_io_failure();
         let kv = parse_report(&m.report());
         // every stored numeric field must survive the round trip verbatim
         let expect = [
@@ -484,6 +538,8 @@ mod tests {
             ("feas_degraded_skips", "19"),
             ("prune_certificates", "20"),
             ("prune_rejections", "21"),
+            ("prune_cert_hits", "27"),
+            ("prune_cert_misses", "28"),
             ("prune_lattice_boxes", "22"),
             ("prune_box_shrink_milli", "23"),
             ("gp_fits", "4"),
@@ -507,6 +563,8 @@ mod tests {
             ("cache_demotions", "1"),
             ("cache_snapshot_loaded", "12"),
             ("cache_snapshot_hits", "9"),
+            ("checkpoint_save_failures", "1"),
+            ("snapshot_io_failures", "1"),
         ];
         for (k, v) in expect {
             assert_eq!(kv.get(k).map(String::as_str), Some(v), "field {k}");

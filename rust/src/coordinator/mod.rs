@@ -1,12 +1,16 @@
-//! The Layer-3 coordinator: nested co-design driver (leader), parallel
-//! per-layer workers, run metrics, and checkpointing.
+//! The Layer-3 coordinator: per-run search state machine ([`run`]), the
+//! thin nested co-design driver facade over it, parallel per-layer
+//! workers, run metrics, and checkpointing. Job-level scheduling of many
+//! concurrent runs lives in [`crate::runtime::jobs`].
 
 pub mod checkpoint;
 pub mod driver;
 pub mod metrics;
 pub mod parallel;
+pub mod run;
 
 pub use checkpoint::Checkpoint;
 pub use driver::{eyeriss_baseline, CodesignOutcome, Driver};
 pub use metrics::Metrics;
 pub use parallel::{default_threads, parallel_map};
+pub use run::{JobSpec, RunPhase, RunScope, RunStatus, SearchRun};

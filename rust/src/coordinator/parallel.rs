@@ -1,6 +1,7 @@
 //! Scoped-thread parallel map (the offline crate set has no tokio/rayon).
 //! Used by the co-design driver to run per-layer software searches
 //! concurrently, and by the figure harnesses for repeats.
+#![deny(clippy::style)]
 
 /// Apply `f` to each item on its own thread (bounded by `max_threads`) and
 /// collect results in input order.

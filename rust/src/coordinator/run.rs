@@ -1,0 +1,629 @@
+//! The per-run search state machine: everything one co-design run owns.
+//!
+//! `Driver::run` used to be a 130-line monolith interleaving space
+//! construction, snapshot I/O, trial accounting, checkpointing, and
+//! metrics — and it was documented single-tenant, because surrogate /
+//! feasibility / delta telemetry were process-global counters diffed
+//! against a baseline. This module is the multi-tenant decomposition:
+//!
+//! * [`JobSpec`] — the complete, self-contained description of one run
+//!   (model + nested config + seed + persistence endpoints), the unit
+//!   `runtime::jobs::JobScheduler` accepts;
+//! * [`RunScope`] — one per-run telemetry sink per subsystem, installed on
+//!   every thread that does work for the run, replacing baseline-diffing
+//!   of globals (which blends under concurrency);
+//! * [`RunStatus`] / [`RunPhase`] — the lock-free progress/cancellation
+//!   view a job handle polls;
+//! * [`SearchRun`] — the state machine itself: owns the run's pruned
+//!   space, trial counter, incumbent/checkpoint logic, and snapshot
+//!   endpoints, and consumes itself in [`SearchRun::run`].
+//!
+//! Determinism contract: [`SearchRun::run`] is a *move*, not a rewrite, of
+//! the former `Driver::run` body — same seeding, same evaluation order,
+//! same checkpoint/verbose behavior — so the PR-5 fixed-seed e2e traces
+//! stay bit-identical, and `Driver::run` is now a thin wrapper (schedule
+//! one job, wait). Sharing the evaluation cache and certificate store
+//! across concurrent runs cannot move traces either: both memoize pure
+//! functions, so a hit returns exactly the bits a fresh computation would.
+#![deny(clippy::style)]
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::driver::{CodesignOutcome, LayerOutcome};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::parallel::{default_threads, parallel_map};
+use crate::model::arch::HwConfig;
+use crate::model::batch::{AdaptiveChunker, BatchEvaluator};
+use crate::model::cache::EvalCache;
+use crate::model::delta::telemetry as delta_telemetry;
+use crate::model::eval::Evaluator;
+use crate::opt::config::{BoConfig, NestedConfig};
+use crate::opt::hw_search::{self, Chunking, HwMethod, HwTrace};
+use crate::opt::sw_search::{self, SearchTrace, SwMethod, SwProblem};
+use crate::space::feasible::telemetry as feas_telemetry;
+use crate::space::prune::{CertificateStore, PrunedHwSpace};
+use crate::space::sw_space::SwSpace;
+use crate::surrogate::gp::GpBackend;
+use crate::surrogate::telemetry as gp_telemetry;
+use crate::util::rng::Rng;
+use crate::workloads::eyeriss::eyeriss_resources;
+use crate::workloads::specs::ModelSpec;
+
+/// Complete description of one co-design run: what to search, how hard,
+/// and where to persist. This is the unit the job scheduler accepts; a
+/// `JobSpec` plus a seed fully determines the run's trace.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub model: ModelSpec,
+    pub ncfg: NestedConfig,
+    pub hw_method: HwMethod,
+    pub sw_method: SwMethod,
+    /// Worker threads for this run's (config x layer) fan-out.
+    pub threads: usize,
+    /// Seed of the run's root RNG; per-(config, layer) software searches
+    /// derive their seeds from it exactly as the sequential formulation.
+    pub seed: u64,
+    pub checkpoint_path: Option<PathBuf>,
+    /// Cross-process cache persistence: when set, the run warm-starts by
+    /// loading this snapshot (if present and fingerprint-compatible) and
+    /// saves the cache back to it when the search finishes.
+    pub cache_snapshot_path: Option<PathBuf>,
+    pub verbose: bool,
+}
+
+impl JobSpec {
+    /// A spec with the driver's defaults: BO outer and inner loops, the
+    /// machine's worker-pool width, no persistence, quiet.
+    pub fn new(model: ModelSpec, ncfg: NestedConfig, seed: u64) -> Self {
+        JobSpec {
+            model,
+            ncfg,
+            hw_method: HwMethod::Bo,
+            sw_method: SwMethod::Bo { surrogate: sw_search::SurrogateKind::Gp },
+            threads: default_threads(),
+            seed,
+            checkpoint_path: None,
+            cache_snapshot_path: None,
+            verbose: false,
+        }
+    }
+}
+
+/// One per-run telemetry sink per scoped subsystem. [`RunScope::enter`]
+/// installs all three on the calling thread for the duration of a closure;
+/// the run state machine enters the scope on the search thread *and*
+/// inside every worker-pool job, so a run's surrogate / feasibility /
+/// delta events accumulate into its own sinks no matter which thread
+/// produced them — exact per-run deltas with no global baselines.
+#[derive(Debug, Default)]
+pub struct RunScope {
+    surrogate: Arc<gp_telemetry::Sink>,
+    feasibility: Arc<feas_telemetry::Sink>,
+    delta: Arc<delta_telemetry::Sink>,
+}
+
+impl RunScope {
+    pub fn new() -> Self {
+        RunScope::default()
+    }
+
+    /// Run `f` with all three sinks installed as the calling thread's
+    /// active telemetry scope (restored on exit, also on unwind).
+    pub fn enter<R>(&self, f: impl FnOnce() -> R) -> R {
+        gp_telemetry::with_scope(&self.surrogate, || {
+            feas_telemetry::with_scope(&self.feasibility, || {
+                delta_telemetry::with_scope(&self.delta, f)
+            })
+        })
+    }
+
+    /// This run's surrogate events so far.
+    pub fn surrogate_stats(&self) -> gp_telemetry::SurrogateStats {
+        self.surrogate.snapshot()
+    }
+
+    /// This run's feasibility-engine events so far.
+    pub fn feasibility_stats(&self) -> feas_telemetry::FeasibilityStats {
+        self.feasibility.snapshot()
+    }
+
+    /// This run's delta-evaluation events so far.
+    pub fn delta_stats(&self) -> delta_telemetry::DeltaStats {
+        self.delta.snapshot()
+    }
+
+    /// Publish the per-run sink contents into a run's [`Metrics`].
+    pub fn record_into(&self, metrics: &Metrics) {
+        metrics.record_surrogate(self.surrogate_stats());
+        metrics.record_feasibility(self.feasibility_stats());
+        metrics.record_delta(self.delta_stats());
+    }
+}
+
+/// Lifecycle phase of one run, advanced monotonically by [`SearchRun::run`]
+/// (except the jump to `Cancelled`, which can happen from any live phase).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum RunPhase {
+    /// Accepted, not yet started (queued behind the scheduler's capacity).
+    Pending = 0,
+    /// Building the pruned space and warm-starting the cache.
+    WarmStart = 1,
+    /// The nested hardware/software search is executing.
+    Searching = 2,
+    /// Search done; persisting the cache snapshot and final metrics.
+    Persisting = 3,
+    Finished = 4,
+    Cancelled = 5,
+}
+
+impl RunPhase {
+    fn from_u8(v: u8) -> RunPhase {
+        match v {
+            0 => RunPhase::Pending,
+            1 => RunPhase::WarmStart,
+            2 => RunPhase::Searching,
+            3 => RunPhase::Persisting,
+            4 => RunPhase::Finished,
+            _ => RunPhase::Cancelled,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RunPhase::Pending => "pending",
+            RunPhase::WarmStart => "warm-start",
+            RunPhase::Searching => "searching",
+            RunPhase::Persisting => "persisting",
+            RunPhase::Finished => "finished",
+            RunPhase::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, RunPhase::Finished | RunPhase::Cancelled)
+    }
+}
+
+/// Live, lock-free progress/cancellation view of one run, shared between
+/// the run state machine and its job handle.
+#[derive(Debug)]
+pub struct RunStatus {
+    phase: AtomicU8,
+    trials_done: AtomicU64,
+    trials_total: AtomicU64,
+    cancel: AtomicBool,
+}
+
+impl RunStatus {
+    fn new(trials_total: u64) -> Self {
+        RunStatus {
+            phase: AtomicU8::new(RunPhase::Pending as u8),
+            trials_done: AtomicU64::new(0),
+            trials_total: AtomicU64::new(trials_total),
+            cancel: AtomicBool::new(false),
+        }
+    }
+
+    pub fn phase(&self) -> RunPhase {
+        RunPhase::from_u8(self.phase.load(Ordering::Relaxed))
+    }
+
+    /// Hardware trials whose evaluation has completed (or been skipped
+    /// after cancellation).
+    pub fn trials_done(&self) -> u64 {
+        self.trials_done.load(Ordering::Relaxed)
+    }
+
+    /// Hardware trials the run was configured for.
+    pub fn trials_total(&self) -> u64 {
+        self.trials_total.load(Ordering::Relaxed)
+    }
+
+    /// Request cancellation: the run stops evaluating at the next batch
+    /// boundary (in-flight simulator work is not interrupted) and reports
+    /// `cancelled` in its outcome. Idempotent.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    fn set_phase(&self, phase: RunPhase) {
+        self.phase.store(phase as u8, Ordering::Relaxed);
+    }
+
+    fn add_trials(&self, n: u64) {
+        self.trials_done.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// The (config x layer) fan-out context one hardware batch expands into:
+/// everything `evaluate_hardware_batch` needs besides the batch itself.
+pub(crate) struct HwBatchCtx<'a> {
+    pub model: &'a ModelSpec,
+    pub sw_method: SwMethod,
+    pub sw_trials: usize,
+    pub sw_bo: &'a BoConfig,
+    pub threads: usize,
+    pub cache: &'a Arc<EvalCache>,
+    /// Run scope to install on every worker thread; `None` records into
+    /// the process-global default scope only (the baseline/figure paths).
+    pub scope: Option<&'a RunScope>,
+}
+
+/// Evaluate a batch of hardware configurations: the (config x layer) cross
+/// product of software searches runs across the worker pool in one
+/// `parallel_map`, so a warmup batch of W configs on an L-layer model
+/// exposes W*L-way parallelism instead of L-way. Returns, per config in
+/// order, the summed EDP and per-layer best mappings, or None if any layer
+/// has no findable mapping (the unknown constraint).
+///
+/// Seeding matches the sequential formulation: config `i` of the batch
+/// behaves as trial `seed_base + i`.
+pub(crate) fn evaluate_hardware_batch(
+    ctx: &HwBatchCtx<'_>,
+    hws: &[HwConfig],
+    backend: &GpBackend,
+    metrics: &Metrics,
+    seed_base: u64,
+) -> Vec<Option<(f64, LayerOutcome)>> {
+    let resources = eyeriss_resources(ctx.model.num_pes);
+    let eval = Evaluator::new(resources.clone());
+    let num_layers = ctx.model.layers.len();
+    let jobs: Vec<(usize, usize)> = (0..hws.len())
+        .flat_map(|hi| (0..num_layers).map(move |li| (hi, li)))
+        .collect();
+    let backends: Vec<GpBackend> = jobs.iter().map(|_| backend.clone()).collect();
+    // Split the thread budget between this fan-out and the nested batch
+    // evaluators, so a wide (config x layer) batch doesn't oversubscribe
+    // the machine while a narrow one still uses the spare cores inside
+    // each software search's candidate batches.
+    let inner_threads = (ctx.threads / jobs.len().max(1)).max(1);
+
+    let run_job = |j: usize, hi: usize, li: usize| -> SearchTrace {
+        let layer = &ctx.model.layers[li];
+        let problem = SwProblem::with_cache(
+            SwSpace::new(layer.clone(), hws[hi].clone(), resources.clone()),
+            eval.clone(),
+            Arc::clone(ctx.cache),
+        )
+        .with_batch_threads(inner_threads);
+        let mut rng = Rng::seed_from_u64((seed_base + hi as u64) ^ (0x9E37 * (li as u64 + 1)));
+        let trace = sw_search::search(
+            ctx.sw_method,
+            &problem,
+            ctx.sw_trials,
+            ctx.sw_bo,
+            &backends[j],
+            &mut rng,
+        );
+        metrics.add_trace(&trace.evals, trace.raw_draws);
+        trace
+    };
+    let traces: Vec<SearchTrace> =
+        parallel_map(&jobs, ctx.threads, |j, &(hi, li)| match ctx.scope {
+            // worker threads are fresh per batch: install the run's scope
+            // on each so its telemetry lands in the per-run sinks
+            Some(scope) => scope.enter(|| run_job(j, hi, li)),
+            None => run_job(j, hi, li),
+        });
+
+    (0..hws.len())
+        .map(|hi| {
+            let mut total = 0.0;
+            let mut layers = Vec::with_capacity(num_layers);
+            for li in 0..num_layers {
+                let trace = &traces[hi * num_layers + li];
+                let m = trace.best_mapping.clone()?; // None => unknown constraint
+                total += trace.best_edp;
+                layers.push((ctx.model.layers[li].name.clone(), m, trace.best_edp));
+            }
+            Some((total, layers))
+        })
+        .collect()
+}
+
+/// The state machine for one co-design run. Owns the run's pruned space,
+/// trial counter, incumbent/checkpoint logic, snapshot endpoints, scoped
+/// telemetry and metrics; consumed by [`SearchRun::run`]. The evaluation
+/// cache and certificate store may be shared with other concurrent runs —
+/// both memoize pure functions, so sharing never changes results.
+pub struct SearchRun {
+    spec: JobSpec,
+    cache: Arc<EvalCache>,
+    certs: Arc<CertificateStore>,
+    scope: RunScope,
+    metrics: Arc<Metrics>,
+    status: Arc<RunStatus>,
+}
+
+impl SearchRun {
+    /// A run with a private certificate store (the single-job shape).
+    pub fn new(spec: JobSpec, cache: Arc<EvalCache>) -> Self {
+        SearchRun::with_shared(spec, cache, Arc::new(CertificateStore::default()))
+    }
+
+    /// A run whose certificate store is shared with other runs (the
+    /// scheduler's shape).
+    pub fn with_shared(
+        spec: JobSpec,
+        cache: Arc<EvalCache>,
+        certs: Arc<CertificateStore>,
+    ) -> Self {
+        let status = Arc::new(RunStatus::new(spec.ncfg.hw_trials as u64));
+        SearchRun {
+            spec,
+            cache,
+            certs,
+            scope: RunScope::new(),
+            metrics: Metrics::new(),
+            status,
+        }
+    }
+
+    /// The live progress/cancellation view (shareable before `run`).
+    pub fn status(&self) -> Arc<RunStatus> {
+        Arc::clone(&self.status)
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    pub fn scope(&self) -> &RunScope {
+        &self.scope
+    }
+
+    /// Execute the run to completion (or cancellation). This body is the
+    /// former `Driver::run` — same seeding, same evaluation order, same
+    /// checkpoint and logging behavior — with the global telemetry
+    /// baselines replaced by the run scope, cancellation checks at batch
+    /// boundaries, and checkpoint/snapshot failures counted into metrics.
+    pub fn run(self, backend: &GpBackend) -> CodesignOutcome {
+        let SearchRun { spec, cache, certs, scope, metrics, status } = self;
+        let model = &spec.model;
+        if status.is_cancelled() {
+            status.set_phase(RunPhase::Cancelled);
+            scope.record_into(&metrics);
+            return CodesignOutcome {
+                hw_trace: HwTrace::new(),
+                best: None,
+                metrics,
+                cancelled: true,
+            };
+        }
+
+        status.set_phase(RunPhase::WarmStart);
+        // One pruned space per run, shared by the whole hardware search:
+        // candidate configs are certified against every layer of the target
+        // model and provably-empty ones never reach the simulator. The
+        // certificate memo may be shared across runs.
+        let space = PrunedHwSpace::with_store(
+            eyeriss_resources(model.num_pes),
+            model.layers.clone(),
+            certs,
+        );
+        let best: Mutex<Option<Checkpoint>> = Mutex::new(None);
+        let mut trial = 0usize;
+
+        // Snapshot endpoint: same resources => same fingerprint as every
+        // software search of this run keys its entries under.
+        let snapshot_io = BatchEvaluator::with_cache(
+            Evaluator::new(eyeriss_resources(model.num_pes)),
+            Arc::clone(&cache),
+        );
+        if let Some(path) = &spec.cache_snapshot_path {
+            if path.exists() {
+                match snapshot_io.load_snapshot(path) {
+                    Ok(n) => eprintln!(
+                        "[{}] loaded cache snapshot: {n} entries from {}",
+                        model.name,
+                        path.display()
+                    ),
+                    // a stale or foreign snapshot degrades to a cold start,
+                    // never to wrong results
+                    Err(e) => {
+                        metrics.record_snapshot_io_failure();
+                        eprintln!("[{}] cache snapshot ignored: {e:#}", model.name);
+                    }
+                }
+            }
+        }
+        // Size warmup batches from observed latency: one hardware config
+        // costs about (sw trials x layers) simulator evaluations.
+        let evals_per_config = (spec.ncfg.sw_trials * model.layers.len().max(1)) as f64;
+        let chunker = AdaptiveChunker::new(Arc::clone(&cache), evals_per_config);
+
+        status.set_phase(RunPhase::Searching);
+        let hw_trace = scope.enter(|| {
+            let ctx = HwBatchCtx {
+                model,
+                sw_method: spec.sw_method,
+                sw_trials: spec.ncfg.sw_trials,
+                sw_bo: &spec.ncfg.sw_bo,
+                threads: spec.threads,
+                cache: &cache,
+                scope: Some(&scope),
+            };
+            let inner = |hws: &[HwConfig]| -> Vec<Option<f64>> {
+                let base = trial;
+                trial += hws.len();
+                if status.is_cancelled() {
+                    // stop evaluating: the search loop keeps its trial
+                    // accounting but no simulator work runs past this point
+                    status.add_trials(hws.len() as u64);
+                    return hws.iter().map(|_| None).collect();
+                }
+                let outs =
+                    evaluate_hardware_batch(&ctx, hws, backend, &metrics, spec.seed + base as u64);
+                outs.into_iter()
+                    .enumerate()
+                    .map(|(k, out)| {
+                        let t = base + k;
+                        status.add_trials(1);
+                        if let Some((edp, layers)) = &out {
+                            let mut guard = best.lock().unwrap();
+                            let improved = guard.as_ref().is_none_or(|b| *edp < b.best_edp);
+                            if improved {
+                                let ck = Checkpoint {
+                                    model: model.name.to_string(),
+                                    trial: t,
+                                    best_edp: *edp,
+                                    cache_snapshot: spec
+                                        .cache_snapshot_path
+                                        .as_ref()
+                                        .map(|p| p.display().to_string()),
+                                    hw: hws[k].clone(),
+                                    layers: layers.clone(),
+                                };
+                                if let Some(path) = &spec.checkpoint_path {
+                                    if let Err(e) = ck.save(path) {
+                                        metrics.record_checkpoint_save_failure();
+                                        eprintln!("checkpoint save failed: {e:#}");
+                                    }
+                                }
+                                *guard = Some(ck);
+                            }
+                            if spec.verbose {
+                                let best_edp =
+                                    guard.as_ref().map(|b| b.best_edp).unwrap_or(*edp);
+                                eprintln!(
+                                    "[{}] hw trial {t}: edp {:.3e} (best {:.3e})",
+                                    model.name, edp, best_edp
+                                );
+                            }
+                        } else if spec.verbose {
+                            eprintln!(
+                                "[{}] hw trial {t}: infeasible (no mapping found)",
+                                model.name
+                            );
+                        }
+                        out.map(|(edp, _)| edp)
+                    })
+                    .collect()
+            };
+
+            let mut rng = Rng::seed_from_u64(spec.seed);
+            hw_search::search(
+                spec.hw_method,
+                &space,
+                inner,
+                spec.ncfg.hw_trials,
+                &spec.ncfg.hw_bo,
+                &Chunking::Adaptive(&chunker),
+                backend,
+                &mut rng,
+            )
+        });
+
+        status.set_phase(RunPhase::Persisting);
+        if let Some(path) = &spec.cache_snapshot_path {
+            match snapshot_io.save_snapshot(path) {
+                Ok(n) => eprintln!(
+                    "[{}] saved cache snapshot: {n} entries to {}",
+                    model.name,
+                    path.display()
+                ),
+                Err(e) => {
+                    metrics.record_snapshot_io_failure();
+                    eprintln!("[{}] cache snapshot save failed: {e:#}", model.name);
+                }
+            }
+        }
+        metrics.record_cache(cache.stats());
+        scope.record_into(&metrics);
+        let cancelled = status.is_cancelled();
+        status.set_phase(if cancelled { RunPhase::Cancelled } else { RunPhase::Finished });
+        CodesignOutcome { hw_trace, best: best.into_inner().unwrap(), metrics, cancelled }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::config::BoConfig;
+    use crate::workloads::specs::dqn;
+
+    fn tiny_spec(seed: u64) -> JobSpec {
+        let ncfg = NestedConfig {
+            hw_trials: 3,
+            sw_trials: 8,
+            hw_bo: BoConfig { warmup: 2, pool: 6, ..BoConfig::hardware() },
+            sw_bo: BoConfig { warmup: 3, pool: 6, ..BoConfig::software() },
+        };
+        let mut spec = JobSpec::new(dqn(), ncfg, seed);
+        spec.threads = 2;
+        spec
+    }
+
+    #[test]
+    fn run_scope_separates_concurrent_recording() {
+        let a = RunScope::new();
+        let b = RunScope::new();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                a.enter(|| {
+                    feas_telemetry::record_constructed();
+                    feas_telemetry::record_constructed();
+                    gp_telemetry::record_extend();
+                })
+            });
+            s.spawn(|| b.enter(feas_telemetry::record_constructed));
+        });
+        assert_eq!(a.feasibility_stats().constructed, 2);
+        assert_eq!(a.surrogate_stats().extends, 1);
+        assert_eq!(b.feasibility_stats().constructed, 1);
+        assert_eq!(b.surrogate_stats().extends, 0);
+    }
+
+    #[test]
+    fn search_run_walks_the_phases_and_matches_the_driver_contract() {
+        let run = SearchRun::new(tiny_spec(3), Arc::new(EvalCache::default()));
+        let status = run.status();
+        assert_eq!(status.phase(), RunPhase::Pending);
+        assert_eq!(status.trials_total(), 3);
+        let out = run.run(&GpBackend::Native);
+        assert_eq!(status.phase(), RunPhase::Finished);
+        assert!(status.phase().is_terminal());
+        assert_eq!(status.trials_done(), 3);
+        assert!(!out.cancelled);
+        assert_eq!(out.hw_trace.evals.len(), 3);
+        // per-run scoped telemetry reached the metrics without baselines
+        use std::sync::atomic::Ordering;
+        assert!(out.metrics.feas_constructed.load(Ordering::Relaxed) > 0);
+        assert!(out.metrics.prune_certificates.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn cancelled_before_start_returns_an_empty_cancelled_outcome() {
+        let run = SearchRun::new(tiny_spec(4), Arc::new(EvalCache::default()));
+        let status = run.status();
+        status.cancel();
+        let out = run.run(&GpBackend::Native);
+        assert!(out.cancelled);
+        assert!(out.best.is_none());
+        assert!(out.hw_trace.evals.is_empty());
+        assert_eq!(status.phase(), RunPhase::Cancelled);
+    }
+
+    #[test]
+    fn run_phase_round_trips_through_u8() {
+        for phase in [
+            RunPhase::Pending,
+            RunPhase::WarmStart,
+            RunPhase::Searching,
+            RunPhase::Persisting,
+            RunPhase::Finished,
+            RunPhase::Cancelled,
+        ] {
+            assert_eq!(RunPhase::from_u8(phase as u8), phase);
+            assert!(!phase.name().is_empty());
+        }
+    }
+}

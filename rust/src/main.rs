@@ -4,6 +4,8 @@
 //!   quickstart                 evaluate Eyeriss + a searched mapping on DQN-K2
 //!   sw-opt                     software mapping search on fixed hardware
 //!   codesign                   full nested co-design on a model
+//!   schedule                   concurrent co-design jobs over several models
+//!                              (one scheduler, shared cache + certificates)
 //!   fig3|fig4|fig5a|fig5b|fig5c|fig16|fig17|fig18|insight
 //!                              regenerate the paper's figures (CSV under results/)
 //!   selftest                   artifact <-> native GP numerical cross-check
@@ -19,12 +21,14 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use codesign::coordinator::driver::{eyeriss_baseline, Driver};
+use codesign::coordinator::run::JobSpec;
 use codesign::figures::{fig3, fig4, fig5a, fig5bc, insight, FigOpts};
 use codesign::model::cache::{CachePolicy, EvalCache, DEFAULT_CAPACITY, DEFAULT_SHARDS};
 use codesign::model::eval::Evaluator;
 use codesign::opt::config::{BoConfig, NestedConfig};
 use codesign::opt::hw_search::HwMethod;
 use codesign::opt::sw_search::{search, SurrogateKind, SwMethod, SwProblem};
+use codesign::runtime::jobs::JobScheduler;
 use codesign::runtime::server::GpServer;
 use codesign::space::sw_space::SwSpace;
 use codesign::surrogate::gp::GpBackend;
@@ -265,6 +269,89 @@ fn cmd_codesign(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let (backend, _server) = backend(args)?;
+    let models_arg = args.str("models", "dqn,mlp");
+    let names: Vec<&str> = models_arg.split(',').filter(|s| !s.is_empty()).collect();
+    if names.is_empty() {
+        bail!("--models must name at least one model");
+    }
+    let ncfg = NestedConfig {
+        hw_trials: args.get("hw-trials", 20usize)?,
+        sw_trials: args.get("sw-trials", 100usize)?,
+        hw_bo: BoConfig::hardware(),
+        sw_bo: BoConfig::software(),
+    };
+    let sw = sw_method(&args.str("method", "bo"))?;
+    let threads = args.get("threads", codesign::coordinator::parallel::default_threads())?;
+    let seed = args.get("seed", 2020u64)?;
+    let max_jobs = args.get("jobs", 0usize)?;
+    let out_dir: std::path::PathBuf = args.str("out", "results").into();
+    let _ = std::fs::create_dir_all(&out_dir);
+
+    println!(
+        "scheduling {} co-design jobs ({} hw x {} sw trials each, {} threads/job, {})",
+        names.len(),
+        ncfg.hw_trials,
+        ncfg.sw_trials,
+        threads,
+        if max_jobs == 0 { "unbounded".to_string() } else { format!("<= {max_jobs} at once") }
+    );
+
+    let sched = JobScheduler::with_capacity(backend, max_jobs);
+    let mut handles = Vec::new();
+    for (i, name) in names.iter().enumerate() {
+        let model = model_by_name(name).with_context(|| format!("unknown model {name}"))?;
+        let mut spec = JobSpec::new(model, ncfg.clone(), seed + i as u64);
+        spec.sw_method = sw;
+        spec.threads = threads;
+        spec.checkpoint_path = Some(out_dir.join(format!("best_design_{name}.txt")));
+        handles.push((name.to_string(), sched.submit(spec)));
+    }
+
+    loop {
+        let mut line = String::new();
+        let mut all_done = true;
+        for (name, handle) in &handles {
+            let p = handle.progress();
+            all_done &= handle.is_finished();
+            line.push_str(&format!(
+                "[{name}: {} {}/{}] ",
+                p.phase.name(),
+                p.trials_done,
+                p.trials_total
+            ));
+        }
+        println!("{}", line.trim_end());
+        if all_done {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1500));
+    }
+
+    for (name, handle) in handles {
+        let out = handle.wait();
+        println!("\n== {name} ==\n{}", out.metrics.report());
+        match &out.best {
+            Some(best) => {
+                println!("{}", insight::describe_hw("searched hardware", &best.hw));
+                println!("best model EDP: {:.4e} (trial {})", best.best_edp, best.trial);
+            }
+            None => println!("no feasible design found under the given budget"),
+        }
+    }
+    let stats = sched.cache().stats();
+    println!(
+        "\nshared cache after all jobs: {} entries, {} hits / {} misses; \
+         {} prune certificates memoized across jobs",
+        stats.entries,
+        stats.hits,
+        stats.misses,
+        sched.certificate_store().len()
+    );
+    Ok(())
+}
+
 fn cmd_selftest(args: &Args) -> Result<()> {
     let (backend, _server) = backend(args)?;
     let GpBackend::Aot(handle) = &backend else {
@@ -305,6 +392,7 @@ fn main() -> Result<()> {
         "quickstart" => cmd_quickstart(&args),
         "sw-opt" => cmd_sw_opt(&args),
         "codesign" => cmd_codesign(&args),
+        "schedule" => cmd_schedule(&args),
         "selftest" => cmd_selftest(&args),
         "fig3" => {
             let (b, _s) = backend(&args)?;
@@ -434,12 +522,14 @@ fn main() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: codesign <quickstart|sw-opt|codesign|selftest|specialize|report|fig3|fig4|fig5a|fig5b|fig5c|fig16|fig17|fig18|insight> [flags]\n\
+                "usage: codesign <quickstart|sw-opt|codesign|schedule|selftest|specialize|report|fig3|fig4|fig5a|fig5b|fig5c|fig16|fig17|fig18|insight> [flags]\n\
                  flags: --model M --layer L --method bo|random|round-bo|tvm-xgb|tvm-treegru \n\
                         --trials N --hw-trials N --sw-trials N --repeats N --scale F \n\
                         --seed N --threads N --out DIR --native \n\
                         --cache-policy slru|fifo --cache-snapshot PATH (codesign: persist \n\
-                        the evaluation cache and warm-start follow-up runs from it)"
+                        the evaluation cache and warm-start follow-up runs from it) \n\
+                        --models A,B,... --jobs N (schedule: run one co-design job per \n\
+                        model concurrently, at most N at once, over one shared cache)"
             );
             Ok(())
         }

@@ -32,7 +32,11 @@
 //! fingerprint does not match the expected evaluator (results computed
 //! under a different resource budget or energy model can never leak in).
 //! Outcomes round-trip bit-identically: every float is serialized as its
-//! IEEE bit pattern.
+//! IEEE bit pattern. Snapshots rotate: each save first moves the previous
+//! snapshot to a `.bak` sibling ([`snapshot_backup_path`]), and a load
+//! whose primary file fails any validation (missing, truncated, corrupt)
+//! falls back to that backup under the same fingerprint check — one bad
+//! save can no longer cost the whole warm-start.
 //!
 //! Telemetry: hit/miss/eviction counters plus per-segment occupancy,
 //! promotion/demotion counts and snapshot-serving counts, all surfaced
@@ -44,7 +48,7 @@
 use std::collections::hash_map::DefaultHasher;
 use std::collections::{HashMap, VecDeque};
 use std::hash::{Hash, Hasher};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -574,8 +578,11 @@ impl EvalCache {
     }
 
     /// Persist every resident entry belonging to `fingerprint` as a
-    /// versioned snapshot at `path` (atomic write). Returns the number of
-    /// entries written.
+    /// versioned snapshot at `path` (atomic write). An existing snapshot
+    /// at `path` is first rotated to [`snapshot_backup_path`] so
+    /// [`load_snapshot`](EvalCache::load_snapshot) can fall back to the
+    /// previous generation if this one is later found corrupt. Returns the
+    /// number of entries written.
     pub fn save_snapshot(&self, path: &Path, fingerprint: u64) -> Result<usize> {
         let mut lines: Vec<String> = Vec::new();
         for s in &self.shards {
@@ -596,6 +603,11 @@ impl EvalCache {
             text.push_str(line);
             text.push('\n');
         }
+        // rotate the previous generation aside (best-effort: a failed
+        // rotation must not block persisting the fresh snapshot)
+        if path.exists() {
+            let _ = std::fs::rename(path, snapshot_backup_path(path));
+        }
         crate::util::fsio::atomic_write(path, &text)
             .with_context(|| format!("writing cache snapshot {}", path.display()))?;
         Ok(lines.len())
@@ -609,7 +621,32 @@ impl EvalCache {
     /// parses and validates). Loaded entries start in the probationary
     /// segment, marked so their hits surface as `snapshot_hits`. Returns
     /// the number of entries loaded.
+    ///
+    /// When the primary file fails (missing, truncated, corrupt — anything
+    /// except a fingerprint mismatch, which is a policy refusal rather
+    /// than damage), the rotated [`snapshot_backup_path`] generation is
+    /// tried under the same validation; if the backup also fails or does
+    /// not exist, the primary's error is returned.
     pub fn load_snapshot(&self, path: &Path, expected_fingerprint: u64) -> Result<usize> {
+        match self.load_snapshot_from(path, expected_fingerprint) {
+            Ok(loaded) => Ok(loaded),
+            Err(primary_err) => {
+                let is_fingerprint_refusal =
+                    format!("{primary_err:#}").contains("does not match this evaluator");
+                let backup = snapshot_backup_path(path);
+                if is_fingerprint_refusal || !backup.exists() {
+                    return Err(primary_err);
+                }
+                self.load_snapshot_from(&backup, expected_fingerprint)
+                    .map_err(|_| primary_err.context("primary snapshot and .bak both unusable"))
+            }
+        }
+    }
+
+    /// Load exactly one snapshot file — the all-or-nothing validation
+    /// described on [`load_snapshot`](EvalCache::load_snapshot), with no
+    /// backup fallback.
+    fn load_snapshot_from(&self, path: &Path, expected_fingerprint: u64) -> Result<usize> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading cache snapshot {}", path.display()))?;
         let mut lines = text.lines();
@@ -666,6 +703,14 @@ impl EvalCache {
         self.snapshot_loaded.fetch_add(loaded as u64, Ordering::Relaxed);
         Ok(loaded)
     }
+}
+
+/// The rotated-backup sibling of a snapshot path: the same file name with
+/// `.bak` appended (`cache.snap` -> `cache.snap.bak`).
+pub fn snapshot_backup_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".bak");
+    PathBuf::from(os)
 }
 
 fn hex_bits(v: f64) -> String {
@@ -1152,5 +1197,82 @@ mod tests {
         assert!(small.len() <= 4, "capacity must bound snapshot loads");
         assert!(small.stats().evictions >= 6);
         std::fs::remove_file(&path).ok();
+        std::fs::remove_file(snapshot_backup_path(&path)).ok();
+    }
+
+    #[test]
+    fn save_rotates_the_previous_snapshot_generation_to_bak() {
+        let (l, h, m) = scenario();
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let cache = EvalCache::default();
+        cache.insert(DesignKey::new(1, &l, &h, &m), ev.evaluate(&l, &h, &m));
+        let path = snap_path("rotate");
+        std::fs::remove_file(snapshot_backup_path(&path)).ok();
+        cache.save_snapshot(&path, 1).unwrap();
+        assert!(!snapshot_backup_path(&path).exists(), "first save has nothing to rotate");
+
+        let mut bad = m.clone();
+        bad.split_mut(Dim::C).dram += 1;
+        cache.insert(DesignKey::new(1, &l, &h, &bad), ev.evaluate(&l, &h, &bad));
+        cache.save_snapshot(&path, 1).unwrap();
+        assert!(snapshot_backup_path(&path).exists(), "second save must rotate the first");
+
+        // the backup is the previous generation, byte-for-byte loadable
+        let prev = EvalCache::default();
+        assert_eq!(prev.load_snapshot(&snapshot_backup_path(&path), 1).unwrap(), 1);
+        let cur = EvalCache::default();
+        assert_eq!(cur.load_snapshot(&path, 1).unwrap(), 2);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(snapshot_backup_path(&path)).ok();
+    }
+
+    #[test]
+    fn corrupt_primary_snapshot_falls_back_to_the_rotated_backup() {
+        let (l, h, m) = scenario();
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let cache = EvalCache::default();
+        cache.insert(DesignKey::new(1, &l, &h, &m), ev.evaluate(&l, &h, &m));
+        let path = snap_path("fallback");
+        std::fs::remove_file(snapshot_backup_path(&path)).ok();
+        cache.save_snapshot(&path, 1).unwrap();
+        cache.save_snapshot(&path, 1).unwrap(); // rotates a good generation aside
+
+        // truncate the primary so it fails validation
+        let text = std::fs::read_to_string(&path).unwrap();
+        let truncated: String = text.lines().take(4).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&path, truncated).unwrap();
+
+        let warm = EvalCache::default();
+        let loaded = warm.load_snapshot(&path, 1).unwrap();
+        assert_eq!(loaded, 1, "the rotated backup must serve the warm start");
+        assert!(warm.get(&DesignKey::new(1, &l, &h, &m)).is_some());
+        assert_eq!(warm.stats().snapshot_loaded, 1);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(snapshot_backup_path(&path)).ok();
+    }
+
+    #[test]
+    fn backup_fallback_still_enforces_the_fingerprint_check() {
+        let (l, h, m) = scenario();
+        let ev = Evaluator::new(Resources::eyeriss_168());
+        let cache = EvalCache::default();
+        cache.insert(DesignKey::new(2, &l, &h, &m), ev.evaluate(&l, &h, &m));
+        let path = snap_path("foreign_bak");
+        std::fs::remove_file(snapshot_backup_path(&path)).ok();
+        // first generation under fingerprint 2, rotated aside by a save
+        // under fingerprint 1 (an empty-but-valid snapshot)
+        cache.save_snapshot(&path, 2).unwrap();
+        cache.save_snapshot(&path, 1).unwrap();
+        std::fs::write(&path, "garbage\n").unwrap();
+
+        let warm = EvalCache::default();
+        let err = warm.load_snapshot(&path, 1).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("both unusable"),
+            "a foreign-fingerprint backup must not be loaded: {err:#}"
+        );
+        assert!(warm.is_empty());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(snapshot_backup_path(&path)).ok();
     }
 }

@@ -91,15 +91,80 @@ impl MappingDelta {
     }
 }
 
-/// Process-global counters for delta-evaluation reuse, mirroring the
-/// feasibility telemetry: cheap relaxed atomics recorded from any thread,
-/// snapshotted per run by the coordinator.
+/// Counters for delta-evaluation reuse, mirroring the feasibility
+/// telemetry: cheap relaxed atomics recorded from any thread. Every event
+/// lands in the process-global default scope (read by
+/// [`telemetry::snapshot`]) plus at most one per-thread run scope installed
+/// by [`telemetry::with_scope`], so concurrent jobs get exact per-run
+/// deltas without baseline-diffing globals.
 pub mod telemetry {
+    use std::cell::RefCell;
     use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
 
-    static DELTA_EVALS: AtomicU64 = AtomicU64::new(0);
-    static DELTA_FALLBACKS: AtomicU64 = AtomicU64::new(0);
-    static LEVELS_RECOMPUTED: AtomicU64 = AtomicU64::new(0);
+    /// Accumulator for one telemetry scope: either the process-global
+    /// default or a per-run sink installed via [`with_scope`].
+    #[derive(Debug, Default)]
+    pub struct Sink {
+        delta_evals: AtomicU64,
+        delta_fallbacks: AtomicU64,
+        levels_recomputed: AtomicU64,
+    }
+
+    impl Sink {
+        const fn new() -> Self {
+            Sink {
+                delta_evals: AtomicU64::new(0),
+                delta_fallbacks: AtomicU64::new(0),
+                levels_recomputed: AtomicU64::new(0),
+            }
+        }
+
+        /// Read this scope's counters.
+        pub fn snapshot(&self) -> DeltaStats {
+            DeltaStats {
+                delta_evals: self.delta_evals.load(Ordering::Relaxed),
+                delta_fallbacks: self.delta_fallbacks.load(Ordering::Relaxed),
+                levels_recomputed: self.levels_recomputed.load(Ordering::Relaxed),
+            }
+        }
+    }
+
+    /// The process-global default scope.
+    static GLOBAL: Sink = Sink::new();
+
+    thread_local! {
+        static ACTIVE: RefCell<Option<Arc<Sink>>> = const { RefCell::new(None) };
+    }
+
+    struct ScopeGuard {
+        prev: Option<Arc<Sink>>,
+    }
+
+    impl Drop for ScopeGuard {
+        fn drop(&mut self) {
+            ACTIVE.with(|a| *a.borrow_mut() = self.prev.take());
+        }
+    }
+
+    /// Install `sink` as the calling thread's run scope for the duration of
+    /// `f`; events recorded by `f` accumulate into `sink` in addition to
+    /// the global scope. Nested installs shadow and restore on exit.
+    pub fn with_scope<R>(sink: &Arc<Sink>, f: impl FnOnce() -> R) -> R {
+        let prev = ACTIVE.with(|a| a.borrow_mut().replace(Arc::clone(sink)));
+        let _guard = ScopeGuard { prev };
+        f()
+    }
+
+    /// Apply one recording to every scope that should observe it.
+    fn record(apply: impl Fn(&Sink)) {
+        apply(&GLOBAL);
+        ACTIVE.with(|a| {
+            if let Some(sink) = a.borrow().as_ref() {
+                apply(sink);
+            }
+        });
+    }
 
     /// Snapshot of the delta-evaluation counters.
     #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -127,22 +192,22 @@ pub mod telemetry {
         }
     }
 
-    /// Read the current process-wide counters.
+    /// Read the current counters of the process-global default scope.
     pub fn snapshot() -> DeltaStats {
-        DeltaStats {
-            delta_evals: DELTA_EVALS.load(Ordering::Relaxed),
-            delta_fallbacks: DELTA_FALLBACKS.load(Ordering::Relaxed),
-            levels_recomputed: LEVELS_RECOMPUTED.load(Ordering::Relaxed),
-        }
+        GLOBAL.snapshot()
     }
 
     pub(super) fn record_delta_eval(levels: u64) {
-        DELTA_EVALS.fetch_add(1, Ordering::Relaxed);
-        LEVELS_RECOMPUTED.fetch_add(levels, Ordering::Relaxed);
+        record(|s| {
+            s.delta_evals.fetch_add(1, Ordering::Relaxed);
+            s.levels_recomputed.fetch_add(levels, Ordering::Relaxed);
+        });
     }
 
     pub(super) fn record_fallback() {
-        DELTA_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+        record(|s| {
+            s.delta_fallbacks.fetch_add(1, Ordering::Relaxed);
+        });
     }
 }
 

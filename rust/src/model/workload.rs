@@ -81,7 +81,7 @@ impl DataSpace {
 }
 
 /// A single neural layer as a conv-shaped workload.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct Layer {
     pub name: String,
     /// Filter width.

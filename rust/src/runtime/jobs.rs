@@ -1,0 +1,293 @@
+//! The job-scheduling layer: concurrent co-design search jobs multiplexed
+//! over shared warm state.
+//!
+//! [`JobScheduler`] accepts [`JobSpec`]s and runs each as a
+//! [`SearchRun`] on its own named thread, bounded by an optional
+//! concurrency capacity (a condvar-guarded slot counter — queued jobs wait
+//! for a slot, observing cancellation while they wait). All jobs share the
+//! scheduler's [`EvalCache`] and [`CertificateStore`]: both memoize pure
+//! functions of their keys, so cross-job sharing warms every tenant
+//! without ever changing anyone's results (the concurrency regression
+//! suite in `rust/tests/concurrent_jobs.rs` pins this bit-for-bit).
+//!
+//! The ownership pattern extends `runtime::server`'s services
+//! ([`EvalService`](crate::runtime::server::EvalService)): an owner struct
+//! holds the shared state, and per-job [`JobHandle`]s expose progress,
+//! cancellation, and the final [`CodesignOutcome`] — here backed by a
+//! join handle plus the run's lock-free [`RunStatus`] instead of a request
+//! channel, because a search job is compute-bound and long-lived rather
+//! than request/response-shaped.
+//!
+//! Telemetry isolation comes from the run layer: each `SearchRun` installs
+//! its [`RunScope`](crate::coordinator::run::RunScope) on every thread
+//! that works for it, so concurrent jobs report exact per-run surrogate /
+//! feasibility / delta deltas with no cross-talk.
+#![deny(clippy::style)]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::coordinator::driver::CodesignOutcome;
+use crate::coordinator::run::{JobSpec, RunPhase, RunStatus, SearchRun};
+use crate::model::cache::EvalCache;
+use crate::space::prune::CertificateStore;
+use crate::surrogate::gp::GpBackend;
+
+/// Condvar-guarded slot counter bounding how many jobs run at once.
+#[derive(Debug)]
+struct Slots {
+    free: Mutex<usize>,
+    available: Condvar,
+}
+
+impl Slots {
+    fn new(capacity: usize) -> Self {
+        Slots { free: Mutex::new(capacity), available: Condvar::new() }
+    }
+
+    /// Block until a slot is free, or until `status` is cancelled while
+    /// waiting. Returns whether a slot was actually taken.
+    fn acquire(&self, status: &RunStatus) -> bool {
+        let mut free = self.free.lock().unwrap();
+        loop {
+            if status.is_cancelled() {
+                return false;
+            }
+            if *free > 0 {
+                *free -= 1;
+                return true;
+            }
+            // short timeout so a queued job observes cancellation promptly
+            let (guard, _) = self
+                .available
+                .wait_timeout(free, Duration::from_millis(10))
+                .unwrap();
+            free = guard;
+        }
+    }
+
+    fn release(&self) {
+        *self.free.lock().unwrap() += 1;
+        self.available.notify_one();
+    }
+}
+
+/// Releases the job's slot when the run finishes — also on panic, so a
+/// crashed job can never wedge the scheduler's capacity.
+struct SlotGuard {
+    slots: Arc<Slots>,
+}
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.slots.release();
+    }
+}
+
+/// Point-in-time progress of one job, as its handle reports it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobProgress {
+    pub phase: RunPhase,
+    /// Hardware trials completed (or skipped after cancellation).
+    pub trials_done: u64,
+    /// Hardware trials the job was configured for.
+    pub trials_total: u64,
+}
+
+/// Handle to one scheduled job: poll progress, request cancellation, and
+/// collect the final outcome.
+pub struct JobHandle {
+    id: u64,
+    status: Arc<RunStatus>,
+    join: JoinHandle<CodesignOutcome>,
+}
+
+impl JobHandle {
+    /// Scheduler-unique job id (submission order).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn progress(&self) -> JobProgress {
+        JobProgress {
+            phase: self.status.phase(),
+            trials_done: self.status.trials_done(),
+            trials_total: self.status.trials_total(),
+        }
+    }
+
+    /// Request cancellation: a queued job never starts searching; a running
+    /// job stops at its next batch boundary. The outcome (partial trace,
+    /// incumbent so far, metrics) is still delivered through [`wait`].
+    ///
+    /// [`wait`]: JobHandle::wait
+    pub fn cancel(&self) {
+        self.status.cancel();
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.join.is_finished()
+    }
+
+    /// Block until the job completes and return its outcome.
+    pub fn wait(self) -> CodesignOutcome {
+        self.join.join().expect("search-run thread panicked")
+    }
+}
+
+/// Schedules concurrent co-design jobs over a shared evaluation cache and
+/// certificate store. See the module docs for the sharing/determinism
+/// contract.
+pub struct JobScheduler {
+    backend: GpBackend,
+    cache: Arc<EvalCache>,
+    certs: Arc<CertificateStore>,
+    slots: Arc<Slots>,
+    next_id: AtomicU64,
+}
+
+impl JobScheduler {
+    /// A scheduler with no concurrency bound: every submitted job starts
+    /// immediately on its own thread.
+    pub fn new(backend: GpBackend) -> Self {
+        JobScheduler::with_capacity(backend, 0)
+    }
+
+    /// A scheduler running at most `max_concurrent` jobs at once
+    /// (0 = unbounded); excess submissions queue in arrival order of their
+    /// slot acquisition.
+    pub fn with_capacity(backend: GpBackend, max_concurrent: usize) -> Self {
+        JobScheduler::with_shared(
+            backend,
+            Arc::new(EvalCache::default()),
+            Arc::new(CertificateStore::default()),
+            max_concurrent,
+        )
+    }
+
+    /// A scheduler over externally owned shared state — the shape
+    /// `Driver::run` uses to keep its cache across runs.
+    pub fn with_shared(
+        backend: GpBackend,
+        cache: Arc<EvalCache>,
+        certs: Arc<CertificateStore>,
+        max_concurrent: usize,
+    ) -> Self {
+        let capacity = if max_concurrent == 0 { usize::MAX } else { max_concurrent };
+        JobScheduler {
+            backend,
+            cache,
+            certs,
+            slots: Arc::new(Slots::new(capacity)),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// The evaluation cache shared by every job.
+    pub fn cache(&self) -> &Arc<EvalCache> {
+        &self.cache
+    }
+
+    /// The prune-certificate memo shared by every job.
+    pub fn certificate_store(&self) -> &Arc<CertificateStore> {
+        &self.certs
+    }
+
+    /// Schedule `spec` as a new job. Returns immediately with a handle;
+    /// the job starts as soon as a slot is free.
+    pub fn submit(&self, spec: JobSpec) -> JobHandle {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let run = SearchRun::with_shared(spec, Arc::clone(&self.cache), Arc::clone(&self.certs));
+        let status = run.status();
+        let backend = self.backend.clone();
+        let slots = Arc::clone(&self.slots);
+        let thread_status = run.status();
+        let join = thread::Builder::new()
+            .name(format!("codesign-job-{id}"))
+            .spawn(move || {
+                // acquire fails only when the job was cancelled while
+                // queued; SearchRun::run then notices the flag immediately
+                // and returns a cancelled outcome without searching
+                let _slot = slots
+                    .acquire(&thread_status)
+                    .then(|| SlotGuard { slots: Arc::clone(&slots) });
+                run.run(&backend)
+            })
+            .expect("spawn search-job thread");
+        JobHandle { id, status, join }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::config::{BoConfig, NestedConfig};
+    use crate::workloads::specs::dqn;
+
+    fn tiny_spec(seed: u64) -> JobSpec {
+        let ncfg = NestedConfig {
+            hw_trials: 3,
+            sw_trials: 8,
+            hw_bo: BoConfig { warmup: 2, pool: 6, ..BoConfig::hardware() },
+            sw_bo: BoConfig { warmup: 3, pool: 6, ..BoConfig::software() },
+        };
+        let mut spec = JobSpec::new(dqn(), ncfg, seed);
+        spec.threads = 2;
+        spec
+    }
+
+    #[test]
+    fn submitted_job_completes_and_reports_terminal_progress() {
+        let sched = JobScheduler::new(GpBackend::Native);
+        let handle = sched.submit(tiny_spec(17));
+        assert_eq!(handle.id(), 0);
+        let out = handle.wait();
+        assert!(!out.cancelled);
+        assert_eq!(out.hw_trace.evals.len(), 3);
+        assert!(sched.cache().stats().entries > 0, "the job must warm the shared cache");
+        assert!(!sched.certificate_store().is_empty(), "jobs must share certificates");
+    }
+
+    #[test]
+    fn job_ids_increase_with_submission_order() {
+        let sched = JobScheduler::new(GpBackend::Native);
+        let a = sched.submit(tiny_spec(1));
+        let b = sched.submit(tiny_spec(2));
+        assert_eq!((a.id(), b.id()), (0, 1));
+        a.wait();
+        b.wait();
+    }
+
+    #[test]
+    fn queued_job_cancelled_before_a_slot_frees_never_searches() {
+        let sched = JobScheduler::with_capacity(GpBackend::Native, 1);
+        let running = sched.submit(tiny_spec(3));
+        // wait until the first job actually holds the slot
+        while running.progress().phase == RunPhase::Pending {
+            thread::sleep(Duration::from_millis(1));
+        }
+        let queued = sched.submit(tiny_spec(4));
+        queued.cancel();
+        let out = queued.wait();
+        assert!(out.cancelled);
+        assert!(out.best.is_none());
+        assert!(out.hw_trace.evals.is_empty());
+        let out = running.wait();
+        assert!(!out.cancelled, "the running job must be unaffected");
+        assert_eq!(out.hw_trace.evals.len(), 3);
+    }
+
+    #[test]
+    fn slot_capacity_serializes_execution_without_losing_jobs() {
+        let sched = JobScheduler::with_capacity(GpBackend::Native, 1);
+        let handles: Vec<JobHandle> =
+            (0..3).map(|i| sched.submit(tiny_spec(20 + i))).collect();
+        for handle in handles {
+            let out = handle.wait();
+            assert!(!out.cancelled);
+            assert_eq!(out.hw_trace.evals.len(), 3);
+        }
+    }
+}

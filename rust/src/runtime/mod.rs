@@ -8,10 +8,17 @@
 //! without it `GpExecutor` is an API-compatible stub whose `load` fails
 //! cleanly and everything falls back to the pure-Rust GP.
 
+//!
+//! The job-scheduling layer ([`jobs`]) also lives here: it multiplexes
+//! concurrent co-design search runs over the shared worker pool,
+//! evaluation cache, and prune-certificate store (see README.md).
+
 pub mod artifacts;
 pub mod gp_exec;
+pub mod jobs;
 pub mod server;
 
 pub use artifacts::{ArtifactSet, Manifest, FEATURE_DIM, NLL_BATCH, THETA_DIM};
 pub use gp_exec::GpExecutor;
+pub use jobs::{JobHandle, JobProgress, JobScheduler};
 pub use server::{EvalHandle, EvalService, GpHandle, GpServer};

@@ -10,6 +10,7 @@
 //!   serving requests (the same layer/config/mapping triples arriving from
 //!   different clients or rounds) hit the warm cache instead of re-running
 //!   the cost model; `EvalHandle::stats` exposes the hit/miss telemetry.
+#![deny(clippy::style)]
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;

@@ -1,32 +1,129 @@
-//! Process-global feasibility-engine telemetry: monotone counters recording
-//! how candidates were obtained — constructed feasibly, perturbed in place,
-//! projected from an infeasible point, or recovered through the rejection-
-//! sampling fallback — plus infeasible-space detections.
+//! Feasibility-engine telemetry: monotone counters recording how candidates
+//! were obtained — constructed feasibly, perturbed in place, projected from
+//! an infeasible point, or recovered through the rejection-sampling
+//! fallback — plus infeasible-space detections and the cross-space pruner's
+//! certificate traffic.
 //!
 //! The samplers are called from free functions without a `Metrics` handle
-//! (the same situation as `crate::surrogate::telemetry`), so the counters
-//! live here as statics; `coordinator::metrics` snapshots them at run
-//! boundaries and reports the per-run delta via [`FeasibilityStats::since`].
+//! (the same situation as `crate::surrogate::telemetry`), so recording goes
+//! through this module. Every event lands in up to two scopes: the
+//! **process-global default scope** (a static [`Sink`], which [`snapshot`]
+//! reads — existing call sites and tests keep working unchanged) and at
+//! most one per-thread **run scope** installed by [`with_scope`], giving
+//! concurrent jobs exact per-run deltas without baseline-diffing globals.
+//! Nested scopes shadow; the previous scope is restored on exit and on
+//! unwind.
 #![deny(clippy::style)]
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-static CONSTRUCTED: AtomicU64 = AtomicU64::new(0);
-static PERTURBATIONS: AtomicU64 = AtomicU64::new(0);
-static PERTURBATION_FALLBACKS: AtomicU64 = AtomicU64::new(0);
-static PROJECTIONS: AtomicU64 = AtomicU64::new(0);
-static PROJECTION_FAILURES: AtomicU64 = AtomicU64::new(0);
-static FALLBACK_SAMPLES: AtomicU64 = AtomicU64::new(0);
-static FALLBACK_DRAWS: AtomicU64 = AtomicU64::new(0);
-static INFEASIBLE_SPACES: AtomicU64 = AtomicU64::new(0);
-static DEGRADED_SKIPS: AtomicU64 = AtomicU64::new(0);
-static PRUNE_CERTIFICATES: AtomicU64 = AtomicU64::new(0);
-static PRUNE_REJECTIONS: AtomicU64 = AtomicU64::new(0);
-static LATTICE_BOXES: AtomicU64 = AtomicU64::new(0);
-static LATTICE_BOX_SHRINK_MILLI: AtomicU64 = AtomicU64::new(0);
+/// Accumulator for one telemetry scope: either the process-global default
+/// or a per-run sink installed via [`with_scope`].
+#[derive(Debug, Default)]
+pub struct Sink {
+    constructed: AtomicU64,
+    perturbations: AtomicU64,
+    perturbation_fallbacks: AtomicU64,
+    projections: AtomicU64,
+    projection_failures: AtomicU64,
+    fallback_samples: AtomicU64,
+    fallback_draws: AtomicU64,
+    infeasible_spaces: AtomicU64,
+    degraded_skips: AtomicU64,
+    prune_certificates: AtomicU64,
+    prune_rejections: AtomicU64,
+    cert_hits: AtomicU64,
+    cert_misses: AtomicU64,
+    lattice_boxes: AtomicU64,
+    lattice_box_shrink_milli: AtomicU64,
+}
 
-/// Snapshot of the feasibility counters. All fields are totals since process
-/// start; use [`FeasibilityStats::since`] to attribute movement to one run.
+impl Sink {
+    const fn new() -> Self {
+        Sink {
+            constructed: AtomicU64::new(0),
+            perturbations: AtomicU64::new(0),
+            perturbation_fallbacks: AtomicU64::new(0),
+            projections: AtomicU64::new(0),
+            projection_failures: AtomicU64::new(0),
+            fallback_samples: AtomicU64::new(0),
+            fallback_draws: AtomicU64::new(0),
+            infeasible_spaces: AtomicU64::new(0),
+            degraded_skips: AtomicU64::new(0),
+            prune_certificates: AtomicU64::new(0),
+            prune_rejections: AtomicU64::new(0),
+            cert_hits: AtomicU64::new(0),
+            cert_misses: AtomicU64::new(0),
+            lattice_boxes: AtomicU64::new(0),
+            lattice_box_shrink_milli: AtomicU64::new(0),
+        }
+    }
+
+    /// Read this scope's counters.
+    pub fn snapshot(&self) -> FeasibilityStats {
+        FeasibilityStats {
+            constructed: self.constructed.load(Ordering::Relaxed),
+            perturbations: self.perturbations.load(Ordering::Relaxed),
+            perturbation_fallbacks: self.perturbation_fallbacks.load(Ordering::Relaxed),
+            projections: self.projections.load(Ordering::Relaxed),
+            projection_failures: self.projection_failures.load(Ordering::Relaxed),
+            fallback_samples: self.fallback_samples.load(Ordering::Relaxed),
+            fallback_draws: self.fallback_draws.load(Ordering::Relaxed),
+            infeasible_spaces: self.infeasible_spaces.load(Ordering::Relaxed),
+            degraded_skips: self.degraded_skips.load(Ordering::Relaxed),
+            prune_certificates: self.prune_certificates.load(Ordering::Relaxed),
+            prune_rejections: self.prune_rejections.load(Ordering::Relaxed),
+            cert_hits: self.cert_hits.load(Ordering::Relaxed),
+            cert_misses: self.cert_misses.load(Ordering::Relaxed),
+            lattice_boxes: self.lattice_boxes.load(Ordering::Relaxed),
+            lattice_box_shrink_milli: self.lattice_box_shrink_milli.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The process-global default scope.
+static GLOBAL: Sink = Sink::new();
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Arc<Sink>>> = const { RefCell::new(None) };
+}
+
+struct ScopeGuard {
+    prev: Option<Arc<Sink>>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        ACTIVE.with(|a| *a.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Install `sink` as the calling thread's run scope for the duration of
+/// `f`: every event recorded by `f` (on this thread) is accumulated into
+/// `sink` in addition to the process-global default scope. The previously
+/// installed scope, if any, is shadowed and restored on exit.
+pub fn with_scope<R>(sink: &Arc<Sink>, f: impl FnOnce() -> R) -> R {
+    let prev = ACTIVE.with(|a| a.borrow_mut().replace(Arc::clone(sink)));
+    let _guard = ScopeGuard { prev };
+    f()
+}
+
+/// Apply one recording to every scope that should observe it.
+fn record(apply: impl Fn(&Sink)) {
+    apply(&GLOBAL);
+    ACTIVE.with(|a| {
+        if let Some(sink) = a.borrow().as_ref() {
+            apply(sink);
+        }
+    });
+}
+
+/// Snapshot of the feasibility counters. Fields read from the global scope
+/// are totals since process start; use [`FeasibilityStats::since`] to
+/// attribute movement to one window, or read a run scope's [`Sink`]
+/// directly for an exact per-run view.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FeasibilityStats {
     /// Candidates generated valid-by-construction (one raw draw each).
@@ -54,12 +151,18 @@ pub struct FeasibilityStats {
     /// (warmup cut short, a pool left partially filled, an SA walker or
     /// hill-climb abandoned). Zero on healthy constructive spaces.
     pub degraded_skips: u64,
-    /// Per-layer feasibility certificates computed by the cross-space
-    /// pruner (`space::prune::PrunedHwSpace`).
+    /// Per-layer feasibility certificates consulted by the cross-space
+    /// pruner (`space::prune::PrunedHwSpace`), memoized or not.
     pub prune_certificates: u64,
     /// Hardware configurations rejected *before* any simulator evaluation
     /// because a certificate proved some target layer's mapping space empty.
     pub prune_rejections: u64,
+    /// Certificate-store lookups served from the shared memo
+    /// (`space::prune::CertificateStore`) without recomputation.
+    pub cert_hits: u64,
+    /// Certificate-store lookups that computed (and then shared) a new
+    /// certificate.
+    pub cert_misses: u64,
     /// Lattice-derived relaxation boxes handed to round-BO
     /// (`BoConfig::lattice_box`).
     pub lattice_boxes: u64,
@@ -90,6 +193,8 @@ impl FeasibilityStats {
                 .prune_certificates
                 .saturating_sub(earlier.prune_certificates),
             prune_rejections: self.prune_rejections.saturating_sub(earlier.prune_rejections),
+            cert_hits: self.cert_hits.saturating_sub(earlier.cert_hits),
+            cert_misses: self.cert_misses.saturating_sub(earlier.cert_misses),
             lattice_boxes: self.lattice_boxes.saturating_sub(earlier.lattice_boxes),
             lattice_box_shrink_milli: self
                 .lattice_box_shrink_milli
@@ -98,92 +203,116 @@ impl FeasibilityStats {
     }
 }
 
-/// Read all counters.
+/// Read all counters of the process-global default scope.
 pub fn snapshot() -> FeasibilityStats {
-    FeasibilityStats {
-        constructed: CONSTRUCTED.load(Ordering::Relaxed),
-        perturbations: PERTURBATIONS.load(Ordering::Relaxed),
-        perturbation_fallbacks: PERTURBATION_FALLBACKS.load(Ordering::Relaxed),
-        projections: PROJECTIONS.load(Ordering::Relaxed),
-        projection_failures: PROJECTION_FAILURES.load(Ordering::Relaxed),
-        fallback_samples: FALLBACK_SAMPLES.load(Ordering::Relaxed),
-        fallback_draws: FALLBACK_DRAWS.load(Ordering::Relaxed),
-        infeasible_spaces: INFEASIBLE_SPACES.load(Ordering::Relaxed),
-        degraded_skips: DEGRADED_SKIPS.load(Ordering::Relaxed),
-        prune_certificates: PRUNE_CERTIFICATES.load(Ordering::Relaxed),
-        prune_rejections: PRUNE_REJECTIONS.load(Ordering::Relaxed),
-        lattice_boxes: LATTICE_BOXES.load(Ordering::Relaxed),
-        lattice_box_shrink_milli: LATTICE_BOX_SHRINK_MILLI.load(Ordering::Relaxed),
-    }
+    GLOBAL.snapshot()
 }
 
 /// A candidate was generated valid-by-construction.
 pub fn record_constructed() {
-    CONSTRUCTED.fetch_add(1, Ordering::Relaxed);
+    record(|s| {
+        s.constructed.fetch_add(1, Ordering::Relaxed);
+    });
 }
 
 /// A perturbation was delivered by the intended move mixture.
 pub fn record_perturbation() {
-    PERTURBATIONS.fetch_add(1, Ordering::Relaxed);
+    record(|s| {
+        s.perturbations.fetch_add(1, Ordering::Relaxed);
+    });
 }
 
 /// A perturbation *degraded* to the always-safe loop-order swap.
 pub fn record_perturbation_fallback() {
-    PERTURBATION_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+    record(|s| {
+        s.perturbation_fallbacks.fetch_add(1, Ordering::Relaxed);
+    });
 }
 
 /// An infeasible point was projected onto a feasible mapping.
 pub fn record_projection() {
-    PROJECTIONS.fetch_add(1, Ordering::Relaxed);
+    record(|s| {
+        s.projections.fetch_add(1, Ordering::Relaxed);
+    });
 }
 
 /// A projection failed (no construction exists for the space).
 pub fn record_projection_failure() {
-    PROJECTION_FAILURES.fetch_add(1, Ordering::Relaxed);
+    record(|s| {
+        s.projection_failures.fetch_add(1, Ordering::Relaxed);
+    });
 }
 
 /// The rejection fallback produced a valid sample after `draws` raw draws.
 pub fn record_fallback_sample(draws: u64) {
-    FALLBACK_SAMPLES.fetch_add(1, Ordering::Relaxed);
-    FALLBACK_DRAWS.fetch_add(draws, Ordering::Relaxed);
+    record(|s| {
+        s.fallback_samples.fetch_add(1, Ordering::Relaxed);
+        s.fallback_draws.fetch_add(draws, Ordering::Relaxed);
+    });
 }
 
 /// The rejection fallback exhausted its budget without a valid sample.
 pub fn record_fallback_exhausted(draws: u64) {
-    FALLBACK_DRAWS.fetch_add(draws, Ordering::Relaxed);
+    record(|s| {
+        s.fallback_draws.fetch_add(draws, Ordering::Relaxed);
+    });
 }
 
 /// A space was detected as unsampleable.
 pub fn record_infeasible_space() {
-    INFEASIBLE_SPACES.fetch_add(1, Ordering::Relaxed);
+    record(|s| {
+        s.infeasible_spaces.fetch_add(1, Ordering::Relaxed);
+    });
 }
 
 /// A search loop skipped or truncated planned work because no candidate
 /// could be sampled (the consumer-side degradation the space-level counters
 /// cannot attribute).
 pub fn record_degraded_skip() {
-    DEGRADED_SKIPS.fetch_add(1, Ordering::Relaxed);
+    record(|s| {
+        s.degraded_skips.fetch_add(1, Ordering::Relaxed);
+    });
 }
 
-/// `n` per-layer feasibility certificates were computed by the cross-space
+/// `n` per-layer feasibility certificates were consulted by the cross-space
 /// pruner.
 pub fn record_certificates(n: u64) {
-    PRUNE_CERTIFICATES.fetch_add(n, Ordering::Relaxed);
+    record(|s| {
+        s.prune_certificates.fetch_add(n, Ordering::Relaxed);
+    });
 }
 
 /// A hardware configuration was rejected before evaluation on a
 /// provably-empty certificate.
 pub fn record_prune_rejection() {
-    PRUNE_REJECTIONS.fetch_add(1, Ordering::Relaxed);
+    record(|s| {
+        s.prune_rejections.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// A certificate-store lookup was served from the shared memo.
+pub fn record_cert_hit() {
+    record(|s| {
+        s.cert_hits.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// A certificate-store lookup missed and computed a new certificate.
+pub fn record_cert_miss() {
+    record(|s| {
+        s.cert_misses.fetch_add(1, Ordering::Relaxed);
+    });
 }
 
 /// A lattice-derived relaxation box was handed to round-BO; `shrink` is its
 /// volume reduction vs the raw divisor box (>= 1, capped so the milli
 /// accumulator cannot overflow).
 pub fn record_lattice_box(shrink: f64) {
-    LATTICE_BOXES.fetch_add(1, Ordering::Relaxed);
     let milli = (shrink.clamp(1.0, 1e12) * 1000.0) as u64;
-    LATTICE_BOX_SHRINK_MILLI.fetch_add(milli, Ordering::Relaxed);
+    record(|s| {
+        s.lattice_boxes.fetch_add(1, Ordering::Relaxed);
+        s.lattice_box_shrink_milli.fetch_add(milli, Ordering::Relaxed);
+    });
 }
 
 #[cfg(test)]
@@ -206,6 +335,8 @@ mod tests {
         record_degraded_skip();
         record_certificates(3);
         record_prune_rejection();
+        record_cert_hit();
+        record_cert_miss();
         record_lattice_box(2.5);
         let delta = snapshot().since(&before);
         assert!(delta.constructed >= 1);
@@ -219,6 +350,8 @@ mod tests {
         assert!(delta.degraded_skips >= 1);
         assert!(delta.prune_certificates >= 3);
         assert!(delta.prune_rejections >= 1);
+        assert!(delta.cert_hits >= 1);
+        assert!(delta.cert_misses >= 1);
         assert!(delta.lattice_boxes >= 1);
         assert!(delta.lattice_box_shrink_milli >= 2500);
     }
@@ -240,5 +373,22 @@ mod tests {
         let b = FeasibilityStats { constructed: 9, ..FeasibilityStats::default() };
         assert_eq!(b.since(&a).constructed, 4);
         assert_eq!(a.since(&b).constructed, 0);
+    }
+
+    #[test]
+    fn scoped_recording_lands_in_the_sink_and_the_global_view() {
+        let sink = Arc::new(Sink::default());
+        let before = snapshot();
+        with_scope(&sink, || {
+            record_constructed();
+            record_certificates(2);
+        });
+        record_prune_rejection(); // outside the scope: global only
+        let scoped = sink.snapshot();
+        assert_eq!(scoped.constructed, 1);
+        assert_eq!(scoped.prune_certificates, 2);
+        assert_eq!(scoped.prune_rejections, 0, "unscoped events must not leak into the sink");
+        let delta = snapshot().since(&before);
+        assert!(delta.constructed >= 1 && delta.prune_rejections >= 1);
     }
 }

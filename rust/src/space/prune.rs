@@ -33,9 +33,17 @@
 //! and [`PrunedHwSpace::admissible_ranges`] reports the per-dimension
 //! lattice-admissible factor ranges a configuration leaves the software
 //! search — the same ranges round-BO's lattice box is derived from.
+//!
+//! Certificates are **pure functions** of (layer, hardware point, resource
+//! budget), so they are memoized: every `PrunedHwSpace` is backed by a
+//! [`CertificateStore`] — private by default, or shared across spaces (and
+//! across concurrent jobs, via `runtime::jobs::JobScheduler`) through
+//! [`PrunedHwSpace::with_store`]. Store traffic is counted as
+//! `prune_cert_hits` / `prune_cert_misses` in the feasibility telemetry.
 #![deny(clippy::style)]
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap};
+use std::sync::{Arc, Mutex};
 
 use crate::model::arch::{HwConfig, Resources};
 use crate::model::workload::Layer;
@@ -82,19 +90,123 @@ impl HwCertificate {
     }
 }
 
+/// One memoized per-layer certificate: the propagation start check plus the
+/// exact emptiness resolution. A pure function of its [`CertKey`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerCertificate {
+    /// Propagation start check (`FeasibleSampler::check`).
+    pub check: SpaceCheck,
+    /// Exact emptiness (`FeasibleSampler::certified_empty`), including the
+    /// GLB-tight witness-search resolution.
+    pub empty: bool,
+}
+
+/// Injective memo key for one certificate. Certificates depend on the layer
+/// shape, the hardware point, and the resource budget — nothing else — so
+/// the key captures all three exactly (the f64 bandwidth fields keyed by
+/// their IEEE bit patterns; no lossy hashing, `HashMap` resolves bucket
+/// collisions through full key equality).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct CertKey {
+    layer: Layer,
+    hw: HwConfig,
+    num_pes: u64,
+    local_buffer_entries: u64,
+    global_buffer_entries: u64,
+    dram_bw_bits: u64,
+    gb_bw_bits: u64,
+}
+
+impl CertKey {
+    fn new(layer: &Layer, hw: &HwConfig, res: &Resources) -> Self {
+        CertKey {
+            layer: layer.clone(),
+            hw: hw.clone(),
+            num_pes: res.num_pes,
+            local_buffer_entries: res.local_buffer_entries,
+            global_buffer_entries: res.global_buffer_entries,
+            dram_bw_bits: res.dram_words_per_cycle.to_bits(),
+            gb_bw_bits: res.gb_words_per_cycle_per_instance.to_bits(),
+        }
+    }
+}
+
+/// Cross-run memo of per-(layer, hardware, resources) certificates.
+/// Certificates are pure, so entries computed by one run (or one concurrent
+/// job) are valid for every other — the scheduler shares a single store
+/// across all jobs it multiplexes. Lookups are counted as
+/// `prune_cert_hits` / `prune_cert_misses` in the feasibility telemetry.
+#[derive(Debug, Default)]
+pub struct CertificateStore {
+    map: Mutex<HashMap<CertKey, LayerCertificate>>,
+}
+
+impl CertificateStore {
+    pub fn new() -> Self {
+        CertificateStore::default()
+    }
+
+    /// Number of distinct certificates currently memoized.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up the certificate for `key`, or compute and share it. The
+    /// compute runs *outside* the lock: two threads missing on the same key
+    /// may both compute (the results are identical — certificates are
+    /// pure), but a slow witness search never blocks other lookups.
+    fn lookup_or(
+        &self,
+        key: CertKey,
+        compute: impl FnOnce() -> LayerCertificate,
+    ) -> LayerCertificate {
+        if let Some(cert) = self.map.lock().unwrap().get(&key) {
+            telemetry::record_cert_hit();
+            return *cert;
+        }
+        telemetry::record_cert_miss();
+        let cert = compute();
+        self.map.lock().unwrap().insert(key, cert);
+        cert
+    }
+}
+
 /// The hardware design space pruned against a target layer set. Construct
-/// one per co-design run (the driver does) and share it with the hardware
-/// search loops; an empty layer set ([`PrunedHwSpace::unconstrained`])
-/// degrades to the plain constructive sampler for synthetic objectives.
+/// one per co-design run (the run state machine does) and share it with the
+/// hardware search loops; an empty layer set
+/// ([`PrunedHwSpace::unconstrained`]) degrades to the plain constructive
+/// sampler for synthetic objectives.
 #[derive(Clone, Debug)]
 pub struct PrunedHwSpace {
     inner: HwSpace,
     layers: Vec<Layer>,
+    certs: Arc<CertificateStore>,
 }
 
 impl PrunedHwSpace {
     pub fn new(resources: Resources, layers: Vec<Layer>) -> Self {
-        PrunedHwSpace { inner: HwSpace::new(resources), layers }
+        PrunedHwSpace::with_store(resources, layers, Arc::new(CertificateStore::default()))
+    }
+
+    /// A pruned space backed by a shared certificate memo: spaces built for
+    /// different runs (or concurrent jobs) over the same layers and budget
+    /// reuse each other's certificates instead of re-running the witness
+    /// searches.
+    pub fn with_store(
+        resources: Resources,
+        layers: Vec<Layer>,
+        certs: Arc<CertificateStore>,
+    ) -> Self {
+        PrunedHwSpace { inner: HwSpace::new(resources), layers, certs }
+    }
+
+    /// The certificate memo backing this space.
+    pub fn certificate_store(&self) -> &Arc<CertificateStore> {
+        &self.certs
     }
 
     /// A pruned space with no target layers: every certificate passes
@@ -119,32 +231,42 @@ impl PrunedHwSpace {
 
     /// Per-layer feasibility certificates of `hw`, from the propagation
     /// start check and — on GLB-tight layers — the exhaustive spatial
-    /// witness search (no mapping is ever *sampled*). Cost: one
-    /// divisor-lattice build and one capacity evaluation per layer;
-    /// tight layers add the (mesh-bounded, small) witness enumeration.
+    /// witness search (no mapping is ever *sampled*). Each layer's
+    /// certificate is memoized in the backing [`CertificateStore`]; a cold
+    /// lookup costs one divisor-lattice build and one capacity evaluation
+    /// (tight layers add the mesh-bounded witness enumeration), a warm one
+    /// costs a map probe.
     pub fn certify(&self, hw: &HwConfig) -> HwCertificate {
         telemetry::record_certificates(self.layers.len() as u64);
         let mut per_layer = Vec::with_capacity(self.layers.len());
         let mut empty = Vec::with_capacity(self.layers.len());
         for layer in &self.layers {
-            let fs = self.layer_sampler(layer, hw);
-            per_layer.push(fs.check());
-            empty.push(fs.certified_empty());
+            let cert = self.layer_certificate(layer, hw);
+            per_layer.push(cert.check);
+            empty.push(cert.empty);
         }
         HwCertificate { per_layer, empty }
     }
 
     /// Short-circuiting admission test for the sampling hot path: stops at
     /// the first layer with a proven-empty mapping space (recording only
-    /// the certificates it actually computed).
+    /// the certificates it actually consulted).
     pub fn admits(&self, hw: &HwConfig) -> bool {
         for layer in &self.layers {
             telemetry::record_certificates(1);
-            if self.layer_sampler(layer, hw).certified_empty() {
+            if self.layer_certificate(layer, hw).empty {
                 return false;
             }
         }
         true
+    }
+
+    fn layer_certificate(&self, layer: &Layer, hw: &HwConfig) -> LayerCertificate {
+        let key = CertKey::new(layer, hw, &self.inner.resources);
+        self.certs.lookup_or(key, || {
+            let fs = self.layer_sampler(layer, hw);
+            LayerCertificate { check: fs.check(), empty: fs.certified_empty() }
+        })
     }
 
     fn layer_sampler(&self, layer: &Layer, hw: &HwConfig) -> FeasibleSampler {
@@ -310,6 +432,53 @@ mod tests {
         assert_eq!(cert.per_layer, vec![SpaceCheck::GlbTight]);
         assert!(!cert.admits_all(), "tight-and-proven-empty must be pruned");
         assert_eq!(cert.empty_layers(), 1);
+    }
+
+    #[test]
+    fn certificates_are_memoized_across_spaces_sharing_a_store() {
+        let store = Arc::new(CertificateStore::default());
+        let a = PrunedHwSpace::with_store(
+            Resources::eyeriss_168(),
+            dqn().layers,
+            Arc::clone(&store),
+        );
+        let hw = eyeriss_hw(168);
+        assert!(store.is_empty());
+        assert!(a.admits(&hw));
+        assert_eq!(store.len(), 2, "one certificate per DQN layer");
+        // a second space (another job) sharing the store serves the same
+        // lookups from the memo
+        let b = PrunedHwSpace::with_store(
+            Resources::eyeriss_168(),
+            dqn().layers,
+            Arc::clone(&store),
+        );
+        let before = telemetry::snapshot();
+        assert!(b.admits(&hw));
+        let delta = telemetry::snapshot().since(&before);
+        assert!(delta.cert_hits >= 2, "memoized lookups must be counted: {delta:?}");
+        assert_eq!(store.len(), 2, "no recomputation, no new entries");
+        // memoized admission equals a fresh computation
+        let fresh = PrunedHwSpace::new(Resources::eyeriss_168(), dqn().layers);
+        assert_eq!(b.admits(&hw), fresh.admits(&hw));
+        assert_eq!(b.certify(&hw), fresh.certify(&hw));
+    }
+
+    #[test]
+    fn memoized_certificates_preserve_empty_verdicts() {
+        let store = Arc::new(CertificateStore::default());
+        let pruned = PrunedHwSpace::with_store(
+            Resources::eyeriss_168(),
+            dqn().layers,
+            Arc::clone(&store),
+        );
+        let hw = empty_for_dqn_k1();
+        // first consult computes, second serves the memoized proof
+        assert!(!pruned.admits(&hw));
+        assert!(!pruned.admits(&hw));
+        let cert = pruned.certify(&hw);
+        assert_eq!(cert.per_layer[0], SpaceCheck::ProvablyEmpty);
+        assert!(!cert.admits_all());
     }
 
     #[test]

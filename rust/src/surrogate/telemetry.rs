@@ -1,27 +1,113 @@
-//! Process-global surrogate telemetry: monotone counters (like the
-//! evaluation cache's) that record how the GP numerics behaved — full
-//! hyperparameter fits vs data-only refits vs O(n^2) rank-1 extends, jitter
-//! escalations, and fits that failed outright and degraded to the prior.
+//! Surrogate telemetry: monotone counters (like the evaluation cache's)
+//! that record how the GP numerics behaved — full hyperparameter fits vs
+//! data-only refits vs O(n^2) rank-1 extends, jitter escalations, and fits
+//! that failed outright and degraded to the prior.
 //!
-//! Search loops are free functions without a `Metrics` handle, so the
-//! counters live here as statics; `coordinator::metrics` snapshots them at
-//! run boundaries and reports the per-run delta (see
-//! [`SurrogateStats::since`]).
+//! Search loops are free functions without a `Metrics` handle, so recording
+//! goes through this module. Every event lands in up to two scopes:
+//!
+//! * the **process-global default scope** — a static [`Sink`] that
+//!   [`snapshot`] reads, kept so existing call sites, tests, and the
+//!   figure harnesses behave exactly as before, and
+//! * at most one **run scope per thread** — a per-run [`Sink`] installed
+//!   for the duration of a closure by [`with_scope`]. The coordinator's
+//!   `RunScope` installs one on every thread that does work for a run, so
+//!   concurrent jobs in one process read their own per-run deltas instead
+//!   of baseline-diffing the global counters (which would blend).
+//!
+//! Nested [`with_scope`] calls shadow: only the innermost sink (plus the
+//! global) sees events, and the previous scope is restored on exit — also
+//! on unwind.
 #![deny(clippy::style)]
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-static FITS: AtomicU64 = AtomicU64::new(0);
-static DATA_REFITS: AtomicU64 = AtomicU64::new(0);
-static EXTENDS: AtomicU64 = AtomicU64::new(0);
-static EXTEND_FALLBACKS: AtomicU64 = AtomicU64::new(0);
-static FIT_FAILURES: AtomicU64 = AtomicU64::new(0);
-static JITTER_ESCALATIONS: AtomicU64 = AtomicU64::new(0);
-static WARM_REFITS: AtomicU64 = AtomicU64::new(0);
-static WARM_GRID_SAVED: AtomicU64 = AtomicU64::new(0);
+/// Accumulator for one telemetry scope: either the process-global default
+/// or a per-run sink installed via [`with_scope`].
+#[derive(Debug, Default)]
+pub struct Sink {
+    fits: AtomicU64,
+    data_refits: AtomicU64,
+    extends: AtomicU64,
+    extend_fallbacks: AtomicU64,
+    fit_failures: AtomicU64,
+    jitter_escalations: AtomicU64,
+    warm_refits: AtomicU64,
+    warm_grid_saved: AtomicU64,
+}
 
-/// Snapshot of the surrogate counters. All fields are totals since process
-/// start; use [`SurrogateStats::since`] to attribute movement to one run.
+impl Sink {
+    const fn new() -> Self {
+        Sink {
+            fits: AtomicU64::new(0),
+            data_refits: AtomicU64::new(0),
+            extends: AtomicU64::new(0),
+            extend_fallbacks: AtomicU64::new(0),
+            fit_failures: AtomicU64::new(0),
+            jitter_escalations: AtomicU64::new(0),
+            warm_refits: AtomicU64::new(0),
+            warm_grid_saved: AtomicU64::new(0),
+        }
+    }
+
+    /// Read this scope's counters.
+    pub fn snapshot(&self) -> SurrogateStats {
+        SurrogateStats {
+            fits: self.fits.load(Ordering::Relaxed),
+            data_refits: self.data_refits.load(Ordering::Relaxed),
+            extends: self.extends.load(Ordering::Relaxed),
+            extend_fallbacks: self.extend_fallbacks.load(Ordering::Relaxed),
+            fit_failures: self.fit_failures.load(Ordering::Relaxed),
+            jitter_escalations: self.jitter_escalations.load(Ordering::Relaxed),
+            warm_refits: self.warm_refits.load(Ordering::Relaxed),
+            warm_grid_saved: self.warm_grid_saved.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The process-global default scope.
+static GLOBAL: Sink = Sink::new();
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Arc<Sink>>> = const { RefCell::new(None) };
+}
+
+struct ScopeGuard {
+    prev: Option<Arc<Sink>>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        ACTIVE.with(|a| *a.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Install `sink` as the calling thread's run scope for the duration of
+/// `f`: every event recorded by `f` (on this thread) is accumulated into
+/// `sink` in addition to the process-global default scope. The previously
+/// installed scope, if any, is shadowed and restored on exit.
+pub fn with_scope<R>(sink: &Arc<Sink>, f: impl FnOnce() -> R) -> R {
+    let prev = ACTIVE.with(|a| a.borrow_mut().replace(Arc::clone(sink)));
+    let _guard = ScopeGuard { prev };
+    f()
+}
+
+/// Apply one recording to every scope that should observe it.
+fn record(apply: impl Fn(&Sink)) {
+    apply(&GLOBAL);
+    ACTIVE.with(|a| {
+        if let Some(sink) = a.borrow().as_ref() {
+            apply(sink);
+        }
+    });
+}
+
+/// Snapshot of the surrogate counters. Fields read from the global scope
+/// are totals since process start; use [`SurrogateStats::since`] to
+/// attribute movement to one window, or read a run scope's [`Sink`]
+/// directly for an exact per-run view.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SurrogateStats {
     /// Successful full fits with hyperparameter (marginal-likelihood) search.
@@ -63,52 +149,55 @@ impl SurrogateStats {
     }
 }
 
-/// Read all counters.
+/// Read all counters of the process-global default scope.
 pub fn snapshot() -> SurrogateStats {
-    SurrogateStats {
-        fits: FITS.load(Ordering::Relaxed),
-        data_refits: DATA_REFITS.load(Ordering::Relaxed),
-        extends: EXTENDS.load(Ordering::Relaxed),
-        extend_fallbacks: EXTEND_FALLBACKS.load(Ordering::Relaxed),
-        fit_failures: FIT_FAILURES.load(Ordering::Relaxed),
-        jitter_escalations: JITTER_ESCALATIONS.load(Ordering::Relaxed),
-        warm_refits: WARM_REFITS.load(Ordering::Relaxed),
-        warm_grid_saved: WARM_GRID_SAVED.load(Ordering::Relaxed),
-    }
+    GLOBAL.snapshot()
 }
 
 /// A full fit with hyperparameter search succeeded.
 pub fn record_fit(escalations: u32) {
-    FITS.fetch_add(1, Ordering::Relaxed);
-    JITTER_ESCALATIONS.fetch_add(u64::from(escalations), Ordering::Relaxed);
+    record(|s| {
+        s.fits.fetch_add(1, Ordering::Relaxed);
+        s.jitter_escalations.fetch_add(u64::from(escalations), Ordering::Relaxed);
+    });
 }
 
 /// A full data-only refit succeeded.
 pub fn record_data_refit(escalations: u32) {
-    DATA_REFITS.fetch_add(1, Ordering::Relaxed);
-    JITTER_ESCALATIONS.fetch_add(u64::from(escalations), Ordering::Relaxed);
+    record(|s| {
+        s.data_refits.fetch_add(1, Ordering::Relaxed);
+        s.jitter_escalations.fetch_add(u64::from(escalations), Ordering::Relaxed);
+    });
 }
 
 /// A rank-1 extend absorbed a new observation.
 pub fn record_extend() {
-    EXTENDS.fetch_add(1, Ordering::Relaxed);
+    record(|s| {
+        s.extends.fetch_add(1, Ordering::Relaxed);
+    });
 }
 
 /// A rank-1 extend failed and the surrogate fell back to a full refit.
 pub fn record_extend_fallback() {
-    EXTEND_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+    record(|s| {
+        s.extend_fallbacks.fetch_add(1, Ordering::Relaxed);
+    });
 }
 
 /// A fit failed at maximum jitter; predictions degrade to the prior.
 pub fn record_fit_failure() {
-    FIT_FAILURES.fetch_add(1, Ordering::Relaxed);
+    record(|s| {
+        s.fit_failures.fetch_add(1, Ordering::Relaxed);
+    });
 }
 
 /// A scheduled refit warm-started from the previous theta with a shrunk
 /// local grid, avoiding `saved` full-grid NLL evaluations.
 pub fn record_warm_refit(saved: u64) {
-    WARM_REFITS.fetch_add(1, Ordering::Relaxed);
-    WARM_GRID_SAVED.fetch_add(saved, Ordering::Relaxed);
+    record(|s| {
+        s.warm_refits.fetch_add(1, Ordering::Relaxed);
+        s.warm_grid_saved.fetch_add(saved, Ordering::Relaxed);
+    });
 }
 
 #[cfg(test)]
@@ -143,5 +232,49 @@ mod tests {
         let b = SurrogateStats { fits: 9, ..SurrogateStats::default() };
         assert_eq!(b.since(&a).fits, 4);
         assert_eq!(a.since(&b).fits, 0);
+    }
+
+    #[test]
+    fn scoped_recording_lands_in_the_sink_and_the_global_view() {
+        let sink = Arc::new(Sink::default());
+        let before = snapshot();
+        with_scope(&sink, || {
+            record_fit(2);
+            record_extend();
+        });
+        record_fit_failure(); // outside the scope: global only
+        let scoped = sink.snapshot();
+        assert_eq!(scoped.fits, 1);
+        assert_eq!(scoped.jitter_escalations, 2);
+        assert_eq!(scoped.extends, 1);
+        assert_eq!(scoped.fit_failures, 0, "unscoped events must not leak into the sink");
+        let delta = snapshot().since(&before);
+        assert!(delta.fits >= 1 && delta.extends >= 1 && delta.fit_failures >= 1);
+    }
+
+    #[test]
+    fn scopes_nest_by_shadowing_and_restore_on_exit() {
+        let outer = Arc::new(Sink::default());
+        let inner = Arc::new(Sink::default());
+        with_scope(&outer, || {
+            record_extend();
+            with_scope(&inner, record_extend);
+            record_extend();
+        });
+        assert_eq!(outer.snapshot().extends, 2);
+        assert_eq!(inner.snapshot().extends, 1);
+    }
+
+    #[test]
+    fn scopes_are_per_thread() {
+        let sink = Arc::new(Sink::default());
+        with_scope(&sink, || {
+            record_extend();
+            // a thread that never installed the scope records globally only
+            std::thread::scope(|s| {
+                s.spawn(record_extend);
+            });
+        });
+        assert_eq!(sink.snapshot().extends, 1);
     }
 }

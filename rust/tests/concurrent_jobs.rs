@@ -1,0 +1,211 @@
+//! Concurrency regression suite (ISSUE 7): fixed-seed co-design jobs
+//! scheduled concurrently over one `JobScheduler` must be
+//! indistinguishable — bit for bit — from the same jobs run sequentially
+//! or on a fresh scheduler. The shared evaluation cache and
+//! prune-certificate store memoize *pure* functions of their keys, so
+//! cross-job sharing may only ever change how fast an answer arrives,
+//! never the answer; this suite pins that contract, plus the scope-based
+//! telemetry separation (each run reports exactly its own surrogate /
+//! feasibility / delta counters, with no cross-talk from a concurrent
+//! tenant) and the cancellation contract (a cancelled job returns an
+//! explicit cancelled outcome and leaves the shared state fully usable).
+
+use std::sync::atomic::Ordering;
+use std::thread;
+use std::time::Duration;
+
+use codesign::coordinator::driver::CodesignOutcome;
+use codesign::coordinator::metrics::Metrics;
+use codesign::coordinator::run::{JobSpec, RunPhase};
+use codesign::opt::config::{BoConfig, NestedConfig};
+use codesign::opt::hw_search::HwTrace;
+use codesign::runtime::jobs::JobScheduler;
+use codesign::surrogate::gp::GpBackend;
+use codesign::workloads::specs::{dqn, mlp, ModelSpec};
+
+fn tiny() -> NestedConfig {
+    NestedConfig {
+        hw_trials: 3,
+        sw_trials: 8,
+        hw_bo: BoConfig { warmup: 2, pool: 6, ..BoConfig::hardware() },
+        sw_bo: BoConfig { warmup: 3, pool: 6, ..BoConfig::software() },
+    }
+}
+
+fn spec(model: ModelSpec, seed: u64) -> JobSpec {
+    let mut spec = JobSpec::new(model, tiny(), seed);
+    spec.threads = 2;
+    spec
+}
+
+fn assert_same_trace(tag: &str, a: &HwTrace, b: &HwTrace) {
+    assert_eq!(a.evals.len(), b.evals.len(), "{tag}: trial counts differ");
+    for (i, (x, y)) in a.evals.iter().zip(b.evals.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: hw trial {i} differs");
+    }
+    assert_eq!(a.configs, b.configs, "{tag}: evaluated configs differ");
+    assert_eq!(
+        a.best_edp.to_bits(),
+        b.best_edp.to_bits(),
+        "{tag}: best EDP not bit-identical"
+    );
+}
+
+/// The per-run scoped telemetry a job's `Metrics` carries: everything the
+/// run's `RunScope` isolates, plus the trace/persistence counters the run
+/// records directly. Shared-cache stats are deliberately absent — the
+/// cache is one process-wide structure, so its occupancy at snapshot time
+/// legitimately depends on which tenants ran alongside.
+fn scoped_telemetry(m: &Metrics) -> Vec<(&'static str, u64)> {
+    let r = Ordering::Relaxed;
+    vec![
+        ("sim_evals", m.sim_evals.load(r)),
+        ("raw_draws", m.raw_draws.load(r)),
+        ("feasible_evals", m.feasible_evals.load(r)),
+        ("gp_fits", m.gp_fits.load(r)),
+        ("gp_data_refits", m.gp_data_refits.load(r)),
+        ("gp_extends", m.gp_extends.load(r)),
+        ("gp_extend_fallbacks", m.gp_extend_fallbacks.load(r)),
+        ("gp_fit_failures", m.gp_fit_failures.load(r)),
+        ("gp_jitter_escalations", m.gp_jitter_escalations.load(r)),
+        ("gp_warm_refits", m.gp_warm_refits.load(r)),
+        ("gp_warm_grid_saved", m.gp_warm_grid_saved.load(r)),
+        ("feas_constructed", m.feas_constructed.load(r)),
+        ("feas_perturbations", m.feas_perturbations.load(r)),
+        ("feas_perturbation_fallbacks", m.feas_perturbation_fallbacks.load(r)),
+        ("feas_projections", m.feas_projections.load(r)),
+        ("feas_projection_failures", m.feas_projection_failures.load(r)),
+        ("feas_fallback_samples", m.feas_fallback_samples.load(r)),
+        ("feas_fallback_draws", m.feas_fallback_draws.load(r)),
+        ("feas_infeasible_spaces", m.feas_infeasible_spaces.load(r)),
+        ("feas_degraded_skips", m.feas_degraded_skips.load(r)),
+        ("prune_certificates", m.prune_certificates.load(r)),
+        ("prune_rejections", m.prune_rejections.load(r)),
+        ("prune_cert_hits", m.prune_cert_hits.load(r)),
+        ("prune_cert_misses", m.prune_cert_misses.load(r)),
+        ("prune_lattice_boxes", m.prune_lattice_boxes.load(r)),
+        ("prune_box_shrink_milli", m.prune_box_shrink_milli.load(r)),
+        ("delta_evals", m.delta_evals.load(r)),
+        ("delta_fallbacks", m.delta_fallbacks.load(r)),
+        ("delta_levels_recomputed", m.delta_levels_recomputed.load(r)),
+        ("checkpoint_save_failures", m.checkpoint_save_failures.load(r)),
+        ("snapshot_io_failures", m.snapshot_io_failures.load(r)),
+    ]
+}
+
+fn assert_same_outcome(tag: &str, a: &CodesignOutcome, b: &CodesignOutcome) {
+    assert_same_trace(tag, &a.hw_trace, &b.hw_trace);
+    assert_eq!(a.best, b.best, "{tag}: incumbent designs differ");
+    assert_eq!(a.cancelled, b.cancelled, "{tag}: cancellation flags differ");
+}
+
+/// Two different-model jobs (disjoint cache and certificate keys, so even
+/// the per-run counters are interference-free) run concurrently on one
+/// scheduler vs sequentially on another: traces, incumbents and the full
+/// per-run telemetry vector must match bit for bit.
+#[test]
+fn concurrent_jobs_match_sequential_runs_bit_for_bit() {
+    let sequential = JobScheduler::new(GpBackend::Native);
+    let seq_dqn = sequential.submit(spec(dqn(), 7)).wait();
+    let seq_mlp = sequential.submit(spec(mlp(), 9)).wait();
+
+    let concurrent = JobScheduler::new(GpBackend::Native);
+    let h_dqn = concurrent.submit(spec(dqn(), 7));
+    let h_mlp = concurrent.submit(spec(mlp(), 9));
+    let con_dqn = h_dqn.wait();
+    let con_mlp = h_mlp.wait();
+
+    assert_same_outcome("dqn", &seq_dqn, &con_dqn);
+    assert_same_outcome("mlp", &seq_mlp, &con_mlp);
+    assert!(seq_dqn.best.is_some(), "dqn must find a feasible design");
+    assert!(seq_mlp.best.is_some(), "mlp must find a feasible design");
+
+    // scope-based separation: each run's metrics carry exactly its own
+    // counters, so a concurrent neighbor changes nothing
+    assert_eq!(
+        scoped_telemetry(&seq_dqn.metrics),
+        scoped_telemetry(&con_dqn.metrics),
+        "dqn per-run telemetry leaked across jobs"
+    );
+    assert_eq!(
+        scoped_telemetry(&seq_mlp.metrics),
+        scoped_telemetry(&con_mlp.metrics),
+        "mlp per-run telemetry leaked across jobs"
+    );
+    // and the two models' counter vectors are genuinely different streams,
+    // so the equality above is not vacuous
+    assert_ne!(
+        scoped_telemetry(&con_dqn.metrics),
+        scoped_telemetry(&con_mlp.metrics),
+        "two different jobs reported identical telemetry — scoping is suspect"
+    );
+}
+
+/// Two *identical* jobs racing on one scheduler overlap completely in the
+/// shared cache; both must still reproduce a fresh-scheduler reference
+/// exactly, and the overlap must be visible as shared-cache traffic.
+#[test]
+fn identical_concurrent_jobs_share_the_cache_without_perturbing_results() {
+    let sched = JobScheduler::new(GpBackend::Native);
+    let a = sched.submit(spec(dqn(), 11));
+    let b = sched.submit(spec(dqn(), 11));
+    let out_a = a.wait();
+    let out_b = b.wait();
+
+    let reference = JobScheduler::new(GpBackend::Native).submit(spec(dqn(), 11)).wait();
+    assert_same_outcome("racer-a", &reference, &out_a);
+    assert_same_outcome("racer-b", &reference, &out_b);
+    assert!(
+        sched.cache().stats().hits > 0,
+        "overlapping jobs must serve each other from the shared cache"
+    );
+    assert!(!sched.certificate_store().is_empty());
+}
+
+/// Cancellation: a queued job never runs, a mid-run job stops at a batch
+/// boundary, and either way the scheduler's shared state stays fully
+/// usable — a follow-up job reproduces a fresh scheduler bit for bit.
+#[test]
+fn cancellation_leaves_the_shared_state_usable() {
+    let sched = JobScheduler::with_capacity(GpBackend::Native, 1);
+    let running = sched.submit(spec(dqn(), 13));
+    while running.progress().phase == RunPhase::Pending {
+        thread::sleep(Duration::from_millis(1));
+    }
+
+    // cancelled while queued: an explicitly cancelled, empty outcome
+    let queued = sched.submit(spec(dqn(), 13));
+    queued.cancel();
+    let out = queued.wait();
+    assert!(out.cancelled, "a queued-then-cancelled job must report cancellation");
+    assert!(out.best.is_none());
+    assert!(out.hw_trace.evals.is_empty());
+    let out = running.wait();
+    assert!(!out.cancelled, "the slot holder must be unaffected by its neighbor");
+    assert_eq!(out.hw_trace.evals.len(), 3);
+
+    // cancelled mid-run: the job still delivers a (possibly partial)
+    // outcome instead of hanging or panicking
+    let midway = sched.submit(spec(dqn(), 14));
+    loop {
+        let phase = midway.progress().phase;
+        if phase == RunPhase::Searching || phase.is_terminal() {
+            break;
+        }
+        thread::sleep(Duration::from_millis(1));
+    }
+    midway.cancel();
+    let out = midway.wait();
+    assert!(out.hw_trace.evals.len() <= 3, "a cancelled run must never over-run its budget");
+
+    // the shared cache/certificate store survived both cancellations:
+    // a follow-up job matches a fresh scheduler exactly
+    let warm = sched.submit(spec(mlp(), 21)).wait();
+    let fresh = JobScheduler::new(GpBackend::Native).submit(spec(mlp(), 21)).wait();
+    assert_same_outcome("post-cancel", &fresh, &warm);
+    assert_eq!(
+        scoped_telemetry(&fresh.metrics),
+        scoped_telemetry(&warm.metrics),
+        "post-cancellation telemetry drifted from a fresh scheduler"
+    );
+}

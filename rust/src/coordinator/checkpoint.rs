@@ -3,7 +3,6 @@
 //! file after every hardware trial, so long co-design runs survive
 //! interruption and the winning design can be inspected/reloaded (no serde
 //! in the offline crate set — the format is a flat dotted-key list).
-#![deny(clippy::style)]
 
 use std::collections::HashMap;
 use std::path::Path;

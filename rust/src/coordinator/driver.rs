@@ -18,7 +18,6 @@
 //! subcommand). Fixed-seed traces are bit-identical to the pre-refactor
 //! driver: scheduling one job executes exactly the former `Driver::run`
 //! body.
-#![deny(clippy::style)]
 
 use std::path::PathBuf;
 use std::sync::Arc;

@@ -2,7 +2,6 @@
 //! evaluations, rejection-sampling draws, feasibility rates, wall time,
 //! evaluation-cache hit/miss/eviction counts from `model::cache`).
 //! Reported at the end of every CLI run and recorded in EXPERIMENTS.md.
-#![deny(clippy::style)]
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -142,6 +141,7 @@ impl Metrics {
             cache_snapshot_hits: AtomicU64::new(0),
             checkpoint_save_failures: AtomicU64::new(0),
             snapshot_io_failures: AtomicU64::new(0),
+            // lint: allow(determinism) — wall-clock feeds the human-readable report only
             start: Instant::now(),
         })
     }

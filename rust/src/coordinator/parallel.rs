@@ -1,7 +1,6 @@
 //! Scoped-thread parallel map (the offline crate set has no tokio/rayon).
 //! Used by the co-design driver to run per-layer software searches
 //! concurrently, and by the figure harnesses for repeats.
-#![deny(clippy::style)]
 
 /// Apply `f` to each item on its own thread (bounded by `max_threads`) and
 /// collect results in input order.
@@ -16,15 +15,12 @@ where
         return Vec::new();
     }
     let threads = max_threads.max(1).min(n);
-    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
 
     if threads == 1 {
-        for (i, item) in items.iter().enumerate() {
-            out[i] = Some(f(i, item));
-        }
-        return out.into_iter().map(|r| r.unwrap()).collect();
+        return items.iter().enumerate().map(|(i, item)| f(i, item)).collect();
     }
 
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let next = std::sync::atomic::AtomicUsize::new(0);
     let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
         out.iter_mut().map(std::sync::Mutex::new).collect();
@@ -37,11 +33,12 @@ where
                     break;
                 }
                 let r = f(i, &items[i]);
-                **slots[i].lock().unwrap() = Some(r);
+                **crate::util::sync::lock_unpoisoned(&slots[i]) = Some(r);
             });
         }
     });
 
+    // lint: allow(panic-freedom) — every index < n is claimed exactly once by the slot counter
     out.into_iter().map(|r| r.expect("worker must fill every slot")).collect()
 }
 
@@ -64,14 +61,14 @@ mod tests {
 
     #[test]
     fn single_thread_path() {
-        let items = vec![1, 2, 3];
+        let items = [1, 2, 3];
         let out = parallel_map(&items, 1, |i, &x| i as i32 + x);
         assert_eq!(out, vec![1, 3, 5]);
     }
 
     #[test]
     fn empty_input() {
-        let items: Vec<u8> = vec![];
+        let items: [u8; 0] = [];
         let out: Vec<u8> = parallel_map(&items, 4, |_, &x| x);
         assert!(out.is_empty());
     }

@@ -25,11 +25,10 @@
 //! one job, wait). Sharing the evaluation cache and certificate store
 //! across concurrent runs cannot move traces either: both memoize pure
 //! functions, so a hit returns exactly the bits a fresh computation would.
-#![deny(clippy::style)]
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::driver::{CodesignOutcome, LayerOutcome};
@@ -49,6 +48,7 @@ use crate::space::sw_space::SwSpace;
 use crate::surrogate::gp::GpBackend;
 use crate::surrogate::telemetry as gp_telemetry;
 use crate::util::rng::Rng;
+use crate::util::sync::lock_unpoisoned;
 use crate::workloads::eyeriss::eyeriss_resources;
 use crate::workloads::specs::ModelSpec;
 
@@ -468,7 +468,7 @@ impl SearchRun {
                         let t = base + k;
                         status.add_trials(1);
                         if let Some((edp, layers)) = &out {
-                            let mut guard = best.lock().unwrap();
+                            let mut guard = lock_unpoisoned(&best);
                             let improved = guard.as_ref().is_none_or(|b| *edp < b.best_edp);
                             if improved {
                                 let ck = Checkpoint {
@@ -540,7 +540,8 @@ impl SearchRun {
         scope.record_into(&metrics);
         let cancelled = status.is_cancelled();
         status.set_phase(if cancelled { RunPhase::Cancelled } else { RunPhase::Finished });
-        CodesignOutcome { hw_trace, best: best.into_inner().unwrap(), metrics, cancelled }
+        let best = best.into_inner().unwrap_or_else(PoisonError::into_inner);
+        CodesignOutcome { hw_trace, best, metrics, cancelled }
     }
 }
 

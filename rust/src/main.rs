@@ -176,6 +176,7 @@ fn cmd_sw_opt(args: &Args) -> Result<()> {
     let trials = args.get("trials", 250usize)?;
     let problem = fig3::problem_for(&layer);
     let mut rng = Rng::seed_from_u64(args.get("seed", 0u64)?);
+    // lint: allow(determinism) — CLI wall-clock for the progress line only
     let t0 = std::time::Instant::now();
     let trace = search(method, &problem, trials, &BoConfig::software(), &backend, &mut rng);
     println!(
@@ -290,11 +291,10 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     let _ = std::fs::create_dir_all(&out_dir);
 
     println!(
-        "scheduling {} co-design jobs ({} hw x {} sw trials each, {} threads/job, {})",
+        "scheduling {} co-design jobs ({} hw x {} sw trials each, {threads} threads/job, {})",
         names.len(),
         ncfg.hw_trials,
         ncfg.sw_trials,
-        threads,
         if max_jobs == 0 { "unbounded".to_string() } else { format!("<= {max_jobs} at once") }
     );
 

@@ -233,6 +233,7 @@ impl BatchEvaluator {
         if let Some(outcome) = self.cache.get(&key) {
             return outcome;
         }
+        // lint: allow(determinism) — latency EWMA feeds chunk sizing only, never search decisions
         let started = Instant::now();
         let outcome = self.eval.evaluate(layer, hw, m);
         self.cache.observe_latency(started.elapsed().as_secs_f64());
@@ -314,6 +315,7 @@ impl BatchEvaluator {
                 Some(per_eval) => unique_rep.len() as f64 * per_eval >= MIN_PARALLEL_SECS,
                 None => unique_rep.len() >= self.parallel_threshold,
             };
+        // lint: allow(determinism) — latency EWMA feeds chunk sizing only, never search decisions
         let compute_started = Instant::now();
         let computed: Vec<EvalOutcome> = if !go_parallel {
             unique_rep
@@ -349,6 +351,7 @@ impl BatchEvaluator {
         for (i, slot) in assign {
             out[i] = Some(computed[slot].clone());
         }
+        // lint: allow(panic-freedom) — structural invariant: `assign` covers every request index
         out.into_iter().map(|o| o.expect("every request resolved")).collect()
     }
 

@@ -60,6 +60,7 @@ use super::eval::Infeasible;
 use super::mapping::Mapping;
 use super::validity::SwViolation;
 use super::workload::{Dim, Layer, DIMS};
+use crate::util::sync::lock_unpoisoned;
 
 /// Outcome of one evaluation, exactly as `Evaluator::evaluate` returns it.
 pub type EvalOutcome = Result<Metrics, Infeasible>;
@@ -317,7 +318,9 @@ impl Shard {
             return false;
         };
         let stamp = self.next_stamp();
-        let e = self.map.get_mut(&key).expect("pop_lru returned a resident key");
+        let Some(e) = self.map.get_mut(&key) else {
+            return false;
+        };
         e.seg = Segment::Probationary;
         e.stamp = stamp;
         self.prot_len -= 1;
@@ -422,7 +425,7 @@ impl EvalCache {
     /// LRU a hit touches the entry's recency and promotes probationary
     /// entries to the protected segment.
     pub fn get(&self, key: &DesignKey) -> Option<EvalOutcome> {
-        let mut shard = self.shards[key.shard_of(self.shards.len())].lock().unwrap();
+        let mut shard = lock_unpoisoned(&self.shards[key.shard_of(self.shards.len())]);
         let Some(e) = shard.map.get(key) else {
             self.misses.fetch_add(1, Ordering::Relaxed);
             return None;
@@ -436,7 +439,9 @@ impl EvalCache {
         }
         if self.policy == CachePolicy::SegmentedLru {
             let stamp = shard.next_stamp();
-            let e = shard.map.get_mut(key).expect("entry just read");
+            let Some(e) = shard.map.get_mut(key) else {
+                return Some(outcome);
+            };
             e.seg = Segment::Protected;
             e.stamp = stamp;
             shard.prot.push_back((stamp, key.clone()));
@@ -464,7 +469,7 @@ impl EvalCache {
     }
 
     fn insert_marked(&self, key: DesignKey, outcome: EvalOutcome, from_snapshot: bool) {
-        let mut shard = self.shards[key.shard_of(self.shards.len())].lock().unwrap();
+        let mut shard = lock_unpoisoned(&self.shards[key.shard_of(self.shards.len())]);
         if let Some(e) = shard.map.get_mut(&key) {
             e.outcome = outcome;
             return;
@@ -533,7 +538,7 @@ impl EvalCache {
 
     /// Number of resident entries across all shards.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+        self.shards.iter().map(|s| lock_unpoisoned(s).map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -543,7 +548,7 @@ impl EvalCache {
     /// Drop every entry (counters are preserved).
     pub fn clear(&self) {
         for s in &self.shards {
-            let mut s = s.lock().unwrap();
+            let mut s = lock_unpoisoned(s);
             s.map.clear();
             s.prob.clear();
             s.prot.clear();
@@ -558,7 +563,7 @@ impl EvalCache {
         let mut probationary = 0u64;
         let mut protected = 0u64;
         for s in &self.shards {
-            let s = s.lock().unwrap();
+            let s = lock_unpoisoned(s);
             entries += s.map.len() as u64;
             probationary += s.prob_len as u64;
             protected += s.prot_len as u64;
@@ -586,7 +591,7 @@ impl EvalCache {
     pub fn save_snapshot(&self, path: &Path, fingerprint: u64) -> Result<usize> {
         let mut lines: Vec<String> = Vec::new();
         for s in &self.shards {
-            let s = s.lock().unwrap();
+            let s = lock_unpoisoned(s);
             for (key, entry) in &s.map {
                 if key.evaluator == fingerprint {
                     lines.push(format!("e {} {}", key.encode(), encode_outcome(&entry.outcome)));

@@ -37,7 +37,6 @@
 //! [`Infeasible`] value the full path would. Anything not one delta step
 //! from the base (or evaluated with no base) falls back to the full path and
 //! is counted in [`telemetry`].
-#![deny(clippy::style)]
 
 use super::arch::{DataflowOpt, HwConfig};
 use super::energy::{effective_glb_capacity, metrics_with, Metrics};
@@ -277,17 +276,16 @@ impl<'a> DeltaEvaluator<'a> {
         cand: &Mapping,
         delta: MappingDelta,
     ) -> Result<Metrics, Infeasible> {
-        if self.base.is_none() {
+        let Some(base) = self.base.as_ref() else {
             telemetry::record_fallback();
             return self.full(cand);
-        }
+        };
         // The hardware verdict is mapping-independent: replay it first, as
         // the full path does.
         self.inv.hw_check?;
         match delta {
             MappingDelta::Identity => {
                 telemetry::record_delta_eval(0);
-                let base = self.base.as_ref().unwrap();
                 let metrics = match &base.metrics {
                     Some(m) => m.clone(),
                     None => self.rollup(&base.terms),
@@ -321,32 +319,29 @@ impl<'a> DeltaEvaluator<'a> {
     /// recomputation as the evaluating path; counted in telemetry.
     pub fn terms_for(&mut self, cand: &Mapping) -> NestTerms {
         let delta = self.base.as_ref().and_then(|b| MappingDelta::diff(&b.mapping, cand));
-        let terms = match delta {
-            Some(MappingDelta::Identity) | Some(MappingDelta::OrderSwap(Level::Local)) => {
+        let terms = match (self.base.as_ref(), delta) {
+            (Some(base), Some(MappingDelta::Identity | MappingDelta::OrderSwap(Level::Local))) => {
                 telemetry::record_delta_eval(0);
-                self.base.as_ref().unwrap().terms.clone()
+                base.terms.clone()
             }
-            Some(MappingDelta::OrderSwap(Level::Glb)) => {
-                let mut terms = self.base.as_ref().unwrap().terms.clone();
+            (Some(base), Some(MappingDelta::OrderSwap(Level::Glb))) => {
+                let mut terms = base.terms.clone();
                 recompute_walks_a(&mut terms, &above_local_arr(cand));
                 telemetry::record_delta_eval(1);
                 terms
             }
-            Some(MappingDelta::OrderSwap(Level::Dram)) => {
-                let mut terms = self.base.as_ref().unwrap().terms.clone();
+            (Some(base), Some(MappingDelta::OrderSwap(Level::Dram))) => {
+                let mut terms = base.terms.clone();
                 recompute_walks_a(&mut terms, &above_local_arr(cand));
                 recompute_walks_b(&mut terms, &above_glb_arr(cand));
                 telemetry::record_delta_eval(2);
                 terms
             }
-            Some(MappingDelta::Resplit(d)) => {
-                telemetry::record_delta_eval(resplit_levels(
-                    self.base.as_ref().unwrap().mapping.split(d),
-                    cand.split(d),
-                ));
+            (Some(base), Some(MappingDelta::Resplit(d))) => {
+                telemetry::record_delta_eval(resplit_levels(base.mapping.split(d), cand.split(d)));
                 self.resplit_terms(cand, d)
             }
-            None => {
+            _ => {
                 telemetry::record_fallback();
                 nest::terms(self.layer, self.hw, cand)
             }
@@ -404,7 +399,10 @@ impl<'a> DeltaEvaluator<'a> {
         if !is_permutation(cand.order(level)) {
             return Err(Infeasible::Software(SwViolation::OrderNotPermutation));
         }
-        let base = self.base.as_ref().unwrap();
+        let Some(base) = self.base.as_ref() else {
+            telemetry::record_fallback();
+            return self.full(cand);
+        };
         let (levels, terms) = match level {
             // analyze() never reads the local order: the base terms are the
             // candidate's terms, bit for bit.
@@ -435,15 +433,20 @@ impl<'a> DeltaEvaluator<'a> {
     /// the checks a one-dim split change can flip, then rebuilds only the
     /// affected dataspace terms.
     fn delta_resplit(&mut self, cand: &Mapping, d: Dim) -> Result<Metrics, Infeasible> {
+        let Some(base) = self.base.as_ref() else {
+            telemetry::record_fallback();
+            return self.full(cand);
+        };
+        let base_split = *base.mapping.split(d);
         // (1) Factor products: every other dim's split is the base's, which
         // passed — the first violation check_mapping could hit is d's.
         if cand.split(d).product() != self.layer.size(d) {
             return Err(Infeasible::Software(SwViolation::FactorProduct(d)));
         }
         // (2) Orders are unchanged permutations. (3) Dataflow pinning reads
-        // only the local factors of R and S.
-        if matches!(d, Dim::R | Dim::S) {
-            let opt = self.hw.dataflow_for(d).unwrap();
+        // only the local factors of R and S — `dataflow_for` is `Some`
+        // exactly for those dims.
+        if let Some(opt) = self.hw.dataflow_for(d) {
             let loc = cand.split(d).local;
             let ok = match opt {
                 DataflowOpt::FullAtPe => loc == self.layer.size(d),
@@ -484,7 +487,6 @@ impl<'a> DeltaEvaluator<'a> {
         if glb_used > effective_glb_capacity(self.hw, &self.eval.resources) {
             return Err(Infeasible::Software(SwViolation::GlbCapacity));
         }
-        let base_split = *self.base.as_ref().unwrap().mapping.split(d);
         telemetry::record_delta_eval(resplit_levels(&base_split, cand.split(d)));
         let metrics = self.rollup(&terms);
         self.last = Some(BaseState {
@@ -500,7 +502,10 @@ impl<'a> DeltaEvaluator<'a> {
     /// (relevant dims, plus Outputs for reduction dims whose loops drive
     /// psum revisits).
     fn resplit_terms(&self, cand: &Mapping, d: Dim) -> NestTerms {
-        let base = self.base.as_ref().unwrap();
+        let Some(base) = self.base.as_ref() else {
+            telemetry::record_fallback();
+            return nest::terms(self.layer, self.hw, cand);
+        };
         let t = nest::tiles(self.layer, cand);
         let stride = self.layer.stride;
         let mut per_ds = base.terms.per_ds;

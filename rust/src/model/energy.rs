@@ -19,7 +19,6 @@
 //! mapping-independent constants ([`EnergyInvariants`]) precomputed — the
 //! hook the batched and delta evaluators use to pay the constant derivation
 //! once per (hardware, batch) instead of once per candidate, bit-exactly.
-#![deny(clippy::style)]
 
 use super::arch::{HwConfig, Resources};
 use super::nest::{ds_index, Traffic};

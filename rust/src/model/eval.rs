@@ -8,7 +8,6 @@
 //! check and the energy constants are paid once per group instead of once
 //! per candidate, with bit-identical results (same checks, same arithmetic
 //! order; see [`crate::model::energy::EnergyInvariants`]).
-#![deny(clippy::style)]
 
 use super::arch::{HwConfig, HwViolation, Resources};
 use super::energy::{metrics_with, EnergyInvariants, EnergyModel, Metrics};

@@ -29,7 +29,6 @@
 //! recomputes that subset and re-runs `assemble` — bit-identical to a fresh
 //! `analyze` because both paths execute the same arithmetic on the same
 //! values in the same order.
-#![deny(clippy::style)]
 
 use super::arch::HwConfig;
 use super::mapping::{Level, Mapping};

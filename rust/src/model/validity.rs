@@ -60,7 +60,9 @@ pub fn check_mapping(
     // Dataflow coupling (H11/H12): the PE either holds the full filter axis
     // or streams it one element at a time.
     for d in [Dim::R, Dim::S] {
-        let opt = hw.dataflow_for(d).unwrap();
+        let Some(opt) = hw.dataflow_for(d) else {
+            continue;
+        };
         let loc = m.split(d).local;
         let ok = match opt {
             DataflowOpt::FullAtPe => loc == layer.size(d),

@@ -101,6 +101,8 @@ pub struct Layer {
 }
 
 impl Layer {
+    // one scalar per conv dimension — a params struct would just rename them
+    #[allow(clippy::too_many_arguments)]
     pub fn conv(name: &str, r: u64, s: u64, p: u64, q: u64, c: u64, k: u64, stride: u64) -> Self {
         assert!(r > 0 && s > 0 && p > 0 && q > 0 && c > 0 && k > 0 && stride > 0);
         Layer { name: name.to_string(), r, s, p, q, c, k, stride }

@@ -8,7 +8,6 @@
 //! step), so phase 2 runs through [`DeltaEvaluator`]: the incumbent's nest
 //! terms are cached and each candidate recomputes only the levels its move
 //! touches — bit-identical EDPs to the full path (see `model/README.md`).
-#![deny(clippy::style)]
 
 use crate::model::DeltaEvaluator;
 use crate::opt::sw_search::{SearchTrace, SwProblem};

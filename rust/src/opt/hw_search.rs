@@ -10,7 +10,6 @@
 //! constraint, §3.4), and the objective GP uses the linear+noise kernel on
 //! the Fig. 13 hardware features (noise because the inner software search
 //! is stochastic).
-#![deny(clippy::style)]
 
 use crate::model::arch::HwConfig;
 use crate::model::batch::AdaptiveChunker;
@@ -262,7 +261,11 @@ pub fn search(
                         .collect();
                     pool[argmax(&u).unwrap_or(0)].clone()
                 }
-                None => pool.into_iter().next().unwrap(),
+                None => match pool.into_iter().next() {
+                    Some(h) => h,
+                    // empty only when cfg.pool == 0: degrade to a fresh draw
+                    None => space.sample_valid(rng).0,
+                },
             }
         };
 

@@ -28,7 +28,6 @@
 //! lattices cannot reach, and every evaluation is feasible by construction
 //! on constructive spaces. `lattice_box: false` keeps the PR-4 behavior for
 //! the Fig. 3 baseline.
-#![deny(clippy::style)]
 
 use crate::model::mapping::{Mapping, Split};
 use crate::model::workload::{Dim, DIMS};
@@ -373,7 +372,11 @@ pub fn search(
             if obs.len() < 2 {
                 // nothing grounded to model yet (e.g. an all-invalid warmup
                 // whose points are still deferred): explore randomly
-                cands.into_iter().next().unwrap()
+                match cands.into_iter().next() {
+                    Some(c) => c,
+                    // empty only when cfg.pool == 0: degrade to a fresh point
+                    None => (0..BOX_DIM).map(|_| rng.f64()).collect(),
+                }
             } else {
                 // marginal-likelihood refit on the same schedule as the main
                 // BO; in between, the append-only observation log is
@@ -392,7 +395,11 @@ pub fn search(
                             .collect();
                         cands[argmax(&u).unwrap_or(0)].clone()
                     }
-                    Err(_) => cands.into_iter().next().unwrap(),
+                    Err(_) => match cands.into_iter().next() {
+                        Some(c) => c,
+                        // empty only when cfg.pool == 0: degrade as above
+                        None => (0..BOX_DIM).map(|_| rng.f64()).collect(),
+                    },
                 }
             }
         };

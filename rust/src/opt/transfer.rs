@@ -10,7 +10,6 @@
 //! *target* model's pruned space (`space::prune::PrunedHwSpace`), so
 //! configurations whose mapping space is provably empty for a target layer
 //! never spend a transfer trial.
-#![deny(clippy::style)]
 
 use crate::model::arch::HwConfig;
 use crate::opt::config::BoConfig;
@@ -133,7 +132,11 @@ pub fn search_with_prior(
                         .collect();
                     pool[argmax(&u).unwrap_or(0)].clone()
                 }
-                None => pool.into_iter().next().unwrap(),
+                None => match pool.into_iter().next() {
+                    Some(h) => h,
+                    // empty only when cfg.pool == 0: degrade to a fresh draw
+                    None => space.sample_valid(rng).0,
+                },
             }
         };
 

@@ -11,7 +11,6 @@
 //! terms are derived incrementally from the walker's incumbent and fed to
 //! [`sw_features_from_terms`] — bit-identical features to the full
 //! `sw_features` recomputation (see `model/README.md`).
-#![deny(clippy::style)]
 
 use crate::model::mapping::Mapping;
 use crate::model::DeltaEvaluator;

@@ -22,7 +22,6 @@
 //! its [`RunScope`](crate::coordinator::run::RunScope) on every thread
 //! that works for it, so concurrent jobs report exact per-run surrogate /
 //! feasibility / delta deltas with no cross-talk.
-#![deny(clippy::style)]
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -34,6 +33,7 @@ use crate::coordinator::run::{JobSpec, RunPhase, RunStatus, SearchRun};
 use crate::model::cache::EvalCache;
 use crate::space::prune::CertificateStore;
 use crate::surrogate::gp::GpBackend;
+use crate::util::sync::lock_unpoisoned;
 
 /// Condvar-guarded slot counter bounding how many jobs run at once.
 #[derive(Debug)]
@@ -50,7 +50,7 @@ impl Slots {
     /// Block until a slot is free, or until `status` is cancelled while
     /// waiting. Returns whether a slot was actually taken.
     fn acquire(&self, status: &RunStatus) -> bool {
-        let mut free = self.free.lock().unwrap();
+        let mut free = lock_unpoisoned(&self.free);
         loop {
             if status.is_cancelled() {
                 return false;
@@ -63,13 +63,13 @@ impl Slots {
             let (guard, _) = self
                 .available
                 .wait_timeout(free, Duration::from_millis(10))
-                .unwrap();
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             free = guard;
         }
     }
 
     fn release(&self) {
-        *self.free.lock().unwrap() += 1;
+        *lock_unpoisoned(&self.free) += 1;
         self.available.notify_one();
     }
 }
@@ -133,6 +133,7 @@ impl JobHandle {
 
     /// Block until the job completes and return its outcome.
     pub fn wait(self) -> CodesignOutcome {
+        // lint: allow(panic-freedom) — re-raises the job thread's own panic
         self.join.join().expect("search-run thread panicked")
     }
 }
@@ -215,6 +216,7 @@ impl JobScheduler {
                     .then(|| SlotGuard { slots: Arc::clone(&slots) });
                 run.run(&backend)
             })
+            // lint: allow(panic-freedom) — OS-level thread-spawn failure is unrecoverable here
             .expect("spawn search-job thread");
         JobHandle { id, status, join }
     }

@@ -10,7 +10,6 @@
 //!   serving requests (the same layer/config/mapping triples arriving from
 //!   different clients or rounds) hit the warm cache instead of re-running
 //!   the cost model; `EvalHandle::stats` exposes the hit/miss telemetry.
-#![deny(clippy::style)]
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
@@ -25,6 +24,7 @@ use crate::model::cache::CacheStats;
 use crate::model::eval::{Evaluator, Infeasible};
 use crate::model::mapping::Mapping;
 use crate::model::workload::Layer;
+use crate::util::sync::lock_unpoisoned;
 
 enum Request {
     Posterior {
@@ -52,17 +52,13 @@ pub struct GpHandle {
 
 impl Clone for GpHandle {
     fn clone(&self) -> Self {
-        GpHandle { tx: std::sync::Mutex::new(self.tx.lock().unwrap().clone()) }
+        GpHandle { tx: std::sync::Mutex::new(lock_unpoisoned(&self.tx).clone()) }
     }
 }
 
 impl GpHandle {
     fn send(&self, req: Request) -> Result<()> {
-        self.tx
-            .lock()
-            .unwrap()
-            .send(req)
-            .map_err(|_| anyhow!("GP server is down"))
+        lock_unpoisoned(&self.tx).send(req).map_err(|_| anyhow!("GP server is down"))
     }
 
     pub fn posterior(

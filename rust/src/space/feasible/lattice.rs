@@ -8,7 +8,6 @@
 //! sublattice. The local level is additionally pinned by the hardware
 //! dataflow (H11/H12): a FullAtPe filter axis forces `local = extent`, a
 //! Streamed axis forces `local = 1`.
-#![deny(clippy::style)]
 
 use crate::model::arch::DataflowOpt;
 use crate::model::workload::{Dim, Layer};

@@ -28,7 +28,6 @@
 //! so emptiness is always a proof and never a burned draw budget. Every
 //! path records its outcome in [`telemetry`], which `coordinator::metrics`
 //! surfaces per run.
-#![deny(clippy::style)]
 
 mod lattice;
 mod propagate;

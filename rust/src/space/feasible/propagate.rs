@@ -29,7 +29,6 @@
 //!   (halo-overlapped) footprints, so such spaces degrade to the rejection-
 //!   sampling fallback instead ([`SpaceCheck::GlbTight`]). The same
 //!   non-monotonicity is why a perturbation reset re-checks its start state.
-#![deny(clippy::style)]
 
 use crate::model::arch::{HwConfig, Resources};
 use crate::model::energy::effective_glb_capacity;

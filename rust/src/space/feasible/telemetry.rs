@@ -13,7 +13,6 @@
 //! concurrent jobs exact per-run deltas without baseline-diffing globals.
 //! Nested scopes shadow; the previous scope is restored on exit and on
 //! unwind.
-#![deny(clippy::style)]
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};

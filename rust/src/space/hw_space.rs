@@ -140,6 +140,7 @@ impl HwSpace {
             return (cfg, 1);
         }
         feastel::record_infeasible_space();
+        // lint: allow(panic-freedom) — documented config-error contract (see doc comment above)
         panic!(
             "HwSpace::sample_valid: budget (num_pes={}, local_buffer_entries={}) \
              admits no valid configuration",

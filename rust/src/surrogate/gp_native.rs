@@ -11,7 +11,6 @@
 //! from `theta.jitter` until the kernel matrix factors, and the jitter that
 //! succeeded is reported for telemetry and reused by `extend` so the rank-1
 //! path stays consistent with the full fit.
-#![deny(clippy::style)]
 
 use crate::runtime::gp_exec::{Posterior, Theta};
 use crate::surrogate::linalg::{
@@ -315,7 +314,7 @@ mod tests {
         // For a linear kernel the posterior variance scales like
         // c^T (X^T X)^-1 c * tau^2: tiny in-sample, growing quadratically
         // with distance from the training span.
-        let far = vec![vec![10.0; 8]];
+        let far = [vec![10.0; 8]];
         let post_far = gp.posterior(&far);
         let mean_train_var =
             post.var.iter().sum::<f64>() / post.var.len() as f64;
@@ -366,7 +365,7 @@ mod tests {
         // jitter failed here; the adaptive fit must recover (or at worst
         // return None), never panic.
         let theta = Theta { w_lin: 1.0, w_se: 0.0, ell2: 1.0, tau2: 0.0, jitter: 1e-8 };
-        let base = vec![vec![0.5, -1.0, 2.0], vec![1.0, 0.0, 0.25]];
+        let base = [vec![0.5, -1.0, 2.0], vec![1.0, 0.0, 0.25]];
         let x: Vec<Vec<f64>> = (0..12).map(|i| base[i % 2].clone()).collect();
         let y: Vec<f64> = (0..12).map(|i| (i % 2) as f64).collect();
         let gp = NativeGp::fit(theta, &x, &y).expect("adaptive jitter must rescue duplicates");
@@ -379,7 +378,7 @@ mod tests {
     #[test]
     fn nan_and_mismatched_inputs_return_none() {
         let theta = Theta::hw_default();
-        let x = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        let x = [vec![0.0, 1.0], vec![1.0, 0.0]];
         assert!(NativeGp::fit(theta, &x, &[1.0, f64::NAN]).is_none());
         assert!(NativeGp::fit(theta, &[vec![f64::NAN, 0.0], x[1].clone()], &[1.0, 2.0]).is_none());
         assert!(NativeGp::fit(theta, &x, &[1.0]).is_none());
@@ -496,6 +495,6 @@ mod tests {
             assert!((a - b).abs() < 1e-9);
         }
         assert!(!gp.set_targets(&[1.0])); // length mismatch rejected
-        assert!(!gp.set_targets(&vec![f64::NAN; 16]));
+        assert!(!gp.set_targets(&[f64::NAN; 16]));
     }
 }

@@ -6,7 +6,6 @@
 //! No-panic contract: every entry point in this module returns an error
 //! value (`Err`/`None`) on degenerate or NaN-bearing inputs instead of
 //! panicking — a singular Gram matrix mid-search must degrade, not abort.
-#![deny(clippy::style)]
 
 /// Row-major square matrix view helpers.
 #[inline]
@@ -287,15 +286,15 @@ mod tests {
 
     #[test]
     fn cholesky_rejects_non_spd() {
-        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // indefinite
+        let mut a = [1.0, 2.0, 2.0, 1.0]; // indefinite
         assert!(cholesky(&mut a, 2).is_err());
     }
 
     #[test]
     fn cholesky_rejects_nan_instead_of_propagating() {
-        let mut a = vec![1.0, f64::NAN, f64::NAN, 1.0];
+        let mut a = [1.0, f64::NAN, f64::NAN, 1.0];
         assert!(cholesky(&mut a, 2).is_err());
-        let mut b = vec![f64::NAN, 0.0, 0.0, 1.0];
+        let mut b = [f64::NAN, 0.0, 0.0, 1.0];
         assert!(cholesky(&mut b, 2).is_err());
     }
 
@@ -317,7 +316,7 @@ mod tests {
         // -0.005): the f32-roundtrip corruption an AOT kernel matrix can
         // carry. Rescue needs jitter > 5e-3, so the 1e-8 base must escalate
         // all the way to the 1e-2 ceiling.
-        let k = vec![1.0, 1.005, 1.005, 1.0];
+        let k = [1.0, 1.005, 1.005, 1.0];
         let out = cholesky_adaptive(&k, 2, 1e-8).expect("escalation must rescue");
         assert!(out.escalations > 0, "expected escalation past the base jitter");
         assert!(out.jitter > 5e-3, "jitter {} cannot dominate the -5e-3 eigenvalue", out.jitter);
@@ -415,7 +414,7 @@ mod tests {
 
     #[test]
     fn extend_block_rejects_indefinite_and_nan() {
-        let l = vec![1.0]; // factor of [[1.0]]
+        let l = [1.0]; // factor of [[1.0]]
         // Schur complement of the second new point goes negative
         assert!(chol_extend_block(&l, 1, &[0.5, 2.0], &[1.0, 0.9, 0.9, 1.0], 2).is_none());
         assert!(chol_extend_block(&l, 1, &[f64::NAN], &[1.0], 1).is_none());
@@ -426,7 +425,7 @@ mod tests {
 
     #[test]
     fn extend_rejects_indefinite_and_nan_borders() {
-        let l = vec![1.0]; // factor of [[1.0]]
+        let l = [1.0]; // factor of [[1.0]]
         // Schur complement 1 - 4 < 0: not extendable
         assert!(chol_extend(&l, 1, &[2.0], 1.0).is_none());
         assert!(chol_extend(&l, 1, &[f64::NAN], 1.0).is_none());

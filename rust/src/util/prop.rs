@@ -49,6 +49,7 @@ pub fn forall<T: std::fmt::Debug + Clone>(
                     }
                 }
             }
+            // lint: allow(panic-freedom) — the harness reports counterexamples by panicking
             panic!(
                 "property failed (case {case_idx}, seed {}): {best_msg}\nminimal case: {best:#?}",
                 cfg.seed

@@ -5,7 +5,6 @@
 //! xoshiro256** generator (Blackman & Vigna), plus the sampling helpers used
 //! by the design-space samplers and optimizers. Everything is deterministic
 //! given a seed, which the figure harnesses rely on for reproducibility.
-#![deny(clippy::style)]
 
 /// SplitMix64 step; used to expand a single u64 seed into xoshiro state.
 #[inline]

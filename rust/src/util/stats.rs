@@ -5,7 +5,6 @@
 //! Cholesky, and a panic inside an acquisition sweep would take the whole
 //! search down. NaN inputs sort to the ends under the IEEE total order and
 //! are never selected by `argmin`/`argmax`.
-#![deny(clippy::style)]
 
 /// Arithmetic mean; 0.0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {

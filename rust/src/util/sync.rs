@@ -1,0 +1,16 @@
+//! Poisoning-tolerant lock acquisition.
+//!
+//! `Mutex` poisoning only reports that some other thread panicked while the
+//! lock was held — every structure we guard (caches, job queues, pruning
+//! certificates) stays internally consistent because writers never leave a
+//! half-applied update behind a panic point. Propagating the poison as a
+//! second panic (`.lock().unwrap()`) turns one worker's failure into a
+//! process-wide cascade, so the repo-wide rule (`codesign-lint` R3) is to
+//! acquire through [`lock_unpoisoned`] and keep the data.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Acquire `m`, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

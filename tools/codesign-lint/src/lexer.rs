@@ -1,0 +1,212 @@
+//! A deliberately small hand-written Rust lexer.
+//!
+//! The build environment is offline and the workspace vendors every
+//! dependency, so `syn`/`proc-macro2` are off the table. The rules in
+//! [`crate::rules`] only need a token stream with line numbers plus the
+//! line comments (for `lint: allow` annotations) — a full parse tree is
+//! not required. The lexer therefore handles exactly the lexical features
+//! that can desynchronize a naive scanner: line and nested block comments,
+//! string/char/byte/raw-string literals, lifetimes vs. char literals, and
+//! `::` as a single token so receiver paths stay contiguous.
+//!
+//! Anything the lexer cannot classify (e.g. stray non-ASCII bytes outside
+//! literals) is skipped rather than guessed at: the rules are prefix/suffix
+//! matchers over identifiers and punctuation, so dropping an unknown byte
+//! can only make the lint more conservative.
+
+/// Token classes the rules discriminate on. Literal *contents* are never
+/// inspected, so string/char tokens carry no text.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Lifetime,
+    Num,
+    Str,
+    Char,
+}
+
+/// One lexical token with the 1-based source line it starts on.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// Token stream plus captured line comments `(line, text)` — block comments
+/// are discarded (the allow-annotation grammar is line-comment only).
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<(u32, String)>,
+}
+
+/// Recognize a raw-string opener at byte `i`: optional `b`, then `r`, then
+/// zero or more `#`, then `"`. Returns `(body_start, hash_count)`.
+fn raw_str_open(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) != Some(&b'"') {
+        return None;
+    }
+    Some((j + 1, hashes))
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_continue(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Lex `src` into tokens and line comments. Never fails: unterminated
+/// literals and comments run to end of input.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        let raw = if c == b'r' || c == b'b' {
+            raw_str_open(b, i)
+        } else {
+            None
+        };
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+        } else if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let j = b[i..].iter().position(|&x| x == b'\n').map_or(n, |p| i + p);
+            // `i` and `j` both sit on ASCII bytes, so the slice is valid.
+            out.comments.push((line, src[i..j].to_string()));
+            i = j;
+        } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && b.get(j + 1) == Some(&b'*') {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && b.get(j + 1) == Some(&b'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            i = j;
+        } else if let Some((body, hashes)) = raw {
+            let mut j = body;
+            let mut end = n;
+            while j < n {
+                if b[j] == b'"'
+                    && b[j + 1..].iter().take(hashes).filter(|&&x| x == b'#').count() == hashes
+                {
+                    end = j + 1 + hashes;
+                    break;
+                }
+                if b[j] == b'\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            out.tokens.push(Token { kind: Kind::Str, text: String::new(), line });
+            i = end;
+        } else if c == b'"' || (c == b'b' && b.get(i + 1) == Some(&b'"')) {
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            while j < n {
+                match b[j] {
+                    b'\\' => j += 2,
+                    b'"' => break,
+                    b'\n' => {
+                        line += 1;
+                        j += 1;
+                    }
+                    _ => j += 1,
+                }
+            }
+            out.tokens.push(Token { kind: Kind::Str, text: String::new(), line });
+            i = (j + 1).min(n);
+        } else if c == b'\'' {
+            // Lifetime (`'a` not followed by a closing quote) vs char literal.
+            let next = b.get(i + 1).copied().unwrap_or(0);
+            if is_ident_start(next) && b.get(i + 2) != Some(&b'\'') {
+                let mut j = i + 1;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+                // `i..j` spans ASCII bytes only.
+                out.tokens.push(Token { kind: Kind::Lifetime, text: src[i..j].to_string(), line });
+                i = j;
+            } else {
+                let mut j = i + 1;
+                while j < n {
+                    match b[j] {
+                        b'\\' => j += 2,
+                        b'\'' => break,
+                        _ => j += 1,
+                    }
+                }
+                out.tokens.push(Token { kind: Kind::Char, text: String::new(), line });
+                i = (j + 1).min(n);
+            }
+        } else if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            out.tokens.push(Token { kind: Kind::Ident, text: src[i..j].to_string(), line });
+            i = j;
+        } else if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                let d = b[j];
+                if d == b'.' {
+                    // Stop at `.` unless it continues a float (`1.5`), so
+                    // method calls on numbers (`1.max(x)`) stay separate.
+                    if b.get(j + 1).is_some_and(|x| x.is_ascii_digit()) {
+                        j += 1;
+                    } else {
+                        break;
+                    }
+                } else if d.is_ascii_alphanumeric() || d == b'_' {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            out.tokens.push(Token { kind: Kind::Num, text: src[i..j].to_string(), line });
+            i = j;
+        } else if c == b':' && b.get(i + 1) == Some(&b':') {
+            out.tokens.push(Token { kind: Kind::Punct, text: "::".to_string(), line });
+            i += 2;
+        } else if c.is_ascii() {
+            out.tokens.push(Token { kind: Kind::Punct, text: (c as char).to_string(), line });
+            i += 1;
+        } else {
+            // Non-ASCII outside literals/comments: skip the byte.
+            i += 1;
+        }
+    }
+    out
+}

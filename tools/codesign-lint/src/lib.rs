@@ -1,0 +1,95 @@
+//! `codesign-lint` — the repo-specific invariant linter.
+//!
+//! The library form exists so the test suite can lint fixture sources and
+//! the real tree in-process; the `codesign-lint` binary is a thin CLI over
+//! [`lint_paths`]. See `tools/codesign-lint/README.md` for the rule
+//! catalog and the allow-annotation convention.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use report::Summary;
+use rules::Violation;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// A violation attributed to a file (path relative to its lint root).
+#[derive(Debug)]
+pub struct Finding {
+    pub file: String,
+    pub violation: Violation,
+}
+
+/// Recursively collect `*.rs` files under `root`, sorted by path so runs
+/// are deterministic regardless of directory-entry order.
+pub fn collect_rs_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> = fs::read_dir(&dir)?
+            .collect::<io::Result<Vec<_>>>()?
+            .into_iter()
+            .map(|e| e.path())
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn rel_of(path: &Path, root: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    parts.join("/")
+}
+
+/// Lint every `.rs` file under each root (a root may also be a single
+/// file, linted under its file name). Returns the aggregate summary plus
+/// the surviving findings, in deterministic order.
+pub fn lint_paths(roots: &[PathBuf]) -> io::Result<(Summary, Vec<Finding>)> {
+    let mut summary = Summary::new();
+    let mut findings = Vec::new();
+    for root in roots {
+        let (files, base): (Vec<PathBuf>, PathBuf) = if root.is_dir() {
+            (collect_rs_files(root)?, root.clone())
+        } else {
+            let base = root.parent().map_or_else(|| PathBuf::from("."), Path::to_path_buf);
+            (vec![root.clone()], base)
+        };
+        for file in files {
+            let src = fs::read_to_string(&file)?;
+            let rel = rel_of(&file, &base);
+            let fr = rules::check_source(&src, &rel);
+            summary.files_scanned += 1;
+            for v in fr.violations {
+                *summary.violations.entry(v.rule.to_string()).or_insert(0) += 1;
+                findings.push(Finding { file: rel.clone(), violation: v });
+            }
+            for (line, rule) in fr.allow_inventory {
+                *summary.allows.entry(rule.clone()).or_insert(0) += 1;
+                summary.allow_inventory.push((rel.clone(), line, rule));
+            }
+            for (line, rule) in fr.bad_allows {
+                summary.bad_allows += 1;
+                let msg = format!("allow({rule}) without a reason");
+                let violation = Violation { rule: "bad-allow", line, msg };
+                findings.push(Finding { file: rel.clone(), violation });
+            }
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.violation.line).cmp(&(&b.file, b.violation.line)));
+    summary.allow_inventory.sort();
+    Ok((summary, findings))
+}

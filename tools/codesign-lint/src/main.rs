@@ -1,0 +1,108 @@
+//! CLI: `codesign-lint <path>... [--baseline <file>] [--report <file>]`
+//!
+//! Lints every `.rs` file under the given roots, prints surviving
+//! violations, writes the machine-readable `LINT_REPORT.json`, and — when
+//! `--baseline` is given — gates against the committed ratchet.
+//!
+//! Exit codes: 0 clean (and within baseline), 1 violations or baseline
+//! regression, 2 usage or I/O error.
+
+use codesign_lint::lint_paths;
+use codesign_lint::report::{compare_baseline, parse_json, to_json};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: codesign-lint <path>... [--baseline <file>] [--report <file>]";
+
+fn main() -> ExitCode {
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut baseline: Option<PathBuf> = None;
+    let mut report_path = PathBuf::from("LINT_REPORT.json");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--baseline" => match args.next() {
+                Some(p) => baseline = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--report" => match args.next() {
+                Some(p) => report_path = PathBuf::from(p),
+                None => {
+                    eprintln!("{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            _ => roots.push(PathBuf::from(a)),
+        }
+    }
+    if roots.is_empty() {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    }
+
+    let (summary, findings) = match lint_paths(&roots) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("codesign-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for f in &findings {
+        let v = &f.violation;
+        println!("{}:{}: [{}] {}", f.file, v.line, v.rule, v.msg);
+    }
+    let files = summary.files_scanned;
+    let total_v = summary.total_violations();
+    let total_a = summary.total_allows();
+    println!("codesign-lint: {files} files, {total_v} violations, {total_a} allow annotations");
+
+    let json = to_json(&summary);
+    if let Err(e) = std::fs::write(&report_path, &json) {
+        eprintln!("codesign-lint: cannot write {}: {e}", report_path.display());
+        return ExitCode::from(2);
+    }
+
+    let mut failed = summary.total_violations() > 0;
+    if let Some(bp) = baseline {
+        let doc = match std::fs::read_to_string(&bp) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("codesign-lint: cannot read baseline {}: {e}", bp.display());
+                return ExitCode::from(2);
+            }
+        };
+        let base = match parse_json(&doc) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("codesign-lint: bad baseline JSON: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        let regressions = compare_baseline(&summary, &base);
+        for r in &regressions {
+            println!("baseline regression: {r}");
+        }
+        if regressions.is_empty() {
+            // Within the ratchet: violations at-or-below baseline pass even
+            // if nonzero (the baseline is the contract, zero is the goal).
+            failed = false;
+            println!("baseline check passed ({})", bp.display());
+        } else {
+            failed = true;
+        }
+    }
+
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -1,0 +1,329 @@
+//! `LINT_REPORT.json` emission and baseline comparison.
+//!
+//! The workspace is offline (no serde), so this module carries a tiny JSON
+//! emitter and a minimal recursive-descent parser — enough for the report
+//! schema and for hand-edited baselines. The parser accepts standard JSON
+//! (objects, arrays, strings with escapes, numbers, booleans, null) and
+//! rejects everything else with a byte offset.
+
+use crate::rules::RULES;
+use std::collections::BTreeMap;
+
+/// Aggregated lint outcome across all scanned files.
+#[derive(Debug, Default, Clone)]
+pub struct Summary {
+    pub files_scanned: usize,
+    /// Per-rule surviving violation counts.
+    pub violations: BTreeMap<String, usize>,
+    /// Per-rule allow-annotation counts.
+    pub allows: BTreeMap<String, usize>,
+    /// Malformed (reason-less) allow annotations, counted as violations.
+    pub bad_allows: usize,
+    /// Every well-formed allow annotation: (file, line, rule).
+    pub allow_inventory: Vec<(String, u32, String)>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        let mut s = Summary::default();
+        for r in RULES {
+            s.violations.insert(r.to_string(), 0);
+            s.allows.insert(r.to_string(), 0);
+        }
+        s
+    }
+
+    pub fn total_violations(&self) -> usize {
+        self.violations.values().sum::<usize>() + self.bad_allows
+    }
+
+    pub fn total_allows(&self) -> usize {
+        self.allows.values().sum()
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the machine-readable report. Key order is fixed (rules in
+/// [`RULES`] order, inventory sorted by file/line) so diffs stay minimal.
+pub fn to_json(s: &Summary) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"version\": 1,\n");
+    out.push_str(&format!("  \"files_scanned\": {},\n", s.files_scanned));
+    out.push_str("  \"rules\": {\n");
+    for (i, r) in RULES.iter().enumerate() {
+        let v = s.violations.get(*r).copied().unwrap_or(0);
+        let a = s.allows.get(*r).copied().unwrap_or(0);
+        let comma = if i + 1 < RULES.len() { "," } else { "" };
+        out.push_str(&format!("    \"{r}\": {{\"violations\": {v}, \"allows\": {a}}}{comma}\n"));
+    }
+    out.push_str("  },\n");
+    out.push_str(&format!("  \"bad_allows\": {},\n", s.bad_allows));
+    out.push_str(&format!("  \"total_violations\": {},\n", s.total_violations()));
+    out.push_str(&format!("  \"total_allows\": {},\n", s.total_allows()));
+    out.push_str("  \"allow_inventory\": [\n");
+    let count = s.allow_inventory.len();
+    for (i, (file, line, rule)) in s.allow_inventory.iter().enumerate() {
+        let comma = if i + 1 < count { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"file\": \"{}\", \"line\": {line}, \"rule\": \"{rule}\"}}{comma}\n",
+            escape(file)
+        ));
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+/// Minimal JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn err(&self, what: &str) -> String {
+        format!("{what} at byte {}", self.i)
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.ws();
+        match self.b.get(self.i) {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c.is_ascii_digit() || *c == b'-' => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err("bad literal"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.b.get(self.i) == Some(&b'-') {
+            self.i += 1;
+        }
+        while self
+            .b
+            .get(self.i)
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| self.err("bad number"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.b.get(self.i) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.b.get(self.i) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .b
+                                .get(self.i + 1..self.i + 5)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .and_then(char::from_u32)
+                                .ok_or_else(|| self.err("bad \\u escape"))?;
+                            out.push(hex);
+                            self.i += 4;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Copy the full UTF-8 character, not just one byte.
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    let c = rest.chars().next().ok_or_else(|| self.err("empty"))?;
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected `,` or `]`")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            kv.push((key, val));
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                _ => return Err(self.err("expected `,` or `}`")),
+            }
+        }
+    }
+}
+
+/// Parse a JSON document (trailing whitespace allowed, nothing else).
+pub fn parse_json(src: &str) -> Result<Json, String> {
+    let mut p = Parser { b: src.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing garbage"));
+    }
+    Ok(v)
+}
+
+/// Compare a fresh summary against a committed baseline document. The
+/// ratchet is monotone: per-rule violations and allows may not exceed the
+/// baseline (decreases are fine — tighten the baseline in the same PR).
+/// Returns human-readable regression lines; empty means the gate passes.
+pub fn compare_baseline(s: &Summary, baseline: &Json) -> Vec<String> {
+    let mut regressions = Vec::new();
+    let rules = baseline.get("rules");
+    for r in RULES {
+        let base_v = rules
+            .and_then(|o| o.get(r))
+            .and_then(|o| o.get("violations"))
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        let base_a = rules
+            .and_then(|o| o.get(r))
+            .and_then(|o| o.get("allows"))
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        let got_v = s.violations.get(r).copied().unwrap_or(0);
+        let got_a = s.allows.get(r).copied().unwrap_or(0);
+        if got_v > base_v {
+            regressions.push(format!("rule {r}: {got_v} violations > baseline {base_v}"));
+        }
+        if got_a > base_a {
+            regressions.push(format!("rule {r}: {got_a} allow annotations > baseline {base_a}"));
+        }
+    }
+    let base_bad = baseline.get("bad_allows").and_then(Json::as_usize).unwrap_or(0);
+    if s.bad_allows > base_bad {
+        let got = s.bad_allows;
+        regressions.push(format!("bad (reason-less) allows: {got} > baseline {base_bad}"));
+    }
+    regressions
+}

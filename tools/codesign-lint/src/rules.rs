@@ -1,0 +1,516 @@
+//! The five repo invariants, as token-stream rules.
+//!
+//! Each rule encodes a bug class a previous PR paid for by hand (see
+//! `tools/codesign-lint/README.md` for the catalog). Rules operate on the
+//! [`crate::lexer`] token stream plus the file's repo-relative path — path
+//! prefixes decide hot-path scope (R1) and module allowlists (R4/R5), and
+//! `#[cfg(test)] mod` bodies are exempt everywhere (tests exercise panic
+//! paths on purpose).
+//!
+//! Violations are suppressible only by a `// lint: allow(<rule>) — <reason>`
+//! line comment on the same or preceding line; the annotation inventory is
+//! counted into the report so exceptions stay visible and ratchetable.
+
+use crate::lexer::{lex, Kind, Token};
+use std::collections::{HashMap, HashSet};
+
+/// Canonical rule names, in report order.
+pub const RULES: [&str; 5] = [
+    "panic-freedom",
+    "float-ordering",
+    "lock-discipline",
+    "determinism",
+    "telemetry-scope",
+];
+
+/// R1 applies only under these `rust/src`-relative prefixes: the search,
+/// cost-model and runtime hot paths. Entry points (`main.rs`, `lib.rs`),
+/// figure emission and workload tables may still panic on config errors.
+const HOT_PREFIXES: [&str; 7] = [
+    "model/",
+    "opt/",
+    "surrogate/",
+    "space/",
+    "coordinator/",
+    "runtime/",
+    "util/",
+];
+
+/// R4: the two modules that *are* the sanctioned randomness/timing API.
+const R4_ALLOW_FILES: [&str; 2] = ["util/rng.rs", "util/benchkit.rs"];
+
+/// R5: the scoped-telemetry modules themselves — the `Sink`/`with_scope`
+/// implementations own their statics by construction.
+const R5_ALLOW_FILES: [&str; 4] = [
+    "surrogate/telemetry.rs",
+    "space/feasible/telemetry.rs",
+    "model/delta.rs",
+    "coordinator/metrics.rs",
+];
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+/// R4: ad-hoc RNG entry points (the repo's only sanctioned generator is
+/// `util::rng::Rng`, seeded explicitly).
+const R4_IDENTS: [&str; 5] = ["thread_rng", "from_entropy", "OsRng", "getrandom", "RandomState"];
+
+/// One rule hit at a source line.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Per-file lint outcome: surviving violations, allow-suppressed ones, the
+/// inventory of well-formed allow annotations, and malformed (reason-less)
+/// allows — which are themselves violations.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub violations: Vec<Violation>,
+    pub suppressed: Vec<Violation>,
+    pub allow_inventory: Vec<(u32, String)>,
+    pub bad_allows: Vec<(u32, String)>,
+}
+
+fn txt(toks: &[Token], j: usize) -> &str {
+    toks.get(j).map_or("", |t| t.text.as_str())
+}
+
+fn kind_at(toks: &[Token], j: usize) -> Option<Kind> {
+    toks.get(j).map(|t| t.kind)
+}
+
+fn is_ident(toks: &[Token], j: usize, name: &str) -> bool {
+    toks.get(j).is_some_and(|t| t.kind == Kind::Ident && t.text == name)
+}
+
+/// Parse one line comment for an allow annotation.
+enum Allow {
+    None,
+    /// `lint: allow(rule)` with no ` — reason`: counted as a violation.
+    Bare(String),
+    /// `lint: allow(rule) — reason` (also accepts `--`, `-`, `:`).
+    WithReason(String),
+}
+
+fn parse_allow(text: &str) -> Allow {
+    let Some(pos) = text.find("lint:") else { return Allow::None };
+    let rest = text[pos + 5..].trim_start();
+    let Some(rest) = rest.strip_prefix("allow(") else { return Allow::None };
+    let Some(close) = rest.find(')') else { return Allow::None };
+    let rule = &rest[..close];
+    let valid = !rule.is_empty()
+        && rule.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'-');
+    if !valid {
+        return Allow::None;
+    }
+    let tail = rest[close + 1..].trim_start();
+    // `--` must be tried before `-`.
+    let sep = ["\u{2014}", "--", "-", ":"].iter().find_map(|s| tail.strip_prefix(s));
+    match sep {
+        Some(reason) if !reason.trim().is_empty() => Allow::WithReason(rule.to_string()),
+        _ => Allow::Bare(rule.to_string()),
+    }
+}
+
+/// Line numbers inside `#[cfg(test)] mod ... { }` bodies (attributes with
+/// `test` anywhere inside the `cfg(...)`, e.g. `cfg(all(test, unix))`).
+fn test_mod_lines(toks: &[Token]) -> HashSet<u32> {
+    let mut lines = HashSet::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if txt(toks, i) == "#"
+            && txt(toks, i + 1) == "["
+            && is_ident(toks, i + 2, "cfg")
+            && txt(toks, i + 3) == "("
+        {
+            let mut j = i + 4;
+            let mut depth = 1usize;
+            let mut has_test = false;
+            while j < toks.len() && depth > 0 {
+                match txt(toks, j) {
+                    "(" => depth += 1,
+                    ")" => depth -= 1,
+                    _ => {
+                        if is_ident(toks, j, "test") {
+                            has_test = true;
+                        }
+                    }
+                }
+                j += 1;
+            }
+            if has_test && txt(toks, j) == "]" {
+                j += 1;
+                // Skip any further attributes between the cfg and the item.
+                while txt(toks, j) == "#" {
+                    j += 1;
+                    if txt(toks, j) == "[" {
+                        let mut d = 1usize;
+                        j += 1;
+                        while j < toks.len() && d > 0 {
+                            match txt(toks, j) {
+                                "[" => d += 1,
+                                "]" => d -= 1,
+                                _ => {}
+                            }
+                            j += 1;
+                        }
+                    }
+                }
+                if is_ident(toks, j, "mod") {
+                    while j < toks.len() && txt(toks, j) != "{" && txt(toks, j) != ";" {
+                        j += 1;
+                    }
+                    if txt(toks, j) == "{" {
+                        let mut d = 1usize;
+                        j += 1;
+                        while j < toks.len() && d > 0 {
+                            match txt(toks, j) {
+                                "{" => d += 1,
+                                "}" => d -= 1,
+                                _ => {}
+                            }
+                            if let Some(t) = toks.get(j) {
+                                lines.insert(t.line);
+                            }
+                            j += 1;
+                        }
+                    }
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    lines
+}
+
+/// A live, `let`-bound lock guard inside one function body.
+struct Guard {
+    /// Receiver path of the acquisition, e.g. `self.map`.
+    path: String,
+    /// Bound variable name (for `drop(name)` tracking).
+    name: String,
+    /// Brace depth the guard dies at: dropping *below* this kills it.
+    kill_depth: u32,
+}
+
+/// Receiver path ending just before token `j` (exclusive), read backwards
+/// through `ident (.|::) ident ...` chains. `None` for computed receivers
+/// (call results, index expressions) — those stay untracked (conservative).
+fn receiver_path_backwards(toks: &[Token], j: usize) -> Option<String> {
+    let mut parts: Vec<&str> = Vec::new();
+    let mut q = j;
+    loop {
+        let Some(qq) = q.checked_sub(1) else { break };
+        q = qq;
+        if kind_at(toks, q) == Some(Kind::Ident) {
+            parts.push(txt(toks, q));
+            let Some(sep_at) = q.checked_sub(1) else { break };
+            let sep = txt(toks, sep_at);
+            if sep == "." || sep == "::" {
+                parts.push(sep);
+                q = sep_at;
+                continue;
+            }
+        }
+        break;
+    }
+    match parts.last() {
+        Some(&last) if last != "." && last != "::" => {
+            Some(parts.iter().rev().copied().collect::<String>())
+        }
+        _ => None,
+    }
+}
+
+/// Receiver path of a `lock_unpoisoned( [&[mut]] path )` call whose `(` is
+/// at token `open`. `None` if the argument is not a plain path.
+fn receiver_path_forwards(toks: &[Token], open: usize) -> Option<String> {
+    let mut q = open + 1;
+    if txt(toks, q) == "&" {
+        q += 1;
+    }
+    if is_ident(toks, q, "mut") {
+        q += 1;
+    }
+    let mut parts: Vec<&str> = Vec::new();
+    while kind_at(toks, q) == Some(Kind::Ident) {
+        parts.push(txt(toks, q));
+        q += 1;
+        let sep = txt(toks, q);
+        if sep == "." || sep == "::" {
+            parts.push(sep);
+            q += 1;
+            continue;
+        }
+        break;
+    }
+    if !parts.is_empty() && txt(toks, q) == ")" {
+        Some(parts.concat())
+    } else {
+        None
+    }
+}
+
+/// R3b: walk each `fn` body tracking let-bound guards; flag a second
+/// acquisition on a receiver path that already has a live guard (the PR-1
+/// deadlock class). `if let` / `while let` temporaries die when the block
+/// following them closes.
+fn check_double_lock(toks: &[Token], exempt: &HashSet<u32>, out: &mut Vec<Violation>) {
+    let mut j = 0usize;
+    while j < toks.len() {
+        if !is_ident(toks, j, "fn") {
+            j += 1;
+            continue;
+        }
+        // Find the body `{` at bracket depth 0; `;` first means no body.
+        let mut b = j + 1;
+        let mut d = 0i32;
+        let mut body = None;
+        while b < toks.len() {
+            let t = txt(toks, b);
+            if t == "{" && d == 0 {
+                body = Some(b);
+                break;
+            }
+            match t {
+                "(" | "<" | "[" => d += 1,
+                ")" | ">" | "]" => d = (d - 1).max(0),
+                ";" if d == 0 => break,
+                _ => {}
+            }
+            b += 1;
+        }
+        let Some(body) = body else {
+            j = b.max(j + 1);
+            continue;
+        };
+        let mut depth = 1u32;
+        let mut guards: Vec<Guard> = Vec::new();
+        let mut p = body + 1;
+        let mut last_let: Option<usize> = None;
+        let mut last_let_cond = false;
+        while p < toks.len() && depth > 0 {
+            let t = txt(toks, p);
+            let k = kind_at(toks, p);
+            if t == "{" {
+                depth += 1;
+            } else if t == "}" {
+                depth -= 1;
+                guards.retain(|g| g.kill_depth <= depth);
+            } else if k == Some(Kind::Ident) && t == "let" {
+                last_let = Some(p);
+                last_let_cond = p
+                    .checked_sub(1)
+                    .map(|q| txt(toks, q) == "if" || txt(toks, q) == "while")
+                    .unwrap_or(false);
+            } else if t == ";" {
+                last_let = None;
+            } else if k == Some(Kind::Ident)
+                && t == "drop"
+                && txt(toks, p + 1) == "("
+                && kind_at(toks, p + 2) == Some(Kind::Ident)
+                && txt(toks, p + 3) == ")"
+            {
+                let name = txt(toks, p + 2).to_string();
+                guards.retain(|g| g.name != name);
+            } else {
+                let acq = if k == Some(Kind::Ident)
+                    && (t == "lock" || t == "try_lock")
+                    && p.checked_sub(1).map(|q| txt(toks, q) == ".").unwrap_or(false)
+                    && txt(toks, p + 1) == "("
+                {
+                    receiver_path_backwards(toks, p.saturating_sub(1))
+                } else if k == Some(Kind::Ident)
+                    && t == "lock_unpoisoned"
+                    && txt(toks, p + 1) == "("
+                {
+                    receiver_path_forwards(toks, p + 1)
+                } else {
+                    None
+                };
+                if let Some(path) = acq {
+                    let line = toks[p].line;
+                    if guards.iter().any(|g| g.path == path) {
+                        if !exempt.contains(&line) {
+                            let msg = format!("second lock on `{path}` while its guard is live");
+                            out.push(Violation { rule: "lock-discipline", line, msg });
+                        }
+                    } else if let Some(lp) = last_let {
+                        let mut q2 = lp + 1;
+                        let mut name = String::from("?");
+                        while q2 < p {
+                            if kind_at(toks, q2) == Some(Kind::Ident) && txt(toks, q2) != "mut" {
+                                name = txt(toks, q2).to_string();
+                                break;
+                            }
+                            q2 += 1;
+                        }
+                        guards.push(Guard {
+                            path,
+                            name,
+                            kill_depth: depth + u32::from(last_let_cond),
+                        });
+                    }
+                }
+            }
+            p += 1;
+        }
+        j = p;
+    }
+}
+
+/// Lint one file's source. `rel` is the path relative to the lint root
+/// (e.g. `model/delta.rs`), with `/` separators — it selects hot-path
+/// scope and the R4/R5 module allowlists.
+pub fn check_source(src: &str, rel: &str) -> FileReport {
+    let lexed = lex(src);
+    let toks = &lexed.tokens;
+    let exempt = test_mod_lines(toks);
+    let hot = HOT_PREFIXES.iter().any(|p| rel.starts_with(p));
+
+    let mut allows: HashMap<u32, HashSet<String>> = HashMap::new();
+    let mut report = FileReport::default();
+    for (line, text) in &lexed.comments {
+        match parse_allow(text) {
+            Allow::None => {}
+            Allow::Bare(rule) => report.bad_allows.push((*line, rule)),
+            Allow::WithReason(rule) => {
+                allows.entry(*line).or_default().insert(rule);
+            }
+        }
+    }
+
+    let mut raw: Vec<Violation> = Vec::new();
+
+    // R3a: `.lock().unwrap()` / `.try_lock().expect()` — poisoning must be
+    // tolerated, not propagated as a panic. Claims the unwrap/expect token
+    // so R1 does not double-report the same site.
+    let mut consumed: HashSet<usize> = HashSet::new();
+    for (j, t) in toks.iter().enumerate() {
+        if t.kind == Kind::Ident
+            && (t.text == "lock" || t.text == "try_lock")
+            && j.checked_sub(1).map(|q| txt(toks, q) == ".").unwrap_or(false)
+            && txt(toks, j + 1) == "("
+            && txt(toks, j + 2) == ")"
+            && txt(toks, j + 3) == "."
+            && (txt(toks, j + 4) == "unwrap" || txt(toks, j + 4) == "expect")
+            && txt(toks, j + 5) == "("
+        {
+            let what = txt(toks, j + 4);
+            let line = toks[j + 4].line;
+            consumed.insert(j + 4);
+            if exempt.contains(&t.line) {
+                continue;
+            }
+            let msg = format!(".{}().{what}() — use util::sync::lock_unpoisoned", t.text);
+            raw.push(Violation { rule: "lock-discipline", line, msg });
+        }
+    }
+
+    // R1: panic sites in hot paths.
+    if hot {
+        for (j, t) in toks.iter().enumerate() {
+            if exempt.contains(&t.line) || consumed.contains(&j) || t.kind != Kind::Ident {
+                continue;
+            }
+            if (t.text == "unwrap" || t.text == "expect")
+                && j.checked_sub(1).map(|q| txt(toks, q) == ".").unwrap_or(false)
+                && txt(toks, j + 1) == "("
+            {
+                let msg = format!(".{}()", t.text);
+                raw.push(Violation { rule: "panic-freedom", line: t.line, msg });
+            } else if PANIC_MACROS.contains(&t.text.as_str()) && txt(toks, j + 1) == "!" {
+                let msg = format!("{}!", t.text);
+                raw.push(Violation { rule: "panic-freedom", line: t.line, msg });
+            }
+        }
+    }
+
+    // R2: `.partial_cmp(` anywhere — NaN-safe ordering only.
+    for (j, t) in toks.iter().enumerate() {
+        if t.kind == Kind::Ident
+            && t.text == "partial_cmp"
+            && !exempt.contains(&t.line)
+            && j.checked_sub(1).map(|q| txt(toks, q) == ".").unwrap_or(false)
+            && txt(toks, j + 1) == "("
+        {
+            let msg = ".partial_cmp() — use f64::total_cmp or util::stats".to_string();
+            raw.push(Violation { rule: "float-ordering", line: t.line, msg });
+        }
+    }
+
+    // R3b: double acquisition while a guard is live.
+    check_double_lock(toks, &exempt, &mut raw);
+
+    // R4: wall-clock and ad-hoc randomness outside the sanctioned modules.
+    if !R4_ALLOW_FILES.contains(&rel) {
+        for (j, t) in toks.iter().enumerate() {
+            if exempt.contains(&t.line) || t.kind != Kind::Ident {
+                continue;
+            }
+            if (t.text == "Instant" || t.text == "SystemTime")
+                && txt(toks, j + 1) == "::"
+                && txt(toks, j + 2) == "now"
+            {
+                let msg = format!("{}::now()", t.text);
+                raw.push(Violation { rule: "determinism", line: t.line, msg });
+            } else if R4_IDENTS.contains(&t.text.as_str()) {
+                let msg = t.text.clone();
+                raw.push(Violation { rule: "determinism", line: t.line, msg });
+            }
+        }
+    }
+
+    // R5: atomic counter statics outside the scoped-telemetry modules.
+    if !R5_ALLOW_FILES.contains(&rel) {
+        for (j, t) in toks.iter().enumerate() {
+            if t.kind != Kind::Ident || t.text != "static" || exempt.contains(&t.line) {
+                continue;
+            }
+            if j.checked_sub(1).map(|q| txt(toks, q) == "!").unwrap_or(false) {
+                continue;
+            }
+            let mut q = j + 1;
+            while q < toks.len() {
+                let tq = txt(toks, q);
+                if tq == "=" || tq == ";" || tq == "{" {
+                    break;
+                }
+                if kind_at(toks, q) == Some(Kind::Ident) && tq.starts_with("Atomic") {
+                    let msg =
+                        format!("counter static of type {tq} — use a telemetry Sink/with_scope");
+                    raw.push(Violation { rule: "telemetry-scope", line: t.line, msg });
+                    break;
+                }
+                q += 1;
+            }
+        }
+    }
+
+    // Apply allow annotations: same line or the line above.
+    let empty: HashSet<String> = HashSet::new();
+    for v in raw {
+        let here = allows.get(&v.line).unwrap_or(&empty);
+        let above = v
+            .line
+            .checked_sub(1)
+            .and_then(|l| allows.get(&l))
+            .unwrap_or(&empty);
+        if here.contains(v.rule) || above.contains(v.rule) {
+            report.suppressed.push(v);
+        } else {
+            report.violations.push(v);
+        }
+    }
+    let mut inventory: Vec<(u32, String)> = allows
+        .into_iter()
+        .flat_map(|(line, rules)| rules.into_iter().map(move |r| (line, r)))
+        .collect();
+    inventory.sort();
+    report.allow_inventory = inventory;
+    report
+}

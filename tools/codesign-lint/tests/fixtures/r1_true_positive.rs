@@ -1,0 +1,12 @@
+// R1 fixture: hot-path panic sites. Linted under rel `model/fixture.rs`.
+pub fn pick(xs: &[f64]) -> f64 {
+    let first = xs.first().unwrap(); // violation: .unwrap() in a hot path
+    if first.is_nan() {
+        panic!("nan observation"); // violation: panic! in a hot path
+    }
+    *first
+}
+
+pub fn lookup(map: &std::collections::HashMap<u32, f64>, k: u32) -> f64 {
+    *map.get(&k).expect("key must exist") // violation: .expect()
+}

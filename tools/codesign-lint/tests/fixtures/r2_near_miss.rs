@@ -1,0 +1,9 @@
+// R2 near-miss: total_cmp is the sanctioned ordering, and defining a
+// function *named* partial_cmp (no `.` receiver) is not a call site.
+pub fn sort_scores(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+
+pub fn partial_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    a.total_cmp(&b)
+}

@@ -1,0 +1,4 @@
+// R2 fixture: NaN-unsafe float ordering.
+pub fn sort_scores(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)); // violation: .partial_cmp()
+}

@@ -1,0 +1,30 @@
+// R3 near-miss: re-acquisition is fine once the previous guard is dead —
+// an `if let` temporary dies when its block closes, and `drop(g)` kills a
+// named guard. `lock_unpoisoned` acquisitions are tracked the same way.
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::util::sync::lock_unpoisoned;
+
+pub struct Store {
+    map: Mutex<HashMap<u64, bool>>,
+}
+
+impl Store {
+    pub fn check(&self, key: u64) -> bool {
+        if let Some(v) = lock_unpoisoned(&self.map).get(&key) {
+            return *v;
+        }
+        let v = key % 3 == 0;
+        lock_unpoisoned(&self.map).insert(key, v); // guard above already dead
+        v
+    }
+
+    pub fn sequential(&self) -> usize {
+        let g = lock_unpoisoned(&self.map);
+        let n = g.len();
+        drop(g);
+        let h = lock_unpoisoned(&self.map); // fine: `g` was dropped
+        n + h.len()
+    }
+}

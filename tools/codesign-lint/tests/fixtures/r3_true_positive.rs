@@ -1,0 +1,22 @@
+// R3 fixture: poisoning-blind lock unwrap (R3a) and a second acquisition
+// while a guard from the same Mutex path is live (R3b, the PR-1 class).
+// Linted under a hot rel to also check R3a *claims* the unwrap token: the
+// same site must not double-report as panic-freedom.
+use std::sync::Mutex;
+
+pub struct S {
+    m: Mutex<Vec<u32>>,
+}
+
+impl S {
+    pub fn bad_unwrap(&self) -> usize {
+        self.m.lock().unwrap().len() // violation: lock().unwrap()
+    }
+
+    pub fn deadlock(&self) {
+        let guard = self.m.lock();
+        let again = self.m.lock(); // violation: `guard` is still live
+        drop(again);
+        drop(guard);
+    }
+}

@@ -1,0 +1,9 @@
+// R4 fixture: wall-clock and ad-hoc randomness outside util/{rng,benchkit}.
+use std::time::Instant;
+
+pub fn timed_step() -> f64 {
+    let t0 = Instant::now(); // violation: Instant::now()
+    let mut rng = thread_rng(); // violation: ad-hoc RNG entry point
+    let _ = &mut rng;
+    t0.elapsed().as_secs_f64()
+}

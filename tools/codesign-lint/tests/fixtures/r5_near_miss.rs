@@ -1,0 +1,20 @@
+// R5 near-miss: non-atomic statics are fine anywhere, and test modules may
+// keep local counters.
+static DIM_NAMES: [&str; 3] = ["R", "S", "K"];
+
+pub fn name(i: usize) -> &'static str {
+    DIM_NAMES[i % DIM_NAMES.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static TEST_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+    #[test]
+    fn counts_locally() {
+        TEST_EVENTS.fetch_add(1, Ordering::Relaxed);
+        assert!(TEST_EVENTS.load(Ordering::Relaxed) >= 1);
+    }
+}

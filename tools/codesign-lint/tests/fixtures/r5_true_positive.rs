@@ -1,0 +1,9 @@
+// R5 fixture: an ad-hoc atomic counter static outside the scoped-telemetry
+// modules — invisible to the per-run Sink/with_scope machinery.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static CACHE_HITS: AtomicU64 = AtomicU64::new(0); // violation
+
+pub fn record_hit() {
+    CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+}

@@ -1,0 +1,185 @@
+//! Fixture-driven rule tests plus the repo-clean self-test.
+//!
+//! Each rule R1–R5 has one planted true-positive and one near-miss fixture
+//! under `tests/fixtures/`. The self-test lints the real `rust/src` tree and
+//! must stay at zero violations — the committed allow inventory is the only
+//! sanctioned escape hatch, and CI ratchets it via `ci/lint-baseline.json`.
+
+use codesign_lint::lint_paths;
+use codesign_lint::report::{compare_baseline, parse_json, to_json, Json, Summary};
+use codesign_lint::rules::{check_source, FileReport};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+const R1_TP: &str = include_str!("fixtures/r1_true_positive.rs");
+const R1_NM: &str = include_str!("fixtures/r1_near_miss.rs");
+const R2_TP: &str = include_str!("fixtures/r2_true_positive.rs");
+const R2_NM: &str = include_str!("fixtures/r2_near_miss.rs");
+const R3_TP: &str = include_str!("fixtures/r3_true_positive.rs");
+const R3_NM: &str = include_str!("fixtures/r3_near_miss.rs");
+const R4_TP: &str = include_str!("fixtures/r4_true_positive.rs");
+const R4_NM: &str = include_str!("fixtures/r4_near_miss.rs");
+const R5_TP: &str = include_str!("fixtures/r5_true_positive.rs");
+const R5_NM: &str = include_str!("fixtures/r5_near_miss.rs");
+
+fn count(report: &FileReport, rule: &str) -> usize {
+    report.violations.iter().filter(|v| v.rule == rule).count()
+}
+
+fn repo_rust_src() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src")
+}
+
+#[test]
+fn r1_flags_hot_path_panics() {
+    let r = check_source(R1_TP, "model/fixture.rs");
+    assert_eq!(count(&r, "panic-freedom"), 3);
+    assert_eq!(r.violations.len(), 3);
+}
+
+#[test]
+fn r1_ignores_cold_paths() {
+    let r = check_source(R1_TP, "figures/fixture.rs");
+    assert!(r.violations.is_empty());
+}
+
+#[test]
+fn r1_near_miss_is_clean() {
+    let r = check_source(R1_NM, "model/fixture.rs");
+    assert!(r.violations.is_empty(), "near-miss flagged: {:?}", r.violations);
+    assert_eq!(r.suppressed.len(), 1);
+    assert_eq!(r.allow_inventory, [(4, "panic-freedom".to_string())]);
+}
+
+#[test]
+fn r2_flags_partial_cmp() {
+    let r = check_source(R2_TP, "model/fixture.rs");
+    assert_eq!(count(&r, "float-ordering"), 1);
+    assert_eq!(r.violations.len(), 1);
+}
+
+#[test]
+fn r2_near_miss_is_clean() {
+    let r = check_source(R2_NM, "model/fixture.rs");
+    assert!(r.violations.is_empty(), "near-miss flagged: {:?}", r.violations);
+}
+
+#[test]
+fn r3_flags_lock_unwrap_and_double_lock() {
+    let r = check_source(R3_TP, "runtime/fixture.rs");
+    assert_eq!(count(&r, "lock-discipline"), 2);
+    // R3a claims the `.unwrap()` token, so the same site must not also be
+    // reported as a panic-freedom violation despite the hot rel.
+    assert_eq!(count(&r, "panic-freedom"), 0);
+}
+
+#[test]
+fn r3_near_miss_is_clean() {
+    let r = check_source(R3_NM, "runtime/fixture.rs");
+    assert!(r.violations.is_empty(), "near-miss flagged: {:?}", r.violations);
+}
+
+#[test]
+fn r4_flags_wall_clock_and_adhoc_rng() {
+    let r = check_source(R4_TP, "opt/fixture.rs");
+    assert_eq!(count(&r, "determinism"), 2);
+}
+
+#[test]
+fn r4_allowlisted_module_is_exempt() {
+    let r = check_source(R4_TP, "util/rng.rs");
+    assert!(r.violations.is_empty(), "allowlist ignored: {:?}", r.violations);
+}
+
+#[test]
+fn r4_near_miss_is_clean() {
+    let r = check_source(R4_NM, "opt/fixture.rs");
+    assert!(r.violations.is_empty(), "near-miss flagged: {:?}", r.violations);
+}
+
+#[test]
+fn r5_flags_adhoc_atomic_static() {
+    let r = check_source(R5_TP, "model/fixture.rs");
+    assert_eq!(count(&r, "telemetry-scope"), 1);
+    assert_eq!(r.violations.len(), 1);
+}
+
+#[test]
+fn r5_telemetry_modules_are_exempt() {
+    let r = check_source(R5_TP, "coordinator/metrics.rs");
+    assert!(r.violations.is_empty(), "allowlist ignored: {:?}", r.violations);
+}
+
+#[test]
+fn r5_near_miss_is_clean() {
+    let r = check_source(R5_NM, "model/fixture.rs");
+    assert!(r.violations.is_empty(), "near-miss flagged: {:?}", r.violations);
+}
+
+#[test]
+fn reasonless_allow_is_a_violation() {
+    let src = "// lint: allow(determinism)\nfn f() {}\n";
+    let r = check_source(src, "model/fixture.rs");
+    assert_eq!(r.bad_allows, [(1, "determinism".to_string())]);
+    assert!(r.allow_inventory.is_empty());
+}
+
+#[test]
+fn reasoned_allow_is_inventoried() {
+    let src = "// lint: allow(determinism) — fixture reason\nfn f() {}\n";
+    let r = check_source(src, "model/fixture.rs");
+    assert!(r.bad_allows.is_empty());
+    assert_eq!(r.allow_inventory, [(1, "determinism".to_string())]);
+}
+
+#[test]
+fn repo_tree_is_clean() {
+    let (summary, findings) = lint_paths(&[repo_rust_src()]).expect("lint rust/src");
+    let lines: Vec<String> = findings
+        .iter()
+        .map(|f| {
+            let v = &f.violation;
+            format!("{}:{}: [{}] {}", f.file, v.line, v.rule, v.msg)
+        })
+        .collect();
+    assert!(lines.is_empty(), "repo lint violations:\n{}", lines.join("\n"));
+    assert_eq!(summary.total_violations(), 0);
+}
+
+#[test]
+fn cli_exits_zero_on_clean_tree() {
+    let report = std::env::temp_dir().join("codesign_lint_selftest.json");
+    let status = Command::new(env!("CARGO_BIN_EXE_codesign-lint"))
+        .arg(repo_rust_src())
+        .arg("--report")
+        .arg(&report)
+        .status()
+        .expect("spawn codesign-lint");
+    assert!(status.success());
+}
+
+#[test]
+fn report_round_trips_and_self_baseline_passes() {
+    let (summary, _) = lint_paths(&[repo_rust_src()]).expect("lint rust/src");
+    let doc = parse_json(&to_json(&summary)).expect("report parses");
+    assert_eq!(doc.get("version").and_then(Json::as_usize), Some(1));
+    assert!(compare_baseline(&summary, &doc).is_empty());
+}
+
+#[test]
+fn ratchet_flags_regressions() {
+    let mut summary = Summary::new();
+    summary.violations.insert("determinism".to_string(), 2);
+    let base = r#"{"rules": {"determinism": {"violations": 1, "allows": 0}}}"#;
+    let baseline = parse_json(base).expect("baseline parses");
+    let regressions = compare_baseline(&summary, &baseline);
+    assert_eq!(regressions.len(), 1);
+    assert!(regressions[0].contains("determinism"));
+}
+
+#[test]
+fn parser_rejects_malformed_json() {
+    assert!(parse_json("{} x").is_err());
+    assert!(parse_json("[1, 2, ]").is_err());
+    assert!(parse_json(r#"{"a": }"#).is_err());
+}

@@ -15,6 +15,12 @@ not, which is what makes a committed baseline meaningful. Produced files may
 contain extra ratios not yet pinned by a baseline — those are reported but do
 not gate, so a new bench can ship before its first baseline is ratcheted.
 
+A malformed file (unparseable JSON, missing/non-object ``ratios``, or a
+non-numeric ratio value) is reported as a named failure for that bench — the
+comparison never dies with a raw traceback, and every other bench still gets
+checked. The run ends with a per-bench markdown summary table (pasteable
+into a PR comment or CI job summary).
+
 Stdlib only: the repo's offline policy bans new dependencies.
 """
 
@@ -26,12 +32,31 @@ import sys
 TOLERANCE = 0.8  # produced must reach this fraction of the baseline ratio
 
 
-def load(path: pathlib.Path) -> dict:
-    with path.open() as fh:
-        doc = json.load(fh)
-    if not isinstance(doc, dict) or "ratios" not in doc:
-        raise ValueError(f"{path}: missing 'ratios' section")
-    return doc
+def load_ratios(path: pathlib.Path, role: str):
+    """Parse one bench JSON; returns (ratios_dict, error_message_or_None)."""
+    try:
+        with path.open() as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as err:
+        return None, f"{path.name}: unreadable {role} file: {err}"
+    if not isinstance(doc, dict) or not isinstance(doc.get("ratios"), dict):
+        return None, f"{path.name}: {role} file has no 'ratios' object"
+    bad = [k for k, v in doc["ratios"].items() if not isinstance(v, (int, float))]
+    if bad:
+        return None, (
+            f"{path.name}: {role} ratios {sorted(bad)} are not numbers"
+        )
+    return dict(doc["ratios"]), None
+
+
+def markdown_table(rows) -> str:
+    head = "| bench | ratio | produced | baseline | floor | verdict |"
+    rule = "|---|---|---|---|---|---|"
+    body = [
+        f"| {bench} | {key} | {got} | {want} | {floor} | {verdict} |"
+        for bench, key, got, want, floor, verdict in rows
+    ]
+    return "\n".join([head, rule, *body])
 
 
 def main() -> int:
@@ -54,36 +79,60 @@ def main() -> int:
         return 1
 
     failures = []
+    rows = []  # (bench, key, produced, baseline, floor, verdict)
     for base_path in baselines:
-        base = load(base_path)
-        prod_path = produced_dir / base_path.name
+        bench = base_path.name
+        base_ratios, err = load_ratios(base_path, "baseline")
+        if err is not None:
+            failures.append(err)
+            rows.append((bench, "-", "-", "-", "-", "BAD BASELINE"))
+            continue
+        if not base_ratios:
+            failures.append(f"{bench}: baseline pins no ratios")
+            rows.append((bench, "-", "-", "-", "-", "BAD BASELINE"))
+            continue
+        prod_path = produced_dir / bench
         if not prod_path.is_file():
-            failures.append(f"{base_path.name}: no produced file in {produced_dir}")
+            failures.append(f"{bench}: no produced file in {produced_dir}")
+            rows.append((bench, "-", "-", "-", "-", "MISSING RUN"))
             continue
         if prod_path.stat().st_size == 0:
-            failures.append(f"{base_path.name}: produced file is empty")
+            failures.append(f"{bench}: produced file is empty")
+            rows.append((bench, "-", "-", "-", "-", "MISSING RUN"))
             continue
-        prod = load(prod_path)
-        prod_ratios = dict(prod["ratios"])
-        for key, want in base["ratios"].items():
+        prod_ratios, err = load_ratios(prod_path, "produced")
+        if err is not None:
+            failures.append(err)
+            rows.append((bench, "-", "-", "-", "-", "BAD RUN"))
+            continue
+        for key, want in base_ratios.items():
             got = prod_ratios.pop(key, None)
             if got is None:
-                failures.append(f"{base_path.name}: ratio '{key}' missing from run")
+                failures.append(
+                    f"{bench}: ratio '{key}' pinned by the baseline is missing "
+                    f"from the run (did the bench stop emitting it?)"
+                )
+                rows.append((bench, key, "-", f"{want:.2f}x", "-", "MISSING"))
                 continue
             floor = args.tolerance * want
             verdict = "ok" if got >= floor else "REGRESSED"
             print(
-                f"{base_path.name}: {key}: produced {got:.2f}x vs baseline "
+                f"{bench}: {key}: produced {got:.2f}x vs baseline "
                 f"{want:.2f}x (floor {floor:.2f}x) {verdict}"
+            )
+            rows.append(
+                (bench, key, f"{got:.2f}x", f"{want:.2f}x", f"{floor:.2f}x", verdict)
             )
             if got < floor:
                 failures.append(
-                    f"{base_path.name}: '{key}' regressed: {got:.2f}x < "
+                    f"{bench}: '{key}' regressed: {got:.2f}x < "
                     f"{floor:.2f}x ({args.tolerance:.0%} of baseline {want:.2f}x)"
                 )
         for key, got in sorted(prod_ratios.items()):
-            print(f"{base_path.name}: {key}: produced {got:.2f}x (no baseline yet)")
+            print(f"{bench}: {key}: produced {got:.2f}x (no baseline yet)")
+            rows.append((bench, key, f"{got:.2f}x", "-", "-", "unpinned"))
 
+    print("\n" + markdown_table(rows))
     if failures:
         print(f"\n{len(failures)} bench baseline failure(s):", file=sys.stderr)
         for f in failures:

@@ -29,6 +29,8 @@ use crate::coordinator::run::{self, JobSpec};
 use crate::model::arch::HwConfig;
 use crate::model::cache::EvalCache;
 use crate::model::mapping::Mapping;
+use crate::obs::span::SpanStats;
+use crate::obs::trace::TraceConfig;
 use crate::opt::config::NestedConfig;
 use crate::opt::hw_search::{HwMethod, HwTrace};
 use crate::opt::sw_search::{self, SwMethod};
@@ -50,6 +52,9 @@ pub struct CodesignOutcome {
     /// The run was cancelled before completing its configured trials; the
     /// trace, incumbent and metrics cover the work done up to that point.
     pub cancelled: bool,
+    /// Per-phase span snapshot (counts, durations, latency histograms)
+    /// accumulated by the run's profiler; see `obs::span`.
+    pub spans: SpanStats,
 }
 
 /// Driver configuration.
@@ -65,6 +70,8 @@ pub struct Driver {
     /// saves the cache back to it when the search finishes. Checkpoints
     /// record the path so follow-up runs can find the warm cache.
     pub cache_snapshot_path: Option<PathBuf>,
+    /// Trace journaling for the run (see `obs::trace`); `None` is quiet.
+    pub trace: Option<TraceConfig>,
     pub verbose: bool,
     /// Evaluation cache shared by every software search this driver runs.
     pub cache: Arc<EvalCache>,
@@ -79,6 +86,7 @@ impl Driver {
             threads: default_threads(),
             checkpoint_path: None,
             cache_snapshot_path: None,
+            trace: None,
             verbose: true,
             cache: Arc::new(EvalCache::default()),
         }
@@ -139,6 +147,7 @@ impl Driver {
             seed,
             checkpoint_path: self.checkpoint_path.clone(),
             cache_snapshot_path: self.cache_snapshot_path.clone(),
+            trace: self.trace.clone(),
             verbose: self.verbose,
         };
         let scheduler = JobScheduler::with_shared(
@@ -171,6 +180,7 @@ pub fn eyeriss_baseline(
         threads,
         checkpoint_path: None,
         cache_snapshot_path: None,
+        trace: None,
         verbose: false,
         cache: Arc::new(EvalCache::default()),
     };

@@ -5,10 +5,10 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::model::cache::CacheStats;
 use crate::model::delta::telemetry::DeltaStats;
+use crate::obs::clock::Stopwatch;
 use crate::space::feasible::telemetry::FeasibilityStats;
 use crate::surrogate::telemetry::SurrogateStats;
 
@@ -94,7 +94,10 @@ pub struct Metrics {
     /// vanish into stderr.
     pub checkpoint_save_failures: AtomicU64,
     pub snapshot_io_failures: AtomicU64,
-    start: Instant,
+    /// Trace-journal create/write failures (accumulated): the run
+    /// continues untraced but the degradation is visible in the report.
+    pub trace_io_failures: AtomicU64,
+    start: Stopwatch,
 }
 
 impl Metrics {
@@ -141,8 +144,8 @@ impl Metrics {
             cache_snapshot_hits: AtomicU64::new(0),
             checkpoint_save_failures: AtomicU64::new(0),
             snapshot_io_failures: AtomicU64::new(0),
-            // lint: allow(determinism) — wall-clock feeds the human-readable report only
-            start: Instant::now(),
+            trace_io_failures: AtomicU64::new(0),
+            start: Stopwatch::start(),
         })
     }
 
@@ -204,6 +207,12 @@ impl Metrics {
         self.snapshot_io_failures.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Trace-journal IO failures accumulated by the run's `RunTracer`
+    /// (folded in once at run end; the journal degrades to disabled).
+    pub fn add_trace_io_failures(&self, n: u64) {
+        self.trace_io_failures.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Surface a delta-evaluation snapshot (typically the per-run delta of
     /// the process-global counters) in the run telemetry.
     pub fn record_delta(&self, stats: DeltaStats) {
@@ -263,7 +272,7 @@ impl Metrics {
              cache_entries={} cache_probationary={} cache_protected={} \
              cache_promotions={} cache_demotions={} cache_snapshot_loaded={} \
              cache_snapshot_hits={} checkpoint_save_failures={} \
-             snapshot_io_failures={} elapsed={:.1}s",
+             snapshot_io_failures={} trace_io_failures={} elapsed={:.1}s",
             self.sim_evals.load(Ordering::Relaxed),
             self.feasible_evals.load(Ordering::Relaxed),
             self.raw_draws.load(Ordering::Relaxed),
@@ -307,6 +316,7 @@ impl Metrics {
             self.cache_snapshot_hits.load(Ordering::Relaxed),
             self.checkpoint_save_failures.load(Ordering::Relaxed),
             self.snapshot_io_failures.load(Ordering::Relaxed),
+            self.trace_io_failures.load(Ordering::Relaxed),
             self.elapsed_secs()
         )
     }
@@ -435,9 +445,11 @@ mod tests {
         m.record_checkpoint_save_failure();
         m.record_checkpoint_save_failure();
         m.record_snapshot_io_failure();
+        m.add_trace_io_failures(3);
         let report = m.report();
         assert!(report.contains("checkpoint_save_failures=2"), "{report}");
         assert!(report.contains("snapshot_io_failures=1"), "{report}");
+        assert!(report.contains("trace_io_failures=3"), "{report}");
     }
 
     #[test]
@@ -521,6 +533,7 @@ mod tests {
         });
         m.record_checkpoint_save_failure();
         m.record_snapshot_io_failure();
+        m.add_trace_io_failures(2);
         let kv = parse_report(&m.report());
         // every stored numeric field must survive the round trip verbatim
         let expect = [
@@ -565,6 +578,7 @@ mod tests {
             ("cache_snapshot_hits", "9"),
             ("checkpoint_save_failures", "1"),
             ("snapshot_io_failures", "1"),
+            ("trace_io_failures", "2"),
         ];
         for (k, v) in expect {
             assert_eq!(kv.get(k).map(String::as_str), Some(v), "field {k}");

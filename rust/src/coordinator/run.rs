@@ -39,6 +39,8 @@ use crate::model::batch::{AdaptiveChunker, BatchEvaluator};
 use crate::model::cache::EvalCache;
 use crate::model::delta::telemetry as delta_telemetry;
 use crate::model::eval::Evaluator;
+use crate::obs::span::{self, Phase, SpanProfiler, SpanStats};
+use crate::obs::trace::{RunTracer, TraceConfig};
 use crate::opt::config::{BoConfig, NestedConfig};
 use crate::opt::hw_search::{self, Chunking, HwMethod, HwTrace};
 use crate::opt::sw_search::{self, SearchTrace, SwMethod, SwProblem};
@@ -71,6 +73,9 @@ pub struct JobSpec {
     /// loading this snapshot (if present and fingerprint-compatible) and
     /// saves the cache back to it when the search finishes.
     pub cache_snapshot_path: Option<PathBuf>,
+    /// Trace journaling: when set, the run appends JSONL events to
+    /// `trace.path` (see `obs::trace`); `None` journals nothing.
+    pub trace: Option<TraceConfig>,
     pub verbose: bool,
 }
 
@@ -87,22 +92,25 @@ impl JobSpec {
             seed,
             checkpoint_path: None,
             cache_snapshot_path: None,
+            trace: None,
             verbose: false,
         }
     }
 }
 
-/// One per-run telemetry sink per scoped subsystem. [`RunScope::enter`]
-/// installs all three on the calling thread for the duration of a closure;
-/// the run state machine enters the scope on the search thread *and*
-/// inside every worker-pool job, so a run's surrogate / feasibility /
-/// delta events accumulate into its own sinks no matter which thread
-/// produced them — exact per-run deltas with no global baselines.
+/// One per-run telemetry sink per scoped subsystem, plus the run's span
+/// profiler. [`RunScope::enter`] installs all four on the calling thread
+/// for the duration of a closure; the run state machine enters the scope
+/// on the search thread *and* inside every worker-pool job, so a run's
+/// surrogate / feasibility / delta events and phase spans accumulate into
+/// its own sinks no matter which thread produced them — exact per-run
+/// deltas with no global baselines.
 #[derive(Debug, Default)]
 pub struct RunScope {
     surrogate: Arc<gp_telemetry::Sink>,
     feasibility: Arc<feas_telemetry::Sink>,
     delta: Arc<delta_telemetry::Sink>,
+    spans: Arc<SpanProfiler>,
 }
 
 impl RunScope {
@@ -110,12 +118,15 @@ impl RunScope {
         RunScope::default()
     }
 
-    /// Run `f` with all three sinks installed as the calling thread's
-    /// active telemetry scope (restored on exit, also on unwind).
+    /// Run `f` with all three sinks and the span profiler installed as the
+    /// calling thread's active telemetry scope (restored on exit, also on
+    /// unwind).
     pub fn enter<R>(&self, f: impl FnOnce() -> R) -> R {
         gp_telemetry::with_scope(&self.surrogate, || {
             feas_telemetry::with_scope(&self.feasibility, || {
-                delta_telemetry::with_scope(&self.delta, f)
+                delta_telemetry::with_scope(&self.delta, || {
+                    span::with_profiler(&self.spans, f)
+                })
             })
         })
     }
@@ -133,6 +144,17 @@ impl RunScope {
     /// This run's delta-evaluation events so far.
     pub fn delta_stats(&self) -> delta_telemetry::DeltaStats {
         self.delta.snapshot()
+    }
+
+    /// The run's span profiler (for explicit-handle timing of phases that
+    /// run outside the scoped closure, e.g. snapshot IO).
+    pub fn span_profiler(&self) -> &SpanProfiler {
+        &self.spans
+    }
+
+    /// This run's per-phase span snapshot so far.
+    pub fn span_stats(&self) -> SpanStats {
+        self.spans.stats()
     }
 
     /// Publish the per-run sink contents into a run's [`Metrics`].
@@ -388,18 +410,45 @@ impl SearchRun {
     pub fn run(self, backend: &GpBackend) -> CodesignOutcome {
         let SearchRun { spec, cache, certs, scope, metrics, status } = self;
         let model = &spec.model;
+        let run_id = format!("{}-{}", model.name, spec.seed);
+        let mut tracer = match &spec.trace {
+            Some(cfg) => RunTracer::create(cfg, &run_id),
+            None => RunTracer::disabled(),
+        };
+        tracer.run_start(
+            model.name,
+            spec.seed,
+            spec.ncfg.hw_trials,
+            spec.ncfg.sw_trials,
+            spec.threads,
+        );
         if status.is_cancelled() {
             status.set_phase(RunPhase::Cancelled);
             scope.record_into(&metrics);
+            let span_stats = scope.span_stats();
+            tracer.run_end(
+                true,
+                0,
+                0,
+                0,
+                scope.surrogate_stats(),
+                scope.feasibility_stats(),
+                scope.delta_stats(),
+                None,
+                &span_stats,
+            );
+            metrics.add_trace_io_failures(tracer.io_failures());
             return CodesignOutcome {
                 hw_trace: HwTrace::new(),
                 best: None,
                 metrics,
                 cancelled: true,
+                spans: span_stats,
             };
         }
 
         status.set_phase(RunPhase::WarmStart);
+        tracer.phase(RunPhase::WarmStart.name());
         // One pruned space per run, shared by the whole hardware search:
         // candidate configs are certified against every layer of the target
         // model and provably-empty ones never reach the simulator. The
@@ -420,16 +469,23 @@ impl SearchRun {
         );
         if let Some(path) = &spec.cache_snapshot_path {
             if path.exists() {
-                match snapshot_io.load_snapshot(path) {
-                    Ok(n) => eprintln!(
-                        "[{}] loaded cache snapshot: {n} entries from {}",
-                        model.name,
-                        path.display()
-                    ),
+                let loaded = scope
+                    .span_profiler()
+                    .time(Phase::Checkpoint, || snapshot_io.load_snapshot(path));
+                match loaded {
+                    Ok(n) => {
+                        tracer.snapshot_load(true, n as u64);
+                        eprintln!(
+                            "[{}] loaded cache snapshot: {n} entries from {}",
+                            model.name,
+                            path.display()
+                        );
+                    }
                     // a stale or foreign snapshot degrades to a cold start,
                     // never to wrong results
                     Err(e) => {
                         metrics.record_snapshot_io_failure();
+                        tracer.snapshot_load(false, 0);
                         eprintln!("[{}] cache snapshot ignored: {e:#}", model.name);
                     }
                 }
@@ -441,6 +497,7 @@ impl SearchRun {
         let chunker = AdaptiveChunker::new(Arc::clone(&cache), evals_per_config);
 
         status.set_phase(RunPhase::Searching);
+        tracer.phase(RunPhase::Searching.name());
         let hw_trace = scope.enter(|| {
             let ctx = HwBatchCtx {
                 model,
@@ -460,9 +517,11 @@ impl SearchRun {
                     status.add_trials(hws.len() as u64);
                     return hws.iter().map(|_| None).collect();
                 }
-                let outs =
-                    evaluate_hardware_batch(&ctx, hws, backend, &metrics, spec.seed + base as u64);
-                outs.into_iter()
+                let outs = scope.span_profiler().time(Phase::Evaluate, || {
+                    evaluate_hardware_batch(&ctx, hws, backend, &metrics, spec.seed + base as u64)
+                });
+                let results: Vec<Option<f64>> = outs
+                    .into_iter()
                     .enumerate()
                     .map(|(k, out)| {
                         let t = base + k;
@@ -482,12 +541,20 @@ impl SearchRun {
                                     hw: hws[k].clone(),
                                     layers: layers.clone(),
                                 };
+                                let mut checkpointed = false;
                                 if let Some(path) = &spec.checkpoint_path {
-                                    if let Err(e) = ck.save(path) {
-                                        metrics.record_checkpoint_save_failure();
-                                        eprintln!("checkpoint save failed: {e:#}");
+                                    let saved = scope
+                                        .span_profiler()
+                                        .time(Phase::Checkpoint, || ck.save(path));
+                                    match saved {
+                                        Ok(()) => checkpointed = true,
+                                        Err(e) => {
+                                            metrics.record_checkpoint_save_failure();
+                                            eprintln!("checkpoint save failed: {e:#}");
+                                        }
                                     }
                                 }
+                                tracer.incumbent(t as u64, *edp, checkpointed);
                                 *guard = Some(ck);
                             }
                             if spec.verbose {
@@ -506,7 +573,18 @@ impl SearchRun {
                         }
                         out.map(|(edp, _)| edp)
                     })
-                    .collect()
+                    .collect();
+                let feasible = results.iter().filter(|r| r.is_some()).count() as u64;
+                tracer.batch(
+                    base as u64,
+                    hws.len() as u64,
+                    feasible,
+                    scope.surrogate_stats(),
+                    scope.feasibility_stats(),
+                    scope.delta_stats(),
+                    scope.span_profiler(),
+                );
+                results
             };
 
             let mut rng = Rng::seed_from_u64(spec.seed);
@@ -523,25 +601,60 @@ impl SearchRun {
         });
 
         status.set_phase(RunPhase::Persisting);
+        tracer.phase(RunPhase::Persisting.name());
         if let Some(path) = &spec.cache_snapshot_path {
-            match snapshot_io.save_snapshot(path) {
-                Ok(n) => eprintln!(
-                    "[{}] saved cache snapshot: {n} entries to {}",
-                    model.name,
-                    path.display()
-                ),
+            let saved = scope
+                .span_profiler()
+                .time(Phase::Checkpoint, || snapshot_io.save_snapshot(path));
+            match saved {
+                Ok(n) => {
+                    tracer.snapshot_save(true, n as u64);
+                    eprintln!(
+                        "[{}] saved cache snapshot: {n} entries to {}",
+                        model.name,
+                        path.display()
+                    );
+                }
                 Err(e) => {
                     metrics.record_snapshot_io_failure();
+                    tracer.snapshot_save(false, 0);
                     eprintln!("[{}] cache snapshot save failed: {e:#}", model.name);
                 }
             }
         }
         metrics.record_cache(cache.stats());
-        scope.record_into(&metrics);
+        // Read each subsystem's run totals exactly once and feed the same
+        // values to both the metrics report and the journal's run_end, so
+        // the two reconcile field-for-field.
+        let gp = scope.surrogate_stats();
+        let feas = scope.feasibility_stats();
+        let delta = scope.delta_stats();
+        metrics.record_surrogate(gp);
+        metrics.record_feasibility(feas);
+        metrics.record_delta(delta);
         let cancelled = status.is_cancelled();
         status.set_phase(if cancelled { RunPhase::Cancelled } else { RunPhase::Finished });
+        let span_stats = scope.span_stats();
+        // cache stats are shared across concurrent jobs, hence excluded
+        // from deterministic journals (hit/miss attribution races)
+        let cache_for_journal = spec
+            .trace
+            .as_ref()
+            .and_then(|cfg| (!cfg.deterministic).then(|| cache.stats()));
+        tracer.run_end(
+            cancelled,
+            metrics.sim_evals.load(Ordering::Relaxed),
+            metrics.raw_draws.load(Ordering::Relaxed),
+            metrics.feasible_evals.load(Ordering::Relaxed),
+            gp,
+            feas,
+            delta,
+            cache_for_journal,
+            &span_stats,
+        );
+        metrics.add_trace_io_failures(tracer.io_failures());
         let best = best.into_inner().unwrap_or_else(PoisonError::into_inner);
-        CodesignOutcome { hw_trace, best, metrics, cancelled }
+        CodesignOutcome { hw_trace, best, metrics, cancelled, spans: span_stats }
     }
 }
 

@@ -13,10 +13,13 @@
 //! * [`opt`] — the constrained-BO optimizers and all baselines.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas GP math.
 //! * [`coordinator`] — the nested co-design driver (threads, metrics, CLI).
+//! * [`obs`] — structured observability: trace journal, span profiling,
+//!   fleet metrics exposition.
 //! * [`figures`] — harnesses regenerating every figure of the paper.
 pub mod coordinator;
 pub mod figures;
 pub mod model;
+pub mod obs;
 pub mod opt;
 pub mod runtime;
 pub mod space;

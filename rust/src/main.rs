@@ -8,6 +8,7 @@
 //!                              (one scheduler, shared cache + certificates)
 //!   fig3|fig4|fig5a|fig5b|fig5c|fig16|fig17|fig18|insight
 //!                              regenerate the paper's figures (CSV under results/)
+//!   trace summarize|diff       render or compare run-trace journals
 //!   selftest                   artifact <-> native GP numerical cross-check
 //!
 //! Common flags: --model NAME --layer NAME --trials N --hw-trials N
@@ -15,6 +16,12 @@
 //!   --method M --native (use the pure-Rust GP instead of the PJRT artifacts)
 //!   --cache-policy slru|fifo --cache-snapshot PATH (codesign: persist the
 //!   evaluation cache across runs and warm-start from a prior run)
+//!
+//! Observability (see rust/src/obs/README.md): --trace PATH (codesign) /
+//!   --trace-dir DIR (schedule) write per-run JSONL journals, deterministic
+//!   unless --trace-wall adds wall-clock data; --metrics-addr HOST:PORT
+//!   serves the fleet's Prometheus exposition while a schedule runs;
+//!   --metrics-out PATH dumps the final exposition to a file.
 
 use std::collections::HashMap;
 
@@ -25,11 +32,13 @@ use codesign::coordinator::run::JobSpec;
 use codesign::figures::{fig3, fig4, fig5a, fig5bc, insight, FigOpts};
 use codesign::model::cache::{CachePolicy, EvalCache, DEFAULT_CAPACITY, DEFAULT_SHARDS};
 use codesign::model::eval::Evaluator;
+use codesign::obs::clock::Stopwatch;
+use codesign::obs::trace::{self as trace_journal, TraceConfig};
 use codesign::opt::config::{BoConfig, NestedConfig};
 use codesign::opt::hw_search::HwMethod;
 use codesign::opt::sw_search::{search, SurrogateKind, SwMethod, SwProblem};
 use codesign::runtime::jobs::JobScheduler;
-use codesign::runtime::server::GpServer;
+use codesign::runtime::server::{GpServer, MetricsServer};
 use codesign::space::sw_space::SwSpace;
 use codesign::surrogate::gp::GpBackend;
 use codesign::util::rng::Rng;
@@ -40,6 +49,9 @@ struct Args {
     cmd: String,
     flags: HashMap<String, String>,
     bools: Vec<String>,
+    /// Positional operands after the subcommand (e.g. journal paths for
+    /// `trace summarize` / `trace diff`), in order.
+    pos: Vec<String>,
 }
 
 impl Args {
@@ -48,6 +60,7 @@ impl Args {
         let cmd = it.next().unwrap_or_else(|| "help".to_string());
         let mut flags = HashMap::new();
         let mut bools = Vec::new();
+        let mut pos = Vec::new();
         let mut pending: Option<String> = None;
         for tok in it {
             if let Some(name) = tok.strip_prefix("--") {
@@ -58,13 +71,13 @@ impl Args {
             } else if let Some(name) = pending.take() {
                 flags.insert(name, tok);
             } else {
-                bail!("unexpected positional argument: {tok}");
+                pos.push(tok);
             }
         }
         if let Some(p) = pending.take() {
             bools.push(p);
         }
-        Ok(Args { cmd, flags, bools })
+        Ok(Args { cmd, flags, bools, pos })
     }
 
     fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
@@ -176,8 +189,7 @@ fn cmd_sw_opt(args: &Args) -> Result<()> {
     let trials = args.get("trials", 250usize)?;
     let problem = fig3::problem_for(&layer);
     let mut rng = Rng::seed_from_u64(args.get("seed", 0u64)?);
-    // lint: allow(determinism) — CLI wall-clock for the progress line only
-    let t0 = std::time::Instant::now();
+    let t0 = Stopwatch::start();
     let trace = search(method, &problem, trials, &BoConfig::software(), &backend, &mut rng);
     println!(
         "{layer} {}: best EDP {:.4e} after {} trials ({} raw draws, {:.1}s)",
@@ -223,6 +235,9 @@ fn cmd_codesign(args: &Args) -> Result<()> {
     driver.cache = std::sync::Arc::new(cache);
     if let Some(p) = args.flags.get("cache-snapshot") {
         driver.cache_snapshot_path = Some(p.into());
+    }
+    if let Some(p) = args.flags.get("trace") {
+        driver.trace = Some(TraceConfig::new(p, !args.bool("trace-wall")));
     }
 
     let seed = args.get("seed", 2020u64)?;
@@ -289,6 +304,11 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     let max_jobs = args.get("jobs", 0usize)?;
     let out_dir: std::path::PathBuf = args.str("out", "results").into();
     let _ = std::fs::create_dir_all(&out_dir);
+    let trace_dir = args.flags.get("trace-dir").map(std::path::PathBuf::from);
+    if let Some(d) = &trace_dir {
+        std::fs::create_dir_all(d)
+            .with_context(|| format!("creating trace dir {}", d.display()))?;
+    }
 
     println!(
         "scheduling {} co-design jobs ({} hw x {} sw trials each, {threads} threads/job, {})",
@@ -299,6 +319,19 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     );
 
     let sched = JobScheduler::with_capacity(backend, max_jobs);
+    let _metrics_server = match args.flags.get("metrics-addr") {
+        Some(addr) => {
+            let server = MetricsServer::start(
+                addr,
+                std::sync::Arc::clone(sched.fleet()),
+                std::sync::Arc::clone(sched.cache()),
+                std::sync::Arc::clone(sched.certificate_store()),
+            )?;
+            println!("fleet metrics exposition at http://{}/metrics", server.addr());
+            Some(server)
+        }
+        None => None,
+    };
     let mut handles = Vec::new();
     for (i, name) in names.iter().enumerate() {
         let model = model_by_name(name).with_context(|| format!("unknown model {name}"))?;
@@ -306,6 +339,10 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         spec.sw_method = sw;
         spec.threads = threads;
         spec.checkpoint_path = Some(out_dir.join(format!("best_design_{name}.txt")));
+        if let Some(d) = &trace_dir {
+            let path = d.join(format!("TRACE_{name}.jsonl"));
+            spec.trace = Some(TraceConfig::new(path, !args.bool("trace-wall")));
+        }
         handles.push((name.to_string(), sched.submit(spec)));
     }
 
@@ -349,7 +386,55 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         stats.misses,
         sched.certificate_store().len()
     );
+    let fleet = sched.fleet();
+    println!(
+        "fleet: {} jobs completed ({} cancelled), {} simulator evals / {} raw draws total",
+        fleet.jobs_completed(),
+        fleet.jobs_cancelled(),
+        fleet.counter("sim_evals"),
+        fleet.counter("raw_draws"),
+    );
+    if let Some(d) = &trace_dir {
+        println!("trace journals under {} (render with `codesign trace summarize`)", d.display());
+    }
+    if let Some(p) = args.flags.get("metrics-out") {
+        std::fs::write(p, sched.fleet_exposition())
+            .with_context(|| format!("writing metrics exposition to {p}"))?;
+        println!("wrote fleet metrics exposition to {p}");
+    }
     Ok(())
+}
+
+/// `codesign trace summarize <journal>` / `codesign trace diff <a> <b>`:
+/// render a run-trace journal written by `--trace`/`--trace-dir`, or compare
+/// two journals after stripping wall-clock-only fields (see obs::trace).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let journal = |p: &String| -> Result<Vec<codesign::obs::json::Json>> {
+        trace_journal::load_journal(std::path::Path::new(p)).map_err(|e| anyhow!(e))
+    };
+    match args.pos.first().map(String::as_str) {
+        Some("summarize") => {
+            let path =
+                args.pos.get(1).context("usage: codesign trace summarize <journal.jsonl>")?;
+            print!("{}", trace_journal::summarize(&journal(path)?));
+            Ok(())
+        }
+        Some("diff") => {
+            let a = args.pos.get(1).context("usage: codesign trace diff <a.jsonl> <b.jsonl>")?;
+            let b = args.pos.get(2).context("usage: codesign trace diff <a.jsonl> <b.jsonl>")?;
+            let (ea, eb) = (journal(a)?, journal(b)?);
+            let drift = trace_journal::diff(&ea, &eb);
+            if drift.is_empty() {
+                println!("journals match ({} events, wall-clock fields ignored)", ea.len());
+                return Ok(());
+            }
+            for line in &drift {
+                println!("{line}");
+            }
+            bail!("{} divergence(s) between {a} and {b}", drift.len())
+        }
+        _ => bail!("usage: codesign trace <summarize|diff> <journal.jsonl> [other.jsonl]"),
+    }
 }
 
 fn cmd_selftest(args: &Args) -> Result<()> {
@@ -393,6 +478,7 @@ fn main() -> Result<()> {
         "sw-opt" => cmd_sw_opt(&args),
         "codesign" => cmd_codesign(&args),
         "schedule" => cmd_schedule(&args),
+        "trace" => cmd_trace(&args),
         "selftest" => cmd_selftest(&args),
         "fig3" => {
             let (b, _s) = backend(&args)?;
@@ -522,14 +608,18 @@ fn main() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: codesign <quickstart|sw-opt|codesign|schedule|selftest|specialize|report|fig3|fig4|fig5a|fig5b|fig5c|fig16|fig17|fig18|insight> [flags]\n\
+                "usage: codesign <quickstart|sw-opt|codesign|schedule|trace|selftest|specialize|report|fig3|fig4|fig5a|fig5b|fig5c|fig16|fig17|fig18|insight> [flags]\n\
                  flags: --model M --layer L --method bo|random|round-bo|tvm-xgb|tvm-treegru \n\
                         --trials N --hw-trials N --sw-trials N --repeats N --scale F \n\
                         --seed N --threads N --out DIR --native \n\
                         --cache-policy slru|fifo --cache-snapshot PATH (codesign: persist \n\
                         the evaluation cache and warm-start follow-up runs from it) \n\
                         --models A,B,... --jobs N (schedule: run one co-design job per \n\
-                        model concurrently, at most N at once, over one shared cache)"
+                        model concurrently, at most N at once, over one shared cache) \n\
+                        --trace PATH | --trace-dir DIR (write run-trace journals; add \n\
+                        --trace-wall for wall-clock data) --metrics-addr HOST:PORT \n\
+                        --metrics-out PATH (schedule: serve/dump the fleet exposition) \n\
+                 trace: codesign trace summarize <j.jsonl> | trace diff <a.jsonl> <b.jsonl>"
             );
             Ok(())
         }

@@ -25,7 +25,6 @@
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -35,6 +34,7 @@ use super::eval::{EvalInvariants, Evaluator, Infeasible};
 use super::mapping::Mapping;
 use super::workload::Layer;
 use crate::coordinator::parallel::{default_threads, parallel_map};
+use crate::obs::clock::Stopwatch;
 
 /// One evaluation request (borrowed; batches are cheap to assemble).
 #[derive(Clone, Copy, Debug)]
@@ -233,10 +233,10 @@ impl BatchEvaluator {
         if let Some(outcome) = self.cache.get(&key) {
             return outcome;
         }
-        // lint: allow(determinism) — latency EWMA feeds chunk sizing only, never search decisions
-        let started = Instant::now();
+        // latency EWMA feeds chunk sizing only, never search decisions
+        let started = Stopwatch::start();
         let outcome = self.eval.evaluate(layer, hw, m);
-        self.cache.observe_latency(started.elapsed().as_secs_f64());
+        self.cache.observe_latency(started.elapsed_secs());
         self.cache.insert(key, outcome.clone());
         outcome
     }
@@ -315,8 +315,8 @@ impl BatchEvaluator {
                 Some(per_eval) => unique_rep.len() as f64 * per_eval >= MIN_PARALLEL_SECS,
                 None => unique_rep.len() >= self.parallel_threshold,
             };
-        // lint: allow(determinism) — latency EWMA feeds chunk sizing only, never search decisions
-        let compute_started = Instant::now();
+        // latency EWMA feeds chunk sizing only, never search decisions
+        let compute_started = Stopwatch::start();
         let computed: Vec<EvalOutcome> = if !go_parallel {
             unique_rep
                 .iter()
@@ -340,7 +340,7 @@ impl BatchEvaluator {
             // the parallel path, scale wall-clock back up by the worker
             // count actually used (parallel_map caps threads at the item
             // count).
-            let secs = compute_started.elapsed().as_secs_f64();
+            let secs = compute_started.elapsed_secs();
             let workers = if go_parallel { self.threads.min(unique_rep.len()) } else { 1 };
             self.cache.observe_latency(secs * workers as f64 / unique_rep.len() as f64);
         }

@@ -1,0 +1,69 @@
+//! The single sanctioned wall-clock entry point.
+//!
+//! codesign-lint's determinism rule (R4) bans `Instant::now()` /
+//! `SystemTime::now()` everywhere outside an explicit allowlist, because
+//! PRs 5 and 7 pinned fixed-seed runs bit-for-bit and a stray wall-clock
+//! read is the easiest way to leak nondeterminism into a decision. Code
+//! that legitimately needs elapsed time — latency EWMAs for chunk sizing,
+//! the human-readable metrics report, CLI progress lines, span profiling —
+//! routes through this module instead, which *is* on the allowlist. The
+//! contract for callers is unchanged from the rule's intent: wall-clock
+//! readings must only ever feed telemetry and scheduling heuristics, never
+//! search decisions or recorded results.
+
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// A started wall-clock measurement. Thin wrapper over [`Instant`] so call
+/// sites never touch `Instant::now()` directly.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    started: Instant,
+}
+
+impl Stopwatch {
+    /// Start measuring now.
+    pub fn start() -> Stopwatch {
+        Stopwatch { started: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed whole microseconds, saturating at `u64::MAX`.
+    pub fn elapsed_micros(&self) -> u64 {
+        u64::try_from(self.started.elapsed().as_micros()).unwrap_or(u64::MAX)
+    }
+}
+
+/// Milliseconds since the Unix epoch (0 if the system clock predates it).
+/// Used only for the optional, redactable `ts_ms` journal field.
+pub fn epoch_millis() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map_or(0, |d| u64::try_from(d.as_millis()).unwrap_or(u64::MAX))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_is_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_micros();
+        let b = sw.elapsed_micros();
+        assert!(b >= a);
+        assert!(sw.elapsed_secs() >= 0.0);
+    }
+
+    #[test]
+    fn epoch_millis_is_past_2020() {
+        // 2020-01-01 in ms — the paper's own year; any sane clock is later.
+        assert!(epoch_millis() > 1_577_836_800_000);
+    }
+}

@@ -1,0 +1,342 @@
+//! Fleet metrics: cross-job aggregation and Prometheus-style exposition.
+//!
+//! `runtime/jobs.rs::JobScheduler` owns one [`FleetMetrics`] and absorbs
+//! every finished job's [`Metrics`] snapshot and span histogram into it,
+//! so the fleet totals are exact sums of the per-run reports (the same
+//! numbers each job's trace journal reconciles against). [`render`]
+//! produces the text exposition format served by
+//! `runtime/server.rs::MetricsServer` and written by `codesign schedule
+//! --metrics-out`:
+//!
+//! ```text
+//! codesign_sim_evals_total 1284
+//! codesign_phase_seconds_bucket{phase="evaluate",le="0.000512"} 31
+//! ```
+//!
+//! Counters are a fixed `[AtomicU64; N]` zipped against [`COUNTER_NAMES`]
+//! — one table to keep in sync with `coordinator/metrics.rs`, enforced by
+//! the absorb test below. Shared structures (evaluation cache,
+//! certificate store) are *not* summed per job — they are process-wide
+//! and are rendered once from their own snapshots.
+//!
+//! [`Metrics`]: crate::coordinator::metrics::Metrics
+//! [`render`]: FleetMetrics::render
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::metrics::Metrics;
+use crate::model::cache::CacheStats;
+use crate::obs::span::{Phase, SpanProfiler, SpanStats};
+
+const N: usize = 32;
+
+/// Per-run counters summed across jobs, in exposition order. Names match
+/// the `coordinator/metrics.rs` report keys; the exposition name is
+/// `codesign_<name>_total`.
+pub const COUNTER_NAMES: [&str; N] = [
+    "sim_evals",
+    "raw_draws",
+    "feasible_evals",
+    "gp_fits",
+    "gp_data_refits",
+    "gp_extends",
+    "gp_extend_fallbacks",
+    "gp_fit_failures",
+    "gp_jitter_escalations",
+    "gp_warm_refits",
+    "gp_warm_grid_saved",
+    "feas_constructed",
+    "feas_perturbations",
+    "feas_perturbation_fallbacks",
+    "feas_projections",
+    "feas_projection_failures",
+    "feas_fallback_samples",
+    "feas_fallback_draws",
+    "feas_infeasible_spaces",
+    "feas_degraded_skips",
+    "prune_certificates",
+    "prune_rejections",
+    "prune_cert_hits",
+    "prune_cert_misses",
+    "prune_lattice_boxes",
+    "prune_box_shrink_milli",
+    "delta_evals",
+    "delta_fallbacks",
+    "delta_levels_recomputed",
+    "checkpoint_save_failures",
+    "snapshot_io_failures",
+    "trace_io_failures",
+];
+
+/// The same run's values, in [`COUNTER_NAMES`] order.
+fn counter_values(m: &Metrics) -> [u64; N] {
+    let get = |a: &AtomicU64| a.load(Ordering::Relaxed);
+    [
+        get(&m.sim_evals),
+        get(&m.raw_draws),
+        get(&m.feasible_evals),
+        get(&m.gp_fits),
+        get(&m.gp_data_refits),
+        get(&m.gp_extends),
+        get(&m.gp_extend_fallbacks),
+        get(&m.gp_fit_failures),
+        get(&m.gp_jitter_escalations),
+        get(&m.gp_warm_refits),
+        get(&m.gp_warm_grid_saved),
+        get(&m.feas_constructed),
+        get(&m.feas_perturbations),
+        get(&m.feas_perturbation_fallbacks),
+        get(&m.feas_projections),
+        get(&m.feas_projection_failures),
+        get(&m.feas_fallback_samples),
+        get(&m.feas_fallback_draws),
+        get(&m.feas_infeasible_spaces),
+        get(&m.feas_degraded_skips),
+        get(&m.prune_certificates),
+        get(&m.prune_rejections),
+        get(&m.prune_cert_hits),
+        get(&m.prune_cert_misses),
+        get(&m.prune_lattice_boxes),
+        get(&m.prune_box_shrink_milli),
+        get(&m.delta_evals),
+        get(&m.delta_fallbacks),
+        get(&m.delta_levels_recomputed),
+        get(&m.checkpoint_save_failures),
+        get(&m.snapshot_io_failures),
+        get(&m.trace_io_failures),
+    ]
+}
+
+/// Fleet-wide totals: job lifecycle counts, summed per-run counters, and
+/// merged span histograms. All relaxed atomics; absorbed once per job at
+/// completion on the job's own thread.
+#[derive(Debug)]
+pub struct FleetMetrics {
+    jobs_completed: AtomicU64,
+    jobs_cancelled: AtomicU64,
+    counters: [AtomicU64; N],
+    spans: SpanProfiler,
+}
+
+impl Default for FleetMetrics {
+    fn default() -> FleetMetrics {
+        FleetMetrics::new()
+    }
+}
+
+impl FleetMetrics {
+    pub fn new() -> FleetMetrics {
+        FleetMetrics {
+            jobs_completed: AtomicU64::new(0),
+            jobs_cancelled: AtomicU64::new(0),
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            spans: SpanProfiler::new(),
+        }
+    }
+
+    /// Fold one finished job's final metrics and span histogram into the
+    /// fleet totals.
+    pub fn absorb(&self, metrics: &Metrics, spans: &SpanStats, cancelled: bool) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        if cancelled {
+            self.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+        }
+        for (slot, v) in self.counters.iter().zip(counter_values(metrics)) {
+            slot.fetch_add(v, Ordering::Relaxed);
+        }
+        self.spans.absorb(spans);
+    }
+
+    /// A fleet counter by its [`COUNTER_NAMES`] name (0 for unknown names;
+    /// used by tests and the scheduler summary).
+    pub fn counter(&self, name: &str) -> u64 {
+        COUNTER_NAMES
+            .iter()
+            .position(|n| *n == name)
+            .map_or(0, |i| self.counters[i].load(Ordering::Relaxed))
+    }
+
+    pub fn jobs_completed(&self) -> u64 {
+        self.jobs_completed.load(Ordering::Relaxed)
+    }
+
+    pub fn jobs_cancelled(&self) -> u64 {
+        self.jobs_cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Merged span snapshot across all absorbed jobs.
+    pub fn span_stats(&self) -> SpanStats {
+        self.spans.stats()
+    }
+
+    /// Prometheus-style text exposition: fleet counters, the shared
+    /// evaluation cache and certificate store, and per-phase latency
+    /// histograms (log2 buckets; `le` is the bucket's upper bound in
+    /// seconds, cumulative per the exposition convention).
+    pub fn render(&self, cache: &CacheStats, cert_entries: u64) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, v: u64| {
+            let _ = writeln!(out, "# TYPE codesign_{name}_total counter");
+            let _ = writeln!(out, "codesign_{name}_total {v}");
+        };
+        counter("jobs_completed", self.jobs_completed());
+        counter("jobs_cancelled", self.jobs_cancelled());
+        for (name, slot) in COUNTER_NAMES.iter().zip(self.counters.iter()) {
+            counter(name, slot.load(Ordering::Relaxed));
+        }
+        counter("cache_hits", cache.hits);
+        counter("cache_misses", cache.misses);
+        counter("cache_evictions", cache.evictions);
+        counter("cache_promotions", cache.promotions);
+        counter("cache_demotions", cache.demotions);
+        counter("cache_snapshot_loaded", cache.snapshot_loaded);
+        counter("cache_snapshot_hits", cache.snapshot_hits);
+        let mut gauge = |name: &str, v: u64| {
+            let _ = writeln!(out, "# TYPE codesign_{name} gauge");
+            let _ = writeln!(out, "codesign_{name} {v}");
+        };
+        gauge("cache_entries", cache.entries);
+        gauge("cache_probationary", cache.probationary);
+        gauge("cache_protected", cache.protected);
+        gauge("prune_cert_store_entries", cert_entries);
+        let stats = self.spans.stats();
+        let _ = writeln!(out, "# TYPE codesign_phase_spans_total counter");
+        for phase in Phase::ALL {
+            let _ = writeln!(
+                out,
+                "codesign_phase_spans_total{{phase=\"{}\"}} {}",
+                phase.name(),
+                stats.phase(phase).count,
+            );
+        }
+        let _ = writeln!(out, "# TYPE codesign_phase_seconds histogram");
+        for phase in Phase::ALL {
+            let ps = stats.phase(phase);
+            let mut cumulative = 0u64;
+            for (i, n) in ps.buckets.iter().enumerate() {
+                cumulative += n;
+                // bucket i holds spans < 2^(i+1) microseconds
+                let le = (1u64 << (i + 1)) as f64 / 1e6;
+                let _ = writeln!(
+                    out,
+                    "codesign_phase_seconds_bucket{{phase=\"{}\",le=\"{le}\"}} {cumulative}",
+                    phase.name(),
+                );
+            }
+            let _ = writeln!(
+                out,
+                "codesign_phase_seconds_bucket{{phase=\"{}\",le=\"+Inf\"}} {}",
+                phase.name(),
+                ps.count,
+            );
+            let _ = writeln!(
+                out,
+                "codesign_phase_seconds_sum{{phase=\"{}\"}} {}",
+                phase.name(),
+                ps.total_micros as f64 / 1e6,
+            );
+            let _ = writeln!(
+                out,
+                "codesign_phase_seconds_count{{phase=\"{}\"}} {}",
+                phase.name(),
+                ps.count,
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::delta::telemetry::DeltaStats;
+    use crate::space::feasible::telemetry::FeasibilityStats;
+    use crate::surrogate::telemetry::SurrogateStats;
+
+    fn sample_metrics() -> std::sync::Arc<Metrics> {
+        let m = Metrics::new();
+        m.add_trace(&[1.0, f64::INFINITY, 3.0], 7);
+        m.record_surrogate(SurrogateStats { fits: 4, extends: 40, ..SurrogateStats::default() });
+        m.record_feasibility(FeasibilityStats {
+            constructed: 11,
+            prune_certificates: 20,
+            ..FeasibilityStats::default()
+        });
+        m.record_delta(DeltaStats { delta_evals: 24, ..DeltaStats::default() });
+        m
+    }
+
+    #[test]
+    fn absorb_sums_every_named_counter_across_jobs() {
+        let fleet = FleetMetrics::new();
+        let m = sample_metrics();
+        let profiler = SpanProfiler::new();
+        profiler.record(Phase::Evaluate, 100);
+        fleet.absorb(&m, &profiler.stats(), false);
+        fleet.absorb(&m, &profiler.stats(), true);
+        assert_eq!(fleet.jobs_completed(), 2);
+        assert_eq!(fleet.jobs_cancelled(), 1);
+        assert_eq!(fleet.counter("sim_evals"), 6);
+        assert_eq!(fleet.counter("feasible_evals"), 4);
+        assert_eq!(fleet.counter("raw_draws"), 14);
+        assert_eq!(fleet.counter("gp_fits"), 8);
+        assert_eq!(fleet.counter("gp_extends"), 80);
+        assert_eq!(fleet.counter("feas_constructed"), 22);
+        assert_eq!(fleet.counter("prune_certificates"), 40);
+        assert_eq!(fleet.counter("delta_evals"), 48);
+        assert_eq!(fleet.counter("no_such_counter"), 0);
+        assert_eq!(fleet.span_stats().phase(Phase::Evaluate).count, 2);
+    }
+
+    #[test]
+    fn render_exposes_counters_gauges_and_histograms() {
+        let fleet = FleetMetrics::new();
+        let m = sample_metrics();
+        let profiler = SpanProfiler::new();
+        profiler.record(Phase::Evaluate, 100);
+        profiler.record(Phase::Evaluate, 1_000_000);
+        fleet.absorb(&m, &profiler.stats(), false);
+        let cache = CacheStats { hits: 10, misses: 30, entries: 25, ..CacheStats::default() };
+        let text = fleet.render(&cache, 9);
+        assert!(text.contains("codesign_jobs_completed_total 1"), "{text}");
+        assert!(text.contains("codesign_sim_evals_total 3"), "{text}");
+        assert!(text.contains("codesign_gp_fits_total 4"), "{text}");
+        assert!(text.contains("codesign_cache_hits_total 10"), "{text}");
+        assert!(text.contains("codesign_cache_entries 25"), "{text}");
+        assert!(text.contains("codesign_prune_cert_store_entries 9"), "{text}");
+        assert!(
+            text.contains("codesign_phase_spans_total{phase=\"evaluate\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("codesign_phase_seconds_bucket{phase=\"evaluate\",le=\"+Inf\"} 2"),
+            "{text}"
+        );
+        assert!(text.contains("codesign_phase_seconds_sum{phase=\"evaluate\"} 1.0001"), "{text}");
+        assert!(text.contains("codesign_phase_seconds_count{phase=\"evaluate\"} 2"), "{text}");
+        // every fleet counter appears, exactly named
+        for name in COUNTER_NAMES {
+            assert!(text.contains(&format!("codesign_{name}_total ")), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let fleet = FleetMetrics::new();
+        let profiler = SpanProfiler::new();
+        profiler.record(Phase::Sample, 1); // bucket 0 (le 2us)
+        profiler.record(Phase::Sample, 3); // bucket 1 (le 4us)
+        let m = Metrics::new();
+        fleet.absorb(&m, &profiler.stats(), false);
+        let text = fleet.render(&CacheStats::default(), 0);
+        assert!(
+            text.contains("codesign_phase_seconds_bucket{phase=\"sample\",le=\"0.000002\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("codesign_phase_seconds_bucket{phase=\"sample\",le=\"0.000004\"} 2"),
+            "{text}"
+        );
+    }
+}

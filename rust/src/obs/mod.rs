@@ -1,0 +1,26 @@
+//! Structured observability for the search stack.
+//!
+//! Dependency-free, layered on the run-scoped telemetry sinks from
+//! `coordinator/run.rs::RunScope`:
+//!
+//! - [`clock`] — the single sanctioned wall-clock entry point (the only
+//!   library file on codesign-lint's determinism allowlist besides the
+//!   RNG itself).
+//! - [`json`] — minimal ordered JSON value, emitter and parser for the
+//!   journal line format.
+//! - [`span`] — RAII span profiling with per-phase log2 latency
+//!   histograms and a bounded flight-recorder ring.
+//! - [`trace`] — the per-run JSONL trace journal with deterministic
+//!   logical clocks, plus `summarize`/`diff` used by the `codesign
+//!   trace` subcommand.
+//! - [`fleet`] — cross-job aggregation and Prometheus-style text
+//!   exposition, served by `runtime/server.rs::MetricsServer`.
+//!
+//! See `rust/src/obs/README.md` for the event schema, span taxonomy and
+//! exposition format.
+
+pub mod clock;
+pub mod fleet;
+pub mod json;
+pub mod span;
+pub mod trace;

@@ -1,0 +1,343 @@
+//! Span profiling: RAII phase spans, fixed-bucket log2 latency histograms,
+//! and a bounded flight-recorder ring.
+//!
+//! A [`SpanProfiler`] accumulates, per search [`Phase`], a span count, a
+//! total duration, and a 24-bucket log2 microsecond histogram — all plain
+//! relaxed atomics, cheap enough to sit on the sampling hot path. The
+//! profiler is installed per thread with [`with_profiler`] (the same
+//! scoped pattern as the telemetry `Sink`s: the coordinator's `RunScope`
+//! installs one on the run thread and inside every worker-pool job), and
+//! library code opens spans with [`span`], which no-ops when no profiler
+//! is installed — the figure harnesses and unit tests pay one TLS read.
+//!
+//! Span *counts* are deterministic for a fixed-seed run (they count work
+//! items, which the seed fixes); durations and the flight ring are
+//! wall-clock and are therefore excluded from deterministic journals by
+//! `obs::trace`.
+//!
+//! The flight recorder keeps the most recent [`FLIGHT_CAPACITY`] completed
+//! spans in a mutex-guarded ring, recorded with `try_lock` so contention
+//! skips the entry instead of ever blocking a worker. When a degrade path
+//! fires (GP fit failure, delta fallback, rejection exhaustion), the trace
+//! journal dumps the ring: "what was the run doing just before it
+//! degraded" without logging every span of a healthy run.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::obs::clock::Stopwatch;
+
+/// Log2 microsecond histogram buckets: bucket `i` counts spans with
+/// duration <= 2^i microseconds (the last bucket absorbs everything
+/// longer, ~8.4s and up).
+pub const BUCKETS: usize = 24;
+
+/// Completed spans retained by the flight-recorder ring.
+pub const FLIGHT_CAPACITY: usize = 64;
+
+/// The profiled phases of a search run, in display order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Candidate generation (constructive sampling, perturbation).
+    Sample,
+    /// Hardware-batch evaluation: the (config x layer) software searches.
+    Evaluate,
+    /// GP fits, refits and rank-1 extends.
+    Surrogate,
+    /// Cross-space certification of hardware candidates.
+    Prune,
+    /// Incumbent checkpoints and cache-snapshot IO.
+    Checkpoint,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 5] =
+        [Phase::Sample, Phase::Evaluate, Phase::Surrogate, Phase::Prune, Phase::Checkpoint];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Sample => "sample",
+            Phase::Evaluate => "evaluate",
+            Phase::Surrogate => "surrogate",
+            Phase::Prune => "prune",
+            Phase::Checkpoint => "checkpoint",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Phase::Sample => 0,
+            Phase::Evaluate => 1,
+            Phase::Surrogate => 2,
+            Phase::Prune => 3,
+            Phase::Checkpoint => 4,
+        }
+    }
+}
+
+/// One phase's accumulators.
+#[derive(Debug)]
+struct PhaseSlot {
+    count: AtomicU64,
+    total_micros: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl PhaseSlot {
+    fn new() -> PhaseSlot {
+        PhaseSlot {
+            count: AtomicU64::new(0),
+            total_micros: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// One completed span in the flight ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlightEntry {
+    pub phase: Phase,
+    pub micros: u64,
+}
+
+/// Histogram bucket index for a duration: the position of its highest set
+/// bit, clamped to the last bucket (0us and 1us both land in bucket 0).
+fn bucket_of(micros: u64) -> usize {
+    let bits = 64 - micros.leading_zeros() as usize;
+    bits.saturating_sub(1).min(BUCKETS - 1)
+}
+
+/// Per-run span accumulator: counts, totals and histograms per phase, plus
+/// the flight ring. Shared via `Arc` between the run scope and every
+/// worker thread; merged into fleet totals by `obs::fleet`.
+#[derive(Debug)]
+pub struct SpanProfiler {
+    phases: [PhaseSlot; 5],
+    flight: Mutex<Vec<FlightEntry>>,
+    flight_next: AtomicU64,
+}
+
+impl Default for SpanProfiler {
+    fn default() -> SpanProfiler {
+        SpanProfiler::new()
+    }
+}
+
+impl SpanProfiler {
+    pub fn new() -> SpanProfiler {
+        SpanProfiler {
+            phases: std::array::from_fn(|_| PhaseSlot::new()),
+            flight: Mutex::new(Vec::with_capacity(FLIGHT_CAPACITY)),
+            flight_next: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one completed span.
+    pub fn record(&self, phase: Phase, micros: u64) {
+        let slot = &self.phases[phase.idx()];
+        slot.count.fetch_add(1, Ordering::Relaxed);
+        slot.total_micros.fetch_add(micros, Ordering::Relaxed);
+        slot.buckets[bucket_of(micros)].fetch_add(1, Ordering::Relaxed);
+        // best-effort flight ring: never block a worker for it
+        if let Ok(mut ring) = self.flight.try_lock() {
+            let entry = FlightEntry { phase, micros };
+            if ring.len() < FLIGHT_CAPACITY {
+                ring.push(entry);
+            } else {
+                let at = (self.flight_next.fetch_add(1, Ordering::Relaxed) as usize)
+                    % FLIGHT_CAPACITY;
+                ring[at] = entry;
+            }
+        }
+    }
+
+    /// Measure `f` as one span of `phase` on this profiler (for call sites
+    /// that hold a profiler handle rather than a thread-local scope).
+    pub fn time<R>(&self, phase: Phase, f: impl FnOnce() -> R) -> R {
+        let sw = Stopwatch::start();
+        let out = f();
+        self.record(phase, sw.elapsed_micros());
+        out
+    }
+
+    /// Snapshot the per-phase accumulators.
+    pub fn stats(&self) -> SpanStats {
+        SpanStats {
+            phases: std::array::from_fn(|i| {
+                let slot = &self.phases[i];
+                PhaseStats {
+                    count: slot.count.load(Ordering::Relaxed),
+                    total_micros: slot.total_micros.load(Ordering::Relaxed),
+                    buckets: std::array::from_fn(|b| slot.buckets[b].load(Ordering::Relaxed)),
+                }
+            }),
+        }
+    }
+
+    /// The flight ring's current contents, oldest-first best effort (the
+    /// ring is overwritten in place; ordering within it is approximate by
+    /// construction and the consumer treats it as "recent spans").
+    pub fn flight(&self) -> Vec<FlightEntry> {
+        match self.flight.try_lock() {
+            Ok(ring) => ring.clone(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Merge another profiler's snapshot into this one (fleet totals).
+    pub fn absorb(&self, stats: &SpanStats) {
+        for (i, phase) in stats.phases.iter().enumerate() {
+            let slot = &self.phases[i];
+            slot.count.fetch_add(phase.count, Ordering::Relaxed);
+            slot.total_micros.fetch_add(phase.total_micros, Ordering::Relaxed);
+            for (b, n) in phase.buckets.iter().enumerate() {
+                slot.buckets[b].fetch_add(*n, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Point-in-time snapshot of one profiler, indexed by [`Phase::ALL`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanStats {
+    pub phases: [PhaseStats; 5],
+}
+
+impl SpanStats {
+    pub fn phase(&self, phase: Phase) -> &PhaseStats {
+        &self.phases[phase.idx()]
+    }
+}
+
+/// One phase's snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseStats {
+    pub count: u64,
+    pub total_micros: u64,
+    pub buckets: [u64; BUCKETS],
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Arc<SpanProfiler>>> = const { RefCell::new(None) };
+}
+
+struct ProfilerGuard {
+    prev: Option<Arc<SpanProfiler>>,
+}
+
+impl Drop for ProfilerGuard {
+    fn drop(&mut self) {
+        ACTIVE.with(|a| *a.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Install `profiler` as the calling thread's span target for the duration
+/// of `f` (restored on exit, also on unwind) — the same scoped pattern as
+/// the telemetry sinks' `with_scope`.
+pub fn with_profiler<R>(profiler: &Arc<SpanProfiler>, f: impl FnOnce() -> R) -> R {
+    let prev = ACTIVE.with(|a| a.borrow_mut().replace(Arc::clone(profiler)));
+    let _guard = ProfilerGuard { prev };
+    f()
+}
+
+/// RAII span: records its phase and elapsed time into the thread's active
+/// profiler on drop. A no-op (no clock read) when no profiler is installed.
+pub struct Span {
+    target: Option<(Arc<SpanProfiler>, Phase, Stopwatch)>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((profiler, phase, sw)) = self.target.take() {
+            profiler.record(phase, sw.elapsed_micros());
+        }
+    }
+}
+
+/// Open a span of `phase` against the calling thread's active profiler.
+pub fn span(phase: Phase) -> Span {
+    let profiler = ACTIVE.with(|a| a.borrow().clone());
+    Span { target: profiler.map(|p| (p, phase, Stopwatch::start())) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1 << 23), BUCKETS - 1);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn spans_record_only_into_the_installed_profiler() {
+        let p = Arc::new(SpanProfiler::new());
+        with_profiler(&p, || {
+            let _a = span(Phase::Sample);
+            let _b = span(Phase::Sample);
+        });
+        // outside the scope: no profiler, no recording
+        drop(span(Phase::Sample));
+        let stats = p.stats();
+        assert_eq!(stats.phase(Phase::Sample).count, 2);
+        assert_eq!(stats.phase(Phase::Evaluate).count, 0);
+        let histogram_total: u64 = stats.phase(Phase::Sample).buckets.iter().sum();
+        assert_eq!(histogram_total, 2, "every span lands in exactly one bucket");
+    }
+
+    #[test]
+    fn nested_with_profiler_shadows_and_restores() {
+        let outer = Arc::new(SpanProfiler::new());
+        let inner = Arc::new(SpanProfiler::new());
+        with_profiler(&outer, || {
+            with_profiler(&inner, || drop(span(Phase::Prune)));
+            drop(span(Phase::Prune));
+        });
+        assert_eq!(inner.stats().phase(Phase::Prune).count, 1);
+        assert_eq!(outer.stats().phase(Phase::Prune).count, 1);
+    }
+
+    #[test]
+    fn time_and_record_feed_totals_and_flight_ring() {
+        let p = SpanProfiler::new();
+        let out = p.time(Phase::Checkpoint, || 41 + 1);
+        assert_eq!(out, 42);
+        p.record(Phase::Surrogate, 1000);
+        let stats = p.stats();
+        assert_eq!(stats.phase(Phase::Checkpoint).count, 1);
+        assert_eq!(stats.phase(Phase::Surrogate).total_micros, 1000);
+        let flight = p.flight();
+        assert!(flight.iter().any(|e| e.phase == Phase::Surrogate && e.micros == 1000));
+    }
+
+    #[test]
+    fn flight_ring_is_bounded() {
+        let p = SpanProfiler::new();
+        for i in 0..(FLIGHT_CAPACITY as u64 * 3) {
+            p.record(Phase::Sample, i);
+        }
+        assert_eq!(p.flight().len(), FLIGHT_CAPACITY);
+        assert_eq!(p.stats().phase(Phase::Sample).count, FLIGHT_CAPACITY as u64 * 3);
+    }
+
+    #[test]
+    fn absorb_merges_counts_and_buckets() {
+        let a = SpanProfiler::new();
+        a.record(Phase::Evaluate, 10);
+        a.record(Phase::Evaluate, 10_000);
+        let fleet = SpanProfiler::new();
+        fleet.absorb(&a.stats());
+        fleet.absorb(&a.stats());
+        let merged = fleet.stats().phases[Phase::Evaluate.idx()];
+        assert_eq!(merged.count, 4);
+        assert_eq!(merged.total_micros, 20_020);
+        assert_eq!(merged.buckets.iter().sum::<u64>(), 4);
+    }
+}

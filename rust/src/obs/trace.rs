@@ -1,0 +1,743 @@
+//! Per-run trace journal: append-only JSONL with deterministic logical
+//! clocks.
+//!
+//! Every event line carries `seq` (a per-run logical clock), `run` (the
+//! run id, `<model>-<seed>`), and `ev` (the event kind). Events are
+//! emitted only from the run thread at deterministic points — batch
+//! boundaries, phase transitions, snapshot IO, run start/end — so a
+//! fixed-seed run produces a bit-identical journal under
+//! [`TraceConfig`] `deterministic: true`. In that mode everything
+//! wall-clock-dependent (timestamps, span durations, the flight-recorder
+//! ring) is redacted; in wall mode it lives under a single `wall` member
+//! per event so consumers (and [`diff`]) can strip it in one move.
+//!
+//! Counter payloads are **deltas of the run-scoped telemetry sinks**
+//! (`RunScope`), read after each evaluation batch completes. The deltas
+//! reconcile exactly: for every `gp_*` / `feas_*` / `prune_*` /
+//! `delta_*` key,
+//!
+//! ```text
+//! sum(batch events) + run_end.tail == run_end.totals == metrics report
+//! ```
+//!
+//! which `rust/tests/trace_journal.rs` asserts against a live run.
+//! Shared-cache hit/miss counts are excluded from deterministic journals
+//! (and from [`diff`]): with a process-shared evaluation cache and
+//! `threads > 1`, which job sees a hit vs a miss depends on scheduling.
+//!
+//! Event kinds: `run_start`, `phase`, `snapshot_load`, `snapshot_save`,
+//! `batch`, `incumbent`, `degrade`, `run_end` — see `obs/README.md` for
+//! the full schema.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::model::cache::CacheStats;
+use crate::model::delta::telemetry::DeltaStats;
+use crate::obs::clock::epoch_millis;
+use crate::obs::json::Json;
+use crate::obs::span::{Phase, SpanProfiler, SpanStats};
+use crate::space::feasible::telemetry::FeasibilityStats;
+use crate::surrogate::telemetry::SurrogateStats;
+
+/// Where and how a run journals itself.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Journal file path (created/truncated at run start).
+    pub path: PathBuf,
+    /// Redact wall-clock data (timestamps, span durations, flight ring)
+    /// so fixed-seed runs journal bit-identically.
+    pub deterministic: bool,
+}
+
+impl TraceConfig {
+    pub fn new(path: impl Into<PathBuf>, deterministic: bool) -> TraceConfig {
+        TraceConfig { path: path.into(), deterministic }
+    }
+}
+
+fn kv(k: &str, v: Json) -> (String, Json) {
+    (k.to_string(), v)
+}
+
+fn gp_since(now: SurrogateStats, prev: SurrogateStats) -> SurrogateStats {
+    SurrogateStats {
+        fits: now.fits.saturating_sub(prev.fits),
+        data_refits: now.data_refits.saturating_sub(prev.data_refits),
+        extends: now.extends.saturating_sub(prev.extends),
+        extend_fallbacks: now.extend_fallbacks.saturating_sub(prev.extend_fallbacks),
+        fit_failures: now.fit_failures.saturating_sub(prev.fit_failures),
+        jitter_escalations: now.jitter_escalations.saturating_sub(prev.jitter_escalations),
+        warm_refits: now.warm_refits.saturating_sub(prev.warm_refits),
+        warm_grid_saved: now.warm_grid_saved.saturating_sub(prev.warm_grid_saved),
+    }
+}
+
+fn feas_since(now: FeasibilityStats, prev: FeasibilityStats) -> FeasibilityStats {
+    FeasibilityStats {
+        constructed: now.constructed.saturating_sub(prev.constructed),
+        perturbations: now.perturbations.saturating_sub(prev.perturbations),
+        perturbation_fallbacks: now
+            .perturbation_fallbacks
+            .saturating_sub(prev.perturbation_fallbacks),
+        projections: now.projections.saturating_sub(prev.projections),
+        projection_failures: now.projection_failures.saturating_sub(prev.projection_failures),
+        fallback_samples: now.fallback_samples.saturating_sub(prev.fallback_samples),
+        fallback_draws: now.fallback_draws.saturating_sub(prev.fallback_draws),
+        infeasible_spaces: now.infeasible_spaces.saturating_sub(prev.infeasible_spaces),
+        degraded_skips: now.degraded_skips.saturating_sub(prev.degraded_skips),
+        prune_certificates: now.prune_certificates.saturating_sub(prev.prune_certificates),
+        prune_rejections: now.prune_rejections.saturating_sub(prev.prune_rejections),
+        cert_hits: now.cert_hits.saturating_sub(prev.cert_hits),
+        cert_misses: now.cert_misses.saturating_sub(prev.cert_misses),
+        lattice_boxes: now.lattice_boxes.saturating_sub(prev.lattice_boxes),
+        lattice_box_shrink_milli: now
+            .lattice_box_shrink_milli
+            .saturating_sub(prev.lattice_box_shrink_milli),
+    }
+}
+
+fn delta_since(now: DeltaStats, prev: DeltaStats) -> DeltaStats {
+    DeltaStats {
+        delta_evals: now.delta_evals.saturating_sub(prev.delta_evals),
+        delta_fallbacks: now.delta_fallbacks.saturating_sub(prev.delta_fallbacks),
+        levels_recomputed: now.levels_recomputed.saturating_sub(prev.levels_recomputed),
+    }
+}
+
+/// `gp_*` object, keys matching `coordinator/metrics.rs` report fields.
+fn gp_obj(s: SurrogateStats) -> Json {
+    Json::Obj(vec![
+        kv("gp_fits", Json::UInt(s.fits)),
+        kv("gp_data_refits", Json::UInt(s.data_refits)),
+        kv("gp_extends", Json::UInt(s.extends)),
+        kv("gp_extend_fallbacks", Json::UInt(s.extend_fallbacks)),
+        kv("gp_fit_failures", Json::UInt(s.fit_failures)),
+        kv("gp_jitter_escalations", Json::UInt(s.jitter_escalations)),
+        kv("gp_warm_refits", Json::UInt(s.warm_refits)),
+        kv("gp_warm_grid_saved", Json::UInt(s.warm_grid_saved)),
+    ])
+}
+
+/// `feas_*` + `prune_*` object, keys matching the metrics report fields.
+fn feas_obj(s: FeasibilityStats) -> Json {
+    Json::Obj(vec![
+        kv("feas_constructed", Json::UInt(s.constructed)),
+        kv("feas_perturbations", Json::UInt(s.perturbations)),
+        kv("feas_perturbation_fallbacks", Json::UInt(s.perturbation_fallbacks)),
+        kv("feas_projections", Json::UInt(s.projections)),
+        kv("feas_projection_failures", Json::UInt(s.projection_failures)),
+        kv("feas_fallback_samples", Json::UInt(s.fallback_samples)),
+        kv("feas_fallback_draws", Json::UInt(s.fallback_draws)),
+        kv("feas_infeasible_spaces", Json::UInt(s.infeasible_spaces)),
+        kv("feas_degraded_skips", Json::UInt(s.degraded_skips)),
+        kv("prune_certificates", Json::UInt(s.prune_certificates)),
+        kv("prune_rejections", Json::UInt(s.prune_rejections)),
+        kv("prune_cert_hits", Json::UInt(s.cert_hits)),
+        kv("prune_cert_misses", Json::UInt(s.cert_misses)),
+        kv("prune_lattice_boxes", Json::UInt(s.lattice_boxes)),
+        kv("prune_box_shrink_milli", Json::UInt(s.lattice_box_shrink_milli)),
+    ])
+}
+
+/// `delta_*` object, keys matching the metrics report fields.
+fn delta_obj(s: DeltaStats) -> Json {
+    Json::Obj(vec![
+        kv("delta_evals", Json::UInt(s.delta_evals)),
+        kv("delta_fallbacks", Json::UInt(s.delta_fallbacks)),
+        kv("delta_levels_recomputed", Json::UInt(s.levels_recomputed)),
+    ])
+}
+
+/// Per-phase span *counts* (deterministic: they count work items).
+fn span_counts_obj(now: &SpanStats, prev: &SpanStats) -> Json {
+    Json::Obj(
+        Phase::ALL
+            .iter()
+            .map(|p| {
+                let d = now.phase(*p).count.saturating_sub(prev.phase(*p).count);
+                kv(p.name(), Json::UInt(d))
+            })
+            .collect(),
+    )
+}
+
+/// Per-phase span durations in microseconds (wall-clock: `wall` only).
+fn span_micros_obj(now: &SpanStats, prev: &SpanStats) -> Json {
+    Json::Obj(
+        Phase::ALL
+            .iter()
+            .map(|p| {
+                let d = now.phase(*p).total_micros.saturating_sub(prev.phase(*p).total_micros);
+                kv(p.name(), Json::UInt(d))
+            })
+            .collect(),
+    )
+}
+
+fn cache_obj(s: CacheStats) -> Json {
+    Json::Obj(vec![
+        kv("cache_hits", Json::UInt(s.hits)),
+        kv("cache_misses", Json::UInt(s.misses)),
+        kv("cache_evictions", Json::UInt(s.evictions)),
+        kv("cache_entries", Json::UInt(s.entries)),
+        kv("cache_snapshot_loaded", Json::UInt(s.snapshot_loaded)),
+        kv("cache_snapshot_hits", Json::UInt(s.snapshot_hits)),
+    ])
+}
+
+/// Degrade-path signals: a batch whose delta has any of these nonzero
+/// triggers a `degrade` event (and, in wall mode, a flight-ring dump).
+fn degrade_signals(gp: SurrogateStats, feas: FeasibilityStats, delta: DeltaStats) -> Vec<(String, Json)> {
+    let candidates = [
+        ("gp_fit_failures", gp.fit_failures),
+        ("gp_extend_fallbacks", gp.extend_fallbacks),
+        ("feas_perturbation_fallbacks", feas.perturbation_fallbacks),
+        ("feas_projection_failures", feas.projection_failures),
+        ("feas_fallback_samples", feas.fallback_samples),
+        ("feas_infeasible_spaces", feas.infeasible_spaces),
+        ("feas_degraded_skips", feas.degraded_skips),
+        ("delta_fallbacks", delta.delta_fallbacks),
+    ];
+    candidates
+        .iter()
+        .filter(|(_, v)| *v > 0)
+        .map(|(k, v)| kv(k, Json::UInt(*v)))
+        .collect()
+}
+
+/// Writes one run's journal. Owned by the run thread; never shared, so
+/// emission needs no lock. IO failures disable the journal (the run
+/// continues untraced) and are surfaced through [`RunTracer::io_failures`]
+/// into the run metrics.
+#[derive(Debug)]
+pub struct RunTracer {
+    out: Option<BufWriter<File>>,
+    deterministic: bool,
+    run: String,
+    seq: u64,
+    io_failures: u64,
+    batches: u64,
+    prev_gp: SurrogateStats,
+    prev_feas: FeasibilityStats,
+    prev_delta: DeltaStats,
+    prev_spans: SpanStats,
+}
+
+impl RunTracer {
+    /// A tracer that journals nothing (used when no `--trace` was asked).
+    pub fn disabled() -> RunTracer {
+        RunTracer {
+            out: None,
+            deterministic: true,
+            run: String::new(),
+            seq: 0,
+            io_failures: 0,
+            batches: 0,
+            prev_gp: SurrogateStats::default(),
+            prev_feas: FeasibilityStats::default(),
+            prev_delta: DeltaStats::default(),
+            prev_spans: SpanStats::default(),
+        }
+    }
+
+    /// Open (truncate) the journal at `cfg.path`. On failure the run
+    /// proceeds untraced with one IO failure on record.
+    pub fn create(cfg: &TraceConfig, run_id: &str) -> RunTracer {
+        let mut tracer = RunTracer::disabled();
+        tracer.deterministic = cfg.deterministic;
+        tracer.run = run_id.to_string();
+        match File::create(&cfg.path) {
+            Ok(file) => tracer.out = Some(BufWriter::new(file)),
+            Err(err) => {
+                eprintln!("trace: cannot create {}: {err}", cfg.path.display());
+                tracer.io_failures = 1;
+            }
+        }
+        tracer
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.out.is_some()
+    }
+
+    /// Journal write/create failures so far (fed into the run metrics).
+    pub fn io_failures(&self) -> u64 {
+        self.io_failures
+    }
+
+    fn emit(&mut self, ev: &str, fields: Vec<(String, Json)>, wall: Vec<(String, Json)>) {
+        let Some(out) = self.out.as_mut() else { return };
+        let mut members = vec![
+            kv("seq", Json::UInt(self.seq)),
+            kv("run", Json::Str(self.run.clone())),
+            kv("ev", Json::Str(ev.to_string())),
+        ];
+        members.extend(fields);
+        if !self.deterministic {
+            let mut w = vec![kv("ts_ms", Json::UInt(epoch_millis()))];
+            w.extend(wall);
+            members.push(kv("wall", Json::Obj(w)));
+        }
+        self.seq += 1;
+        let mut line = Json::Obj(members).render();
+        line.push('\n');
+        let wrote = out.write_all(line.as_bytes()).and_then(|()| out.flush());
+        if let Err(err) = wrote {
+            eprintln!("trace: journal write failed for run {}: {err}", self.run);
+            self.io_failures += 1;
+            self.out = None;
+        }
+    }
+
+    pub fn run_start(&mut self, model: &str, seed: u64, hw_trials: usize, sw_trials: usize, threads: usize) {
+        self.emit(
+            "run_start",
+            vec![
+                kv("model", Json::Str(model.to_string())),
+                kv("seed", Json::UInt(seed)),
+                kv("hw_trials", Json::UInt(hw_trials as u64)),
+                kv("sw_trials", Json::UInt(sw_trials as u64)),
+                kv("threads", Json::UInt(threads as u64)),
+                kv("deterministic", Json::Bool(self.deterministic)),
+            ],
+            Vec::new(),
+        );
+    }
+
+    /// A run-phase transition (`warm_start`, `searching`, `persisting`, ...).
+    pub fn phase(&mut self, name: &str) {
+        self.emit("phase", vec![kv("phase", Json::Str(name.to_string()))], Vec::new());
+    }
+
+    pub fn snapshot_load(&mut self, ok: bool, entries: u64) {
+        self.emit(
+            "snapshot_load",
+            vec![kv("ok", Json::Bool(ok)), kv("entries", Json::UInt(entries))],
+            Vec::new(),
+        );
+    }
+
+    pub fn snapshot_save(&mut self, ok: bool, entries: u64) {
+        self.emit(
+            "snapshot_save",
+            vec![kv("ok", Json::Bool(ok)), kv("entries", Json::UInt(entries))],
+            Vec::new(),
+        );
+    }
+
+    /// A new incumbent (best EDP so far) was accepted at `trial`.
+    pub fn incumbent(&mut self, trial: u64, edp: f64, checkpointed: bool) {
+        self.emit(
+            "incumbent",
+            vec![
+                kv("trial", Json::UInt(trial)),
+                kv("edp", Json::Num(edp)),
+                kv("checkpointed", Json::Bool(checkpointed)),
+            ],
+            Vec::new(),
+        );
+    }
+
+    /// One evaluation batch completed. `gp`/`feas`/`delta` are the
+    /// *cumulative* run-scope snapshots; the event carries their deltas
+    /// since the previous batch. Emits a follow-up `degrade` event when a
+    /// degrade-path counter moved.
+    pub fn batch(
+        &mut self,
+        trial0: u64,
+        n: u64,
+        feasible: u64,
+        gp: SurrogateStats,
+        feas: FeasibilityStats,
+        delta: DeltaStats,
+        spans: &SpanProfiler,
+    ) {
+        let span_stats = spans.stats();
+        let dgp = gp_since(gp, self.prev_gp);
+        let dfeas = feas_since(feas, self.prev_feas);
+        let ddelta = delta_since(delta, self.prev_delta);
+        let batch_idx = self.batches;
+        self.emit(
+            "batch",
+            vec![
+                kv("batch", Json::UInt(batch_idx)),
+                kv("trial0", Json::UInt(trial0)),
+                kv("n", Json::UInt(n)),
+                kv("feasible", Json::UInt(feasible)),
+                kv("gp", gp_obj(dgp)),
+                kv("feas", feas_obj(dfeas)),
+                kv("delta", delta_obj(ddelta)),
+                kv("spans", span_counts_obj(&span_stats, &self.prev_spans)),
+            ],
+            vec![kv("span_us", span_micros_obj(&span_stats, &self.prev_spans))],
+        );
+        let signals = degrade_signals(dgp, dfeas, ddelta);
+        if !signals.is_empty() {
+            let flight = Json::Arr(
+                spans
+                    .flight()
+                    .iter()
+                    .map(|e| {
+                        Json::Obj(vec![
+                            kv("phase", Json::Str(e.phase.name().to_string())),
+                            kv("us", Json::UInt(e.micros)),
+                        ])
+                    })
+                    .collect(),
+            );
+            self.emit(
+                "degrade",
+                vec![kv("batch", Json::UInt(batch_idx)), kv("signals", Json::Obj(signals))],
+                vec![kv("flight", flight)],
+            );
+        }
+        self.batches += 1;
+        self.prev_gp = gp;
+        self.prev_feas = feas;
+        self.prev_delta = delta;
+        self.prev_spans = span_stats;
+    }
+
+    /// Close the run: `totals` are the final cumulative snapshots (the same
+    /// values stored into the metrics report), `tail` their delta since the
+    /// last batch event. `cache` must be `None` for deterministic journals
+    /// (shared-cache hit/miss attribution races under `threads > 1`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_end(
+        &mut self,
+        cancelled: bool,
+        sim_evals: u64,
+        raw_draws: u64,
+        feasible_evals: u64,
+        gp: SurrogateStats,
+        feas: FeasibilityStats,
+        delta: DeltaStats,
+        cache: Option<CacheStats>,
+        spans: &SpanStats,
+    ) {
+        let totals = Json::Obj(
+            [gp_obj(gp), feas_obj(feas), delta_obj(delta)]
+                .into_iter()
+                .flat_map(|o| o.members().to_vec())
+                .collect(),
+        );
+        let tail = Json::Obj(
+            [
+                gp_obj(gp_since(gp, self.prev_gp)),
+                feas_obj(feas_since(feas, self.prev_feas)),
+                delta_obj(delta_since(delta, self.prev_delta)),
+            ]
+            .into_iter()
+            .flat_map(|o| o.members().to_vec())
+            .collect(),
+        );
+        let mut fields = vec![
+            kv("cancelled", Json::Bool(cancelled)),
+            kv("batches", Json::UInt(self.batches)),
+            kv("sim_evals", Json::UInt(sim_evals)),
+            kv("raw_draws", Json::UInt(raw_draws)),
+            kv("feasible_evals", Json::UInt(feasible_evals)),
+            kv("totals", totals),
+            kv("tail", tail),
+            kv("spans", span_counts_obj(spans, &SpanStats::default())),
+        ];
+        if let Some(stats) = cache {
+            fields.push(kv("cache", cache_obj(stats)));
+        }
+        self.emit(
+            "run_end",
+            fields,
+            vec![kv("span_us", span_micros_obj(spans, &SpanStats::default()))],
+        );
+    }
+}
+
+/// Parse a journal file into its event list. Errors carry the 1-based
+/// line number.
+pub fn load_journal(path: &Path) -> Result<Vec<Json>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|err| format!("cannot read {}: {err}", path.display()))?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let event = Json::parse(line)
+            .map_err(|err| format!("{}:{}: {err}", path.display(), i + 1))?;
+        events.push(event);
+    }
+    Ok(events)
+}
+
+fn find_event<'a>(events: &'a [Json], ev: &str) -> Option<&'a Json> {
+    events.iter().find(|e| e.get("ev").and_then(Json::as_str) == Some(ev))
+}
+
+/// Render a journal into a per-phase time/eval attribution table (the
+/// `codesign trace summarize` output). Span durations print as `-` for
+/// deterministic journals, which redact them.
+pub fn summarize(events: &[Json]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let run = events
+        .first()
+        .and_then(|e| e.get("run"))
+        .and_then(Json::as_str)
+        .unwrap_or("<unknown>");
+    let _ = writeln!(out, "run {run}: {} events", events.len());
+    if let Some(start) = find_event(events, "run_start") {
+        let _ = writeln!(
+            out,
+            "  model={} seed={} hw_trials={} sw_trials={} threads={} deterministic={}",
+            start.get("model").and_then(Json::as_str).unwrap_or("?"),
+            start.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            start.get("hw_trials").and_then(Json::as_u64).unwrap_or(0),
+            start.get("sw_trials").and_then(Json::as_u64).unwrap_or(0),
+            start.get("threads").and_then(Json::as_u64).unwrap_or(0),
+            start.get("deterministic").and_then(Json::as_bool).unwrap_or(false),
+        );
+    }
+    let degrades = events
+        .iter()
+        .filter(|e| e.get("ev").and_then(Json::as_str) == Some("degrade"))
+        .count();
+    let incumbents = events
+        .iter()
+        .filter(|e| e.get("ev").and_then(Json::as_str) == Some("incumbent"))
+        .count();
+    let Some(end) = find_event(events, "run_end") else {
+        let _ = writeln!(out, "  no run_end event: run incomplete or journal truncated");
+        return out;
+    };
+    let _ = writeln!(
+        out,
+        "  batches={} sim_evals={} feasible={} raw_draws={} incumbents={incumbents} \
+         degrades={degrades} cancelled={}",
+        end.get("batches").and_then(Json::as_u64).unwrap_or(0),
+        end.get("sim_evals").and_then(Json::as_u64).unwrap_or(0),
+        end.get("feasible_evals").and_then(Json::as_u64).unwrap_or(0),
+        end.get("raw_draws").and_then(Json::as_u64).unwrap_or(0),
+        end.get("cancelled").and_then(Json::as_bool).unwrap_or(false),
+    );
+    let span_us = end.get("wall").and_then(|w| w.get("span_us"));
+    let total_us: u64 = span_us
+        .map(|o| o.members().iter().filter_map(|(_, v)| v.as_u64()).sum())
+        .unwrap_or(0);
+    let _ = writeln!(out, "  {:<12} {:>10} {:>12} {:>7}", "phase", "spans", "time_s", "share");
+    for phase in Phase::ALL {
+        let count = end
+            .get("spans")
+            .and_then(|s| s.get(phase.name()))
+            .and_then(Json::as_u64)
+            .unwrap_or(0);
+        let micros = span_us.and_then(|o| o.get(phase.name())).and_then(Json::as_u64);
+        match micros {
+            Some(us) if total_us > 0 => {
+                let _ = writeln!(
+                    out,
+                    "  {:<12} {:>10} {:>12.3} {:>6.1}%",
+                    phase.name(),
+                    count,
+                    us as f64 / 1e6,
+                    100.0 * us as f64 / total_us as f64,
+                );
+            }
+            _ => {
+                let _ = writeln!(out, "  {:<12} {:>10} {:>12} {:>7}", phase.name(), count, "-", "-");
+            }
+        }
+    }
+    if let Some(totals) = end.get("totals") {
+        let _ = write!(out, "  totals:");
+        for (k, v) in totals.members() {
+            if let Some(n) = v.as_u64() {
+                let _ = write!(out, " {k}={n}");
+            }
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+/// Strip the wall-clock member and the (scheduling-dependent) shared-cache
+/// snapshot so two runs of the same seed compare equal.
+fn normalize(event: &Json) -> Json {
+    match event {
+        Json::Obj(members) => Json::Obj(
+            members
+                .iter()
+                .filter(|(k, _)| k != "wall" && k != "cache")
+                .map(|(k, v)| (k.clone(), normalize(v)))
+                .collect(),
+        ),
+        Json::Arr(items) => Json::Arr(items.iter().map(normalize).collect()),
+        other => other.clone(),
+    }
+}
+
+/// Compare two journals event-by-event after [`normalize`]; returns one
+/// human-readable line per divergence (empty = no drift). The `codesign
+/// trace diff` output.
+pub fn diff(a: &[Json], b: &[Json]) -> Vec<String> {
+    const MAX_REPORTED: usize = 20;
+    let mut drift = Vec::new();
+    if a.len() != b.len() {
+        drift.push(format!("event count differs: {} vs {}", a.len(), b.len()));
+    }
+    let mut reported = 0usize;
+    let mut skipped = 0usize;
+    for (i, (ea, eb)) in a.iter().zip(b.iter()).enumerate() {
+        let (na, nb) = (normalize(ea), normalize(eb));
+        if na == nb {
+            continue;
+        }
+        if reported < MAX_REPORTED {
+            let kind = ea.get("ev").and_then(Json::as_str).unwrap_or("?");
+            drift.push(format!("event {i} ({kind}): {} != {}", na.render(), nb.render()));
+            reported += 1;
+        } else {
+            skipped += 1;
+        }
+    }
+    if skipped > 0 {
+        drift.push(format!("... and {skipped} more diverging events"));
+    }
+    drift
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("codesign_trace_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    fn demo_run(tracer: &mut RunTracer) {
+        let spans = SpanProfiler::new();
+        tracer.run_start("dqn", 7, 3, 8, 2);
+        tracer.phase("searching");
+        let gp = SurrogateStats { fits: 1, extends: 4, ..SurrogateStats::default() };
+        let feas = FeasibilityStats { constructed: 10, ..FeasibilityStats::default() };
+        let delta = DeltaStats { delta_evals: 6, ..DeltaStats::default() };
+        tracer.batch(0, 4, 4, gp, feas, delta, &spans);
+        tracer.incumbent(2, 1.25, true);
+        let gp2 = SurrogateStats { fits: 2, extends: 9, fit_failures: 1, ..gp };
+        tracer.batch(4, 4, 3, gp2, feas, delta, &spans);
+        tracer.run_end(false, 8, 20, 7, gp2, feas, delta, None, &spans.stats());
+    }
+
+    #[test]
+    fn deterministic_journals_are_bit_identical_and_diff_clean() {
+        let (pa, pb) = (temp_path("det_a"), temp_path("det_b"));
+        for path in [&pa, &pb] {
+            let mut tracer =
+                RunTracer::create(&TraceConfig::new(path.clone(), true), "dqn-7");
+            demo_run(&mut tracer);
+            assert_eq!(tracer.io_failures(), 0);
+        }
+        let (ta, tb) = (
+            std::fs::read(&pa).expect("read a"),
+            std::fs::read(&pb).expect("read b"),
+        );
+        assert!(!ta.is_empty());
+        assert_eq!(ta, tb, "deterministic journals must match byte-for-byte");
+        let (ea, eb) = (
+            load_journal(&pa).expect("parse a"),
+            load_journal(&pb).expect("parse b"),
+        );
+        assert!(diff(&ea, &eb).is_empty());
+        assert!(!String::from_utf8(ta).expect("utf8").contains("\"wall\""));
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
+    }
+
+    #[test]
+    fn batch_deltas_plus_tail_reconcile_with_totals() {
+        let path = temp_path("reconcile");
+        let mut tracer = RunTracer::create(&TraceConfig::new(path.clone(), true), "dqn-7");
+        demo_run(&mut tracer);
+        let events = load_journal(&path).expect("parse");
+        let end = find_event(&events, "run_end").expect("run_end");
+        let totals = end.get("totals").expect("totals");
+        for (key, _) in totals.members() {
+            let batch_sum: u64 = events
+                .iter()
+                .filter(|e| e.get("ev").and_then(Json::as_str) == Some("batch"))
+                .map(|e| {
+                    ["gp", "feas", "delta"]
+                        .iter()
+                        .filter_map(|g| e.get(g).and_then(|o| o.get(key)))
+                        .filter_map(Json::as_u64)
+                        .sum::<u64>()
+                })
+                .sum();
+            let tail = end
+                .get("tail")
+                .and_then(|t| t.get(key))
+                .and_then(Json::as_u64)
+                .expect("tail key");
+            let total = totals.get(key).and_then(Json::as_u64).expect("total key");
+            assert_eq!(batch_sum + tail, total, "key {key}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn degrade_event_fires_on_fit_failure_delta() {
+        let path = temp_path("degrade");
+        let mut tracer = RunTracer::create(&TraceConfig::new(path.clone(), true), "dqn-7");
+        demo_run(&mut tracer);
+        let events = load_journal(&path).expect("parse");
+        let degrade = find_event(&events, "degrade").expect("degrade event");
+        assert_eq!(degrade.get("batch").and_then(Json::as_u64), Some(1));
+        let signals = degrade.get("signals").expect("signals");
+        assert_eq!(signals.get("gp_fit_failures").and_then(Json::as_u64), Some(1));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn wall_mode_journals_carry_timestamps_but_diff_clean_after_normalize() {
+        let (pa, pb) = (temp_path("wall_a"), temp_path("wall_b"));
+        for path in [&pa, &pb] {
+            let mut tracer =
+                RunTracer::create(&TraceConfig::new(path.clone(), false), "dqn-7");
+            demo_run(&mut tracer);
+        }
+        let ea = load_journal(&pa).expect("parse a");
+        let eb = load_journal(&pb).expect("parse b");
+        assert!(ea[0].get("wall").and_then(|w| w.get("ts_ms")).is_some());
+        assert!(diff(&ea, &eb).is_empty(), "wall data must be normalized away");
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
+    }
+
+    #[test]
+    fn summarize_names_every_phase_and_diff_reports_drift() {
+        let path = temp_path("summary");
+        let mut tracer = RunTracer::create(&TraceConfig::new(path.clone(), true), "dqn-7");
+        demo_run(&mut tracer);
+        let events = load_journal(&path).expect("parse");
+        let summary = summarize(&events);
+        for phase in Phase::ALL {
+            assert!(summary.contains(phase.name()), "{summary}");
+        }
+        assert!(summary.contains("batches=2"), "{summary}");
+        // drift: drop the last event and perturb nothing else
+        let truncated = &events[..events.len() - 1];
+        let drift = diff(&events, truncated);
+        assert!(!drift.is_empty());
+        assert!(drift[0].contains("event count differs"), "{drift:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let mut tracer = RunTracer::disabled();
+        demo_run(&mut tracer);
+        assert!(!tracer.is_enabled());
+        assert_eq!(tracer.io_failures(), 0);
+    }
+}

@@ -31,6 +31,7 @@ use std::time::Duration;
 use crate::coordinator::driver::CodesignOutcome;
 use crate::coordinator::run::{JobSpec, RunPhase, RunStatus, SearchRun};
 use crate::model::cache::EvalCache;
+use crate::obs::fleet::FleetMetrics;
 use crate::space::prune::CertificateStore;
 use crate::surrogate::gp::GpBackend;
 use crate::util::sync::lock_unpoisoned;
@@ -146,6 +147,7 @@ pub struct JobScheduler {
     cache: Arc<EvalCache>,
     certs: Arc<CertificateStore>,
     slots: Arc<Slots>,
+    fleet: Arc<FleetMetrics>,
     next_id: AtomicU64,
 }
 
@@ -182,6 +184,7 @@ impl JobScheduler {
             cache,
             certs,
             slots: Arc::new(Slots::new(capacity)),
+            fleet: Arc::new(FleetMetrics::new()),
             next_id: AtomicU64::new(0),
         }
     }
@@ -196,6 +199,19 @@ impl JobScheduler {
         &self.certs
     }
 
+    /// Fleet-level counter and span aggregates, folded in as each job
+    /// finishes (a job in flight is not yet counted).
+    pub fn fleet(&self) -> &Arc<FleetMetrics> {
+        &self.fleet
+    }
+
+    /// Prometheus-style text exposition of the fleet aggregates plus the
+    /// shared cache / certificate-store gauges. Suitable for serving from a
+    /// scrape endpoint or dumping to a file at the end of a schedule.
+    pub fn fleet_exposition(&self) -> String {
+        self.fleet.render(&self.cache.stats(), self.certs.len() as u64)
+    }
+
     /// Schedule `spec` as a new job. Returns immediately with a handle;
     /// the job starts as soon as a slot is free.
     pub fn submit(&self, spec: JobSpec) -> JobHandle {
@@ -204,6 +220,7 @@ impl JobScheduler {
         let status = run.status();
         let backend = self.backend.clone();
         let slots = Arc::clone(&self.slots);
+        let fleet = Arc::clone(&self.fleet);
         let thread_status = run.status();
         let join = thread::Builder::new()
             .name(format!("codesign-job-{id}"))
@@ -214,7 +231,9 @@ impl JobScheduler {
                 let _slot = slots
                     .acquire(&thread_status)
                     .then(|| SlotGuard { slots: Arc::clone(&slots) });
-                run.run(&backend)
+                let out = run.run(&backend);
+                fleet.absorb(&out.metrics, &out.spans, out.cancelled);
+                out
             })
             // lint: allow(panic-freedom) — OS-level thread-spawn failure is unrecoverable here
             .expect("spawn search-job thread");
@@ -279,6 +298,22 @@ mod tests {
         let out = running.wait();
         assert!(!out.cancelled, "the running job must be unaffected");
         assert_eq!(out.hw_trace.evals.len(), 3);
+    }
+
+    #[test]
+    fn fleet_metrics_absorb_each_completed_job() {
+        let sched = JobScheduler::new(GpBackend::Native);
+        let a = sched.submit(tiny_spec(31)).wait();
+        let b = sched.submit(tiny_spec(32)).wait();
+        let want = a.metrics.sim_evals.load(Ordering::Relaxed)
+            + b.metrics.sim_evals.load(Ordering::Relaxed);
+        assert_eq!(sched.fleet().counter("sim_evals"), want);
+        assert_eq!(sched.fleet().jobs_completed(), 2);
+        assert_eq!(sched.fleet().jobs_cancelled(), 0);
+        let text = sched.fleet_exposition();
+        assert!(text.contains(&format!("codesign_sim_evals_total {want}")));
+        assert!(text.contains("codesign_jobs_completed_total 2"));
+        assert!(text.contains("codesign_phase_seconds_bucket"));
     }
 
     #[test]

@@ -10,20 +10,30 @@
 //!   serving requests (the same layer/config/mapping triples arriving from
 //!   different clients or rounds) hit the warm cache instead of re-running
 //!   the cost model; `EvalHandle::stats` exposes the hit/miss telemetry.
+//! * [`MetricsServer`] — a minimal HTTP/1.0 scrape endpoint rendering the
+//!   fleet's Prometheus-style exposition (see `obs::fleet`) on every GET.
+//!   Dependency-free: a nonblocking `TcpListener` polled on a dedicated
+//!   thread, shut down by flag from `Drop`.
 
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
-use std::thread::JoinHandle;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
 
 use anyhow::{anyhow, Context as _, Result};
 
 use super::gp_exec::{GpExecutor, Posterior, Theta};
 use crate::model::arch::HwConfig;
 use crate::model::batch::{BatchEvaluator, EvalRequest};
-use crate::model::cache::CacheStats;
+use crate::model::cache::{CacheStats, EvalCache};
 use crate::model::eval::{Evaluator, Infeasible};
 use crate::model::mapping::Mapping;
 use crate::model::workload::Layer;
+use crate::obs::fleet::FleetMetrics;
+use crate::space::prune::CertificateStore;
 use crate::util::sync::lock_unpoisoned;
 
 enum Request {
@@ -286,6 +296,92 @@ impl Drop for EvalService {
     }
 }
 
+/// Minimal Prometheus scrape endpoint over the fleet aggregates of a
+/// [`JobScheduler`](crate::runtime::jobs::JobScheduler): every request gets
+/// a fresh render of the fleet counters, the shared evaluation-cache and
+/// certificate-store gauges, and the per-phase latency histograms.
+///
+/// The listener is nonblocking and polled every 25 ms on one named thread;
+/// `Drop` raises the shutdown flag and joins, so the server never outlives
+/// the schedule that started it. Any single request is best-effort: an IO
+/// error on one connection is dropped, never fatal to the endpoint.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving. The sources are shared with the scheduler that owns them.
+    pub fn start(
+        addr: &str,
+        fleet: Arc<FleetMetrics>,
+        cache: Arc<EvalCache>,
+        certs: Arc<CertificateStore>,
+    ) -> Result<MetricsServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding metrics endpoint {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the metrics listener nonblocking")?;
+        let local = listener.local_addr().context("resolving the metrics endpoint address")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let join = thread::Builder::new()
+            .name("metrics-server".into())
+            .spawn(move || {
+                while !flag.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let body = fleet.render(&cache.stats(), certs.len() as u64);
+                            serve_one(stream, &body);
+                        }
+                        // WouldBlock is the idle case; any other accept
+                        // error is transient — back off and keep serving
+                        Err(_) => thread::sleep(Duration::from_millis(25)),
+                    }
+                }
+            })
+            .context("spawning the metrics-server thread")?;
+        Ok(MetricsServer { addr: local, shutdown, join: Some(join) })
+    }
+
+    /// The bound address — the actual port when started on port 0.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+/// Answer one scrape: drain (best-effort) the request head, then write an
+/// HTTP/1.0 response carrying the exposition text. IO errors are ignored —
+/// the client gave up, the next scrape starts clean.
+fn serve_one(mut stream: TcpStream, body: &str) {
+    // accepted sockets do not reliably inherit the listener's nonblocking
+    // mode; force blocking with a short timeout so a stalled client cannot
+    // wedge the serving loop
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let mut head = [0u8; 1024];
+    let _ = stream.read(&mut head);
+    let response = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let _ = stream.write_all(response.as_bytes());
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -360,6 +456,26 @@ mod tests {
         assert_eq!(cold_stats.snapshot_loaded, 0, "foreign snapshot must not load");
         assert_eq!(cold_stats.entries, 0, "mismatched member must start cold");
         std::fs::remove_file(&snap).ok();
+    }
+
+    #[test]
+    fn metrics_server_answers_scrapes_with_the_fleet_exposition() {
+        let fleet = Arc::new(FleetMetrics::new());
+        let server = MetricsServer::start(
+            "127.0.0.1:0",
+            Arc::clone(&fleet),
+            Arc::new(EvalCache::default()),
+            Arc::new(CertificateStore::default()),
+        )
+        .unwrap();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.0 200 OK"), "{response}");
+        assert!(response.contains("codesign_jobs_completed_total 0"), "{response}");
+        assert!(response.contains("codesign_phase_seconds_bucket"), "{response}");
+        drop(server); // joins the serving thread via the shutdown flag
     }
 
     #[test]

@@ -46,6 +46,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::model::arch::{HwConfig, Resources};
 use crate::model::workload::Layer;
+use crate::obs::span::{span, Phase};
 use crate::space::feasible::{telemetry, FactorRange, FeasibleSampler, SpaceCheck};
 use crate::space::hw_space::HwSpace;
 use crate::util::rng::Rng;
@@ -237,6 +238,7 @@ impl PrunedHwSpace {
     /// (tight layers add the mesh-bounded witness enumeration), a warm one
     /// costs a map probe.
     pub fn certify(&self, hw: &HwConfig) -> HwCertificate {
+        let _span = span(Phase::Prune);
         telemetry::record_certificates(self.layers.len() as u64);
         let mut per_layer = Vec::with_capacity(self.layers.len());
         let mut empty = Vec::with_capacity(self.layers.len());
@@ -282,6 +284,7 @@ impl PrunedHwSpace {
     /// so callers always make progress; the inner search then surfaces the
     /// unknown constraint as before.
     pub fn sample_valid(&self, rng: &mut Rng) -> (HwConfig, u64) {
+        let _span = span(Phase::Prune);
         let mut draws = 0u64;
         for _ in 0..MAX_PRUNE_REJECTS {
             let (hw, d) = self.inner.sample_valid(rng);

@@ -13,6 +13,7 @@ use crate::model::arch::{DataflowOpt, HwConfig, Resources};
 use crate::model::mapping::{Mapping, Split};
 use crate::model::validity::check_mapping;
 use crate::model::workload::{Dim, Layer, DIMS};
+use crate::obs::span::{span, Phase};
 use crate::space::factors::FactorSplitter;
 use crate::space::feasible::{telemetry as feastel, FeasibleSampler};
 use crate::util::rng::Rng;
@@ -114,6 +115,7 @@ impl SwSpace {
     /// the witness itself rather than mis-reporting a provably non-empty
     /// space as unsampleable. Exhaustion never panics.
     pub fn sample_valid(&self, rng: &mut Rng, max_draws: u64) -> Option<(Mapping, u64)> {
+        let _span = span(Phase::Sample);
         if let Some(m) = self.feasible.sample(rng) {
             debug_assert!(self.is_valid(&m), "constructed mapping failed the validator");
             return Some((m, 1));

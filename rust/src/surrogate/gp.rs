@@ -38,6 +38,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::obs::span::{span, Phase};
 use crate::runtime::gp_exec::{Posterior, Theta};
 use crate::runtime::server::GpHandle;
 use crate::surrogate::gp_native::NativeGp;
@@ -330,6 +331,7 @@ impl GpSurrogate {
     /// recorded in `surrogate::telemetry`. The scheduled O(n^3) path;
     /// between schedules use `extend`/`sync_data`.
     pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64], rng: &mut Rng) -> Result<()> {
+        let _span = span(Phase::Surrogate);
         if x.len() != y.len() {
             bail!("GpSurrogate::fit: {} inputs vs {} targets", x.len(), y.len());
         }
@@ -402,6 +404,7 @@ impl GpSurrogate {
     /// to extend. Never panics: a non-finite or dimension-mismatched
     /// observation is consumed from the log but never enters the model.
     pub fn extend(&mut self, x_new: &[f64], y_new: f64) -> Result<()> {
+        let _span = span(Phase::Surrogate);
         self.synced += 1;
         let clean = y_new.is_finite()
             && x_new.iter().all(|v| v.is_finite())
@@ -463,6 +466,7 @@ impl GpSurrogate {
     /// falls back to a full data refit. This is the cheap per-trial path
     /// the BO loops call between scheduled `fit`s.
     pub fn sync_data(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> Result<()> {
+        let _span = span(Phase::Surrogate);
         if xs.len() != ys.len() {
             bail!("GpSurrogate::sync_data: {} inputs vs {} targets", xs.len(), ys.len());
         }

@@ -1,0 +1,216 @@
+//! Observability regression suite (ISSUE 9): run-trace journals written by
+//! traced jobs must (a) be bit-identical across fixed-seed repeats under a
+//! deterministic `TraceConfig`, (b) reconcile exactly against the run's own
+//! metrics report — for every `gp_*`/`feas_*`/`prune_*`/`delta_*` key,
+//! `sum(batch deltas) + run_end.tail == run_end.totals == metrics` — and
+//! (c) feed fleet aggregation: the scheduler's Prometheus exposition sums
+//! the per-job counters the journals carry.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+
+use codesign::coordinator::metrics::Metrics;
+use codesign::coordinator::run::JobSpec;
+use codesign::obs::json::Json;
+use codesign::obs::span::Phase;
+use codesign::obs::trace::{diff, load_journal, summarize, TraceConfig};
+use codesign::opt::config::{BoConfig, NestedConfig};
+use codesign::runtime::jobs::JobScheduler;
+use codesign::surrogate::gp::GpBackend;
+use codesign::workloads::specs::{dqn, mlp, ModelSpec};
+
+fn tiny() -> NestedConfig {
+    NestedConfig {
+        hw_trials: 3,
+        sw_trials: 8,
+        hw_bo: BoConfig { warmup: 2, pool: 6, ..BoConfig::hardware() },
+        sw_bo: BoConfig { warmup: 3, pool: 6, ..BoConfig::software() },
+    }
+}
+
+fn temp_journal(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("codesign_trace_e2e_{tag}_{}.jsonl", std::process::id()))
+}
+
+fn traced_spec(model: ModelSpec, seed: u64, journal: &PathBuf) -> JobSpec {
+    let mut spec = JobSpec::new(model, tiny(), seed);
+    spec.threads = 2;
+    spec.trace = Some(TraceConfig::new(journal.clone(), true));
+    spec
+}
+
+fn find<'a>(events: &'a [Json], ev: &str) -> &'a Json {
+    events
+        .iter()
+        .find(|e| e.get("ev").and_then(Json::as_str) == Some(ev))
+        .unwrap_or_else(|| panic!("no {ev} event"))
+}
+
+fn u(obj: &Json, key: &str) -> u64 {
+    obj.get(key).and_then(Json::as_u64).unwrap_or_else(|| panic!("no u64 key {key}"))
+}
+
+/// The journal's counter keys paired with the same run's metrics values
+/// (names match the `coordinator/metrics.rs` report fields one-to-one).
+fn metric_pairs(m: &Metrics) -> Vec<(&'static str, u64)> {
+    let r = Ordering::Relaxed;
+    vec![
+        ("gp_fits", m.gp_fits.load(r)),
+        ("gp_data_refits", m.gp_data_refits.load(r)),
+        ("gp_extends", m.gp_extends.load(r)),
+        ("gp_extend_fallbacks", m.gp_extend_fallbacks.load(r)),
+        ("gp_fit_failures", m.gp_fit_failures.load(r)),
+        ("gp_jitter_escalations", m.gp_jitter_escalations.load(r)),
+        ("gp_warm_refits", m.gp_warm_refits.load(r)),
+        ("gp_warm_grid_saved", m.gp_warm_grid_saved.load(r)),
+        ("feas_constructed", m.feas_constructed.load(r)),
+        ("feas_perturbations", m.feas_perturbations.load(r)),
+        ("feas_perturbation_fallbacks", m.feas_perturbation_fallbacks.load(r)),
+        ("feas_projections", m.feas_projections.load(r)),
+        ("feas_projection_failures", m.feas_projection_failures.load(r)),
+        ("feas_fallback_samples", m.feas_fallback_samples.load(r)),
+        ("feas_fallback_draws", m.feas_fallback_draws.load(r)),
+        ("feas_infeasible_spaces", m.feas_infeasible_spaces.load(r)),
+        ("feas_degraded_skips", m.feas_degraded_skips.load(r)),
+        ("prune_certificates", m.prune_certificates.load(r)),
+        ("prune_rejections", m.prune_rejections.load(r)),
+        ("prune_cert_hits", m.prune_cert_hits.load(r)),
+        ("prune_cert_misses", m.prune_cert_misses.load(r)),
+        ("prune_lattice_boxes", m.prune_lattice_boxes.load(r)),
+        ("prune_box_shrink_milli", m.prune_box_shrink_milli.load(r)),
+        ("delta_evals", m.delta_evals.load(r)),
+        ("delta_fallbacks", m.delta_fallbacks.load(r)),
+        ("delta_levels_recomputed", m.delta_levels_recomputed.load(r)),
+    ]
+}
+
+/// Fixed seed, deterministic config, two fresh schedulers: the two journal
+/// files must match byte-for-byte, and `trace diff` must see zero drift.
+#[test]
+fn fixed_seed_runs_journal_bit_identically() {
+    let (pa, pb) = (temp_journal("det_a"), temp_journal("det_b"));
+    for path in [&pa, &pb] {
+        let out = JobScheduler::new(GpBackend::Native)
+            .submit(traced_spec(dqn(), 7, path))
+            .wait();
+        assert!(!out.cancelled);
+        assert_eq!(out.metrics.trace_io_failures.load(Ordering::Relaxed), 0);
+    }
+    let bytes_a = std::fs::read(&pa).expect("journal a");
+    let bytes_b = std::fs::read(&pb).expect("journal b");
+    assert!(!bytes_a.is_empty(), "traced run must write a journal");
+    assert_eq!(bytes_a, bytes_b, "fixed-seed deterministic journals must be bit-identical");
+    let text = String::from_utf8(bytes_a).expect("utf8 journal");
+    assert!(!text.contains("\"wall\""), "deterministic journal must redact wall-clock data");
+    let ea = load_journal(&pa).expect("parse a");
+    let eb = load_journal(&pb).expect("parse b");
+    let drift = diff(&ea, &eb);
+    assert!(drift.is_empty(), "trace diff reported drift: {drift:?}");
+    let _ = std::fs::remove_file(&pa);
+    let _ = std::fs::remove_file(&pb);
+}
+
+/// Two concurrent traced jobs on one scheduler: each journal's event stream
+/// reconciles exactly with that run's metrics report, and the scheduler's
+/// fleet exposition carries the cross-job sums.
+#[test]
+fn journals_reconcile_with_metrics_and_fleet_exposition() {
+    let jobs = [("dqn", dqn(), 7u64), ("mlp", mlp(), 9u64)];
+    let paths: Vec<PathBuf> = jobs.iter().map(|(tag, _, _)| temp_journal(tag)).collect();
+    let sched = JobScheduler::with_capacity(GpBackend::Native, 2);
+    let handles: Vec<_> = jobs
+        .iter()
+        .zip(&paths)
+        .map(|((_, model, seed), path)| sched.submit(traced_spec(model.clone(), *seed, path)))
+        .collect();
+    let outcomes: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+
+    let mut fleet_sim_evals = 0u64;
+    for (out, path) in outcomes.iter().zip(&paths) {
+        let events = load_journal(path).expect("parse journal");
+        let end = find(&events, "run_end");
+        let totals = end.get("totals").expect("totals");
+        let tail = end.get("tail").expect("tail");
+        let batches: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ev").and_then(Json::as_str) == Some("batch"))
+            .collect();
+        assert!(!batches.is_empty(), "a completed run must journal its batches");
+        assert_eq!(u(end, "batches"), batches.len() as u64);
+
+        // every counter key: sum(batch deltas) + tail == totals == metrics
+        for (key, metric_value) in metric_pairs(&out.metrics) {
+            let batch_sum: u64 = batches
+                .iter()
+                .map(|b| {
+                    ["gp", "feas", "delta"]
+                        .iter()
+                        .filter_map(|group| b.get(group).and_then(|o| o.get(key)))
+                        .filter_map(Json::as_u64)
+                        .sum::<u64>()
+                })
+                .sum();
+            let total = u(totals, key);
+            assert_eq!(batch_sum + u(tail, key), total, "batch+tail != totals for {key}");
+            assert_eq!(total, metric_value, "journal totals != metrics report for {key}");
+        }
+
+        // the top-level evaluation counters reconcile too
+        let r = Ordering::Relaxed;
+        assert_eq!(u(end, "sim_evals"), out.metrics.sim_evals.load(r));
+        assert_eq!(u(end, "raw_draws"), out.metrics.raw_draws.load(r));
+        assert_eq!(u(end, "feasible_evals"), out.metrics.feasible_evals.load(r));
+        fleet_sim_evals += out.metrics.sim_evals.load(r);
+
+        // span counts are deterministic work-item counts: the journal's
+        // run_end snapshot is the outcome's snapshot
+        let spans = end.get("spans").expect("spans");
+        for phase in Phase::ALL {
+            assert_eq!(
+                u(spans, phase.name()),
+                out.spans.phase(phase).count,
+                "span count mismatch for {}",
+                phase.name()
+            );
+        }
+        assert_eq!(
+            u(spans, Phase::Evaluate.name()),
+            batches.len() as u64,
+            "one evaluate span per journaled batch"
+        );
+    }
+
+    // fleet aggregation: the exposition sums what the journals reconcile
+    assert_eq!(sched.fleet().jobs_completed(), 2);
+    assert_eq!(sched.fleet().counter("sim_evals"), fleet_sim_evals);
+    let exposition = sched.fleet_exposition();
+    assert!(
+        exposition.contains(&format!("codesign_sim_evals_total {fleet_sim_evals}")),
+        "{exposition}"
+    );
+    assert!(exposition.contains("codesign_jobs_completed_total 2"), "{exposition}");
+    assert!(exposition.contains("codesign_phase_seconds_bucket{phase=\"evaluate\""), "{exposition}");
+    for path in &paths {
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+/// `codesign trace summarize` renders every phase and the run header from a
+/// real journal; a journal diffs clean against itself.
+#[test]
+fn summarize_renders_a_real_journal() {
+    let path = temp_journal("summary");
+    let out = JobScheduler::new(GpBackend::Native)
+        .submit(traced_spec(dqn(), 21, &path))
+        .wait();
+    assert!(!out.cancelled);
+    let events = load_journal(&path).expect("parse journal");
+    let rendered = summarize(&events);
+    assert!(rendered.contains("run dqn-21"), "{rendered}");
+    for phase in Phase::ALL {
+        assert!(rendered.contains(phase.name()), "missing phase {} in:\n{rendered}", phase.name());
+    }
+    assert!(rendered.contains("cancelled=false"), "{rendered}");
+    assert!(diff(&events, &events).is_empty());
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,10 @@
+// R5 obs fixture, near-miss side: inside `obs/` the aggregation structs
+// (span profilers, fleet counters) *are* the sanctioned sinks — atomic
+// statics here are the implementation of telemetry, not an escape from it.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static FLEET_JOBS_COMPLETED: AtomicU64 = AtomicU64::new(0); // exempt under obs/
+
+pub fn absorb_job() {
+    FLEET_JOBS_COMPLETED.fetch_add(1, Ordering::Relaxed);
+}

@@ -1,0 +1,11 @@
+// R5 obs fixture, true-positive side: an atomic counter static in a module
+// whose path merely *resembles* the `obs/` allowlist entry. The directory
+// entry must match path components, not a string prefix — `observability/`
+// or `coordinator/obs_glue.rs` never ride on `obs/`.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static SCRAPES_SERVED: AtomicU64 = AtomicU64::new(0); // violation
+
+pub fn record_scrape() {
+    SCRAPES_SERVED.fetch_add(1, Ordering::Relaxed);
+}

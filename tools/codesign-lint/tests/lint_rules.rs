@@ -21,6 +21,8 @@ const R4_TP: &str = include_str!("fixtures/r4_true_positive.rs");
 const R4_NM: &str = include_str!("fixtures/r4_near_miss.rs");
 const R5_TP: &str = include_str!("fixtures/r5_true_positive.rs");
 const R5_NM: &str = include_str!("fixtures/r5_near_miss.rs");
+const R5_OBS_TP: &str = include_str!("fixtures/r5_obs_true_positive.rs");
+const R5_OBS_NM: &str = include_str!("fixtures/r5_obs_near_miss.rs");
 
 fn count(report: &FileReport, rule: &str) -> usize {
     report.violations.iter().filter(|v| v.rule == rule).count()
@@ -114,6 +116,32 @@ fn r5_telemetry_modules_are_exempt() {
 fn r5_near_miss_is_clean() {
     let r = check_source(R5_NM, "model/fixture.rs");
     assert!(r.violations.is_empty(), "near-miss flagged: {:?}", r.violations);
+}
+
+#[test]
+fn r5_obs_directory_entry_exempts_files_under_obs() {
+    let r = check_source(R5_OBS_NM, "obs/fleet_fixture.rs");
+    assert!(r.violations.is_empty(), "obs/ entry ignored: {:?}", r.violations);
+}
+
+#[test]
+fn r5_obs_entry_matches_path_components_not_string_prefixes() {
+    // a sloppy starts_with("obs") would let both of these ride the
+    // directory entry; neither is under obs/
+    for rel in ["observability/fixture.rs", "coordinator/obs_glue.rs"] {
+        let r = check_source(R5_OBS_TP, rel);
+        assert_eq!(count(&r, "telemetry-scope"), 1, "{rel} must not ride the obs/ entry");
+    }
+}
+
+#[test]
+fn r4_clock_shim_is_exempt_but_its_siblings_are_not() {
+    // `obs/clock.rs` is an exact-file entry: the shim itself may read the
+    // wall clock, everything else under obs/ still must route through it
+    let clean = check_source(R4_TP, "obs/clock.rs");
+    assert!(clean.violations.is_empty(), "shim not exempt: {:?}", clean.violations);
+    let flagged = check_source(R4_TP, "obs/trace_fixture.rs");
+    assert_eq!(count(&flagged, "determinism"), 2, "file entries must not act as prefixes");
 }
 
 #[test]

@@ -25,7 +25,7 @@ use std::sync::Arc;
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::parallel::default_threads;
-use crate::coordinator::run::{self, JobSpec};
+use crate::coordinator::run::{self, JobSpec, SearchStrategy};
 use crate::model::arch::HwConfig;
 use crate::model::cache::EvalCache;
 use crate::model::mapping::Mapping;
@@ -63,6 +63,9 @@ pub struct Driver {
     pub ncfg: NestedConfig,
     pub hw_method: HwMethod,
     pub sw_method: SwMethod,
+    /// Outer-loop strategy (nested / semi-decoupled / transfer); see
+    /// [`SearchStrategy`]. `Nested` reproduces the classic driver.
+    pub strategy: SearchStrategy,
     pub threads: usize,
     pub checkpoint_path: Option<PathBuf>,
     /// Cross-process cache persistence: when set, the run warm-starts by
@@ -83,6 +86,7 @@ impl Driver {
             ncfg,
             hw_method: HwMethod::Bo,
             sw_method: SwMethod::Bo { surrogate: sw_search::SurrogateKind::Gp },
+            strategy: SearchStrategy::Nested,
             threads: default_threads(),
             checkpoint_path: None,
             cache_snapshot_path: None,
@@ -143,6 +147,7 @@ impl Driver {
             ncfg: self.ncfg,
             hw_method: self.hw_method,
             sw_method: self.sw_method,
+            strategy: self.strategy.clone(),
             threads: self.threads,
             seed,
             checkpoint_path: self.checkpoint_path.clone(),
@@ -177,6 +182,7 @@ pub fn eyeriss_baseline(
         },
         hw_method: HwMethod::Bo,
         sw_method,
+        strategy: SearchStrategy::Nested,
         threads,
         checkpoint_path: None,
         cache_snapshot_path: None,

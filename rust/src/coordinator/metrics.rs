@@ -65,6 +65,15 @@ pub struct Metrics {
     pub prune_cert_misses: AtomicU64,
     pub prune_lattice_boxes: AtomicU64,
     pub prune_box_shrink_milli: AtomicU64,
+    /// Semi-decoupled search snapshot (stored per run via
+    /// `record_feasibility`): certified-nonempty lattice cells built into
+    /// per-layer mapping tables (zero when a shared table was reused —
+    /// the build amortized across jobs), outer-loop evaluations served as
+    /// O(1) table lookups, and finalists re-searched exactly to bound the
+    /// optimality gap.
+    pub table_cells: AtomicU64,
+    pub table_hits: AtomicU64,
+    pub gap_resolved: AtomicU64,
     /// Delta-evaluation snapshot (stored per run via `record_delta`):
     /// evaluations served through the incremental terms cache, evaluations
     /// that fell back to a full analyze, and tile levels re-derived across
@@ -129,6 +138,9 @@ impl Metrics {
             prune_cert_misses: AtomicU64::new(0),
             prune_lattice_boxes: AtomicU64::new(0),
             prune_box_shrink_milli: AtomicU64::new(0),
+            table_cells: AtomicU64::new(0),
+            table_hits: AtomicU64::new(0),
+            gap_resolved: AtomicU64::new(0),
             delta_evals: AtomicU64::new(0),
             delta_fallbacks: AtomicU64::new(0),
             delta_levels_recomputed: AtomicU64::new(0),
@@ -194,6 +206,9 @@ impl Metrics {
         self.prune_cert_misses.store(stats.cert_misses, Ordering::Relaxed);
         self.prune_lattice_boxes.store(stats.lattice_boxes, Ordering::Relaxed);
         self.prune_box_shrink_milli.store(stats.lattice_box_shrink_milli, Ordering::Relaxed);
+        self.table_cells.store(stats.table_cells, Ordering::Relaxed);
+        self.table_hits.store(stats.table_hits, Ordering::Relaxed);
+        self.gap_resolved.store(stats.gap_resolved, Ordering::Relaxed);
     }
 
     /// An incumbent-checkpoint save failed in the search hot path.
@@ -264,6 +279,7 @@ impl Metrics {
              prune_certificates={} prune_rejections={} prune_cert_hits={} \
              prune_cert_misses={} prune_lattice_boxes={} \
              prune_box_shrink_milli={} \
+             table_cells={} table_hits={} gap_resolved={} \
              gp_fits={} gp_data_refits={} gp_extends={} gp_extend_fallbacks={} \
              gp_fit_failures={} gp_jitter_escalations={} gp_warm_refits={} \
              gp_warm_grid_saved={} \
@@ -292,6 +308,9 @@ impl Metrics {
             self.prune_cert_misses.load(Ordering::Relaxed),
             self.prune_lattice_boxes.load(Ordering::Relaxed),
             self.prune_box_shrink_milli.load(Ordering::Relaxed),
+            self.table_cells.load(Ordering::Relaxed),
+            self.table_hits.load(Ordering::Relaxed),
+            self.gap_resolved.load(Ordering::Relaxed),
             self.gp_fits.load(Ordering::Relaxed),
             self.gp_data_refits.load(Ordering::Relaxed),
             self.gp_extends.load(Ordering::Relaxed),
@@ -420,6 +439,9 @@ mod tests {
             cert_misses: 230,
             lattice_boxes: 6,
             lattice_box_shrink_milli: 9200,
+            table_cells: 31,
+            table_hits: 120,
+            gap_resolved: 3,
         });
         let report = m.report();
         assert!(report.contains("feas_constructed=1200"));
@@ -437,6 +459,9 @@ mod tests {
         assert!(report.contains("prune_cert_misses=230"));
         assert!(report.contains("prune_lattice_boxes=6"));
         assert!(report.contains("prune_box_shrink_milli=9200"));
+        assert!(report.contains("table_cells=31"));
+        assert!(report.contains("table_hits=120"));
+        assert!(report.contains("gap_resolved=3"));
     }
 
     #[test]
@@ -525,6 +550,9 @@ mod tests {
             cert_misses: 28,
             lattice_boxes: 22,
             lattice_box_shrink_milli: 23,
+            table_cells: 29,
+            table_hits: 30,
+            gap_resolved: 31,
         });
         m.record_delta(DeltaStats {
             delta_evals: 24,
@@ -555,6 +583,9 @@ mod tests {
             ("prune_cert_misses", "28"),
             ("prune_lattice_boxes", "22"),
             ("prune_box_shrink_milli", "23"),
+            ("table_cells", "29"),
+            ("table_hits", "30"),
+            ("gap_resolved", "31"),
             ("gp_fits", "4"),
             ("gp_data_refits", "2"),
             ("gp_extends", "40"),

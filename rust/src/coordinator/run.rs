@@ -41,9 +41,11 @@ use crate::model::delta::telemetry as delta_telemetry;
 use crate::model::eval::Evaluator;
 use crate::obs::span::{self, Phase, SpanProfiler, SpanStats};
 use crate::obs::trace::{RunTracer, TraceConfig};
-use crate::opt::config::{BoConfig, NestedConfig};
+use crate::opt::config::{BoConfig, NestedConfig, SemiDecoupledConfig};
 use crate::opt::hw_search::{self, Chunking, HwMethod, HwTrace};
+use crate::opt::semi_decoupled::{self, MappingTable, TableStore};
 use crate::opt::sw_search::{self, SearchTrace, SwMethod, SwProblem};
+use crate::opt::transfer::{self, TransferPrior};
 use crate::space::feasible::telemetry as feas_telemetry;
 use crate::space::prune::{CertificateStore, PrunedHwSpace};
 use crate::space::sw_space::SwSpace;
@@ -54,6 +56,24 @@ use crate::util::sync::lock_unpoisoned;
 use crate::workloads::eyeriss::eyeriss_resources;
 use crate::workloads::specs::ModelSpec;
 
+/// How the outer hardware loop obtains per-config objective values.
+#[derive(Clone, Debug)]
+pub enum SearchStrategy {
+    /// The paper's nested co-design (§4.1): a full software mapping search
+    /// inside every outer hardware trial.
+    Nested,
+    /// Semi-decoupled two-phase search (`opt::semi_decoupled`): phase 1
+    /// builds a per-layer mapping table over the certified hardware
+    /// lattice (amortized across scheduler jobs through the shared
+    /// [`TableStore`]), phase 2 searches against O(1) table lookups and
+    /// bounds the optimality gap by exactly re-searching the top-k
+    /// finalists. `hw_method` is ignored (the phase-2 loop is BO).
+    SemiDecoupled(SemiDecoupledConfig),
+    /// Nested search whose surrogates are warm-started from a source
+    /// model's observations (`opt::transfer`). `hw_method` is ignored.
+    Transfer(TransferPrior),
+}
+
 /// Complete description of one co-design run: what to search, how hard,
 /// and where to persist. This is the unit the job scheduler accepts; a
 /// `JobSpec` plus a seed fully determines the run's trace.
@@ -63,6 +83,9 @@ pub struct JobSpec {
     pub ncfg: NestedConfig,
     pub hw_method: HwMethod,
     pub sw_method: SwMethod,
+    /// Outer-loop strategy; [`SearchStrategy::Nested`] reproduces the
+    /// pre-strategy driver bit-for-bit.
+    pub strategy: SearchStrategy,
     /// Worker threads for this run's (config x layer) fan-out.
     pub threads: usize,
     /// Seed of the run's root RNG; per-(config, layer) software searches
@@ -88,6 +111,7 @@ impl JobSpec {
             ncfg,
             hw_method: HwMethod::Bo,
             sw_method: SwMethod::Bo { surrogate: sw_search::SurrogateKind::Gp },
+            strategy: SearchStrategy::Nested,
             threads: default_threads(),
             seed,
             checkpoint_path: None,
@@ -360,6 +384,7 @@ pub struct SearchRun {
     spec: JobSpec,
     cache: Arc<EvalCache>,
     certs: Arc<CertificateStore>,
+    tables: Arc<TableStore>,
     scope: RunScope,
     metrics: Arc<Metrics>,
     status: Arc<RunStatus>,
@@ -383,10 +408,21 @@ impl SearchRun {
             spec,
             cache,
             certs,
+            tables: Arc::new(TableStore::default()),
             scope: RunScope::new(),
             metrics: Metrics::new(),
             status,
         }
+    }
+
+    /// Share a mapping-table store with other runs (the scheduler's shape):
+    /// semi-decoupled jobs targeting the same (model, config) reuse one
+    /// phase-1 table instead of rebuilding it. Sharing cannot change
+    /// results — the table's bits depend only on (model, config), never on
+    /// which job built it.
+    pub fn with_tables(mut self, tables: Arc<TableStore>) -> Self {
+        self.tables = tables;
+        self
     }
 
     /// The live progress/cancellation view (shareable before `run`).
@@ -408,7 +444,7 @@ impl SearchRun {
     /// baselines replaced by the run scope, cancellation checks at batch
     /// boundaries, and checkpoint/snapshot failures counted into metrics.
     pub fn run(self, backend: &GpBackend) -> CodesignOutcome {
-        let SearchRun { spec, cache, certs, scope, metrics, status } = self;
+        let SearchRun { spec, cache, certs, tables, scope, metrics, status } = self;
         let model = &spec.model;
         let run_id = format!("{}-{}", model.name, spec.seed);
         let mut tracer = match &spec.trace {
@@ -508,7 +544,7 @@ impl SearchRun {
                 cache: &cache,
                 scope: Some(&scope),
             };
-            let inner = |hws: &[HwConfig]| -> Vec<Option<f64>> {
+            let mut inner = |hws: &[HwConfig]| -> Vec<Option<f64>> {
                 let base = trial;
                 trial += hws.len();
                 if status.is_cancelled() {
@@ -588,16 +624,94 @@ impl SearchRun {
             };
 
             let mut rng = Rng::seed_from_u64(spec.seed);
-            hw_search::search(
-                spec.hw_method,
-                &space,
-                inner,
-                spec.ncfg.hw_trials,
-                &spec.ncfg.hw_bo,
-                &Chunking::Adaptive(&chunker),
-                backend,
-                &mut rng,
-            )
+            match &spec.strategy {
+                SearchStrategy::Nested => hw_search::search(
+                    spec.hw_method,
+                    &space,
+                    inner,
+                    spec.ncfg.hw_trials,
+                    &spec.ncfg.hw_bo,
+                    &Chunking::Adaptive(&chunker),
+                    backend,
+                    &mut rng,
+                ),
+                SearchStrategy::Transfer(prior) => transfer::search_with_prior(
+                    &space,
+                    prior,
+                    inner,
+                    spec.ncfg.hw_trials,
+                    &spec.ncfg.hw_bo,
+                    &Chunking::Adaptive(&chunker),
+                    backend,
+                    &mut rng,
+                ),
+                SearchStrategy::SemiDecoupled(sd) => {
+                    // Phase 1: fetch or build the (model, config) mapping
+                    // table. Build seeding and evaluation order derive from
+                    // the table key alone, so every job sharing the store
+                    // would build bit-identical tables — the first to
+                    // arrive pays, the rest reuse (their run-scoped
+                    // `table_cells` stays 0). Cancellation is deliberately
+                    // not checked here: a partially built table must never
+                    // be memoized for other jobs, and the build is bounded
+                    // by max_cells * cell_sw_trials * layers.
+                    let key = semi_decoupled::table_key(model.name, sd);
+                    let tseed = semi_decoupled::table_seed(&key);
+                    let cell_ctx = HwBatchCtx {
+                        model,
+                        sw_method: spec.sw_method,
+                        sw_trials: sd.cell_sw_trials,
+                        sw_bo: &spec.ncfg.sw_bo,
+                        threads: spec.threads,
+                        cache: &cache,
+                        scope: Some(&scope),
+                    };
+                    let table = tables.get_or_build(&key, || {
+                        let mut built = 0u64;
+                        MappingTable::build(
+                            &space,
+                            sd,
+                            |hws| {
+                                let base = built;
+                                built += hws.len() as u64;
+                                scope.span_profiler().time(Phase::Evaluate, || {
+                                    evaluate_hardware_batch(
+                                        &cell_ctx,
+                                        hws,
+                                        backend,
+                                        &metrics,
+                                        tseed.wrapping_add(base),
+                                    )
+                                })
+                            },
+                            tseed,
+                        )
+                    });
+                    // Phase 2 against lookups; the top-k finalists route
+                    // through `inner`, so their exact re-searches get the
+                    // full budget plus incumbent/checkpoint/trace handling.
+                    let out = semi_decoupled::search(
+                        &space,
+                        &table,
+                        spec.ncfg.hw_trials,
+                        sd.topk,
+                        &spec.ncfg.hw_bo,
+                        &mut inner,
+                        backend,
+                        &mut rng,
+                    );
+                    drop(inner); // release its &mut tracer capture
+                    let exact_best =
+                        out.best_exact.as_ref().map(|(_, e)| *e).unwrap_or(f64::INFINITY);
+                    tracer.gap_report(
+                        out.finalists.len() as u64,
+                        out.gap,
+                        out.trace.best_edp,
+                        exact_best,
+                    );
+                    out.trace
+                }
+            }
         });
 
         status.set_phase(RunPhase::Persisting);

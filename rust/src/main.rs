@@ -5,7 +5,10 @@
 //!   sw-opt                     software mapping search on fixed hardware
 //!   codesign                   full nested co-design on a model
 //!   schedule                   concurrent co-design jobs over several models
-//!                              (one scheduler, shared cache + certificates)
+//!                              (one scheduler, shared cache + certificates
+//!                              + semi-decoupled mapping tables)
+//!   transfer                   co-design warm-started from a prior run's
+//!                              checkpoint (--source-checkpoint PATH)
 //!   fig3|fig4|fig5a|fig5b|fig5c|fig16|fig17|fig18|insight
 //!                              regenerate the paper's figures (CSV under results/)
 //!   trace summarize|diff       render or compare run-trace journals
@@ -27,16 +30,18 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use codesign::coordinator::checkpoint::Checkpoint;
 use codesign::coordinator::driver::{eyeriss_baseline, Driver};
-use codesign::coordinator::run::JobSpec;
+use codesign::coordinator::run::{JobSpec, SearchStrategy};
 use codesign::figures::{fig3, fig4, fig5a, fig5bc, insight, FigOpts};
 use codesign::model::cache::{CachePolicy, EvalCache, DEFAULT_CAPACITY, DEFAULT_SHARDS};
 use codesign::model::eval::Evaluator;
 use codesign::obs::clock::Stopwatch;
 use codesign::obs::trace::{self as trace_journal, TraceConfig};
-use codesign::opt::config::{BoConfig, NestedConfig};
-use codesign::opt::hw_search::HwMethod;
+use codesign::opt::config::{BoConfig, NestedConfig, SemiDecoupledConfig};
+use codesign::opt::hw_search::{HwMethod, HwTrace};
 use codesign::opt::sw_search::{search, SurrogateKind, SwMethod, SwProblem};
+use codesign::opt::transfer::TransferPrior;
 use codesign::runtime::jobs::JobScheduler;
 use codesign::runtime::server::{GpServer, MetricsServer};
 use codesign::space::sw_space::SwSpace;
@@ -114,6 +119,24 @@ fn backend(args: &Args) -> Result<(GpBackend, Option<GpServer>)> {
              run `make artifacts` first, or pass --native for the pure-Rust GP"
         ),
     }
+}
+
+/// Parse `--strategy` (plus its semi-decoupled knobs) into the outer-loop
+/// strategy a job spec carries.
+fn strategy(args: &Args) -> Result<SearchStrategy> {
+    Ok(match args.str("strategy", "nested").as_str() {
+        "nested" => SearchStrategy::Nested,
+        "semi-decoupled" => {
+            let d = SemiDecoupledConfig::default();
+            SearchStrategy::SemiDecoupled(SemiDecoupledConfig {
+                max_cells: args.get("table-cells", d.max_cells)?,
+                cell_sw_trials: args.get("cell-sw-trials", d.cell_sw_trials)?,
+                topk: args.get("topk", d.topk)?,
+                ..d
+            })
+        }
+        other => bail!("unknown strategy {other} (expected nested|semi-decoupled)"),
+    })
 }
 
 fn sw_method(name: &str) -> Result<SwMethod> {
@@ -218,6 +241,7 @@ fn cmd_codesign(args: &Args) -> Result<()> {
     let mut driver = Driver::new(ncfg);
     driver.threads = args.get("threads", codesign::coordinator::parallel::default_threads())?;
     driver.sw_method = sw_method(&args.str("method", "bo"))?;
+    driver.strategy = strategy(args)?;
     driver.hw_method = match args.str("hw-method", "bo").as_str() {
         "bo" => HwMethod::Bo,
         "bo-rf" => HwMethod::BoRf,
@@ -242,8 +266,13 @@ fn cmd_codesign(args: &Args) -> Result<()> {
 
     let seed = args.get("seed", 2020u64)?;
     println!(
-        "nested co-design on {model_name}: {} hw x {} sw trials, {} threads, \
+        "{} co-design on {model_name}: {} hw x {} sw trials, {} threads, \
          cache policy {}{}",
+        match &driver.strategy {
+            SearchStrategy::Nested => "nested",
+            SearchStrategy::SemiDecoupled(_) => "semi-decoupled",
+            SearchStrategy::Transfer(_) => "transfer",
+        },
         driver.ncfg.hw_trials,
         driver.ncfg.sw_trials,
         driver.threads,
@@ -299,6 +328,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         sw_bo: BoConfig::software(),
     };
     let sw = sw_method(&args.str("method", "bo"))?;
+    let strat = strategy(args)?;
     let threads = args.get("threads", codesign::coordinator::parallel::default_threads())?;
     let seed = args.get("seed", 2020u64)?;
     let max_jobs = args.get("jobs", 0usize)?;
@@ -337,6 +367,9 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         let model = model_by_name(name).with_context(|| format!("unknown model {name}"))?;
         let mut spec = JobSpec::new(model, ncfg.clone(), seed + i as u64);
         spec.sw_method = sw;
+        // one strategy for the whole schedule: semi-decoupled jobs sharing
+        // a model then share one phase-1 mapping table via the scheduler
+        spec.strategy = strat.clone();
         spec.threads = threads;
         spec.checkpoint_path = Some(out_dir.join(format!("best_design_{name}.txt")));
         if let Some(d) = &trace_dir {
@@ -401,6 +434,70 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         std::fs::write(p, sched.fleet_exposition())
             .with_context(|| format!("writing metrics exposition to {p}"))?;
         println!("wrote fleet metrics exposition to {p}");
+    }
+    Ok(())
+}
+
+/// `codesign transfer --model M --source-checkpoint PATH`: a co-design run
+/// whose surrogates are warm-started from a prior run's persisted incumbent
+/// (`best_design_*.txt`). The checkpoint yields a one-point prior — the
+/// source run's best (hardware, EDP) — which seeds the objective GP and the
+/// feasibility classifier; the job routes through the scheduler like every
+/// other run, so it shares cache/certificate/table state with any jobs
+/// scheduled beside it.
+fn cmd_transfer(args: &Args) -> Result<()> {
+    let (backend, _server) = backend(args)?;
+    let model_name = args.str("model", "dqn");
+    let model = model_by_name(&model_name).context("unknown model")?;
+    let ckpt_path = args
+        .flags
+        .get("source-checkpoint")
+        .context("transfer needs --source-checkpoint PATH (a best_design_*.txt from a prior run)")?;
+    let ck = Checkpoint::load(std::path::Path::new(ckpt_path))
+        .with_context(|| format!("loading source checkpoint {ckpt_path}"))?;
+    // Synthesize the source trace the prior is extracted from: a checkpoint
+    // persists only the incumbent, so the prior carries one feasible point.
+    // (With fewer than two prior observations the search keeps its random
+    // warmup — the prior still seeds both surrogates.)
+    let mut source = HwTrace::new();
+    source.record(&ck.hw, Some(ck.best_edp));
+    let prior = TransferPrior::from_trace(&source);
+
+    let ncfg = NestedConfig {
+        hw_trials: args.get("hw-trials", 20usize)?,
+        sw_trials: args.get("sw-trials", 100usize)?,
+        hw_bo: BoConfig::hardware(),
+        sw_bo: BoConfig::software(),
+    };
+    let out_dir: std::path::PathBuf = args.str("out", "results").into();
+    let _ = std::fs::create_dir_all(&out_dir);
+    let mut spec = JobSpec::new(model, ncfg, args.get("seed", 2020u64)?);
+    spec.sw_method = sw_method(&args.str("method", "bo"))?;
+    spec.strategy = SearchStrategy::Transfer(prior);
+    spec.threads = args.get("threads", codesign::coordinator::parallel::default_threads())?;
+    spec.checkpoint_path = Some(out_dir.join(format!("best_design_{model_name}.txt")));
+    if let Some(p) = args.flags.get("trace") {
+        spec.trace = Some(TraceConfig::new(p, !args.bool("trace-wall")));
+    }
+
+    println!(
+        "transfer co-design on {model_name}: prior from {} (source model {}, EDP {:.4e}), \
+         {} hw x {} sw trials",
+        ckpt_path, ck.model, ck.best_edp, spec.ncfg.hw_trials, spec.ncfg.sw_trials
+    );
+    let sched = JobScheduler::with_capacity(backend, 1);
+    let out = sched.submit(spec).wait();
+    println!("\n== result ==\n{}", out.metrics.report());
+    match &out.best {
+        Some(best) => {
+            println!("{}", insight::describe_hw("searched hardware", &best.hw));
+            println!("best model EDP: {:.4e} (trial {})", best.best_edp, best.trial);
+            println!(
+                "vs source incumbent: {:.1}%",
+                (1.0 - best.best_edp / ck.best_edp) * 100.0
+            );
+        }
+        None => println!("no feasible design found under the given budget"),
     }
     Ok(())
 }
@@ -478,6 +575,7 @@ fn main() -> Result<()> {
         "sw-opt" => cmd_sw_opt(&args),
         "codesign" => cmd_codesign(&args),
         "schedule" => cmd_schedule(&args),
+        "transfer" => cmd_transfer(&args),
         "trace" => cmd_trace(&args),
         "selftest" => cmd_selftest(&args),
         "fig3" => {
@@ -608,14 +706,19 @@ fn main() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: codesign <quickstart|sw-opt|codesign|schedule|trace|selftest|specialize|report|fig3|fig4|fig5a|fig5b|fig5c|fig16|fig17|fig18|insight> [flags]\n\
+                "usage: codesign <quickstart|sw-opt|codesign|schedule|transfer|trace|selftest|specialize|report|fig3|fig4|fig5a|fig5b|fig5c|fig16|fig17|fig18|insight> [flags]\n\
                  flags: --model M --layer L --method bo|random|round-bo|tvm-xgb|tvm-treegru \n\
                         --trials N --hw-trials N --sw-trials N --repeats N --scale F \n\
                         --seed N --threads N --out DIR --native \n\
+                        --strategy nested|semi-decoupled (codesign/schedule: outer-loop \n\
+                        strategy; semi-decoupled knobs: --table-cells N --cell-sw-trials N \n\
+                        --topk N, gap reported in metrics/trace) \n\
                         --cache-policy slru|fifo --cache-snapshot PATH (codesign: persist \n\
                         the evaluation cache and warm-start follow-up runs from it) \n\
                         --models A,B,... --jobs N (schedule: run one co-design job per \n\
                         model concurrently, at most N at once, over one shared cache) \n\
+                        --source-checkpoint PATH (transfer: warm-start the search from a \n\
+                        prior run's best_design_*.txt incumbent) \n\
                         --trace PATH | --trace-dir DIR (write run-trace journals; add \n\
                         --trace-wall for wall-clock data) --metrics-addr HOST:PORT \n\
                         --metrics-out PATH (schedule: serve/dump the fleet exposition) \n\

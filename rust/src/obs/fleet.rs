@@ -29,7 +29,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::model::cache::CacheStats;
 use crate::obs::span::{Phase, SpanProfiler, SpanStats};
 
-const N: usize = 32;
+const N: usize = 35;
 
 /// Per-run counters summed across jobs, in exposition order. Names match
 /// the `coordinator/metrics.rs` report keys; the exposition name is
@@ -61,6 +61,9 @@ pub const COUNTER_NAMES: [&str; N] = [
     "prune_cert_misses",
     "prune_lattice_boxes",
     "prune_box_shrink_milli",
+    "table_cells",
+    "table_hits",
+    "gap_resolved",
     "delta_evals",
     "delta_fallbacks",
     "delta_levels_recomputed",
@@ -99,6 +102,9 @@ fn counter_values(m: &Metrics) -> [u64; N] {
         get(&m.prune_cert_misses),
         get(&m.prune_lattice_boxes),
         get(&m.prune_box_shrink_milli),
+        get(&m.table_cells),
+        get(&m.table_hits),
+        get(&m.gap_resolved),
         get(&m.delta_evals),
         get(&m.delta_fallbacks),
         get(&m.delta_levels_recomputed),

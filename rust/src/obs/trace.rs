@@ -26,8 +26,8 @@
 //! `threads > 1`, which job sees a hit vs a miss depends on scheduling.
 //!
 //! Event kinds: `run_start`, `phase`, `snapshot_load`, `snapshot_save`,
-//! `batch`, `incumbent`, `degrade`, `run_end` — see `obs/README.md` for
-//! the full schema.
+//! `batch`, `incumbent`, `gap_report`, `degrade`, `run_end` — see
+//! `obs/README.md` for the full schema.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
@@ -95,6 +95,9 @@ fn feas_since(now: FeasibilityStats, prev: FeasibilityStats) -> FeasibilityStats
         lattice_box_shrink_milli: now
             .lattice_box_shrink_milli
             .saturating_sub(prev.lattice_box_shrink_milli),
+        table_cells: now.table_cells.saturating_sub(prev.table_cells),
+        table_hits: now.table_hits.saturating_sub(prev.table_hits),
+        gap_resolved: now.gap_resolved.saturating_sub(prev.gap_resolved),
     }
 }
 
@@ -138,6 +141,9 @@ fn feas_obj(s: FeasibilityStats) -> Json {
         kv("prune_cert_misses", Json::UInt(s.cert_misses)),
         kv("prune_lattice_boxes", Json::UInt(s.lattice_boxes)),
         kv("prune_box_shrink_milli", Json::UInt(s.lattice_box_shrink_milli)),
+        kv("table_cells", Json::UInt(s.table_cells)),
+        kv("table_hits", Json::UInt(s.table_hits)),
+        kv("gap_resolved", Json::UInt(s.gap_resolved)),
     ])
 }
 
@@ -323,6 +329,22 @@ impl RunTracer {
         self.emit(
             "snapshot_save",
             vec![kv("ok", Json::Bool(ok)), kv("entries", Json::UInt(entries))],
+            Vec::new(),
+        );
+    }
+
+    /// Semi-decoupled phase 2 finished: `finalists` table finalists were
+    /// re-searched exactly, bounding the table-vs-exact optimality gap
+    /// (relative, e.g. 0.03 = table EDPs are within 3% of exact).
+    pub fn gap_report(&mut self, finalists: u64, gap: f64, table_edp: f64, exact_edp: f64) {
+        self.emit(
+            "gap_report",
+            vec![
+                kv("finalists", Json::UInt(finalists)),
+                kv("gap", Json::Num(gap)),
+                kv("table_edp", Json::Num(table_edp)),
+                kv("exact_edp", Json::Num(exact_edp)),
+            ],
             Vec::new(),
         );
     }

@@ -71,6 +71,45 @@ impl BoConfig {
     }
 }
 
+/// Knobs for the semi-decoupled two-phase hardware search (Lu et al. 2022):
+/// phase 1 builds per-layer optimal-mapping tables over the certified
+/// region of the pruned hardware lattice, phase 2 searches hardware against
+/// O(1) table lookups and bounds the optimality gap by exactly re-searching
+/// the top finalists.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SemiDecoupledConfig {
+    /// Quantization buckets per local-buffer partition axis when keying
+    /// table cells (coarser buckets = fewer cells = cheaper tables but a
+    /// wider gap).
+    pub lb_buckets: u64,
+    /// Cap on distinct table cells enumerated per model (enumeration stops
+    /// once this many certified-nonempty cells hold a representative).
+    pub max_cells: usize,
+    /// Constructive draws spent discovering distinct cells during
+    /// enumeration.
+    pub cell_draws: usize,
+    /// Inner software-search budget per table cell (phase 1). Deliberately
+    /// below the nested search's per-candidate `sw_trials`: the table pays
+    /// it once per cell, not once per outer trial.
+    pub cell_sw_trials: usize,
+    /// Finalists re-searched exactly (full `sw_trials`) after phase 2 to
+    /// bound the table-vs-exact optimality gap. 0 skips gap resolution
+    /// (the reported gap is then infinite / unknown).
+    pub topk: usize,
+}
+
+impl Default for SemiDecoupledConfig {
+    fn default() -> Self {
+        SemiDecoupledConfig {
+            lb_buckets: 3,
+            max_cells: 24,
+            cell_draws: 512,
+            cell_sw_trials: 24,
+            topk: 3,
+        }
+    }
+}
+
 /// Budgets for the nested co-design search (§4.1: "50 for hardware search
 /// and 250 for software search").
 #[derive(Clone, Copy, Debug)]

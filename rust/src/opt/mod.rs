@@ -7,10 +7,12 @@ pub mod heuristic;
 pub mod hw_search;
 pub mod per_layer;
 pub mod round_bo;
+pub mod semi_decoupled;
 pub mod transfer;
 pub mod sw_search;
 pub mod tvm;
 
-pub use config::{BoConfig, NestedConfig};
+pub use config::{BoConfig, NestedConfig, SemiDecoupledConfig};
 pub use hw_search::{HwMethod, HwTrace};
+pub use semi_decoupled::{MappingTable, SemiDecoupledOutcome, TableStore};
 pub use sw_search::{SearchTrace, SurrogateKind, SwMethod, SwProblem};

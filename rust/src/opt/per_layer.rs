@@ -30,8 +30,14 @@ use crate::workloads::specs::ModelSpec;
 pub struct PerLayerResult {
     /// (layer name, best EDP on its own specialized hardware, trace).
     pub layers: Vec<(String, f64, HwTrace)>,
-    /// Sum of the per-layer optima.
+    /// Sum of the per-layer optima, over the layers whose search found a
+    /// feasible design. Always finite (infeasible layers are excluded and
+    /// reported in `infeasible_layers` instead of poisoning the sum).
     pub total_edp: f64,
+    /// Layers whose hardware search found no feasible (hardware, mapping)
+    /// pair within budget. Their traces still appear in `layers` with an
+    /// infinite best EDP.
+    pub infeasible_layers: Vec<String>,
     /// Evaluation-cache telemetry for the whole specialization run.
     pub cache_stats: CacheStats,
 }
@@ -46,12 +52,28 @@ pub fn specialize(
     seed: u64,
 ) -> PerLayerResult {
     let resources = eyeriss_resources(model.num_pes);
+    specialize_with_resources(model, resources, ncfg, sw_method, backend, seed)
+}
+
+/// [`specialize`] under an explicit resource envelope (the seam the
+/// unsatisfiable-layer regression test uses: a degenerate budget makes a
+/// layer's whole mapping space certified-empty, which must surface in
+/// `infeasible_layers` rather than poison `total_edp`).
+pub fn specialize_with_resources(
+    model: &ModelSpec,
+    resources: crate::model::arch::Resources,
+    ncfg: &NestedConfig,
+    sw_method: SwMethod,
+    backend: &GpBackend,
+    seed: u64,
+) -> PerLayerResult {
     let cache = Arc::new(EvalCache::default());
     let threads = default_threads();
     // each hardware config costs ~sw_trials simulator evaluations; size the
     // warmup batches from the latency the shared cache observes
     let chunker = AdaptiveChunker::new(Arc::clone(&cache), ncfg.sw_trials as f64);
     let mut layers = Vec::new();
+    let mut infeasible_layers = Vec::new();
     let mut total = 0.0;
 
     for (li, layer) in model.layers.iter().enumerate() {
@@ -101,11 +123,17 @@ pub fn specialize(
             backend,
             &mut rng,
         );
-        total += trace.best_edp;
+        // a layer whose search found nothing feasible must not poison the
+        // sum to INFINITY — report it explicitly instead
+        if trace.best_edp.is_finite() {
+            total += trace.best_edp;
+        } else {
+            infeasible_layers.push(layer.name.clone());
+        }
         layers.push((layer.name.clone(), trace.best_edp, trace));
     }
 
-    PerLayerResult { layers, total_edp: total, cache_stats: cache.stats() }
+    PerLayerResult { layers, total_edp: total, infeasible_layers, cache_stats: cache.stats() }
 }
 
 #[cfg(test)]
@@ -134,11 +162,42 @@ mod tests {
             7,
         );
         assert_eq!(res.layers.len(), 2);
+        assert!(res.infeasible_layers.is_empty(), "{:?}", res.infeasible_layers);
         let sum: f64 = res.layers.iter().map(|(_, e, _)| e).sum();
         assert!((sum - res.total_edp).abs() < 1e-12 * sum.max(1.0));
         assert!(res.total_edp.is_finite());
         // every simulator call of the run flowed through the shared cache
         assert!(res.cache_stats.hits + res.cache_stats.misses > 0);
+    }
+
+    #[test]
+    fn unsatisfiable_layer_is_reported_not_summed() {
+        // A zero-capacity global buffer certifies every (layer, hardware)
+        // mapping space empty while the Fig. 7 hardware sampler stays alive
+        // (the local-buffer partition is untouched): the layer's search can
+        // never find a feasible design. The regression: total_edp used to
+        // absorb the layer's INFINITY; it must stay finite, with the layer
+        // named in `infeasible_layers`.
+        let mut res = eyeriss_resources(168);
+        res.global_buffer_entries = 0;
+        let model = ModelSpec {
+            name: "impossible",
+            layers: vec![crate::model::workload::Layer::conv("IMP-K1", 1, 1, 2, 2, 2, 2, 1)],
+            num_pes: 168,
+        };
+        let out = specialize_with_resources(
+            &model,
+            res,
+            &tiny(),
+            SwMethod::Random,
+            &GpBackend::Native,
+            5,
+        );
+        assert_eq!(out.layers.len(), 1);
+        assert!(out.layers[0].1.is_infinite(), "layer must be unsatisfiable");
+        assert_eq!(out.infeasible_layers, vec!["IMP-K1".to_string()]);
+        assert!(out.total_edp.is_finite(), "infeasible layer poisoned the sum");
+        assert_eq!(out.total_edp, 0.0, "no feasible layer contributes");
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use crate::model::arch::HwConfig;
 use crate::opt::config::BoConfig;
-use crate::opt::hw_search::{absorb, HwTrace, Obs, HEAD_CHUNK};
+use crate::opt::hw_search::{absorb, Chunking, HwTrace, Obs};
 use crate::space::features::hw_features;
 use crate::space::prune::PrunedHwSpace;
 use crate::surrogate::acquisition::feasibility_probability;
@@ -55,13 +55,17 @@ impl TransferPrior {
 /// log-space with their own standardization, so only *relative* ordering
 /// transfers — the constant offset between models is absorbed). Like the
 /// plain hardware search, `inner` evaluates whole config batches: the
-/// warmup phase (empty when the prior is usable) goes out as one batch.
+/// warmup phase (empty when the prior is usable) goes out in chunks sized
+/// by `chunking`, re-derived per batch so adaptive policies track cache
+/// warmth exactly as in `hw_search::search`.
+#[allow(clippy::too_many_arguments)]
 pub fn search_with_prior(
     space: &PrunedHwSpace,
     prior: &TransferPrior,
     mut inner: impl FnMut(&[HwConfig]) -> Vec<Option<f64>>,
     trials: usize,
     cfg: &BoConfig,
+    chunking: &Chunking<'_>,
     backend: &GpBackend,
     rng: &mut Rng,
 ) -> HwTrace {
@@ -99,9 +103,13 @@ pub fn search_with_prior(
     // batches, absorbed exactly like the plain hardware search's head.
     let head = warmup.min(trials);
     let picks: Vec<HwConfig> = (0..head).map(|_| space.sample_valid(rng).0).collect();
-    for chunk in picks.chunks(HEAD_CHUNK) {
+    let mut rest: &[HwConfig] = &picks;
+    while !rest.is_empty() {
+        let take = chunking.next_chunk().min(rest.len());
+        let (chunk, tail) = rest.split_at(take);
         let edps = inner(chunk);
         absorb(&mut trace, &mut obs, space.resources(), chunk, edps);
+        rest = tail;
     }
 
     for _trial in head..trials {
@@ -221,6 +229,7 @@ mod tests {
                 batched(1e-3),
                 6,
                 &quick_cfg(),
+                &Chunking::default(),
                 &GpBackend::Native,
                 &mut r1,
             );
@@ -252,6 +261,7 @@ mod tests {
             batched(1e-3),
             10,
             &quick_cfg(),
+            &Chunking::default(),
             &GpBackend::Native,
             &mut rng,
         );

@@ -32,6 +32,7 @@ use crate::coordinator::driver::CodesignOutcome;
 use crate::coordinator::run::{JobSpec, RunPhase, RunStatus, SearchRun};
 use crate::model::cache::EvalCache;
 use crate::obs::fleet::FleetMetrics;
+use crate::opt::semi_decoupled::TableStore;
 use crate::space::prune::CertificateStore;
 use crate::surrogate::gp::GpBackend;
 use crate::util::sync::lock_unpoisoned;
@@ -146,6 +147,10 @@ pub struct JobScheduler {
     backend: GpBackend,
     cache: Arc<EvalCache>,
     certs: Arc<CertificateStore>,
+    /// Semi-decoupled mapping tables, shared so the phase-1 build runs once
+    /// per (model, config) across all jobs (table bits are independent of
+    /// which job builds them — see `opt::semi_decoupled::TableStore`).
+    tables: Arc<TableStore>,
     slots: Arc<Slots>,
     fleet: Arc<FleetMetrics>,
     next_id: AtomicU64,
@@ -183,6 +188,7 @@ impl JobScheduler {
             backend,
             cache,
             certs,
+            tables: Arc::new(TableStore::default()),
             slots: Arc::new(Slots::new(capacity)),
             fleet: Arc::new(FleetMetrics::new()),
             next_id: AtomicU64::new(0),
@@ -197,6 +203,11 @@ impl JobScheduler {
     /// The prune-certificate memo shared by every job.
     pub fn certificate_store(&self) -> &Arc<CertificateStore> {
         &self.certs
+    }
+
+    /// The semi-decoupled mapping-table store shared by every job.
+    pub fn table_store(&self) -> &Arc<TableStore> {
+        &self.tables
     }
 
     /// Fleet-level counter and span aggregates, folded in as each job
@@ -216,7 +227,8 @@ impl JobScheduler {
     /// the job starts as soon as a slot is free.
     pub fn submit(&self, spec: JobSpec) -> JobHandle {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let run = SearchRun::with_shared(spec, Arc::clone(&self.cache), Arc::clone(&self.certs));
+        let run = SearchRun::with_shared(spec, Arc::clone(&self.cache), Arc::clone(&self.certs))
+            .with_tables(Arc::clone(&self.tables));
         let status = run.status();
         let backend = self.backend.clone();
         let slots = Arc::clone(&self.slots);
@@ -314,6 +326,35 @@ mod tests {
         assert!(text.contains(&format!("codesign_sim_evals_total {want}")));
         assert!(text.contains("codesign_jobs_completed_total 2"));
         assert!(text.contains("codesign_phase_seconds_bucket"));
+    }
+
+    #[test]
+    fn semi_decoupled_jobs_share_one_mapping_table() {
+        use crate::coordinator::run::SearchStrategy;
+        use crate::opt::config::SemiDecoupledConfig;
+        let sched = JobScheduler::new(GpBackend::Native);
+        let sd = SemiDecoupledConfig {
+            max_cells: 4,
+            cell_draws: 64,
+            cell_sw_trials: 6,
+            topk: 1,
+            ..Default::default()
+        };
+        let mk = |seed| {
+            let mut s = tiny_spec(seed);
+            s.strategy = SearchStrategy::SemiDecoupled(sd);
+            s
+        };
+        let a = sched.submit(mk(41)).wait();
+        let b = sched.submit(mk(42)).wait();
+        assert_eq!(sched.table_store().len(), 1, "both jobs must share one table");
+        // the first job paid the phase-1 build; the second reused it — the
+        // amortization is visible in the run-scoped counters
+        assert!(a.metrics.table_cells.load(Ordering::Relaxed) > 0);
+        assert_eq!(b.metrics.table_cells.load(Ordering::Relaxed), 0);
+        assert!(a.metrics.table_hits.load(Ordering::Relaxed) > 0);
+        assert!(b.metrics.table_hits.load(Ordering::Relaxed) > 0);
+        assert!(a.best.is_some(), "gap resolution must surface an exact incumbent");
     }
 
     #[test]

@@ -37,6 +37,9 @@ pub struct Sink {
     cert_misses: AtomicU64,
     lattice_boxes: AtomicU64,
     lattice_box_shrink_milli: AtomicU64,
+    table_cells: AtomicU64,
+    table_hits: AtomicU64,
+    gap_resolved: AtomicU64,
 }
 
 impl Sink {
@@ -57,6 +60,9 @@ impl Sink {
             cert_misses: AtomicU64::new(0),
             lattice_boxes: AtomicU64::new(0),
             lattice_box_shrink_milli: AtomicU64::new(0),
+            table_cells: AtomicU64::new(0),
+            table_hits: AtomicU64::new(0),
+            gap_resolved: AtomicU64::new(0),
         }
     }
 
@@ -78,6 +84,9 @@ impl Sink {
             cert_misses: self.cert_misses.load(Ordering::Relaxed),
             lattice_boxes: self.lattice_boxes.load(Ordering::Relaxed),
             lattice_box_shrink_milli: self.lattice_box_shrink_milli.load(Ordering::Relaxed),
+            table_cells: self.table_cells.load(Ordering::Relaxed),
+            table_hits: self.table_hits.load(Ordering::Relaxed),
+            gap_resolved: self.gap_resolved.load(Ordering::Relaxed),
         }
     }
 }
@@ -169,6 +178,17 @@ pub struct FeasibilityStats {
     /// raw divisor box, in thousandths (saturating; divide by
     /// `1000 * lattice_boxes` for the mean shrink).
     pub lattice_box_shrink_milli: u64,
+    /// Certified-nonempty lattice cells *built* into per-layer mapping
+    /// tables by the semi-decoupled strategy (`opt::semi_decoupled`). A run
+    /// that reuses a table shared by an earlier job records zero here —
+    /// the build cost amortized away.
+    pub table_cells: u64,
+    /// Outer-loop hardware evaluations served as O(1) mapping-table lookups
+    /// instead of nested software searches.
+    pub table_hits: u64,
+    /// Top-k finalists re-searched exactly to bound the semi-decoupled
+    /// optimality gap.
+    pub gap_resolved: u64,
 }
 
 impl FeasibilityStats {
@@ -198,6 +218,9 @@ impl FeasibilityStats {
             lattice_box_shrink_milli: self
                 .lattice_box_shrink_milli
                 .saturating_sub(earlier.lattice_box_shrink_milli),
+            table_cells: self.table_cells.saturating_sub(earlier.table_cells),
+            table_hits: self.table_hits.saturating_sub(earlier.table_hits),
+            gap_resolved: self.gap_resolved.saturating_sub(earlier.gap_resolved),
         }
     }
 }
@@ -314,6 +337,27 @@ pub fn record_lattice_box(shrink: f64) {
     });
 }
 
+/// `n` certified-nonempty cells were built into a per-layer mapping table.
+pub fn record_table_cells(n: u64) {
+    record(|s| {
+        s.table_cells.fetch_add(n, Ordering::Relaxed);
+    });
+}
+
+/// An outer-loop hardware evaluation was served as a table lookup.
+pub fn record_table_hit() {
+    record(|s| {
+        s.table_hits.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
+/// A finalist was re-searched exactly to bound the optimality gap.
+pub fn record_gap_resolved() {
+    record(|s| {
+        s.gap_resolved.fetch_add(1, Ordering::Relaxed);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -337,6 +381,9 @@ mod tests {
         record_cert_hit();
         record_cert_miss();
         record_lattice_box(2.5);
+        record_table_cells(4);
+        record_table_hit();
+        record_gap_resolved();
         let delta = snapshot().since(&before);
         assert!(delta.constructed >= 1);
         assert!(delta.perturbations >= 1);
@@ -353,6 +400,9 @@ mod tests {
         assert!(delta.cert_misses >= 1);
         assert!(delta.lattice_boxes >= 1);
         assert!(delta.lattice_box_shrink_milli >= 2500);
+        assert!(delta.table_cells >= 4);
+        assert!(delta.table_hits >= 1);
+        assert!(delta.gap_resolved >= 1);
     }
 
     #[test]

@@ -44,7 +44,7 @@
 use std::collections::{BTreeSet, HashMap};
 use std::sync::{Arc, Mutex};
 
-use crate::model::arch::{HwConfig, Resources};
+use crate::model::arch::{DataflowOpt, HwConfig, Resources};
 use crate::model::workload::Layer;
 use crate::obs::span::{span, Phase};
 use crate::space::feasible::{telemetry, FactorRange, FeasibleSampler, SpaceCheck};
@@ -176,6 +176,36 @@ impl CertificateStore {
     }
 }
 
+/// Quantized lattice cell of one hardware configuration: the coordinates
+/// along which per-layer optimal mappings actually move. Configurations
+/// sharing a cell have the same PE mesh, dataflow pair, and (bucketed)
+/// local-buffer partition; GLB bank geometry is deliberately excluded — it
+/// shifts EDP but barely moves the *mapping* optimum, and keying on it
+/// would fragment the table. Built by [`PrunedHwSpace::cell_key`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct HwCellKey {
+    pub pe_mesh_x: u64,
+    pub pe_mesh_y: u64,
+    pub df_filter_w: DataflowOpt,
+    pub df_filter_h: DataflowOpt,
+    /// `lb_inputs` quantized into `lb_buckets` slices of the spad budget.
+    pub lb_inputs_bucket: u64,
+    pub lb_weights_bucket: u64,
+    pub lb_outputs_bucket: u64,
+}
+
+/// One enumerated cell of the certified-nonempty hardware lattice region:
+/// the cell key, a certified representative configuration, and the
+/// per-dimension admissible factor ranges that representative leaves the
+/// software search. Produced by
+/// [`PrunedHwSpace::enumerate_certified_cells`].
+#[derive(Clone, Debug)]
+pub struct CertifiedCell {
+    pub key: HwCellKey,
+    pub representative: HwConfig,
+    pub ranges: [crate::space::feasible::FactorRange; 6],
+}
+
 /// The hardware design space pruned against a target layer set. Construct
 /// one per co-design run (the run state machine does) and share it with the
 /// hardware search loops; an empty layer set
@@ -296,6 +326,80 @@ impl PrunedHwSpace {
         }
         let (hw, d) = self.inner.sample_valid(rng);
         (hw, draws + d)
+    }
+
+    /// The quantized lattice cell of a hardware configuration: the PE mesh,
+    /// the dataflow pair, and the local-buffer partition bucketed into
+    /// `lb_buckets` slices of the budget. Configurations sharing a cell see
+    /// near-identical mapping lattices (the mesh bounds spatial factors,
+    /// the dataflow pins R/S, the partition caps local tiles), which is the
+    /// granularity the semi-decoupled mapping tables key on — see
+    /// `opt::semi_decoupled`.
+    pub fn cell_key(&self, hw: &HwConfig, lb_buckets: u64) -> HwCellKey {
+        let total = self.inner.resources.local_buffer_entries;
+        let b = lb_buckets.max(1);
+        let bucket = |words: u64| {
+            if total == 0 {
+                0
+            } else {
+                (words * b / total).min(b - 1)
+            }
+        };
+        HwCellKey {
+            pe_mesh_x: hw.pe_mesh_x,
+            pe_mesh_y: hw.pe_mesh_y,
+            df_filter_w: hw.df_filter_w,
+            df_filter_h: hw.df_filter_h,
+            lb_inputs_bucket: bucket(hw.lb_inputs),
+            lb_weights_bucket: bucket(hw.lb_weights),
+            lb_outputs_bucket: bucket(hw.lb_outputs),
+        }
+    }
+
+    /// Enumerate the certified-nonempty region of the pruned hardware
+    /// lattice as distinct [`HwCellKey`] cells, each carrying one
+    /// certified representative configuration and its per-dimension
+    /// admissible factor ranges. Discovery is constructive-draw-driven
+    /// (`cell_draws` draws, first representative per cell wins, stops at
+    /// `max_cells`), so the result is deterministic for a fixed seed; the
+    /// certificates consulted are memoized in the backing
+    /// [`CertificateStore`], so re-enumeration across runs is cheap.
+    /// Candidates whose admissible ranges flag an unblockable dimension are
+    /// skipped even when uncertified draws degrade past the prune budget —
+    /// every returned representative admits all target layers.
+    pub fn enumerate_certified_cells(
+        &self,
+        lb_buckets: u64,
+        max_cells: usize,
+        cell_draws: usize,
+        rng: &mut Rng,
+    ) -> Vec<CertifiedCell> {
+        let _span = span(Phase::Prune);
+        let mut seen: std::collections::HashSet<HwCellKey> = std::collections::HashSet::new();
+        let mut out: Vec<CertifiedCell> = Vec::new();
+        for _ in 0..cell_draws {
+            if out.len() >= max_cells {
+                break;
+            }
+            let (hw, _) = self.sample_valid(rng);
+            let key = self.cell_key(&hw, lb_buckets);
+            if seen.contains(&key) {
+                continue;
+            }
+            // sample_valid degrades to an uncertified draw after its prune
+            // budget: re-certify so provably-empty representatives never
+            // enter a table
+            if !self.admits(&hw) {
+                continue;
+            }
+            let ranges = self.admissible_ranges(&hw);
+            if ranges.iter().any(|r| r.count == 0) {
+                continue;
+            }
+            seen.insert(key.clone());
+            out.push(CertifiedCell { key, representative: hw, ranges });
+        }
+        out
     }
 
     /// Per loop dimension, the union over all target layers (and all four
@@ -482,6 +586,47 @@ mod tests {
         let cert = pruned.certify(&hw);
         assert_eq!(cert.per_layer[0], SpaceCheck::ProvablyEmpty);
         assert!(!cert.admits_all());
+    }
+
+    #[test]
+    fn cell_enumeration_is_deterministic_deduped_and_certified() {
+        let pruned = dqn_pruned();
+        let mut r1 = Rng::seed_from_u64(11);
+        let cells = pruned.enumerate_certified_cells(3, 12, 256, &mut r1);
+        assert!(!cells.is_empty(), "DQN lattice must yield certified cells");
+        assert!(cells.len() <= 12, "max_cells must cap enumeration");
+        let mut keys = std::collections::HashSet::new();
+        for c in &cells {
+            assert!(keys.insert(c.key.clone()), "duplicate cell key {:?}", c.key);
+            assert_eq!(c.key, pruned.cell_key(&c.representative, 3));
+            assert!(pruned.certify(&c.representative).admits_all());
+            assert_eq!(c.representative.check(pruned.resources()), Ok(()));
+            assert!(c.ranges.iter().all(|r| r.count > 0), "{:?}", c.ranges);
+        }
+        // same seed -> same cells in the same order, representatives included
+        let mut r2 = Rng::seed_from_u64(11);
+        let again = pruned.enumerate_certified_cells(3, 12, 256, &mut r2);
+        assert_eq!(again.len(), cells.len());
+        for (a, b) in cells.iter().zip(&again) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.representative, b.representative);
+        }
+    }
+
+    #[test]
+    fn cell_key_buckets_partition_axes() {
+        let pruned = dqn_pruned();
+        let hw = eyeriss_hw(168);
+        let key = pruned.cell_key(&hw, 3);
+        assert_eq!((key.pe_mesh_x, key.pe_mesh_y), (14, 12));
+        // 12/192/16 of 220 with 3 buckets: 12*3/220=0, 192*3/220=2, 16*3/220=0
+        assert_eq!(key.lb_inputs_bucket, 0);
+        assert_eq!(key.lb_weights_bucket, 2);
+        assert_eq!(key.lb_outputs_bucket, 0);
+        // bucket is clamped to lb_buckets-1 even at the full budget
+        let mut big = hw.clone();
+        big.lb_weights = 220;
+        assert_eq!(pruned.cell_key(&big, 3).lb_weights_bucket, 2);
     }
 
     #[test]

@@ -16,13 +16,17 @@ mod common;
 
 use codesign::coordinator::checkpoint::Checkpoint;
 use codesign::coordinator::driver::Driver;
+use codesign::coordinator::run::{JobSpec, SearchStrategy};
 use codesign::model::arch::HwConfig;
 use codesign::model::eval::Evaluator;
-use codesign::opt::config::{BoConfig, NestedConfig};
+use codesign::obs::trace::TraceConfig;
+use codesign::opt::config::{BoConfig, NestedConfig, SemiDecoupledConfig};
 use codesign::opt::heuristic;
 use codesign::opt::hw_search::{self, Chunking, HwMethod};
+use codesign::opt::semi_decoupled::{self, MappingTable};
 use codesign::opt::sw_search::{self, SearchTrace, SurrogateKind, SwMethod, SwProblem};
 use codesign::opt::transfer::{self, TransferPrior};
+use codesign::runtime::jobs::JobScheduler;
 use codesign::space::prune::PrunedHwSpace;
 use codesign::space::sw_space::SwSpace;
 use codesign::surrogate::gp::GpBackend;
@@ -182,6 +186,7 @@ fn transfer_search_is_bit_stable_over_a_source_prior() {
             real_inner(),
             5,
             &quick_hw_cfg(),
+            &Chunking::default(),
             &GpBackend::Native,
             &mut rng,
         )
@@ -193,6 +198,130 @@ fn transfer_search_is_bit_stable_over_a_source_prior() {
         assert_eq!(x.to_bits(), y.to_bits(), "transfer eval differs across reruns");
     }
     assert_eq!(a.best_edp.ln().to_bits(), b.best_edp.ln().to_bits());
+}
+
+#[test]
+fn semi_decoupled_codesign_is_bit_stable_with_a_byte_identical_journal() {
+    let run = |path: std::path::PathBuf| {
+        // fresh scheduler per run: reruns share no cache, certificates, or
+        // mapping tables — determinism must come from seeding alone
+        let sched = JobScheduler::new(GpBackend::Native);
+        let mut spec = JobSpec::new(dqn(), tiny_nested(), 77);
+        spec.threads = 2;
+        spec.strategy = SearchStrategy::SemiDecoupled(SemiDecoupledConfig {
+            max_cells: 6,
+            cell_draws: 96,
+            cell_sw_trials: 5,
+            topk: 2,
+            ..Default::default()
+        });
+        spec.trace = Some(TraceConfig::new(path, true));
+        sched.submit(spec).wait()
+    };
+    let pa = common::temp_path("semi_e2e_a").with_extension("jsonl");
+    let pb = common::temp_path("semi_e2e_b").with_extension("jsonl");
+    let a = run(pa.clone());
+    let b = run(pb.clone());
+
+    // the phase-2 trace (table EDPs) is bit-stable across reruns
+    assert_eq!(a.hw_trace.evals.len(), b.hw_trace.evals.len());
+    assert_eq!(a.hw_trace.evals.len(), 3, "phase 2 must spend every outer trial");
+    for (i, (x, y)) in a.hw_trace.evals.iter().zip(b.hw_trace.evals.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "semi trial {i} differs across reruns");
+    }
+    // phase 2 only probes certified finite-EDP table cells: zero invalid
+    // observations ever enter the trace
+    assert_eq!(a.hw_trace.evals.iter().filter(|e| e.is_infinite()).count(), 0);
+    // the deterministic journals — including the gap_report event and the
+    // table_cells/table_hits/gap_resolved counters — agree byte-for-byte
+    let ja = std::fs::read(&pa).expect("journal a written");
+    let jb = std::fs::read(&pb).expect("journal b written");
+    assert!(!ja.is_empty());
+    assert_eq!(ja, jb, "semi-decoupled journal is not byte-stable");
+    assert!(String::from_utf8_lossy(&ja).contains("\"gap_report\""));
+    // telemetry surfaced the two-phase structure
+    use std::sync::atomic::Ordering;
+    assert!(a.metrics.table_cells.load(Ordering::Relaxed) > 0);
+    assert!(a.metrics.table_hits.load(Ordering::Relaxed) > 0);
+    assert!(a.metrics.gap_resolved.load(Ordering::Relaxed) > 0);
+    // gap resolution re-searched finalists exactly, producing an incumbent
+    assert!(a.best.is_some(), "exact re-search must surface a checkpointable design");
+    std::fs::remove_file(&pa).ok();
+    std::fs::remove_file(&pb).ok();
+}
+
+#[test]
+fn semi_decoupled_reaches_nested_within_its_reported_gap() {
+    let space =
+        PrunedHwSpace::new(eyeriss_resources(168), vec![common::layer("DQN-K2")]);
+    // nested reference: constrained BO over the same real inner loop
+    let mut rng = Rng::seed_from_u64(21);
+    let nested = hw_search::search(
+        HwMethod::Bo,
+        &space,
+        real_inner(),
+        10,
+        &quick_hw_cfg(),
+        &Chunking::default(),
+        &GpBackend::Native,
+        &mut rng,
+    );
+    assert!(nested.best_edp.is_finite());
+
+    // semi-decoupled: table over the certified lattice, phase-2 BO against
+    // lookups, exact re-search of the finalists with the same inner loop
+    let sd = SemiDecoupledConfig {
+        max_cells: 12,
+        cell_draws: 256,
+        cell_sw_trials: 5,
+        topk: 3,
+        ..Default::default()
+    };
+    let key = semi_decoupled::table_key("DQN-K2", &sd);
+    let mut table_inner = real_inner();
+    let table = MappingTable::build(
+        &space,
+        &sd,
+        |hws| table_inner(hws).into_iter().map(|r| r.map(|e| (e, Vec::new()))).collect(),
+        semi_decoupled::table_seed(&key),
+    );
+    assert!(!table.is_empty(), "DQN-K2 must yield certified table cells");
+    let mut rng = Rng::seed_from_u64(22);
+    let out = semi_decoupled::search(
+        &space,
+        &table,
+        10,
+        sd.topk,
+        &quick_hw_cfg(),
+        real_inner(),
+        &GpBackend::Native,
+        &mut rng,
+    );
+    let (_, semi_exact) = out.best_exact.expect("finalists must resolve feasible");
+    assert!(out.gap.is_finite(), "gap must be resolved with topk > 0");
+
+    // each finalist's exact EDP sits within the reported gap of its table
+    // EDP — the bound the gap_report advertises
+    for (_, table_edp, exact_edp) in &out.finalists {
+        if let Some(e) = exact_edp {
+            assert!(
+                (e / table_edp - 1.0).abs() <= out.gap + 1e-12,
+                "finalist exact EDP {e:.4e} outside reported gap {} of table {table_edp:.4e}",
+                out.gap
+            );
+        }
+    }
+    // cross-strategy consistency: the semi-decoupled optimum lands within
+    // its own reported gap of the nested search's optimum (2x slack absorbs
+    // the inner random search's stochasticity at these tiny budgets)
+    let bound = nested.best_edp * (1.0 + out.gap) * 2.0;
+    assert!(
+        semi_exact <= bound,
+        "semi-decoupled EDP {semi_exact:.4e} not within reported gap {} of nested \
+         {:.4e} (bound {bound:.4e})",
+        out.gap,
+        nested.best_edp
+    );
 }
 
 fn tiny_nested() -> NestedConfig {

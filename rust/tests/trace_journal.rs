@@ -78,6 +78,9 @@ fn metric_pairs(m: &Metrics) -> Vec<(&'static str, u64)> {
         ("prune_cert_misses", m.prune_cert_misses.load(r)),
         ("prune_lattice_boxes", m.prune_lattice_boxes.load(r)),
         ("prune_box_shrink_milli", m.prune_box_shrink_milli.load(r)),
+        ("table_cells", m.table_cells.load(r)),
+        ("table_hits", m.table_hits.load(r)),
+        ("gap_resolved", m.gap_resolved.load(r)),
         ("delta_evals", m.delta_evals.load(r)),
         ("delta_fallbacks", m.delta_fallbacks.load(r)),
         ("delta_levels_recomputed", m.delta_levels_recomputed.load(r)),
